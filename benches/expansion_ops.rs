@@ -1,0 +1,82 @@
+//! Expansion-surgery latency (supports DESIGN.md §Perf L3 target: surgery
+//! ≤ 100 ms at ~10 M params — it runs once per boundary, but a framework
+//! that stalls the trainer for seconds at every growth point would poison
+//! the progressive-training economics the paper motivates).
+//!
+//! Benchmarks each of the six transformations at three model scales,
+//! plus Adam moment surgery (which doubles the work).
+//!
+//! Run: `cargo bench --bench expansion_ops`
+
+use texpand::bench_util::{bench, Reporter};
+use texpand::config::{GrowthOp, LayerPosition, ModelConfig, OptimKind, TrainConfig};
+use texpand::expand::{apply_op, ExpandOptions};
+use texpand::json::Value;
+use texpand::optim::Optimizer;
+use texpand::params::ParamStore;
+use texpand::rng::Pcg32;
+
+fn scales() -> Vec<(&'static str, ModelConfig)> {
+    vec![
+        (
+            "small (~0.4M)",
+            ModelConfig { layers: 4, hidden: 96, heads: 3, k: 32, v: 32, mlp: 256, seq: 64, vocab: 256 },
+        ),
+        (
+            "medium (~3M)",
+            ModelConfig { layers: 6, hidden: 256, heads: 4, k: 64, v: 64, mlp: 1024, seq: 128, vocab: 256 },
+        ),
+        (
+            "large (~11M)",
+            ModelConfig { layers: 8, hidden: 512, heads: 8, k: 64, v: 64, mlp: 2048, seq: 128, vocab: 256 },
+        ),
+    ]
+}
+
+fn ops_for(cfg: &ModelConfig) -> Vec<(&'static str, GrowthOp)> {
+    vec![
+        ("mlp x2", GrowthOp::Mlp { p: cfg.mlp * 2 }),
+        ("heads_add +1", GrowthOp::HeadsAdd { count: 1 }),
+        ("heads_expand x2", GrowthOp::HeadsExpand { v: cfg.v * 2 }),
+        ("attn_expand x2", GrowthOp::AttnExpand { k: cfg.k * 2 }),
+        ("hidden x1.5", GrowthOp::Hidden { h: cfg.hidden * 3 / 2 }),
+        ("layers_add +1", GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top }),
+    ]
+}
+
+fn main() {
+    let mut rep = Reporter::new("expansion_ops");
+    let opts = ExpandOptions::default();
+    for (scale_name, cfg) in scales() {
+        let mut rng = Pcg32::seeded(1);
+        let params = ParamStore::init(&cfg, &mut rng, 0.02);
+        let n_params = params.num_scalars();
+        for (op_name, op) in ops_for(&cfg) {
+            let stats = bench(1, 5, || {
+                apply_op(&params, &op, &mut Pcg32::seeded(2), &opts).expect("surgery")
+            });
+            rep.row(
+                &format!("{scale_name:<14} {op_name}"),
+                &stats,
+                vec![("params", Value::num(n_params as f64)), ("op", Value::str(op.kind()))],
+            );
+        }
+        // full boundary cost including Adam moment surgery
+        let tcfg = TrainConfig { optimizer: OptimKind::Adam, ..Default::default() };
+        let boundary_ops =
+            vec![GrowthOp::Mlp { p: cfg.mlp * 2 }, GrowthOp::HeadsAdd { count: 1 }];
+        let stats = bench(1, 3, || {
+            let mut opt = Optimizer::new(&tcfg, &params);
+            let p2 = texpand::expand::apply_ops(&params, &boundary_ops, &mut Pcg32::seeded(3), &opts).unwrap();
+            opt.expand(&boundary_ops).unwrap();
+            (p2, opt)
+        });
+        rep.row(
+            &format!("{scale_name:<14} boundary(params+adam moments)"),
+            &stats,
+            vec![("params", Value::num(n_params as f64))],
+        );
+    }
+    rep.flush();
+    println!("\ntarget (DESIGN.md §Perf): boundary surgery <= 100 ms at ~10M params.");
+}

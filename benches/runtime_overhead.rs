@@ -1,0 +1,85 @@
+//! L3 runtime-overhead decomposition (DESIGN.md §Perf target: coordinator
+//! overhead < 10% of PJRT execute time at the final stage).
+//!
+//! Breaks one training step into its cost components:
+//!   marshal   — ParamStore -> Literals (+ tokens)
+//!   execute   — PJRT step (includes XLA compute + output tuple copy-out)
+//!   clip+adam — L3 optimizer work
+//!   batch     — data synthesis
+//! and reports the overhead fraction. Also measures the one-time costs
+//! (HLO parse+compile) and the pure-Rust reference forward for comparison
+//! (showing why the hot path runs on XLA, not the rust oracle).
+//!
+//! Run: `cargo bench --bench runtime_overhead` (needs artifacts)
+
+use texpand::bench_util::{bench, Reporter};
+use texpand::config::{OptimKind, TrainConfig};
+use texpand::data::{Batcher, CorpusKind};
+use texpand::json::Value;
+use texpand::metrics::Timer;
+use texpand::optim::{clip_global_norm, Optimizer};
+use texpand::params::ParamStore;
+use texpand::rng::Pcg32;
+use texpand::runtime::{tensor_to_literal, tokens_to_literal, Manifest, Runtime};
+
+fn main() {
+    let manifest = Manifest::load("artifacts", "manifest.json").expect("run `make artifacts`");
+    let mut rep = Reporter::new("runtime_overhead");
+
+    // one-time costs: parse + compile per stage
+    let mut rt = Runtime::cpu().unwrap();
+    for stage_meta in &manifest.stages {
+        let t = Timer::start();
+        let _ = rt.load_stage(&manifest, &stage_meta.name).unwrap();
+        rep.value_row(
+            &format!("compile {} (fwd+step, cold)", stage_meta.name),
+            "ms",
+            t.ms(),
+            vec![("stage", Value::str(stage_meta.name.clone()))],
+        );
+    }
+
+    // hot-path decomposition at the largest stage
+    let last = manifest.stages.last().unwrap().name.clone();
+    let stage = rt.load_stage(&manifest, &last).unwrap();
+    let cfg = stage.meta.config;
+    let mut rng = Pcg32::seeded(3);
+    let mut params = ParamStore::init(&cfg, &mut rng, 0.02);
+    let tcfg = TrainConfig { optimizer: OptimKind::Adam, ..Default::default() };
+    let mut opt = Optimizer::new(&tcfg, &params);
+    let mut batcher =
+        Batcher::from_corpus(CorpusKind::MarkovText, 100_000, cfg.vocab, cfg.seq, manifest.batch, 5).unwrap();
+    let batch = batcher.next();
+
+    let marshal = bench(2, 20, || {
+        let mut lits: Vec<xla::Literal> = params.tensors().iter().map(|t| tensor_to_literal(t).unwrap()).collect();
+        lits.push(tokens_to_literal(&batch.tokens).unwrap());
+        lits
+    });
+    rep.row("marshal params+tokens -> literals", &marshal, vec![("params", Value::num(params.num_scalars() as f64))]);
+
+    let exec = bench(2, 10, || rt.step(&stage, &params, &batch).unwrap());
+    rep.row("pjrt step execute (incl. grads out)", &exec, vec![]);
+
+    let (_, grads) = rt.step(&stage, &params, &batch).unwrap();
+    let optim = bench(2, 20, || {
+        let mut g = grads.clone();
+        clip_global_norm(&mut g, 1.0);
+        opt.step(&mut params, &g).unwrap();
+    });
+    rep.row("clip + adam update", &optim, vec![]);
+
+    let data = bench(2, 50, || batcher.next());
+    rep.row("batch synthesis", &data, vec![]);
+
+    // the rust reference forward, for scale (oracle only, never hot path)
+    let fwd_rust = bench(1, 3, || texpand::model::forward(&cfg, &params, &batch.tokens).unwrap());
+    rep.row("rust-oracle forward (probe-only path)", &fwd_rust, vec![]);
+
+    let overhead = (marshal.mean_ns + optim.mean_ns + data.mean_ns) / exec.mean_ns;
+    rep.value_row("L3 overhead fraction of execute", "fraction", overhead, vec![]);
+    rep.flush();
+    println!("\ntarget: overhead fraction < 0.10 at the final stage (DESIGN.md §Perf).");
+    println!("note: marshal+adam are also *inside* step wall-time during training; the");
+    println!("train-loop ms/step in training_throughput reflects the end-to-end cost.");
+}

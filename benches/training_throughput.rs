@@ -1,0 +1,73 @@
+//! E5 — per-stage training throughput (the paper's §1 cost argument).
+//!
+//! The economic case for progressive growth is that early training steps
+//! run on a *small* architecture. This bench measures step latency and
+//! tokens/sec for every stage of the shipped schedule through the full
+//! PJRT path, plus the relative cost of each stage — the numbers that make
+//! the E3 compute-to-loss comparison concrete.
+//!
+//! Run: `cargo bench --bench training_throughput` (needs `make artifacts`)
+
+use texpand::bench_util::{bench, Reporter};
+use texpand::json::Value;
+use texpand::params::ParamStore;
+use texpand::rng::Pcg32;
+use texpand::runtime::{Manifest, Runtime};
+
+fn main() {
+    let manifest = Manifest::load("artifacts", "manifest.json")
+        .expect("run `make artifacts` before this bench");
+    let mut rt = Runtime::cpu().expect("pjrt cpu client");
+    let mut rep = Reporter::new("training_throughput (per stage)");
+
+    let mut stage0_mean = None;
+    for stage_meta in &manifest.stages {
+        let stage = rt.load_stage(&manifest, &stage_meta.name).unwrap();
+        let cfg = stage.meta.config;
+        let mut rng = Pcg32::seeded(7);
+        let params = ParamStore::init(&cfg, &mut rng, 0.02);
+        let batch = {
+            let mut rng = Pcg32::seeded(8);
+            let row = |rng: &mut Pcg32| (0..cfg.seq).map(|_| rng.below(cfg.vocab) as u32).collect();
+            texpand::data::Batch {
+                tokens: (0..manifest.batch).map(|_| row(&mut rng)).collect(),
+                targets: (0..manifest.batch).map(|_| row(&mut rng)).collect(),
+            }
+        };
+        let tokens_per_step = (manifest.batch * cfg.seq) as f64;
+
+        let fwd_stats = bench(2, 10, || rt.forward(&stage, &params, &batch.tokens).unwrap());
+        rep.row(
+            &format!("{} fwd  ({} params)", stage_meta.name, stage_meta.num_params),
+            &fwd_stats,
+            vec![("stage", Value::str(stage_meta.name.clone())), ("kind", Value::str("fwd"))],
+        );
+
+        let step_stats = bench(2, 10, || rt.step(&stage, &params, &batch).unwrap());
+        let tps = step_stats.per_second(tokens_per_step);
+        rep.row(
+            &format!("{} step ({:.0} tok/s)", stage_meta.name, tps),
+            &step_stats,
+            vec![
+                ("stage", Value::str(stage_meta.name.clone())),
+                ("kind", Value::str("step")),
+                ("tokens_per_sec", Value::num(tps)),
+                ("params", Value::num(stage_meta.num_params as f64)),
+            ],
+        );
+        if stage_meta.name == "stage0" {
+            stage0_mean = Some(step_stats.mean_ns);
+        }
+        if let Some(s0) = stage0_mean {
+            rep.value_row(
+                &format!("{} relative step cost vs stage0", stage_meta.name),
+                "ratio",
+                step_stats.mean_ns / s0,
+                vec![("stage", Value::str(stage_meta.name.clone()))],
+            );
+        }
+    }
+    rep.flush();
+    println!("\npaper-shape expectation: step cost grows monotonically with stage size,");
+    println!("so front-loading steps onto small stages buys the E3 compute savings.");
+}

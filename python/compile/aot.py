@@ -1,0 +1,121 @@
+"""AOT: lower every growth-schedule stage to HLO text + manifest.json.
+
+This is the single build-time entry point (`make artifacts`). For each stage
+of the growth schedule it lowers
+
+    fwd(*params, tokens)            -> (logits,)
+    step(*params, tokens, targets)  -> (loss, *grads)
+
+to **HLO text** (xla_extension 0.5.1 rejects jax>=0.5 serialized protos:
+64-bit instruction ids; the text parser reassigns ids — see
+/opt/xla-example/README.md) and writes `manifest.json` describing stage
+configs, the canonical parameter order, and artifact file names. The Rust
+runtime (rust/src/runtime/) consumes only this directory; Python never runs
+again after this script.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import GrowthSchedule, ModelConfig, param_specs
+from .model import make_fwd, make_step
+
+DEFAULT_SCHEDULE = os.path.join(os.path.dirname(__file__), "..", "..", "configs", "growth_default.json")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stage(cfg: ModelConfig, batch: int, kernels: str) -> tuple[str, str]:
+    """Return (fwd_hlo_text, step_hlo_text) for one stage config."""
+    specs = param_specs(cfg)
+    param_args = [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in specs]
+    tokens = jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32)
+    targets = jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32)
+    fwd = jax.jit(make_fwd(cfg, kernels=kernels)).lower(*param_args, tokens)
+    step = jax.jit(make_step(cfg, kernels=kernels)).lower(*param_args, tokens, targets)
+    return to_hlo_text(fwd), to_hlo_text(step)
+
+
+def build_manifest(sched: GrowthSchedule, kernels: str) -> dict:
+    suffix = "" if kernels == "jnp" else f".{kernels}"
+    stages = []
+    for st in sched.stages:
+        stages.append(
+            {
+                "name": st.name,
+                "steps": st.steps,
+                "apply": list(st.apply),
+                "config": st.config.to_dict(),
+                "params": [{"name": n, "shape": list(s)} for n, s in param_specs(st.config)],
+                "num_params": st.config.num_params(),
+                "fwd": f"{st.name}{suffix}.fwd.hlo.txt",
+                "step": f"{st.name}{suffix}.step.hlo.txt",
+            }
+        )
+    return {
+        "version": 1,
+        "schedule": sched.name,
+        "batch": sched.batch,
+        "kernels": kernels,
+        "stages": stages,
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--schedule", default=DEFAULT_SCHEDULE, help="growth schedule JSON")
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--kernels", default="jnp", choices=("jnp", "pallas"), help="compute-path variant")
+    ap.add_argument(
+        "--manifest-name",
+        default=None,
+        help="manifest file name (default: manifest.json for jnp, manifest.<kernels>.json otherwise)",
+    )
+    args = ap.parse_args(argv)
+
+    sched = GrowthSchedule.load(args.schedule)
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = build_manifest(sched, args.kernels)
+
+    seen: dict[tuple, tuple[str, str]] = {}
+    for st, entry in zip(sched.stages, manifest["stages"]):
+        cfg_key = tuple(sorted(st.config.to_dict().items()))
+        if cfg_key in seen:  # identical configs share artifacts
+            entry["fwd"], entry["step"] = seen[cfg_key]
+            print(f"[aot] {st.name}: reusing artifacts for identical config", file=sys.stderr)
+            continue
+        print(
+            f"[aot] lowering {st.name} ({args.kernels}): {st.config.to_dict()} "
+            f"({st.config.num_params():,} params)",
+            file=sys.stderr,
+        )
+        fwd_text, step_text = lower_stage(st.config, sched.batch, args.kernels)
+        for fname, text in ((entry["fwd"], fwd_text), (entry["step"], step_text)):
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+        seen[cfg_key] = (entry["fwd"], entry["step"])
+
+    mname = args.manifest_name or ("manifest.json" if args.kernels == "jnp" else f"manifest.{args.kernels}.json")
+    with open(os.path.join(args.out_dir, mname), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {mname} ({len(sched.stages)} stages) to {args.out_dir}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,187 @@
+"""Architecture configs, growth schedules, and the canonical parameter order.
+
+This module is the *contract* shared between the build-time Python side and
+the Rust coordinator: `rust/src/config/` and `rust/src/params/` mirror the
+structures defined here, and `artifacts/manifest.json` (emitted by aot.py)
+is validated against them on the Rust side at load time.
+
+The architecture hyper-parameters follow the paper's notation (Section 2):
+
+    N  (layers)  number of transformer layers
+    h  (hidden)  transformer layer input/output width
+    E  (heads)   number of attention heads
+    k            key/query width per head
+    v            value width per head
+    p  (mlp)     MLP internal width
+    s  (seq)     sequence length
+    vocab        input vocabulary == output dimension `o`
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of one architecture *stage* (paper Section 2)."""
+
+    layers: int  # N
+    hidden: int  # h
+    heads: int  # E
+    k: int
+    v: int
+    mlp: int  # p
+    seq: int  # s
+    vocab: int  # input vocab size and output dim o
+
+    def validate(self) -> None:
+        for name in ("layers", "hidden", "heads", "k", "v", "mlp", "seq", "vocab"):
+            val = getattr(self, name)
+            if not isinstance(val, int) or val <= 0:
+                raise ValueError(f"ModelConfig.{name} must be a positive int, got {val!r}")
+
+    def to_dict(self) -> dict[str, int]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict[str, Any]) -> "ModelConfig":
+        cfg = ModelConfig(**{f.name: int(d[f.name]) for f in dataclasses.fields(ModelConfig)})
+        cfg.validate()
+        return cfg
+
+    def num_params(self) -> int:
+        """Total scalar parameter count."""
+        per_layer = (
+            self.hidden  # g_mha
+            + self.heads * self.hidden * (2 * self.k + self.v)  # wq, wk, wv
+            + self.heads * self.v * self.hidden  # wo
+            + self.hidden  # g_mlp
+            + self.hidden * self.mlp  # w1
+            + self.mlp  # b1
+            + self.mlp * self.hidden  # w2
+            + self.hidden  # b2
+        )
+        return (
+            self.vocab * self.hidden  # embed
+            + self.seq * self.hidden  # pos
+            + self.layers * per_layer
+            + self.hidden * self.vocab  # w_out
+        )
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Canonical (name, shape) parameter order — DESIGN.md Section 7.
+
+    The Rust `ParamStore` reproduces this order exactly; the AOT artifacts
+    take parameters as positional inputs in this order.
+    """
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, cfg.hidden)),
+        ("pos", (cfg.seq, cfg.hidden)),
+    ]
+    for n in range(cfg.layers):
+        specs.append((f"layer_{n}.g_mha", (cfg.hidden,)))
+        for e in range(cfg.heads):
+            specs.append((f"layer_{n}.head_{e}.wq", (cfg.hidden, cfg.k)))
+            specs.append((f"layer_{n}.head_{e}.wk", (cfg.hidden, cfg.k)))
+            specs.append((f"layer_{n}.head_{e}.wv", (cfg.hidden, cfg.v)))
+        specs.append((f"layer_{n}.wo", (cfg.heads * cfg.v, cfg.hidden)))
+        specs.append((f"layer_{n}.g_mlp", (cfg.hidden,)))
+        specs.append((f"layer_{n}.w1", (cfg.hidden, cfg.mlp)))
+        specs.append((f"layer_{n}.b1", (cfg.mlp,)))
+        specs.append((f"layer_{n}.w2", (cfg.mlp, cfg.hidden)))
+        specs.append((f"layer_{n}.b2", (cfg.hidden,)))
+    specs.append(("w_out", (cfg.hidden, cfg.vocab)))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Growth schedules
+# ---------------------------------------------------------------------------
+
+#: The transformation-op vocabulary shared with the Rust coordinator.
+#: Each op maps a ModelConfig to the post-transformation ModelConfig.
+#: (The *parameter surgery* itself lives in transforms.py / rust/src/expand/.)
+OP_KINDS = ("mlp", "heads_add", "heads_expand", "attn_expand", "hidden", "layers_add")
+
+
+def apply_op_to_config(cfg: ModelConfig, op: dict[str, Any]) -> ModelConfig:
+    """Return the config that results from applying `op` (dimension-level)."""
+    kind = op["op"]
+    if kind == "mlp":
+        new_p = int(op["p"])
+        if new_p <= cfg.mlp:
+            raise ValueError(f"mlp expansion must grow p: {cfg.mlp} -> {new_p}")
+        return dataclasses.replace(cfg, mlp=new_p)
+    if kind == "heads_add":
+        count = int(op.get("count", 1))
+        if count < 1:
+            raise ValueError("heads_add count must be >= 1")
+        return dataclasses.replace(cfg, heads=cfg.heads + count)
+    if kind == "heads_expand":
+        new_v = int(op["v"])
+        if new_v <= cfg.v:
+            raise ValueError(f"heads expansion must grow v: {cfg.v} -> {new_v}")
+        return dataclasses.replace(cfg, v=new_v)
+    if kind == "attn_expand":
+        new_k = int(op["k"])
+        if new_k <= cfg.k:
+            raise ValueError(f"attention expansion must grow k: {cfg.k} -> {new_k}")
+        return dataclasses.replace(cfg, k=new_k)
+    if kind == "hidden":
+        new_h = int(op["h"])
+        if new_h <= cfg.hidden:
+            raise ValueError(f"hidden expansion must grow h: {cfg.hidden} -> {new_h}")
+        return dataclasses.replace(cfg, hidden=new_h)
+    if kind == "layers_add":
+        count = int(op.get("count", 1))
+        if count < 1:
+            raise ValueError("layers_add count must be >= 1")
+        return dataclasses.replace(cfg, layers=cfg.layers + count)
+    raise ValueError(f"unknown transformation op kind: {kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One growth-schedule stage: train `steps` steps under `config`.
+
+    `apply` holds the transformation ops executed at the *entry* boundary of
+    this stage (empty for stage 0).
+    """
+
+    name: str
+    config: ModelConfig
+    steps: int
+    apply: tuple[dict[str, Any], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class GrowthSchedule:
+    name: str
+    batch: int
+    stages: tuple[Stage, ...]
+
+    @staticmethod
+    def from_dict(d: dict[str, Any]) -> "GrowthSchedule":
+        base = ModelConfig.from_dict({**d["base"], "seq": d["seq"], "vocab": d["vocab"]})
+        stages: list[Stage] = []
+        cfg = base
+        for i, sd in enumerate(d["stages"]):
+            ops = tuple(sd.get("apply", ()))
+            if i == 0 and ops:
+                raise ValueError("stage 0 cannot have `apply` ops (nothing to expand yet)")
+            for op in ops:
+                cfg = apply_op_to_config(cfg, op)
+            stages.append(Stage(name=f"stage{i}", config=cfg, steps=int(sd["steps"]), apply=ops))
+        sched = GrowthSchedule(name=str(d.get("name", "unnamed")), batch=int(d.get("batch", 8)), stages=tuple(stages))
+        if not sched.stages:
+            raise ValueError("schedule must have at least one stage")
+        return sched
+
+    @staticmethod
+    def load(path: str) -> "GrowthSchedule":
+        with open(path) as f:
+            return GrowthSchedule.from_dict(json.load(f))

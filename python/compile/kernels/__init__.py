@@ -1,0 +1,16 @@
+"""L1 Pallas kernels (build-time only) and their pure-jnp oracles."""
+
+from .attention import pallas_attention
+from .mlp import pallas_mlp
+from .ref import MASK_VALUE, ref_attention, ref_mlp, ref_rmsnorm
+from .rmsnorm import pallas_rmsnorm
+
+__all__ = [
+    "MASK_VALUE",
+    "pallas_attention",
+    "pallas_mlp",
+    "pallas_rmsnorm",
+    "ref_attention",
+    "ref_mlp",
+    "ref_rmsnorm",
+]

@@ -1,0 +1,151 @@
+"""Blocked causal attention as a Pallas kernel (flash-attention recurrence).
+
+Hardware adaptation (DESIGN.md §5): the CUDA flash-attention formulation
+(threadblocks over Q tiles, K/V streamed through shared memory) is re-thought
+for TPU: the grid walks (batch*heads, q-tiles); each grid step holds one
+`(block_q, dk)` Q tile in VMEM and streams `(block_kv, dk)` / `(block_kv, dv)`
+K/V tiles with the online-softmax running accumulator. `BlockSpec` expresses
+the HBM<->VMEM schedule that CUDA would express with threadblock indexing.
+Tile defaults are MXU-shaped (128x128) and clamp to the problem size.
+
+Must run with interpret=True on this image: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Numerics are validated
+against `ref.ref_attention` by pytest (hypothesis shape sweep).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MASK_VALUE
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_kv: int, scale: float, causal: bool):
+    """One grid step: one (block_q, dk) Q tile vs all needed K/V tiles."""
+    block_q, dk = q_ref.shape
+    seq, dv = v_ref.shape
+    qi = pl.program_id(1)
+
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    def body(j, carry):
+        acc, m_prev, l_prev = carry
+        k_tile = pl.load(k_ref, (pl.dslice(j * block_kv, block_kv), slice(None))).astype(jnp.float32)
+        v_tile = pl.load(v_ref, (pl.dslice(j * block_kv, block_kv), slice(None))).astype(jnp.float32)
+        scores = q @ k_tile.T  # [block_q, block_kv]
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+            k_pos = j * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+            scores = jnp.where(q_pos >= k_pos, scores, MASK_VALUE)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_tile
+        return acc, m_new, l_new
+
+    num_kv = seq // block_kv
+    if causal:
+        # Only tiles that intersect the causal triangle: j*block_kv <= last q row.
+        # With block_q == block_kv this is j <= qi; keep general.
+        upper = jnp.minimum(((qi + 1) * block_q + block_kv - 1) // block_kv, num_kv)
+    else:
+        upper = num_kv
+    init = (
+        jnp.zeros((block_q, dv), jnp.float32),
+        jnp.full((block_q,), -jnp.inf, jnp.float32),
+        jnp.zeros((block_q,), jnp.float32),
+    )
+    acc, _, l = jax.lax.fori_loop(0, upper, body, init)
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _attention_forward(q, k, v, causal: bool, block_q: int, block_kv: int) -> jnp.ndarray:
+    bh, seq, dk = q.shape
+    dv = v.shape[-1]
+    scale = 1.0 / float(dk) ** 0.5
+    kernel = functools.partial(_attention_kernel, block_kv=block_kv, scale=scale, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, seq // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, seq, dk), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, seq, dv), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, dv), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, dv), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+# Backward pass: interpret-mode pallas_call is not differentiable under AOT
+# lowering (program_id has no grid context when jax re-traces the kernel for
+# the VJP), so the kernel carries a custom_vjp whose backward is the vjp of
+# the *reference* attention — exact same math, XLA-fused. On a real TPU this
+# is where a flash-attention backward kernel would slot in.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _attention(q, k, v, causal: bool, block_q: int, block_kv: int):
+    return _attention_forward(q, k, v, causal, block_q, block_kv)
+
+
+def _attention_fwd_rule(q, k, v, causal, block_q, block_kv):
+    return _attention_forward(q, k, v, causal, block_q, block_kv), (q, k, v)
+
+
+def _attention_bwd_rule(causal, block_q, block_kv, res, g):
+    from .ref import ref_attention
+
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref_attention(q_, k_, v_, causal=causal), q, k, v)
+    return vjp(g)
+
+
+_attention.defvjp(_attention_fwd_rule, _attention_bwd_rule)
+
+
+def pallas_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_kv: int = 128,
+) -> jnp.ndarray:
+    """Blocked attention over [bh, s, d*] inputs; matches ref_attention.
+
+    q, k: [bh, s, dk]; v: [bh, s, dv] -> [bh, s, dv]. `s` must be divisible
+    by the (clamped) block sizes; the model pads sequences to multiples of
+    the tile size at the call site if needed.
+    """
+    seq = q.shape[-2]
+    block_q = min(block_q, seq)
+    block_kv = min(block_kv, seq)
+    if seq % block_q or seq % block_kv:
+        raise ValueError(f"seq={seq} not divisible by blocks ({block_q},{block_kv})")
+    return _attention(q, k, v, causal, block_q, block_kv)
+
+
+def vmem_footprint_bytes(seq: int, dk: int, dv: int, block_q: int = 128, block_kv: int = 128, itemsize: int = 4) -> int:
+    """Static VMEM estimate per grid step (for DESIGN/EXPERIMENTS §Perf).
+
+    Counts the Q tile, one K and one V streaming tile, the score tile, the
+    accumulator, and the K/V block windows Pallas keeps resident (full-seq
+    K/V specs are conservative upper bounds here: seq*(dk+dv)).
+    """
+    block_q = min(block_q, seq)
+    block_kv = min(block_kv, seq)
+    tiles = (
+        block_q * dk  # q tile
+        + seq * dk  # k window (conservative: full-seq spec)
+        + seq * dv  # v window
+        + block_q * block_kv  # score tile
+        + block_q * dv  # accumulator
+        + 2 * block_q  # m, l
+    )
+    return tiles * itemsize

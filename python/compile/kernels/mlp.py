@@ -1,0 +1,117 @@
+"""Fused ReLU-MLP as a Pallas kernel: ReLU(x W1 + b1) W2 + b2 (paper Eq. 3).
+
+TPU mapping: the grid walks row tiles of the flattened activations; each
+grid step keeps one `(block_rows, h)` activation tile in VMEM and loops over
+`p`-tiles of the internal dimension, accumulating
+`acc += ReLU(x @ W1[:, j] + b1[j]) @ W2[j, :]`. Because ReLU is elementwise
+over the internal dimension, tiling p is *exact* (no recurrence needed, in
+contrast to attention's online softmax). The W1/W2 column/row tiles stream
+HBM->VMEM via pl.load; the MXU sees (block_rows x h) @ (h x block_p) and
+(block_rows x block_p) @ (block_p x h) matmuls.
+
+interpret=True on this image (see attention.py). Oracle: ref.ref_mlp.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *, block_p: int):
+    block_rows, h = x_ref.shape
+    p = b1_ref.shape[0]
+    x = x_ref[...].astype(jnp.float32)
+
+    def body(j, acc):
+        w1_tile = pl.load(w1_ref, (slice(None), pl.dslice(j * block_p, block_p))).astype(jnp.float32)
+        b1_tile = pl.load(b1_ref, (pl.dslice(j * block_p, block_p),)).astype(jnp.float32)
+        w2_tile = pl.load(w2_ref, (pl.dslice(j * block_p, block_p), slice(None))).astype(jnp.float32)
+        hid = jnp.maximum(x @ w1_tile + b1_tile, 0.0)
+        return acc + hid @ w2_tile
+
+    acc = jax.lax.fori_loop(0, p // block_p, body, jnp.zeros((block_rows, h), jnp.float32))
+    o_ref[...] = (acc + b2_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _mlp_forward(x, w1, b1, w2, b2, block_rows: int, block_p: int) -> jnp.ndarray:
+    rows, h = x.shape
+    p = b1.shape[0]
+    kernel = functools.partial(_mlp_kernel, block_p=block_p)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, h), lambda i: (i, 0)),
+            pl.BlockSpec((h, p), lambda i: (0, 0)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+            pl.BlockSpec((p, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, h), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+# custom_vjp: same rationale as attention.py — interpret-mode pallas_call
+# cannot be re-traced for the VJP under AOT lowering, so backward is the vjp
+# of the reference MLP (identical math, XLA-fused).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _mlp(x, w1, b1, w2, b2, block_rows: int, block_p: int):
+    return _mlp_forward(x, w1, b1, w2, b2, block_rows, block_p)
+
+
+def _mlp_fwd_rule(x, w1, b1, w2, b2, block_rows, block_p):
+    return _mlp_forward(x, w1, b1, w2, b2, block_rows, block_p), (x, w1, b1, w2, b2)
+
+
+def _mlp_bwd_rule(block_rows, block_p, res, g):
+    from .ref import ref_mlp
+
+    _, vjp = jax.vjp(ref_mlp, *res)
+    return vjp(g)
+
+
+_mlp.defvjp(_mlp_fwd_rule, _mlp_bwd_rule)
+
+
+def pallas_mlp(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+    *,
+    block_rows: int = 128,
+    block_p: int = 128,
+) -> jnp.ndarray:
+    """Fused MLP over [rows, h] activations; matches ref_mlp.
+
+    x: [rows, h]; w1: [h, p]; b1: [p]; w2: [p, h]; b2: [h] -> [rows, h].
+    """
+    rows = x.shape[0]
+    p = b1.shape[0]
+    block_rows = min(block_rows, rows)
+    block_p = min(block_p, p)
+    if rows % block_rows or p % block_p:
+        raise ValueError(f"rows={rows}, p={p} not divisible by blocks ({block_rows},{block_p})")
+    return _mlp(x, w1, b1, w2, b2, block_rows, block_p)
+
+
+def vmem_footprint_bytes(h: int, p: int, block_rows: int = 128, block_p: int = 128, itemsize: int = 4) -> int:
+    """Static VMEM estimate per grid step (EXPERIMENTS §Perf)."""
+    block_p = min(block_p, p)
+    tiles = (
+        block_rows * h  # x tile
+        + h * block_p  # w1 tile
+        + block_p  # b1 tile
+        + block_p * h  # w2 tile
+        + h  # b2
+        + block_rows * block_p  # hidden tile
+        + block_rows * h  # accumulator
+    )
+    return tiles * itemsize

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *correctness ground truth* for L1: pytest asserts the Pallas
+kernels (interpret=True) match these references to tight tolerances across
+hypothesis-swept shapes. They are also the default compute path used by the
+training artifacts (XLA-CPU fuses these well; interpret-mode Pallas inside
+the train step would only add CPU simulation overhead — see DESIGN.md §2).
+
+All functions follow the paper's formalization (Section 2, Eqs. 3-5).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Additive mask value for disallowed (non-causal) attention logits.
+#: Finite (not -inf) so that fully-masked tiles in the blocked kernel remain
+#: NaN-free; any causal row always has >= 1 unmasked entry so the softmax is
+#: unaffected at f32 precision.
+MASK_VALUE = -1e30
+
+
+def ref_rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 0.0) -> jnp.ndarray:
+    """RMSNorm, paper Eq. 5: x_ij * g_j / sqrt(mean_j x_ij^2).
+
+    The paper's definition has no epsilon; we keep an optional one (default
+    0.0 to preserve the exactness of Thm 3.5's sqrt(h)/sqrt(h_hat) scaling).
+    """
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * g / jnp.sqrt(ms + eps)
+
+
+def ref_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, causal: bool = True) -> jnp.ndarray:
+    """Scaled dot-product attention, paper Eq. 4, with optional causal mask.
+
+    Shapes: q, k: [..., s, dk], v: [..., s, dv] -> [..., s, dv].
+    The 1/sqrt(dk) scale uses the *static* dk of the inputs, which is what
+    Thm 3.4's sqrt(k_hat)/sqrt(k) key-scaling compensates for.
+    """
+    dk = q.shape[-1]
+    scores = jnp.einsum("...qd,...kd->...qk", q, k) / jnp.sqrt(jnp.float32(dk))
+    if causal:
+        s = q.shape[-2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, MASK_VALUE)
+    weights = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return jnp.einsum("...qk,...kd->...qd", weights, v)
+
+
+def ref_mlp(x: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray, w2: jnp.ndarray, b2: jnp.ndarray) -> jnp.ndarray:
+    """Two-layer ReLU MLP, paper Eq. 3: ReLU(x W1 + b1) W2 + b2."""
+    hid = jnp.maximum(x @ w1 + b1, 0.0)
+    return hid @ w2 + b2

@@ -1,0 +1,47 @@
+"""RMSNorm as a Pallas kernel (paper Eq. 5).
+
+Row-tiled: each grid step normalizes a `(block_rows, h)` activation tile in
+VMEM against the scaling vector g. Elementwise + row-reduction only (VPU
+work, no MXU); included both as the simplest exemplar of the kernel
+interface and because Thm 3.5's sqrt(h)/sqrt(h_hat) norm-scaling is the
+subtlest part of the hidden-dimension expansion proof — having the norm as
+a standalone kernel lets pytest probe it in isolation.
+
+interpret=True on this image (see attention.py). Oracle: ref.ref_rmsnorm.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * g / jnp.sqrt(ms + eps)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps"))
+def pallas_rmsnorm(x: jnp.ndarray, g: jnp.ndarray, *, block_rows: int = 128, eps: float = 0.0) -> jnp.ndarray:
+    """RMSNorm over [rows, h]; matches ref_rmsnorm."""
+    rows, h = x.shape
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        raise ValueError(f"rows={rows} not divisible by block_rows={block_rows}")
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, h), x.dtype),
+        interpret=True,
+    )(x, g)

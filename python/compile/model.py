@@ -1,0 +1,157 @@
+"""L2: the paper-faithful transformer (Section 2, Eqs. 1-5) in JAX.
+
+Build-time only — this module is lowered to HLO text by aot.py and executed
+from Rust via PJRT; it is never imported on the training path.
+
+Faithfulness notes (these all matter for the function-preservation proofs):
+  * pre-norm residual blocks exactly as Eq. 2;
+  * RMSNorm (Eq. 5) with *no epsilon* by default — Thm 3.5's
+    sqrt(h)/sqrt(h_hat) norm-scaling is exact only for eps=0;
+  * per-head W^Q/W^K/W^V with head outputs concatenated before a single
+    W^O (Eq. 4) — Defs 3.2/3.3 describe surgery on the E*v-row W^O;
+  * 1/sqrt(k) score scaling with the *static* k (Eq. 4), compensated by
+    Thm 3.4's key scaling on expansion;
+  * ReLU MLP with biases (Eq. 3);
+  * learned positional embedding P added once at the input (Eq. 1);
+  * final projection W^out with *no* final normalization (Eq. 1) and no
+    embed/W^out weight tying (their expansion constraints differ).
+
+We add a batch dimension and causal masking (the paper formalizes a single
+sequence and omits the mask; both are orthogonal to the theorems — the mask
+is applied to the score matrix *after* scaling, so the Thm 3.4 algebra is
+unchanged, and preservation holds per batch row independently).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, param_specs
+from .kernels import pallas_attention, pallas_mlp, ref_attention, ref_mlp, ref_rmsnorm
+
+Params = dict[str, jnp.ndarray]
+
+
+def init_params(cfg: ModelConfig, seed: int = 0, scale: float = 0.02) -> Params:
+    """Random-normal init (scale*N(0,1)), norm gains at 1. Matches rust init
+    given the same algorithm; tests only rely on distributional shape."""
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("g_mha", "g_mlp")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("b1", "b2")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = scale * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: Params) -> list[jnp.ndarray]:
+    """Canonical-order flat list (the AOT artifact's positional inputs)."""
+    out = []
+    for name, shape in param_specs(cfg):
+        arr = params[name]
+        if tuple(arr.shape) != tuple(shape):
+            raise ValueError(f"param {name}: expected shape {shape}, got {arr.shape}")
+        out.append(arr)
+    return out
+
+
+def unflatten_params(cfg: ModelConfig, flat: list[jnp.ndarray]) -> Params:
+    specs = param_specs(cfg)
+    if len(flat) != len(specs):
+        raise ValueError(f"expected {len(specs)} params, got {len(flat)}")
+    return {name: arr for (name, _), arr in zip(specs, flat)}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _mha(cfg: ModelConfig, params: Params, n: int, x: jnp.ndarray, kernels: str) -> jnp.ndarray:
+    """Multi-head attention, Eq. 4. x: [B, s, h] -> [B, s, h]."""
+    B, s, h = x.shape
+    wq = jnp.stack([params[f"layer_{n}.head_{e}.wq"] for e in range(cfg.heads)])  # [E, h, k]
+    wk = jnp.stack([params[f"layer_{n}.head_{e}.wk"] for e in range(cfg.heads)])
+    wv = jnp.stack([params[f"layer_{n}.head_{e}.wv"] for e in range(cfg.heads)])  # [E, h, v]
+    q = jnp.einsum("bsh,ehk->besk", x, wq)
+    k = jnp.einsum("bsh,ehk->besk", x, wk)
+    v = jnp.einsum("bsh,ehv->besv", x, wv)
+    if kernels == "pallas":
+        bh = B * cfg.heads
+        heads = pallas_attention(
+            q.reshape(bh, s, cfg.k), k.reshape(bh, s, cfg.k), v.reshape(bh, s, cfg.v), causal=True
+        ).reshape(B, cfg.heads, s, cfg.v)
+    else:
+        heads = ref_attention(q, k, v, causal=True)  # [B, E, s, v]
+    concat = heads.transpose(0, 2, 1, 3).reshape(B, s, cfg.heads * cfg.v)  # [H_1 ... H_E]
+    return concat @ params[f"layer_{n}.wo"]
+
+
+def _mlp(cfg: ModelConfig, params: Params, n: int, x: jnp.ndarray, kernels: str) -> jnp.ndarray:
+    """MLP, Eq. 3. x: [B, s, h] -> [B, s, h]."""
+    B, s, h = x.shape
+    w1, b1 = params[f"layer_{n}.w1"], params[f"layer_{n}.b1"]
+    w2, b2 = params[f"layer_{n}.w2"], params[f"layer_{n}.b2"]
+    if kernels == "pallas":
+        return pallas_mlp(x.reshape(B * s, h), w1, b1, w2, b2).reshape(B, s, h)
+    return ref_mlp(x, w1, b1, w2, b2)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jnp.ndarray, *, kernels: str = "jnp") -> jnp.ndarray:
+    """TransformerArchitecture (Eq. 1): tokens [B, s] int32 -> logits [B, s, vocab]."""
+    if kernels not in ("jnp", "pallas"):
+        raise ValueError(f"kernels must be 'jnp' or 'pallas', got {kernels!r}")
+    x = params["embed"][tokens] + params["pos"][None, :, :]  # I + P
+    for n in range(cfg.layers):
+        x = x + _mha(cfg, params, n, ref_rmsnorm(x, params[f"layer_{n}.g_mha"]), kernels)  # I'_n (Eq. 2)
+        x = x + _mlp(cfg, params, n, ref_rmsnorm(x, params[f"layer_{n}.g_mlp"]), kernels)
+    return x @ params["w_out"]
+
+
+def loss_fn(cfg: ModelConfig, params: Params, tokens: jnp.ndarray, targets: jnp.ndarray, *, kernels: str = "jnp") -> jnp.ndarray:
+    """Mean next-token cross-entropy. targets: [B, s] int32 (already shifted)."""
+    logits = forward(cfg, params, tokens, kernels=kernels)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# AOT entrypoints (positional flat-param signatures)
+# ---------------------------------------------------------------------------
+
+
+def make_fwd(cfg: ModelConfig, *, kernels: str = "jnp") -> Callable:
+    """fwd(*flat_params, tokens) -> (logits,) — positional for HLO lowering."""
+
+    def fwd(*args):
+        flat, tokens = list(args[:-1]), args[-1]
+        return (forward(cfg, unflatten_params(cfg, flat), tokens, kernels=kernels),)
+
+    return fwd
+
+
+def make_step(cfg: ModelConfig, *, kernels: str = "jnp") -> Callable:
+    """step(*flat_params, tokens, targets) -> (loss, *grads).
+
+    Gradients come back to Rust, which owns the optimizer (DESIGN.md §2:
+    optimizer moments must undergo the same expansion surgery as params).
+    """
+
+    def step(*args):
+        flat, tokens, targets = list(args[:-2]), args[-2], args[-1]
+
+        def loss_of(flat_p):
+            return loss_fn(cfg, unflatten_params(cfg, flat_p), tokens, targets, kernels=kernels)
+
+        loss, grads = jax.value_and_grad(loss_of)(flat)
+        return (loss, *grads)
+
+    return step

@@ -1,0 +1,388 @@
+"""The paper's six function-preserving expansions — JAX reference impl.
+
+Each transformation mirrors its Definition in Section 3 and enforces the
+zero-init constraints of the matching Theorem; all matrices the theorems
+leave *unconstrained* are filled by `init_fn` (default: random normal), so
+the pytest suite exercises exactly the freedom the proofs claim.
+
+This module is the cross-language oracle for `rust/src/expand/`: both sides
+implement the same surgery on the canonical parameter layout
+(configs.param_specs), and integration tests compare them via golden
+artifacts and via end-to-end logit preservation.
+
+Constraint map (Table 1):
+    3.1 MLP expansion        p -> p_hat   zero: new rows of W2
+    3.2 Head addition        E -> E+1     zero: new v rows of WO
+    3.3 Heads expansion      v -> v_hat   zero: new rows of each WO split
+    3.4 Attention expansion  k -> k_hat   zero: new cols of WK; scale old WK
+                                          by sqrt(k_hat)/sqrt(k)
+    3.5 Hidden expansion     h -> h_hat   zero: new cols of P, W2, b2, WO,
+                                          embed (M^I, Eq. 37); scale norm g
+                                          by sqrt(h)/sqrt(h_hat)
+    3.6 Layer addition       N -> N+1     zero: new layer's WO, W2, b2
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, apply_op_to_config
+from .model import Params
+
+InitFn = Callable[[jax.Array, tuple[int, ...]], jnp.ndarray]
+
+
+def default_init(key: jax.Array, shape: tuple[int, ...]) -> jnp.ndarray:
+    """Default initializer for unconstrained new parameters."""
+    return 0.02 * jax.random.normal(key, shape, jnp.float32)
+
+
+def zeros_init(key: jax.Array, shape: tuple[int, ...]) -> jnp.ndarray:
+    return jnp.zeros(shape, jnp.float32)
+
+
+def _split(key: jax.Array) -> tuple[jax.Array, jax.Array]:
+    return jax.random.split(key)
+
+
+# ---------------------------------------------------------------------------
+# 3.1 MLP expansion
+# ---------------------------------------------------------------------------
+
+
+def expand_mlp(
+    cfg: ModelConfig,
+    params: Params,
+    new_p: int,
+    *,
+    key: jax.Array | None = None,
+    init_fn: InitFn = default_init,
+    zero_constrained: bool = True,
+) -> tuple[ModelConfig, Params]:
+    """Def. 3.1: grow the MLP internal dimension p -> new_p in every layer.
+
+    `zero_constrained=False` deliberately violates Thm 3.1 (used by the E6
+    ablation to show preservation then fails).
+    """
+    if new_p <= cfg.mlp:
+        raise ValueError(f"new_p must exceed p: {cfg.mlp} -> {new_p}")
+    key = jax.random.PRNGKey(0) if key is None else key
+    d = new_p - cfg.mlp
+    out = dict(params)
+    for n in range(cfg.layers):
+        key, k1 = _split(key)
+        key, k2 = _split(key)
+        key, k3 = _split(key)
+        m_w1 = init_fn(k1, (cfg.hidden, d))  # unconstrained (Eq. 6)
+        m_b1 = init_fn(k2, (d,))  # unconstrained (Eq. 7)
+        m_w2 = zeros_init(k3, (d, cfg.hidden)) if zero_constrained else init_fn(k3, (d, cfg.hidden))  # Thm 3.1
+        out[f"layer_{n}.w1"] = jnp.concatenate([params[f"layer_{n}.w1"], m_w1], axis=1)
+        out[f"layer_{n}.b1"] = jnp.concatenate([params[f"layer_{n}.b1"], m_b1], axis=0)
+        out[f"layer_{n}.w2"] = jnp.concatenate([params[f"layer_{n}.w2"], m_w2], axis=0)
+    return dataclasses.replace(cfg, mlp=new_p), out
+
+
+# ---------------------------------------------------------------------------
+# 3.2 Head addition
+# ---------------------------------------------------------------------------
+
+
+def add_heads(
+    cfg: ModelConfig,
+    params: Params,
+    count: int = 1,
+    *,
+    key: jax.Array | None = None,
+    init_fn: InitFn = default_init,
+    zero_constrained: bool = True,
+) -> tuple[ModelConfig, Params]:
+    """Def. 3.2: add `count` new attention heads to every layer."""
+    if count < 1:
+        raise ValueError("count must be >= 1")
+    key = jax.random.PRNGKey(0) if key is None else key
+    out = dict(params)
+    new_e = cfg.heads + count
+    for n in range(cfg.layers):
+        blocks = [params[f"layer_{n}.wo"]]
+        for e in range(cfg.heads, new_e):
+            key, kq = _split(key)
+            key, kk = _split(key)
+            key, kv = _split(key)
+            key, ko = _split(key)
+            out[f"layer_{n}.head_{e}.wq"] = init_fn(kq, (cfg.hidden, cfg.k))  # unconstrained
+            out[f"layer_{n}.head_{e}.wk"] = init_fn(kk, (cfg.hidden, cfg.k))
+            out[f"layer_{n}.head_{e}.wv"] = init_fn(kv, (cfg.hidden, cfg.v))
+            m_wo = zeros_init(ko, (cfg.v, cfg.hidden)) if zero_constrained else init_fn(ko, (cfg.v, cfg.hidden))
+            blocks.append(m_wo)  # Thm 3.2: zero rows appended to W^O
+        out[f"layer_{n}.wo"] = jnp.concatenate(blocks, axis=0)
+    return dataclasses.replace(cfg, heads=new_e), out
+
+
+# ---------------------------------------------------------------------------
+# 3.3 Heads expansion
+# ---------------------------------------------------------------------------
+
+
+def expand_heads(
+    cfg: ModelConfig,
+    params: Params,
+    new_v: int,
+    *,
+    key: jax.Array | None = None,
+    init_fn: InitFn = default_init,
+    zero_constrained: bool = True,
+) -> tuple[ModelConfig, Params]:
+    """Def. 3.3: grow each head's value/output width v -> new_v.
+
+    W^O is treated as E stacked (v, h) splits (Eq. 15); each split receives
+    (new_v - v) *zero* rows (Thm 3.3), interleaved per head.
+    """
+    if new_v <= cfg.v:
+        raise ValueError(f"new_v must exceed v: {cfg.v} -> {new_v}")
+    key = jax.random.PRNGKey(0) if key is None else key
+    d = new_v - cfg.v
+    out = dict(params)
+    for n in range(cfg.layers):
+        splits = []
+        for e in range(cfg.heads):
+            key, kv = _split(key)
+            key, ko = _split(key)
+            m_wv = init_fn(kv, (cfg.hidden, d))  # unconstrained (Eq. 13)
+            out[f"layer_{n}.head_{e}.wv"] = jnp.concatenate([params[f"layer_{n}.head_{e}.wv"], m_wv], axis=1)
+            split = params[f"layer_{n}.wo"][e * cfg.v : (e + 1) * cfg.v, :]
+            m_wo = zeros_init(ko, (d, cfg.hidden)) if zero_constrained else init_fn(ko, (d, cfg.hidden))
+            splits.append(jnp.concatenate([split, m_wo], axis=0))
+        out[f"layer_{n}.wo"] = jnp.concatenate(splits, axis=0)
+    return dataclasses.replace(cfg, v=new_v), out
+
+
+# ---------------------------------------------------------------------------
+# 3.4 Attention expansion
+# ---------------------------------------------------------------------------
+
+
+def expand_attention(
+    cfg: ModelConfig,
+    params: Params,
+    new_k: int,
+    *,
+    key: jax.Array | None = None,
+    init_fn: InitFn = default_init,
+    zero_constrained: bool = True,
+    scale_keys: bool = True,
+) -> tuple[ModelConfig, Params]:
+    """Def. 3.4: grow the key/query width k -> new_k.
+
+    The pre-existing key columns are scaled by sqrt(new_k)/sqrt(k) (Eq. 19)
+    to compensate the 1/sqrt(k) attention scale; `scale_keys=False` drops
+    the factor (E6/E7 ablation — "no known works consider scaling factors").
+    """
+    if new_k <= cfg.k:
+        raise ValueError(f"new_k must exceed k: {cfg.k} -> {new_k}")
+    key = jax.random.PRNGKey(0) if key is None else key
+    d = new_k - cfg.k
+    factor = jnp.sqrt(jnp.float32(new_k)) / jnp.sqrt(jnp.float32(cfg.k)) if scale_keys else jnp.float32(1)
+    out = dict(params)
+    for n in range(cfg.layers):
+        for e in range(cfg.heads):
+            key, kq = _split(key)
+            key, kk = _split(key)
+            m_wq = init_fn(kq, (cfg.hidden, d))  # unconstrained (Eq. 18)
+            m_wk = zeros_init(kk, (cfg.hidden, d)) if zero_constrained else init_fn(kk, (cfg.hidden, d))  # Thm 3.4
+            out[f"layer_{n}.head_{e}.wq"] = jnp.concatenate([params[f"layer_{n}.head_{e}.wq"], m_wq], axis=1)
+            out[f"layer_{n}.head_{e}.wk"] = jnp.concatenate(
+                [factor * params[f"layer_{n}.head_{e}.wk"], m_wk], axis=1
+            )
+    return dataclasses.replace(cfg, k=new_k), out
+
+
+# ---------------------------------------------------------------------------
+# 3.5 Hidden dimension expansion
+# ---------------------------------------------------------------------------
+
+
+def expand_hidden(
+    cfg: ModelConfig,
+    params: Params,
+    new_h: int,
+    *,
+    key: jax.Array | None = None,
+    init_fn: InitFn = default_init,
+    zero_constrained: bool = True,
+    scale_norm: bool = True,
+) -> tuple[ModelConfig, Params]:
+    """Def. 3.5: grow the transformer hidden width h -> new_h (all layers).
+
+    Zero-init set (Thm 3.5): new cols of P, W2, b2, W^O, and of the
+    embedding table (M^I, Eq. 37). Norm gains are scaled by
+    sqrt(h)/sqrt(new_h) (Eq. 24) to compensate RMSNorm's 1/h mean;
+    `scale_norm=False` drops it (E6/E7 ablation).
+    """
+    if new_h <= cfg.hidden:
+        raise ValueError(f"new_h must exceed h: {cfg.hidden} -> {new_h}")
+    key = jax.random.PRNGKey(0) if key is None else key
+    d = new_h - cfg.hidden
+    g_factor = jnp.sqrt(jnp.float32(cfg.hidden)) / jnp.sqrt(jnp.float32(new_h)) if scale_norm else jnp.float32(1)
+    out = dict(params)
+
+    def grow_cols(name: str, constrained: bool) -> None:
+        nonlocal key
+        key, k1 = _split(key)
+        rows = params[name].shape[0]
+        m = zeros_init(k1, (rows, d)) if (constrained and zero_constrained) else init_fn(k1, (rows, d))
+        out[name] = jnp.concatenate([params[name], m], axis=1)
+
+    def grow_rows(name: str) -> None:  # always unconstrained in Thm 3.5
+        nonlocal key
+        key, k1 = _split(key)
+        cols = params[name].shape[1]
+        out[name] = jnp.concatenate([params[name], init_fn(k1, (d, cols))], axis=0)
+
+    grow_cols("embed", constrained=True)  # M^I := 0 (Eq. 37)
+    grow_cols("pos", constrained=True)  # M^P := 0 (Eq. 33)
+    grow_rows("w_out")  # M^Wout unconstrained (Eq. 23)
+    for n in range(cfg.layers):
+        for c in ("g_mha", "g_mlp"):
+            key, k1 = _split(key)
+            m_g = zeros_init(k1, (d,)) if zero_constrained else init_fn(k1, (d,))
+            # NOTE (paper erratum): Thm 3.5's constraint list names the "norm
+            # scaling vector" among the zero-inits; Eq. 48's proof only needs
+            # the *existing* entries scaled — the new entries multiply zero
+            # activations. We zero them anyway (more conservative, and the
+            # Rust side must match bit-for-bit).
+            out[f"layer_{n}.{c}"] = jnp.concatenate([g_factor * params[f"layer_{n}.{c}"], m_g], axis=0)
+        for e in range(cfg.heads):
+            grow_rows(f"layer_{n}.head_{e}.wq")
+            grow_rows(f"layer_{n}.head_{e}.wk")
+            grow_rows(f"layer_{n}.head_{e}.wv")
+        grow_cols(f"layer_{n}.wo", constrained=True)  # M^WO := 0 (Eq. 36)
+        grow_rows(f"layer_{n}.w1")
+        grow_cols(f"layer_{n}.w2", constrained=True)  # M^Wl2 := 0 (Eq. 34)
+        key, k1 = _split(key)
+        m_b2 = zeros_init(k1, (d,)) if zero_constrained else init_fn(k1, (d,))  # m^bl2 := 0 (Eq. 35)
+        out[f"layer_{n}.b2"] = jnp.concatenate([params[f"layer_{n}.b2"], m_b2], axis=0)
+    return dataclasses.replace(cfg, hidden=new_h), out
+
+
+# ---------------------------------------------------------------------------
+# 3.6 Layer addition
+# ---------------------------------------------------------------------------
+
+
+def add_layers(
+    cfg: ModelConfig,
+    params: Params,
+    count: int = 1,
+    position: int | str = "top",
+    *,
+    key: jax.Array | None = None,
+    init_fn: InitFn = default_init,
+    zero_constrained: bool = True,
+) -> tuple[ModelConfig, Params]:
+    """Def. 3.6: insert `count` identity-initialized layers at `position`.
+
+    position: int in [0, N], or "top" (N) / "bottom" (0). Downstream layer
+    indices shift up (Def. 3.6). Thm 3.6 zero-inits the new layers' W^O, W2
+    and b2; everything else (norm gains, W^Q/K/V, W1, b1) is unconstrained.
+    """
+    if count < 1:
+        raise ValueError("count must be >= 1")
+    pos = {"top": cfg.layers, "bottom": 0}.get(position, position)
+    if not isinstance(pos, int) or not 0 <= pos <= cfg.layers:
+        raise ValueError(f"position must be in [0, {cfg.layers}] or top/bottom, got {position!r}")
+    key = jax.random.PRNGKey(0) if key is None else key
+    new_n = cfg.layers + count
+    out = {k_: v_ for k_, v_ in params.items() if not k_.startswith("layer_")}
+
+    def old_layer(n: int) -> dict[str, jnp.ndarray]:
+        prefix = f"layer_{n}."
+        return {k_[len(prefix) :]: v_ for k_, v_ in params.items() if k_.startswith(prefix)}
+
+    def new_layer() -> dict[str, jnp.ndarray]:
+        nonlocal key
+        lp: dict[str, jnp.ndarray] = {}
+        key, k1 = _split(key)
+        lp["g_mha"] = jnp.ones((cfg.hidden,), jnp.float32)
+        lp["g_mlp"] = jnp.ones((cfg.hidden,), jnp.float32)
+        for e in range(cfg.heads):
+            for mat, width in (("wq", cfg.k), ("wk", cfg.k), ("wv", cfg.v)):
+                key, k1 = _split(key)
+                lp[f"head_{e}.{mat}"] = init_fn(k1, (cfg.hidden, width))
+        key, ko = _split(key)
+        key, k2w = _split(key)
+        key, k2b = _split(key)
+        if zero_constrained:  # Thm 3.6
+            lp["wo"] = jnp.zeros((cfg.heads * cfg.v, cfg.hidden), jnp.float32)
+            lp["w2"] = jnp.zeros((cfg.mlp, cfg.hidden), jnp.float32)
+            lp["b2"] = jnp.zeros((cfg.hidden,), jnp.float32)
+        else:
+            lp["wo"] = init_fn(ko, (cfg.heads * cfg.v, cfg.hidden))
+            lp["w2"] = init_fn(k2w, (cfg.mlp, cfg.hidden))
+            lp["b2"] = init_fn(k2b, (cfg.hidden,))
+        key, k1w = _split(key)
+        key, k1b = _split(key)
+        lp["w1"] = init_fn(k1w, (cfg.hidden, cfg.mlp))
+        lp["b1"] = init_fn(k1b, (cfg.mlp,))
+        return lp
+
+    layers = [old_layer(n) for n in range(cfg.layers)]
+    for _ in range(count):
+        layers.insert(pos, new_layer())
+    for n, lp in enumerate(layers):
+        for k_, v_ in lp.items():
+            out[f"layer_{n}.{k_}"] = v_
+    return dataclasses.replace(cfg, layers=new_n), out
+
+
+# ---------------------------------------------------------------------------
+# Composition / op dispatch (shared vocabulary with the Rust coordinator)
+# ---------------------------------------------------------------------------
+
+
+def apply_op(
+    cfg: ModelConfig,
+    params: Params,
+    op: dict[str, Any],
+    *,
+    key: jax.Array | None = None,
+    init_fn: InitFn = default_init,
+    zero_constrained: bool = True,
+) -> tuple[ModelConfig, Params]:
+    """Apply one schedule op (configs.OP_KINDS) to (cfg, params)."""
+    kind = op["op"]
+    kw = dict(key=key, init_fn=init_fn, zero_constrained=zero_constrained)
+    if kind == "mlp":
+        return expand_mlp(cfg, params, int(op["p"]), **kw)
+    if kind == "heads_add":
+        return add_heads(cfg, params, int(op.get("count", 1)), **kw)
+    if kind == "heads_expand":
+        return expand_heads(cfg, params, int(op["v"]), **kw)
+    if kind == "attn_expand":
+        return expand_attention(cfg, params, int(op["k"]), **kw)
+    if kind == "hidden":
+        return expand_hidden(cfg, params, int(op["h"]), **kw)
+    if kind == "layers_add":
+        return add_layers(cfg, params, int(op.get("count", 1)), op.get("position", "top"), **kw)
+    raise ValueError(f"unknown op kind {kind!r}")
+
+
+def apply_ops(
+    cfg: ModelConfig,
+    params: Params,
+    ops: list[dict[str, Any]] | tuple[dict[str, Any], ...],
+    *,
+    key: jax.Array | None = None,
+    init_fn: InitFn = default_init,
+) -> tuple[ModelConfig, Params]:
+    """Apply a composed sequence of ops (Section 3: transformations compose)."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    for op in ops:
+        key, sub = _split(key)
+        new_cfg = apply_op_to_config(cfg, op)  # validates dimension monotonicity
+        cfg, params = apply_op(cfg, params, op, key=sub, init_fn=init_fn)
+        assert cfg == new_cfg, f"config drift applying {op}: {cfg} != {new_cfg}"
+    return cfg, params

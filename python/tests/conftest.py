@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Allow `from compile import ...` regardless of pytest invocation directory.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+# Absolute path to the shipped growth schedule (tests must be cwd-independent).
+GROWTH_DEFAULT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "configs", "growth_default.json")
+)

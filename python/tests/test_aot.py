@@ -1,0 +1,116 @@
+"""AOT pipeline tests: lowering, manifest schema, HLO-text invariants."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import build_manifest, lower_stage, main as aot_main
+from compile.configs import GrowthSchedule, ModelConfig, param_specs
+
+TINY = {
+    "name": "tiny",
+    "batch": 2,
+    "seq": 8,
+    "vocab": 16,
+    "base": {"layers": 1, "hidden": 8, "heads": 1, "k": 4, "v": 4, "mlp": 8},
+    "stages": [{"steps": 5}, {"steps": 5, "apply": [{"op": "mlp", "p": 16}]}],
+}
+
+
+@pytest.fixture(scope="module")
+def tiny_sched():
+    return GrowthSchedule.from_dict(TINY)
+
+
+@pytest.fixture(scope="module")
+def tiny_hlo(tiny_sched):
+    cfg = tiny_sched.stages[0].config
+    return lower_stage(cfg, tiny_sched.batch, "jnp")
+
+
+class TestLowering:
+    def test_hlo_text_has_entry(self, tiny_hlo):
+        fwd, step = tiny_hlo
+        assert "ENTRY" in fwd and "ENTRY" in step
+        assert "HloModule" in fwd
+
+    @staticmethod
+    def _entry_param_count(hlo: str) -> int:
+        # nested computations also declare parameters; count ENTRY's only
+        entry = hlo[hlo.index("ENTRY") :]
+        return entry.count(" parameter(")
+
+    def test_fwd_parameter_count(self, tiny_sched, tiny_hlo):
+        """fwd takes |params| + 1 (tokens) positional inputs."""
+        fwd, _ = tiny_hlo
+        cfg = tiny_sched.stages[0].config
+        assert self._entry_param_count(fwd) == len(param_specs(cfg)) + 1
+
+    def test_step_parameter_count(self, tiny_sched, tiny_hlo):
+        _, step = tiny_hlo
+        cfg = tiny_sched.stages[0].config
+        assert self._entry_param_count(step) == len(param_specs(cfg)) + 2
+
+    def test_fwd_output_shape_in_text(self, tiny_sched, tiny_hlo):
+        fwd, _ = tiny_hlo
+        cfg = tiny_sched.stages[0].config
+        assert f"f32[{tiny_sched.batch},{cfg.seq},{cfg.vocab}]" in fwd
+
+    def test_pallas_variant_lowers(self, tiny_sched):
+        cfg = tiny_sched.stages[0].config
+        fwd, step = lower_stage(cfg, tiny_sched.batch, "pallas")
+        assert "ENTRY" in fwd and "ENTRY" in step
+        # interpret-mode pallas must not leave Mosaic custom-calls behind
+        assert "tpu_custom_call" not in fwd and "mosaic" not in fwd.lower()
+
+
+class TestManifest:
+    def test_schema(self, tiny_sched):
+        m = build_manifest(tiny_sched, "jnp")
+        assert m["version"] == 1
+        assert m["batch"] == 2
+        assert len(m["stages"]) == 2
+        s0 = m["stages"][0]
+        assert s0["name"] == "stage0"
+        assert s0["fwd"] == "stage0.fwd.hlo.txt"
+        assert [p["name"] for p in s0["params"]][0] == "embed"
+        assert s0["num_params"] == tiny_sched.stages[0].config.num_params()
+
+    def test_pallas_suffix(self, tiny_sched):
+        m = build_manifest(tiny_sched, "pallas")
+        assert m["stages"][0]["fwd"] == "stage0.pallas.fwd.hlo.txt"
+
+    def test_param_shapes_match_config(self, tiny_sched):
+        m = build_manifest(tiny_sched, "jnp")
+        for stage, st_meta in zip(tiny_sched.stages, m["stages"]):
+            want = [(n, list(s)) for n, s in param_specs(stage.config)]
+            got = [(p["name"], p["shape"]) for p in st_meta["params"]]
+            assert got == want
+
+
+class TestEndToEndAot:
+    def test_main_writes_artifacts(self, tmp_path):
+        sched_path = tmp_path / "sched.json"
+        sched_path.write_text(json.dumps(TINY))
+        out = tmp_path / "artifacts"
+        rc = aot_main(["--schedule", str(sched_path), "--out-dir", str(out)])
+        assert rc == 0
+        manifest = json.loads((out / "manifest.json").read_text())
+        for st_meta in manifest["stages"]:
+            for kind in ("fwd", "step"):
+                text = (out / st_meta[kind]).read_text()
+                assert "ENTRY" in text
+
+    def test_identical_configs_share_artifacts(self, tmp_path):
+        d = dict(TINY)
+        d["stages"] = [{"steps": 5}, {"steps": 7}]  # same config twice
+        sched_path = tmp_path / "sched.json"
+        sched_path.write_text(json.dumps(d))
+        out = tmp_path / "artifacts"
+        aot_main(["--schedule", str(sched_path), "--out-dir", str(out)])
+        manifest = json.loads((out / "manifest.json").read_text())
+        assert manifest["stages"][0]["fwd"] == manifest["stages"][1]["fwd"]
+        # only one pair of HLO files on disk
+        hlo_files = [f for f in os.listdir(out) if f.endswith(".hlo.txt")]
+        assert len(hlo_files) == 2

@@ -1,0 +1,166 @@
+"""Tests for the config/schedule contract shared with the Rust coordinator."""
+
+import dataclasses
+
+import pytest
+
+from compile.configs import (
+    GrowthSchedule,
+    ModelConfig,
+    apply_op_to_config,
+    param_specs,
+)
+
+CFG = ModelConfig(layers=2, hidden=16, heads=2, k=8, v=8, mlp=32, seq=16, vocab=32)
+
+
+class TestModelConfig:
+    def test_validate_accepts_positive(self):
+        CFG.validate()
+
+    @pytest.mark.parametrize("field", ["layers", "hidden", "heads", "k", "v", "mlp", "seq", "vocab"])
+    def test_validate_rejects_nonpositive(self, field):
+        with pytest.raises(ValueError):
+            dataclasses.replace(CFG, **{field: 0}).validate()
+        with pytest.raises(ValueError):
+            dataclasses.replace(CFG, **{field: -3}).validate()
+
+    def test_dict_roundtrip(self):
+        assert ModelConfig.from_dict(CFG.to_dict()) == CFG
+
+    def test_from_dict_requires_all_fields(self):
+        d = CFG.to_dict()
+        del d["heads"]
+        with pytest.raises(KeyError):
+            ModelConfig.from_dict(d)
+
+    def test_num_params_matches_specs(self):
+        total = sum(
+            int.__mul__(*shape) if len(shape) == 2 else shape[0] for _, shape in param_specs(CFG)
+        )
+        assert CFG.num_params() == total
+
+    def test_num_params_grows_with_each_dim(self):
+        for field, delta in [
+            ("layers", 1),
+            ("hidden", 8),
+            ("heads", 1),
+            ("k", 8),
+            ("v", 8),
+            ("mlp", 8),
+        ]:
+            bigger = dataclasses.replace(CFG, **{field: getattr(CFG, field) + delta})
+            assert bigger.num_params() > CFG.num_params(), field
+
+
+class TestParamSpecs:
+    def test_canonical_order_prefix(self):
+        names = [n for n, _ in param_specs(CFG)]
+        assert names[0] == "embed"
+        assert names[1] == "pos"
+        assert names[2] == "layer_0.g_mha"
+        assert names[3] == "layer_0.head_0.wq"
+        assert names[-1] == "w_out"
+
+    def test_count_formula(self):
+        specs = param_specs(CFG)
+        # per layer: g_mha + 3 mats per head + wo + g_mlp + w1 + b1 + w2 + b2
+        assert len(specs) == 2 + CFG.layers * (3 * CFG.heads + 7) + 1
+
+    def test_shapes_follow_paper(self):
+        d = dict(param_specs(CFG))
+        assert d["embed"] == (CFG.vocab, CFG.hidden)
+        assert d["pos"] == (CFG.seq, CFG.hidden)
+        assert d["layer_0.head_1.wq"] == (CFG.hidden, CFG.k)
+        assert d["layer_0.head_1.wv"] == (CFG.hidden, CFG.v)
+        assert d["layer_1.wo"] == (CFG.heads * CFG.v, CFG.hidden)
+        assert d["layer_1.w1"] == (CFG.hidden, CFG.mlp)
+        assert d["layer_1.w2"] == (CFG.mlp, CFG.hidden)
+        assert d["w_out"] == (CFG.hidden, CFG.vocab)
+
+    def test_names_unique(self):
+        names = [n for n, _ in param_specs(CFG)]
+        assert len(names) == len(set(names))
+
+
+class TestOps:
+    def test_each_op_changes_only_its_dim(self):
+        cases = {
+            "mlp": ({"op": "mlp", "p": 64}, "mlp", 64),
+            "heads_add": ({"op": "heads_add", "count": 2}, "heads", 4),
+            "heads_expand": ({"op": "heads_expand", "v": 16}, "v", 16),
+            "attn_expand": ({"op": "attn_expand", "k": 16}, "k", 16),
+            "hidden": ({"op": "hidden", "h": 32}, "hidden", 32),
+            "layers_add": ({"op": "layers_add", "count": 1}, "layers", 3),
+        }
+        for name, (op, field, expect) in cases.items():
+            out = apply_op_to_config(CFG, op)
+            assert getattr(out, field) == expect, name
+            for f in dataclasses.fields(ModelConfig):
+                if f.name != field:
+                    assert getattr(out, f.name) == getattr(CFG, f.name), (name, f.name)
+
+    @pytest.mark.parametrize(
+        "op",
+        [
+            {"op": "mlp", "p": 32},  # not growing
+            {"op": "mlp", "p": 16},
+            {"op": "heads_add", "count": 0},
+            {"op": "heads_expand", "v": 8},
+            {"op": "attn_expand", "k": 4},
+            {"op": "hidden", "h": 16},
+            {"op": "layers_add", "count": 0},
+            {"op": "shrink", "h": 8},  # unknown kind
+        ],
+    )
+    def test_invalid_ops_rejected(self, op):
+        with pytest.raises(ValueError):
+            apply_op_to_config(CFG, op)
+
+
+class TestGrowthSchedule:
+    def _base(self):
+        return {
+            "name": "t",
+            "batch": 4,
+            "seq": 16,
+            "vocab": 32,
+            "base": {"layers": 1, "hidden": 16, "heads": 2, "k": 8, "v": 8, "mlp": 32},
+            "stages": [
+                {"steps": 10},
+                {"steps": 10, "apply": [{"op": "mlp", "p": 64}]},
+            ],
+        }
+
+    def test_stage_configs_accumulate(self):
+        sched = GrowthSchedule.from_dict(self._base())
+        assert sched.stages[0].config.mlp == 32
+        assert sched.stages[1].config.mlp == 64
+        assert sched.stages[0].name == "stage0"
+        assert sched.stages[1].apply == ({"op": "mlp", "p": 64},)
+
+    def test_stage0_cannot_apply(self):
+        d = self._base()
+        d["stages"][0]["apply"] = [{"op": "mlp", "p": 64}]
+        with pytest.raises(ValueError):
+            GrowthSchedule.from_dict(d)
+
+    def test_empty_stages_rejected(self):
+        d = self._base()
+        d["stages"] = []
+        with pytest.raises(ValueError):
+            GrowthSchedule.from_dict(d)
+
+    def test_non_monotone_dim_rejected(self):
+        d = self._base()
+        d["stages"].append({"steps": 5, "apply": [{"op": "mlp", "p": 48}]})  # 64 -> 48
+        with pytest.raises(ValueError):
+            GrowthSchedule.from_dict(d)
+
+    def test_default_schedule_file_loads(self):
+        from tests.conftest import GROWTH_DEFAULT
+        sched = GrowthSchedule.load(GROWTH_DEFAULT)
+        assert len(sched.stages) >= 2
+        # every stage strictly grows parameter count
+        counts = [st.config.num_params() for st in sched.stages]
+        assert counts == sorted(counts) and len(set(counts)) == len(counts)

@@ -1,0 +1,175 @@
+"""L2 model tests: shapes, causality, faithfulness to the paper's Eqs 1-5."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import ModelConfig, param_specs
+from compile.kernels import ref_attention, ref_mlp, ref_rmsnorm
+from compile.model import (
+    flatten_params,
+    forward,
+    init_params,
+    loss_fn,
+    make_fwd,
+    make_step,
+    unflatten_params,
+)
+
+CFG = ModelConfig(layers=2, hidden=16, heads=2, k=8, v=8, mlp=32, seq=16, vocab=32)
+
+
+def _tokens(key, cfg=CFG, batch=2):
+    return jax.random.randint(jax.random.PRNGKey(key), (batch, cfg.seq), 0, cfg.vocab)
+
+
+class TestForward:
+    def test_logits_shape(self):
+        p = init_params(CFG, 0)
+        out = forward(CFG, p, _tokens(1))
+        assert out.shape == (2, CFG.seq, CFG.vocab)
+        assert out.dtype == jnp.float32
+
+    def test_causality(self):
+        """Changing token t must not change logits at positions < t."""
+        p = init_params(CFG, 0)
+        tok = _tokens(1)
+        t = CFG.seq // 2
+        tok2 = tok.at[:, t].set((tok[:, t] + 1) % CFG.vocab)
+        a, b = forward(CFG, p, tok), forward(CFG, p, tok2)
+        np.testing.assert_allclose(a[:, :t], b[:, :t], atol=1e-6)
+        assert not np.allclose(a[:, t:], b[:, t:], atol=1e-4)
+
+    def test_batch_rows_independent(self):
+        p = init_params(CFG, 0)
+        tok = _tokens(1, batch=3)
+        full = forward(CFG, p, tok)
+        single = forward(CFG, p, tok[1:2])
+        np.testing.assert_allclose(full[1:2], single, atol=1e-5)
+
+    def test_positional_embedding_matters(self):
+        """Same token at two positions must produce different logits."""
+        p = init_params(CFG, 0)
+        tok = jnp.full((1, CFG.seq), 7, jnp.int32)
+        out = forward(CFG, p, tok)
+        assert not np.allclose(out[0, 0], out[0, 5], atol=1e-4)
+
+    def test_invalid_kernels_flag(self):
+        p = init_params(CFG, 0)
+        with pytest.raises(ValueError):
+            forward(CFG, p, _tokens(1), kernels="cuda")
+
+    def test_single_layer_manual_recomputation(self):
+        """Recompute a 1-layer forward from the raw equations (Eqs 1-5)."""
+        cfg = ModelConfig(layers=1, hidden=8, heads=2, k=4, v=4, mlp=16, seq=8, vocab=16)
+        p = init_params(cfg, 3)
+        tok = _tokens(2, cfg, batch=1)
+        x = p["embed"][tok] + p["pos"][None]
+        nrm = ref_rmsnorm(x, p["layer_0.g_mha"])
+        heads = []
+        for e in range(cfg.heads):
+            q = nrm @ p[f"layer_0.head_{e}.wq"]
+            k = nrm @ p[f"layer_0.head_{e}.wk"]
+            v = nrm @ p[f"layer_0.head_{e}.wv"]
+            heads.append(ref_attention(q, k, v))
+        x = x + jnp.concatenate(heads, axis=-1) @ p["layer_0.wo"]
+        nrm2 = ref_rmsnorm(x, p["layer_0.g_mlp"])
+        x = x + ref_mlp(nrm2, p["layer_0.w1"], p["layer_0.b1"], p["layer_0.w2"], p["layer_0.b2"])
+        want = x @ p["w_out"]
+        got = forward(cfg, p, tok)
+        np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+class TestFlatten:
+    def test_roundtrip(self):
+        p = init_params(CFG, 0)
+        flat = flatten_params(CFG, p)
+        back = unflatten_params(CFG, flat)
+        assert set(back) == set(p)
+        for k in p:
+            np.testing.assert_array_equal(p[k], back[k])
+
+    def test_flat_order_matches_specs(self):
+        p = init_params(CFG, 0)
+        flat = flatten_params(CFG, p)
+        for arr, (_, shape) in zip(flat, param_specs(CFG)):
+            assert tuple(arr.shape) == shape
+
+    def test_wrong_shape_rejected(self):
+        p = init_params(CFG, 0)
+        p["w_out"] = jnp.zeros((3, 3))
+        with pytest.raises(ValueError):
+            flatten_params(CFG, p)
+
+    def test_wrong_count_rejected(self):
+        p = init_params(CFG, 0)
+        with pytest.raises(ValueError):
+            unflatten_params(CFG, flatten_params(CFG, p)[:-1])
+
+
+class TestLossAndStep:
+    def test_loss_is_finite_scalar(self):
+        p = init_params(CFG, 0)
+        loss = loss_fn(CFG, p, _tokens(1), _tokens(2))
+        assert loss.shape == ()
+        assert np.isfinite(float(loss))
+
+    def test_loss_near_log_vocab_at_init(self):
+        """Random init => roughly uniform predictions => loss ~= ln(vocab)."""
+        p = init_params(CFG, 0, scale=0.005)
+        loss = float(loss_fn(CFG, p, _tokens(1, batch=4), _tokens(2, batch=4)))
+        assert abs(loss - np.log(CFG.vocab)) < 0.5
+
+    def test_perfect_prediction_low_loss(self):
+        """A model whose w_out strongly predicts the target must beat init."""
+        cfg = ModelConfig(layers=1, hidden=8, heads=1, k=4, v=4, mlp=8, seq=8, vocab=8)
+        p = init_params(cfg, 0)
+        tok = _tokens(1, cfg, batch=2)
+        base = float(loss_fn(cfg, p, tok, tok))
+        # teach the model the identity map: embed e_t -> logits peak at t
+        p2 = dict(p)
+        p2["embed"] = 5.0 * jnp.eye(cfg.vocab, cfg.hidden)
+        p2["w_out"] = 5.0 * jnp.eye(cfg.hidden, cfg.vocab)
+        taught = float(loss_fn(cfg, p2, tok, tok))
+        assert taught < base
+
+    def test_step_returns_loss_and_grads(self):
+        p = init_params(CFG, 0)
+        flat = flatten_params(CFG, p)
+        step = make_step(CFG)
+        out = step(*flat, _tokens(1), _tokens(2))
+        assert len(out) == 1 + len(flat)
+        for g, a in zip(out[1:], flat):
+            assert g.shape == a.shape
+        assert np.isfinite(float(out[0]))
+
+    def test_grads_nonzero_and_descend(self):
+        """One SGD step along the returned grads must reduce the loss."""
+        p = init_params(CFG, 0)
+        flat = flatten_params(CFG, p)
+        tok, tgt = _tokens(1), _tokens(2)
+        step = make_step(CFG)
+        out = step(*flat, tok, tgt)
+        loss0, grads = float(out[0]), out[1:]
+        assert any(float(jnp.max(jnp.abs(g))) > 0 for g in grads)
+        flat2 = [a - 0.5 * g for a, g in zip(flat, grads)]
+        loss1 = float(step(*flat2, tok, tgt)[0])
+        assert loss1 < loss0
+
+    def test_fwd_entrypoint_matches_forward(self):
+        p = init_params(CFG, 0)
+        flat = flatten_params(CFG, p)
+        tok = _tokens(1)
+        (logits,) = make_fwd(CFG)(*flat, tok)
+        np.testing.assert_allclose(logits, forward(CFG, p, tok), atol=1e-6)
+
+
+class TestPallasVariant:
+    def test_pallas_model_matches_jnp_model(self):
+        cfg = ModelConfig(layers=1, hidden=16, heads=2, k=8, v=8, mlp=32, seq=16, vocab=32)
+        p = init_params(cfg, 1)
+        tok = _tokens(5, cfg)
+        a = forward(cfg, p, tok, kernels="jnp")
+        b = forward(cfg, p, tok, kernels="pallas")
+        np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-5)

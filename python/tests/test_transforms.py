@@ -1,0 +1,335 @@
+"""Theorem-level verification of the six function-preserving expansions.
+
+For every transformation (Thms 3.1-3.6) we test:
+  * positive: zero-init constraints => logits preserved to float tolerance;
+  * freedom:  the matrices the theorems leave unconstrained can be randomized
+    aggressively and preservation still holds;
+  * negative: violating the constraint (zero_constrained=False) breaks
+    preservation — i.e. the constraint set is not vacuous;
+plus the two scaling factors (Eqs. 19, 24) the paper singles out, and
+composability over random op sequences (hypothesis).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import transforms as T
+from compile.configs import ModelConfig, param_specs
+from compile.model import forward, init_params
+
+CFG = ModelConfig(layers=2, hidden=16, heads=2, k=8, v=8, mlp=32, seq=16, vocab=32)
+PRESERVE_TOL = 1e-4  # DESIGN.md §8
+BREAK_TOL = 1e-2
+
+# scale-up initializer: exercises the full freedom the theorems claim
+def big_init(key, shape):
+    return 0.5 * jax.random.normal(key, shape, jnp.float32)
+
+
+def _setup(seed=0, cfg=CFG, batch=2, scale=0.02):
+    """scale=0.02 is a realistic init; the negative controls for the
+    *scaling factors* use a larger scale so attention scores are O(1) —
+    at tiny scale the softmax is near-uniform and insensitive to the
+    missing sqrt factor, which would make the negative test vacuous."""
+    params = init_params(cfg, seed, scale=scale)
+    tok = jax.random.randint(jax.random.PRNGKey(seed + 100), (batch, cfg.seq), 0, cfg.vocab)
+    return params, tok, forward(cfg, params, tok)
+
+
+def _delta(cfg2, params2, tok, base):
+    return float(jnp.max(jnp.abs(forward(cfg2, params2, tok) - base)))
+
+
+def _check_shapes(cfg2, params2):
+    for name, shape in param_specs(cfg2):
+        assert tuple(params2[name].shape) == shape, name
+    assert len(params2) == len(param_specs(cfg2))
+
+
+class TestTheorem31MlpExpansion:
+    def test_preserved(self):
+        params, tok, base = _setup()
+        cfg2, p2 = T.expand_mlp(CFG, params, 64, key=jax.random.PRNGKey(1))
+        _check_shapes(cfg2, p2)
+        assert _delta(cfg2, p2, tok, base) <= PRESERVE_TOL
+
+    def test_freedom_of_unconstrained(self):
+        params, tok, base = _setup()
+        cfg2, p2 = T.expand_mlp(CFG, params, 64, key=jax.random.PRNGKey(2), init_fn=big_init)
+        assert _delta(cfg2, p2, tok, base) <= PRESERVE_TOL
+
+    def test_violating_constraint_breaks(self):
+        params, tok, base = _setup()
+        cfg2, p2 = T.expand_mlp(CFG, params, 64, key=jax.random.PRNGKey(3), zero_constrained=False, init_fn=big_init)
+        assert _delta(cfg2, p2, tok, base) > BREAK_TOL
+
+    def test_old_slices_untouched(self):
+        params, _, _ = _setup()
+        cfg2, p2 = T.expand_mlp(CFG, params, 64)
+        for n in range(CFG.layers):
+            np.testing.assert_array_equal(p2[f"layer_{n}.w1"][:, : CFG.mlp], params[f"layer_{n}.w1"])
+            np.testing.assert_array_equal(p2[f"layer_{n}.w2"][: CFG.mlp, :], params[f"layer_{n}.w2"])
+            np.testing.assert_array_equal(p2[f"layer_{n}.b1"][: CFG.mlp], params[f"layer_{n}.b1"])
+
+    def test_non_growth_rejected(self):
+        params, _, _ = _setup()
+        with pytest.raises(ValueError):
+            T.expand_mlp(CFG, params, CFG.mlp)
+
+
+class TestTheorem32HeadAddition:
+    def test_preserved_one_head(self):
+        params, tok, base = _setup()
+        cfg2, p2 = T.add_heads(CFG, params, 1, key=jax.random.PRNGKey(1), init_fn=big_init)
+        _check_shapes(cfg2, p2)
+        assert cfg2.heads == CFG.heads + 1
+        assert _delta(cfg2, p2, tok, base) <= PRESERVE_TOL
+
+    def test_preserved_multiple_heads(self):
+        params, tok, base = _setup()
+        cfg2, p2 = T.add_heads(CFG, params, 3, key=jax.random.PRNGKey(2))
+        assert cfg2.heads == CFG.heads + 3
+        assert _delta(cfg2, p2, tok, base) <= PRESERVE_TOL
+
+    def test_violating_constraint_breaks(self):
+        params, tok, base = _setup()
+        cfg2, p2 = T.add_heads(CFG, params, 1, key=jax.random.PRNGKey(3), zero_constrained=False, init_fn=big_init)
+        assert _delta(cfg2, p2, tok, base) > BREAK_TOL
+
+    def test_wo_block_structure(self):
+        """New W^O rows sit *below* the old block (Eq. 11)."""
+        params, _, _ = _setup()
+        _, p2 = T.add_heads(CFG, params, 1)
+        old_rows = CFG.heads * CFG.v
+        np.testing.assert_array_equal(p2["layer_0.wo"][:old_rows], params["layer_0.wo"])
+        np.testing.assert_array_equal(p2["layer_0.wo"][old_rows:], 0.0)
+
+
+class TestTheorem33HeadsExpansion:
+    def test_preserved(self):
+        params, tok, base = _setup()
+        cfg2, p2 = T.expand_heads(CFG, params, 16, key=jax.random.PRNGKey(1), init_fn=big_init)
+        _check_shapes(cfg2, p2)
+        assert _delta(cfg2, p2, tok, base) <= PRESERVE_TOL
+
+    def test_violating_constraint_breaks(self):
+        params, tok, base = _setup()
+        cfg2, p2 = T.expand_heads(CFG, params, 16, key=jax.random.PRNGKey(2), zero_constrained=False, init_fn=big_init)
+        assert _delta(cfg2, p2, tok, base) > BREAK_TOL
+
+    def test_wo_interleaved_split_structure(self):
+        """W^O expansion is *per-split* row insertion (Eq. 14/15), not an
+        append at the bottom."""
+        params, _, _ = _setup()
+        new_v = 16
+        _, p2 = T.expand_heads(CFG, params, new_v)
+        wo, wo2 = params["layer_0.wo"], p2["layer_0.wo"]
+        for e in range(CFG.heads):
+            np.testing.assert_array_equal(wo2[e * new_v : e * new_v + CFG.v], wo[e * CFG.v : (e + 1) * CFG.v])
+            np.testing.assert_array_equal(wo2[e * new_v + CFG.v : (e + 1) * new_v], 0.0)
+
+
+class TestTheorem34AttentionExpansion:
+    def test_preserved(self):
+        params, tok, base = _setup()
+        cfg2, p2 = T.expand_attention(CFG, params, 16, key=jax.random.PRNGKey(1), init_fn=big_init)
+        _check_shapes(cfg2, p2)
+        assert _delta(cfg2, p2, tok, base) <= PRESERVE_TOL
+
+    def test_violating_zero_constraint_breaks(self):
+        params, tok, base = _setup(scale=0.3)
+        cfg2, p2 = T.expand_attention(CFG, params, 16, key=jax.random.PRNGKey(2), zero_constrained=False, init_fn=big_init)
+        assert _delta(cfg2, p2, tok, base) > BREAK_TOL
+
+    def test_key_scaling_factor_applied(self):
+        params, _, _ = _setup()
+        new_k = 32
+        _, p2 = T.expand_attention(CFG, params, new_k)
+        factor = np.sqrt(new_k / CFG.k)
+        np.testing.assert_allclose(
+            p2["layer_0.head_0.wk"][:, : CFG.k], factor * params["layer_0.head_0.wk"], rtol=1e-6
+        )
+        # queries are NOT scaled (only Eq. 19 touches W^K)
+        np.testing.assert_array_equal(p2["layer_0.head_0.wq"][:, : CFG.k], params["layer_0.head_0.wq"])
+
+
+class TestTheorem35HiddenExpansion:
+    def test_preserved(self):
+        params, tok, base = _setup()
+        cfg2, p2 = T.expand_hidden(CFG, params, 24, key=jax.random.PRNGKey(1), init_fn=big_init)
+        _check_shapes(cfg2, p2)
+        assert _delta(cfg2, p2, tok, base) <= PRESERVE_TOL
+
+    def test_violating_constraint_breaks(self):
+        params, tok, base = _setup()
+        cfg2, p2 = T.expand_hidden(CFG, params, 24, key=jax.random.PRNGKey(2), zero_constrained=False, init_fn=big_init)
+        assert _delta(cfg2, p2, tok, base) > BREAK_TOL
+
+    def test_norm_gain_scaling(self):
+        params, _, _ = _setup()
+        new_h = 32
+        _, p2 = T.expand_hidden(CFG, params, new_h)
+        factor = np.sqrt(CFG.hidden / new_h)
+        np.testing.assert_allclose(p2["layer_0.g_mha"][: CFG.hidden], factor * params["layer_0.g_mha"], rtol=1e-6)
+
+    def test_embed_extension_is_zero(self):
+        """Eq. 37: M^I := 0 — new embedding columns must be zero for
+        exactness (the paper's Eq. 32 'random columns' remark describes the
+        non-preserving general case)."""
+        params, _, _ = _setup()
+        _, p2 = T.expand_hidden(CFG, params, 24)
+        np.testing.assert_array_equal(p2["embed"][:, CFG.hidden :], 0.0)
+        np.testing.assert_array_equal(p2["pos"][:, CFG.hidden :], 0.0)
+
+
+class TestTheorem36LayerAddition:
+    @pytest.mark.parametrize("position", ["top", "bottom", 1])
+    def test_preserved_any_position(self, position):
+        params, tok, base = _setup()
+        cfg2, p2 = T.add_layers(CFG, params, 1, position, key=jax.random.PRNGKey(1), init_fn=big_init)
+        _check_shapes(cfg2, p2)
+        assert cfg2.layers == CFG.layers + 1
+        assert _delta(cfg2, p2, tok, base) <= PRESERVE_TOL
+
+    def test_preserved_multiple_layers(self):
+        params, tok, base = _setup()
+        cfg2, p2 = T.add_layers(CFG, params, 3, "bottom", key=jax.random.PRNGKey(2))
+        assert cfg2.layers == CFG.layers + 3
+        assert _delta(cfg2, p2, tok, base) <= PRESERVE_TOL
+
+    def test_violating_constraint_breaks(self):
+        params, tok, base = _setup()
+        cfg2, p2 = T.add_layers(CFG, params, 1, "top", key=jax.random.PRNGKey(3), zero_constrained=False, init_fn=big_init)
+        assert _delta(cfg2, p2, tok, base) > BREAK_TOL
+
+    def test_downstream_layers_shift(self):
+        params, _, _ = _setup()
+        _, p2 = T.add_layers(CFG, params, 1, "bottom")
+        np.testing.assert_array_equal(p2["layer_1.w1"], params["layer_0.w1"])
+        np.testing.assert_array_equal(p2["layer_2.w1"], params["layer_1.w1"])
+
+    def test_invalid_position_rejected(self):
+        params, _, _ = _setup()
+        with pytest.raises(ValueError):
+            T.add_layers(CFG, params, 1, CFG.layers + 1)
+
+
+class TestScalingFactors:
+    """E7: the two factors the paper claims as novel vs prior work."""
+
+    def test_attention_without_key_scaling_breaks(self):
+        params, tok, base = _setup(scale=0.3)
+        cfg2, p2 = T.expand_attention(CFG, params, 32, key=jax.random.PRNGKey(1), scale_keys=False)
+        assert _delta(cfg2, p2, tok, base) > BREAK_TOL
+
+    def test_attention_with_key_scaling_exact(self):
+        params, tok, base = _setup()
+        cfg2, p2 = T.expand_attention(CFG, params, 32, key=jax.random.PRNGKey(1), scale_keys=True)
+        assert _delta(cfg2, p2, tok, base) <= PRESERVE_TOL
+
+    def test_hidden_without_norm_scaling_breaks(self):
+        params, tok, base = _setup(scale=0.3)
+        cfg2, p2 = T.expand_hidden(CFG, params, 32, key=jax.random.PRNGKey(1), scale_norm=False)
+        assert _delta(cfg2, p2, tok, base) > BREAK_TOL
+
+    def test_hidden_with_norm_scaling_exact(self):
+        params, tok, base = _setup()
+        cfg2, p2 = T.expand_hidden(CFG, params, 32, key=jax.random.PRNGKey(1), scale_norm=True)
+        assert _delta(cfg2, p2, tok, base) <= PRESERVE_TOL
+
+    def test_scaling_magnitude_is_sqrt_ratio(self):
+        """The error without scaling grows with the expansion ratio — the
+        signature of the missing sqrt factor (not some other bug)."""
+        params, tok, base = _setup(scale=0.3)
+        errs = []
+        for new_k in (16, 64):
+            cfg2, p2 = T.expand_attention(CFG, params, new_k, key=jax.random.PRNGKey(1), scale_keys=False)
+            errs.append(_delta(cfg2, p2, tok, base))
+        assert errs[1] > errs[0]
+
+
+_OP_STRATEGY = st.lists(
+    st.sampled_from(
+        [
+            {"op": "mlp", "add": 16},
+            {"op": "heads_add", "count": 1},
+            {"op": "heads_expand", "add": 8},
+            {"op": "attn_expand", "add": 8},
+            {"op": "hidden", "add": 8},
+            {"op": "layers_add", "count": 1},
+        ]
+    ),
+    min_size=1,
+    max_size=4,
+)
+
+
+def _materialize(cfg, ops):
+    """Convert relative 'add' ops to the absolute schedule vocabulary."""
+    out = []
+    for op in ops:
+        if op["op"] == "mlp":
+            cfg = dataclasses.replace(cfg, mlp=cfg.mlp + op["add"])
+            out.append({"op": "mlp", "p": cfg.mlp})
+        elif op["op"] == "heads_add":
+            cfg = dataclasses.replace(cfg, heads=cfg.heads + 1)
+            out.append(op)
+        elif op["op"] == "heads_expand":
+            cfg = dataclasses.replace(cfg, v=cfg.v + op["add"])
+            out.append({"op": "heads_expand", "v": cfg.v})
+        elif op["op"] == "attn_expand":
+            cfg = dataclasses.replace(cfg, k=cfg.k + op["add"])
+            out.append({"op": "attn_expand", "k": cfg.k})
+        elif op["op"] == "hidden":
+            cfg = dataclasses.replace(cfg, hidden=cfg.hidden + op["add"])
+            out.append({"op": "hidden", "h": cfg.hidden})
+        else:
+            out.append(op)
+    return out
+
+
+class TestComposability:
+    @settings(max_examples=10, deadline=None)
+    @given(ops=_OP_STRATEGY, seed=st.integers(0, 1000))
+    def test_random_sequences_preserve(self, ops, seed):
+        cfg = ModelConfig(layers=1, hidden=8, heads=1, k=4, v=4, mlp=8, seq=8, vocab=16)
+        params = init_params(cfg, seed % 7)
+        tok = jax.random.randint(jax.random.PRNGKey(seed), (1, cfg.seq), 0, cfg.vocab)
+        base = forward(cfg, params, tok)
+        cfg2, p2 = T.apply_ops(cfg, params, _materialize(cfg, ops), key=jax.random.PRNGKey(seed + 1))
+        _check_shapes(cfg2, p2)
+        assert _delta(cfg2, p2, tok, base) <= PRESERVE_TOL
+
+    def test_all_six_composed(self):
+        params, tok, base = _setup()
+        ops = [
+            {"op": "mlp", "p": 64},
+            {"op": "heads_add", "count": 1},
+            {"op": "heads_expand", "v": 16},
+            {"op": "attn_expand", "k": 16},
+            {"op": "hidden", "h": 32},
+            {"op": "layers_add", "count": 2, "position": "top"},
+        ]
+        cfg2, p2 = T.apply_ops(CFG, params, ops, key=jax.random.PRNGKey(5))
+        _check_shapes(cfg2, p2)
+        assert _delta(cfg2, p2, tok, base) <= PRESERVE_TOL
+
+    def test_default_schedule_ops_preserve(self):
+        """The shipped growth schedule's boundary ops, end to end."""
+        import json
+
+        from tests.conftest import GROWTH_DEFAULT
+        with open(GROWTH_DEFAULT) as f:
+            sched = json.load(f)
+        cfg = ModelConfig.from_dict({**sched["base"], "seq": 16, "vocab": 64})
+        params = init_params(cfg, 11)
+        tok = jax.random.randint(jax.random.PRNGKey(0), (2, cfg.seq), 0, cfg.vocab)
+        base = forward(cfg, params, tok)
+        for stage in sched["stages"][1:]:
+            cfg, params = T.apply_ops(cfg, params, stage["apply"], key=jax.random.PRNGKey(1))
+            assert _delta(cfg, params, tok, base) <= PRESERVE_TOL

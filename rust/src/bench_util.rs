@@ -1,0 +1,191 @@
+//! Wall-clock benchmark harness (S14; no `criterion` offline).
+//!
+//! `cargo bench` targets in `benches/` are plain `harness = false` binaries
+//! built on this module: warmup, fixed-iteration or fixed-duration timing,
+//! and robust summary statistics (mean / p50 / p95 / min). Output is both
+//! human-readable rows and machine-readable JSONL (consumed by
+//! EXPERIMENTS.md tooling).
+
+use std::time::{Duration, Instant};
+
+use crate::json::Value;
+
+/// Summary statistics over per-iteration wall times.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = ns.iter().sum::<f64>() / ns.len() as f64;
+        let pct = |p: f64| ns[((ns.len() as f64 - 1.0) * p).round() as usize];
+        Stats {
+            iters: ns.len(),
+            mean_ns: mean,
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+            min_ns: ns[0],
+            max_ns: *ns.last().unwrap(),
+        }
+    }
+
+    /// Mean in milliseconds.
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// Throughput for `units` work items per iteration.
+    pub fn per_second(&self, units: f64) -> f64 {
+        units / (self.mean_ns / 1e9)
+    }
+}
+
+/// One benchmark run: `warmup` untimed iterations then `iters` timed ones.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    Stats::from_samples(samples)
+}
+
+/// Time-boxed benchmark: at least one iteration, stop after `budget`.
+pub fn bench_for<T>(warmup: usize, budget: Duration, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    loop {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if start.elapsed() >= budget {
+            break;
+        }
+    }
+    Stats::from_samples(samples)
+}
+
+/// Row reporter: aligned human output + JSONL side channel.
+pub struct Reporter {
+    bench_name: String,
+    jsonl: Vec<String>,
+}
+
+impl Reporter {
+    pub fn new(bench_name: impl Into<String>) -> Reporter {
+        let name = bench_name.into();
+        println!("\n=== bench: {name} ===");
+        println!("{:<44} {:>12} {:>12} {:>12} {:>10}", "case", "mean", "p50", "p95", "iters");
+        Reporter { bench_name: name, jsonl: Vec::new() }
+    }
+
+    /// Report a timed case; `extra` lands in the JSONL record.
+    pub fn row(&mut self, case: &str, stats: &Stats, extra: Vec<(&str, Value)>) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>10}",
+            case,
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p50_ns),
+            fmt_ns(stats.p95_ns),
+            stats.iters
+        );
+        let mut fields = vec![
+            ("bench", Value::str(self.bench_name.clone())),
+            ("case", Value::str(case)),
+            ("mean_ns", Value::num(stats.mean_ns)),
+            ("p50_ns", Value::num(stats.p50_ns)),
+            ("p95_ns", Value::num(stats.p95_ns)),
+            ("iters", Value::num(stats.iters as f64)),
+        ];
+        fields.extend(extra);
+        self.jsonl.push(Value::obj(fields).to_string());
+    }
+
+    /// Report a measurement that isn't a timing (e.g. a preservation error).
+    pub fn value_row(&mut self, case: &str, metric: &str, value: f64, extra: Vec<(&str, Value)>) {
+        println!("{:<44} {metric} = {value:.3e}", case);
+        let mut fields = vec![
+            ("bench", Value::str(self.bench_name.clone())),
+            ("case", Value::str(case)),
+            (metric, Value::num(value)),
+        ];
+        fields.extend(extra);
+        self.jsonl.push(Value::obj(fields).to_string());
+    }
+
+    /// Append the JSONL records to `runs/bench.jsonl` (best-effort).
+    pub fn flush(&self) {
+        if self.jsonl.is_empty() {
+            return;
+        }
+        let _ = std::fs::create_dir_all("runs");
+        let path = "runs/bench.jsonl";
+        let body = self.jsonl.join("\n") + "\n";
+        use std::io::Write as _;
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+            let _ = f.write_all(body.as_bytes());
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_iters_and_positive_times() {
+        let stats = bench(2, 10, || (0..1000).sum::<u64>());
+        assert_eq!(stats.iters, 10);
+        assert!(stats.mean_ns > 0.0);
+        assert!(stats.min_ns <= stats.p50_ns && stats.p50_ns <= stats.p95_ns && stats.p95_ns <= stats.max_ns);
+    }
+
+    #[test]
+    fn bench_for_respects_budget_loosely() {
+        let stats = bench_for(0, Duration::from_millis(20), || std::thread::sleep(Duration::from_millis(1)));
+        assert!(stats.iters >= 1);
+        assert!(stats.iters < 2000);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let stats = Stats { iters: 1, mean_ns: 1e9, p50_ns: 1e9, p95_ns: 1e9, min_ns: 1e9, max_ns: 1e9 };
+        assert!((stats.per_second(500.0) - 500.0).abs() < 1e-9);
+        assert!((stats.mean_ms() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

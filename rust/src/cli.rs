@@ -1,0 +1,196 @@
+//! Command-line argument parsing (S11; no `clap` offline).
+//!
+//! Syntax: `texpand <subcommand> [--flag value]... [--switch]...`.
+//! [`Args`] splits the raw argv into a subcommand, `--key value` flags and
+//! bare switches, with typed accessors and unknown-flag detection so typos
+//! fail instead of being silently ignored.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    switches: HashSet<String>,
+    consumed: std::cell::RefCell<HashSet<String>>,
+}
+
+impl Args {
+    /// Parse from raw argv (without the binary name). Flags take exactly
+    /// one value; a flag followed by another `--flag` or end of input is a
+    /// switch.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let subcommand = match it.peek() {
+            Some(first) if !first.starts_with("--") => Some(it.next().unwrap()),
+            _ => None,
+        };
+        let mut flags = HashMap::new();
+        let mut switches = HashSet::new();
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                return Err(Error::Cli(format!("unexpected positional argument '{arg}'")));
+            };
+            if name.is_empty() {
+                return Err(Error::Cli("empty flag '--'".into()));
+            }
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+                continue;
+            }
+            match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    flags.insert(name.to_string(), it.next().unwrap());
+                }
+                _ => {
+                    switches.insert(name.to_string());
+                }
+            }
+        }
+        Ok(Args { subcommand, flags, switches, consumed: Default::default() })
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String flag.
+    pub fn get(&self, name: &str) -> Option<String> {
+        self.consumed.borrow_mut().insert(name.to_string());
+        self.flags.get(name).cloned()
+    }
+
+    /// String flag with default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string flag.
+    pub fn require(&self, name: &str) -> Result<String> {
+        self.get(name).ok_or_else(|| Error::Cli(format!("missing required flag --{name}")))
+    }
+
+    /// Typed numeric flags.
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| v.parse::<usize>().map_err(|_| Error::Cli(format!("--{name} expects an integer, got '{v}'"))))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| v.parse::<f64>().map_err(|_| Error::Cli(format!("--{name} expects a number, got '{v}'"))))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
+        self.get(name)
+            .map(|v| v.parse::<u64>().map_err(|_| Error::Cli(format!("--{name} expects an integer, got '{v}'"))))
+            .transpose()
+    }
+
+    /// Boolean switch.
+    pub fn has(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().insert(name.to_string());
+        self.switches.contains(name)
+    }
+
+    /// After consuming all known flags, reject anything left over.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !consumed.contains(*k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            let mut names: Vec<String> = unknown.iter().map(|s| format!("--{s}")).collect();
+            names.sort();
+            Err(Error::Cli(format!("unknown flags: {}", names.join(", "))))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = args("train --schedule configs/g.json --steps-scale 0.5 --quiet");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("schedule").unwrap(), "configs/g.json");
+        assert_eq!(a.get_f64("steps-scale").unwrap(), Some(0.5));
+        assert!(a.has("quiet"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = args("train --lr=0.001 --name=run-1");
+        assert_eq!(a.get("lr").unwrap(), "0.001");
+        assert_eq!(a.get("name").unwrap(), "run-1");
+    }
+
+    #[test]
+    fn trailing_flag_is_switch() {
+        let a = args("verify --no-save");
+        assert!(a.has("no-save"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = args("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.has("help"));
+    }
+
+    #[test]
+    fn typed_accessors_validate() {
+        let a = args("x --n 5 --f 1.5 --bad abc");
+        assert_eq!(a.get_usize("n").unwrap(), Some(5));
+        assert_eq!(a.get_f64("f").unwrap(), Some(1.5));
+        assert!(a.get_usize("bad").is_err());
+        assert_eq!(a.get_u64("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn require_reports_flag_name() {
+        let a = args("x");
+        let err = a.require("schedule").unwrap_err().to_string();
+        assert!(err.contains("--schedule"), "{err}");
+    }
+
+    #[test]
+    fn rejects_positional_noise() {
+        assert!(Args::parse(vec!["train".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn reject_unknown_flags() {
+        let a = args("train --schedule s.json --typo-flag 3");
+        let _ = a.get("schedule");
+        let err = a.reject_unknown().unwrap_err().to_string();
+        assert!(err.contains("--typo-flag"), "{err}");
+        // consuming it clears the rejection
+        let _ = a.get("typo-flag");
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn get_or_default() {
+        let a = args("x");
+        assert_eq!(a.get_or("runs", "runs"), "runs");
+    }
+}

@@ -1,0 +1,359 @@
+//! Growth coordinator (S10b) — the framework's top-level orchestration.
+//!
+//! Walks a [`GrowthSchedule`] end to end:
+//!
+//! ```text
+//! init params (stage0 config)
+//!   └─ train stage0 ──▶ boundary: surgery(params, moments) + probes
+//!        └─ train stage1 ──▶ ... ──▶ train stageN, checkpoints per stage
+//! ```
+//!
+//! At every boundary the coordinator *proves* (empirically) the paper's
+//! claim before continuing:
+//! 1. **Rust-oracle probe** — pure-Rust forward before vs after surgery on
+//!    a held-out probe batch; `max|Δ logits|` must be ≤ `preserve_tol`.
+//! 2. **PJRT probe** — previous stage's compiled `fwd` on old params vs
+//!    next stage's `fwd` on expanded params; same tolerance. This is the
+//!    check that would catch AOT/manifest drift, not just surgery bugs.
+//!
+//! The coordinator is also the entry point for the §5 future-work use
+//! cases: [`Coordinator::branch`] (model families) reuses the boundary
+//! machinery without the schedule.
+
+use crate::config::{GrowthSchedule, TrainConfig};
+use crate::data::{Batch, Batcher, CorpusKind};
+use crate::error::{Error, Result};
+use crate::expand::ExpandOptions;
+use crate::json::Value;
+use crate::metrics::RunLogger;
+use crate::model as refmodel;
+use crate::optim::Optimizer;
+use crate::params::ParamStore;
+use crate::rng::Pcg32;
+use crate::runtime::{Manifest, Runtime, StageExec};
+use crate::train::{eval_loss, train_stage, StageReport, TrainState};
+
+/// Coordinator behaviour knobs (CLI-mapped).
+#[derive(Clone, Debug)]
+pub struct CoordinatorOptions {
+    /// Multiply every stage's scheduled step count (quick smoke runs).
+    pub steps_scale: f64,
+    /// Run the two preservation probes at each boundary (default on).
+    pub verify_boundaries: bool,
+    /// Save a checkpoint at the end of every stage.
+    pub save_checkpoints: bool,
+    /// Synthetic corpus selection.
+    pub corpus: CorpusKind,
+    pub corpus_len: usize,
+    /// Initializer std for unconstrained expansion parameters.
+    pub expand_init_std: f32,
+}
+
+impl Default for CoordinatorOptions {
+    fn default() -> Self {
+        CoordinatorOptions {
+            steps_scale: 1.0,
+            verify_boundaries: true,
+            save_checkpoints: true,
+            corpus: CorpusKind::MarkovText,
+            corpus_len: 200_000,
+            expand_init_std: 0.02,
+        }
+    }
+}
+
+/// Per-boundary preservation measurement.
+#[derive(Clone, Debug)]
+pub struct BoundaryReport {
+    pub into_stage: String,
+    pub ops: usize,
+    pub rust_delta: f32,
+    pub pjrt_delta: f32,
+    /// Eval loss immediately before/after surgery (PJRT path) — the loss
+    /// continuity evidence for E3.
+    pub loss_before: f32,
+    pub loss_after: f32,
+    pub surgery_ms: f64,
+}
+
+/// Full-run outcome.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub run_dir: String,
+    pub stages: Vec<StageReport>,
+    pub boundaries: Vec<BoundaryReport>,
+    pub final_eval_loss: f32,
+    pub total_steps: usize,
+}
+
+/// The growth coordinator (see module docs).
+pub struct Coordinator {
+    pub schedule: GrowthSchedule,
+    pub manifest: Manifest,
+    pub runtime: Runtime,
+    pub tcfg: TrainConfig,
+    pub opts: CoordinatorOptions,
+}
+
+impl Coordinator {
+    /// Build a coordinator, cross-validating the manifest against the
+    /// schedule (they are written by the two halves of the build).
+    pub fn new(
+        schedule: GrowthSchedule,
+        manifest: Manifest,
+        runtime: Runtime,
+        tcfg: TrainConfig,
+        opts: CoordinatorOptions,
+    ) -> Result<Coordinator> {
+        if manifest.stages.len() != schedule.stages.len() {
+            return Err(Error::Manifest(format!(
+                "manifest has {} stages, schedule '{}' has {} — rerun `make artifacts`",
+                manifest.stages.len(),
+                schedule.name,
+                schedule.stages.len()
+            )));
+        }
+        for (ms, ss) in manifest.stages.iter().zip(&schedule.stages) {
+            if ms.name != ss.name || ms.config != ss.config {
+                return Err(Error::Manifest(format!(
+                    "stage '{}' config mismatch between manifest ({:?}) and schedule ({:?})",
+                    ss.name, ms.config, ss.config
+                )));
+            }
+        }
+        if manifest.batch != schedule.batch {
+            return Err(Error::Manifest(format!(
+                "manifest batch {} != schedule batch {}",
+                manifest.batch, schedule.batch
+            )));
+        }
+        Ok(Coordinator { schedule, manifest, runtime, tcfg, opts })
+    }
+
+    fn scaled_steps(&self, steps: usize) -> usize {
+        ((steps as f64 * self.opts.steps_scale).round() as usize).max(1)
+    }
+
+    /// Execute the full growth schedule; returns the run summary.
+    pub fn run(&mut self, run_root: &str, run_name: &str) -> Result<RunSummary> {
+        let mut logger = RunLogger::create(run_root, run_name)?;
+        let first_cfg = self.schedule.stages[0].config;
+        let mut rng = Pcg32::seeded(self.tcfg.seed);
+        let mut params = ParamStore::init(&first_cfg, &mut rng, 0.02);
+        let mut opt = Optimizer::new(&self.tcfg, &params);
+        let mut batcher = Batcher::from_corpus(
+            self.opts.corpus,
+            self.opts.corpus_len,
+            first_cfg.vocab,
+            first_cfg.seq,
+            self.schedule.batch,
+            self.tcfg.seed ^ 0xC0DE,
+        )?;
+        logger.event(
+            "run_start",
+            vec![
+                ("schedule", Value::str(self.schedule.name.clone())),
+                ("corpus", Value::str(self.opts.corpus.name())),
+                ("optimizer", Value::str(opt.name())),
+                ("platform", Value::str(self.runtime.platform())),
+                ("stages", Value::num(self.schedule.stages.len() as f64)),
+            ],
+        );
+
+        let mut state = TrainState::new();
+        let mut stage_reports = Vec::new();
+        let mut boundary_reports = Vec::new();
+        let mut prev_exec: Option<StageExec> = None;
+
+        for (i, stage_spec) in self.schedule.stages.clone().iter().enumerate() {
+            if i > 0 && !stage_spec.apply.is_empty() {
+                let report = self.boundary(
+                    &mut params,
+                    &mut opt,
+                    &batcher,
+                    prev_exec.as_ref().expect("stage > 0 has prev"),
+                    stage_spec,
+                    &mut rng,
+                    &mut logger,
+                )?;
+                boundary_reports.push(report);
+            }
+            let exec = self.runtime.load_stage(&self.manifest, &stage_spec.name)?;
+            let steps = self.scaled_steps(stage_spec.steps);
+            let report = train_stage(
+                &self.runtime,
+                &exec,
+                &mut params,
+                &mut opt,
+                &mut batcher,
+                &self.tcfg,
+                &mut logger,
+                &mut state,
+                steps,
+            )?;
+            stage_reports.push(report);
+            if self.opts.save_checkpoints {
+                let path = format!("{}/{}.txpd", logger.dir(), stage_spec.name);
+                params.save(
+                    &path,
+                    &Value::obj(vec![
+                        ("stage", Value::str(stage_spec.name.clone())),
+                        ("global_step", Value::num(state.global_step as f64)),
+                        ("tokens_seen", Value::num(state.tokens_seen as f64)),
+                    ]),
+                )?;
+            }
+            prev_exec = Some(exec);
+        }
+
+        let final_exec = prev_exec.expect("at least one stage");
+        let probe = batcher.probe(self.tcfg.seed ^ 0xE7A1);
+        let final_eval_loss = eval_loss(&self.runtime, &final_exec, &params, &probe)?;
+        logger.event(
+            "run_done",
+            vec![
+                ("final_eval_loss", Value::num(f64::from(final_eval_loss))),
+                ("total_steps", Value::num(state.global_step as f64)),
+                ("tokens_seen", Value::num(state.tokens_seen as f64)),
+            ],
+        );
+        Ok(RunSummary {
+            run_dir: logger.dir().to_string(),
+            stages: stage_reports,
+            boundaries: boundary_reports,
+            final_eval_loss,
+            total_steps: state.global_step,
+        })
+    }
+
+    /// Apply one boundary's surgery with both preservation probes.
+    #[allow(clippy::too_many_arguments)]
+    fn boundary(
+        &mut self,
+        params: &mut ParamStore,
+        opt: &mut Optimizer,
+        batcher: &Batcher,
+        prev_exec: &StageExec,
+        stage_spec: &crate::config::Stage,
+        rng: &mut Pcg32,
+        logger: &mut RunLogger,
+    ) -> Result<BoundaryReport> {
+        let probe = batcher.probe(self.tcfg.seed ^ 0xE7A1);
+        let timer = crate::metrics::Timer::start();
+
+        // before-surgery references
+        let rust_before = refmodel::forward(params.config(), params, &probe.tokens)?;
+        let pjrt_before = self.runtime.forward(prev_exec, params, &probe.tokens)?;
+        let loss_before = eval_loss(&self.runtime, prev_exec, params, &probe)?;
+
+        // the surgery itself (owned path: the pre-surgery store is dead)
+        let expand_opts =
+            ExpandOptions { init: crate::expand::Init::Normal(self.opts.expand_init_std), ..Default::default() };
+        let dummy = crate::config::ModelConfig {
+            layers: 1, hidden: 1, heads: 1, k: 1, v: 1, mlp: 1, seq: 1, vocab: 1,
+        };
+        let old = std::mem::replace(params, ParamStore::zeros(&dummy));
+        *params = crate::expand::apply_ops_owned(old, &stage_spec.apply, rng, &expand_opts)?;
+        opt.expand(&stage_spec.apply)?;
+        opt.validate_against(params)?;
+        let surgery_ms = timer.ms();
+
+        // after-surgery probes
+        let next_exec = self.runtime.load_stage(&self.manifest, &stage_spec.name)?;
+        let rust_after = refmodel::forward(params.config(), params, &probe.tokens)?;
+        let pjrt_after = self.runtime.forward(&next_exec, params, &probe.tokens)?;
+        let loss_after = eval_loss(&self.runtime, &next_exec, params, &probe)?;
+
+        let rust_delta = refmodel::max_logit_delta(&rust_before, &rust_after)?;
+        let pjrt_delta = refmodel::max_logit_delta(&pjrt_before, &pjrt_after)?;
+        logger.event(
+            "boundary",
+            vec![
+                ("into_stage", Value::str(stage_spec.name.clone())),
+                ("ops", Value::num(stage_spec.apply.len() as f64)),
+                ("rust_delta", Value::num(f64::from(rust_delta))),
+                ("pjrt_delta", Value::num(f64::from(pjrt_delta))),
+                ("loss_before", Value::num(f64::from(loss_before))),
+                ("loss_after", Value::num(f64::from(loss_after))),
+                ("surgery_ms", Value::num(surgery_ms)),
+                ("params_after", Value::num(params.num_scalars() as f64)),
+            ],
+        );
+        if self.opts.verify_boundaries {
+            if rust_delta > self.tcfg.preserve_tol {
+                return Err(Error::Train(format!(
+                    "boundary into '{}' violated preservation (rust oracle): max|Δ| = {rust_delta}",
+                    stage_spec.name
+                )));
+            }
+            if pjrt_delta > self.tcfg.preserve_tol {
+                return Err(Error::Train(format!(
+                    "boundary into '{}' violated preservation (pjrt path): max|Δ| = {pjrt_delta}",
+                    stage_spec.name
+                )));
+            }
+        }
+        Ok(BoundaryReport {
+            into_stage: stage_spec.name.clone(),
+            ops: stage_spec.apply.len(),
+            rust_delta,
+            pjrt_delta,
+            loss_before,
+            loss_after,
+            surgery_ms,
+        })
+    }
+
+    /// §5 use case (b): branch a trained checkpoint into a larger family
+    /// member and finetune it. `stage_name` selects which manifest stage the
+    /// branch architecture corresponds to (its artifacts must exist).
+    #[allow(clippy::too_many_arguments)]
+    pub fn branch(
+        &mut self,
+        base: &ParamStore,
+        ops: &[crate::config::GrowthOp],
+        stage_name: &str,
+        finetune_steps: usize,
+        run_root: &str,
+        run_name: &str,
+        probe: &Batch,
+    ) -> Result<(ParamStore, StageReport, f32)> {
+        let mut logger = RunLogger::create(run_root, run_name)?;
+        let mut rng = Pcg32::seeded(self.tcfg.seed ^ 0xB4A2C4);
+        let expand_opts =
+            ExpandOptions { init: crate::expand::Init::Normal(self.opts.expand_init_std), ..Default::default() };
+        let mut params =
+            if ops.is_empty() { base.clone() } else { crate::expand::apply_ops(base, ops, &mut rng, &expand_opts)? };
+        let exec = self.runtime.load_stage(&self.manifest, stage_name)?;
+        if params.config() != &exec.meta.config {
+            return Err(Error::Config(format!(
+                "branch ops produce {:?} but stage '{stage_name}' expects {:?}",
+                params.config(),
+                exec.meta.config
+            )));
+        }
+        let mut opt = Optimizer::new(&self.tcfg, &params);
+        let mut batcher = Batcher::from_corpus(
+            self.opts.corpus,
+            self.opts.corpus_len,
+            params.config().vocab,
+            params.config().seq,
+            self.schedule.batch,
+            self.tcfg.seed ^ 0xC0DE, // same corpus as the main run
+        )?;
+        let mut state = TrainState::new();
+        let report = train_stage(
+            &self.runtime,
+            &exec,
+            &mut params,
+            &mut opt,
+            &mut batcher,
+            &self.tcfg,
+            &mut logger,
+            &mut state,
+            finetune_steps,
+        )?;
+        let eval = eval_loss(&self.runtime, &exec, &params, probe)?;
+        Ok((params, report, eval))
+    }
+}

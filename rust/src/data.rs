@@ -1,0 +1,363 @@
+//! Synthetic data pipeline (S9): corpora, byte tokenizer, batcher.
+//!
+//! The paper's motivating use case is LLM pretraining; we have no corpus
+//! on this image, so we synthesize deterministic corpora with enough
+//! structure to (a) be learnable, (b) separate model capacities — the E3
+//! progressive-vs-scratch experiment needs small models to plateau above
+//! large ones (DESIGN.md §6 substitution table):
+//!
+//! * [`CorpusKind::MarkovText`] — text from a random order-2 character
+//!   Markov chain over `a..z` + space. A 1-layer model can learn bigram
+//!   stats; trigram structure rewards more capacity.
+//! * [`CorpusKind::Copy`] — `<pattern>|<pattern>;` sequences; solvable
+//!   only through attention (position-shifted copying).
+//! * [`CorpusKind::Arithmetic`] — `a+b=c;` modular-sum strings; rewards
+//!   MLP capacity.
+//!
+//! Tokenization is byte-level (vocab 256) so any corpus string is valid.
+
+use crate::error::{Error, Result};
+use crate::rng::Pcg32;
+
+/// Which synthetic corpus to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorpusKind {
+    MarkovText,
+    Copy,
+    Arithmetic,
+}
+
+impl CorpusKind {
+    pub fn parse(name: &str) -> Result<CorpusKind> {
+        match name {
+            "markov" => Ok(CorpusKind::MarkovText),
+            "copy" => Ok(CorpusKind::Copy),
+            "arithmetic" => Ok(CorpusKind::Arithmetic),
+            other => Err(Error::Cli(format!("unknown corpus '{other}' (markov|copy|arithmetic)"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CorpusKind::MarkovText => "markov",
+            CorpusKind::Copy => "copy",
+            CorpusKind::Arithmetic => "arithmetic",
+        }
+    }
+}
+
+/// Generate `len` bytes of the chosen corpus, deterministically from `seed`.
+pub fn generate_corpus(kind: CorpusKind, len: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Pcg32::new(seed, 0xDA7A);
+    match kind {
+        CorpusKind::MarkovText => markov_text(len, &mut rng),
+        CorpusKind::Copy => copy_task(len, &mut rng),
+        CorpusKind::Arithmetic => arithmetic(len, &mut rng),
+    }
+}
+
+const ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz ";
+
+fn markov_text(len: usize, rng: &mut Pcg32) -> Vec<u8> {
+    let a = ALPHABET.len();
+    // random sparse order-2 transition table: each (c1, c2) context gets a
+    // handful of plausible successors with random weights.
+    let mut table = vec![Vec::new(); a * a];
+    for ctx in table.iter_mut() {
+        let succ = 2 + rng.below(3);
+        for _ in 0..succ {
+            ctx.push((rng.below(a), 1.0 + rng.uniform() * 4.0));
+        }
+    }
+    let mut out = Vec::with_capacity(len);
+    let (mut c1, mut c2) = (rng.below(a), rng.below(a));
+    for _ in 0..len {
+        let ctx = &table[c1 * a + c2];
+        let weights: Vec<f64> = ctx.iter().map(|&(_, w)| w).collect();
+        let next = ctx[rng.weighted(&weights)].0;
+        out.push(ALPHABET[next]);
+        c1 = c2;
+        c2 = next;
+    }
+    out
+}
+
+fn copy_task(len: usize, rng: &mut Pcg32) -> Vec<u8> {
+    // "<pattern>|<pattern>;" with pattern length 3..=8 over a..z
+    let mut out = Vec::with_capacity(len + 20);
+    while out.len() < len {
+        let plen = 3 + rng.below(6);
+        let pattern: Vec<u8> = (0..plen).map(|_| ALPHABET[rng.below(26)]).collect();
+        out.extend_from_slice(&pattern);
+        out.push(b'|');
+        out.extend_from_slice(&pattern);
+        out.push(b';');
+    }
+    out.truncate(len);
+    out
+}
+
+fn arithmetic(len: usize, rng: &mut Pcg32) -> Vec<u8> {
+    // "a+b=c;" with c = (a+b) mod 100, all two-digit zero-padded
+    let mut out = Vec::with_capacity(len + 10);
+    while out.len() < len {
+        let a = rng.below(100);
+        let b = rng.below(100);
+        let c = (a + b) % 100;
+        out.extend_from_slice(format!("{a:02}+{b:02}={c:02};").as_bytes());
+    }
+    out.truncate(len);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Tokenizer
+// ---------------------------------------------------------------------------
+
+/// Byte-level tokenizer: token id == byte value (vocab 256). Trivial but
+/// explicit, so vocab bounds are checked in one place.
+pub struct ByteTokenizer {
+    vocab: usize,
+}
+
+impl ByteTokenizer {
+    pub fn new(vocab: usize) -> Result<ByteTokenizer> {
+        if vocab == 0 || vocab > 256 {
+            return Err(Error::Config(format!("byte tokenizer vocab must be in [1,256], got {vocab}")));
+        }
+        Ok(ByteTokenizer { vocab })
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Encode bytes to token ids; bytes >= vocab are folded by modulo (our
+    /// corpora are ASCII so vocab >= 128 never folds).
+    pub fn encode(&self, bytes: &[u8]) -> Vec<u32> {
+        bytes.iter().map(|&b| (b as usize % self.vocab) as u32).collect()
+    }
+
+    /// Decode ids to bytes (inverse of encode for unfolded tokens).
+    pub fn decode(&self, tokens: &[u32]) -> Vec<u8> {
+        tokens.iter().map(|&t| (t % 256) as u8).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batcher
+// ---------------------------------------------------------------------------
+
+/// One training batch: `tokens[b][t]` predicts `targets[b][t]`.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<Vec<u32>>,
+    pub targets: Vec<Vec<u32>>,
+}
+
+/// Samples random `(seq+1)`-windows from a token stream; the window's first
+/// `seq` tokens are inputs and the 1-shifted window is the target.
+pub struct Batcher {
+    stream: Vec<u32>,
+    seq: usize,
+    batch: usize,
+    rng: Pcg32,
+}
+
+impl Batcher {
+    pub fn new(stream: Vec<u32>, seq: usize, batch: usize, seed: u64) -> Result<Batcher> {
+        if stream.len() < seq + 1 {
+            return Err(Error::Config(format!(
+                "stream of {} tokens too short for seq {}",
+                stream.len(),
+                seq
+            )));
+        }
+        if batch == 0 || seq == 0 {
+            return Err(Error::Config("batch and seq must be positive".into()));
+        }
+        Ok(Batcher { stream, seq, batch, rng: Pcg32::new(seed, 0xBA7C) })
+    }
+
+    /// Convenience: synthesize a corpus and wrap it.
+    pub fn from_corpus(
+        kind: CorpusKind,
+        corpus_len: usize,
+        vocab: usize,
+        seq: usize,
+        batch: usize,
+        seed: u64,
+    ) -> Result<Batcher> {
+        let tok = ByteTokenizer::new(vocab)?;
+        let stream = tok.encode(&generate_corpus(kind, corpus_len, seed));
+        Batcher::new(stream, seq, batch, seed ^ 0x5EED)
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Next random batch (deterministic from the construction seed).
+    pub fn next(&mut self) -> Batch {
+        let max_start = self.stream.len() - self.seq - 1;
+        let mut tokens = Vec::with_capacity(self.batch);
+        let mut targets = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let start = self.rng.below(max_start + 1);
+            tokens.push(self.stream[start..start + self.seq].to_vec());
+            targets.push(self.stream[start + 1..start + self.seq + 1].to_vec());
+        }
+        Batch { tokens, targets }
+    }
+
+    /// A held-out probe batch drawn from an independent stream position
+    /// generator (stable across calls — used for preservation checks and
+    /// eval loss so train/probe randomness never interleave).
+    pub fn probe(&self, seed: u64) -> Batch {
+        let mut rng = Pcg32::new(seed, 0x9B0E);
+        let max_start = self.stream.len() - self.seq - 1;
+        let mut tokens = Vec::with_capacity(self.batch);
+        let mut targets = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let start = rng.below(max_start + 1);
+            tokens.push(self.stream[start..start + self.seq].to_vec());
+            targets.push(self.stream[start + 1..start + self.seq + 1].to_vec());
+        }
+        Batch { tokens, targets }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpora_are_deterministic() {
+        for kind in [CorpusKind::MarkovText, CorpusKind::Copy, CorpusKind::Arithmetic] {
+            let a = generate_corpus(kind, 1000, 7);
+            let b = generate_corpus(kind, 1000, 7);
+            let c = generate_corpus(kind, 1000, 8);
+            assert_eq!(a, b, "{kind:?}");
+            assert_ne!(a, c, "{kind:?} must vary with seed");
+            assert_eq!(a.len(), 1000);
+        }
+    }
+
+    #[test]
+    fn markov_uses_alphabet_only() {
+        let text = generate_corpus(CorpusKind::MarkovText, 5000, 1);
+        assert!(text.iter().all(|b| ALPHABET.contains(b)));
+        // all three common letters should appear in 5k chars
+        let distinct: std::collections::HashSet<u8> = text.iter().copied().collect();
+        assert!(distinct.len() > 5, "degenerate chain: {} symbols", distinct.len());
+    }
+
+    #[test]
+    fn copy_task_repeats_patterns() {
+        let text = generate_corpus(CorpusKind::Copy, 2000, 2);
+        let s = String::from_utf8(text).unwrap();
+        // every complete record "<p>|<p>;" satisfies the copy invariant
+        let mut checked = 0;
+        for record in s.split(';') {
+            if let Some((a, b)) = record.split_once('|') {
+                if !a.is_empty() && a.len() == b.len() {
+                    assert_eq!(a, b, "copy violated in {record:?}");
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 10, "too few complete records: {checked}");
+    }
+
+    #[test]
+    fn arithmetic_sums_are_correct_mod_100() {
+        let text = generate_corpus(CorpusKind::Arithmetic, 2000, 3);
+        let s = String::from_utf8(text).unwrap();
+        let mut checked = 0;
+        for record in s.split(';') {
+            if record.len() == 8 {
+                // "aa+bb=cc"
+                let a: usize = record[0..2].parse().unwrap();
+                let b: usize = record[3..5].parse().unwrap();
+                let c: usize = record[6..8].parse().unwrap();
+                assert_eq!((a + b) % 100, c, "{record}");
+                checked += 1;
+            }
+        }
+        assert!(checked > 10);
+    }
+
+    #[test]
+    fn corpus_kind_parse_roundtrip() {
+        for kind in [CorpusKind::MarkovText, CorpusKind::Copy, CorpusKind::Arithmetic] {
+            assert_eq!(CorpusKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(CorpusKind::parse("wikipedia").is_err());
+    }
+
+    #[test]
+    fn tokenizer_bounds_and_roundtrip() {
+        assert!(ByteTokenizer::new(0).is_err());
+        assert!(ByteTokenizer::new(257).is_err());
+        let tok = ByteTokenizer::new(256).unwrap();
+        let bytes = b"hello world".to_vec();
+        let ids = tok.encode(&bytes);
+        assert!(ids.iter().all(|&t| t < 256));
+        assert_eq!(tok.decode(&ids), bytes);
+    }
+
+    #[test]
+    fn tokenizer_folds_to_vocab() {
+        let tok = ByteTokenizer::new(128).unwrap();
+        let ids = tok.encode(&[200u8, 127, 0]);
+        assert!(ids.iter().all(|&t| t < 128));
+    }
+
+    #[test]
+    fn batcher_shapes_and_shift() {
+        let stream: Vec<u32> = (0..100).collect();
+        let mut b = Batcher::new(stream, 8, 4, 1).unwrap();
+        let batch = b.next();
+        assert_eq!(batch.tokens.len(), 4);
+        assert_eq!(batch.tokens[0].len(), 8);
+        for (toks, tgts) in batch.tokens.iter().zip(&batch.targets) {
+            for i in 0..8 {
+                assert_eq!(tgts[i], toks[i] + 1, "targets must be the 1-shifted window");
+            }
+        }
+    }
+
+    #[test]
+    fn batcher_deterministic_and_probe_stable() {
+        let stream: Vec<u32> = (0..1000).map(|i| i % 50).collect();
+        let mut a = Batcher::new(stream.clone(), 16, 2, 9).unwrap();
+        let mut b = Batcher::new(stream.clone(), 16, 2, 9).unwrap();
+        assert_eq!(a.next().tokens, b.next().tokens);
+        // probe is stable no matter how much training data was consumed
+        let p1 = a.probe(5);
+        let _ = a.next();
+        let _ = a.next();
+        let p2 = a.probe(5);
+        assert_eq!(p1.tokens, p2.tokens);
+        // probe with a different seed differs
+        assert_ne!(p1.tokens, a.probe(6).tokens);
+    }
+
+    #[test]
+    fn batcher_rejects_short_streams() {
+        assert!(Batcher::new(vec![1, 2, 3], 8, 1, 0).is_err());
+        assert!(Batcher::new((0..100).collect(), 0, 1, 0).is_err());
+        assert!(Batcher::new((0..100).collect(), 8, 0, 0).is_err());
+    }
+
+    #[test]
+    fn from_corpus_respects_vocab() {
+        let mut b = Batcher::from_corpus(CorpusKind::MarkovText, 5000, 256, 32, 4, 11).unwrap();
+        let batch = b.next();
+        assert!(batch.tokens.iter().flatten().all(|&t| t < 256));
+    }
+}

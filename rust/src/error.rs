@@ -1,0 +1,94 @@
+//! Crate-wide error type.
+//!
+//! One enum covers every subsystem so that errors compose across the
+//! coordinator's phases (config parsing → artifact loading → PJRT execution
+//! → surgery → checkpointing) without boxing at each boundary.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error enum.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// JSON syntax or structural error (path-annotated where possible).
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// Config / growth-schedule validation failure.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Tensor shape mismatch or invalid operation.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Parameter-store inconsistency (missing param, spec mismatch...).
+    #[error("param store error: {0}")]
+    Params(String),
+
+    /// Checkpoint codec error.
+    #[error("checkpoint error: {0}")]
+    Checkpoint(String),
+
+    /// Artifact manifest problem (missing stage, spec drift vs config...).
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Training-loop failure (non-finite loss, schedule violation...).
+    #[error("train error: {0}")]
+    Train(String),
+
+    /// Expansion surgery failure (dimension not growing, bad position...).
+    #[error("expand error: {0}")]
+    Expand(String),
+
+    /// CLI usage error.
+    #[error("usage error: {0}")]
+    Cli(String),
+
+    /// I/O with path context.
+    #[error("io error on {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+}
+
+impl Error {
+    /// Attach a file path to an `std::io::Error`.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Config("bad heads".into());
+        assert_eq!(e.to_string(), "config error: bad heads");
+        let e = Error::io("/tmp/x", std::io::Error::new(std::io::ErrorKind::NotFound, "nope"));
+        assert!(e.to_string().contains("/tmp/x"));
+    }
+
+    #[test]
+    fn xla_error_converts() {
+        let e: Error = xla::Error::WrongElementCount { dims: vec![2], element_count: 3 }.into();
+        assert!(matches!(e, Error::Runtime(_)));
+    }
+}

@@ -1,0 +1,1014 @@
+//! The six function-preserving expansions (S6) — paper Section 3.
+//!
+//! Each function consumes a [`ParamStore`] for config `C` and produces the
+//! store for the expanded config, performing exactly the parameter surgery
+//! of Defs. 3.1–3.6 with the zero-init constraints of Thms. 3.1–3.6.
+//! This is the *runtime* implementation used at stage boundaries by the
+//! growth coordinator (Python's `transforms.py` is the build-time /
+//! cross-check twin; integration tests assert the two agree).
+//!
+//! ## Options
+//!
+//! [`ExpandOptions`] exposes the same three knobs as the Python side:
+//! * `init` — initializer for the matrices the theorems leave
+//!   *unconstrained* (`Zeros` for maximum caution, `Normal(std)` to give
+//!   new capacity gradient signal immediately);
+//! * `zero_constrained` — set `false` to deliberately violate the theorem
+//!   (E6 ablation: demonstrates the constraint set is not vacuous);
+//! * `scale_factors` — set `false` to drop the paper's two novel scaling
+//!   factors (Eq. 19 `sqrt(k_hat/k)` on W^K, Eq. 24 `sqrt(h/h_hat)` on the
+//!   RMSNorm gains; E6/E7 ablations).
+//!
+//! Optimizer-moment surgery lives in [`crate::optim`]: moments follow the
+//! *same* geometric surgery with all-zero new slices (a freshly added
+//! parameter has no gradient history).
+
+use std::collections::HashMap;
+
+use crate::config::{GrowthOp, LayerPosition, ModelConfig};
+use crate::error::{Error, Result};
+use crate::params::ParamStore;
+use crate::rng::Pcg32;
+use crate::tensor::Tensor;
+
+/// Initializer for unconstrained new parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Init {
+    /// Zero-fill (new capacity starts inert even where the theorem allows
+    /// arbitrary values).
+    Zeros,
+    /// `std * N(0,1)` — the default, matching `transforms.default_init`.
+    Normal(f32),
+}
+
+impl Init {
+    fn sample(&self, shape: &[usize], rng: &mut Pcg32) -> Tensor {
+        match *self {
+            Init::Zeros => Tensor::zeros(shape),
+            Init::Normal(std) => Tensor::randn(shape, rng, std),
+        }
+    }
+}
+
+/// Knobs shared by all six transformations (see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct ExpandOptions {
+    pub init: Init,
+    pub zero_constrained: bool,
+    pub scale_factors: bool,
+    /// Exponent applied to the Eq. 19 / Eq. 24 scaling factors. `1.0` for
+    /// parameters. Optimizer moments transform with the *inverse* of the
+    /// reparametrization: a param scaled by `c` has gradients scaled by
+    /// `1/c`, so Adam's first moment uses `-1.0` and the second (squared)
+    /// moment uses `-2.0` (see `optim::expand_moments`).
+    pub scale_power: f32,
+}
+
+impl Default for ExpandOptions {
+    fn default() -> Self {
+        ExpandOptions {
+            init: Init::Normal(0.02),
+            zero_constrained: true,
+            scale_factors: true,
+            scale_power: 1.0,
+        }
+    }
+}
+
+impl ExpandOptions {
+    /// Options for optimizer-moment surgery: all-new slices zero, kept
+    /// slices rescaled with `factor^power` (see `scale_power`).
+    pub fn for_moments(power: f32) -> ExpandOptions {
+        ExpandOptions { init: Init::Zeros, zero_constrained: true, scale_factors: true, scale_power: power }
+    }
+
+    /// Constrained-matrix initializer: zeros per the theorems, or the
+    /// violation initializer for ablations.
+    fn constrained(&self, shape: &[usize], rng: &mut Pcg32) -> Tensor {
+        if self.zero_constrained {
+            Tensor::zeros(shape)
+        } else {
+            self.init.sample(shape, rng)
+        }
+    }
+}
+
+fn to_map(store: &ParamStore) -> HashMap<String, Tensor> {
+    store.iter().map(|(s, t)| (s.name.clone(), t.clone())).collect()
+}
+
+/// Take a tensor out of the surgery map (it must exist — the map is always
+/// seeded from a validated ParamStore).
+fn take(map: &mut HashMap<String, Tensor>, name: &str) -> Result<Tensor> {
+    map.remove(name).ok_or_else(|| Error::Expand(format!("missing param '{name}' during surgery")))
+}
+
+// ---------------------------------------------------------------------------
+// Map-based surgery cores
+//
+// All six transformations operate on an owned name->Tensor map so that a
+// composed op sequence pays ONE full-store copy (to_map) and ONE canonical
+// rebuild (from_map) total, instead of one of each per op. Untouched
+// tensors flow through the whole chain without being copied — at ~11M
+// params this is the difference between ~800ms and ~100ms per boundary
+// (EXPERIMENTS.md §Perf).
+// ---------------------------------------------------------------------------
+
+fn mlp_map(
+    cfg: &ModelConfig,
+    map: &mut HashMap<String, Tensor>,
+    new_p: usize,
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ModelConfig> {
+    let new_cfg = GrowthOp::Mlp { p: new_p }.apply_to_config(cfg).map_err(wrap_expand)?;
+    let d = new_p - cfg.mlp;
+    for n in 0..cfg.layers {
+        let w1 = take(map, &format!("layer_{n}.w1"))?;
+        let b1 = take(map, &format!("layer_{n}.b1"))?;
+        let w2 = take(map, &format!("layer_{n}.w2"))?;
+        map.insert(format!("layer_{n}.w1"), w1.concat_cols(&opts.init.sample(&[cfg.hidden, d], rng))?);
+        map.insert(format!("layer_{n}.b1"), b1.concat_1d(&opts.init.sample(&[d], rng))?);
+        map.insert(format!("layer_{n}.w2"), w2.concat_rows(&opts.constrained(&[d, cfg.hidden], rng))?);
+    }
+    Ok(new_cfg)
+}
+
+fn heads_add_map(
+    cfg: &ModelConfig,
+    map: &mut HashMap<String, Tensor>,
+    count: usize,
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ModelConfig> {
+    let new_cfg = GrowthOp::HeadsAdd { count }.apply_to_config(cfg).map_err(wrap_expand)?;
+    for n in 0..cfg.layers {
+        let mut wo = take(map, &format!("layer_{n}.wo"))?;
+        for e in cfg.heads..new_cfg.heads {
+            map.insert(format!("layer_{n}.head_{e}.wq"), opts.init.sample(&[cfg.hidden, cfg.k], rng));
+            map.insert(format!("layer_{n}.head_{e}.wk"), opts.init.sample(&[cfg.hidden, cfg.k], rng));
+            map.insert(format!("layer_{n}.head_{e}.wv"), opts.init.sample(&[cfg.hidden, cfg.v], rng));
+            wo = wo.concat_rows(&opts.constrained(&[cfg.v, cfg.hidden], rng))?;
+        }
+        map.insert(format!("layer_{n}.wo"), wo);
+    }
+    Ok(new_cfg)
+}
+
+fn heads_expand_map(
+    cfg: &ModelConfig,
+    map: &mut HashMap<String, Tensor>,
+    new_v: usize,
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ModelConfig> {
+    let new_cfg = GrowthOp::HeadsExpand { v: new_v }.apply_to_config(cfg).map_err(wrap_expand)?;
+    let d = new_v - cfg.v;
+    for n in 0..cfg.layers {
+        let wo = take(map, &format!("layer_{n}.wo"))?;
+        let mut new_wo: Option<Tensor> = None;
+        for e in 0..cfg.heads {
+            let wv = take(map, &format!("layer_{n}.head_{e}.wv"))?;
+            map.insert(
+                format!("layer_{n}.head_{e}.wv"),
+                wv.concat_cols(&opts.init.sample(&[cfg.hidden, d], rng))?,
+            );
+            let split = wo.slice_rows(e * cfg.v, (e + 1) * cfg.v)?;
+            let grown = split.concat_rows(&opts.constrained(&[d, cfg.hidden], rng))?;
+            new_wo = Some(match new_wo {
+                None => grown,
+                Some(acc) => acc.concat_rows(&grown)?,
+            });
+        }
+        map.insert(format!("layer_{n}.wo"), new_wo.expect("heads >= 1"));
+    }
+    Ok(new_cfg)
+}
+
+fn attn_expand_map(
+    cfg: &ModelConfig,
+    map: &mut HashMap<String, Tensor>,
+    new_k: usize,
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ModelConfig> {
+    let new_cfg = GrowthOp::AttnExpand { k: new_k }.apply_to_config(cfg).map_err(wrap_expand)?;
+    let d = new_k - cfg.k;
+    let factor = if opts.scale_factors {
+        ((new_k as f32) / (cfg.k as f32)).sqrt().powf(opts.scale_power)
+    } else {
+        1.0
+    };
+    for n in 0..cfg.layers {
+        for e in 0..cfg.heads {
+            let wq = take(map, &format!("layer_{n}.head_{e}.wq"))?;
+            let mut wk = take(map, &format!("layer_{n}.head_{e}.wk"))?;
+            map.insert(
+                format!("layer_{n}.head_{e}.wq"),
+                wq.concat_cols(&opts.init.sample(&[cfg.hidden, d], rng))?,
+            );
+            wk.scale(factor);
+            map.insert(
+                format!("layer_{n}.head_{e}.wk"),
+                wk.concat_cols(&opts.constrained(&[cfg.hidden, d], rng))?,
+            );
+        }
+    }
+    Ok(new_cfg)
+}
+
+fn hidden_map(
+    cfg: &ModelConfig,
+    map: &mut HashMap<String, Tensor>,
+    new_h: usize,
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ModelConfig> {
+    let new_cfg = GrowthOp::Hidden { h: new_h }.apply_to_config(cfg).map_err(wrap_expand)?;
+    let d = new_h - cfg.hidden;
+    let g_factor = if opts.scale_factors {
+        ((cfg.hidden as f32) / (new_h as f32)).sqrt().powf(opts.scale_power)
+    } else {
+        1.0
+    };
+
+    // embed [vocab, h]: new cols zero (M^I, Eq. 37)
+    let embed = take(map, "embed")?;
+    map.insert("embed".into(), embed.concat_cols(&opts.constrained(&[cfg.vocab, d], rng))?);
+    // pos [s, h]: new cols zero (Eq. 33)
+    let pos = take(map, "pos")?;
+    map.insert("pos".into(), pos.concat_cols(&opts.constrained(&[cfg.seq, d], rng))?);
+    // w_out [h, o]: new rows unconstrained (Eq. 23)
+    let w_out = take(map, "w_out")?;
+    map.insert("w_out".into(), w_out.concat_rows(&opts.init.sample(&[d, cfg.vocab], rng))?);
+
+    for n in 0..cfg.layers {
+        for c in ["g_mha", "g_mlp"] {
+            let mut g = take(map, &format!("layer_{n}.{c}"))?;
+            g.scale(g_factor);
+            map.insert(
+                format!("layer_{n}.{c}"),
+                g.concat_1d(&if opts.zero_constrained {
+                    Tensor::zeros(&[d])
+                } else {
+                    opts.init.sample(&[d], rng)
+                })?,
+            );
+        }
+        for e in 0..cfg.heads {
+            for mat in ["wq", "wk", "wv"] {
+                let w = take(map, &format!("layer_{n}.head_{e}.{mat}"))?;
+                let cols = w.cols();
+                map.insert(
+                    format!("layer_{n}.head_{e}.{mat}"),
+                    w.concat_rows(&opts.init.sample(&[d, cols], rng))?,
+                );
+            }
+        }
+        // wo [E*v, h]: new cols zero (Eq. 36)
+        let wo = take(map, &format!("layer_{n}.wo"))?;
+        map.insert(format!("layer_{n}.wo"), wo.concat_cols(&opts.constrained(&[cfg.heads * cfg.v, d], rng))?);
+        // w1 [h, p]: new rows unconstrained (Eq. 25)
+        let w1 = take(map, &format!("layer_{n}.w1"))?;
+        map.insert(format!("layer_{n}.w1"), w1.concat_rows(&opts.init.sample(&[d, cfg.mlp], rng))?);
+        // w2 [p, h]: new cols zero (Eq. 34)
+        let w2 = take(map, &format!("layer_{n}.w2"))?;
+        map.insert(format!("layer_{n}.w2"), w2.concat_cols(&opts.constrained(&[cfg.mlp, d], rng))?);
+        // b2 [h]: new entries zero (Eq. 35)
+        let b2 = take(map, &format!("layer_{n}.b2"))?;
+        map.insert(
+            format!("layer_{n}.b2"),
+            b2.concat_1d(&if opts.zero_constrained {
+                Tensor::zeros(&[d])
+            } else {
+                opts.init.sample(&[d], rng)
+            })?,
+        );
+    }
+    Ok(new_cfg)
+}
+
+fn layers_add_map(
+    cfg: &ModelConfig,
+    map: &mut HashMap<String, Tensor>,
+    count: usize,
+    position: LayerPosition,
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ModelConfig> {
+    let new_cfg =
+        GrowthOp::LayersAdd { count, position }.apply_to_config(cfg).map_err(wrap_expand)?;
+    let pos = match position {
+        LayerPosition::Top => cfg.layers,
+        LayerPosition::Bottom => 0,
+        LayerPosition::At(p) => p,
+    };
+
+    // pull out per-layer groups (moves, no copies), insert fresh groups, renumber
+    let layer_keys: Vec<Vec<String>> = (0..cfg.layers)
+        .map(|n| {
+            let prefix = format!("layer_{n}.");
+            map.keys().filter(|k| k.starts_with(&prefix)).cloned().collect()
+        })
+        .collect();
+    let mut layers: Vec<HashMap<String, Tensor>> = Vec::with_capacity(cfg.layers + count);
+    for (n, keys) in layer_keys.iter().enumerate() {
+        let prefix_len = format!("layer_{n}.").len();
+        let mut group = HashMap::new();
+        for key in keys {
+            let t = take(map, key)?;
+            group.insert(key[prefix_len..].to_string(), t);
+        }
+        layers.push(group);
+    }
+
+    for _ in 0..count {
+        let mut lp: HashMap<String, Tensor> = HashMap::new();
+        lp.insert("g_mha".into(), Tensor::ones(&[cfg.hidden]));
+        lp.insert("g_mlp".into(), Tensor::ones(&[cfg.hidden]));
+        for e in 0..cfg.heads {
+            lp.insert(format!("head_{e}.wq"), opts.init.sample(&[cfg.hidden, cfg.k], rng));
+            lp.insert(format!("head_{e}.wk"), opts.init.sample(&[cfg.hidden, cfg.k], rng));
+            lp.insert(format!("head_{e}.wv"), opts.init.sample(&[cfg.hidden, cfg.v], rng));
+        }
+        lp.insert("wo".into(), opts.constrained(&[cfg.heads * cfg.v, cfg.hidden], rng));
+        lp.insert("w1".into(), opts.init.sample(&[cfg.hidden, cfg.mlp], rng));
+        lp.insert("b1".into(), opts.init.sample(&[cfg.mlp], rng));
+        lp.insert("w2".into(), opts.constrained(&[cfg.mlp, cfg.hidden], rng));
+        lp.insert(
+            "b2".into(),
+            if opts.zero_constrained { Tensor::zeros(&[cfg.hidden]) } else { opts.init.sample(&[cfg.hidden], rng) },
+        );
+        layers.insert(pos, lp);
+    }
+
+    for (n, lp) in layers.into_iter().enumerate() {
+        for (k, t) in lp {
+            map.insert(format!("layer_{n}.{k}"), t);
+        }
+    }
+    Ok(new_cfg)
+}
+
+fn apply_op_map(
+    cfg: &ModelConfig,
+    map: &mut HashMap<String, Tensor>,
+    op: &GrowthOp,
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ModelConfig> {
+    match *op {
+        GrowthOp::Mlp { p } => mlp_map(cfg, map, p, rng, opts),
+        GrowthOp::HeadsAdd { count } => heads_add_map(cfg, map, count, rng, opts),
+        GrowthOp::HeadsExpand { v } => heads_expand_map(cfg, map, v, rng, opts),
+        GrowthOp::AttnExpand { k } => attn_expand_map(cfg, map, k, rng, opts),
+        GrowthOp::Hidden { h } => hidden_map(cfg, map, h, rng, opts),
+        GrowthOp::LayersAdd { count, position } => layers_add_map(cfg, map, count, position, rng, opts),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public per-transformation API (paper Defs. 3.1-3.6)
+// ---------------------------------------------------------------------------
+
+macro_rules! single_op {
+    ($store:expr, $rng:expr, $opts:expr, $core:expr) => {{
+        let cfg = *$store.config();
+        let mut map = to_map($store);
+        let new_cfg = $core(&cfg, &mut map, $rng, $opts)?;
+        ParamStore::from_map(&new_cfg, map)
+    }};
+}
+
+/// Def. 3.1: grow the MLP internal width `p -> new_p` in every layer.
+///
+/// Surgery per layer: `W1 [h,p] -> [h,p̂]` (new columns unconstrained,
+/// Eq. 6), `b1 [p] -> [p̂]` (unconstrained, Eq. 7), `W2 [p,h] -> [p̂,h]`
+/// (new rows **zero**, Thm 3.1 / Eq. 9).
+pub fn expand_mlp(
+    store: &ParamStore,
+    new_p: usize,
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ParamStore> {
+    single_op!(store, rng, opts, |cfg: &ModelConfig, map: &mut HashMap<String, Tensor>, rng: &mut Pcg32, opts: &ExpandOptions| {
+        mlp_map(cfg, map, new_p, rng, opts)
+    })
+}
+
+/// Def. 3.2: add `count` attention heads to every layer.
+///
+/// Per new head: fresh `W^Q/W^K/W^V` (unconstrained) and `v` **zero** rows
+/// appended to `W^O` (Thm 3.2 / Eq. 12).
+pub fn add_heads(
+    store: &ParamStore,
+    count: usize,
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ParamStore> {
+    single_op!(store, rng, opts, |cfg: &ModelConfig, map: &mut HashMap<String, Tensor>, rng: &mut Pcg32, opts: &ExpandOptions| {
+        heads_add_map(cfg, map, count, rng, opts)
+    })
+}
+
+/// Def. 3.3: grow each head's value/output width `v -> new_v`.
+///
+/// `W^V` gains unconstrained columns (Eq. 13); `W^O`, viewed as `E` stacked
+/// `(v, h)` splits (Eq. 15), gains `(new_v - v)` **zero** rows inside each
+/// split (Thm 3.3 / Eq. 16) — an interleaved insertion, not an append.
+pub fn expand_heads(
+    store: &ParamStore,
+    new_v: usize,
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ParamStore> {
+    single_op!(store, rng, opts, |cfg: &ModelConfig, map: &mut HashMap<String, Tensor>, rng: &mut Pcg32, opts: &ExpandOptions| {
+        heads_expand_map(cfg, map, new_v, rng, opts)
+    })
+}
+
+/// Def. 3.4: grow the key/query width `k -> new_k`.
+///
+/// `W^Q` gains unconstrained columns (Eq. 18). `W^K`'s pre-existing columns
+/// are scaled by `sqrt(new_k)/sqrt(k)` (Eq. 19) — compensating attention's
+/// `1/sqrt(k)` — and its new columns are **zero** (Thm 3.4 / Eq. 20).
+pub fn expand_attention(
+    store: &ParamStore,
+    new_k: usize,
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ParamStore> {
+    single_op!(store, rng, opts, |cfg: &ModelConfig, map: &mut HashMap<String, Tensor>, rng: &mut Pcg32, opts: &ExpandOptions| {
+        attn_expand_map(cfg, map, new_k, rng, opts)
+    })
+}
+
+/// Def. 3.5: grow the transformer hidden width `h -> new_h` (all layers —
+/// the residual stream forces uniformity).
+///
+/// Zero-init set (Thm 3.5): new columns of the embedding table (`M^I`,
+/// Eq. 37), positional embedding (Eq. 33), `W2` (Eq. 34), `b2` (Eq. 35)
+/// and `W^O` (Eq. 36). RMSNorm gains are scaled by `sqrt(h)/sqrt(new_h)`
+/// (Eq. 24); new gain entries are zeroed (conservative — they multiply
+/// zero activations either way; must match `transforms.py`). Everything
+/// else (`W^out` rows, `W1` rows, `W^{Q,K,V}` rows) is unconstrained.
+pub fn expand_hidden(
+    store: &ParamStore,
+    new_h: usize,
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ParamStore> {
+    single_op!(store, rng, opts, |cfg: &ModelConfig, map: &mut HashMap<String, Tensor>, rng: &mut Pcg32, opts: &ExpandOptions| {
+        hidden_map(cfg, map, new_h, rng, opts)
+    })
+}
+
+/// Def. 3.6: insert `count` identity-initialized layers at `position`.
+///
+/// The new layers' `W^O`, `W2` and `b2` are **zero** (Thm 3.6), making each
+/// inserted block compute `I_n + 0`; norm gains start at 1 and `W^{Q,K,V}`,
+/// `W1`, `b1` are unconstrained. Downstream layer indices shift up.
+pub fn add_layers(
+    store: &ParamStore,
+    count: usize,
+    position: LayerPosition,
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ParamStore> {
+    single_op!(store, rng, opts, |cfg: &ModelConfig, map: &mut HashMap<String, Tensor>, rng: &mut Pcg32, opts: &ExpandOptions| {
+        layers_add_map(cfg, map, count, position, rng, opts)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Op dispatch / composition
+// ---------------------------------------------------------------------------
+
+/// Apply one schedule op to the store.
+pub fn apply_op(
+    store: &ParamStore,
+    op: &GrowthOp,
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ParamStore> {
+    apply_ops(store, std::slice::from_ref(op), rng, opts)
+}
+
+/// Apply a composed op sequence (Section 3: the transformations compose).
+///
+/// The whole sequence shares one owned tensor map: one full-store copy in,
+/// one canonical rebuild out, untouched tensors never copied in between.
+pub fn apply_ops(
+    store: &ParamStore,
+    ops: &[GrowthOp],
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ParamStore> {
+    let cfg = *store.config();
+    let map = to_map(store);
+    apply_ops_map(cfg, map, ops, rng, opts)
+}
+
+/// Owned variant of [`apply_ops`]: consumes the store, so even the initial
+/// full-store copy is avoided — the coordinator's boundary path uses this
+/// (the pre-surgery store is dead after the boundary anyway).
+pub fn apply_ops_owned(
+    store: ParamStore,
+    ops: &[GrowthOp],
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ParamStore> {
+    let cfg = *store.config();
+    let map = store.into_map();
+    apply_ops_map(cfg, map, ops, rng, opts)
+}
+
+fn apply_ops_map(
+    mut cfg: ModelConfig,
+    mut map: HashMap<String, Tensor>,
+    ops: &[GrowthOp],
+    rng: &mut Pcg32,
+    opts: &ExpandOptions,
+) -> Result<ParamStore> {
+    for op in ops {
+        cfg = apply_op_map(&cfg, &mut map, op, rng, opts)?;
+    }
+    ParamStore::from_map(&cfg, map)
+}
+
+// ---------------------------------------------------------------------------
+// Alternative function-preserving init (paper §5: "there exist alternative
+// definitions to such transformations that achieve function-preservation
+// without requiring zero initialization")
+// ---------------------------------------------------------------------------
+
+/// Net2Net-style (Chen et al. 2016, cited by the paper) MLP widening:
+/// instead of appending inert zero-W2 units (Def. 3.1), *duplicate*
+/// randomly chosen existing hidden units and halve the outgoing W2 rows of
+/// each {original, duplicate} pair. Also exactly function-preserving —
+/// `ReLU` is applied per unit, so `relu(u)·w + relu(u)·w == relu(u)·2w` —
+/// but the new capacity starts with *live* weights (nonzero gradients from
+/// step one), at the cost of pairwise-tied directions at birth. The
+/// `split_noise` jitter breaks the tie on W1 (which does NOT affect the
+/// forward output only when zero; nonzero noise trades exactness for
+/// symmetry breaking — pass 0.0 for exact preservation).
+pub fn split_mlp_neurons(
+    store: &ParamStore,
+    new_p: usize,
+    rng: &mut Pcg32,
+    split_noise: f32,
+) -> Result<ParamStore> {
+    let cfg = *store.config();
+    let new_cfg = GrowthOp::Mlp { p: new_p }.apply_to_config(&cfg).map_err(wrap_expand)?;
+    let d = new_p - cfg.mlp;
+    let mut map = to_map(store);
+    for n in 0..cfg.layers {
+        let w1 = take(&mut map, &format!("layer_{n}.w1"))?; // [h, p]
+        let b1 = take(&mut map, &format!("layer_{n}.b1"))?; // [p]
+        let mut w2 = take(&mut map, &format!("layer_{n}.w2"))?; // [p, h]
+        // choose d source units to split (with replacement is fine: a unit
+        // split twice is halved twice, each copy carrying 1/4 of the output)
+        let sources: Vec<usize> = (0..d).map(|_| rng.below(cfg.mlp)).collect();
+
+        // new W1 columns / b1 entries: copies of the source unit (+ jitter)
+        let mut w1_new = Tensor::zeros(&[cfg.hidden, d]);
+        for (j, &src) in sources.iter().enumerate() {
+            for i in 0..cfg.hidden {
+                w1_new.set(i, j, w1.at(i, src) + rng.normal_f32(split_noise));
+            }
+        }
+        let mut b1_new = Tensor::zeros(&[d]);
+        for (j, &src) in sources.iter().enumerate() {
+            b1_new.data_mut()[j] = b1.data()[src];
+        }
+        // outgoing rows: halve source row, duplicate gets the other half
+        let mut w2_new = Tensor::zeros(&[d, cfg.hidden]);
+        for (j, &src) in sources.iter().enumerate() {
+            for c in 0..cfg.hidden {
+                let half = w2.at(src, c) / 2.0;
+                w2.set(src, c, half);
+                w2_new.set(j, c, half);
+            }
+        }
+        map.insert(format!("layer_{n}.w1"), w1.concat_cols(&w1_new)?);
+        map.insert(format!("layer_{n}.b1"), b1.concat_1d(&b1_new)?);
+        map.insert(format!("layer_{n}.w2"), w2.concat_rows(&w2_new)?);
+    }
+    ParamStore::from_map(&new_cfg, map)
+}
+
+fn wrap_expand(e: Error) -> Error {
+    match e {
+        Error::Config(msg) => Error::Expand(msg),
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::model::{forward, max_logit_delta};
+    use crate::prop::Runner;
+
+    const PRESERVE_TOL: f32 = 1e-4; // DESIGN.md §8
+    const BREAK_TOL: f32 = 1e-2;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { layers: 2, hidden: 16, heads: 2, k: 8, v: 8, mlp: 32, seq: 16, vocab: 32 }
+    }
+
+    fn setup(seed: u64, scale: f32) -> (ModelConfig, ParamStore, Vec<Vec<u32>>, Vec<Tensor>) {
+        let c = cfg();
+        let mut rng = Pcg32::seeded(seed);
+        let params = ParamStore::init(&c, &mut rng, scale);
+        let toks: Vec<Vec<u32>> =
+            (0..2).map(|_| (0..c.seq).map(|_| rng.below(c.vocab) as u32).collect()).collect();
+        let base = forward(&c, &params, &toks).unwrap();
+        (c, params, toks, base)
+    }
+
+    fn delta(store: &ParamStore, toks: &[Vec<u32>], base: &[Tensor]) -> f32 {
+        let out = forward(store.config(), store, toks).unwrap();
+        max_logit_delta(&out, base).unwrap()
+    }
+
+    fn big() -> ExpandOptions {
+        // aggressive unconstrained init: exercises the theorems' freedom
+        ExpandOptions { init: Init::Normal(0.5), ..Default::default() }
+    }
+
+    fn violate() -> ExpandOptions {
+        ExpandOptions { init: Init::Normal(0.5), zero_constrained: false, ..Default::default() }
+    }
+
+    // ---- Thm 3.1 ----------------------------------------------------------
+
+    #[test]
+    fn thm31_mlp_preserves() {
+        let (_, params, toks, base) = setup(1, 0.02);
+        let out = expand_mlp(&params, 64, &mut Pcg32::seeded(9), &big()).unwrap();
+        assert_eq!(out.config().mlp, 64);
+        assert!(delta(&out, &toks, &base) <= PRESERVE_TOL);
+    }
+
+    #[test]
+    fn thm31_violation_breaks() {
+        let (_, params, toks, base) = setup(1, 0.02);
+        let out = expand_mlp(&params, 64, &mut Pcg32::seeded(9), &violate()).unwrap();
+        assert!(delta(&out, &toks, &base) > BREAK_TOL);
+    }
+
+    #[test]
+    fn thm31_old_slices_untouched() {
+        let (c, params, _, _) = setup(1, 0.02);
+        let out = expand_mlp(&params, 64, &mut Pcg32::seeded(9), &big()).unwrap();
+        let old = params.get("layer_0.w1").unwrap();
+        let new = out.get("layer_0.w1").unwrap();
+        assert_eq!(&new.slice_cols(0, c.mlp).unwrap(), old);
+        let old2 = params.get("layer_0.w2").unwrap();
+        let new2 = out.get("layer_0.w2").unwrap();
+        assert_eq!(&new2.slice_rows(0, c.mlp).unwrap(), old2);
+        assert_eq!(new2.slice_rows(c.mlp, 64).unwrap().max_abs(), 0.0);
+    }
+
+    #[test]
+    fn thm31_rejects_shrink() {
+        let (_, params, _, _) = setup(1, 0.02);
+        assert!(expand_mlp(&params, 32, &mut Pcg32::seeded(0), &big()).is_err());
+    }
+
+    // ---- Thm 3.2 ----------------------------------------------------------
+
+    #[test]
+    fn thm32_head_addition_preserves() {
+        let (_, params, toks, base) = setup(2, 0.02);
+        let out = add_heads(&params, 2, &mut Pcg32::seeded(9), &big()).unwrap();
+        assert_eq!(out.config().heads, 4);
+        assert!(delta(&out, &toks, &base) <= PRESERVE_TOL);
+    }
+
+    #[test]
+    fn thm32_violation_breaks() {
+        let (_, params, toks, base) = setup(2, 0.02);
+        let out = add_heads(&params, 1, &mut Pcg32::seeded(9), &violate()).unwrap();
+        assert!(delta(&out, &toks, &base) > BREAK_TOL);
+    }
+
+    #[test]
+    fn thm32_wo_gains_zero_rows_below() {
+        let (c, params, _, _) = setup(2, 0.02);
+        let out = add_heads(&params, 1, &mut Pcg32::seeded(9), &big()).unwrap();
+        let wo = out.get("layer_0.wo").unwrap();
+        assert_eq!(wo.shape(), &[(c.heads + 1) * c.v, c.hidden]);
+        assert_eq!(&wo.slice_rows(0, c.heads * c.v).unwrap(), params.get("layer_0.wo").unwrap());
+        assert_eq!(wo.slice_rows(c.heads * c.v, (c.heads + 1) * c.v).unwrap().max_abs(), 0.0);
+    }
+
+    // ---- Thm 3.3 ----------------------------------------------------------
+
+    #[test]
+    fn thm33_heads_expansion_preserves() {
+        let (_, params, toks, base) = setup(3, 0.02);
+        let out = expand_heads(&params, 16, &mut Pcg32::seeded(9), &big()).unwrap();
+        assert_eq!(out.config().v, 16);
+        assert!(delta(&out, &toks, &base) <= PRESERVE_TOL);
+    }
+
+    #[test]
+    fn thm33_violation_breaks() {
+        let (_, params, toks, base) = setup(3, 0.02);
+        let out = expand_heads(&params, 16, &mut Pcg32::seeded(9), &violate()).unwrap();
+        assert!(delta(&out, &toks, &base) > BREAK_TOL);
+    }
+
+    #[test]
+    fn thm33_wo_interleaved_structure() {
+        let (c, params, _, _) = setup(3, 0.02);
+        let new_v = 16;
+        let out = expand_heads(&params, new_v, &mut Pcg32::seeded(9), &big()).unwrap();
+        let wo_old = params.get("layer_1.wo").unwrap();
+        let wo_new = out.get("layer_1.wo").unwrap();
+        for e in 0..c.heads {
+            let kept = wo_new.slice_rows(e * new_v, e * new_v + c.v).unwrap();
+            assert_eq!(&kept, &wo_old.slice_rows(e * c.v, (e + 1) * c.v).unwrap(), "split {e}");
+            let inserted = wo_new.slice_rows(e * new_v + c.v, (e + 1) * new_v).unwrap();
+            assert_eq!(inserted.max_abs(), 0.0, "split {e} zeros");
+        }
+    }
+
+    // ---- Thm 3.4 ----------------------------------------------------------
+
+    #[test]
+    fn thm34_attention_expansion_preserves() {
+        let (_, params, toks, base) = setup(4, 0.02);
+        let out = expand_attention(&params, 16, &mut Pcg32::seeded(9), &big()).unwrap();
+        assert_eq!(out.config().k, 16);
+        assert!(delta(&out, &toks, &base) <= PRESERVE_TOL);
+    }
+
+    #[test]
+    fn thm34_violation_breaks() {
+        let (_, params, toks, base) = setup(4, 0.3);
+        let out = expand_attention(&params, 16, &mut Pcg32::seeded(9), &violate()).unwrap();
+        assert!(delta(&out, &toks, &base) > BREAK_TOL);
+    }
+
+    #[test]
+    fn thm34_key_scaling_applied_query_untouched() {
+        let (c, params, _, _) = setup(4, 0.02);
+        let new_k = 32;
+        let out = expand_attention(&params, new_k, &mut Pcg32::seeded(9), &big()).unwrap();
+        let factor = ((new_k as f32) / (c.k as f32)).sqrt();
+        let wk_old = params.get("layer_0.head_0.wk").unwrap();
+        let wk_new = out.get("layer_0.head_0.wk").unwrap();
+        let mut expected = wk_old.clone();
+        expected.scale(factor);
+        assert!(wk_new.slice_cols(0, c.k).unwrap().max_abs_diff(&expected).unwrap() < 1e-6);
+        let wq_old = params.get("layer_0.head_0.wq").unwrap();
+        assert_eq!(&out.get("layer_0.head_0.wq").unwrap().slice_cols(0, c.k).unwrap(), wq_old);
+    }
+
+    #[test]
+    fn thm34_missing_scale_factor_breaks() {
+        // E7: the paper's novel sqrt(k_hat/k) factor is load-bearing
+        let (_, params, toks, base) = setup(4, 0.3);
+        let opts = ExpandOptions { scale_factors: false, ..big() };
+        let out = expand_attention(&params, 32, &mut Pcg32::seeded(9), &opts).unwrap();
+        assert!(delta(&out, &toks, &base) > BREAK_TOL);
+    }
+
+    // ---- Thm 3.5 ----------------------------------------------------------
+
+    #[test]
+    fn thm35_hidden_expansion_preserves() {
+        let (_, params, toks, base) = setup(5, 0.02);
+        let out = expand_hidden(&params, 24, &mut Pcg32::seeded(9), &big()).unwrap();
+        assert_eq!(out.config().hidden, 24);
+        assert!(delta(&out, &toks, &base) <= PRESERVE_TOL);
+    }
+
+    #[test]
+    fn thm35_violation_breaks() {
+        let (_, params, toks, base) = setup(5, 0.02);
+        let out = expand_hidden(&params, 24, &mut Pcg32::seeded(9), &violate()).unwrap();
+        assert!(delta(&out, &toks, &base) > BREAK_TOL);
+    }
+
+    #[test]
+    fn thm35_norm_scaling_and_zero_sets() {
+        let (c, params, _, _) = setup(5, 0.02);
+        let new_h = 32;
+        let out = expand_hidden(&params, new_h, &mut Pcg32::seeded(9), &big()).unwrap();
+        let factor = ((c.hidden as f32) / (new_h as f32)).sqrt();
+        let g_old = params.get("layer_0.g_mha").unwrap();
+        let g_new = out.get("layer_0.g_mha").unwrap();
+        for j in 0..c.hidden {
+            assert!((g_new.data()[j] - factor * g_old.data()[j]).abs() < 1e-6);
+        }
+        // zero sets: embed/pos/wo/w2/b2 extensions
+        assert_eq!(out.get("embed").unwrap().slice_cols(c.hidden, new_h).unwrap().max_abs(), 0.0);
+        assert_eq!(out.get("pos").unwrap().slice_cols(c.hidden, new_h).unwrap().max_abs(), 0.0);
+        assert_eq!(out.get("layer_0.wo").unwrap().slice_cols(c.hidden, new_h).unwrap().max_abs(), 0.0);
+        assert_eq!(out.get("layer_0.w2").unwrap().slice_cols(c.hidden, new_h).unwrap().max_abs(), 0.0);
+        assert_eq!(out.get("layer_0.b2").unwrap().data()[c.hidden..].iter().map(|x| x.abs()).fold(0.0f32, f32::max), 0.0);
+        // unconstrained sets actually randomized (big init, so nonzero)
+        assert!(out.get("w_out").unwrap().slice_rows(c.hidden, new_h).unwrap().max_abs() > 0.0);
+        assert!(out.get("layer_0.w1").unwrap().slice_rows(c.hidden, new_h).unwrap().max_abs() > 0.0);
+    }
+
+    #[test]
+    fn thm35_missing_norm_scale_breaks() {
+        // E7: the sqrt(h/h_hat) RMSNorm factor is load-bearing
+        let (_, params, toks, base) = setup(5, 0.3);
+        let opts = ExpandOptions { scale_factors: false, ..big() };
+        let out = expand_hidden(&params, 32, &mut Pcg32::seeded(9), &opts).unwrap();
+        assert!(delta(&out, &toks, &base) > BREAK_TOL);
+    }
+
+    // ---- Thm 3.6 ----------------------------------------------------------
+
+    #[test]
+    fn thm36_layer_addition_preserves_all_positions() {
+        let (c, params, toks, base) = setup(6, 0.02);
+        for position in [LayerPosition::Top, LayerPosition::Bottom, LayerPosition::At(1)] {
+            let out = add_layers(&params, 1, position, &mut Pcg32::seeded(9), &big()).unwrap();
+            assert_eq!(out.config().layers, c.layers + 1);
+            assert!(delta(&out, &toks, &base) <= PRESERVE_TOL, "{position:?}");
+        }
+    }
+
+    #[test]
+    fn thm36_multi_layer_preserves() {
+        let (_, params, toks, base) = setup(6, 0.02);
+        let out = add_layers(&params, 3, LayerPosition::Bottom, &mut Pcg32::seeded(9), &big()).unwrap();
+        assert_eq!(out.config().layers, 5);
+        assert!(delta(&out, &toks, &base) <= PRESERVE_TOL);
+    }
+
+    #[test]
+    fn thm36_violation_breaks() {
+        let (_, params, toks, base) = setup(6, 0.02);
+        let out = add_layers(&params, 1, LayerPosition::Top, &mut Pcg32::seeded(9), &violate()).unwrap();
+        assert!(delta(&out, &toks, &base) > BREAK_TOL);
+    }
+
+    #[test]
+    fn thm36_downstream_layers_shift() {
+        let (_, params, _, _) = setup(6, 0.02);
+        let out = add_layers(&params, 1, LayerPosition::Bottom, &mut Pcg32::seeded(9), &big()).unwrap();
+        assert_eq!(out.get("layer_1.w1").unwrap(), params.get("layer_0.w1").unwrap());
+        assert_eq!(out.get("layer_2.w1").unwrap(), params.get("layer_1.w1").unwrap());
+        assert_eq!(out.get("layer_0.wo").unwrap().max_abs(), 0.0);
+    }
+
+    #[test]
+    fn thm36_rejects_bad_position() {
+        let (c, params, _, _) = setup(6, 0.02);
+        assert!(add_layers(&params, 1, LayerPosition::At(c.layers + 1), &mut Pcg32::seeded(0), &big()).is_err());
+    }
+
+    // ---- composition -------------------------------------------------------
+
+    #[test]
+    fn all_six_composed_preserve() {
+        let (_, params, toks, base) = setup(7, 0.02);
+        let ops = vec![
+            GrowthOp::Mlp { p: 64 },
+            GrowthOp::HeadsAdd { count: 1 },
+            GrowthOp::HeadsExpand { v: 16 },
+            GrowthOp::AttnExpand { k: 16 },
+            GrowthOp::Hidden { h: 32 },
+            GrowthOp::LayersAdd { count: 2, position: LayerPosition::Top },
+        ];
+        let out = apply_ops(&params, &ops, &mut Pcg32::seeded(9), &big()).unwrap();
+        assert_eq!(
+            (out.config().mlp, out.config().heads, out.config().v, out.config().k, out.config().hidden, out.config().layers),
+            (64, 3, 16, 16, 32, 4)
+        );
+        assert!(delta(&out, &toks, &base) <= PRESERVE_TOL);
+    }
+
+    #[test]
+    fn prop_random_sequences_preserve() {
+        // E2 property test: any random op sequence preserves the function.
+        let base_cfg = ModelConfig { layers: 1, hidden: 8, heads: 1, k: 4, v: 4, mlp: 8, seq: 8, vocab: 16 };
+        Runner::new("expansion-composability", 15).run(
+            |rng| {
+                let n_ops = 1 + rng.below(3);
+                let mut cfg = base_cfg;
+                let mut ops = Vec::new();
+                for _ in 0..n_ops {
+                    let op = match rng.below(6) {
+                        0 => GrowthOp::Mlp { p: cfg.mlp + 4 + rng.below(8) },
+                        1 => GrowthOp::HeadsAdd { count: 1 },
+                        2 => GrowthOp::HeadsExpand { v: cfg.v + 2 + rng.below(4) },
+                        3 => GrowthOp::AttnExpand { k: cfg.k + 2 + rng.below(4) },
+                        4 => GrowthOp::Hidden { h: cfg.hidden + 4 + rng.below(8) },
+                        _ => GrowthOp::LayersAdd { count: 1, position: LayerPosition::At(rng.below(cfg.layers + 1)) },
+                    };
+                    cfg = op.apply_to_config(&cfg).unwrap();
+                    ops.push(op);
+                }
+                let seed = rng.next_u64();
+                (ops, seed)
+            },
+            |(ops, seed)| {
+                let mut rng = Pcg32::seeded(*seed);
+                let params = ParamStore::init(&base_cfg, &mut rng, 0.05);
+                let toks: Vec<Vec<u32>> =
+                    vec![(0..base_cfg.seq).map(|_| rng.below(base_cfg.vocab) as u32).collect()];
+                let base = forward(&base_cfg, &params, &toks).map_err(|e| e.to_string())?;
+                let out = apply_ops(&params, ops, &mut rng, &big()).map_err(|e| e.to_string())?;
+                let d = delta(&out, &toks, &base);
+                if d <= PRESERVE_TOL {
+                    Ok(())
+                } else {
+                    Err(format!("max|Δ| = {d}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn zeros_init_option_gives_inert_new_capacity() {
+        let (c, params, toks, base) = setup(8, 0.02);
+        let opts = ExpandOptions { init: Init::Zeros, ..Default::default() };
+        let out = expand_mlp(&params, 64, &mut Pcg32::seeded(9), &opts).unwrap();
+        assert_eq!(out.get("layer_0.w1").unwrap().slice_cols(c.mlp, 64).unwrap().max_abs(), 0.0);
+        assert!(delta(&out, &toks, &base) <= PRESERVE_TOL);
+    }
+}
+
+#[cfg(test)]
+mod net2net_tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::{forward, max_logit_delta};
+
+    fn setup() -> (ModelConfig, ParamStore, Vec<Vec<u32>>, Vec<Tensor>) {
+        let c = ModelConfig { layers: 2, hidden: 16, heads: 2, k: 8, v: 8, mlp: 32, seq: 16, vocab: 32 };
+        let mut rng = Pcg32::seeded(41);
+        let params = ParamStore::init(&c, &mut rng, 0.1);
+        let toks: Vec<Vec<u32>> =
+            (0..2).map(|_| (0..c.seq).map(|_| rng.below(c.vocab) as u32).collect()).collect();
+        let base = forward(&c, &params, &toks).unwrap();
+        (c, params, toks, base)
+    }
+
+    #[test]
+    fn split_is_function_preserving_at_zero_noise() {
+        let (_, params, toks, base) = setup();
+        let out = split_mlp_neurons(&params, 64, &mut Pcg32::seeded(1), 0.0).unwrap();
+        assert_eq!(out.config().mlp, 64);
+        let after = forward(out.config(), &out, &toks).unwrap();
+        assert!(max_logit_delta(&base, &after).unwrap() <= 1e-4);
+    }
+
+    #[test]
+    fn split_gives_live_weights_unlike_def31() {
+        // the paper's Def 3.1 leaves new W2 rows zero; the Net2Net variant
+        // must produce nonzero outgoing weights for the new units.
+        let (c, params, _, _) = setup();
+        let out = split_mlp_neurons(&params, 64, &mut Pcg32::seeded(2), 0.0).unwrap();
+        let w2_new_rows = out.get("layer_0.w2").unwrap().slice_rows(c.mlp, 64).unwrap();
+        assert!(w2_new_rows.max_abs() > 0.0);
+        // and the W2 column sums are preserved (split halves re-sum)
+        let w2_old = params.get("layer_0.w2").unwrap();
+        let w2_all = out.get("layer_0.w2").unwrap();
+        // compare total contribution per hidden unit under an all-active relu
+        // pattern by checking column sums weighted by duplicated w1 columns'
+        // coincidence: simpler — sum of rows mapped back per source is checked
+        // implicitly by the preservation test; here verify total mass:
+        let sum_old: f32 = w2_old.data().iter().sum();
+        let sum_new: f32 = w2_all.data().iter().sum();
+        assert!((sum_old - sum_new).abs() < 1e-3);
+    }
+
+    #[test]
+    fn split_noise_breaks_exactness_gracefully() {
+        let (_, params, toks, base) = setup();
+        let out = split_mlp_neurons(&params, 64, &mut Pcg32::seeded(3), 0.05).unwrap();
+        let after = forward(out.config(), &out, &toks).unwrap();
+        let d = max_logit_delta(&base, &after).unwrap();
+        assert!(d > 1e-4, "noise should perturb: {d}");
+        assert!(d < 1.0, "but only slightly: {d}");
+    }
+
+    #[test]
+    fn split_double_split_of_same_unit_still_preserves() {
+        // with replacement, a unit can be chosen twice; quarters must re-sum.
+        let (_, params, toks, base) = setup();
+        for seed in 0..5 {
+            let out = split_mlp_neurons(&params, 96, &mut Pcg32::seeded(seed), 0.0).unwrap();
+            let after = forward(out.config(), &out, &toks).unwrap();
+            assert!(max_logit_delta(&base, &after).unwrap() <= 1e-4, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn split_rejects_shrink() {
+        let (_, params, _, _) = setup();
+        assert!(split_mlp_neurons(&params, 16, &mut Pcg32::seeded(0), 0.0).is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Autoregressive generation from a trained checkpoint (S10c).
+//!
+//! Decodes through the stage's compiled `fwd` artifact: the window of the
+//! last `seq` tokens is fed left-aligned (zero-padded on the right — the
+//! causal mask guarantees logits at position `len-1` ignore the padding),
+//! and the next token is sampled from the logits at the last real
+//! position. Once the history exceeds `seq`, the window slides.
+//!
+//! This is deliberately the *simple* KV-less decode: each new token re-runs
+//! the full forward. At the framework's stage sizes that costs a few ms per
+//! token on CPU; a KV-cache decode path would need per-position artifacts
+//! (future work, noted in DESIGN.md). The value here is the end-to-end
+//! loop: train → grow → checkpoint → generate, all through PJRT.
+
+use crate::error::{Error, Result};
+use crate::params::ParamStore;
+use crate::rng::Pcg32;
+use crate::runtime::{Runtime, StageExec};
+
+/// Sampling configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Sampler {
+    /// 0.0 = greedy argmax; otherwise softmax temperature.
+    pub temperature: f32,
+    /// Restrict sampling to the k most likely tokens.
+    pub top_k: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for Sampler {
+    fn default() -> Self {
+        Sampler { temperature: 0.8, top_k: Some(40), seed: 0 }
+    }
+}
+
+/// Pick the next token from a logits row (pub for unit testing).
+pub fn sample_from_logits(logits: &[f32], sampler: &Sampler, rng: &mut Pcg32) -> u32 {
+    if sampler.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // rank tokens, apply top-k cutoff
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let k = sampler.top_k.unwrap_or(logits.len()).max(1).min(logits.len());
+    let kept = &idx[..k];
+    let max = logits[kept[0]];
+    let weights: Vec<f64> = kept
+        .iter()
+        .map(|&i| (f64::from(logits[i] - max) / f64::from(sampler.temperature)).exp())
+        .collect();
+    kept[rng.weighted(&weights)] as u32
+}
+
+fn argmax(row: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, v) in row.iter().enumerate() {
+        if *v > row[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Generate `new_tokens` continuation tokens for each prompt.
+///
+/// `prompts.len()` must equal the artifact's compiled batch size (pad with
+/// clones of the last prompt if you have fewer — see the CLI).
+pub fn generate(
+    rt: &Runtime,
+    stage: &StageExec,
+    params: &ParamStore,
+    prompts: &[Vec<u32>],
+    new_tokens: usize,
+    sampler: &Sampler,
+) -> Result<Vec<Vec<u32>>> {
+    let cfg = *params.config();
+    if prompts.len() != stage.batch {
+        return Err(Error::Runtime(format!(
+            "{} prompts for an artifact compiled with batch {}",
+            prompts.len(),
+            stage.batch
+        )));
+    }
+    for p in prompts {
+        if p.is_empty() {
+            return Err(Error::Runtime("empty prompt".into()));
+        }
+        if let Some(&t) = p.iter().find(|&&t| t as usize >= cfg.vocab) {
+            return Err(Error::Runtime(format!("prompt token {t} out of vocab {}", cfg.vocab)));
+        }
+    }
+
+    let mut rng = Pcg32::new(sampler.seed, 0x6E6E);
+    let mut histories: Vec<Vec<u32>> = prompts.to_vec();
+    for _ in 0..new_tokens {
+        // build the [B, seq] window batch
+        let mut windows = Vec::with_capacity(histories.len());
+        let mut read_pos = Vec::with_capacity(histories.len());
+        for h in &histories {
+            let (window, pos) = if h.len() <= cfg.seq {
+                let mut w = h.clone();
+                w.resize(cfg.seq, 0); // right-pad; causal mask shields pos len-1
+                (w, h.len() - 1)
+            } else {
+                (h[h.len() - cfg.seq..].to_vec(), cfg.seq - 1)
+            };
+            windows.push(window);
+            read_pos.push(pos);
+        }
+        let logits = rt.forward(stage, params, &windows)?;
+        for ((h, l), &pos) in histories.iter_mut().zip(&logits).zip(&read_pos) {
+            let next = sample_from_logits(l.row(pos), sampler, &mut rng);
+            h.push(next);
+        }
+    }
+    Ok(histories)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Pcg32::seeded(0);
+        let s = Sampler { temperature: 0.0, top_k: None, seed: 0 };
+        assert_eq!(sample_from_logits(&[0.1, 5.0, -2.0], &s, &mut rng), 1);
+        assert_eq!(sample_from_logits(&[9.0, 5.0, -2.0], &s, &mut rng), 0);
+    }
+
+    #[test]
+    fn top_k_one_equals_greedy() {
+        let mut rng = Pcg32::seeded(1);
+        let s = Sampler { temperature: 1.0, top_k: Some(1), seed: 0 };
+        for _ in 0..20 {
+            assert_eq!(sample_from_logits(&[0.0, 1.0, 3.0, 2.0], &s, &mut rng), 2);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_respects_distribution() {
+        let mut rng = Pcg32::seeded(2);
+        let s = Sampler { temperature: 1.0, top_k: None, seed: 0 };
+        let logits = [2.0f32, 0.0, 0.0, 0.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..2000 {
+            counts[sample_from_logits(&logits, &s, &mut rng) as usize] += 1;
+        }
+        // p(token 0) = e^2 / (e^2 + 3) ~ 0.71
+        assert!(counts[0] > 1200, "{counts:?}");
+        assert!(counts[1] > 0 && counts[2] > 0 && counts[3] > 0, "{counts:?}");
+    }
+
+    #[test]
+    fn low_temperature_sharpens() {
+        let mut rng = Pcg32::seeded(3);
+        let sharp = Sampler { temperature: 0.1, top_k: None, seed: 0 };
+        let logits = [1.0f32, 0.5, 0.0];
+        let hits = (0..500)
+            .filter(|_| sample_from_logits(&logits, &sharp, &mut rng) == 0)
+            .count();
+        assert!(hits > 480, "{hits}");
+    }
+
+    #[test]
+    fn top_k_excludes_tail() {
+        let mut rng = Pcg32::seeded(4);
+        let s = Sampler { temperature: 5.0, top_k: Some(2), seed: 0 };
+        let logits = [3.0f32, 2.9, -10.0, -10.0];
+        for _ in 0..200 {
+            let t = sample_from_logits(&logits, &s, &mut rng);
+            assert!(t < 2, "sampled excluded token {t}");
+        }
+    }
+}

@@ -1,0 +1,601 @@
+//! Minimal JSON parser + serializer (substrate S1).
+//!
+//! The offline crate set has no `serde`/`serde_json`, and the framework
+//! speaks JSON at three boundaries: `artifacts/manifest.json` (written by
+//! the Python AOT step), growth-schedule configs (shared with Python), and
+//! JSONL metrics output. This module implements the subset of RFC 8259 we
+//! need: full syntax, `\uXXXX` escapes (including surrogate pairs), numbers
+//! as `f64`, objects as *order-preserving* key/value vectors.
+//!
+//! Not supported (by design): duplicate-key detection is last-wins,
+//! numbers beyond f64 precision, and non-UTF8 input.
+
+use std::fmt::Write as _;
+
+use crate::error::{Error, Result};
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    /// Order-preserving object (manifests are human-diffed; order matters).
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Parse a JSON document from text.
+    pub fn parse(text: &str) -> Result<Value> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(p.err("trailing characters after document"));
+        }
+        Ok(v)
+    }
+
+    /// Parse the file at `path`.
+    pub fn load(path: &str) -> Result<Value> {
+        let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        Value::parse(&text).map_err(|e| Error::Json(format!("{path}: {e}")))
+    }
+
+    // ---- typed accessors -------------------------------------------------
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => Err(Error::Json(format!("expected bool, got {}", self.kind()))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => Err(Error::Json(format!("expected number, got {}", self.kind()))),
+        }
+    }
+
+    /// Integer accessor; rejects non-integral numbers.
+    pub fn as_i64(&self) -> Result<i64> {
+        let n = self.as_f64()?;
+        if n.fract() != 0.0 || !n.is_finite() || n.abs() > 2f64.powi(53) {
+            return Err(Error::Json(format!("expected integer, got {n}")));
+        }
+        Ok(n as i64)
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_i64()?;
+        usize::try_from(n).map_err(|_| Error::Json(format!("expected non-negative integer, got {n}")))
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => Err(Error::Json(format!("expected string, got {}", self.kind()))),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            _ => Err(Error::Json(format!("expected array, got {}", self.kind()))),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&[(String, Value)]> {
+        match self {
+            Value::Obj(o) => Ok(o),
+            _ => Err(Error::Json(format!("expected object, got {}", self.kind()))),
+        }
+    }
+
+    /// Object field lookup (last-wins on duplicates).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(o) => o.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Required object field, with a path-style error.
+    pub fn req(&self, key: &str) -> Result<&Value> {
+        self.get(key).ok_or_else(|| Error::Json(format!("missing required field '{key}'")))
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Value::Null => "null",
+            Value::Bool(_) => "bool",
+            Value::Num(_) => "number",
+            Value::Str(_) => "string",
+            Value::Arr(_) => "array",
+            Value::Obj(_) => "object",
+        }
+    }
+
+    // ---- construction helpers -------------------------------------------
+
+    pub fn obj(fields: Vec<(&str, Value)>) -> Value {
+        Value::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn num(n: impl Into<f64>) -> Value {
+        Value::Num(n.into())
+    }
+
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    /// Compact serialization.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    /// Pretty serialization with 2-space indent.
+    pub fn to_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(2), 0);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => write_number(out, *n),
+            Value::Str(s) => write_string(out, s),
+            Value::Arr(a) => write_seq(out, indent, depth, '[', ']', a.len(), |out, i, ind, d| {
+                a[i].write(out, ind, d);
+            }),
+            Value::Obj(o) => write_seq(out, indent, depth, '{', '}', o.len(), |out, i, ind, d| {
+                write_string(out, &o[i].0);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                o[i].1.write(out, ind, d);
+            }),
+        }
+    }
+}
+
+fn write_number(out: &mut String, n: f64) {
+    if !n.is_finite() {
+        // JSON has no Inf/NaN; emit null (metrics sink tolerates it).
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+}
+
+fn write_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn write_seq(
+    out: &mut String,
+    indent: Option<usize>,
+    depth: usize,
+    open: char,
+    close: char,
+    len: usize,
+    mut item: impl FnMut(&mut String, usize, Option<usize>, usize),
+) {
+    out.push(open);
+    if len == 0 {
+        out.push(close);
+        return;
+    }
+    for i in 0..len {
+        if i > 0 {
+            out.push(',');
+        }
+        if let Some(w) = indent {
+            out.push('\n');
+            out.push_str(&" ".repeat(w * (depth + 1)));
+        }
+        item(out, i, indent, depth + 1);
+    }
+    if let Some(w) = indent {
+        out.push('\n');
+        out.push_str(&" ".repeat(w * depth));
+    }
+    out.push(close);
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> Error {
+        let (mut line, mut col) = (1usize, 1usize);
+        for &b in &self.bytes[..self.pos.min(self.bytes.len())] {
+            if b == b'\n' {
+                line += 1;
+                col = 1;
+            } else {
+                col += 1;
+            }
+        }
+        Error::Json(format!("{msg} at line {line}, col {col}"))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Value) -> Result<Value> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("invalid literal (expected '{word}')")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => self.literal("true", Value::Bool(true)),
+            Some(b'f') => self.literal("false", Value::Bool(false)),
+            Some(b'n') => self.literal("null", Value::Null),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            Some(c) => Err(self.err(&format!("unexpected character '{}'", c as char))),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Value::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}' in object")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Value::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']' in array")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'b') => out.push('\u{0008}'),
+                        Some(b'f') => out.push('\u{000C}'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            self.pos += 1;
+                            let cp = self.hex4()?;
+                            let c = if (0xD800..0xDC00).contains(&cp) {
+                                // high surrogate: require a low surrogate next
+                                if self.peek() == Some(b'\\') {
+                                    self.pos += 1;
+                                    self.expect(b'u')?;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..0xE000).contains(&lo) {
+                                        return Err(self.err("invalid low surrogate"));
+                                    }
+                                    let combined = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                    char::from_u32(combined).ok_or_else(|| self.err("invalid surrogate pair"))?
+                                } else {
+                                    return Err(self.err("lone high surrogate"));
+                                }
+                            } else if (0xDC00..0xE000).contains(&cp) {
+                                return Err(self.err("lone low surrogate"));
+                            } else {
+                                char::from_u32(cp).ok_or_else(|| self.err("invalid \\u escape"))?
+                            };
+                            out.push(c);
+                            continue; // hex4 advanced pos past the digits
+                        }
+                        _ => return Err(self.err("invalid escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(c) if c < 0x20 => return Err(self.err("control character in string")),
+                Some(_) => {
+                    // consume one UTF-8 scalar
+                    let start = self.pos;
+                    let len = utf8_len(self.bytes[start]);
+                    let end = start + len;
+                    if end > self.bytes.len() {
+                        return Err(self.err("truncated UTF-8"));
+                    }
+                    let s = std::str::from_utf8(&self.bytes[start..end]).map_err(|_| self.err("invalid UTF-8"))?;
+                    out.push_str(s);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut cp = 0u32;
+        for _ in 0..4 {
+            let d = match self.peek() {
+                Some(c @ b'0'..=b'9') => (c - b'0') as u32,
+                Some(c @ b'a'..=b'f') => (c - b'a' + 10) as u32,
+                Some(c @ b'A'..=b'F') => (c - b'A' + 10) as u32,
+                _ => return Err(self.err("invalid hex digit in \\u escape")),
+            };
+            cp = cp * 16 + d;
+            self.pos += 1;
+        }
+        Ok(cp)
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        // int part
+        match self.peek() {
+            Some(b'0') => self.pos += 1,
+            Some(b'1'..=b'9') => {
+                while matches!(self.peek(), Some(b'0'..=b'9')) {
+                    self.pos += 1;
+                }
+            }
+            _ => return Err(self.err("invalid number")),
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(self.err("digit required after decimal point"));
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(self.err("digit required in exponent"));
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        text.parse::<f64>().map(Value::Num).map_err(|_| self.err("number out of range"))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Value::parse("null").unwrap(), Value::Null);
+        assert_eq!(Value::parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(Value::parse("false").unwrap(), Value::Bool(false));
+        assert_eq!(Value::parse("42").unwrap(), Value::Num(42.0));
+        assert_eq!(Value::parse("-3.25e2").unwrap(), Value::Num(-325.0));
+        assert_eq!(Value::parse("\"hi\"").unwrap(), Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = Value::parse(r#"{"a": [1, {"b": null}, "x"], "c": {"d": false}}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("c").unwrap().get("d").unwrap(), &Value::Bool(false));
+    }
+
+    #[test]
+    fn preserves_key_order() {
+        let v = Value::parse(r#"{"z":1,"a":2,"m":3}"#).unwrap();
+        let keys: Vec<&str> = v.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["z", "a", "m"]);
+    }
+
+    #[test]
+    fn escapes_roundtrip() {
+        let orig = Value::Str("line\nquote\"back\\slash\ttab\u{0001}".into());
+        let text = orig.to_string();
+        assert_eq!(Value::parse(&text).unwrap(), orig);
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        assert_eq!(Value::parse(r#""é""#).unwrap(), Value::Str("é".into()));
+        // surrogate pair: U+1F600
+        assert_eq!(Value::parse(r#""😀""#).unwrap(), Value::Str("😀".into()));
+        assert!(Value::parse(r#""\ud83d""#).is_err()); // lone high surrogate
+        assert!(Value::parse(r#""\ude00""#).is_err()); // lone low surrogate
+    }
+
+    #[test]
+    fn utf8_passthrough() {
+        let v = Value::parse("\"héllo 😀\"").unwrap();
+        assert_eq!(v, Value::Str("héllo 😀".into()));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "", "{", "[1,", "{\"a\"}", "{\"a\":}", "01", "1.", "1e", "tru", "\"\\q\"", "[1] extra",
+            "nan", "+1", "'single'",
+        ] {
+            assert!(Value::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn error_reports_position() {
+        let err = Value::parse("{\n  \"a\": bad\n}").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn integer_accessors() {
+        assert_eq!(Value::parse("7").unwrap().as_i64().unwrap(), 7);
+        assert_eq!(Value::parse("7").unwrap().as_usize().unwrap(), 7);
+        assert!(Value::parse("7.5").unwrap().as_i64().is_err());
+        assert!(Value::parse("-7").unwrap().as_usize().is_err());
+        assert!(Value::parse("\"7\"").unwrap().as_i64().is_err());
+    }
+
+    #[test]
+    fn req_reports_missing_field() {
+        let v = Value::parse(r#"{"a":1}"#).unwrap();
+        assert!(v.req("a").is_ok());
+        let err = v.req("b").unwrap_err().to_string();
+        assert!(err.contains("'b'"), "{err}");
+    }
+
+    #[test]
+    fn pretty_printing_is_reparseable() {
+        let v = Value::parse(r#"{"a":[1,2,{"b":"c"}],"d":{}}"#).unwrap();
+        let pretty = v.to_pretty();
+        assert!(pretty.contains("\n  "));
+        assert_eq!(Value::parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn compact_numbers_stay_integral() {
+        assert_eq!(Value::Num(5.0).to_string(), "5");
+        assert_eq!(Value::Num(5.5).to_string(), "5.5");
+        assert_eq!(Value::Num(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn roundtrip_fuzz_light() {
+        // quick structural fuzz: build random values, serialize, reparse.
+        use crate::rng::Pcg32;
+        fn gen(r: &mut Pcg32, depth: usize) -> Value {
+            match if depth == 0 { r.below(4) } else { r.below(6) } {
+                0 => Value::Null,
+                1 => Value::Bool(r.below(2) == 0),
+                2 => Value::Num((r.range(-1000, 1000) as f64) / 8.0),
+                3 => Value::Str(format!("s{}-\"\\\n", r.below(100))),
+                4 => Value::Arr((0..r.below(4)).map(|_| gen(r, depth - 1)).collect()),
+                _ => Value::Obj((0..r.below(4)).map(|i| (format!("k{i}"), gen(r, depth - 1))).collect()),
+            }
+        }
+        let mut r = Pcg32::seeded(99);
+        for _ in 0..200 {
+            let v = gen(&mut r, 3);
+            assert_eq!(Value::parse(&v.to_string()).unwrap(), v);
+            assert_eq!(Value::parse(&v.to_pretty()).unwrap(), v);
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! # texpand — composable function-preserving expansions for transformers
+//!
+//! A progressive-growth transformer training framework reproducing
+//! *Composable Function-preserving Expansions for Transformer Architectures*
+//! (Gesmundo & Maile, 2023). The Rust side is **Layer 3** of the stack:
+//! it owns all run-time state (parameters, optimizer moments, data, growth
+//! schedule) and executes AOT-compiled HLO artifacts via PJRT; the JAX/Pallas
+//! side (`python/compile/`) runs only at build time.
+//!
+//! ## Module map
+//!
+//! Substrates (built from scratch — the offline crate set has no serde /
+//! clap / criterion / proptest):
+//! * [`json`] — JSON parser/serializer (manifests, configs, metrics).
+//! * [`rng`] — deterministic PCG32/normal sampling shared by init, data
+//!   synthesis and property tests.
+//! * [`tensor`] — host `f32` tensors with the linear algebra the reference
+//!   model and the expansion surgery need.
+//! * [`prop`] — a miniature property-testing harness.
+//! * [`bench_util`] — wall-clock benchmark harness (used by `benches/`).
+//!
+//! Framework:
+//! * [`config`] — architecture configs, growth schedules, training config.
+//! * [`params`] — the canonical-order parameter store + checkpoint codec.
+//! * [`model`] — pure-Rust reference transformer forward (paper Eqs. 1–5),
+//!   the PJRT-independent oracle for preservation checks.
+//! * [`expand`] — **the paper's contribution**: the six function-preserving
+//!   transformations (Defs. 3.1–3.6) as parameter surgery, plus composition.
+//! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`,
+//!   compiles once, executes on the training hot path.
+//! * [`optim`] — SGD/Adam with expansion-aware moment surgery.
+//! * [`data`] — synthetic corpus generators, byte tokenizer, batcher.
+//! * [`train`] — the training loop for one stage.
+//! * [`coordinator`] — the growth coordinator walking a schedule across
+//!   stages, applying boundary surgery and verifying preservation.
+//! * [`metrics`] — CSV/JSONL run logging, timers.
+//! * [`cli`] — argument parsing for the `texpand` binary.
+
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod expand;
+pub mod generate;
+pub mod json;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod params;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+
+pub use error::{Error, Result};

@@ -1,0 +1,161 @@
+//! Run logging and timing (S12).
+//!
+//! A [`RunLogger`] owns one run directory (`runs/<name>/`) and writes:
+//! * `events.jsonl` — every structured event (step losses, boundary
+//!   surgeries, preservation probes, throughput);
+//! * `loss.csv` — `global_step,stage,loss,tokens_seen,wall_ms` rows, the
+//!   series behind the E3 loss-curve figures.
+//!
+//! Logging is line-buffered append; a crashed run keeps everything logged
+//! so far (the coordinator re-opens with a fresh run name on restart).
+
+use std::io::Write;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+
+/// Structured logger for one training/benchmark run.
+pub struct RunLogger {
+    dir: String,
+    events: std::fs::File,
+    loss_csv: std::fs::File,
+    start: Instant,
+    quiet: bool,
+}
+
+impl RunLogger {
+    /// Create `runs/<name>/` (fails if files cannot be created).
+    pub fn create(root: &str, name: &str) -> Result<RunLogger> {
+        let dir = format!("{root}/{name}");
+        std::fs::create_dir_all(&dir).map_err(|e| Error::io(&dir, e))?;
+        let events_path = format!("{dir}/events.jsonl");
+        let events = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&events_path)
+            .map_err(|e| Error::io(&events_path, e))?;
+        let loss_path = format!("{dir}/loss.csv");
+        let fresh = !std::path::Path::new(&loss_path).exists()
+            || std::fs::metadata(&loss_path).map(|m| m.len() == 0).unwrap_or(true);
+        let mut loss_csv = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&loss_path)
+            .map_err(|e| Error::io(&loss_path, e))?;
+        if fresh {
+            writeln!(loss_csv, "global_step,stage,loss,tokens_seen,wall_ms").map_err(|e| Error::io(&loss_path, e))?;
+        }
+        Ok(RunLogger { dir, events, loss_csv, start: Instant::now(), quiet: false })
+    }
+
+    /// Suppress stdout mirroring (benches).
+    pub fn quiet(mut self) -> RunLogger {
+        self.quiet = true;
+        self
+    }
+
+    pub fn dir(&self) -> &str {
+        &self.dir
+    }
+
+    /// Milliseconds since logger creation.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Write a structured event (adds `t_ms` automatically).
+    pub fn event(&mut self, kind: &str, fields: Vec<(&str, Value)>) {
+        let mut all = vec![("event", Value::str(kind)), ("t_ms", Value::num(self.elapsed_ms()))];
+        all.extend(fields);
+        let line = Value::obj(all).to_string();
+        let _ = writeln!(self.events, "{line}");
+        if !self.quiet {
+            println!("[{kind}] {line}");
+        }
+    }
+
+    /// Append one loss-curve row.
+    pub fn loss_row(&mut self, global_step: usize, stage: &str, loss: f32, tokens_seen: usize) {
+        let _ = writeln!(
+            self.loss_csv,
+            "{global_step},{stage},{loss},{tokens_seen},{:.1}",
+            self.elapsed_ms()
+        );
+    }
+}
+
+/// Scoped wall-clock timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> String {
+        let d = std::env::temp_dir().join(format!("texpand-metrics-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn logger_writes_events_and_csv() {
+        let root = tmpdir("basic");
+        let mut log = RunLogger::create(&root, "run1").unwrap().quiet();
+        log.event("stage_start", vec![("stage", Value::str("stage0"))]);
+        log.loss_row(1, "stage0", 3.25, 512);
+        log.loss_row(2, "stage0", 3.10, 1024);
+        drop(log);
+
+        let events = std::fs::read_to_string(format!("{root}/run1/events.jsonl")).unwrap();
+        let parsed = Value::parse(events.lines().next().unwrap()).unwrap();
+        assert_eq!(parsed.req("event").unwrap().as_str().unwrap(), "stage_start");
+        assert!(parsed.get("t_ms").is_some());
+
+        let csv = std::fs::read_to_string(format!("{root}/run1/loss.csv")).unwrap();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "global_step,stage,loss,tokens_seen,wall_ms");
+        assert!(lines[1].starts_with("1,stage0,3.25,512,"));
+        assert_eq!(lines.len(), 3);
+        std::fs::remove_dir_all(format!("{root}/run1")).unwrap();
+    }
+
+    #[test]
+    fn csv_header_not_duplicated_on_reopen() {
+        let root = tmpdir("reopen");
+        {
+            let mut log = RunLogger::create(&root, "run2").unwrap().quiet();
+            log.loss_row(1, "s", 1.0, 1);
+        }
+        {
+            let mut log = RunLogger::create(&root, "run2").unwrap().quiet();
+            log.loss_row(2, "s", 0.5, 2);
+        }
+        let csv = std::fs::read_to_string(format!("{root}/run2/loss.csv")).unwrap();
+        assert_eq!(csv.lines().filter(|l| l.starts_with("global_step")).count(), 1);
+        assert_eq!(csv.lines().count(), 3);
+        std::fs::remove_dir_all(format!("{root}/run2")).unwrap();
+    }
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.ms() >= 4.0);
+        assert!(t.secs() < 1.0);
+    }
+}

@@ -1,0 +1,357 @@
+//! Pure-Rust reference transformer forward pass (S5; paper Eqs. 1–5).
+//!
+//! This is the PJRT-independent oracle: the growth coordinator uses it to
+//! assert function preservation at expansion boundaries without trusting
+//! the AOT path, and integration tests use it to validate that the HLO
+//! artifacts compute the same function as this implementation (three-way
+//! agreement: JAX == Rust == PJRT).
+//!
+//! Numerics mirror `python/compile/model.py` exactly: RMSNorm with **no
+//! epsilon** (Eq. 5 — required for Thm 3.5's exact norm scaling), additive
+//! causal mask of `-1e30` applied *after* the `1/sqrt(k)` score scaling,
+//! and max-subtracted softmax. Summation order differs from XLA's fused
+//! loops, so cross-implementation agreement is ~1e-5, not bit-exact
+//! (tolerance policy: DESIGN.md §8).
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::params::ParamStore;
+use crate::tensor::{softmax_rows, Tensor};
+
+/// Additive mask value for non-causal positions (matches kernels/ref.py).
+pub const MASK_VALUE: f32 = -1e30;
+
+/// RMSNorm (Eq. 5): `x_ij * g_j / sqrt(mean_j x_ij^2)` over a `[s, h]` tile.
+pub fn rmsnorm(x: &Tensor, g: &Tensor) -> Result<Tensor> {
+    if x.rank() != 2 || g.rank() != 1 || g.shape()[0] != x.cols() {
+        return Err(Error::Shape(format!("rmsnorm: x {:?}, g {:?}", x.shape(), g.shape())));
+    }
+    let (s, h) = (x.rows(), x.cols());
+    let mut out = Tensor::zeros(&[s, h]);
+    for i in 0..s {
+        let row = x.row(i);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
+        let denom = ms.sqrt();
+        let orow = out.row_mut(i);
+        for j in 0..h {
+            orow[j] = row[j] * g.data()[j] / denom;
+        }
+    }
+    Ok(out)
+}
+
+/// Scaled dot-product attention with causal mask (Eq. 4).
+/// `q, k: [s, dk]`, `v: [s, dv]` → `[s, dv]`.
+pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor, causal: bool) -> Result<Tensor> {
+    let dk = q.cols();
+    if k.cols() != dk || q.rows() != k.rows() || k.rows() != v.rows() {
+        return Err(Error::Shape(format!(
+            "attention: q {:?}, k {:?}, v {:?}",
+            q.shape(),
+            k.shape(),
+            v.shape()
+        )));
+    }
+    let mut scores = q.matmul_bt(k)?;
+    let scale = 1.0 / (dk as f32).sqrt();
+    scores.scale(scale);
+    if causal {
+        let s = scores.rows();
+        for i in 0..s {
+            for j in (i + 1)..s {
+                scores.set(i, j, MASK_VALUE);
+            }
+        }
+    }
+    softmax_rows(&mut scores);
+    scores.matmul(v)
+}
+
+/// Two-layer ReLU MLP (Eq. 3).
+pub fn mlp(x: &Tensor, w1: &Tensor, b1: &Tensor, w2: &Tensor, b2: &Tensor) -> Result<Tensor> {
+    let mut hid = x.matmul(w1)?;
+    hid.add_row_broadcast(b1)?;
+    hid.map_inplace(|v| v.max(0.0));
+    let mut out = hid.matmul(w2)?;
+    out.add_row_broadcast(b2)?;
+    Ok(out)
+}
+
+/// One transformer layer (Eq. 2) applied in place to `x: [s, h]`.
+fn layer(cfg: &ModelConfig, params: &ParamStore, n: usize, x: &mut Tensor) -> Result<()> {
+    // I'_n = I_n + MHA(Norm(I_n))
+    let nrm = rmsnorm(x, params.get(&format!("layer_{n}.g_mha"))?)?;
+    let s = x.rows();
+    let mut concat = Tensor::zeros(&[s, cfg.heads * cfg.v]);
+    for e in 0..cfg.heads {
+        let q = nrm.matmul(params.get(&format!("layer_{n}.head_{e}.wq"))?)?;
+        let k = nrm.matmul(params.get(&format!("layer_{n}.head_{e}.wk"))?)?;
+        let v = nrm.matmul(params.get(&format!("layer_{n}.head_{e}.wv"))?)?;
+        let head = attention(&q, &k, &v, true)?;
+        // concatenate along the feature axis: column block e*v..(e+1)*v
+        for i in 0..s {
+            let dst = concat.row_mut(i);
+            dst[e * cfg.v..(e + 1) * cfg.v].copy_from_slice(head.row(i));
+        }
+    }
+    let mha_out = concat.matmul(params.get(&format!("layer_{n}.wo"))?)?;
+    x.add_assign(&mha_out)?;
+
+    // I_{n+1} = I'_n + MLP(Norm(I'_n))
+    let nrm2 = rmsnorm(x, params.get(&format!("layer_{n}.g_mlp"))?)?;
+    let mlp_out = mlp(
+        &nrm2,
+        params.get(&format!("layer_{n}.w1"))?,
+        params.get(&format!("layer_{n}.b1"))?,
+        params.get(&format!("layer_{n}.w2"))?,
+        params.get(&format!("layer_{n}.b2"))?,
+    )?;
+    x.add_assign(&mlp_out)?;
+    Ok(())
+}
+
+/// Full forward (Eq. 1) for one sequence: `tokens` (len == seq) → logits
+/// `[s, vocab]`.
+pub fn forward_one(cfg: &ModelConfig, params: &ParamStore, tokens: &[u32]) -> Result<Tensor> {
+    if tokens.len() != cfg.seq {
+        return Err(Error::Shape(format!("forward: {} tokens, seq={}", tokens.len(), cfg.seq)));
+    }
+    let embed = params.get("embed")?;
+    let pos = params.get("pos")?;
+    let mut x = Tensor::zeros(&[cfg.seq, cfg.hidden]);
+    for (i, &t) in tokens.iter().enumerate() {
+        if t as usize >= cfg.vocab {
+            return Err(Error::Shape(format!("token {t} out of vocab {}", cfg.vocab)));
+        }
+        let erow = embed.row(t as usize);
+        let prow = pos.row(i);
+        let xrow = x.row_mut(i);
+        for j in 0..cfg.hidden {
+            xrow[j] = erow[j] + prow[j];
+        }
+    }
+    for n in 0..cfg.layers {
+        layer(cfg, params, n, &mut x)?;
+    }
+    x.matmul(params.get("w_out")?)
+}
+
+/// Batched forward: one `[s, vocab]` logits tensor per batch row.
+pub fn forward(cfg: &ModelConfig, params: &ParamStore, batch: &[Vec<u32>]) -> Result<Vec<Tensor>> {
+    batch.iter().map(|row| forward_one(cfg, params, row)).collect()
+}
+
+/// Mean next-token cross-entropy over the batch (matches
+/// `model.py::loss_fn` with externally-shifted targets).
+pub fn cross_entropy(logits: &[Tensor], targets: &[Vec<u32>]) -> Result<f32> {
+    if logits.len() != targets.len() {
+        return Err(Error::Shape("cross_entropy: batch mismatch".into()));
+    }
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for (l, t) in logits.iter().zip(targets) {
+        if l.rows() != t.len() {
+            return Err(Error::Shape("cross_entropy: seq mismatch".into()));
+        }
+        for (i, &tgt) in t.iter().enumerate() {
+            let row = l.row(i);
+            let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let lse: f32 = row.iter().map(|x| (x - max).exp()).sum::<f32>().ln() + max;
+            total += f64::from(lse - row[tgt as usize]);
+            count += 1;
+        }
+    }
+    Ok((total / count as f64) as f32)
+}
+
+/// Max |Δ| between two batched logit sets (preservation metric).
+pub fn max_logit_delta(a: &[Tensor], b: &[Tensor]) -> Result<f32> {
+    if a.len() != b.len() {
+        return Err(Error::Shape("max_logit_delta: batch mismatch".into()));
+    }
+    let mut worst = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        worst = worst.max(x.max_abs_diff(y)?);
+    }
+    Ok(worst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { layers: 2, hidden: 16, heads: 2, k: 8, v: 8, mlp: 32, seq: 16, vocab: 32 }
+    }
+
+    fn setup(seed: u64) -> (ModelConfig, ParamStore, Vec<Vec<u32>>) {
+        let c = cfg();
+        let mut rng = Pcg32::seeded(seed);
+        let params = ParamStore::init(&c, &mut rng, 0.02);
+        let toks = (0..2)
+            .map(|_| (0..c.seq).map(|_| rng.below(c.vocab) as u32).collect())
+            .collect();
+        (c, params, toks)
+    }
+
+    #[test]
+    fn rmsnorm_known_values() {
+        let x = Tensor::from_vec(&[1, 2], vec![3.0, 4.0]).unwrap();
+        let g = Tensor::from_vec(&[2], vec![2.0, 0.5]).unwrap();
+        let out = rmsnorm(&x, &g).unwrap();
+        let rms = ((9.0 + 16.0) / 2.0f32).sqrt();
+        assert!((out.at(0, 0) - 2.0 * 3.0 / rms).abs() < 1e-6);
+        assert!((out.at(0, 1) - 0.5 * 4.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmsnorm_scale_invariance() {
+        let mut rng = Pcg32::seeded(0);
+        let x = Tensor::randn(&[4, 8], &mut rng, 1.0);
+        let g = Tensor::randn(&[8], &mut rng, 1.0);
+        let mut x2 = x.clone();
+        x2.scale(7.0);
+        let a = rmsnorm(&x, &g).unwrap();
+        let b = rmsnorm(&x2, &g).unwrap();
+        assert!(a.max_abs_diff(&b).unwrap() < 1e-5);
+    }
+
+    #[test]
+    fn attention_uniform_when_keys_equal() {
+        // all-equal keys => causal-uniform weights => running mean of V
+        let s = 8;
+        let mut rng = Pcg32::seeded(1);
+        let q = Tensor::randn(&[s, 4], &mut rng, 1.0);
+        let k = Tensor::ones(&[s, 4]);
+        let mut v = Tensor::zeros(&[s, 3]);
+        for i in 0..s {
+            for j in 0..3 {
+                v.set(i, j, i as f32);
+            }
+        }
+        let out = attention(&q, &k, &v, true).unwrap();
+        for i in 0..s {
+            let want = (0..=i).sum::<usize>() as f32 / (i + 1) as f32;
+            assert!((out.at(i, 0) - want).abs() < 1e-5, "row {i}");
+        }
+    }
+
+    #[test]
+    fn attention_noncausal_attends_everywhere() {
+        let s = 4;
+        let q = Tensor::ones(&[s, 2]);
+        let k = Tensor::ones(&[s, 2]);
+        let mut v = Tensor::zeros(&[s, 1]);
+        for i in 0..s {
+            v.set(i, 0, i as f32);
+        }
+        let out = attention(&q, &k, &v, false).unwrap();
+        let mean = (0..s).sum::<usize>() as f32 / s as f32;
+        for i in 0..s {
+            assert!((out.at(i, 0) - mean).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn attention_shape_errors() {
+        let q = Tensor::ones(&[4, 2]);
+        assert!(attention(&q, &Tensor::ones(&[4, 3]), &Tensor::ones(&[4, 2]), true).is_err());
+        assert!(attention(&q, &Tensor::ones(&[3, 2]), &Tensor::ones(&[4, 2]), true).is_err());
+    }
+
+    #[test]
+    fn mlp_zero_weights_give_bias() {
+        let x = Tensor::ones(&[3, 4]);
+        let out = mlp(
+            &x,
+            &Tensor::zeros(&[4, 8]),
+            &Tensor::zeros(&[8]),
+            &Tensor::zeros(&[8, 4]),
+            &Tensor::full(&[4], 1.5),
+        )
+        .unwrap();
+        assert_eq!(out.data(), &[1.5; 12]);
+    }
+
+    #[test]
+    fn mlp_relu_blocks_negatives() {
+        // single unit with negative pre-activation contributes nothing
+        let x = Tensor::ones(&[1, 1]);
+        let out = mlp(
+            &x,
+            &Tensor::from_vec(&[1, 1], vec![-5.0]).unwrap(),
+            &Tensor::zeros(&[1]),
+            &Tensor::from_vec(&[1, 1], vec![100.0]).unwrap(),
+            &Tensor::zeros(&[1]),
+        )
+        .unwrap();
+        assert_eq!(out.data(), &[0.0]);
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let (c, params, toks) = setup(7);
+        let out = forward(&c, &params, &toks).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].shape(), &[c.seq, c.vocab]);
+        assert!(out.iter().all(Tensor::all_finite));
+    }
+
+    #[test]
+    fn forward_is_causal() {
+        let (c, params, mut toks) = setup(8);
+        let base = forward_one(&c, &params, &toks[0]).unwrap();
+        let t = c.seq / 2;
+        toks[0][t] = (toks[0][t] + 1) % c.vocab as u32;
+        let pert = forward_one(&c, &params, &toks[0]).unwrap();
+        for i in 0..t {
+            for j in 0..c.vocab {
+                assert!((base.at(i, j) - pert.at(i, j)).abs() < 1e-6, "leak at ({i},{j})");
+            }
+        }
+        let tail_delta = base.slice_rows(t, c.seq).unwrap().max_abs_diff(&pert.slice_rows(t, c.seq).unwrap()).unwrap();
+        assert!(tail_delta > 1e-4, "perturbation had no effect downstream");
+    }
+
+    #[test]
+    fn forward_rejects_bad_tokens() {
+        let (c, params, _) = setup(9);
+        let too_short = vec![0u32; c.seq - 1];
+        assert!(forward_one(&c, &params, &too_short).is_err());
+        let mut bad = vec![0u32; c.seq];
+        bad[0] = c.vocab as u32;
+        assert!(forward_one(&c, &params, &bad).is_err());
+    }
+
+    #[test]
+    fn cross_entropy_near_log_vocab_at_init() {
+        let (c, params, toks) = setup(10);
+        let logits = forward(&c, &params, &toks).unwrap();
+        let loss = cross_entropy(&logits, &toks).unwrap();
+        assert!((loss - (c.vocab as f32).ln()).abs() < 0.5, "loss {loss}");
+    }
+
+    #[test]
+    fn cross_entropy_perfect_prediction() {
+        // logits with a huge spike at the target => loss ~ 0
+        let logits = vec![{
+            let mut t = Tensor::zeros(&[2, 4]);
+            t.set(0, 1, 50.0);
+            t.set(1, 3, 50.0);
+            t
+        }];
+        let loss = cross_entropy(&logits, &[vec![1, 3]]).unwrap();
+        assert!(loss < 1e-3);
+    }
+
+    #[test]
+    fn max_logit_delta_detects_change() {
+        let (c, params, toks) = setup(11);
+        let a = forward(&c, &params, &toks).unwrap();
+        let mut b = a.clone();
+        assert_eq!(max_logit_delta(&a, &b).unwrap(), 0.0);
+        b[1].data_mut()[5] += 0.25;
+        assert!((max_logit_delta(&a, &b).unwrap() - 0.25).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,352 @@
+//! Optimizers with expansion-aware state surgery (S8).
+//!
+//! The PJRT `step` artifacts return *gradients*; the optimizer itself runs
+//! here so that its state lives next to the parameters it tracks — at every
+//! expansion boundary the coordinator transforms parameters *and* moments
+//! with one code path ([`Optimizer::expand`]).
+//!
+//! ## Moment surgery
+//!
+//! Adam's moments are per-scalar statistics, so they undergo the *same
+//! geometric* surgery as their parameter (concat in the same places), with
+//! new slices **zero** (fresh capacity has no gradient history). The two
+//! reparametrizations the paper introduces scale kept parameters by a
+//! factor `c` (Eq. 19: W^K by `sqrt(k̂/k)`; Eq. 24: norm gains by
+//! `sqrt(h/ĥ)`); under `ŵ = c·w` gradients scale as `∂L/∂ŵ = (1/c)·∂L/∂w`,
+//! so the first moment is rescaled by `c^-1` and the second by `c^-2` —
+//! exactly what `ExpandOptions::for_moments(-1.0 / -2.0)` implements.
+
+use crate::config::{GrowthOp, OptimKind, TrainConfig};
+use crate::error::{Error, Result};
+use crate::expand::{apply_ops_owned, ExpandOptions};
+use crate::params::ParamStore;
+use crate::rng::Pcg32;
+use crate::tensor::Tensor;
+
+/// Optimizer state (moments stored as ParamStores so they share the
+/// canonical layout and the expansion machinery).
+#[derive(Clone, Debug)]
+pub enum Optimizer {
+    Sgd {
+        lr: f32,
+    },
+    Adam {
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        /// Update count (bias correction).
+        t: u64,
+        m: ParamStore,
+        v: ParamStore,
+    },
+}
+
+impl Optimizer {
+    /// Build from a training config, with moments shaped like `params`.
+    pub fn new(cfg: &TrainConfig, params: &ParamStore) -> Optimizer {
+        match cfg.optimizer {
+            OptimKind::Sgd => Optimizer::Sgd { lr: cfg.lr },
+            OptimKind::Adam => Optimizer::Adam {
+                lr: cfg.lr,
+                beta1: cfg.beta1,
+                beta2: cfg.beta2,
+                eps: cfg.adam_eps,
+                t: 0,
+                m: ParamStore::zeros(params.config()),
+                v: ParamStore::zeros(params.config()),
+            },
+        }
+    }
+
+    /// Human-readable name (logs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Optimizer::Sgd { .. } => "sgd",
+            Optimizer::Adam { .. } => "adam",
+        }
+    }
+
+    /// In-place parameter update from canonical-order gradients.
+    pub fn step(&mut self, params: &mut ParamStore, grads: &[Tensor]) -> Result<()> {
+        if grads.len() != params.len() {
+            return Err(Error::Train(format!(
+                "optimizer step: {} grads for {} params",
+                grads.len(),
+                params.len()
+            )));
+        }
+        match self {
+            Optimizer::Sgd { lr } => {
+                for (p, g) in params.tensors_mut().iter_mut().zip(grads) {
+                    if p.shape() != g.shape() {
+                        return Err(Error::Train(format!(
+                            "sgd: grad shape {:?} vs param {:?}",
+                            g.shape(),
+                            p.shape()
+                        )));
+                    }
+                    for (pv, gv) in p.data_mut().iter_mut().zip(g.data()) {
+                        *pv -= *lr * gv;
+                    }
+                }
+            }
+            Optimizer::Adam { lr, beta1, beta2, eps, t, m, v } => {
+                *t += 1;
+                let bc1 = 1.0 - beta1.powi(*t as i32);
+                let bc2 = 1.0 - beta2.powi(*t as i32);
+                for ((p, g), (mt, vt)) in params
+                    .tensors_mut()
+                    .iter_mut()
+                    .zip(grads)
+                    .zip(m.tensors_mut().iter_mut().zip(v.tensors_mut().iter_mut()))
+                {
+                    if p.shape() != g.shape() {
+                        return Err(Error::Train(format!(
+                            "adam: grad shape {:?} vs param {:?}",
+                            g.shape(),
+                            p.shape()
+                        )));
+                    }
+                    let (b1, b2) = (*beta1, *beta2);
+                    for i in 0..p.numel() {
+                        let gv = g.data()[i];
+                        let mv = b1 * mt.data()[i] + (1.0 - b1) * gv;
+                        let vv = b2 * vt.data()[i] + (1.0 - b2) * gv * gv;
+                        mt.data_mut()[i] = mv;
+                        vt.data_mut()[i] = vv;
+                        let m_hat = mv / bc1;
+                        let v_hat = vv / bc2;
+                        p.data_mut()[i] -= *lr * m_hat / (v_hat.sqrt() + *eps);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Transform optimizer state across an expansion boundary so that it
+    /// matches the post-surgery parameter layout (see module docs).
+    pub fn expand(&mut self, ops: &[GrowthOp]) -> Result<()> {
+        match self {
+            Optimizer::Sgd { .. } => Ok(()), // stateless
+            Optimizer::Adam { m, v, .. } => {
+                // surgery is deterministic under Init::Zeros; rng is unused entropy
+                let mut rng = Pcg32::seeded(0);
+                let dummy = crate::config::ModelConfig {
+                    layers: 1, hidden: 1, heads: 1, k: 1, v: 1, mlp: 1, seq: 1, vocab: 1,
+                };
+                let old_m = std::mem::replace(m, ParamStore::zeros(&dummy));
+                *m = apply_ops_owned(old_m, ops, &mut rng, &ExpandOptions::for_moments(-1.0))?;
+                let old_v = std::mem::replace(v, ParamStore::zeros(&dummy));
+                *v = apply_ops_owned(old_v, ops, &mut rng, &ExpandOptions::for_moments(-2.0))?;
+                Ok(())
+            }
+        }
+    }
+
+    /// Expanded-state invariant check: moments must mirror the param layout.
+    pub fn validate_against(&self, params: &ParamStore) -> Result<()> {
+        if let Optimizer::Adam { m, v, .. } = self {
+            if m.config() != params.config() || v.config() != params.config() {
+                return Err(Error::Train(format!(
+                    "optimizer state config {:?} does not match params {:?}",
+                    m.config(),
+                    params.config()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Global-norm gradient clipping (in place). Returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [Tensor], max_norm: f32) -> f32 {
+    let mut sq = 0.0f64;
+    for g in grads.iter() {
+        for x in g.data() {
+            sq += (*x as f64) * (*x as f64);
+        }
+    }
+    let norm = sq.sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            g.scale(scale);
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LayerPosition, ModelConfig};
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { layers: 1, hidden: 8, heads: 2, k: 4, v: 4, mlp: 16, seq: 8, vocab: 16 }
+    }
+
+    fn train_cfg(kind: OptimKind, lr: f32) -> TrainConfig {
+        TrainConfig { optimizer: kind, lr, ..Default::default() }
+    }
+
+    fn quadratic_grads(params: &ParamStore) -> Vec<Tensor> {
+        // grad of 0.5*||p||^2 is p itself: descending must shrink the norm
+        params.tensors().to_vec()
+    }
+
+    fn norm(params: &ParamStore) -> f64 {
+        params.tensors().iter().flat_map(|t| t.data()).map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt()
+    }
+
+    #[test]
+    fn sgd_descends_quadratic() {
+        let mut rng = Pcg32::seeded(1);
+        let mut params = ParamStore::init(&cfg(), &mut rng, 0.1);
+        let mut opt = Optimizer::new(&train_cfg(OptimKind::Sgd, 0.1), &params);
+        let before = norm(&params);
+        for _ in 0..10 {
+            let grads = quadratic_grads(&params);
+            opt.step(&mut params, &grads).unwrap();
+        }
+        assert!(norm(&params) < 0.5 * before);
+    }
+
+    #[test]
+    fn sgd_update_is_exact() {
+        let mut params = ParamStore::zeros(&cfg());
+        params.get_mut("w_out").unwrap().data_mut()[0] = 1.0;
+        let mut grads: Vec<Tensor> = params.tensors().iter().map(|t| Tensor::zeros(t.shape())).collect();
+        let w_out_idx = params.specs().iter().position(|s| s.name == "w_out").unwrap();
+        grads[w_out_idx].data_mut()[0] = 2.0;
+        let mut opt = Optimizer::new(&train_cfg(OptimKind::Sgd, 0.25), &params);
+        opt.step(&mut params, &grads).unwrap();
+        assert!((params.get("w_out").unwrap().data()[0] - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn adam_descends_quadratic() {
+        let mut rng = Pcg32::seeded(2);
+        let mut params = ParamStore::init(&cfg(), &mut rng, 0.1);
+        let mut opt = Optimizer::new(&train_cfg(OptimKind::Adam, 0.01), &params);
+        let before = norm(&params);
+        for _ in 0..50 {
+            let grads = quadratic_grads(&params);
+            opt.step(&mut params, &grads).unwrap();
+        }
+        assert!(norm(&params) < before);
+    }
+
+    #[test]
+    fn adam_first_step_magnitude_is_lr() {
+        // with bias correction, |Δp| of the very first Adam step ≈ lr
+        let mut params = ParamStore::zeros(&cfg());
+        params.get_mut("embed").unwrap().data_mut()[0] = 5.0;
+        let mut grads: Vec<Tensor> = params.tensors().iter().map(|t| Tensor::zeros(t.shape())).collect();
+        grads[0].data_mut()[0] = 3.0; // embed is index 0
+        let mut opt = Optimizer::new(&train_cfg(OptimKind::Adam, 0.01), &params);
+        opt.step(&mut params, &grads).unwrap();
+        let delta = 5.0 - params.get("embed").unwrap().data()[0];
+        assert!((delta - 0.01).abs() < 1e-4, "delta {delta}");
+    }
+
+    #[test]
+    fn step_rejects_mismatched_grads() {
+        let mut params = ParamStore::zeros(&cfg());
+        let mut opt = Optimizer::new(&train_cfg(OptimKind::Adam, 0.01), &params);
+        let grads = vec![Tensor::zeros(&[1])];
+        assert!(opt.step(&mut params, &grads).is_err());
+    }
+
+    #[test]
+    fn adam_moment_surgery_matches_param_layout() {
+        let mut rng = Pcg32::seeded(3);
+        let mut params = ParamStore::init(&cfg(), &mut rng, 0.1);
+        let mut opt = Optimizer::new(&train_cfg(OptimKind::Adam, 0.01), &params);
+        // accumulate some real moments
+        for _ in 0..3 {
+            let grads = quadratic_grads(&params);
+            opt.step(&mut params, &grads).unwrap();
+        }
+        let ops = vec![
+            GrowthOp::Mlp { p: 32 },
+            GrowthOp::HeadsAdd { count: 1 },
+            GrowthOp::AttnExpand { k: 8 },
+            GrowthOp::Hidden { h: 12 },
+            GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top },
+        ];
+        let expanded = crate::expand::apply_ops(&params, &ops, &mut Pcg32::seeded(4), &Default::default()).unwrap();
+        opt.expand(&ops).unwrap();
+        opt.validate_against(&expanded).unwrap();
+        // and stepping still works post-surgery
+        let mut p2 = expanded.clone();
+        let grads = quadratic_grads(&p2);
+        opt.step(&mut p2, &grads).unwrap();
+    }
+
+    #[test]
+    fn moment_surgery_zeroes_new_and_rescales_kept() {
+        let mut rng = Pcg32::seeded(5);
+        let mut params = ParamStore::init(&cfg(), &mut rng, 0.1);
+        let mut opt = Optimizer::new(&train_cfg(OptimKind::Adam, 0.01), &params);
+        let grads = quadratic_grads(&params);
+        opt.step(&mut params, &grads).unwrap();
+        let (m_before, v_before) = match &opt {
+            Optimizer::Adam { m, v, .. } => (m.clone(), v.clone()),
+            _ => unreachable!(),
+        };
+        let old_k = cfg().k;
+        let new_k = 2 * old_k;
+        let ops = vec![GrowthOp::AttnExpand { k: new_k }];
+        opt.expand(&ops).unwrap();
+        let (m_after, v_after) = match &opt {
+            Optimizer::Adam { m, v, .. } => (m.clone(), v.clone()),
+            _ => unreachable!(),
+        };
+        let c = ((new_k as f32) / (old_k as f32)).sqrt();
+        // kept W^K slice: m scaled by 1/c, v by 1/c^2
+        let m_old = m_before.get("layer_0.head_0.wk").unwrap();
+        let m_new = m_after.get("layer_0.head_0.wk").unwrap();
+        let kept = m_new.slice_cols(0, old_k).unwrap();
+        let mut want = m_old.clone();
+        want.scale(1.0 / c);
+        assert!(kept.max_abs_diff(&want).unwrap() < 1e-6);
+        // new columns zero
+        assert_eq!(m_new.slice_cols(old_k, new_k).unwrap().max_abs(), 0.0);
+        let v_old = v_before.get("layer_0.head_0.wk").unwrap();
+        let v_new = v_after.get("layer_0.head_0.wk").unwrap();
+        let mut want_v = v_old.clone();
+        want_v.scale(1.0 / (c * c));
+        assert!(v_new.slice_cols(0, old_k).unwrap().max_abs_diff(&want_v).unwrap() < 1e-6);
+        // W^Q moments (unconstrained new cols) are zero too — Init::Zeros
+        let mq = m_after.get("layer_0.head_0.wq").unwrap();
+        assert_eq!(mq.slice_cols(old_k, new_k).unwrap().max_abs(), 0.0);
+    }
+
+    #[test]
+    fn sgd_expand_is_noop() {
+        let mut opt = Optimizer::Sgd { lr: 0.1 };
+        opt.expand(&[GrowthOp::Mlp { p: 32 }]).unwrap();
+        let params = ParamStore::zeros(&cfg());
+        opt.validate_against(&params).unwrap();
+    }
+
+    #[test]
+    fn clip_global_norm_behaviour() {
+        let mut grads = vec![Tensor::full(&[4], 3.0)]; // norm 6
+        let norm = clip_global_norm(&mut grads, 2.0);
+        assert!((norm - 6.0).abs() < 1e-5);
+        let new_sq: f32 = grads[0].data().iter().map(|x| x * x).sum();
+        assert!((new_sq.sqrt() - 2.0).abs() < 1e-5);
+        // under the threshold: untouched
+        let mut grads = vec![Tensor::full(&[4], 0.5)]; // norm 1
+        let norm = clip_global_norm(&mut grads, 2.0);
+        assert!((norm - 1.0).abs() < 1e-6);
+        assert_eq!(grads[0].data(), &[0.5; 4]);
+        // zero grads: no NaN
+        let mut grads = vec![Tensor::zeros(&[4])];
+        assert_eq!(clip_global_norm(&mut grads, 1.0), 0.0);
+        assert_eq!(grads[0].data(), &[0.0; 4]);
+    }
+}

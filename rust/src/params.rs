@@ -1,0 +1,432 @@
+//! Canonical-order parameter store and checkpoint codec (S4).
+//!
+//! The [`ParamStore`] is *the* source of truth for model state on the
+//! training path: PJRT artifacts receive its tensors positionally (the
+//! canonical order of `config::param_specs`), the optimizer walks it in
+//! lock-step, and the six expansion surgeries ([`crate::expand`]) consume
+//! one store and produce the next stage's store.
+//!
+//! Checkpoints use a purpose-built binary format (no serde available):
+//!
+//! ```text
+//! magic "TXPD" | u32 version | u64 header_len | header JSON | f32-LE data*
+//! ```
+//!
+//! The JSON header carries the `ModelConfig`, the param specs (re-validated
+//! on load), and caller metadata (step counts, RNG state, optimizer flags).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+
+use crate::config::{param_specs, ModelConfig, ParamSpec};
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::rng::Pcg32;
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"TXPD";
+const VERSION: u32 = 1;
+
+/// Named parameter tensors in canonical order.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    config: ModelConfig,
+    specs: Vec<ParamSpec>,
+    tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl ParamStore {
+    /// Zero-initialized store for `config`.
+    pub fn zeros(config: &ModelConfig) -> ParamStore {
+        let specs = param_specs(config);
+        let tensors = specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+        Self::assemble(*config, specs, tensors)
+    }
+
+    /// Random init matching `python/compile/model.py::init_params`:
+    /// norm gains at 1, biases at 0, everything else `scale * N(0,1)`.
+    pub fn init(config: &ModelConfig, rng: &mut Pcg32, scale: f32) -> ParamStore {
+        let specs = param_specs(config);
+        let tensors = specs
+            .iter()
+            .map(|s| {
+                if s.name.ends_with("g_mha") || s.name.ends_with("g_mlp") {
+                    Tensor::ones(&s.shape)
+                } else if s.name.ends_with("b1") || s.name.ends_with("b2") {
+                    Tensor::zeros(&s.shape)
+                } else {
+                    Tensor::randn(&s.shape, rng, scale)
+                }
+            })
+            .collect();
+        Self::assemble(*config, specs, tensors)
+    }
+
+    /// Build from an explicit name->tensor map (the expansion surgeries use
+    /// this); every canonical param must be present with the right shape.
+    pub fn from_map(config: &ModelConfig, mut map: HashMap<String, Tensor>) -> Result<ParamStore> {
+        let specs = param_specs(config);
+        let mut tensors = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            let t = map
+                .remove(&spec.name)
+                .ok_or_else(|| Error::Params(format!("missing param '{}'", spec.name)))?;
+            if t.shape() != spec.shape.as_slice() {
+                return Err(Error::Params(format!(
+                    "param '{}': expected shape {:?}, got {:?}",
+                    spec.name,
+                    spec.shape,
+                    t.shape()
+                )));
+            }
+            tensors.push(t);
+        }
+        if let Some(extra) = map.keys().next() {
+            return Err(Error::Params(format!("unexpected param '{extra}' for config {config:?}")));
+        }
+        Ok(Self::assemble(*config, specs, tensors))
+    }
+
+    fn assemble(config: ModelConfig, specs: Vec<ParamSpec>, tensors: Vec<Tensor>) -> ParamStore {
+        let index = specs.iter().enumerate().map(|(i, s)| (s.name.clone(), i)).collect();
+        ParamStore { config, specs, tensors, index }
+    }
+
+    // ---- accessors ---------------------------------------------------------
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    pub fn specs(&self) -> &[ParamSpec] {
+        &self.specs
+    }
+
+    /// Number of parameter *tensors*.
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total scalar count.
+    pub fn num_scalars(&self) -> usize {
+        self.tensors.iter().map(Tensor::numel).sum()
+    }
+
+    /// Lookup by canonical name.
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.index
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .ok_or_else(|| Error::Params(format!("no param named '{name}'")))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        match self.index.get(name) {
+            Some(&i) => Ok(&mut self.tensors[i]),
+            None => Err(Error::Params(format!("no param named '{name}'"))),
+        }
+    }
+
+    /// Canonical-order iteration (the PJRT input order).
+    pub fn iter(&self) -> impl Iterator<Item = (&ParamSpec, &Tensor)> {
+        self.specs.iter().zip(self.tensors.iter())
+    }
+
+    /// Consume the store into a name->tensor map (no tensor copies) — the
+    /// zero-copy entry to the expansion surgery (`expand::apply_ops_owned`).
+    pub fn into_map(self) -> HashMap<String, Tensor> {
+        self.specs.into_iter().map(|s| s.name).zip(self.tensors).collect()
+    }
+
+    /// Canonical-order tensor slice.
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    /// Mutable canonical-order tensors (optimizer update path).
+    pub fn tensors_mut(&mut self) -> &mut [Tensor] {
+        &mut self.tensors
+    }
+
+    /// Move a tensor in by name (shape-checked).
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        let i = *self
+            .index
+            .get(name)
+            .ok_or_else(|| Error::Params(format!("no param named '{name}'")))?;
+        if t.shape() != self.specs[i].shape.as_slice() {
+            return Err(Error::Params(format!(
+                "param '{name}': expected shape {:?}, got {:?}",
+                self.specs[i].shape,
+                t.shape()
+            )));
+        }
+        self.tensors[i] = t;
+        Ok(())
+    }
+
+    /// True if every scalar in every tensor is finite.
+    pub fn all_finite(&self) -> bool {
+        self.tensors.iter().all(Tensor::all_finite)
+    }
+
+    /// Largest |Δ| across all tensors against another store of identical
+    /// layout (used by checkpoint tests and surgery no-op checks).
+    pub fn max_abs_diff(&self, other: &ParamStore) -> Result<f32> {
+        if self.config != other.config {
+            return Err(Error::Params("max_abs_diff across different configs".into()));
+        }
+        let mut worst = 0.0f32;
+        for (a, b) in self.tensors.iter().zip(&other.tensors) {
+            worst = worst.max(a.max_abs_diff(b)?);
+        }
+        Ok(worst)
+    }
+
+    // ---- checkpoints ---------------------------------------------------------
+
+    /// Serialize to `path` with caller metadata (any JSON value).
+    pub fn save(&self, path: &str, meta: &Value) -> Result<()> {
+        let header = Value::obj(vec![
+            ("config", self.config.to_json()),
+            (
+                "params",
+                Value::Arr(
+                    self.specs
+                        .iter()
+                        .map(|s| {
+                            Value::obj(vec![
+                                ("name", Value::str(s.name.clone())),
+                                ("shape", Value::Arr(s.shape.iter().map(|&d| Value::num(d as f64)).collect())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("meta", meta.clone()),
+        ]);
+        let header_bytes = header.to_string().into_bytes();
+        let mut file = std::fs::File::create(path).map_err(|e| Error::io(path, e))?;
+        let mut buf = Vec::with_capacity(16 + header_bytes.len() + 4 * self.num_scalars());
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&(header_bytes.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&header_bytes);
+        for t in &self.tensors {
+            for x in t.data() {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        file.write_all(&buf).map_err(|e| Error::io(path, e))?;
+        Ok(())
+    }
+
+    /// Load a checkpoint; returns the store and the caller metadata.
+    pub fn load(path: &str) -> Result<(ParamStore, Value)> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .map_err(|e| Error::io(path, e))?
+            .read_to_end(&mut bytes)
+            .map_err(|e| Error::io(path, e))?;
+        if bytes.len() < 16 || &bytes[0..4] != MAGIC {
+            return Err(Error::Checkpoint(format!("{path}: not a texpand checkpoint")));
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(Error::Checkpoint(format!("{path}: unsupported version {version}")));
+        }
+        let header_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        if bytes.len() < 16 + header_len {
+            return Err(Error::Checkpoint(format!("{path}: truncated header")));
+        }
+        let header_text = std::str::from_utf8(&bytes[16..16 + header_len])
+            .map_err(|_| Error::Checkpoint(format!("{path}: header is not UTF-8")))?;
+        let header = Value::parse(header_text)?;
+        let config = ModelConfig::from_json(header.req("config")?)?;
+        let specs = param_specs(&config);
+
+        // Re-validate the stored spec list against our canonical layout:
+        // a checkpoint from a diverged build must not load silently.
+        let stored = header.req("params")?.as_arr()?;
+        if stored.len() != specs.len() {
+            return Err(Error::Checkpoint(format!(
+                "{path}: {} params stored, config implies {}",
+                stored.len(),
+                specs.len()
+            )));
+        }
+        for (s, spec) in stored.iter().zip(&specs) {
+            let name = s.req("name")?.as_str()?;
+            let shape: Vec<usize> =
+                s.req("shape")?.as_arr()?.iter().map(|d| d.as_usize()).collect::<Result<_>>()?;
+            if name != spec.name || shape != spec.shape {
+                return Err(Error::Checkpoint(format!(
+                    "{path}: param '{name}' {shape:?} does not match canonical '{}' {:?}",
+                    spec.name, spec.shape
+                )));
+            }
+        }
+
+        let total_scalars: usize = specs.iter().map(|s| s.shape.iter().product::<usize>()).sum();
+        let data = &bytes[16 + header_len..];
+        if data.len() != 4 * total_scalars {
+            return Err(Error::Checkpoint(format!(
+                "{path}: payload {} bytes, expected {}",
+                data.len(),
+                4 * total_scalars
+            )));
+        }
+        let mut tensors = Vec::with_capacity(specs.len());
+        let mut off = 0usize;
+        for spec in &specs {
+            let n: usize = spec.shape.iter().product();
+            let mut vals = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &data[off + 4 * i..off + 4 * i + 4];
+                vals.push(f32::from_le_bytes(b.try_into().unwrap()));
+            }
+            off += 4 * n;
+            tensors.push(Tensor::from_vec(&spec.shape, vals)?);
+        }
+        let meta = header.get("meta").cloned().unwrap_or(Value::Null);
+        Ok((Self::assemble(config, specs, tensors), meta))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { layers: 1, hidden: 8, heads: 2, k: 4, v: 4, mlp: 16, seq: 8, vocab: 16 }
+    }
+
+    #[test]
+    fn zeros_and_init_shapes() {
+        let s = ParamStore::zeros(&cfg());
+        assert_eq!(s.len(), param_specs(&cfg()).len());
+        assert_eq!(s.num_scalars(), cfg().num_params());
+        let mut rng = Pcg32::seeded(0);
+        let s = ParamStore::init(&cfg(), &mut rng, 0.02);
+        assert_eq!(s.num_scalars(), cfg().num_params());
+    }
+
+    #[test]
+    fn init_follows_python_conventions() {
+        let mut rng = Pcg32::seeded(1);
+        let s = ParamStore::init(&cfg(), &mut rng, 0.02);
+        assert_eq!(s.get("layer_0.g_mha").unwrap().data(), &[1.0; 8]);
+        assert_eq!(s.get("layer_0.b1").unwrap().data(), &[0.0; 16]);
+        assert!(s.get("embed").unwrap().max_abs() > 0.0);
+        assert!(s.get("embed").unwrap().max_abs() < 0.2);
+    }
+
+    #[test]
+    fn get_set_roundtrip_and_errors() {
+        let mut s = ParamStore::zeros(&cfg());
+        assert!(s.get("nope").is_err());
+        assert!(s.get_mut("nope").is_err());
+        let t = Tensor::ones(&[8, 4]);
+        s.set("layer_0.head_0.wq", t.clone()).unwrap();
+        assert_eq!(s.get("layer_0.head_0.wq").unwrap(), &t);
+        assert!(s.set("layer_0.head_0.wq", Tensor::ones(&[4, 8])).is_err());
+        assert!(s.set("nope", Tensor::ones(&[1])).is_err());
+    }
+
+    #[test]
+    fn from_map_validates() {
+        let full: HashMap<String, Tensor> =
+            ParamStore::zeros(&cfg()).iter().map(|(s, t)| (s.name.clone(), t.clone())).collect();
+        assert!(ParamStore::from_map(&cfg(), full.clone()).is_ok());
+
+        let mut missing = full.clone();
+        missing.remove("pos");
+        assert!(ParamStore::from_map(&cfg(), missing).is_err());
+
+        let mut extra = full.clone();
+        extra.insert("bogus".into(), Tensor::ones(&[1]));
+        assert!(ParamStore::from_map(&cfg(), extra).is_err());
+
+        let mut wrong = full;
+        wrong.insert("pos".into(), Tensor::ones(&[1, 1]));
+        assert!(ParamStore::from_map(&cfg(), wrong).is_err());
+    }
+
+    #[test]
+    fn iteration_is_canonical_order() {
+        let s = ParamStore::zeros(&cfg());
+        let names: Vec<&str> = s.iter().map(|(spec, _)| spec.name.as_str()).collect();
+        let want: Vec<String> = param_specs(&cfg()).into_iter().map(|s| s.name).collect();
+        assert_eq!(names, want.iter().map(String::as_str).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn finiteness_and_diff() {
+        let mut rng = Pcg32::seeded(2);
+        let a = ParamStore::init(&cfg(), &mut rng, 0.1);
+        let mut b = a.clone();
+        assert!(a.all_finite());
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 0.0);
+        b.get_mut("w_out").unwrap().data_mut()[0] += 0.5;
+        assert!((a.max_abs_diff(&b).unwrap() - 0.5).abs() < 1e-6);
+        b.get_mut("w_out").unwrap().data_mut()[1] = f32::NAN;
+        assert!(!b.all_finite());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("texpand-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.txpd");
+        let path = path.to_str().unwrap();
+
+        let mut rng = Pcg32::seeded(3);
+        let orig = ParamStore::init(&cfg(), &mut rng, 0.05);
+        let meta = Value::parse(r#"{"step": 42, "stage": "stage1"}"#).unwrap();
+        orig.save(path, &meta).unwrap();
+        let (loaded, got_meta) = ParamStore::load(path).unwrap();
+        assert_eq!(loaded.config(), orig.config());
+        assert_eq!(orig.max_abs_diff(&loaded).unwrap(), 0.0);
+        assert_eq!(got_meta.req("step").unwrap().as_i64().unwrap(), 42);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_rejects_corruption() {
+        let dir = std::env::temp_dir().join(format!("texpand-test-corrupt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.txpd");
+        let spath = path.to_str().unwrap();
+
+        // not a checkpoint at all
+        std::fs::write(&path, b"hello world").unwrap();
+        assert!(ParamStore::load(spath).is_err());
+
+        // valid checkpoint, truncated payload
+        let mut rng = Pcg32::seeded(4);
+        let s = ParamStore::init(&cfg(), &mut rng, 0.05);
+        s.save(spath, &Value::Null).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
+        let err = ParamStore::load(spath).unwrap_err().to_string();
+        assert!(err.contains("payload"), "{err}");
+
+        // bad magic
+        let mut broken = bytes.clone();
+        broken[0] = b'X';
+        std::fs::write(&path, &broken).unwrap();
+        assert!(ParamStore::load(spath).is_err());
+
+        // bad version
+        let mut broken = bytes;
+        broken[4] = 99;
+        std::fs::write(&path, &broken).unwrap();
+        assert!(ParamStore::load(spath).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,240 @@
+//! Deterministic random number generation (PCG32 + Box–Muller normals).
+//!
+//! One small generator shared by parameter init, synthetic-data synthesis,
+//! and the property-testing harness, so that *every* stochastic component
+//! of the framework is reproducible from a single `u64` seed. (The offline
+//! crate set has no `rand`; `rand_core` alone ships no generator.)
+
+/// PCG32 (O'Neill 2014): 64-bit state, 64-bit stream, 32-bit output.
+///
+/// Statistically solid for simulation workloads, 16 bytes of state, and
+/// trivially portable — the Rust and (hypothetical) Python sides would
+/// produce identical streams from identical seeds.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+    /// Cached second normal from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1, spare_normal: None };
+        rng.state = rng.inc.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience: stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive an independent child generator (for per-component seeding).
+    pub fn fork(&mut self, salt: u64) -> Pcg32 {
+        let seed = ((self.next_u32() as u64) << 32) | self.next_u32() as u64;
+        Pcg32::new(seed ^ salt.wrapping_mul(0x9E3779B97F4A7C15), salt)
+    }
+
+    /// Next raw 32-bit output.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 32 bits of resolution.
+    pub fn uniform(&mut self) -> f64 {
+        self.next_u32() as f64 / (u32::MAX as f64 + 1.0)
+    }
+
+    /// Uniform `usize` in `[0, bound)` (Lemire-style rejection-free modulo
+    /// is overkill at our bounds; plain modulo bias is < 2^-32 * bound).
+    pub fn below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "below(0)");
+        (self.next_u64() % bound as u64) as usize
+    }
+
+    /// Uniform integer in the inclusive range `[lo, hi]`.
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi, "range({lo}, {hi})");
+        lo + (self.next_u64() % ((hi - lo + 1) as u64)) as i64
+    }
+
+    /// Standard normal via Box–Muller (caches the paired sample).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // u1 in (0,1] to keep ln() finite.
+        let u1 = 1.0 - self.uniform();
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal as f32 with the given standard deviation.
+    pub fn normal_f32(&mut self, std: f32) -> f32 {
+        (self.normal() as f32) * std
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        // 24 high bits -> exactly representable in f32
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Fill a slice with `std * N(0,1)` samples.
+    ///
+    /// Hot path for parameter init and expansion surgery (tens of millions
+    /// of samples at large stages), so this uses the Marsaglia *polar*
+    /// method in f32 — exact normals like Box–Muller, but transcendental
+    /// cost is one `ln` + one `sqrt` per *pair* and no sin/cos. Measured
+    /// ~6x faster than the scalar f64 Box–Muller path (EXPERIMENTS §Perf).
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        let mut i = 0;
+        while i + 1 < out.len() {
+            let (a, b) = self.polar_pair();
+            out[i] = a * std;
+            out[i + 1] = b * std;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.polar_pair().0 * std;
+        }
+    }
+
+    /// One pair of independent standard normals (Marsaglia polar method).
+    #[inline]
+    fn polar_pair(&mut self) -> (f32, f32) {
+        loop {
+            let u = 2.0 * self.uniform_f32() - 1.0;
+            let v = 2.0 * self.uniform_f32() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                return (u * f, v * f);
+            }
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weighted() needs positive mass");
+        let mut t = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a: Vec<u32> = (0..8).map({ let mut r = Pcg32::seeded(42); move |_| r.next_u32() }).collect();
+        let b: Vec<u32> = (0..8).map({ let mut r = Pcg32::seeded(42); move |_| r.next_u32() }).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg32::seeded(1);
+        let mut b = Pcg32::seeded(2);
+        assert_ne!((0..4).map(|_| a.next_u32()).collect::<Vec<_>>(), (0..4).map(|_| b.next_u32()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg32::new(1, 0);
+        let mut b = Pcg32::new(1, 1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn fork_decorrelates() {
+        let mut root = Pcg32::seeded(7);
+        let mut c1 = root.fork(1);
+        let mut c2 = root.fork(2);
+        assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Pcg32::seeded(3);
+        for _ in 0..1000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = Pcg32::seeded(4);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn range_inclusive() {
+        let mut r = Pcg32::seeded(5);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..2000 {
+            let x = r.range(-2, 2);
+            assert!((-2..=2).contains(&x));
+            saw_lo |= x == -2;
+            saw_hi |= x == 2;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::seeded(6);
+        let n = 20000;
+        let samples: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn weighted_prefers_heavy_bins() {
+        let mut r = Pcg32::seeded(8);
+        let mut counts = [0usize; 3];
+        for _ in 0..3000 {
+            counts[r.weighted(&[1.0, 1.0, 8.0])] += 1;
+        }
+        assert!(counts[2] > counts[0] + counts[1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn below_zero_panics() {
+        Pcg32::seeded(0).below(0);
+    }
+}

@@ -1,0 +1,336 @@
+//! PJRT runtime (S7): artifact manifest, executable cache, marshalling.
+//!
+//! The AOT boundary: `python/compile/aot.py` wrote `artifacts/manifest.json`
+//! plus per-stage HLO **text** files (the interchange format — jax ≥ 0.5
+//! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids). This module:
+//!
+//! 1. parses the manifest ([`Manifest`]) and re-validates every stage's
+//!    declared parameter list against our own canonical `param_specs` —
+//!    build drift between the Python and Rust sides fails loudly at load;
+//! 2. compiles each stage's `fwd` / `step` computation once on a shared
+//!    [`xla::PjRtClient`] ([`StageExec`]); compilation is cached per path;
+//! 3. marshals [`Tensor`]s / token batches to `xla::Literal`s and back.
+//!
+//! Python never runs here: this is the entire training hot path.
+
+use std::collections::HashMap;
+
+use crate::config::{param_specs, ModelConfig};
+use crate::data::Batch;
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::params::ParamStore;
+use crate::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// Manifest
+// ---------------------------------------------------------------------------
+
+/// One stage entry from `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ManifestStage {
+    pub name: String,
+    pub steps: usize,
+    pub config: ModelConfig,
+    pub num_params: usize,
+    pub fwd_file: String,
+    pub step_file: String,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub schedule: String,
+    pub batch: usize,
+    pub kernels: String,
+    pub stages: Vec<ManifestStage>,
+    /// Directory the manifest was loaded from (artifact paths are relative).
+    pub dir: String,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/<name>` (default name `manifest.json`).
+    pub fn load(dir: &str, name: &str) -> Result<Manifest> {
+        let path = format!("{dir}/{name}");
+        let v = Value::load(&path)?;
+        let version = v.req("version")?.as_i64()?;
+        if version != 1 {
+            return Err(Error::Manifest(format!("{path}: unsupported manifest version {version}")));
+        }
+        let mut stages = Vec::new();
+        for sj in v.req("stages")?.as_arr()? {
+            let config = ModelConfig::from_json(sj.req("config")?)?;
+            let stage = ManifestStage {
+                name: sj.req("name")?.as_str()?.to_string(),
+                steps: sj.req("steps")?.as_usize()?,
+                config,
+                num_params: sj.req("num_params")?.as_usize()?,
+                fwd_file: sj.req("fwd")?.as_str()?.to_string(),
+                step_file: sj.req("step")?.as_str()?.to_string(),
+            };
+            // Cross-language contract check: the Python-side param list must
+            // equal our canonical order exactly (DESIGN.md §7).
+            let ours = param_specs(&config);
+            let theirs = sj.req("params")?.as_arr()?;
+            if theirs.len() != ours.len() {
+                return Err(Error::Manifest(format!(
+                    "{}: {} params in manifest, {} canonical",
+                    stage.name,
+                    theirs.len(),
+                    ours.len()
+                )));
+            }
+            for (pj, spec) in theirs.iter().zip(&ours) {
+                let name = pj.req("name")?.as_str()?;
+                let shape: Vec<usize> =
+                    pj.req("shape")?.as_arr()?.iter().map(|d| d.as_usize()).collect::<Result<_>>()?;
+                if name != spec.name || shape != spec.shape {
+                    return Err(Error::Manifest(format!(
+                        "{}: param '{name}' {shape:?} != canonical '{}' {:?}",
+                        stage.name, spec.name, spec.shape
+                    )));
+                }
+            }
+            if stage.num_params != config.num_params() {
+                return Err(Error::Manifest(format!(
+                    "{}: num_params {} != computed {}",
+                    stage.name,
+                    stage.num_params,
+                    config.num_params()
+                )));
+            }
+            stages.push(stage);
+        }
+        if stages.is_empty() {
+            return Err(Error::Manifest(format!("{path}: no stages")));
+        }
+        Ok(Manifest {
+            schedule: v.req("schedule")?.as_str()?.to_string(),
+            batch: v.req("batch")?.as_usize()?,
+            kernels: v.req("kernels")?.as_str()?.to_string(),
+            stages,
+            dir: dir.to_string(),
+        })
+    }
+
+    /// Find a stage by name.
+    pub fn stage(&self, name: &str) -> Result<&ManifestStage> {
+        self.stages
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| Error::Manifest(format!("no stage named '{name}'")))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Marshalling
+// ---------------------------------------------------------------------------
+
+/// Host tensor → f32 literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let bytes: Vec<u8> = t.data().iter().flat_map(|x| x.to_le_bytes()).collect();
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, t.shape(), &bytes)?)
+}
+
+/// Token matrix → i32 literal of shape `[batch, seq]`.
+pub fn tokens_to_literal(rows: &[Vec<u32>]) -> Result<xla::Literal> {
+    if rows.is_empty() {
+        return Err(Error::Runtime("tokens_to_literal: empty batch".into()));
+    }
+    let seq = rows[0].len();
+    let mut bytes = Vec::with_capacity(rows.len() * seq * 4);
+    for row in rows {
+        if row.len() != seq {
+            return Err(Error::Runtime("tokens_to_literal: ragged batch".into()));
+        }
+        for &t in row {
+            bytes.extend_from_slice(&(t as i32).to_le_bytes());
+        }
+    }
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[rows.len(), seq],
+        &bytes,
+    )?)
+}
+
+/// f32 literal → host tensor with the given shape (element count checked).
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let vals: Vec<f32> = lit.to_vec()?;
+    Tensor::from_vec(shape, vals)
+}
+
+// ---------------------------------------------------------------------------
+// Stage executables
+// ---------------------------------------------------------------------------
+
+/// Handle for one architecture stage's compiled executables. The actual
+/// `PjRtLoadedExecutable`s live in the [`Runtime`] cache (they are neither
+/// `Clone` nor `Send` in the `xla` crate), so a handle is cheap metadata and
+/// all execution goes through `Runtime::{forward, step}`.
+#[derive(Clone, Debug)]
+pub struct StageExec {
+    pub meta: ManifestStage,
+    pub batch: usize,
+    fwd_key: String,
+    step_key: String,
+}
+
+/// Shared PJRT client + per-file compilation cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()?, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn compile_file(&mut self, dir: &str, file: &str) -> Result<String> {
+        let path = format!("{dir}/{file}");
+        if !self.cache.contains_key(&path) {
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| Error::Runtime(format!("loading {path}: {e}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compiling {path}: {e}")))?;
+            self.cache.insert(path.clone(), exe);
+        }
+        Ok(path)
+    }
+
+    /// Compile (or fetch cached) both executables for a stage.
+    pub fn load_stage(&mut self, manifest: &Manifest, stage_name: &str) -> Result<StageExec> {
+        let meta = manifest.stage(stage_name)?.clone();
+        let fwd_key = self.compile_file(&manifest.dir, &meta.fwd_file)?;
+        let step_key = self.compile_file(&manifest.dir, &meta.step_file)?;
+        Ok(StageExec { meta, batch: manifest.batch, fwd_key, step_key })
+    }
+
+    fn exec(&self, key: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.cache
+            .get(key)
+            .ok_or_else(|| Error::Runtime(format!("executable '{key}' not in cache (stale handle?)")))
+    }
+
+    fn param_literals(stage: &StageExec, params: &ParamStore) -> Result<Vec<xla::Literal>> {
+        if params.config() != &stage.meta.config {
+            return Err(Error::Runtime(format!(
+                "params for {:?} fed to stage '{}' expecting {:?}",
+                params.config(),
+                stage.meta.name,
+                stage.meta.config
+            )));
+        }
+        params.tensors().iter().map(tensor_to_literal).collect()
+    }
+
+    fn check_batch(stage: &StageExec, rows: &[Vec<u32>]) -> Result<()> {
+        if rows.len() != stage.batch {
+            return Err(Error::Runtime(format!(
+                "batch {} rows, artifact compiled for {}",
+                rows.len(),
+                stage.batch
+            )));
+        }
+        for row in rows {
+            if row.len() != stage.meta.config.seq {
+                return Err(Error::Runtime(format!(
+                    "sequence of {} tokens, artifact compiled for seq {}",
+                    row.len(),
+                    stage.meta.config.seq
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Forward pass: logits as one `[seq, vocab]` tensor per batch row.
+    pub fn forward(&self, stage: &StageExec, params: &ParamStore, tokens: &[Vec<u32>]) -> Result<Vec<Tensor>> {
+        Self::check_batch(stage, tokens)?;
+        let mut inputs = Self::param_literals(stage, params)?;
+        inputs.push(tokens_to_literal(tokens)?);
+        let result = self.exec(&stage.fwd_key)?.execute::<xla::Literal>(&inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let logits_lit = tuple.to_tuple1()?;
+        let cfg = &stage.meta.config;
+        let flat: Vec<f32> = logits_lit.to_vec()?;
+        let per_row = cfg.seq * cfg.vocab;
+        if flat.len() != stage.batch * per_row {
+            return Err(Error::Runtime(format!(
+                "forward returned {} values, expected {}",
+                flat.len(),
+                stage.batch * per_row
+            )));
+        }
+        (0..stage.batch)
+            .map(|b| Tensor::from_vec(&[cfg.seq, cfg.vocab], flat[b * per_row..(b + 1) * per_row].to_vec()))
+            .collect()
+    }
+
+    /// Train step: returns `(loss, canonical-order gradients)`.
+    pub fn step(&self, stage: &StageExec, params: &ParamStore, batch: &Batch) -> Result<(f32, Vec<Tensor>)> {
+        Self::check_batch(stage, &batch.tokens)?;
+        Self::check_batch(stage, &batch.targets)?;
+        let mut inputs = Self::param_literals(stage, params)?;
+        inputs.push(tokens_to_literal(&batch.tokens)?);
+        inputs.push(tokens_to_literal(&batch.targets)?);
+        let result = self.exec(&stage.step_key)?.execute::<xla::Literal>(&inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != 1 + params.len() {
+            return Err(Error::Runtime(format!(
+                "step returned {} outputs, expected {}",
+                parts.len(),
+                1 + params.len()
+            )));
+        }
+        let loss: f32 = parts[0].to_vec::<f32>()?[0];
+        let grads: Vec<Tensor> = parts[1..]
+            .iter()
+            .zip(params.specs())
+            .map(|(lit, spec)| literal_to_tensor(lit, &spec.shape))
+            .collect::<Result<_>>()?;
+        Ok((loss, grads))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit, &[2, 3]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn tokens_literal_shape() {
+        let lit = tokens_to_literal(&[vec![1, 2, 3], vec![4, 5, 6]]).unwrap();
+        let vals: Vec<i32> = lit.to_vec().unwrap();
+        assert_eq!(vals, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn tokens_literal_rejects_ragged_and_empty() {
+        assert!(tokens_to_literal(&[]).is_err());
+        assert!(tokens_to_literal(&[vec![1, 2], vec![3]]).is_err());
+    }
+}

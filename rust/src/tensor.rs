@@ -1,0 +1,518 @@
+//! Host `f32` tensor library (substrate S2).
+//!
+//! Everything the framework does to parameters on the Rust side — the six
+//! expansion surgeries, the pure-Rust reference forward pass, optimizer
+//! updates, checkpoint I/O — runs on these row-major host tensors. This is
+//! deliberately *not* a general ndarray: rank ≤ 2 covers every parameter in
+//! the canonical layout (DESIGN.md §7) and keeps the surgery code legible.
+//!
+//! The matmul uses an ikj loop order (stream over the output row while
+//! broadcasting one `a[i][k]`), which is the cache-friendly order for
+//! row-major data and, at the reference model's sizes, within ~2x of what
+//! a blocked kernel would get — the PJRT path owns real performance.
+
+use crate::error::{Error, Result};
+use crate::rng::Pcg32;
+
+/// A dense row-major `f32` tensor of rank 1 or 2.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    // ---- constructors ----------------------------------------------------
+
+    /// All-zeros tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(shape: &[usize], value: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![value; shape.iter().product()] }
+    }
+
+    /// All-ones tensor.
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor::full(shape, 1.0)
+    }
+
+    /// Build from raw data; validates the element count.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let expect: usize = shape.iter().product();
+        if data.len() != expect {
+            return Err(Error::Shape(format!(
+                "from_vec: shape {shape:?} needs {expect} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    /// `std * N(0,1)` entries from the given generator.
+    pub fn randn(shape: &[usize], rng: &mut Pcg32, std: f32) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    /// Identity-like 2D tensor (ones on the main diagonal).
+    pub fn eye(rows: usize, cols: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[rows, cols]);
+        for i in 0..rows.min(cols) {
+            t.data[i * cols + i] = 1.0;
+        }
+        t
+    }
+
+    // ---- accessors ---------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Rows of a 2D tensor (or length of a 1D tensor).
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    /// Columns of a 2D tensor.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.rank(), 2, "cols() on rank-{} tensor", self.rank());
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Borrow row `i` of a 2D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    // ---- elementwise -------------------------------------------------------
+
+    /// `self += other` (same shape).
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
+        self.check_same_shape(other, "add_assign")?;
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        Ok(())
+    }
+
+    /// `self -= other` (same shape).
+    pub fn sub_assign(&mut self, other: &Tensor) -> Result<()> {
+        self.check_same_shape(other, "sub_assign")?;
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+        Ok(())
+    }
+
+    /// Multiply every element by `s`.
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Apply `f` elementwise in place.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for a in &mut self.data {
+            *a = f(*a);
+        }
+    }
+
+    /// Add a 1D bias (len == cols) to every row of a 2D tensor.
+    pub fn add_row_broadcast(&mut self, bias: &Tensor) -> Result<()> {
+        if bias.rank() != 1 || self.rank() != 2 || bias.shape[0] != self.shape[1] {
+            return Err(Error::Shape(format!(
+                "add_row_broadcast: {:?} vs bias {:?}",
+                self.shape, bias.shape
+            )));
+        }
+        let c = self.shape[1];
+        for i in 0..self.shape[0] {
+            for j in 0..c {
+                self.data[i * c + j] += bias.data[j];
+            }
+        }
+        Ok(())
+    }
+
+    // ---- linear algebra ----------------------------------------------------
+
+    /// Matrix product `[m,k] x [k,n] -> [m,n]` (ikj order).
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || other.rank() != 2 || self.shape[1] != other.shape[0] {
+            return Err(Error::Shape(format!("matmul: {:?} x {:?}", self.shape, other.shape)));
+        }
+        let (m, k, n) = (self.shape[0], self.shape[1], other.shape[1]);
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue; // expansion surgery produces many exact zeros
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// `self x other^T`: `[m,k] x [n,k] -> [m,n]` without materializing the
+    /// transpose (attention scores `Q K^T`).
+    pub fn matmul_bt(&self, other: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || other.rank() != 2 || self.shape[1] != other.shape[1] {
+            return Err(Error::Shape(format!("matmul_bt: {:?} x {:?}^T", self.shape, other.shape)));
+        }
+        let (m, k, n) = (self.shape[0], self.shape[1], other.shape[0]);
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
+                }
+                out.data[i * n + j] = acc;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Transposed copy of a 2D tensor.
+    pub fn transpose(&self) -> Result<Tensor> {
+        if self.rank() != 2 {
+            return Err(Error::Shape(format!("transpose: rank {} tensor", self.rank())));
+        }
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Ok(out)
+    }
+
+    // ---- concatenation / slicing (the expansion primitives) ----------------
+
+    /// `[m, a] ++ [m, b] -> [m, a+b]` — column append (e.g. Eq. 6).
+    pub fn concat_cols(&self, other: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || other.rank() != 2 || self.shape[0] != other.shape[0] {
+            return Err(Error::Shape(format!("concat_cols: {:?} ++ {:?}", self.shape, other.shape)));
+        }
+        let (m, a, b) = (self.shape[0], self.shape[1], other.shape[1]);
+        let mut out = Tensor::zeros(&[m, a + b]);
+        for i in 0..m {
+            out.data[i * (a + b)..i * (a + b) + a].copy_from_slice(self.row(i));
+            out.data[i * (a + b) + a..(i + 1) * (a + b)].copy_from_slice(other.row(i));
+        }
+        Ok(out)
+    }
+
+    /// `[a, n] ++ [b, n] -> [a+b, n]` — row append (e.g. Eq. 8).
+    pub fn concat_rows(&self, other: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || other.rank() != 2 || self.shape[1] != other.shape[1] {
+            return Err(Error::Shape(format!("concat_rows: {:?} ++ {:?}", self.shape, other.shape)));
+        }
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Ok(Tensor { shape: vec![self.shape[0] + other.shape[0], self.shape[1]], data })
+    }
+
+    /// 1D concatenation (e.g. Eq. 7 bias growth).
+    pub fn concat_1d(&self, other: &Tensor) -> Result<Tensor> {
+        if self.rank() != 1 || other.rank() != 1 {
+            return Err(Error::Shape(format!("concat_1d: {:?} ++ {:?}", self.shape, other.shape)));
+        }
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Ok(Tensor { shape: vec![self.shape[0] + other.shape[0]], data })
+    }
+
+    /// Copy of rows `[lo, hi)` of a 2D tensor (W^O split extraction, Eq. 15).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Result<Tensor> {
+        if self.rank() != 2 || hi > self.shape[0] || lo > hi {
+            return Err(Error::Shape(format!("slice_rows[{lo}..{hi}] of {:?}", self.shape)));
+        }
+        let n = self.shape[1];
+        Ok(Tensor { shape: vec![hi - lo, n], data: self.data[lo * n..hi * n].to_vec() })
+    }
+
+    /// Copy of columns `[lo, hi)` of a 2D tensor.
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Result<Tensor> {
+        if self.rank() != 2 || hi > self.shape[1] || lo > hi {
+            return Err(Error::Shape(format!("slice_cols[{lo}..{hi}] of {:?}", self.shape)));
+        }
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let w = hi - lo;
+        let mut out = Tensor::zeros(&[m, w]);
+        for i in 0..m {
+            out.data[i * w..(i + 1) * w].copy_from_slice(&self.data[i * n + lo..i * n + hi]);
+        }
+        Ok(out)
+    }
+
+    // ---- comparison ---------------------------------------------------------
+
+    /// `max_i |self_i - other_i|`; error on shape mismatch.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        self.check_same_shape(other, "max_abs_diff")?;
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+
+    /// Largest absolute entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().map(|a| a.abs()).fold(0.0, f32::max)
+    }
+
+    /// True if every element is finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|a| a.is_finite())
+    }
+
+    fn check_same_shape(&self, other: &Tensor, op: &str) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!("{op}: {:?} vs {:?}", self.shape, other.shape)));
+        }
+        Ok(())
+    }
+}
+
+/// Numerically-stable softmax over the last axis of a 2D tensor, in place.
+pub fn softmax_rows(t: &mut Tensor) {
+    let (m, n) = (t.shape()[0], t.shape()[1]);
+    for i in 0..m {
+        let row = t.row_mut(i);
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        let _ = m; // silence clippy on small fn
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+        let _ = n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(rows: usize, cols: usize, data: &[f32]) -> Tensor {
+        Tensor::from_vec(&[rows, cols], data.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn constructors() {
+        assert_eq!(Tensor::zeros(&[2, 3]).numel(), 6);
+        assert_eq!(Tensor::ones(&[4]).data(), &[1.0; 4]);
+        assert_eq!(Tensor::full(&[2], 2.5).data(), &[2.5, 2.5]);
+        let e = Tensor::eye(2, 3);
+        assert_eq!(e.data(), &[1.0, 0.0, 0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 3]).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = Pcg32::seeded(1);
+        let t = Tensor::randn(&[100, 100], &mut rng, 0.5);
+        let mean: f32 = t.data().iter().sum::<f32>() / t.numel() as f32;
+        let var: f32 = t.data().iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / t.numel() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 0.25).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = t2(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = t2(2, 2, &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.matmul(&b).unwrap().data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = t2(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let out = a.matmul(&Tensor::eye(3, 3)).unwrap();
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    fn matmul_shape_errors() {
+        let a = t2(2, 3, &[0.0; 6]);
+        assert!(a.matmul(&t2(2, 3, &[0.0; 6])).is_err());
+        assert!(a.matmul(&Tensor::ones(&[3])).is_err());
+    }
+
+    #[test]
+    fn matmul_bt_matches_explicit_transpose() {
+        let mut rng = Pcg32::seeded(2);
+        let a = Tensor::randn(&[4, 6], &mut rng, 1.0);
+        let b = Tensor::randn(&[5, 6], &mut rng, 1.0);
+        let direct = a.matmul_bt(&b).unwrap();
+        let via_t = a.matmul(&b.transpose().unwrap()).unwrap();
+        assert!(direct.max_abs_diff(&via_t).unwrap() < 1e-6);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg32::seeded(3);
+        let a = Tensor::randn(&[3, 7], &mut rng, 1.0);
+        assert_eq!(a.transpose().unwrap().transpose().unwrap(), a);
+    }
+
+    #[test]
+    fn concat_cols_layout() {
+        let a = t2(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = t2(2, 1, &[9.0, 8.0]);
+        let c = a.concat_cols(&b).unwrap();
+        assert_eq!(c.shape(), &[2, 3]);
+        assert_eq!(c.data(), &[1.0, 2.0, 9.0, 3.0, 4.0, 8.0]);
+    }
+
+    #[test]
+    fn concat_rows_layout() {
+        let a = t2(1, 2, &[1.0, 2.0]);
+        let b = t2(2, 2, &[3.0, 4.0, 5.0, 6.0]);
+        let c = a.concat_rows(&b).unwrap();
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn concat_shape_errors() {
+        let a = t2(2, 2, &[0.0; 4]);
+        assert!(a.concat_cols(&t2(3, 1, &[0.0; 3])).is_err());
+        assert!(a.concat_rows(&t2(1, 3, &[0.0; 3])).is_err());
+        assert!(Tensor::ones(&[2]).concat_1d(&t2(1, 1, &[0.0])).is_err());
+    }
+
+    #[test]
+    fn slices_extract_expected_windows() {
+        let a = t2(3, 3, &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.slice_rows(1, 3).unwrap().data(), &[3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.slice_cols(0, 2).unwrap().data(), &[0.0, 1.0, 3.0, 4.0, 6.0, 7.0]);
+        assert!(a.slice_rows(2, 4).is_err());
+        assert!(a.slice_cols(2, 1).is_err());
+    }
+
+    #[test]
+    fn slice_concat_roundtrip() {
+        let mut rng = Pcg32::seeded(4);
+        let a = Tensor::randn(&[5, 6], &mut rng, 1.0);
+        let left = a.slice_cols(0, 2).unwrap();
+        let right = a.slice_cols(2, 6).unwrap();
+        assert_eq!(left.concat_cols(&right).unwrap(), a);
+        let top = a.slice_rows(0, 3).unwrap();
+        let bottom = a.slice_rows(3, 5).unwrap();
+        assert_eq!(top.concat_rows(&bottom).unwrap(), a);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let mut a = t2(1, 3, &[1.0, -2.0, 3.0]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[2.0, -4.0, 6.0]);
+        a.map_inplace(|x| x.max(0.0));
+        assert_eq!(a.data(), &[2.0, 0.0, 6.0]);
+        a.add_assign(&t2(1, 3, &[1.0, 1.0, 1.0])).unwrap();
+        assert_eq!(a.data(), &[3.0, 1.0, 7.0]);
+        a.sub_assign(&t2(1, 3, &[1.0, 1.0, 1.0])).unwrap();
+        assert_eq!(a.data(), &[2.0, 0.0, 6.0]);
+        assert!(a.add_assign(&Tensor::ones(&[3])).is_err());
+    }
+
+    #[test]
+    fn bias_broadcast() {
+        let mut a = t2(2, 2, &[0.0, 0.0, 1.0, 1.0]);
+        a.add_row_broadcast(&Tensor::from_vec(&[2], vec![10.0, 20.0]).unwrap()).unwrap();
+        assert_eq!(a.data(), &[10.0, 20.0, 11.0, 21.0]);
+        assert!(a.add_row_broadcast(&Tensor::ones(&[3])).is_err());
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut a = t2(2, 3, &[1.0, 2.0, 3.0, 1000.0, 1000.0, 1000.0]);
+        softmax_rows(&mut a);
+        for i in 0..2 {
+            let s: f32 = a.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        // large-logit row is stable and uniform
+        assert!((a.at(1, 0) - 1.0 / 3.0).abs() < 1e-6);
+        // softmax is monotone in its inputs
+        assert!(a.at(0, 2) > a.at(0, 1) && a.at(0, 1) > a.at(0, 0));
+    }
+
+    #[test]
+    fn diff_helpers() {
+        let a = t2(1, 2, &[1.0, 2.0]);
+        let b = t2(1, 2, &[1.5, 1.0]);
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 1.0);
+        assert_eq!(b.max_abs(), 1.5);
+        assert!(a.max_abs_diff(&Tensor::ones(&[2])).is_err());
+        let mut c = a.clone();
+        c.data_mut()[0] = f32::NAN;
+        assert!(!c.all_finite());
+        assert!(a.all_finite());
+    }
+}

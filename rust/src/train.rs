@@ -1,0 +1,149 @@
+//! Single-stage training loop (S10a).
+//!
+//! One stage = one architecture = one compiled `step` artifact. The loop is
+//! the L3 hot path: batch synthesis → literal marshalling → PJRT execute →
+//! gradient clip → optimizer update → metrics. Python is never involved.
+
+use crate::config::TrainConfig;
+use crate::data::Batcher;
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::metrics::{RunLogger, Timer};
+use crate::optim::{clip_global_norm, Optimizer};
+use crate::params::ParamStore;
+use crate::runtime::{Runtime, StageExec};
+
+/// Outcome of one stage's training.
+#[derive(Clone, Debug)]
+pub struct StageReport {
+    pub stage: String,
+    pub steps_run: usize,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    /// Mean loss over the last `min(10, steps)` steps (less noisy).
+    pub tail_mean_loss: f32,
+    pub tokens_per_sec: f64,
+    pub step_ms_mean: f64,
+}
+
+/// Mutable cross-stage training state threaded through the coordinator.
+pub struct TrainState {
+    pub global_step: usize,
+    pub tokens_seen: usize,
+}
+
+impl TrainState {
+    pub fn new() -> TrainState {
+        TrainState { global_step: 0, tokens_seen: 0 }
+    }
+}
+
+impl Default for TrainState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Train `steps` steps of one stage. Fails fast on non-finite loss (the
+/// preservation property makes boundary loss spikes a bug, not a hazard
+/// of the method).
+#[allow(clippy::too_many_arguments)]
+pub fn train_stage(
+    rt: &Runtime,
+    stage: &StageExec,
+    params: &mut ParamStore,
+    opt: &mut Optimizer,
+    batcher: &mut Batcher,
+    tcfg: &TrainConfig,
+    logger: &mut RunLogger,
+    state: &mut TrainState,
+    steps: usize,
+) -> Result<StageReport> {
+    if steps == 0 {
+        return Err(Error::Train(format!("stage '{}' scheduled for 0 steps", stage.meta.name)));
+    }
+    opt.validate_against(params)?;
+    let tokens_per_step = stage.batch * stage.meta.config.seq;
+    let timer = Timer::start();
+    let mut first_loss = f32::NAN;
+    let mut last_losses: Vec<f32> = Vec::new();
+    let mut step_ms_total = 0.0f64;
+
+    for local_step in 0..steps {
+        let batch = batcher.next();
+        let step_timer = Timer::start();
+        let (loss, mut grads) = rt.step(stage, params, &batch)?;
+        if !loss.is_finite() {
+            return Err(Error::Train(format!(
+                "non-finite loss {loss} at stage '{}' step {local_step}",
+                stage.meta.name
+            )));
+        }
+        let grad_norm = match tcfg.grad_clip {
+            Some(max) => clip_global_norm(&mut grads, max),
+            None => f32::NAN,
+        };
+        opt.step(params, &grads)?;
+        step_ms_total += step_timer.ms();
+
+        if local_step == 0 {
+            first_loss = loss;
+        }
+        last_losses.push(loss);
+        if last_losses.len() > 10 {
+            last_losses.remove(0);
+        }
+        state.global_step += 1;
+        state.tokens_seen += tokens_per_step;
+        logger.loss_row(state.global_step, &stage.meta.name, loss, state.tokens_seen);
+        if local_step % tcfg.log_every == 0 || local_step + 1 == steps {
+            logger.event(
+                "step",
+                vec![
+                    ("stage", Value::str(stage.meta.name.clone())),
+                    ("global_step", Value::num(state.global_step as f64)),
+                    ("local_step", Value::num(local_step as f64)),
+                    ("loss", Value::num(f64::from(loss))),
+                    ("grad_norm", Value::num(f64::from(grad_norm))),
+                ],
+            );
+        }
+    }
+
+    let final_loss = *last_losses.last().unwrap();
+    let tail_mean_loss = last_losses.iter().sum::<f32>() / last_losses.len() as f32;
+    let report = StageReport {
+        stage: stage.meta.name.clone(),
+        steps_run: steps,
+        first_loss,
+        final_loss,
+        tail_mean_loss,
+        tokens_per_sec: (steps * tokens_per_step) as f64 / timer.secs(),
+        step_ms_mean: step_ms_total / steps as f64,
+    };
+    logger.event(
+        "stage_done",
+        vec![
+            ("stage", Value::str(report.stage.clone())),
+            ("steps", Value::num(report.steps_run as f64)),
+            ("first_loss", Value::num(f64::from(report.first_loss))),
+            ("final_loss", Value::num(f64::from(report.final_loss))),
+            ("tail_mean_loss", Value::num(f64::from(report.tail_mean_loss))),
+            ("tokens_per_sec", Value::num(report.tokens_per_sec)),
+            ("step_ms_mean", Value::num(report.step_ms_mean)),
+            ("params", Value::num(params.num_scalars() as f64)),
+        ],
+    );
+    Ok(report)
+}
+
+/// Evaluate mean loss on a fixed probe batch via the PJRT fwd path.
+pub fn eval_loss(
+    rt: &Runtime,
+    stage: &StageExec,
+    params: &ParamStore,
+    batch: &crate::data::Batch,
+) -> Result<f32> {
+    let logits = rt.forward(stage, params, &batch.tokens)?;
+    crate::model::cross_entropy(&logits, &batch.targets)
+}

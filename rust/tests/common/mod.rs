@@ -1,0 +1,32 @@
+//! Shared helpers for integration tests (require `make artifacts` first).
+
+use texpand::config::GrowthSchedule;
+use texpand::runtime::Manifest;
+
+pub const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+pub const SCHEDULE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/growth_default.json");
+
+/// Load the shipped manifest, with a clear failure if artifacts are absent.
+pub fn manifest() -> Manifest {
+    Manifest::load(ARTIFACTS, "manifest.json").unwrap_or_else(|e| {
+        panic!("integration tests need AOT artifacts — run `make artifacts` first: {e}")
+    })
+}
+
+pub fn schedule() -> GrowthSchedule {
+    GrowthSchedule::load(SCHEDULE).expect("shipped schedule must parse")
+}
+
+/// Random token batch for a stage config.
+pub fn random_batch(
+    cfg: &texpand::config::ModelConfig,
+    batch: usize,
+    seed: u64,
+) -> texpand::data::Batch {
+    let mut rng = texpand::rng::Pcg32::seeded(seed);
+    let row = |rng: &mut texpand::rng::Pcg32| (0..cfg.seq).map(|_| rng.below(cfg.vocab) as u32).collect();
+    texpand::data::Batch {
+        tokens: (0..batch).map(|_| row(&mut rng)).collect(),
+        targets: (0..batch).map(|_| row(&mut rng)).collect(),
+    }
+}

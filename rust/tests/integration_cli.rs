@@ -1,0 +1,82 @@
+//! Integration: the `texpand` binary end to end (spawned as a subprocess).
+
+mod common;
+
+use std::process::Command;
+
+fn texpand(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_texpand"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn texpand")
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = texpand(&[]);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+}
+
+#[test]
+fn unknown_subcommand_fails_with_usage() {
+    let out = texpand(&["frobnicate"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown subcommand"), "{err}");
+    assert!(err.contains("USAGE"), "{err}");
+}
+
+#[test]
+fn unknown_flag_rejected() {
+    let out = texpand(&["info", "--bogus-flag", "1"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--bogus-flag"));
+}
+
+#[test]
+fn info_prints_manifest_summary() {
+    let out = texpand(&["info"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("stage0"), "{text}");
+    assert!(text.contains("schedule"), "{text}");
+}
+
+#[test]
+fn train_smoke_then_inspect_and_generate() {
+    let runs = std::env::temp_dir().join(format!("texpand-cli-{}", std::process::id()));
+    let runs = runs.to_str().unwrap();
+    let out = texpand(&[
+        "train",
+        "--run-name", "cli-smoke",
+        "--runs", runs,
+        "--steps-scale", "0.02",
+        "--log-every", "100",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("run summary"), "{text}");
+    assert!(text.contains("final eval loss"), "{text}");
+
+    let ckpt = format!("{runs}/cli-smoke/stage3.txpd");
+    let out = texpand(&["inspect", "--ckpt", &ckpt]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("w_out"), "{text}");
+    assert!(text.contains("401536") || text.contains("401,536"), "{text}");
+
+    let out = texpand(&["generate", "--ckpt", &ckpt, "--tokens", "20", "--seed", "7"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("stage3"), "{text}");
+    std::fs::remove_dir_all(runs).ok();
+}
+
+#[test]
+fn inspect_missing_checkpoint_fails_cleanly() {
+    let out = texpand(&["inspect", "--ckpt", "/nonexistent.txpd"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("error"));
+}

@@ -1,0 +1,170 @@
+//! Integration: three-way agreement — JAX (via the AOT artifacts), the
+//! pure-Rust reference model, and the expansion surgery on both sides.
+//!
+//! The artifacts *are* the lowered JAX model, so executing them against the
+//! Rust reference forward on identical parameters is the cross-language
+//! equivalence check (DESIGN.md E1's "three harnesses").
+
+mod common;
+
+use common::{manifest, random_batch};
+use texpand::config::{GrowthOp, LayerPosition};
+use texpand::expand::{apply_ops, ExpandOptions, Init};
+use texpand::model::{cross_entropy, forward, max_logit_delta};
+use texpand::params::ParamStore;
+use texpand::rng::Pcg32;
+use texpand::runtime::Runtime;
+
+/// Cross-implementation tolerance: XLA fuses/reorders float reductions, so
+/// agreement is ~1e-5 at these magnitudes, not bit-exact (DESIGN.md §8).
+const CROSS_TOL: f32 = 5e-4;
+
+#[test]
+fn pjrt_forward_matches_rust_reference_all_stages() {
+    let m = manifest();
+    let mut rt = Runtime::cpu().unwrap();
+    for stage_meta in &m.stages {
+        let stage = rt.load_stage(&m, &stage_meta.name).unwrap();
+        let cfg = stage.meta.config;
+        let mut rng = Pcg32::seeded(21);
+        let params = ParamStore::init(&cfg, &mut rng, 0.02);
+        let batch = random_batch(&cfg, m.batch, 22);
+
+        let pjrt_logits = rt.forward(&stage, &params, &batch.tokens).unwrap();
+        let rust_logits = forward(&cfg, &params, &batch.tokens).unwrap();
+        let delta = max_logit_delta(&pjrt_logits, &rust_logits).unwrap();
+        assert!(delta <= CROSS_TOL, "stage {}: jax-vs-rust max|Δ| = {delta}", stage_meta.name);
+    }
+}
+
+#[test]
+fn pjrt_loss_matches_rust_cross_entropy() {
+    let m = manifest();
+    let mut rt = Runtime::cpu().unwrap();
+    let stage = rt.load_stage(&m, "stage0").unwrap();
+    let cfg = stage.meta.config;
+    let mut rng = Pcg32::seeded(23);
+    let params = ParamStore::init(&cfg, &mut rng, 0.02);
+    let batch = random_batch(&cfg, m.batch, 24);
+
+    let (pjrt_loss, _) = rt.step(&stage, &params, &batch).unwrap();
+    let rust_logits = forward(&cfg, &params, &batch.tokens).unwrap();
+    let rust_loss = cross_entropy(&rust_logits, &batch.targets).unwrap();
+    assert!(
+        (pjrt_loss - rust_loss).abs() < 1e-4,
+        "loss mismatch: pjrt {pjrt_loss} vs rust {rust_loss}"
+    );
+}
+
+#[test]
+fn surgery_preserves_across_the_language_boundary() {
+    // logits(old params, old artifact) == logits(expanded params, new artifact):
+    // the strongest statement — Rust surgery on params feeding the *JAX*
+    // compiled graph of the larger architecture reproduces the function.
+    let m = manifest();
+    let mut rt = Runtime::cpu().unwrap();
+    let stage0 = rt.load_stage(&m, "stage0").unwrap();
+    let stage1 = rt.load_stage(&m, "stage1").unwrap();
+
+    let cfg0 = stage0.meta.config;
+    let mut rng = Pcg32::seeded(25);
+    let params0 = ParamStore::init(&cfg0, &mut rng, 0.02);
+    let batch = random_batch(&cfg0, m.batch, 26);
+
+    // the schedule's stage0→stage1 ops (mlp 256, heads_add 1)
+    let ops = vec![GrowthOp::Mlp { p: 256 }, GrowthOp::HeadsAdd { count: 1 }];
+    let opts = ExpandOptions { init: Init::Normal(0.2), ..Default::default() };
+    let params1 = apply_ops(&params0, &ops, &mut rng, &opts).unwrap();
+    assert_eq!(params1.config(), &stage1.meta.config);
+
+    let before = rt.forward(&stage0, &params0, &batch.tokens).unwrap();
+    let after = rt.forward(&stage1, &params1, &batch.tokens).unwrap();
+    let delta = max_logit_delta(&before, &after).unwrap();
+    assert!(delta <= CROSS_TOL, "cross-stage preservation: max|Δ| = {delta}");
+}
+
+#[test]
+fn composed_surgery_reaches_final_stage_exactly() {
+    // walk all schedule boundaries in one shot: stage0 params expanded by
+    // the concatenation of every stage's ops must satisfy stage3's artifact
+    // and preserve stage0's function.
+    let m = manifest();
+    let s = common::schedule();
+    let mut rt = Runtime::cpu().unwrap();
+    let first = rt.load_stage(&m, &s.stages[0].name).unwrap();
+    let last = rt.load_stage(&m, &s.stages.last().unwrap().name).unwrap();
+
+    let mut rng = Pcg32::seeded(27);
+    let params0 = ParamStore::init(&first.meta.config, &mut rng, 0.02);
+    let batch = random_batch(&first.meta.config, m.batch, 28);
+
+    let all_ops: Vec<GrowthOp> = s.stages.iter().flat_map(|st| st.apply.clone()).collect();
+    assert!(all_ops.len() >= 6, "default schedule should compose many ops");
+    let opts = ExpandOptions { init: Init::Normal(0.2), ..Default::default() };
+    let params_final = apply_ops(&params0, &all_ops, &mut rng, &opts).unwrap();
+    assert_eq!(params_final.config(), &last.meta.config);
+
+    let before = rt.forward(&first, &params0, &batch.tokens).unwrap();
+    let after = rt.forward(&last, &params_final, &batch.tokens).unwrap();
+    let delta = max_logit_delta(&before, &after).unwrap();
+    assert!(delta <= CROSS_TOL, "composed preservation: max|Δ| = {delta}");
+}
+
+#[test]
+fn violated_constraints_break_preservation_through_pjrt() {
+    // negative control at the integration level: the same surgery with
+    // zero_constrained=false must NOT preserve through the compiled graph.
+    let m = manifest();
+    let mut rt = Runtime::cpu().unwrap();
+    let stage0 = rt.load_stage(&m, "stage0").unwrap();
+    let stage1 = rt.load_stage(&m, "stage1").unwrap();
+    let mut rng = Pcg32::seeded(29);
+    let params0 = ParamStore::init(&stage0.meta.config, &mut rng, 0.05);
+    let batch = random_batch(&stage0.meta.config, m.batch, 30);
+
+    let ops = vec![GrowthOp::Mlp { p: 256 }, GrowthOp::HeadsAdd { count: 1 }];
+    let opts = ExpandOptions {
+        init: Init::Normal(0.2),
+        zero_constrained: false,
+        ..Default::default()
+    };
+    let bad = apply_ops(&params0, &ops, &mut rng, &opts).unwrap();
+    let before = rt.forward(&stage0, &params0, &batch.tokens).unwrap();
+    let after = rt.forward(&stage1, &bad, &batch.tokens).unwrap();
+    let delta = max_logit_delta(&before, &after).unwrap();
+    assert!(delta > 1e-2, "violation should break preservation, got {delta}");
+}
+
+#[test]
+fn add_layers_positions_agree_with_artifacts() {
+    // Layer insertion at any position must satisfy the *same* stage
+    // artifact (architecture is position-agnostic) and preserve function.
+    let m = manifest();
+    let s = common::schedule();
+    let mut rt = Runtime::cpu().unwrap();
+    // stage2 -> stage3 includes layers_add; rebuild it with each position
+    let stage2 = rt.load_stage(&m, "stage2").unwrap();
+    let stage3 = rt.load_stage(&m, "stage3").unwrap();
+    let ops_spec = &s.stages[3].apply;
+    assert!(ops_spec.iter().any(|o| matches!(o, GrowthOp::LayersAdd { .. })));
+
+    let mut rng = Pcg32::seeded(31);
+    let params2 = ParamStore::init(&stage2.meta.config, &mut rng, 0.02);
+    let batch = random_batch(&stage2.meta.config, m.batch, 32);
+    let before = rt.forward(&stage2, &params2, &batch.tokens).unwrap();
+
+    for position in [LayerPosition::Top, LayerPosition::Bottom, LayerPosition::At(1)] {
+        let ops: Vec<GrowthOp> = ops_spec
+            .iter()
+            .map(|o| match o {
+                GrowthOp::LayersAdd { count, .. } => GrowthOp::LayersAdd { count: *count, position },
+                other => other.clone(),
+            })
+            .collect();
+        let opts = ExpandOptions { init: Init::Normal(0.2), ..Default::default() };
+        let params3 = apply_ops(&params2, &ops, &mut rng, &opts).unwrap();
+        let after = rt.forward(&stage3, &params3, &batch.tokens).unwrap();
+        let delta = max_logit_delta(&before, &after).unwrap();
+        assert!(delta <= CROSS_TOL, "{position:?}: max|Δ| = {delta}");
+    }
+}

@@ -1,0 +1,144 @@
+//! Integration: manifest validation + PJRT execution of real artifacts.
+
+mod common;
+
+use common::{manifest, random_batch, schedule};
+use texpand::params::ParamStore;
+use texpand::rng::Pcg32;
+use texpand::runtime::{Manifest, Runtime};
+
+#[test]
+fn manifest_loads_and_matches_schedule() {
+    let m = manifest();
+    let s = schedule();
+    assert_eq!(m.stages.len(), s.stages.len());
+    assert_eq!(m.batch, s.batch);
+    for (ms, ss) in m.stages.iter().zip(&s.stages) {
+        assert_eq!(ms.name, ss.name);
+        assert_eq!(ms.config, ss.config);
+        assert_eq!(ms.num_params, ss.config.num_params());
+    }
+}
+
+#[test]
+fn manifest_rejects_missing_dir() {
+    assert!(Manifest::load("/nonexistent-dir", "manifest.json").is_err());
+}
+
+#[test]
+fn manifest_rejects_tampered_params() {
+    // corrupt one param name in a copy of the manifest: load must fail
+    let orig = std::fs::read_to_string(format!("{}/manifest.json", common::ARTIFACTS)).unwrap();
+    let dir = std::env::temp_dir().join(format!("texpand-manifest-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let tampered = orig.replacen("\"embed\"", "\"embedx\"", 1);
+    std::fs::write(dir.join("manifest.json"), tampered).unwrap();
+    let err = Manifest::load(dir.to_str().unwrap(), "manifest.json").unwrap_err().to_string();
+    assert!(err.contains("embedx"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn stage0_executes_and_caches() {
+    let m = manifest();
+    let mut rt = Runtime::cpu().unwrap();
+    let stage = rt.load_stage(&m, "stage0").unwrap();
+    assert_eq!(rt.cached_executables(), 2);
+    // loading again hits the cache
+    let _again = rt.load_stage(&m, "stage0").unwrap();
+    assert_eq!(rt.cached_executables(), 2);
+
+    let cfg = stage.meta.config;
+    let mut rng = Pcg32::seeded(1);
+    let params = ParamStore::init(&cfg, &mut rng, 0.02);
+    let batch = random_batch(&cfg, m.batch, 2);
+
+    let logits = rt.forward(&stage, &params, &batch.tokens).unwrap();
+    assert_eq!(logits.len(), m.batch);
+    assert_eq!(logits[0].shape(), &[cfg.seq, cfg.vocab]);
+    assert!(logits.iter().all(|t| t.all_finite()));
+}
+
+#[test]
+fn step_returns_finite_loss_and_usable_grads() {
+    let m = manifest();
+    let mut rt = Runtime::cpu().unwrap();
+    let stage = rt.load_stage(&m, "stage0").unwrap();
+    let cfg = stage.meta.config;
+    let mut rng = Pcg32::seeded(3);
+    let params = ParamStore::init(&cfg, &mut rng, 0.02);
+    let batch = random_batch(&cfg, m.batch, 4);
+
+    let (loss, grads) = rt.step(&stage, &params, &batch).unwrap();
+    assert!(loss.is_finite());
+    // random targets => loss near ln(vocab)
+    assert!((loss - (cfg.vocab as f32).ln()).abs() < 1.0, "loss {loss}");
+    assert_eq!(grads.len(), params.len());
+    for (g, (spec, _)) in grads.iter().zip(params.iter()) {
+        assert_eq!(g.shape(), spec.shape.as_slice(), "{}", spec.name);
+        assert!(g.all_finite(), "{}", spec.name);
+    }
+    // at least the output projection must receive gradient signal
+    let w_out_idx = params.specs().iter().position(|s| s.name == "w_out").unwrap();
+    assert!(grads[w_out_idx].max_abs() > 0.0);
+}
+
+#[test]
+fn sgd_on_pjrt_grads_descends() {
+    let m = manifest();
+    let mut rt = Runtime::cpu().unwrap();
+    let stage = rt.load_stage(&m, "stage0").unwrap();
+    let cfg = stage.meta.config;
+    let mut rng = Pcg32::seeded(5);
+    let mut params = ParamStore::init(&cfg, &mut rng, 0.02);
+    let batch = random_batch(&cfg, m.batch, 6);
+
+    let (loss0, grads) = rt.step(&stage, &params, &batch).unwrap();
+    for (p, g) in params.tensors_mut().iter_mut().zip(&grads) {
+        let mut step = g.clone();
+        step.scale(0.5);
+        p.sub_assign(&step).unwrap();
+    }
+    let (loss1, _) = rt.step(&stage, &params, &batch).unwrap();
+    assert!(loss1 < loss0, "one SGD step must descend on the same batch: {loss0} -> {loss1}");
+}
+
+#[test]
+fn runtime_rejects_mismatched_inputs() {
+    let m = manifest();
+    let mut rt = Runtime::cpu().unwrap();
+    let stage0 = rt.load_stage(&m, "stage0").unwrap();
+    let stage1_cfg = m.stage("stage1").unwrap().config;
+    let mut rng = Pcg32::seeded(7);
+
+    // params for the wrong stage
+    let wrong_params = ParamStore::init(&stage1_cfg, &mut rng, 0.02);
+    let batch = random_batch(&stage0.meta.config, m.batch, 8);
+    assert!(rt.forward(&stage0, &wrong_params, &batch.tokens).is_err());
+
+    // wrong batch size
+    let params = ParamStore::init(&stage0.meta.config, &mut rng, 0.02);
+    let small = random_batch(&stage0.meta.config, m.batch - 1, 9);
+    assert!(rt.forward(&stage0, &params, &small.tokens).is_err());
+
+    // wrong seq length
+    let mut bad = random_batch(&stage0.meta.config, m.batch, 10);
+    bad.tokens[0].pop();
+    assert!(rt.forward(&stage0, &params, &bad.tokens).is_err());
+}
+
+#[test]
+fn all_stages_compile_and_execute() {
+    let m = manifest();
+    let mut rt = Runtime::cpu().unwrap();
+    for stage_meta in &m.stages {
+        let stage = rt.load_stage(&m, &stage_meta.name).unwrap();
+        let mut rng = Pcg32::seeded(11);
+        let params = ParamStore::init(&stage.meta.config, &mut rng, 0.02);
+        let batch = random_batch(&stage.meta.config, m.batch, 12);
+        let (loss, _) = rt.step(&stage, &params, &batch).unwrap();
+        assert!(loss.is_finite(), "{}", stage_meta.name);
+    }
+    // fwd+step per stage, all cached
+    assert_eq!(rt.cached_executables(), 2 * m.stages.len());
+}
