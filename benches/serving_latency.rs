@@ -1,0 +1,151 @@
+//! Serving decode latency: KV-cached incremental decode vs the KV-less
+//! full-re-forward oracle, and batched vs sequential engine throughput.
+//!
+//! Acceptance target (ISSUE 1): KV-cached decode ≥ 3× tokens/sec over full
+//! re-forward at the largest benchmarked stage. The asymptotics are on the
+//! cache's side — a full re-forward pays O(seq²) attention per token over
+//! the whole (padded) window, the incremental path one position — so the
+//! ratio *grows* with stage size; the bench prints it per stage.
+//!
+//! Run: `cargo bench --bench serving_latency`
+
+use texpand::bench_util::{bench, Reporter, Stats};
+use texpand::config::ModelConfig;
+use texpand::generate::{generate_ref, sample_from_logits, Sampler};
+use texpand::json::Value;
+use texpand::model::forward_incremental;
+use texpand::params::ParamStore;
+use texpand::rng::Pcg32;
+use texpand::serve::{Engine, EngineOptions, KvCache};
+
+fn stages() -> Vec<(&'static str, ModelConfig)> {
+    vec![
+        (
+            "small (~0.1M)",
+            ModelConfig { layers: 2, hidden: 32, heads: 2, k: 16, v: 16, mlp: 64, seq: 64, vocab: 128 },
+        ),
+        (
+            "medium (~0.5M)",
+            ModelConfig { layers: 4, hidden: 64, heads: 4, k: 16, v: 16, mlp: 128, seq: 64, vocab: 128 },
+        ),
+        (
+            "large (~2M)",
+            ModelConfig { layers: 4, hidden: 128, heads: 4, k: 32, v: 32, mlp: 256, seq: 128, vocab: 128 },
+        ),
+    ]
+}
+
+fn greedy() -> Sampler {
+    Sampler { temperature: 0.0, top_k: None, seed: 0 }
+}
+
+fn prompt(cfg: &ModelConfig, len: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..len).map(|_| rng.below(cfg.vocab) as u32).collect()
+}
+
+/// Raw KV-cached greedy decode of one sequence (the serving decode path
+/// without engine setup, so the timing is symmetric with `generate_ref`).
+fn kv_decode(params: &ParamStore, prompt: &[u32], new_tokens: usize) {
+    let cfg = *params.config();
+    let mut cache = KvCache::new(&cfg);
+    let mut logits = None;
+    for &t in prompt {
+        logits = Some(forward_incremental(&cfg, params, &mut cache, t).expect("prime"));
+    }
+    let mut rng = Pcg32::seeded(0);
+    let mut last = logits.expect("non-empty prompt");
+    for _ in 0..new_tokens - 1 {
+        let next = sample_from_logits(last.row(0), &greedy(), &mut rng);
+        last = forward_incremental(&cfg, params, &mut cache, next).expect("decode");
+    }
+    sample_from_logits(last.row(0), &greedy(), &mut rng);
+}
+
+/// Submit `prompts` and drain the engine. Callers time this with one
+/// `make_engine` per iteration on *both* sides of a comparison, so engine
+/// setup (params clone + probe synthesis) cancels out instead of biasing
+/// one side.
+fn engine_pass(eng: &mut Engine, prompts: &[Vec<u32>], new_tokens: usize) {
+    for p in prompts {
+        eng.submit(p.clone(), new_tokens, greedy()).expect("submit");
+    }
+    eng.run_until_idle().expect("serve");
+}
+
+fn make_engine(params: &ParamStore, slots: usize, parallel: bool) -> Engine {
+    Engine::new(params.clone(), EngineOptions { max_slots: slots, parallel, ..Default::default() })
+}
+
+fn main() {
+    let mut rep = Reporter::new("serving_latency");
+    let new_tokens = 24;
+    let batch = 4;
+
+    for (stage_name, cfg) in stages() {
+        let mut rng = Pcg32::seeded(1);
+        let params = ParamStore::init(&cfg, &mut rng, 0.02);
+        let n_params = params.num_scalars();
+        let one_prompt = vec![prompt(&cfg, 8, 2)];
+
+        // --- single-sequence decode: KV cache vs full re-forward ---------
+        let kv: Stats = bench(1, 3, || kv_decode(&params, &one_prompt[0], new_tokens));
+        rep.row(
+            &format!("{stage_name:<14} kv-cached decode x{new_tokens}"),
+            &kv,
+            vec![
+                ("params", Value::num(n_params as f64)),
+                ("tokens_per_sec", Value::num(kv.per_second(new_tokens as f64))),
+            ],
+        );
+        let full: Stats =
+            bench(1, 3, || generate_ref(&params, &one_prompt, new_tokens, &greedy()).expect("decode"));
+        rep.row(
+            &format!("{stage_name:<14} full re-forward x{new_tokens}"),
+            &full,
+            vec![
+                ("params", Value::num(n_params as f64)),
+                ("tokens_per_sec", Value::num(full.per_second(new_tokens as f64))),
+            ],
+        );
+        let speedup = full.mean_ns / kv.mean_ns;
+        rep.value_row(
+            &format!("{stage_name:<14} kv speedup (x)"),
+            "speedup",
+            speedup,
+            vec![("params", Value::num(n_params as f64))],
+        );
+
+        // --- batched vs sequential engine throughput ---------------------
+        // one engine each side (built untimed), so the comparison isolates
+        // slot parallelism: `slots=1` drains the same queue sequentially
+        let prompts: Vec<Vec<u32>> = (0..batch).map(|i| prompt(&cfg, 8, 10 + i as u64)).collect();
+        let total = (batch * new_tokens) as f64;
+        let batched: Stats = bench(1, 3, || {
+            let mut eng = make_engine(&params, batch, true);
+            engine_pass(&mut eng, &prompts, new_tokens);
+        });
+        rep.row(
+            &format!("{stage_name:<14} batched x{batch} (parallel slots)"),
+            &batched,
+            vec![("tokens_per_sec", Value::num(batched.per_second(total)))],
+        );
+        let sequential: Stats = bench(1, 3, || {
+            let mut eng = make_engine(&params, 1, false);
+            engine_pass(&mut eng, &prompts, new_tokens);
+        });
+        rep.row(
+            &format!("{stage_name:<14} sequential x{batch} (1 slot)"),
+            &sequential,
+            vec![("tokens_per_sec", Value::num(sequential.per_second(total)))],
+        );
+        rep.value_row(
+            &format!("{stage_name:<14} batching speedup (x)"),
+            "speedup",
+            sequential.mean_ns / batched.mean_ns,
+            vec![],
+        );
+    }
+    rep.flush();
+    println!("\ntarget (ISSUE 1): kv speedup >= 3x at the largest stage.");
+}

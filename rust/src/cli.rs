@@ -87,6 +87,11 @@ impl Args {
             .transpose()
     }
 
+    /// f32 convenience over [`Args::get_f64`] (sampler knobs etc.).
+    pub fn get_f32(&self, name: &str) -> Result<Option<f32>> {
+        Ok(self.get_f64(name)?.map(|v| v as f32))
+    }
+
     pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
         self.get(name)
             .map(|v| v.parse::<u64>().map_err(|_| Error::Cli(format!("--{name} expects an integer, got '{v}'"))))
@@ -161,8 +166,11 @@ mod tests {
         let a = args("x --n 5 --f 1.5 --bad abc");
         assert_eq!(a.get_usize("n").unwrap(), Some(5));
         assert_eq!(a.get_f64("f").unwrap(), Some(1.5));
+        assert_eq!(a.get_f32("f").unwrap(), Some(1.5));
         assert!(a.get_usize("bad").is_err());
+        assert!(a.get_f32("bad").is_err());
         assert_eq!(a.get_u64("missing").unwrap(), None);
+        assert_eq!(a.get_f32("missing").unwrap(), None);
     }
 
     #[test]

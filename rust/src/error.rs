@@ -3,62 +3,82 @@
 //! One enum covers every subsystem so that errors compose across the
 //! coordinator's phases (config parsing → artifact loading → PJRT execution
 //! → surgery → checkpointing) without boxing at each boundary.
+//!
+//! `Display`/`Error` are implemented by hand — the offline crate set has no
+//! `thiserror`, and the derive buys nothing at one enum's worth of match
+//! arms.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Crate-wide error enum.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// JSON syntax or structural error (path-annotated where possible).
-    #[error("json error: {0}")]
     Json(String),
 
     /// Config / growth-schedule validation failure.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Tensor shape mismatch or invalid operation.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Parameter-store inconsistency (missing param, spec mismatch...).
-    #[error("param store error: {0}")]
     Params(String),
 
     /// Checkpoint codec error.
-    #[error("checkpoint error: {0}")]
     Checkpoint(String),
 
     /// Artifact manifest problem (missing stage, spec drift vs config...).
-    #[error("manifest error: {0}")]
     Manifest(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Training-loop failure (non-finite loss, schedule violation...).
-    #[error("train error: {0}")]
     Train(String),
 
     /// Expansion surgery failure (dimension not growing, bad position...).
-    #[error("expand error: {0}")]
     Expand(String),
 
+    /// Serving-engine failure (bad request, rejected hot-swap...).
+    Serve(String),
+
     /// CLI usage error.
-    #[error("usage error: {0}")]
     Cli(String),
 
     /// I/O with path context.
-    #[error("io error on {path}: {source}")]
-    Io {
-        path: String,
-        #[source]
-        source: std::io::Error,
-    },
+    Io { path: String, source: std::io::Error },
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Json(msg) => write!(f, "json error: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Shape(msg) => write!(f, "shape error: {msg}"),
+            Error::Params(msg) => write!(f, "param store error: {msg}"),
+            Error::Checkpoint(msg) => write!(f, "checkpoint error: {msg}"),
+            Error::Manifest(msg) => write!(f, "manifest error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Train(msg) => write!(f, "train error: {msg}"),
+            Error::Expand(msg) => write!(f, "expand error: {msg}"),
+            Error::Serve(msg) => write!(f, "serve error: {msg}"),
+            Error::Cli(msg) => write!(f, "usage error: {msg}"),
+            Error::Io { path, source } => write!(f, "io error on {path}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Error {
@@ -84,6 +104,14 @@ mod tests {
         assert_eq!(e.to_string(), "config error: bad heads");
         let e = Error::io("/tmp/x", std::io::Error::new(std::io::ErrorKind::NotFound, "nope"));
         assert!(e.to_string().contains("/tmp/x"));
+    }
+
+    #[test]
+    fn io_error_exposes_source() {
+        use std::error::Error as _;
+        let e = Error::io("/tmp/x", std::io::Error::new(std::io::ErrorKind::NotFound, "nope"));
+        assert!(e.source().is_some());
+        assert!(Error::Serve("queue full".into()).source().is_none());
     }
 
     #[test]

@@ -8,10 +8,13 @@
 //!
 //! This is deliberately the *simple* KV-less decode: each new token re-runs
 //! the full forward. At the framework's stage sizes that costs a few ms per
-//! token on CPU; a KV-cache decode path would need per-position artifacts
-//! (future work, noted in DESIGN.md). The value here is the end-to-end
-//! loop: train → grow → checkpoint → generate, all through PJRT.
+//! token on CPU. The KV-cached serving path lives in [`crate::serve`]
+//! (pure-Rust reference model; a cached PJRT path would need per-position
+//! artifacts and stays future work) — [`generate_ref`] here is its KV-less
+//! oracle twin. The value of this module is the end-to-end loop: train →
+//! grow → checkpoint → generate.
 
+use crate::config::ModelConfig;
 use crate::error::{Error, Result};
 use crate::params::ParamStore;
 use crate::rng::Pcg32;
@@ -34,14 +37,21 @@ impl Default for Sampler {
 }
 
 /// Pick the next token from a logits row (pub for unit testing).
+///
+/// Degenerate inputs never panic: an empty row returns token 0, NaN logits
+/// are excluded from consideration (a NaN must not hijack the ranking by
+/// poisoning comparisons), and an all-NaN row falls back to token 0.
 pub fn sample_from_logits(logits: &[f32], sampler: &Sampler, rng: &mut Pcg32) -> u32 {
-    if sampler.temperature <= 0.0 {
+    if logits.is_empty() || sampler.temperature <= 0.0 {
         return argmax(logits);
     }
-    // rank tokens, apply top-k cutoff
-    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    // rank non-NaN tokens, apply top-k cutoff
+    let mut idx: Vec<usize> = (0..logits.len()).filter(|&i| !logits[i].is_nan()).collect();
+    if idx.is_empty() {
+        return 0;
+    }
     idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal));
-    let k = sampler.top_k.unwrap_or(logits.len()).max(1).min(logits.len());
+    let k = sampler.top_k.unwrap_or(idx.len()).max(1).min(idx.len());
     let kept = &idx[..k];
     let max = logits[kept[0]];
     let weights: Vec<f64> = kept
@@ -51,14 +61,21 @@ pub fn sample_from_logits(logits: &[f32], sampler: &Sampler, rng: &mut Pcg32) ->
     kept[rng.weighted(&weights)] as u32
 }
 
-fn argmax(row: &[f32]) -> u32 {
-    let mut best = 0usize;
+/// Greedy argmax over a logits row: first-index-wins on exact ties, NaN
+/// entries skipped (NaN-poisoned comparisons previously made the result
+/// depend on NaN position), `0` for an empty or all-NaN row.
+pub fn argmax(row: &[f32]) -> u32 {
+    let mut best: Option<usize> = None;
     for (i, v) in row.iter().enumerate() {
-        if *v > row[best] {
-            best = i;
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some(b) if *v <= row[b] => {}
+            _ => best = Some(i),
         }
     }
-    best as u32
+    best.unwrap_or(0) as u32
 }
 
 /// Generate `new_tokens` continuation tokens for each prompt.
@@ -97,13 +114,7 @@ pub fn generate(
         let mut windows = Vec::with_capacity(histories.len());
         let mut read_pos = Vec::with_capacity(histories.len());
         for h in &histories {
-            let (window, pos) = if h.len() <= cfg.seq {
-                let mut w = h.clone();
-                w.resize(cfg.seq, 0); // right-pad; causal mask shields pos len-1
-                (w, h.len() - 1)
-            } else {
-                (h[h.len() - cfg.seq..].to_vec(), cfg.seq - 1)
-            };
+            let (window, pos) = decode_window(h, cfg.seq);
             windows.push(window);
             read_pos.push(pos);
         }
@@ -111,6 +122,54 @@ pub fn generate(
         for ((h, l), &pos) in histories.iter_mut().zip(&logits).zip(&read_pos) {
             let next = sample_from_logits(l.row(pos), sampler, &mut rng);
             h.push(next);
+        }
+    }
+    Ok(histories)
+}
+
+/// Build the model-input window for one decode step: the full (right-zero-
+/// padded) history while it fits `seq`, else the last `seq` tokens. Returns
+/// the window and the row index holding the last real token's logits.
+pub(crate) fn decode_window(history: &[u32], seq: usize) -> (Vec<u32>, usize) {
+    if history.len() <= seq {
+        let mut w = history.to_vec();
+        w.resize(seq, 0); // right-pad; causal mask shields pos len-1
+        (w, history.len() - 1)
+    } else {
+        (history[history.len() - seq..].to_vec(), seq - 1)
+    }
+}
+
+/// Pure-Rust KV-less reference decode: the same windowing and sampling as
+/// [`generate`], but through [`crate::model::forward_one`] instead of a
+/// PJRT artifact — every new token re-runs the full forward.
+///
+/// This is the serving subsystem's oracle: `serve::Engine`'s KV-cached
+/// decode must be token-identical to this loop for greedy sampling
+/// (`tests/integration_serve.rs`), and `benches/serving_latency.rs`
+/// measures the incremental path's speedup against it.
+pub fn generate_ref(
+    params: &ParamStore,
+    prompts: &[Vec<u32>],
+    new_tokens: usize,
+    sampler: &Sampler,
+) -> Result<Vec<Vec<u32>>> {
+    let cfg: ModelConfig = *params.config();
+    for p in prompts {
+        if p.is_empty() {
+            return Err(Error::Runtime("empty prompt".into()));
+        }
+        if let Some(&t) = p.iter().find(|&&t| t as usize >= cfg.vocab) {
+            return Err(Error::Runtime(format!("prompt token {t} out of vocab {}", cfg.vocab)));
+        }
+    }
+    let mut rng = Pcg32::new(sampler.seed, 0x6E6E);
+    let mut histories: Vec<Vec<u32>> = prompts.to_vec();
+    for _ in 0..new_tokens {
+        for h in histories.iter_mut() {
+            let (window, pos) = decode_window(h, cfg.seq);
+            let logits = crate::model::forward_one(&cfg, params, &window)?;
+            h.push(sample_from_logits(logits.row(pos), sampler, &mut rng));
         }
     }
     Ok(histories)
@@ -171,5 +230,105 @@ mod tests {
             let t = sample_from_logits(&logits, &s, &mut rng);
             assert!(t < 2, "sampled excluded token {t}");
         }
+    }
+
+    #[test]
+    fn argmax_ties_pick_first_index() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0, 5.0]), 0);
+    }
+
+    #[test]
+    fn argmax_ignores_nan_and_guards_empty() {
+        // a NaN used to poison the running comparison and win by default
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]), 2);
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    #[test]
+    fn sampling_guards_empty_and_nan_rows() {
+        let mut rng = Pcg32::seeded(5);
+        let hot = Sampler { temperature: 1.0, top_k: Some(4), seed: 0 };
+        assert_eq!(sample_from_logits(&[], &hot, &mut rng), 0);
+        assert_eq!(sample_from_logits(&[f32::NAN, f32::NAN], &hot, &mut rng), 0);
+        // NaN entries are excluded from the candidate set entirely
+        for _ in 0..100 {
+            let t = sample_from_logits(&[f32::NAN, 1.0, 0.5], &hot, &mut rng);
+            assert!(t == 1 || t == 2, "sampled NaN-poisoned token {t}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod prop_tests {
+    use super::*;
+    use crate::prop::Runner;
+
+    fn random_logits(rng: &mut Pcg32) -> Vec<f32> {
+        let n = 1 + rng.below(24);
+        (0..n).map(|_| rng.normal_f32(3.0)).collect()
+    }
+
+    #[test]
+    fn prop_greedy_at_zero_temperature_equals_argmax() {
+        Runner::new("greedy-equals-argmax", 100).run(
+            |rng| random_logits(rng),
+            |logits| {
+                let s = Sampler { temperature: 0.0, top_k: None, seed: 0 };
+                let got = sample_from_logits(logits, &s, &mut Pcg32::seeded(1));
+                let want = argmax(logits);
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("sampled {got}, argmax {want}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_top_k_never_samples_outside_k_most_likely() {
+        Runner::new("top-k-containment", 100).run(
+            |rng| {
+                let logits = random_logits(rng);
+                let k = 1 + rng.below(logits.len());
+                let seed = rng.next_u64();
+                (logits, k, seed)
+            },
+            |(logits, k, seed)| {
+                let s = Sampler { temperature: 1.5, top_k: Some(*k), seed: 0 };
+                let t = sample_from_logits(logits, &s, &mut Pcg32::seeded(*seed)) as usize;
+                // t is inside the k most likely iff fewer than k entries
+                // beat it strictly
+                let beaten_by = logits.iter().filter(|&&v| v > logits[t]).count();
+                if beaten_by < *k {
+                    Ok(())
+                } else {
+                    Err(format!("token {t} ranks {beaten_by} with k={k}: {logits:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_fixed_seed_gives_deterministic_draws() {
+        Runner::new("seeded-determinism", 60).run(
+            |rng| (random_logits(rng), rng.next_u64()),
+            |(logits, seed)| {
+                let s = Sampler { temperature: 0.9, top_k: Some(8), seed: 0 };
+                let draw = |seed: u64| {
+                    let mut rng = Pcg32::seeded(seed);
+                    (0..8).map(|_| sample_from_logits(logits, &s, &mut rng)).collect::<Vec<u32>>()
+                };
+                if draw(*seed) == draw(*seed) {
+                    Ok(())
+                } else {
+                    Err("same seed produced different draw sequences".into())
+                }
+            },
+        );
     }
 }

@@ -33,8 +33,19 @@
 //! * [`train`] — the training loop for one stage.
 //! * [`coordinator`] — the growth coordinator walking a schedule across
 //!   stages, applying boundary surgery and verifying preservation.
-//! * [`metrics`] — CSV/JSONL run logging, timers.
+//! * [`metrics`] — CSV/JSONL run logging, timers, serving counters.
 //! * [`cli`] — argument parsing for the `texpand` binary.
+//!
+//! Serving & hot-swap (S15; `texpand serve`):
+//! * [`serve`] — KV-cached batched inference engine: per-sequence KV +
+//!   residual-stream caches ([`serve::kv`]) driven by the incremental
+//!   forward ([`model::forward_incremental`], bit-compatible with
+//!   [`model::forward_one`]); a continuous-batching scheduler
+//!   ([`serve::scheduler`]); and zero-downtime function-preserving model
+//!   hot-swap ([`serve::hotswap`]) that applies `expand` surgery to the
+//!   live parameters, verifies a preservation probe, and **remaps the
+//!   in-flight KV caches through the same expansion ops** so greedy
+//!   generations continue token-identically (DESIGN.md §9).
 
 pub mod bench_util;
 pub mod cli;
@@ -52,6 +63,7 @@ pub mod params;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 

@@ -5,6 +5,8 @@
 //!   verify    preservation matrix over all boundaries, no training
 //!   family    branch a checkpoint into a family of sizes (§5 use case b)
 //!   generate  sample text from a trained checkpoint via the fwd artifact
+//!   serve     KV-cached batched inference engine on the pure-Rust path,
+//!             with optional mid-run function-preserving hot-swap
 //!   inspect   print a checkpoint's config and tensor statistics
 //!   info      print the artifact manifest summary
 //!
@@ -33,6 +35,11 @@ USAGE:
                   [--runs D] [--run-name N] [--lr F] [--seed N]
   texpand generate --ckpt PATH [--prompt S] [--tokens N] [--temperature F]
                    [--top-k N] [--seed N] [--schedule P] [--artifacts D]
+  texpand serve   [--ckpt PATH] [--requests N] [--tokens N] [--slots N]
+                  [--temperature F] [--top-k N] [--seed N] [--serial]
+                  [--corpus markov|copy|arithmetic]
+                  [--swap-ops SPEC] [--swap-after-ticks N]
+                  (SPEC e.g. "mlp=256,heads_add=1,layers_add=1@top")
   texpand inspect --ckpt PATH
   texpand info    [--artifacts D]
 
@@ -60,6 +67,7 @@ fn run() -> Result<()> {
         Some("verify") => cmd_verify(&args),
         Some("family") => cmd_family(&args),
         Some("generate") => cmd_generate(&args),
+        Some("serve") => cmd_serve(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("info") => cmd_info(&args),
         Some(other) => Err(Error::Cli(format!("unknown subcommand '{other}'"))),
@@ -270,6 +278,109 @@ fn cmd_generate(args: &Args) -> Result<()> {
         sampler.top_k
     );
     println!("{text}");
+    Ok(())
+}
+
+/// `texpand serve` — the KV-cached batched inference engine on the
+/// pure-Rust reference path (no artifacts needed). Loads a checkpoint (or
+/// random-initializes a small demo model), feeds it corpus-derived
+/// prompts, and optionally hot-swaps a function-preserving expansion onto
+/// the live model mid-run.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use texpand::serve::{Engine, EngineOptions};
+
+    let requests = args.get_usize("requests")?.unwrap_or(8).max(1);
+    let tokens = args.get_usize("tokens")?.unwrap_or(48).max(1);
+    let slots = args.get_usize("slots")?.unwrap_or(4);
+    let seed = args.get_u64("seed")?.unwrap_or(0);
+    let corpus = match args.get("corpus") {
+        Some(c) => texpand::data::CorpusKind::parse(&c)?,
+        None => texpand::data::CorpusKind::MarkovText,
+    };
+    let mut sampler = texpand::generate::Sampler { seed, ..Default::default() };
+    if let Some(t) = args.get_f32("temperature")? {
+        sampler.temperature = t;
+    }
+    if let Some(k) = args.get_usize("top-k")? {
+        sampler.top_k = if k == 0 { None } else { Some(k) };
+    }
+    let swap_ops = args.get("swap-ops").map(|s| texpand::serve::parse_swap_spec(&s)).transpose()?;
+    let swap_after = args.get_u64("swap-after-ticks")?.unwrap_or(tokens as u64 / 2);
+    let serial = args.has("serial");
+    let ckpt = args.get("ckpt");
+    args.reject_unknown()?;
+
+    let params = match &ckpt {
+        Some(path) => ParamStore::load(path)?.0,
+        None => {
+            // demo model: untrained, but every serving mechanism is live
+            let cfg = texpand::config::ModelConfig {
+                layers: 2, hidden: 32, heads: 2, k: 16, v: 16, mlp: 64, seq: 48, vocab: 128,
+            };
+            ParamStore::init(&cfg, &mut texpand::rng::Pcg32::seeded(seed), 0.02)
+        }
+    };
+    let cfg = *params.config();
+    println!(
+        "serving {} ({} params, {:?})",
+        ckpt.as_deref().unwrap_or("<random demo model>"),
+        params.num_scalars(),
+        cfg
+    );
+
+    let opts = EngineOptions { max_slots: slots, parallel: !serial, ..Default::default() };
+    let mut engine = Engine::new(params, opts);
+
+    // corpus-derived prompts: staggered windows over synthesized text
+    let tok = texpand::data::ByteTokenizer::new(cfg.vocab)?;
+    let text = texpand::data::generate_corpus(corpus, 4096, seed ^ 0x5E7E);
+    let prompt_len = 8.min(cfg.seq - 1);
+    let mut ids = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let start = (i * 97) % (text.len() - prompt_len);
+        let prompt = tok.encode(&text[start..start + prompt_len]);
+        ids.push(engine.submit(prompt, tokens, sampler)?);
+    }
+
+    let mut swap_rng = texpand::rng::Pcg32::new(seed, 0x5A4B);
+    let mut swapped = false;
+    while !engine.is_idle() {
+        engine.tick()?;
+        if let (false, Some(ops)) = (swapped, &swap_ops) {
+            if engine.ticks() >= swap_after {
+                let expand_opts = texpand::expand::ExpandOptions::default();
+                let report = engine.hot_swap(ops, &mut swap_rng, &expand_opts)?;
+                println!(
+                    "hot-swap committed mid-flight: {} ops, probe max|Δ| = {:.3e}, \
+                     params {} -> {}, {} in-flight caches remapped, {:.1} ms",
+                    report.ops,
+                    report.probe_delta,
+                    report.params_before,
+                    report.params_after,
+                    report.remapped_sequences,
+                    report.swap_ms
+                );
+                swapped = true;
+            }
+        }
+    }
+    if let (false, Some(_)) = (swapped, &swap_ops) {
+        eprintln!(
+            "warning: --swap-ops never fired — serving drained before tick {swap_after}; \
+             lower --swap-after-ticks or raise --tokens to swap under load"
+        );
+    }
+
+    println!("\n--- completions (temp {} top-k {:?}) ---", sampler.temperature, sampler.top_k);
+    for id in ids {
+        let c = engine.poll(id).expect("engine idle implies all requests completed");
+        let text = String::from_utf8_lossy(&tok.decode(&c.tokens)).into_owned();
+        println!(
+            "[req {id}] {} prompt + {} generated in {} ticks: {text:?}",
+            c.prompt_len, c.generated, c.ticks_in_flight
+        );
+    }
+    println!("\ncounters: {}", engine.counters().to_json().to_pretty());
     Ok(())
 }
 

@@ -85,6 +85,63 @@ impl RunLogger {
     }
 }
 
+/// Serving-engine throughput/latency counters (S15; `texpand serve`).
+///
+/// Maintained by [`crate::serve::Engine`]: one counter bump per tick /
+/// admission / swap, wall time split by phase so decode throughput is not
+/// polluted by prompt priming or swap surgery.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeCounters {
+    pub submitted: u64,
+    pub completed: u64,
+    /// Continuation tokens decoded (one per in-flight sequence per tick).
+    pub tokens_generated: u64,
+    /// Prompt tokens processed while priming KV caches.
+    pub prompt_tokens: u64,
+    /// Ticks that decoded at least one token.
+    pub ticks: u64,
+    /// Committed hot-swaps.
+    pub swaps: u64,
+    pub decode_ns: u128,
+    pub prime_ns: u128,
+    pub swap_ns: u128,
+}
+
+impl ServeCounters {
+    /// Decode throughput: continuation tokens per second of decode time.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.decode_ns == 0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / (self.decode_ns as f64 / 1e9)
+    }
+
+    /// Mean wall time of a decoding tick, in milliseconds.
+    pub fn mean_tick_ms(&self) -> f64 {
+        if self.ticks == 0 {
+            return 0.0;
+        }
+        self.decode_ns as f64 / 1e6 / self.ticks as f64
+    }
+
+    /// Structured snapshot for `events.jsonl` / CLI output.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("submitted", Value::num(self.submitted as f64)),
+            ("completed", Value::num(self.completed as f64)),
+            ("tokens_generated", Value::num(self.tokens_generated as f64)),
+            ("prompt_tokens", Value::num(self.prompt_tokens as f64)),
+            ("ticks", Value::num(self.ticks as f64)),
+            ("swaps", Value::num(self.swaps as f64)),
+            ("decode_ms", Value::num(self.decode_ns as f64 / 1e6)),
+            ("prime_ms", Value::num(self.prime_ns as f64 / 1e6)),
+            ("swap_ms", Value::num(self.swap_ns as f64 / 1e6)),
+            ("tokens_per_sec", Value::num(self.tokens_per_sec())),
+            ("mean_tick_ms", Value::num(self.mean_tick_ms())),
+        ])
+    }
+}
+
 /// Scoped wall-clock timer.
 pub struct Timer(Instant);
 
@@ -149,6 +206,21 @@ mod tests {
         assert_eq!(csv.lines().filter(|l| l.starts_with("global_step")).count(), 1);
         assert_eq!(csv.lines().count(), 3);
         std::fs::remove_dir_all(format!("{root}/run2")).unwrap();
+    }
+
+    #[test]
+    fn serve_counters_math_and_json() {
+        let mut c = ServeCounters::default();
+        assert_eq!(c.tokens_per_sec(), 0.0);
+        assert_eq!(c.mean_tick_ms(), 0.0);
+        c.tokens_generated = 500;
+        c.decode_ns = 1_000_000_000; // 1 s
+        c.ticks = 10;
+        assert!((c.tokens_per_sec() - 500.0).abs() < 1e-9);
+        assert!((c.mean_tick_ms() - 100.0).abs() < 1e-9);
+        let j = c.to_json();
+        assert_eq!(j.req("tokens_generated").unwrap().as_i64().unwrap(), 500);
+        assert!((j.req("tokens_per_sec").unwrap().as_f64().unwrap() - 500.0).abs() < 1e-9);
     }
 
     #[test]

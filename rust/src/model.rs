@@ -16,6 +16,7 @@
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
 use crate::params::ParamStore;
+use crate::serve::kv::KvCache;
 use crate::tensor::{softmax_rows, Tensor};
 
 /// Additive mask value for non-causal positions (matches kernels/ref.py).
@@ -77,27 +78,35 @@ pub fn mlp(x: &Tensor, w1: &Tensor, b1: &Tensor, w2: &Tensor, b2: &Tensor) -> Re
     Ok(out)
 }
 
-/// One transformer layer (Eq. 2) applied in place to `x: [s, h]`.
-fn layer(cfg: &ModelConfig, params: &ParamStore, n: usize, x: &mut Tensor) -> Result<()> {
-    // I'_n = I_n + MHA(Norm(I_n))
-    let nrm = rmsnorm(x, params.get(&format!("layer_{n}.g_mha"))?)?;
-    let s = x.rows();
+/// Project Q/K/V per head and assemble the `[s, E*v]` concatenation
+/// (Eq. 2's MHA body). `head_out` turns one head's `(e, q, k, v)` into its
+/// `[s, v]` output: the full path runs [`attention`] over the in-tile keys,
+/// the incremental path ([`forward_incremental`]) attends over the KV cache.
+fn mha_block(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    n: usize,
+    nrm: &Tensor,
+    mut head_out: impl FnMut(usize, Tensor, Tensor, Tensor) -> Result<Tensor>,
+) -> Result<Tensor> {
+    let s = nrm.rows();
     let mut concat = Tensor::zeros(&[s, cfg.heads * cfg.v]);
     for e in 0..cfg.heads {
         let q = nrm.matmul(params.get(&format!("layer_{n}.head_{e}.wq"))?)?;
         let k = nrm.matmul(params.get(&format!("layer_{n}.head_{e}.wk"))?)?;
         let v = nrm.matmul(params.get(&format!("layer_{n}.head_{e}.wv"))?)?;
-        let head = attention(&q, &k, &v, true)?;
+        let head = head_out(e, q, k, v)?;
         // concatenate along the feature axis: column block e*v..(e+1)*v
         for i in 0..s {
             let dst = concat.row_mut(i);
             dst[e * cfg.v..(e + 1) * cfg.v].copy_from_slice(head.row(i));
         }
     }
-    let mha_out = concat.matmul(params.get(&format!("layer_{n}.wo"))?)?;
-    x.add_assign(&mha_out)?;
+    Ok(concat)
+}
 
-    // I_{n+1} = I'_n + MLP(Norm(I'_n))
+/// The MLP half of Eq. 2: `x += MLP(Norm(x))`, shared by both forwards.
+fn layer_tail(params: &ParamStore, n: usize, x: &mut Tensor) -> Result<()> {
     let nrm2 = rmsnorm(x, params.get(&format!("layer_{n}.g_mlp"))?)?;
     let mlp_out = mlp(
         &nrm2,
@@ -106,8 +115,28 @@ fn layer(cfg: &ModelConfig, params: &ParamStore, n: usize, x: &mut Tensor) -> Re
         params.get(&format!("layer_{n}.w2"))?,
         params.get(&format!("layer_{n}.b2"))?,
     )?;
-    x.add_assign(&mlp_out)?;
-    Ok(())
+    x.add_assign(&mlp_out)
+}
+
+/// One transformer layer (Eq. 2) applied in place to `x: [s, h]`.
+fn layer(cfg: &ModelConfig, params: &ParamStore, n: usize, x: &mut Tensor) -> Result<()> {
+    // I'_n = I_n + MHA(Norm(I_n))
+    let nrm = rmsnorm(x, params.get(&format!("layer_{n}.g_mha"))?)?;
+    let concat = mha_block(cfg, params, n, &nrm, |_, q, k, v| attention(&q, &k, &v, true))?;
+    let mha_out = concat.matmul(params.get(&format!("layer_{n}.wo"))?)?;
+    x.add_assign(&mha_out)?;
+
+    // I_{n+1} = I'_n + MLP(Norm(I'_n))
+    layer_tail(params, n, x)
+}
+
+/// Embedding + positional lookup for one token, written into `row`.
+fn embed_token(embed: &Tensor, pos: &Tensor, token: usize, position: usize, row: &mut [f32]) {
+    let erow = embed.row(token);
+    let prow = pos.row(position);
+    for (j, r) in row.iter_mut().enumerate() {
+        *r = erow[j] + prow[j];
+    }
 }
 
 /// Full forward (Eq. 1) for one sequence: `tokens` (len == seq) → logits
@@ -123,16 +152,66 @@ pub fn forward_one(cfg: &ModelConfig, params: &ParamStore, tokens: &[u32]) -> Re
         if t as usize >= cfg.vocab {
             return Err(Error::Shape(format!("token {t} out of vocab {}", cfg.vocab)));
         }
-        let erow = embed.row(t as usize);
-        let prow = pos.row(i);
-        let xrow = x.row_mut(i);
-        for j in 0..cfg.hidden {
-            xrow[j] = erow[j] + prow[j];
-        }
+        embed_token(embed, pos, t as usize, i, x.row_mut(i));
     }
     for n in 0..cfg.layers {
         layer(cfg, params, n, &mut x)?;
     }
+    x.matmul(params.get("w_out")?)
+}
+
+/// Incremental forward (S15): process **one** token at the cache's next
+/// position, appending its K/V (and residual-stream inputs) to `cache`,
+/// and return the `[1, vocab]` logits row for that position.
+///
+/// This is the serving decode path: one position of attention per new
+/// token instead of a full-window re-forward. It runs the *same* per-layer
+/// code as [`forward_one`] ([`mha_block`] + [`layer_tail`]); only the
+/// attention read differs (KV cache vs in-tile keys), with identical
+/// floating-point operation order — so the returned row is bit-identical
+/// to row `cache.len()` of a [`forward_one`] call on the same history
+/// (right-padded to `seq`; the causal mask makes the padding invisible).
+/// The cross-check test below asserts exactly that.
+pub fn forward_incremental(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    cache: &mut KvCache,
+    token: u32,
+) -> Result<Tensor> {
+    if cache.config() != cfg {
+        return Err(Error::Shape(format!(
+            "forward_incremental: cache laid out for {:?}, params are {:?}",
+            cache.config(),
+            cfg
+        )));
+    }
+    let position = cache.len();
+    if position >= cfg.seq {
+        return Err(Error::Shape(format!(
+            "forward_incremental: position {position} outside the positional table (seq {})",
+            cfg.seq
+        )));
+    }
+    if token as usize >= cfg.vocab {
+        return Err(Error::Shape(format!("token {token} out of vocab {}", cfg.vocab)));
+    }
+
+    let mut x = Tensor::zeros(&[1, cfg.hidden]);
+    embed_token(params.get("embed")?, params.get("pos")?, token as usize, position, x.row_mut(0));
+
+    for n in 0..cfg.layers {
+        cache.push_x(n, x.row(0));
+        let nrm = rmsnorm(&x, params.get(&format!("layer_{n}.g_mha"))?)?;
+        let concat = mha_block(cfg, params, n, &nrm, |e, q, k, v| {
+            cache.push_kv(n, e, k.row(0), v.row(0));
+            Tensor::from_vec(&[1, cfg.v], cache.attend(n, e, q.row(0)))
+        })?;
+        let mha_out = concat.matmul(params.get(&format!("layer_{n}.wo"))?)?;
+        x.add_assign(&mha_out)?;
+        layer_tail(params, n, &mut x)?;
+    }
+    cache.push_x(cfg.layers, x.row(0));
+    cache.bump();
     x.matmul(params.get("w_out")?)
 }
 
@@ -343,6 +422,47 @@ mod tests {
         }];
         let loss = cross_entropy(&logits, &[vec![1, 3]]).unwrap();
         assert!(loss < 1e-3);
+    }
+
+    #[test]
+    fn incremental_forward_is_bitexact_with_full_forward() {
+        // feed a prefix token by token; every returned row must equal the
+        // matching row of the full forward on the right-padded window.
+        let (c, params, toks) = setup(12);
+        let mut window = toks[0].clone();
+        window.truncate(c.seq);
+        let full = forward_one(&c, &params, &{
+            let mut w = window.clone();
+            w.resize(c.seq, 0);
+            w
+        })
+        .unwrap();
+        let mut cache = crate::serve::kv::KvCache::new(&c);
+        for (i, &t) in window.iter().enumerate() {
+            let row = forward_incremental(&c, &params, &mut cache, t).unwrap();
+            assert_eq!(row.shape(), &[1, c.vocab]);
+            let want = full.slice_rows(i, i + 1).unwrap();
+            assert_eq!(row, want, "position {i} diverged from the full forward");
+        }
+        assert_eq!(cache.len(), window.len());
+    }
+
+    #[test]
+    fn incremental_forward_rejects_bad_inputs() {
+        let (c, params, _) = setup(13);
+        let mut cache = crate::serve::kv::KvCache::new(&c);
+        // out-of-vocab token
+        assert!(forward_incremental(&c, &params, &mut cache, c.vocab as u32).is_err());
+        // config mismatch between cache and params
+        let mut other = c;
+        other.mlp += 8;
+        let mut wrong = crate::serve::kv::KvCache::new(&other);
+        assert!(forward_incremental(&c, &params, &mut wrong, 0).is_err());
+        // positional-table overflow after seq tokens
+        for t in 0..c.seq {
+            forward_incremental(&c, &params, &mut cache, (t % c.vocab) as u32).unwrap();
+        }
+        assert!(forward_incremental(&c, &params, &mut cache, 0).is_err());
     }
 
     #[test]

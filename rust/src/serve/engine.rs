@@ -1,0 +1,309 @@
+//! Serving engine (S15c): the live model behind a swap point.
+//!
+//! The [`Engine`] owns the live [`ParamStore`] plus every in-flight
+//! sequence's KV cache, and exposes the serving surface:
+//!
+//! * [`Engine::submit`] / [`Engine::poll`] — enqueue a generation request,
+//!   collect its completion;
+//! * [`Engine::tick`] — one scheduler round: admit queued requests into
+//!   free slots, advance every in-flight sequence one token;
+//! * [`Engine::hot_swap`] — between ticks, grow the live model with a
+//!   function-preserving op sequence: surgery → preservation probe →
+//!   KV-cache remap → atomic swap (see [`crate::serve::hotswap`]);
+//! * [`Engine::counters`] — throughput/latency counters
+//!   ([`crate::metrics::ServeCounters`]).
+//!
+//! Ticks are synchronous and swaps only happen between them, so the swap
+//! point needs no locking: the engine is single-owner, and intra-tick
+//! parallelism (thread-per-slot decode) never outlives the tick.
+
+use std::collections::HashMap;
+
+use crate::config::{GrowthOp, ModelConfig};
+use crate::error::{Error, Result};
+use crate::expand::ExpandOptions;
+use crate::generate::Sampler;
+use crate::metrics::{ServeCounters, Timer};
+use crate::params::ParamStore;
+use crate::rng::Pcg32;
+use crate::serve::hotswap::{self, SwapReport};
+use crate::serve::scheduler::{Completion, Request, RequestId, Scheduler, TickReport};
+
+/// Engine construction knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineOptions {
+    /// Maximum concurrently-decoding sequences (scheduler slots).
+    pub max_slots: usize,
+    /// Decode slots on scoped OS threads (identical results either way).
+    pub parallel: bool,
+    /// Hot-swap preservation tolerance on the probe batch (same default as
+    /// `TrainConfig::preserve_tol`).
+    pub preserve_tol: f32,
+    /// Rows in the synthesized held-out probe batch.
+    pub probe_rows: usize,
+    /// Seed for probe synthesis.
+    pub probe_seed: u64,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            max_slots: 8,
+            parallel: true,
+            preserve_tol: 1e-4,
+            probe_rows: 2,
+            probe_seed: 0xBEE,
+        }
+    }
+}
+
+/// Batched KV-cached inference engine with hot-swap (see module docs).
+pub struct Engine {
+    params: ParamStore,
+    sched: Scheduler,
+    completed: HashMap<RequestId, Completion>,
+    counters: ServeCounters,
+    opts: EngineOptions,
+    /// Held-out probe batch (full-`seq` rows) for swap verification.
+    probe: Vec<Vec<u32>>,
+}
+
+impl Engine {
+    /// Build an engine serving `params`.
+    pub fn new(params: ParamStore, opts: EngineOptions) -> Engine {
+        let cfg = *params.config();
+        let mut rng = Pcg32::new(opts.probe_seed, 0x9B0E);
+        let probe = (0..opts.probe_rows.max(1))
+            .map(|_| (0..cfg.seq).map(|_| rng.below(cfg.vocab) as u32).collect())
+            .collect();
+        Engine {
+            params,
+            sched: Scheduler::new(opts.max_slots),
+            completed: HashMap::new(),
+            counters: ServeCounters::default(),
+            opts,
+            probe,
+        }
+    }
+
+    /// The live architecture (changes after a successful hot-swap).
+    pub fn config(&self) -> &ModelConfig {
+        self.params.config()
+    }
+
+    /// The live parameters.
+    pub fn params(&self) -> &ParamStore {
+        &self.params
+    }
+
+    /// Throughput/latency counters.
+    pub fn counters(&self) -> &ServeCounters {
+        &self.counters
+    }
+
+    /// Queued + in-flight requests.
+    pub fn pending(&self) -> usize {
+        self.sched.queued() + self.sched.in_flight()
+    }
+
+    /// True when no request is queued or in flight.
+    pub fn is_idle(&self) -> bool {
+        self.sched.is_idle()
+    }
+
+    /// Enqueue a generation request; decoding starts at the next tick with
+    /// a free slot.
+    pub fn submit(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new_tokens: usize,
+        sampler: Sampler,
+    ) -> Result<RequestId> {
+        let cfg = self.params.config();
+        if prompt.is_empty() {
+            return Err(Error::Serve("empty prompt".into()));
+        }
+        if max_new_tokens == 0 {
+            return Err(Error::Serve("max_new_tokens must be positive".into()));
+        }
+        if let Some(&t) = prompt.iter().find(|&&t| t as usize >= cfg.vocab) {
+            return Err(Error::Serve(format!("prompt token {t} out of vocab {}", cfg.vocab)));
+        }
+        self.counters.submitted += 1;
+        Ok(self.sched.enqueue(Request { prompt, max_new_tokens, sampler }))
+    }
+
+    /// Take a finished request's completion, if it has finished.
+    pub fn poll(&mut self, id: RequestId) -> Option<Completion> {
+        self.completed.remove(&id)
+    }
+
+    /// One scheduler round: admit, then advance every in-flight sequence
+    /// one token.
+    pub fn tick(&mut self) -> Result<TickReport> {
+        let prime_timer = Timer::start();
+        let (admitted, prompt_tokens) = self.sched.admit(&self.params)?;
+        if admitted > 0 {
+            self.counters.prime_ns += (prime_timer.ms() * 1e6) as u128;
+            self.counters.prompt_tokens += prompt_tokens as u64;
+        }
+
+        let decode_timer = Timer::start();
+        let decoding = self.sched.in_flight();
+        let completions = self.sched.decode_tick(&self.params, self.opts.parallel)?;
+        if decoding > 0 {
+            self.counters.decode_ns += (decode_timer.ms() * 1e6) as u128;
+            self.counters.tokens_generated += decoding as u64;
+            self.counters.ticks += 1;
+        }
+
+        let report = TickReport {
+            admitted,
+            prompt_tokens,
+            decoded: decoding,
+            completed: completions.len(),
+        };
+        for c in completions {
+            self.counters.completed += 1;
+            self.completed.insert(c.id, c);
+        }
+        Ok(report)
+    }
+
+    /// Tick until every submitted request has completed.
+    pub fn run_until_idle(&mut self) -> Result<()> {
+        while !self.is_idle() {
+            self.tick()?;
+        }
+        Ok(())
+    }
+
+    /// Scheduler ticks elapsed (swap scheduling).
+    pub fn ticks(&self) -> u64 {
+        self.sched.ticks()
+    }
+
+    /// Zero-downtime function-preserving expansion of the live model.
+    ///
+    /// Runs between ticks: applies `ops` to a copy of the live parameters,
+    /// verifies `max|Δ logits| ≤ preserve_tol` on the held-out probe batch,
+    /// remaps every in-flight KV cache through the same ops, refreshes
+    /// pending logits, and atomically swaps. On any failure — including a
+    /// rejected probe — the live model and every cache are untouched and
+    /// serving continues on the old parameters.
+    pub fn hot_swap(
+        &mut self,
+        ops: &[GrowthOp],
+        rng: &mut Pcg32,
+        expand_opts: &ExpandOptions,
+    ) -> Result<SwapReport> {
+        let timer = Timer::start();
+        let report = hotswap::hot_swap(
+            &mut self.params,
+            &mut self.sched.active,
+            ops,
+            rng,
+            expand_opts,
+            &self.probe,
+            self.opts.preserve_tol,
+        )?;
+        self.counters.swaps += 1;
+        self.counters.swap_ns += (timer.ms() * 1e6) as u128;
+        // the probe batch keeps its token content: none of the paper's six
+        // ops touches seq or vocab, so the rows stay valid full-`seq`
+        // windows under the new config
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LayerPosition;
+    use crate::expand::Init;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { layers: 1, hidden: 8, heads: 1, k: 4, v: 4, mlp: 16, seq: 8, vocab: 16 }
+    }
+
+    fn engine(slots: usize) -> Engine {
+        let params = ParamStore::init(&cfg(), &mut Pcg32::seeded(2), 0.05);
+        Engine::new(params, EngineOptions { max_slots: slots, parallel: false, ..Default::default() })
+    }
+
+    fn greedy() -> Sampler {
+        Sampler { temperature: 0.0, top_k: None, seed: 0 }
+    }
+
+    #[test]
+    fn submit_validates_requests() {
+        let mut e = engine(2);
+        assert!(e.submit(vec![], 4, greedy()).is_err());
+        assert!(e.submit(vec![1], 0, greedy()).is_err());
+        assert!(e.submit(vec![99], 4, greedy()).is_err());
+        assert!(e.submit(vec![1, 2], 4, greedy()).is_ok());
+        assert_eq!(e.counters().submitted, 1);
+    }
+
+    #[test]
+    fn submit_poll_roundtrip_with_queueing() {
+        let mut e = engine(2);
+        let ids: Vec<_> =
+            (0..5u32).map(|i| e.submit(vec![i % 16, (i + 1) % 16], 3, greedy()).unwrap()).collect();
+        assert_eq!(e.pending(), 5);
+        e.run_until_idle().unwrap();
+        for id in &ids {
+            let c = e.poll(*id).expect("completed");
+            assert_eq!(c.generated, 3);
+            assert_eq!(c.tokens.len(), 2 + 3);
+            // poll is take-once
+            assert!(e.poll(*id).is_none());
+        }
+        let stats = e.counters();
+        assert_eq!(stats.completed, 5);
+        assert_eq!(stats.tokens_generated, 15);
+        assert!(stats.tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn hot_swap_grows_the_live_config_and_counts() {
+        let mut e = engine(2);
+        e.submit(vec![1, 2], 6, greedy()).unwrap();
+        e.tick().unwrap();
+        let ops = vec![
+            GrowthOp::Mlp { p: 32 },
+            GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top },
+        ];
+        let opts = ExpandOptions { init: Init::Normal(0.3), ..Default::default() };
+        let before = e.params().num_scalars();
+        let report = e.hot_swap(&ops, &mut Pcg32::seeded(9), &opts).unwrap();
+        assert_eq!(report.params_before, before);
+        assert!(report.params_after > before);
+        assert!(report.probe_delta <= 1e-4);
+        assert_eq!(report.remapped_sequences, 1);
+        assert_eq!((e.config().mlp, e.config().layers), (32, 2));
+        assert_eq!(e.counters().swaps, 1);
+        e.run_until_idle().unwrap();
+    }
+
+    #[test]
+    fn rejected_swap_leaves_engine_serving_old_params() {
+        let mut e = engine(2);
+        e.submit(vec![3], 4, greedy()).unwrap();
+        e.tick().unwrap();
+        // violate the zero-init constraints: probe must reject the swap
+        let opts = ExpandOptions {
+            init: Init::Normal(0.5),
+            zero_constrained: false,
+            ..Default::default()
+        };
+        let err = e
+            .hot_swap(&[GrowthOp::Mlp { p: 32 }], &mut Pcg32::seeded(9), &opts)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rejected"), "{err}");
+        assert_eq!(e.config(), &cfg(), "live config must be untouched");
+        assert_eq!(e.counters().swaps, 0);
+        e.run_until_idle().unwrap(); // decoding continues on the old model
+    }
+}

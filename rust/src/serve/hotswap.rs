@@ -1,0 +1,187 @@
+//! Function-preserving hot-swap (S15d): live-model surgery between ticks.
+//!
+//! The swap is the serving-side payoff of the paper: because every
+//! expansion op is function-preserving, a grown model can replace its
+//! smaller predecessor **under live traffic** with zero output drift —
+//! in-flight generations continue as if nothing happened. The sequence,
+//! mirroring the growth coordinator's boundary protocol:
+//!
+//! 1. **Surgery** — `expand::apply_ops` on a copy of the live store (the
+//!    live params serve every tick until the swap commits).
+//! 2. **Preservation probe** — the pure-Rust oracle forward on a held-out
+//!    probe batch, before vs after; `max|Δ logits| > tol` rejects the swap
+//!    with the live state untouched (e.g. an op sequence built with
+//!    constraint-violating init, the paper's E6 ablation).
+//! 3. **KV-cache remap** — every in-flight sequence's cache is remapped
+//!    through the same ops ([`crate::serve::kv::KvCache::remap`]) into
+//!    fresh copies, and pending logits are recomputed from the remapped
+//!    final hidden state.
+//! 4. **Atomic commit** — params and caches swap together, only after
+//!    every remap succeeded; a failure at any point leaves the engine
+//!    serving the old model.
+
+use crate::config::GrowthOp;
+use crate::error::{Error, Result};
+use crate::expand::{apply_ops, ExpandOptions};
+use crate::metrics::Timer;
+use crate::model;
+use crate::params::ParamStore;
+use crate::rng::Pcg32;
+use crate::serve::scheduler::Slot;
+
+/// Outcome of a committed hot-swap.
+#[derive(Clone, Debug)]
+pub struct SwapReport {
+    /// Ops applied.
+    pub ops: usize,
+    /// `max|Δ logits|` on the probe batch (old vs expanded params).
+    pub probe_delta: f32,
+    pub params_before: usize,
+    pub params_after: usize,
+    /// In-flight KV caches remapped through the ops.
+    pub remapped_sequences: usize,
+    /// Wall time of surgery + probe + remap + commit.
+    pub swap_ms: f64,
+}
+
+/// Grow `params` by `ops` under live traffic (see module docs). `probe`
+/// rows must be full-`seq` token rows; `slots` are the in-flight sequences
+/// whose caches ride through the swap.
+pub(crate) fn hot_swap(
+    params: &mut ParamStore,
+    slots: &mut [Slot],
+    ops: &[GrowthOp],
+    rng: &mut Pcg32,
+    expand_opts: &ExpandOptions,
+    probe: &[Vec<u32>],
+    tol: f32,
+) -> Result<SwapReport> {
+    if ops.is_empty() {
+        return Err(Error::Serve("hot-swap with no ops".into()));
+    }
+    let timer = Timer::start();
+
+    // 1. surgery on a copy — the live store keeps serving until commit
+    let before = model::forward(params.config(), params, probe)?;
+    let new_params = apply_ops(params, ops, rng, expand_opts)
+        .map_err(|e| Error::Serve(format!("hot-swap surgery failed: {e}")))?;
+
+    // 2. preservation probe (coordinator-style, pure-Rust oracle)
+    let after = model::forward(new_params.config(), &new_params, probe)?;
+    let probe_delta = model::max_logit_delta(&before, &after)?;
+    if probe_delta > tol {
+        return Err(Error::Serve(format!(
+            "hot-swap rejected: probe max|Δ logits| = {probe_delta:.3e} > tol {tol:.0e}; \
+             live params unchanged"
+        )));
+    }
+
+    // 3. remap every in-flight cache into a staged copy (commit is all-or-
+    //    nothing: a half-remapped engine must be unreachable)
+    let mut staged = Vec::with_capacity(slots.len());
+    for slot in slots.iter() {
+        let mut cache = slot.cache.clone();
+        cache.remap(ops, &new_params)?;
+        let logits = cache.last_logits(&new_params)?.into_vec();
+        staged.push((cache, logits));
+    }
+
+    // 4. commit
+    let params_before = params.num_scalars();
+    for (slot, (cache, logits)) in slots.iter_mut().zip(staged) {
+        slot.cache = cache;
+        slot.logits = logits;
+    }
+    *params = new_params;
+
+    Ok(SwapReport {
+        ops: ops.len(),
+        probe_delta,
+        params_before,
+        params_after: params.num_scalars(),
+        remapped_sequences: slots.len(),
+        swap_ms: timer.ms(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::expand::Init;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { layers: 1, hidden: 8, heads: 1, k: 4, v: 4, mlp: 16, seq: 8, vocab: 16 }
+    }
+
+    fn probe(c: &ModelConfig, rows: usize) -> Vec<Vec<u32>> {
+        let mut rng = Pcg32::seeded(6);
+        (0..rows).map(|_| (0..c.seq).map(|_| rng.below(c.vocab) as u32).collect()).collect()
+    }
+
+    #[test]
+    fn swap_without_traffic_succeeds_and_reports() {
+        let c = cfg();
+        let mut params = ParamStore::init(&c, &mut Pcg32::seeded(5), 0.05);
+        let n0 = params.num_scalars();
+        let opts = ExpandOptions { init: Init::Normal(0.3), ..Default::default() };
+        let report = hot_swap(
+            &mut params,
+            &mut [],
+            &[GrowthOp::Mlp { p: 32 }],
+            &mut Pcg32::seeded(7),
+            &opts,
+            &probe(&c, 2),
+            1e-4,
+        )
+        .unwrap();
+        assert_eq!(report.ops, 1);
+        assert_eq!(report.remapped_sequences, 0);
+        assert!(report.probe_delta <= 1e-4);
+        assert_eq!(report.params_before, n0);
+        assert_eq!(report.params_after, params.num_scalars());
+        assert_eq!(params.config().mlp, 32);
+        assert!(report.swap_ms >= 0.0);
+    }
+
+    #[test]
+    fn empty_op_list_is_rejected() {
+        let c = cfg();
+        let mut params = ParamStore::init(&c, &mut Pcg32::seeded(5), 0.05);
+        let opts = ExpandOptions::default();
+        assert!(hot_swap(
+            &mut params,
+            &mut [],
+            &[],
+            &mut Pcg32::seeded(7),
+            &opts,
+            &probe(&c, 1),
+            1e-4
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn violating_surgery_is_rejected_and_params_kept() {
+        let c = cfg();
+        let mut params = ParamStore::init(&c, &mut Pcg32::seeded(5), 0.05);
+        let opts = ExpandOptions {
+            init: Init::Normal(0.5),
+            zero_constrained: false,
+            ..Default::default()
+        };
+        let err = hot_swap(
+            &mut params,
+            &mut [],
+            &[GrowthOp::Mlp { p: 32 }],
+            &mut Pcg32::seeded(7),
+            &opts,
+            &probe(&c, 2),
+            1e-4,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("rejected"), "{err}");
+        assert_eq!(params.config(), &c);
+    }
+}

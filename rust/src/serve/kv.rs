@@ -1,0 +1,422 @@
+//! Per-sequence KV cache for incremental decode (S15a), remappable through
+//! the paper's expansion ops.
+//!
+//! For each transformer layer the cache holds (a) the layer's **pre-norm
+//! residual-stream input rows** `[t, h]` (plus one extra buffer for the
+//! final hidden state feeding `w_out`) and (b) each head's projected K/V
+//! rows `[t, k]` / `[t, v]`. The K/V buffers make a decode step cost one
+//! position of attention instead of a full re-forward; the input buffers
+//! are what make **hot-swap** possible: every cached K/V row is a pure
+//! function of the layer input and the live `W^K`/`W^V`, so after
+//! parameter surgery ([`KvCache::remap`]) the projections are *recomputed*
+//! from the structurally-remapped inputs instead of being rebuilt from the
+//! token history with a full re-forward.
+//!
+//! The structural remap leans on the residual-stream invariants of the
+//! preservation theorems (argument in DESIGN.md §9.3):
+//!
+//! * `mlp` / `heads_add` / `heads_expand` / `attn_expand` leave every
+//!   residual-stream value bit-identical → inputs unchanged;
+//! * `hidden` extends the residual stream with **exact zeros** (embed/pos/
+//!   `W^O`/`W2`/`b2` extensions are all zero) → append zero columns;
+//! * `layers_add` inserts identity layers (`I_n + 0`) → insert *copies* of
+//!   the stream value at the insertion point.
+//!
+//! Numerics: `attend` replicates [`crate::model::attention`]'s operation
+//! order exactly (dot, scale, max-subtracted softmax, weighted V sum with
+//! the same zero-skip), so incremental logits are bit-identical to the
+//! matching [`crate::model::forward_one`] row — see the cross-check test
+//! in `model.rs`.
+
+use crate::config::{GrowthOp, LayerPosition, ModelConfig};
+use crate::error::{Error, Result};
+use crate::params::ParamStore;
+use crate::tensor::Tensor;
+
+/// Append-only row buffer: a `[rows, cols]` f32 matrix grown one row at a
+/// time (no per-step reallocation of the whole matrix).
+#[derive(Clone, Debug)]
+pub(crate) struct GrowBuf {
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl GrowBuf {
+    fn new(cols: usize) -> GrowBuf {
+        GrowBuf { cols, data: Vec::new() }
+    }
+
+    fn from_tensor(t: &Tensor) -> GrowBuf {
+        GrowBuf { cols: t.cols(), data: t.data().to_vec() }
+    }
+
+    pub(crate) fn rows(&self) -> usize {
+        if self.cols == 0 { 0 } else { self.data.len() / self.cols }
+    }
+
+    pub(crate) fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    fn push_row(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.cols);
+        self.data.extend_from_slice(row);
+    }
+
+    /// Materialize as a `[rows, cols]` tensor (copies).
+    fn as_tensor(&self) -> Tensor {
+        Tensor::from_vec(&[self.rows(), self.cols], self.data.clone())
+            .expect("GrowBuf invariant: data.len() == rows*cols")
+    }
+
+    /// Widen every row by `extra` zero columns (hidden-expansion remap).
+    fn append_zero_cols(&mut self, extra: usize) {
+        let rows = self.rows();
+        let new_cols = self.cols + extra;
+        let mut data = Vec::with_capacity(rows * new_cols);
+        for i in 0..rows {
+            data.extend_from_slice(self.row(i));
+            data.extend(std::iter::repeat(0.0f32).take(extra));
+        }
+        self.cols = new_cols;
+        self.data = data;
+    }
+}
+
+/// KV + residual-stream cache for one in-flight sequence.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    cfg: ModelConfig,
+    /// `xs[n]` = pre-norm input rows of layer `n`; `xs[layers]` = the final
+    /// hidden state (input to `w_out`).
+    xs: Vec<GrowBuf>,
+    /// `heads[n][e]` = (K rows, V rows) for layer `n`, head `e`.
+    heads: Vec<Vec<(GrowBuf, GrowBuf)>>,
+    len: usize,
+}
+
+impl KvCache {
+    /// Empty cache for one sequence under `cfg`.
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        let xs = (0..=cfg.layers).map(|_| GrowBuf::new(cfg.hidden)).collect();
+        let heads = (0..cfg.layers)
+            .map(|_| (0..cfg.heads).map(|_| (GrowBuf::new(cfg.k), GrowBuf::new(cfg.v))).collect())
+            .collect();
+        KvCache { cfg: *cfg, xs, heads, len: 0 }
+    }
+
+    /// Number of cached positions (== the next token's position index).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The architecture this cache is laid out for.
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Drop all cached positions, keeping the layout (window re-prime).
+    pub fn reset(&mut self) {
+        *self = KvCache::new(&self.cfg);
+    }
+
+    /// Total cached scalars (capacity accounting / tests).
+    pub fn num_cached_scalars(&self) -> usize {
+        self.xs.iter().map(|b| b.data.len()).sum::<usize>()
+            + self
+                .heads
+                .iter()
+                .flatten()
+                .map(|(k, v)| k.data.len() + v.data.len())
+                .sum::<usize>()
+    }
+
+    // ---- incremental-forward hooks (crate-internal; see model.rs) ---------
+
+    pub(crate) fn push_x(&mut self, layer: usize, row: &[f32]) {
+        self.xs[layer].push_row(row);
+    }
+
+    pub(crate) fn push_kv(&mut self, layer: usize, head: usize, k: &[f32], v: &[f32]) {
+        let (kb, vb) = &mut self.heads[layer][head];
+        kb.push_row(k);
+        vb.push_row(v);
+    }
+
+    /// Mark one full token as cached (called once per incremental forward).
+    pub(crate) fn bump(&mut self) {
+        self.len += 1;
+    }
+
+    /// Causal attention of one query row over every cached position of
+    /// `(layer, head)`, replicating `model::attention`'s op order exactly.
+    pub(crate) fn attend(&self, layer: usize, head: usize, q: &[f32]) -> Vec<f32> {
+        let (kb, vb) = &self.heads[layer][head];
+        let t = kb.rows();
+        debug_assert!(t > 0, "attend on empty cache");
+        let scale = 1.0 / (kb.cols as f32).sqrt();
+        // scores = (q · K^T) * 1/sqrt(k)
+        let mut scores = Vec::with_capacity(t);
+        for j in 0..t {
+            let krow = kb.row(j);
+            let mut acc = 0.0f32;
+            for kk in 0..kb.cols {
+                acc += q[kk] * krow[kk];
+            }
+            scores.push(acc * scale);
+        }
+        // max-subtracted softmax (same order as tensor::softmax_rows)
+        let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - max).exp();
+            sum += *s;
+        }
+        for s in scores.iter_mut() {
+            *s /= sum;
+        }
+        // weighted V sum (same ikj order + zero-skip as Tensor::matmul)
+        let mut out = vec![0.0f32; vb.cols];
+        for (j, &w) in scores.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let vrow = vb.row(j);
+            for c in 0..vb.cols {
+                out[c] += w * vrow[c];
+            }
+        }
+        out
+    }
+
+    /// Logits of the most recently cached position, recomputed from the
+    /// cached final hidden state (used to refresh a sequence's pending
+    /// logits after a hot-swap).
+    pub fn last_logits(&self, params: &ParamStore) -> Result<Tensor> {
+        if self.len == 0 {
+            return Err(Error::Serve("last_logits on an empty cache".into()));
+        }
+        let last = Tensor::from_vec(&[1, self.cfg.hidden], self.xs[self.cfg.layers].row(self.len - 1).to_vec())?;
+        last.matmul(params.get("w_out")?)
+    }
+
+    // ---- hot-swap remap ----------------------------------------------------
+
+    /// Remap the cache through an expansion-op sequence so that decoding
+    /// continues under `new_params` as if the whole history had been fed to
+    /// the expanded model.
+    ///
+    /// Two phases: (1) structural remap of the residual-stream buffers
+    /// (zero-column extension under `hidden`, copy insertion under
+    /// `layers_add`); (2) rebuild of every head's K/V from the remapped
+    /// inputs and the *new* projection weights — which also covers new
+    /// heads, widened K/V dims and the `sqrt(k̂/k)` key rescaling without
+    /// op-specific K/V surgery. Exactness argument: DESIGN.md §9.3.
+    pub fn remap(&mut self, ops: &[GrowthOp], new_params: &ParamStore) -> Result<()> {
+        let mut cfg = self.cfg;
+        for op in ops {
+            let next = op
+                .apply_to_config(&cfg)
+                .map_err(|e| Error::Serve(format!("kv remap: {e}")))?;
+            match *op {
+                GrowthOp::Hidden { h } => {
+                    let extra = h - cfg.hidden;
+                    for x in &mut self.xs {
+                        x.append_zero_cols(extra);
+                    }
+                }
+                GrowthOp::LayersAdd { count, position } => {
+                    let pos = match position {
+                        LayerPosition::Top => cfg.layers,
+                        LayerPosition::Bottom => 0,
+                        LayerPosition::At(p) => p,
+                    };
+                    // an inserted identity layer sees — and passes through —
+                    // the stream value at its position
+                    for _ in 0..count {
+                        let copy = self.xs[pos].clone();
+                        self.xs.insert(pos, copy);
+                    }
+                }
+                // mlp / heads_add / heads_expand / attn_expand leave the
+                // residual stream untouched
+                _ => {}
+            }
+            cfg = next;
+        }
+        if &cfg != new_params.config() {
+            return Err(Error::Serve(format!(
+                "kv remap: ops produce {:?} but new params are {:?}",
+                cfg,
+                new_params.config()
+            )));
+        }
+
+        // phase 2: rebuild K/V from remapped inputs + new weights
+        let mut heads = Vec::with_capacity(cfg.layers);
+        for n in 0..cfg.layers {
+            let x = self.xs[n].as_tensor();
+            let nrm = crate::model::rmsnorm(&x, new_params.get(&format!("layer_{n}.g_mha"))?)?;
+            let mut layer_heads = Vec::with_capacity(cfg.heads);
+            for e in 0..cfg.heads {
+                let k = nrm.matmul(new_params.get(&format!("layer_{n}.head_{e}.wk"))?)?;
+                let v = nrm.matmul(new_params.get(&format!("layer_{n}.head_{e}.wv"))?)?;
+                layer_heads.push((GrowBuf::from_tensor(&k), GrowBuf::from_tensor(&v)));
+            }
+            heads.push(layer_heads);
+        }
+        self.heads = heads;
+        self.cfg = cfg;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expand::{apply_ops, ExpandOptions, Init};
+    use crate::model::{forward_incremental, forward_one};
+    use crate::rng::Pcg32;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { layers: 2, hidden: 16, heads: 2, k: 8, v: 8, mlp: 32, seq: 16, vocab: 32 }
+    }
+
+    fn feed(cache: &mut KvCache, params: &ParamStore, tokens: &[u32]) -> Tensor {
+        let cfg = *cache.config();
+        let mut logits = None;
+        for &t in tokens {
+            logits = Some(forward_incremental(&cfg, params, cache, t).unwrap());
+        }
+        logits.expect("at least one token")
+    }
+
+    #[test]
+    fn cache_grows_and_resets() {
+        let c = cfg();
+        let mut rng = Pcg32::seeded(3);
+        let params = ParamStore::init(&c, &mut rng, 0.02);
+        let mut cache = KvCache::new(&c);
+        assert!(cache.is_empty());
+        feed(&mut cache, &params, &[1, 2, 3]);
+        assert_eq!(cache.len(), 3);
+        // xs: (layers+1) buffers of [3, h]; heads: layers*heads*(K+V)
+        let expect = (c.layers + 1) * 3 * c.hidden + c.layers * c.heads * 3 * (c.k + c.v);
+        assert_eq!(cache.num_cached_scalars(), expect);
+        cache.reset();
+        assert!(cache.is_empty());
+        assert_eq!(cache.num_cached_scalars(), 0);
+    }
+
+    #[test]
+    fn last_logits_matches_incremental_output() {
+        let c = cfg();
+        let mut rng = Pcg32::seeded(4);
+        let params = ParamStore::init(&c, &mut rng, 0.05);
+        let mut cache = KvCache::new(&c);
+        let logits = feed(&mut cache, &params, &[5, 6, 7, 8]);
+        let again = cache.last_logits(&params).unwrap();
+        assert_eq!(again, logits);
+        assert!(KvCache::new(&c).last_logits(&params).is_err());
+    }
+
+    /// The central hot-swap property: remap(ops) then decode ≡ feeding the
+    /// whole history to the expanded model from scratch.
+    #[test]
+    fn remap_agrees_with_fresh_prime_under_new_params() {
+        use crate::config::GrowthOp::*;
+        let c = cfg();
+        let cases: Vec<(&str, Vec<GrowthOp>)> = vec![
+            ("mlp", vec![Mlp { p: 64 }]),
+            ("heads_add", vec![HeadsAdd { count: 2 }]),
+            ("heads_expand", vec![HeadsExpand { v: 16 }]),
+            ("attn_expand", vec![AttnExpand { k: 16 }]),
+            ("hidden", vec![Hidden { h: 24 }]),
+            ("layers_top", vec![LayersAdd { count: 1, position: LayerPosition::Top }]),
+            ("layers_bottom", vec![LayersAdd { count: 2, position: LayerPosition::Bottom }]),
+            ("layers_mid", vec![LayersAdd { count: 1, position: LayerPosition::At(1) }]),
+            (
+                "composed",
+                vec![
+                    Mlp { p: 64 },
+                    HeadsAdd { count: 1 },
+                    AttnExpand { k: 16 },
+                    Hidden { h: 24 },
+                    LayersAdd { count: 1, position: LayerPosition::Top },
+                ],
+            ),
+        ];
+        let opts = ExpandOptions { init: Init::Normal(0.3), ..Default::default() };
+        for (name, ops) in cases {
+            let mut rng = Pcg32::seeded(11);
+            let params = ParamStore::init(&c, &mut rng, 0.05);
+            let history: Vec<u32> = (0..6).map(|_| rng.below(c.vocab) as u32).collect();
+            let new_params = apply_ops(&params, &ops, &mut rng, &opts).unwrap();
+
+            // path A: prime under old params, remap, feed one more token
+            let mut remapped = KvCache::new(&c);
+            feed(&mut remapped, &params, &history);
+            remapped.remap(&ops, &new_params).unwrap();
+            let next = 9u32;
+            let a = forward_incremental(new_params.config(), &new_params, &mut remapped, next).unwrap();
+
+            // path B: feed the full history + token to the expanded model
+            let mut fresh = KvCache::new(new_params.config());
+            feed(&mut fresh, &new_params, &history);
+            let b = forward_incremental(new_params.config(), &new_params, &mut fresh, next).unwrap();
+
+            let delta = a.max_abs_diff(&b).unwrap();
+            assert!(delta <= 1e-4, "{name}: remap vs fresh prime max|Δ| = {delta}");
+            assert_eq!(remapped.len(), fresh.len(), "{name}");
+            assert_eq!(remapped.config(), new_params.config(), "{name}");
+        }
+    }
+
+    /// For ops that do not touch attention inputs, the remap is not just
+    /// within tolerance but *bit-identical* to a fresh prime.
+    #[test]
+    fn remap_is_bitexact_for_stream_preserving_ops() {
+        use crate::config::GrowthOp::*;
+        let c = cfg();
+        let ops = vec![
+            Mlp { p: 64 },
+            HeadsAdd { count: 1 },
+            HeadsExpand { v: 16 },
+            LayersAdd { count: 1, position: LayerPosition::At(1) },
+        ];
+        let opts = ExpandOptions { init: Init::Normal(0.3), ..Default::default() };
+        let mut rng = Pcg32::seeded(13);
+        let params = ParamStore::init(&c, &mut rng, 0.05);
+        let history: Vec<u32> = (0..5).map(|_| rng.below(c.vocab) as u32).collect();
+        let new_params = apply_ops(&params, &ops, &mut rng, &opts).unwrap();
+
+        let mut remapped = KvCache::new(&c);
+        feed(&mut remapped, &params, &history);
+        remapped.remap(&ops, &new_params).unwrap();
+        let a = forward_incremental(new_params.config(), &new_params, &mut remapped, 3).unwrap();
+
+        let mut window: Vec<u32> = history.clone();
+        window.push(3);
+        window.resize(new_params.config().seq, 0);
+        let full = forward_one(new_params.config(), &new_params, &window).unwrap();
+        let row = full.slice_rows(history.len(), history.len() + 1).unwrap();
+        assert_eq!(a, row, "stream-preserving remap must be bit-identical to the full forward");
+    }
+
+    #[test]
+    fn remap_rejects_mismatched_params() {
+        let c = cfg();
+        let mut rng = Pcg32::seeded(17);
+        let params = ParamStore::init(&c, &mut rng, 0.05);
+        let mut cache = KvCache::new(&c);
+        feed(&mut cache, &params, &[1, 2]);
+        // ops say mlp=64 but hand the cache the *old* params
+        let ops = vec![GrowthOp::Mlp { p: 64 }];
+        let err = cache.remap(&ops, &params).unwrap_err().to_string();
+        assert!(err.contains("kv remap"), "{err}");
+    }
+}

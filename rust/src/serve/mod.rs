@@ -1,0 +1,130 @@
+//! Serving subsystem (S15): KV-cached batched inference with zero-downtime
+//! function-preserving model hot-swap.
+//!
+//! The production-facing layer of the stack, `texpand serve`'s engine:
+//!
+//! * [`kv`] — per-sequence KV + residual-stream cache; the incremental
+//!   decode state and the object that is *remapped through expansion ops*
+//!   at a hot-swap (the subsystem's central trick).
+//! * [`scheduler`] — request queue + continuous batching across in-flight
+//!   sequences of different lengths, thread-per-slot decode.
+//! * [`engine`] — the live [`crate::params::ParamStore`] behind a swap
+//!   point; `submit`/`poll`/`tick` plus counters.
+//! * [`hotswap`] — surgery → preservation probe → cache remap → atomic
+//!   commit, the coordinator's boundary protocol transplanted under live
+//!   traffic.
+//!
+//! Decode numerics are bit-compatible with the KV-less oracle
+//! (`generate::generate_ref`): greedy decodes are token-identical, which
+//! `tests/integration_serve.rs` asserts end to end, including across a
+//! mid-flight hot-swap.
+
+pub mod engine;
+pub mod hotswap;
+pub mod kv;
+pub mod scheduler;
+
+pub use engine::{Engine, EngineOptions};
+pub use hotswap::SwapReport;
+pub use kv::KvCache;
+pub use scheduler::{Completion, FinishReason, Request, RequestId, TickReport};
+
+use crate::config::{GrowthOp, LayerPosition};
+use crate::error::{Error, Result};
+
+/// Parse a hot-swap op spec, the `--swap-ops` CLI syntax: comma-separated
+/// `kind=value` items applied left to right.
+///
+/// ```text
+/// mlp=256            Def 3.1: grow MLP width to 256
+/// heads_add=2        Def 3.2: add 2 heads
+/// heads_expand=32    Def 3.3: grow per-head value width to 32
+/// attn_expand=32     Def 3.4: grow key/query width to 32
+/// hidden=128         Def 3.5: grow hidden width to 128
+/// layers_add=1@top   Def 3.6: insert 1 layer (`@top`, `@bottom` or `@<i>`)
+/// ```
+pub fn parse_swap_spec(spec: &str) -> Result<Vec<GrowthOp>> {
+    let mut ops = Vec::new();
+    for item in spec.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        let (kind, value) = item
+            .split_once('=')
+            .ok_or_else(|| Error::Cli(format!("swap op '{item}' is not kind=value")))?;
+        let parse_n = |v: &str| -> Result<usize> {
+            v.parse::<usize>()
+                .map_err(|_| Error::Cli(format!("swap op '{item}': '{v}' is not an integer")))
+        };
+        let op = match kind {
+            "mlp" => GrowthOp::Mlp { p: parse_n(value)? },
+            "heads_add" => GrowthOp::HeadsAdd { count: parse_n(value)? },
+            "heads_expand" => GrowthOp::HeadsExpand { v: parse_n(value)? },
+            "attn_expand" => GrowthOp::AttnExpand { k: parse_n(value)? },
+            "hidden" => GrowthOp::Hidden { h: parse_n(value)? },
+            "layers_add" => {
+                let (count, position) = match value.split_once('@') {
+                    None => (parse_n(value)?, LayerPosition::Top),
+                    Some((c, "top")) => (parse_n(c)?, LayerPosition::Top),
+                    Some((c, "bottom")) => (parse_n(c)?, LayerPosition::Bottom),
+                    Some((c, at)) => (parse_n(c)?, LayerPosition::At(parse_n(at)?)),
+                };
+                GrowthOp::LayersAdd { count, position }
+            }
+            other => {
+                return Err(Error::Cli(format!(
+                    "unknown swap op kind '{other}' \
+                     (mlp|heads_add|heads_expand|attn_expand|hidden|layers_add)"
+                )))
+            }
+        };
+        ops.push(op);
+    }
+    if ops.is_empty() {
+        return Err(Error::Cli(format!("swap spec '{spec}' contains no ops")));
+    }
+    Ok(ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind() {
+        let ops = parse_swap_spec(
+            "mlp=256, heads_add=2, heads_expand=32, attn_expand=32, hidden=128, layers_add=1@top",
+        )
+        .unwrap();
+        assert_eq!(ops.len(), 6);
+        assert_eq!(ops[0], GrowthOp::Mlp { p: 256 });
+        assert_eq!(ops[1], GrowthOp::HeadsAdd { count: 2 });
+        assert_eq!(ops[5], GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top });
+    }
+
+    #[test]
+    fn layers_add_positions() {
+        assert_eq!(
+            parse_swap_spec("layers_add=2").unwrap()[0],
+            GrowthOp::LayersAdd { count: 2, position: LayerPosition::Top }
+        );
+        assert_eq!(
+            parse_swap_spec("layers_add=1@bottom").unwrap()[0],
+            GrowthOp::LayersAdd { count: 1, position: LayerPosition::Bottom }
+        );
+        assert_eq!(
+            parse_swap_spec("layers_add=1@3").unwrap()[0],
+            GrowthOp::LayersAdd { count: 1, position: LayerPosition::At(3) }
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(parse_swap_spec("").is_err());
+        assert!(parse_swap_spec("mlp").is_err());
+        assert!(parse_swap_spec("mlp=abc").is_err());
+        assert!(parse_swap_spec("shrink=4").is_err());
+        assert!(parse_swap_spec("layers_add=1@sideways").is_err());
+    }
+}

@@ -1,0 +1,371 @@
+//! Batch scheduler (S15b): request queue + continuous batching.
+//!
+//! The scheduler owns a FIFO queue of pending requests and a set of
+//! in-flight **slots** (bounded by `max_slots`). Batching is *continuous*:
+//! a finished sequence frees its slot at the end of the tick and a queued
+//! request is admitted at the start of the next one, so sequences of very
+//! different lengths never barrier on each other — the batch composition
+//! changes tick by tick.
+//!
+//! Each tick every active slot advances one token: sample from its pending
+//! logits (per-request [`Sampler`], per-request RNG stream so results are
+//! independent of batch composition), then run one KV-cached incremental
+//! forward ([`crate::model::forward_incremental`]). Slots are mutually
+//! independent, so the decode fans out across OS threads
+//! (`std::thread::scope`) when `parallel` is set — results are identical
+//! either way, which `integration_serve.rs` asserts.
+//!
+//! Window policy: while a sequence fits the positional table the decode is
+//! purely incremental; past `seq` tokens the window slides, which
+//! invalidates every cached position (the positional embedding of each
+//! cached token changes), so the slot re-primes its cache over the last
+//! `seq`-token window — the same sliding rule as `generate::generate_ref`,
+//! keeping greedy decodes token-identical to the KV-less oracle.
+
+use std::collections::VecDeque;
+
+use crate::error::{Error, Result};
+use crate::generate::{sample_from_logits, Sampler};
+use crate::model::forward_incremental;
+use crate::params::ParamStore;
+use crate::rng::Pcg32;
+use crate::serve::kv::KvCache;
+
+/// Opaque request handle returned by `submit`.
+pub type RequestId = u64;
+
+/// Why a sequence left the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated the requested number of tokens.
+    MaxTokens,
+}
+
+/// One queued generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampler: Sampler,
+}
+
+/// A finished generation.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: RequestId,
+    /// Full token history: prompt followed by the generated continuation.
+    pub tokens: Vec<u32>,
+    pub prompt_len: usize,
+    pub generated: usize,
+    pub finish: FinishReason,
+    /// Scheduler ticks the request spent in a slot.
+    pub ticks_in_flight: u64,
+}
+
+/// An in-flight sequence bound to a slot.
+pub(crate) struct Slot {
+    id: RequestId,
+    history: Vec<u32>,
+    prompt_len: usize,
+    generated: usize,
+    max_new_tokens: usize,
+    sampler: Sampler,
+    rng: Pcg32,
+    pub(crate) cache: KvCache,
+    /// Logits of the last fed position — the next token samples from these.
+    pub(crate) logits: Vec<f32>,
+    admitted_tick: u64,
+}
+
+impl Slot {
+    /// Re-prime the cache over the last `seq`-token window of the history
+    /// (also the initial prompt prime, where the history *is* the window).
+    fn reprime(&mut self, params: &ParamStore) -> Result<()> {
+        let cfg = *params.config();
+        self.cache.reset();
+        let lo = self.history.len().saturating_sub(cfg.seq);
+        let mut logits = None;
+        for &t in &self.history[lo..] {
+            logits = Some(forward_incremental(&cfg, params, &mut self.cache, t)?);
+        }
+        self.logits = logits.expect("non-empty history").into_vec();
+        Ok(())
+    }
+
+    /// Feed the newest history token: incremental while it fits the
+    /// positional table, sliding-window re-prime afterwards.
+    fn feed_last(&mut self, params: &ParamStore) -> Result<()> {
+        let cfg = *params.config();
+        if self.history.len() <= cfg.seq && self.cache.len() + 1 == self.history.len() {
+            let t = *self.history.last().expect("non-empty history");
+            self.logits = forward_incremental(&cfg, params, &mut self.cache, t)?.into_vec();
+            Ok(())
+        } else {
+            self.reprime(params)
+        }
+    }
+
+    /// One decode step: sample, append, and (unless finished) feed the new
+    /// token. Returns `true` when the sequence is done.
+    fn step(&mut self, params: &ParamStore) -> Result<bool> {
+        let next = sample_from_logits(&self.logits, &self.sampler, &mut self.rng);
+        self.history.push(next);
+        self.generated += 1;
+        if self.generated >= self.max_new_tokens {
+            return Ok(true);
+        }
+        self.feed_last(params)?;
+        Ok(false)
+    }
+
+    fn into_completion(self, finish: FinishReason, tick: u64) -> Completion {
+        Completion {
+            id: self.id,
+            tokens: self.history,
+            prompt_len: self.prompt_len,
+            generated: self.generated,
+            finish,
+            ticks_in_flight: tick.saturating_sub(self.admitted_tick),
+        }
+    }
+}
+
+/// Outcome of one scheduler tick.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TickReport {
+    /// Requests moved from the queue into slots this tick.
+    pub admitted: usize,
+    /// Prompt tokens processed while priming admissions.
+    pub prompt_tokens: usize,
+    /// Continuation tokens decoded this tick (one per active slot).
+    pub decoded: usize,
+    /// Requests that finished this tick.
+    pub completed: usize,
+}
+
+/// Request queue + in-flight slots (see module docs).
+pub struct Scheduler {
+    queue: VecDeque<(RequestId, Request)>,
+    pub(crate) active: Vec<Slot>,
+    max_slots: usize,
+    next_id: RequestId,
+    tick: u64,
+}
+
+impl Scheduler {
+    pub fn new(max_slots: usize) -> Scheduler {
+        Scheduler {
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            max_slots: max_slots.max(1),
+            next_id: 0,
+            tick: 0,
+        }
+    }
+
+    /// Enqueue a request (validated by the engine); returns its handle.
+    pub fn enqueue(&mut self, request: Request) -> RequestId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((id, request));
+        id
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+
+    pub fn max_slots(&self) -> usize {
+        self.max_slots
+    }
+
+    /// Admit queued requests into free slots, priming each prompt through
+    /// the KV cache. Returns `(admitted, prompt_tokens_processed)`.
+    pub fn admit(&mut self, params: &ParamStore) -> Result<(usize, usize)> {
+        let cfg = *params.config();
+        let mut admitted = 0;
+        let mut prompt_tokens = 0;
+        while self.active.len() < self.max_slots {
+            let Some((id, req)) = self.queue.pop_front() else { break };
+            let mut slot = Slot {
+                id,
+                prompt_len: req.prompt.len(),
+                history: req.prompt,
+                generated: 0,
+                max_new_tokens: req.max_new_tokens,
+                sampler: req.sampler,
+                // per-request stream: decoding order/batch composition
+                // cannot perturb another request's draws
+                rng: Pcg32::new(req.sampler.seed, 0x5E4E ^ id),
+                cache: KvCache::new(&cfg),
+                logits: Vec::new(),
+                admitted_tick: self.tick,
+            };
+            prompt_tokens += slot.history.len().min(cfg.seq);
+            slot.reprime(params)?;
+            self.active.push(slot);
+            admitted += 1;
+        }
+        Ok((admitted, prompt_tokens))
+    }
+
+    /// Advance every active slot one token. With `parallel`, slots decode
+    /// on scoped OS threads (identical results — slots share nothing
+    /// mutable). Finished sequences are drained and returned.
+    pub fn decode_tick(&mut self, params: &ParamStore, parallel: bool) -> Result<Vec<Completion>> {
+        self.tick += 1;
+        if self.active.is_empty() {
+            return Ok(Vec::new());
+        }
+        let outcomes: Vec<Result<bool>> = if parallel && self.active.len() > 1 {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .active
+                    .iter_mut()
+                    .map(|slot| scope.spawn(move || slot.step(params)))
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|_| {
+                            Err(Error::Serve("decode worker thread panicked".into()))
+                        })
+                    })
+                    .collect()
+            })
+        } else {
+            self.active.iter_mut().map(|slot| slot.step(params)).collect()
+        };
+
+        let mut finished_flags = Vec::with_capacity(outcomes.len());
+        for outcome in outcomes {
+            finished_flags.push(outcome?);
+        }
+        let mut completions = Vec::new();
+        let mut kept = Vec::with_capacity(self.active.len());
+        for (slot, finished) in self.active.drain(..).zip(finished_flags) {
+            if finished {
+                completions.push(slot.into_completion(FinishReason::MaxTokens, self.tick));
+            } else {
+                kept.push(slot);
+            }
+        }
+        self.active = kept;
+        Ok(completions)
+    }
+
+    /// Tick counter (for swap-scheduling and latency accounting).
+    pub fn ticks(&self) -> u64 {
+        self.tick
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { layers: 1, hidden: 8, heads: 1, k: 4, v: 4, mlp: 16, seq: 8, vocab: 16 }
+    }
+
+    fn params() -> ParamStore {
+        ParamStore::init(&cfg(), &mut Pcg32::seeded(1), 0.05)
+    }
+
+    fn greedy_req(prompt: Vec<u32>, n: usize) -> Request {
+        Request {
+            prompt,
+            max_new_tokens: n,
+            sampler: Sampler { temperature: 0.0, top_k: None, seed: 0 },
+        }
+    }
+
+    #[test]
+    fn fifo_admission_respects_slot_bound() {
+        let p = params();
+        let mut s = Scheduler::new(2);
+        for i in 0..5u32 {
+            s.enqueue(greedy_req(vec![i % 16], 4));
+        }
+        assert_eq!(s.queued(), 5);
+        let (admitted, prompt_tokens) = s.admit(&p).unwrap();
+        assert_eq!(admitted, 2);
+        assert_eq!(prompt_tokens, 2);
+        assert_eq!((s.queued(), s.in_flight()), (3, 2));
+        // no free slots: second admit is a no-op
+        assert_eq!(s.admit(&p).unwrap().0, 0);
+    }
+
+    #[test]
+    fn sequences_complete_and_drain_in_slot_order() {
+        let p = params();
+        let mut s = Scheduler::new(4);
+        let a = s.enqueue(greedy_req(vec![1, 2], 3));
+        let b = s.enqueue(greedy_req(vec![3], 5));
+        s.admit(&p).unwrap();
+        let mut done = Vec::new();
+        for _ in 0..10 {
+            done.extend(s.decode_tick(&p, false).unwrap());
+            if s.is_idle() {
+                break;
+            }
+        }
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].id, a);
+        assert_eq!(done[0].generated, 3);
+        assert_eq!(done[0].tokens.len(), 2 + 3);
+        assert_eq!(done[0].finish, FinishReason::MaxTokens);
+        assert_eq!(done[1].id, b);
+        assert_eq!(done[1].tokens.len(), 1 + 5);
+        assert!(done[1].ticks_in_flight >= done[0].ticks_in_flight);
+    }
+
+    #[test]
+    fn sliding_window_reprimes_past_seq() {
+        // prompt 2 + 12 generated = 14 > seq 8: the slot must slide without
+        // erroring and keep producing in-vocab tokens
+        let p = params();
+        let mut s = Scheduler::new(1);
+        s.enqueue(greedy_req(vec![1, 2], 12));
+        s.admit(&p).unwrap();
+        let mut done = Vec::new();
+        while !s.is_idle() {
+            done.extend(s.decode_tick(&p, false).unwrap());
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens.len(), 14);
+        assert!(done[0].tokens.iter().all(|&t| (t as usize) < cfg().vocab));
+    }
+
+    #[test]
+    fn parallel_and_serial_decode_agree() {
+        let p = params();
+        let run = |parallel: bool| {
+            let mut s = Scheduler::new(4);
+            for i in 0..4u32 {
+                s.enqueue(Request {
+                    prompt: vec![i, i + 1],
+                    max_new_tokens: 6,
+                    sampler: Sampler { temperature: 0.8, top_k: Some(8), seed: 7 },
+                });
+            }
+            s.admit(&p).unwrap();
+            let mut done = Vec::new();
+            while !s.is_idle() {
+                done.extend(s.decode_tick(&p, parallel).unwrap());
+            }
+            done.sort_by_key(|c| c.id);
+            done.iter().map(|c| c.tokens.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(true), run(false));
+    }
+}

@@ -1,0 +1,211 @@
+//! Integration: the serving subsystem end to end, on the pure-Rust
+//! reference path (no AOT artifacts required).
+//!
+//! Proves the two acceptance properties of the `serve` subsystem:
+//! (a) KV-cached incremental decode is **token-identical** to the KV-less
+//!     full-re-forward oracle (`generate::generate_ref`) for greedy
+//!     sampling, including past the sliding-window boundary;
+//! (b) a mid-serving function-preserving hot-swap leaves in-flight greedy
+//!     generations **byte-identical** while the live model grows, with the
+//!     preservation probe at `max|Δ logits| ≤ preserve_tol`.
+
+use texpand::config::{GrowthOp, LayerPosition, ModelConfig};
+use texpand::expand::{ExpandOptions, Init};
+use texpand::generate::{generate_ref, Sampler};
+use texpand::params::ParamStore;
+use texpand::rng::Pcg32;
+use texpand::serve::{Engine, EngineOptions};
+
+const PRESERVE_TOL: f32 = 1e-4; // DESIGN.md §8
+
+fn cfg() -> ModelConfig {
+    ModelConfig { layers: 2, hidden: 16, heads: 2, k: 8, v: 8, mlp: 32, seq: 16, vocab: 32 }
+}
+
+fn setup(seed: u64, n_prompts: usize) -> (ParamStore, Vec<Vec<u32>>) {
+    let c = cfg();
+    let mut rng = Pcg32::seeded(seed);
+    let params = ParamStore::init(&c, &mut rng, 0.05);
+    let prompts = (0..n_prompts)
+        .map(|i| (0..(2 + i % 3)).map(|_| rng.below(c.vocab) as u32).collect())
+        .collect();
+    (params, prompts)
+}
+
+fn greedy() -> Sampler {
+    Sampler { temperature: 0.0, top_k: None, seed: 0 }
+}
+
+fn engine(params: ParamStore, slots: usize, parallel: bool) -> Engine {
+    Engine::new(params, EngineOptions { max_slots: slots, parallel, ..Default::default() })
+}
+
+/// Run every prompt through the engine and return completions in submit
+/// order.
+fn serve_all(
+    engine: &mut Engine,
+    prompts: &[Vec<u32>],
+    new_tokens: usize,
+    sampler: Sampler,
+) -> Vec<Vec<u32>> {
+    let ids: Vec<_> =
+        prompts.iter().map(|p| engine.submit(p.clone(), new_tokens, sampler).unwrap()).collect();
+    engine.run_until_idle().unwrap();
+    ids.iter().map(|&id| engine.poll(id).unwrap().tokens).collect()
+}
+
+#[test]
+fn kv_decode_is_token_identical_to_full_reforward_greedy() {
+    let (params, prompts) = setup(41, 4);
+    // 24 new tokens on seq=16: every sequence crosses the sliding-window
+    // boundary, exercising both the incremental and the re-prime paths
+    let new_tokens = 24;
+    let want = generate_ref(&params, &prompts, new_tokens, &greedy()).unwrap();
+    let mut eng = engine(params, 4, false);
+    let got = serve_all(&mut eng, &prompts, new_tokens, greedy());
+    assert_eq!(got, want, "KV-cached decode diverged from the full-re-forward oracle");
+}
+
+#[test]
+fn continuous_batching_beyond_slot_count_matches_oracle() {
+    // 6 requests through 2 slots: completions free slots mid-run and the
+    // queue drains into them; batching must not perturb any sequence
+    let (params, prompts) = setup(43, 6);
+    let want = generate_ref(&params, &prompts, 10, &greedy()).unwrap();
+    let mut eng = engine(params, 2, false);
+    let got = serve_all(&mut eng, &prompts, 10, greedy());
+    assert_eq!(got, want);
+    assert_eq!(eng.counters().completed, 6);
+    assert_eq!(eng.counters().tokens_generated, 60);
+}
+
+#[test]
+fn parallel_decode_matches_serial() {
+    let (params, prompts) = setup(47, 5);
+    let sampler = Sampler { temperature: 0.8, top_k: Some(8), seed: 3 };
+    let mut serial = engine(params.clone(), 4, false);
+    let mut parallel = engine(params, 4, true);
+    assert_eq!(
+        serve_all(&mut serial, &prompts, 12, sampler),
+        serve_all(&mut parallel, &prompts, 12, sampler)
+    );
+}
+
+#[test]
+fn hot_swap_mid_flight_keeps_greedy_continuations_identical() {
+    // acceptance (b): expand_mlp + add_heads + add_layers applied to the
+    // live model with generations in flight; the finished outputs must be
+    // byte-identical to a rollout that never saw a swap
+    let (params, prompts) = setup(53, 3);
+    let new_tokens = 20;
+    let want = generate_ref(&params, &prompts, new_tokens, &greedy()).unwrap();
+
+    let mut eng = engine(params, 4, false);
+    let ids: Vec<_> =
+        prompts.iter().map(|p| eng.submit(p.clone(), new_tokens, greedy()).unwrap()).collect();
+    for _ in 0..5 {
+        eng.tick().unwrap();
+    }
+    assert!(!eng.is_idle(), "swap must land mid-flight");
+
+    let ops = vec![
+        GrowthOp::Mlp { p: 64 },
+        GrowthOp::HeadsAdd { count: 1 },
+        GrowthOp::LayersAdd { count: 1, position: LayerPosition::At(1) },
+    ];
+    // aggressive unconstrained init: preservation must hold regardless
+    let opts = ExpandOptions { init: Init::Normal(0.3), ..Default::default() };
+    let report = eng.hot_swap(&ops, &mut Pcg32::seeded(9), &opts).unwrap();
+    assert!(report.probe_delta <= PRESERVE_TOL, "probe delta {}", report.probe_delta);
+    assert_eq!(report.remapped_sequences, 3);
+    assert_eq!((eng.config().mlp, eng.config().heads, eng.config().layers), (64, 3, 3));
+    assert!(report.params_after > report.params_before);
+
+    eng.run_until_idle().unwrap();
+    let got: Vec<_> = ids.iter().map(|&id| eng.poll(id).unwrap().tokens).collect();
+    assert_eq!(got, want, "hot-swap perturbed in-flight greedy generations");
+}
+
+#[test]
+fn hot_swap_with_scaling_ops_stays_within_probe_tolerance() {
+    // attn_expand and hidden carry the paper's sqrt scale factors: the
+    // remap is exact only up to float reassociation, so the guarantee is
+    // the probe tolerance (plus the swap committing under live traffic)
+    let (params, prompts) = setup(59, 2);
+    let mut eng = engine(params, 2, false);
+    let ids: Vec<_> =
+        prompts.iter().map(|p| eng.submit(p.clone(), 12, greedy()).unwrap()).collect();
+    for _ in 0..3 {
+        eng.tick().unwrap();
+    }
+    let ops = vec![GrowthOp::AttnExpand { k: 16 }, GrowthOp::Hidden { h: 24 }];
+    let opts = ExpandOptions { init: Init::Normal(0.3), ..Default::default() };
+    let report = eng.hot_swap(&ops, &mut Pcg32::seeded(11), &opts).unwrap();
+    assert!(report.probe_delta <= PRESERVE_TOL, "probe delta {}", report.probe_delta);
+    assert_eq!((eng.config().k, eng.config().hidden), (16, 24));
+    eng.run_until_idle().unwrap();
+    for id in ids {
+        let c = eng.poll(id).unwrap();
+        assert_eq!(c.generated, 12);
+        assert!(c.tokens.iter().all(|&t| (t as usize) < eng.config().vocab));
+    }
+}
+
+#[test]
+fn rejected_swap_leaves_serving_byte_identical() {
+    // a constraint-violating surgery (E6 ablation) must be rejected by the
+    // probe and leave the engine producing exactly the no-swap outputs
+    let (params, prompts) = setup(61, 2);
+    let want = generate_ref(&params, &prompts, 10, &greedy()).unwrap();
+    let mut eng = engine(params, 2, false);
+    let ids: Vec<_> =
+        prompts.iter().map(|p| eng.submit(p.clone(), 10, greedy()).unwrap()).collect();
+    eng.tick().unwrap();
+
+    let opts = ExpandOptions {
+        init: Init::Normal(0.5),
+        zero_constrained: false,
+        ..Default::default()
+    };
+    let err =
+        eng.hot_swap(&[GrowthOp::Mlp { p: 64 }], &mut Pcg32::seeded(13), &opts).unwrap_err();
+    assert!(err.to_string().contains("rejected"), "{err}");
+    assert_eq!(eng.config(), &cfg());
+
+    eng.run_until_idle().unwrap();
+    let got: Vec<_> = ids.iter().map(|&id| eng.poll(id).unwrap().tokens).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn two_consecutive_swaps_compose_under_load() {
+    // growth is composable (paper §3): two separate swaps mid-serving must
+    // keep greedy outputs identical end to end
+    let (params, prompts) = setup(67, 2);
+    let new_tokens = 18;
+    let want = generate_ref(&params, &prompts, new_tokens, &greedy()).unwrap();
+    let mut eng = engine(params, 2, false);
+    let ids: Vec<_> =
+        prompts.iter().map(|p| eng.submit(p.clone(), new_tokens, greedy()).unwrap()).collect();
+
+    let opts = ExpandOptions { init: Init::Normal(0.3), ..Default::default() };
+    let mut rng = Pcg32::seeded(17);
+    for _ in 0..3 {
+        eng.tick().unwrap();
+    }
+    eng.hot_swap(&[GrowthOp::Mlp { p: 48 }], &mut rng, &opts).unwrap();
+    for _ in 0..3 {
+        eng.tick().unwrap();
+    }
+    eng.hot_swap(
+        &[GrowthOp::HeadsAdd { count: 1 }, GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top }],
+        &mut rng,
+        &opts,
+    )
+    .unwrap();
+    assert_eq!(eng.counters().swaps, 2);
+
+    eng.run_until_idle().unwrap();
+    let got: Vec<_> = ids.iter().map(|&id| eng.poll(id).unwrap().tokens).collect();
+    assert_eq!(got, want);
+}

@@ -1,0 +1,234 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! This container image carries no libxla / PJRT plugin, so the crate
+//! presents the same API surface the framework uses and draws a sharp
+//! line between the two halves of it:
+//!
+//! * **Host-side literal marshalling is real.** [`Literal`] stores typed
+//!   row-major bytes; `create_from_shape_and_untyped_data` / `to_vec`
+//!   validate shapes and round-trip data exactly like the real bindings,
+//!   so every unit test of the marshalling layer runs against this stub.
+//! * **Device execution is absent.** [`HloModuleProto::from_text_file`]
+//!   (the only road into compilation) fails with a clear "PJRT unavailable"
+//!   error, so any path that needs real AOT artifacts fails loudly at
+//!   artifact-load time rather than silently computing garbage.
+//!
+//! Swapping this path dependency for the real bindings re-enables the
+//! compiled execution path with no source changes in `texpand`.
+
+use std::fmt;
+
+/// Stub error type mirroring the binding's error enum where used.
+#[derive(Debug)]
+pub enum Error {
+    /// Element count does not match the target dimensions.
+    WrongElementCount { dims: Vec<usize>, element_count: usize },
+    /// The requested operation needs the real PJRT runtime.
+    Unavailable(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::WrongElementCount { dims, element_count } => {
+                write!(f, "wrong element count {element_count} for dims {dims:?}")
+            }
+            Error::Unavailable(msg) => write!(f, "PJRT unavailable (stub xla build): {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the framework marshals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn size_in_bytes(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+        }
+    }
+}
+
+/// Rust-native scalar types a [`Literal`] can decode to.
+pub trait NativeType: Sized {
+    const TY: ElementType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        i32::from_le_bytes(bytes)
+    }
+}
+
+/// A typed host buffer with a shape — the real part of the stub.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    /// Build a literal from raw little-endian bytes; validates the count.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let expect: usize = dims.iter().product::<usize>() * ty.size_in_bytes();
+        if data.len() != expect {
+            return Err(Error::WrongElementCount {
+                dims: dims.to_vec(),
+                element_count: data.len() / ty.size_in_bytes(),
+            });
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), bytes: data.to_vec() })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Decode to a typed vector (type must match the stored element type).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(Error::Unavailable(format!(
+                "to_vec type mismatch: literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Destructure a 1-element tuple literal. Stub literals are never
+    /// tuples — only reachable after a real execution, which the stub
+    /// cannot perform.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::Unavailable("tuple literals require a real execution result".into()))
+    }
+
+    /// Destructure a tuple literal (see [`Literal::to_tuple1`]).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("tuple literals require a real execution result".into()))
+    }
+}
+
+/// Parsed HLO module. The stub cannot parse HLO text: constructing one is
+/// the gateway to compilation, so this is where the stub draws its line.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable(format!(
+            "cannot parse HLO artifact '{path}' — rebuild with the real xla bindings"
+        )))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device buffer handle returned by execution (unreachable in the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("no device buffers in the stub build".into()))
+    }
+}
+
+/// Compiled executable handle (never constructed in the stub: compilation
+/// requires an [`HloModuleProto`], which the stub refuses to produce).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("no execution in the stub build".into()))
+    }
+}
+
+/// PJRT client. Construction succeeds (the pure-Rust paths — serving,
+/// reference forward, surgery — never touch it), execution does not.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient(()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (no PJRT)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("compilation requires the real xla bindings".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        assert_eq!(lit.dims(), &[3]);
+    }
+
+    #[test]
+    fn literal_validates_count_and_type() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4]).is_err());
+        let lit = Literal::create_from_shape_and_untyped_data(ElementType::S32, &[1], &[1, 0, 0, 0]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1]);
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn execution_paths_fail_loudly() {
+        assert!(HloModuleProto::from_text_file("/tmp/x.hlo.txt").is_err());
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+    }
+}
