@@ -43,7 +43,7 @@ fn main() {
     let mut coord = Coordinator::new(
         schedule.clone(),
         manifest.clone(),
-        Runtime::cpu().unwrap(),
+        Box::new(Runtime::cpu().unwrap()),
         tcfg.clone(),
         CoordinatorOptions {
             steps_scale: scale,

@@ -1,0 +1,94 @@
+//! Native-backend training-step throughput across model sizes.
+//!
+//! Seeds the BENCH trajectory for the offline training path: per-size
+//! step latency + tokens/sec through `autodiff::loss_and_grads` +
+//! `Optimizer::step`, plus the blocked-vs-naive matmul kernel comparison
+//! that justifies the `tensor::matmul` hot-path rework. Rows append to
+//! `runs/bench.jsonl`.
+//!
+//! Run: `cargo bench --bench train_step` (no artifacts needed)
+
+use texpand::autodiff::loss_and_grads;
+use texpand::bench_util::{bench_for, Reporter};
+use texpand::config::{ModelConfig, OptimKind, TrainConfig};
+use texpand::data::Batch;
+use texpand::json::Value;
+use texpand::optim::Optimizer;
+use texpand::params::ParamStore;
+use texpand::rng::Pcg32;
+use texpand::tensor::Tensor;
+
+fn main() {
+    let mut rep = Reporter::new("train_step (native backend)");
+    let budget = std::time::Duration::from_millis(1500);
+
+    // three sizes: the test tiny config, the tiny-schedule base, and the
+    // default-schedule base
+    let cases = [
+        ("tiny  (1L h16)", ModelConfig { layers: 1, hidden: 16, heads: 2, k: 8, v: 8, mlp: 32, seq: 16, vocab: 64 }, 4usize),
+        ("small (2L h32)", ModelConfig { layers: 2, hidden: 32, heads: 2, k: 16, v: 16, mlp: 64, seq: 32, vocab: 128 }, 4),
+        ("base  (2L h64)", ModelConfig { layers: 2, hidden: 64, heads: 2, k: 32, v: 32, mlp: 128, seq: 64, vocab: 256 }, 8),
+    ];
+
+    for (label, cfg, batch_rows) in cases {
+        let mut rng = Pcg32::seeded(1);
+        let mut params = ParamStore::init(&cfg, &mut rng, 0.02);
+        let mut opt = Optimizer::new(
+            &TrainConfig { optimizer: OptimKind::Adam, ..Default::default() },
+            &params,
+        );
+        let batch = Batch::random(&cfg, batch_rows, 2);
+        let tokens_per_step = (batch_rows * cfg.seq) as f64;
+
+        // grads only (the autodiff cost itself)
+        let grad_stats = bench_for(1, budget, || loss_and_grads(&cfg, &params, &batch).unwrap());
+        rep.row(
+            &format!("{label} loss_and_grads"),
+            &grad_stats,
+            vec![
+                ("kind", Value::str("loss_and_grads")),
+                ("params", Value::num(cfg.num_params() as f64)),
+                ("tokens_per_sec", Value::num(grad_stats.per_second(tokens_per_step))),
+            ],
+        );
+
+        // full step: grads + Adam update
+        let step_stats = bench_for(1, budget, || {
+            let (loss, grads) = loss_and_grads(&cfg, &params, &batch).unwrap();
+            opt.step(&mut params, &grads).unwrap();
+            loss
+        });
+        let tps = step_stats.per_second(tokens_per_step);
+        rep.row(
+            &format!("{label} step ({tps:.0} tok/s)"),
+            &step_stats,
+            vec![
+                ("kind", Value::str("step")),
+                ("params", Value::num(cfg.num_params() as f64)),
+                ("step_ms", Value::num(step_stats.mean_ms())),
+                ("tokens_per_sec", Value::num(tps)),
+            ],
+        );
+    }
+
+    // blocked vs naive matmul on training-shaped products
+    for (m, k, n) in [(64usize, 64usize, 256usize), (64, 256, 64), (128, 128, 128)] {
+        let mut rng = Pcg32::seeded(3);
+        let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+        let b = Tensor::randn(&[k, n], &mut rng, 1.0);
+        let blocked = bench_for(2, budget, || a.matmul(&b).unwrap());
+        let naive = bench_for(2, budget, || a.matmul_naive(&b).unwrap());
+        let speedup = naive.mean_ns / blocked.mean_ns;
+        rep.row(
+            &format!("matmul {m}x{k}x{n} blocked ({speedup:.2}x vs naive)"),
+            &blocked,
+            vec![
+                ("kind", Value::str("matmul_blocked")),
+                ("naive_mean_ns", Value::num(naive.mean_ns)),
+                ("speedup", Value::num(speedup)),
+            ],
+        );
+    }
+
+    rep.flush();
+}

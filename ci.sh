@@ -38,4 +38,16 @@ fi
 echo "==> cargo test -q (tier-1, step 2)"
 cargo test -q
 
+if [ "$FAST" = "0" ]; then
+  echo "==> offline grow-train smoke (native backend, tiny schedule)"
+  SMOKE_RUNS="$(mktemp -d)"
+  trap 'rm -rf "$SMOKE_RUNS"' EXIT # clean up even when the smoke run fails
+  ./target/release/texpand train \
+    --backend native \
+    --schedule configs/growth_tiny.json \
+    --steps-scale 0.2 \
+    --runs "$SMOKE_RUNS" --run-name ci-smoke --no-checkpoints \
+    --log-every 100
+fi
+
 echo "ci.sh: all green"

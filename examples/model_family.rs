@@ -21,7 +21,7 @@ fn main() -> texpand::Result<()> {
 
     let schedule = GrowthSchedule::load("configs/growth_default.json")?;
     let manifest = Manifest::load("artifacts", "manifest.json")?;
-    let runtime = Runtime::cpu()?;
+    let runtime = Box::new(Runtime::cpu()?);
     let tcfg = TrainConfig { log_every: 50, ..Default::default() };
     let opts = CoordinatorOptions::default();
     let mut coord = Coordinator::new(schedule.clone(), manifest, runtime, tcfg, opts)?;

@@ -20,7 +20,7 @@ fn main() -> texpand::Result<()> {
 
     let schedule = GrowthSchedule::load("configs/growth_default.json")?;
     let manifest = Manifest::load("artifacts", "manifest.json")?;
-    let runtime = Runtime::cpu()?;
+    let runtime = Box::new(Runtime::cpu()?);
     let tcfg = TrainConfig { log_every: 25, ..Default::default() };
     let opts = CoordinatorOptions {
         steps_scale,

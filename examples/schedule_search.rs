@@ -33,7 +33,7 @@ fn main() -> texpand::Result<()> {
     let mut coord = Coordinator::new(
         schedule.clone(),
         manifest.clone(),
-        Runtime::cpu()?,
+        Box::new(Runtime::cpu()?),
         tcfg.clone(),
         CoordinatorOptions::default(),
     )?;

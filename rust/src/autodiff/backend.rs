@@ -1,0 +1,225 @@
+//! Execution backends (S16d): one trait, two engines.
+//!
+//! [`ExecBackend`] abstracts the two operations the training stack needs
+//! from an execution engine — batched `forward` logits and a training
+//! `step` returning `(loss, canonical-order grads)` — plus `load_stage`,
+//! which resolves a stage name into an executable handle. Two impls:
+//!
+//! * [`crate::runtime::Runtime`] — the PJRT path: compiles the stage's AOT
+//!   HLO artifacts and executes them (needs `make artifacts` + real xla
+//!   bindings).
+//! * [`NativeBackend`] — the pure-Rust path: interprets the reference model
+//!   ([`crate::model`]) forward and runs the hand-written reverse pass
+//!   ([`crate::autodiff::loss_and_grads`]). No artifacts, no Python, fully
+//!   offline — `texpand train --backend native` runs the paper's whole
+//!   grow-as-you-train loop on it.
+//!
+//! The native backend deliberately mirrors the PJRT runtime's *strictness*
+//! (fixed batch size, exact seq length, config match) even though the
+//! interpreter could be lax: train/coordinator/generate treat both engines
+//! identically, and the integration suite runs the same scenarios against
+//! either.
+
+use crate::data::Batch;
+use crate::error::{Error, Result};
+use crate::model;
+use crate::params::ParamStore;
+use crate::runtime::{Manifest, Runtime, StageExec};
+use crate::tensor::Tensor;
+
+/// An engine that can execute one architecture stage (see module docs).
+pub trait ExecBackend {
+    /// Human-readable engine name (run logs, `texpand info`).
+    fn platform(&self) -> String;
+
+    /// `true` when `forward` *is* the pure-Rust reference model
+    /// ([`crate::model::forward`]), bit for bit. Lets callers that probe
+    /// both the reference and the backend (the coordinator's boundary
+    /// verification) skip the second, tautologically-identical probe.
+    fn is_reference_model(&self) -> bool {
+        false
+    }
+
+    /// Resolve a manifest stage into an executable handle.
+    fn load_stage(&mut self, manifest: &Manifest, stage_name: &str) -> Result<StageExec>;
+
+    /// Batched forward: one `[seq, vocab]` logits tensor per batch row.
+    fn forward(&self, stage: &StageExec, params: &ParamStore, tokens: &[Vec<u32>])
+        -> Result<Vec<Tensor>>;
+
+    /// Training step: `(mean cross-entropy, canonical-order gradients)`.
+    fn step(&self, stage: &StageExec, params: &ParamStore, batch: &Batch)
+        -> Result<(f32, Vec<Tensor>)>;
+}
+
+impl ExecBackend for Runtime {
+    fn platform(&self) -> String {
+        Runtime::platform(self)
+    }
+
+    fn load_stage(&mut self, manifest: &Manifest, stage_name: &str) -> Result<StageExec> {
+        Runtime::load_stage(self, manifest, stage_name)
+    }
+
+    fn forward(
+        &self,
+        stage: &StageExec,
+        params: &ParamStore,
+        tokens: &[Vec<u32>],
+    ) -> Result<Vec<Tensor>> {
+        Runtime::forward(self, stage, params, tokens)
+    }
+
+    fn step(&self, stage: &StageExec, params: &ParamStore, batch: &Batch) -> Result<(f32, Vec<Tensor>)> {
+        Runtime::step(self, stage, params, batch)
+    }
+}
+
+/// The pure-Rust autodiff engine (see module docs). Stateless: the model is
+/// interpreted directly from the [`ParamStore`], so "loading" a stage is
+/// just adopting its metadata.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+
+    /// Same input discipline as the PJRT runtime: params must match the
+    /// stage config, the batch must be exactly the compiled batch size, and
+    /// every row exactly `seq` tokens.
+    fn check(stage: &StageExec, params: &ParamStore, rows: &[Vec<u32>]) -> Result<()> {
+        if params.config() != &stage.meta.config {
+            return Err(Error::Runtime(format!(
+                "params for {:?} fed to stage '{}' expecting {:?}",
+                params.config(),
+                stage.meta.name,
+                stage.meta.config
+            )));
+        }
+        if rows.len() != stage.batch {
+            return Err(Error::Runtime(format!(
+                "batch {} rows, stage configured for {}",
+                rows.len(),
+                stage.batch
+            )));
+        }
+        for row in rows {
+            if row.len() != stage.meta.config.seq {
+                return Err(Error::Runtime(format!(
+                    "sequence of {} tokens, stage configured for seq {}",
+                    row.len(),
+                    stage.meta.config.seq
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn platform(&self) -> String {
+        "native".to_string()
+    }
+
+    fn is_reference_model(&self) -> bool {
+        true
+    }
+
+    fn load_stage(&mut self, manifest: &Manifest, stage_name: &str) -> Result<StageExec> {
+        Ok(StageExec::native(manifest.stage(stage_name)?.clone(), manifest.batch))
+    }
+
+    fn forward(
+        &self,
+        stage: &StageExec,
+        params: &ParamStore,
+        tokens: &[Vec<u32>],
+    ) -> Result<Vec<Tensor>> {
+        Self::check(stage, params, tokens)?;
+        model::forward(&stage.meta.config, params, tokens)
+    }
+
+    fn step(&self, stage: &StageExec, params: &ParamStore, batch: &Batch) -> Result<(f32, Vec<Tensor>)> {
+        Self::check(stage, params, &batch.tokens)?;
+        Self::check(stage, params, &batch.targets)?;
+        super::backward::loss_and_grads(&stage.meta.config, params, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GrowthSchedule;
+    use crate::json::Value;
+    use crate::rng::Pcg32;
+
+    fn tiny_schedule() -> GrowthSchedule {
+        GrowthSchedule::from_json(
+            &Value::parse(
+                r#"{
+                    "name": "be-test", "batch": 2, "seq": 8, "vocab": 16,
+                    "base": {"layers":1,"hidden":8,"heads":1,"k":4,"v":4,"mlp":16},
+                    "stages": [
+                        {"steps": 5},
+                        {"steps": 5, "apply": [{"op":"mlp","p":32}]}
+                    ]
+                }"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn native_backend_runs_both_contract_methods() {
+        let sched = tiny_schedule();
+        let manifest = Manifest::from_schedule(&sched);
+        let mut be = NativeBackend::new();
+        assert_eq!(be.platform(), "native");
+        let stage = be.load_stage(&manifest, "stage0").unwrap();
+        let cfg = stage.meta.config;
+        let mut rng = Pcg32::seeded(1);
+        let params = ParamStore::init(&cfg, &mut rng, 0.05);
+        let batch = Batch::random(&cfg, manifest.batch, 2);
+
+        let logits = be.forward(&stage, &params, &batch.tokens).unwrap();
+        assert_eq!(logits.len(), manifest.batch);
+        assert_eq!(logits[0].shape(), &[cfg.seq, cfg.vocab]);
+        // forward through the backend == the reference model, exactly
+        let reference = model::forward(&cfg, &params, &batch.tokens).unwrap();
+        assert_eq!(logits, reference);
+
+        let (loss, grads) = be.step(&stage, &params, &batch).unwrap();
+        assert!(loss.is_finite());
+        assert_eq!(grads.len(), params.len());
+    }
+
+    #[test]
+    fn native_backend_is_strict_about_inputs() {
+        let sched = tiny_schedule();
+        let manifest = Manifest::from_schedule(&sched);
+        let mut be = NativeBackend::new();
+        let stage0 = be.load_stage(&manifest, "stage0").unwrap();
+        let cfg0 = stage0.meta.config;
+        let cfg1 = sched.stages[1].config;
+        let mut rng = Pcg32::seeded(3);
+
+        // params for the wrong stage
+        let wrong = ParamStore::init(&cfg1, &mut rng, 0.05);
+        let batch = Batch::random(&cfg0, manifest.batch, 4);
+        assert!(be.forward(&stage0, &wrong, &batch.tokens).is_err());
+
+        let params = ParamStore::init(&cfg0, &mut rng, 0.05);
+        // wrong batch size
+        let small = Batch::random(&cfg0, manifest.batch - 1, 5);
+        assert!(be.forward(&stage0, &params, &small.tokens).is_err());
+        // wrong seq length
+        let mut ragged = Batch::random(&cfg0, manifest.batch, 6);
+        ragged.tokens[0].pop();
+        assert!(be.forward(&stage0, &params, &ragged.tokens).is_err());
+        // unknown stage name
+        assert!(be.load_stage(&manifest, "stage9").is_err());
+    }
+}

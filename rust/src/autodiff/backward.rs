@@ -1,0 +1,363 @@
+//! Full-model reverse pass (S16c): taped forward → per-parameter grads.
+//!
+//! [`loss_and_grads`] is the native equivalent of a PJRT `step` artifact:
+//! it returns `(mean cross-entropy, canonical-order gradients)` for one
+//! batch. Gradients are accumulated into a zeroed [`ParamStore`], which
+//! buys two invariants for free: every gradient has exactly its parameter's
+//! shape, and [`ParamStore::into_tensors`] exports them in the canonical
+//! order [`crate::optim::Optimizer::step`] consumes.
+//!
+//! The walk is the forward tape in reverse (derivations in DESIGN.md §10):
+//!
+//! ```text
+//! d_logits = (softmax - onehot)/count          // cross_entropy_grad
+//! dW_out   = x_finalᵀ·d_logits ; dx = d_logits·W_outᵀ
+//! per layer, last to first:
+//!   MLP half:  b2/W2/ReLU/b1/W1 grads, then rmsnorm_backward(x_mid) and
+//!              the residual shortcut both add into dx
+//!   MHA half:  Wo grad, per-head attention_backward + Wq/Wk/Wv grads,
+//!              then rmsnorm_backward(x_in) + residual shortcut into dx
+//! embed/pos: scatter-add dx rows by token id / position
+//! ```
+
+use crate::config::ModelConfig;
+use crate::data::Batch;
+use crate::error::{Error, Result};
+use crate::params::ParamStore;
+use crate::tensor::Tensor;
+
+use super::ops::{
+    attention_backward, col_sums, cross_entropy_grad_with_loss, relu_backward_inplace,
+    rmsnorm_backward,
+};
+use super::tape::{forward_with_tape, SeqTape};
+
+/// Add `delta` into the named gradient accumulator slot.
+fn accumulate(grads: &mut ParamStore, name: &str, delta: &Tensor) -> Result<()> {
+    grads.get_mut(name)?.add_assign(delta)
+}
+
+/// Backward for one taped sequence; accumulates into `grads`.
+pub fn backward_seq(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    tape: &SeqTape,
+    d_logits: &Tensor,
+    grads: &mut ParamStore,
+) -> Result<()> {
+    if d_logits.shape() != tape.logits.shape() {
+        return Err(Error::Shape(format!(
+            "backward_seq: d_logits {:?} vs logits {:?}",
+            d_logits.shape(),
+            tape.logits.shape()
+        )));
+    }
+    // logits = x_final · W_out
+    accumulate(grads, "w_out", &tape.x_final.matmul_at(d_logits)?)?;
+    let mut dx = d_logits.matmul_bt(params.get("w_out")?)?;
+
+    for n in (0..cfg.layers).rev() {
+        let lt = &tape.layers[n];
+
+        // ---- MLP half (reverse): x_out = x_mid + ReLU(nrm2·W1+b1)·W2 + b2
+        accumulate(grads, &format!("layer_{n}.b2"), &col_sums(&dx)?)?;
+        accumulate(grads, &format!("layer_{n}.w2"), &lt.hid.matmul_at(&dx)?)?;
+        let mut d_hid = dx.matmul_bt(params.get(&format!("layer_{n}.w2"))?)?;
+        relu_backward_inplace(&mut d_hid, &lt.hid)?;
+        accumulate(grads, &format!("layer_{n}.b1"), &col_sums(&d_hid)?)?;
+        accumulate(grads, &format!("layer_{n}.w1"), &lt.nrm2.matmul_at(&d_hid)?)?;
+        let d_nrm2 = d_hid.matmul_bt(params.get(&format!("layer_{n}.w1"))?)?;
+        let (dx_mid, d_g_mlp) =
+            rmsnorm_backward(&lt.x_mid, params.get(&format!("layer_{n}.g_mlp"))?, &d_nrm2)?;
+        accumulate(grads, &format!("layer_{n}.g_mlp"), &d_g_mlp)?;
+        // residual shortcut (dx passes through) + the normalized path
+        dx.add_assign(&dx_mid)?;
+
+        // ---- MHA half (reverse): x_mid = x_in + Concat_e(head_e) · Wo
+        accumulate(grads, &format!("layer_{n}.wo"), &lt.concat.matmul_at(&dx)?)?;
+        let d_concat = dx.matmul_bt(params.get(&format!("layer_{n}.wo"))?)?;
+        let mut d_nrm1 = Tensor::zeros(&[cfg.seq, cfg.hidden]);
+        for e in 0..cfg.heads {
+            let ht = &lt.heads[e];
+            let d_head = d_concat.slice_cols(e * cfg.v, (e + 1) * cfg.v)?;
+            let (dq, dk, dv) = attention_backward(&ht.q, &ht.k, &ht.v, &ht.probs, &d_head)?;
+            accumulate(grads, &format!("layer_{n}.head_{e}.wq"), &lt.nrm1.matmul_at(&dq)?)?;
+            accumulate(grads, &format!("layer_{n}.head_{e}.wk"), &lt.nrm1.matmul_at(&dk)?)?;
+            accumulate(grads, &format!("layer_{n}.head_{e}.wv"), &lt.nrm1.matmul_at(&dv)?)?;
+            d_nrm1.add_assign(&dq.matmul_bt(params.get(&format!("layer_{n}.head_{e}.wq"))?)?)?;
+            d_nrm1.add_assign(&dk.matmul_bt(params.get(&format!("layer_{n}.head_{e}.wk"))?)?)?;
+            d_nrm1.add_assign(&dv.matmul_bt(params.get(&format!("layer_{n}.head_{e}.wv"))?)?)?;
+        }
+        let (dx_in, d_g_mha) =
+            rmsnorm_backward(&lt.x_in, params.get(&format!("layer_{n}.g_mha"))?, &d_nrm1)?;
+        accumulate(grads, &format!("layer_{n}.g_mha"), &d_g_mha)?;
+        dx.add_assign(&dx_in)?;
+    }
+
+    // x_0[i] = embed[token_i] + pos[i]
+    let d_embed = grads.get_mut("embed")?;
+    for (i, &t) in tape.tokens.iter().enumerate() {
+        let src = dx.row(i);
+        let dst = d_embed.row_mut(t as usize);
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
+    }
+    let d_pos = grads.get_mut("pos")?;
+    for i in 0..cfg.seq {
+        let src = dx.row(i);
+        let dst = d_pos.row_mut(i);
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
+    }
+    Ok(())
+}
+
+/// One native training step's math: forward (taped) + mean cross-entropy +
+/// full backward over the batch. Returns `(loss, canonical-order grads)` —
+/// the exact contract of the PJRT `step` artifact.
+pub fn loss_and_grads(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    batch: &Batch,
+) -> Result<(f32, Vec<Tensor>)> {
+    if batch.tokens.is_empty() || batch.tokens.len() != batch.targets.len() {
+        return Err(Error::Train(format!(
+            "loss_and_grads: {} token rows vs {} target rows",
+            batch.tokens.len(),
+            batch.targets.len()
+        )));
+    }
+    let count: usize = batch.targets.iter().map(Vec::len).sum();
+    let mut grads = ParamStore::zeros(cfg);
+    let mut loss_sum = 0.0f64;
+    for (toks, tgts) in batch.tokens.iter().zip(&batch.targets) {
+        if tgts.len() != toks.len() {
+            return Err(Error::Train("loss_and_grads: ragged targets".into()));
+        }
+        let tape = forward_with_tape(cfg, params, toks)?;
+        // one pass computes both the gradient and this sequence's loss
+        // terms (bit-identical to model::cross_entropy's accumulation)
+        let (d_logits, seq_loss) = cross_entropy_grad_with_loss(&tape.logits, tgts, count)?;
+        backward_seq(cfg, params, &tape, &d_logits, &mut grads)?;
+        loss_sum += seq_loss;
+    }
+    let loss = (loss_sum / count as f64) as f32;
+    Ok((loss, grads.into_tensors()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GrowthOp, LayerPosition};
+    use crate::expand::{apply_ops, ExpandOptions};
+    use crate::prop::Runner;
+    use crate::rng::Pcg32;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig { layers: 1, hidden: 8, heads: 2, k: 4, v: 4, mlp: 8, seq: 6, vocab: 12 }
+    }
+
+    fn random_batch(cfg: &ModelConfig, rows: usize, rng: &mut Pcg32) -> Batch {
+        let row = |rng: &mut Pcg32| (0..cfg.seq).map(|_| rng.below(cfg.vocab) as u32).collect();
+        Batch {
+            tokens: (0..rows).map(|_| row(rng)).collect(),
+            targets: (0..rows).map(|_| row(rng)).collect(),
+        }
+    }
+
+    /// Mean cross-entropy of the (f32) forward, accumulated in f64 — the
+    /// finite-difference scalarizer (avoids the f32 quantization of the
+    /// production loss return value poisoning small differences).
+    fn loss_f64(cfg: &ModelConfig, params: &ParamStore, batch: &Batch) -> f64 {
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        for (toks, tgts) in batch.tokens.iter().zip(&batch.targets) {
+            let logits = crate::model::forward_one(cfg, params, toks).unwrap();
+            for (i, &tgt) in tgts.iter().enumerate() {
+                let row = logits.row(i);
+                let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let lse = f64::from(row.iter().map(|x| (x - max).exp()).sum::<f32>()).ln()
+                    + f64::from(max);
+                total += lse - f64::from(row[tgt as usize]);
+                count += 1;
+            }
+        }
+        total / count as f64
+    }
+
+    /// Check the analytic grads of the `idx`-th coordinates with the
+    /// largest |g| in every tensor against central differences.
+    fn check_grads_fd(
+        cfg: &ModelConfig,
+        params: &ParamStore,
+        batch: &Batch,
+        coords_per_tensor: usize,
+    ) -> Result<(), String> {
+        let (_, grads) = loss_and_grads(cfg, params, batch).unwrap();
+        let h = 2e-3f32;
+        for (ti, (spec, _)) in params.iter().enumerate() {
+            let g = &grads[ti];
+            // pick the largest-|g| coordinates: best signal-to-noise
+            let mut order: Vec<usize> = (0..g.numel()).collect();
+            order.sort_by(|&a, &b| {
+                g.data()[b].abs().partial_cmp(&g.data()[a].abs()).unwrap()
+            });
+            for &ci in order.iter().take(coords_per_tensor) {
+                let analytic = g.data()[ci];
+                let mut plus = params.clone();
+                plus.get_mut(&spec.name).unwrap().data_mut()[ci] += h;
+                let mut minus = params.clone();
+                minus.get_mut(&spec.name).unwrap().data_mut()[ci] -= h;
+                let fd =
+                    ((loss_f64(cfg, &plus, batch) - loss_f64(cfg, &minus, batch)) / (2.0 * f64::from(h))) as f32;
+                let tol = 1e-2 * analytic.abs().max(fd.abs()) + 1.5e-3;
+                if (analytic - fd).abs() > tol {
+                    return Err(format!(
+                        "{}[{ci}]: analytic {analytic} vs fd {fd} (tol {tol})",
+                        spec.name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn full_model_grads_match_finite_differences() {
+        let cfg = tiny_cfg();
+        let mut rng = Pcg32::seeded(50);
+        let params = ParamStore::init(&cfg, &mut rng, 0.15);
+        let batch = random_batch(&cfg, 2, &mut rng);
+        check_grads_fd(&cfg, &params, &batch, 5).unwrap();
+    }
+
+    #[test]
+    fn prop_grads_match_finite_differences_across_configs() {
+        // prop-harness sweep: random tiny architectures, seeds and batches;
+        // size metric = parameter count so the shrink pass reports the
+        // smallest failing architecture.
+        Runner::new("autodiff-fd", 6).shrink_budget(10).run_sized(
+            &mut |rng| {
+                let cfg = ModelConfig {
+                    layers: 1 + rng.below(2),
+                    hidden: 4 + 4 * rng.below(2),
+                    heads: 1 + rng.below(2),
+                    k: 2 + 2 * rng.below(2),
+                    v: 2 + 2 * rng.below(2),
+                    mlp: 4 + 4 * rng.below(2),
+                    seq: 4,
+                    vocab: 8,
+                };
+                (cfg, rng.next_u64())
+            },
+            |(cfg, _)| cfg.num_params(),
+            &mut |(cfg, seed)| {
+                let mut rng = Pcg32::seeded(*seed);
+                let params = ParamStore::init(cfg, &mut rng, 0.15);
+                let batch = random_batch(cfg, 1, &mut rng);
+                check_grads_fd(cfg, &params, &batch, 2)
+            },
+        );
+    }
+
+    #[test]
+    fn grads_are_finite_and_aligned_after_each_of_the_six_expansions() {
+        let cfg = tiny_cfg();
+        let mut rng = Pcg32::seeded(51);
+        let params = ParamStore::init(&cfg, &mut rng, 0.1);
+        let batch = random_batch(&cfg, 2, &mut rng);
+        let (loss_before, _) = loss_and_grads(&cfg, &params, &batch).unwrap();
+
+        let ops: [GrowthOp; 6] = [
+            GrowthOp::Mlp { p: 16 },
+            GrowthOp::HeadsAdd { count: 1 },
+            GrowthOp::HeadsExpand { v: 6 },
+            GrowthOp::AttnExpand { k: 6 },
+            GrowthOp::Hidden { h: 12 },
+            GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top },
+        ];
+        for op in ops {
+            let expanded = apply_ops(
+                &params,
+                std::slice::from_ref(&op),
+                &mut Pcg32::seeded(52),
+                &ExpandOptions::default(),
+            )
+            .unwrap();
+            let new_cfg = *expanded.config();
+            let (loss_after, grads) = loss_and_grads(&new_cfg, &expanded, &batch).unwrap();
+            assert!(loss_after.is_finite(), "{op:?}: non-finite loss");
+            // function preservation ⇒ the loss is unchanged by the surgery
+            assert!(
+                (loss_after - loss_before).abs() <= 1e-4,
+                "{op:?}: loss moved {loss_before} -> {loss_after}"
+            );
+            assert_eq!(grads.len(), expanded.len(), "{op:?}: grad count");
+            for (g, (spec, _)) in grads.iter().zip(expanded.iter()) {
+                assert_eq!(g.shape(), spec.shape.as_slice(), "{op:?}: {}", spec.name);
+                assert!(g.all_finite(), "{op:?}: non-finite grad in {}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_descent_on_native_grads_reduces_loss() {
+        // repeated SGD on one fixed batch must drive its loss down — the
+        // end-to-end sanity check that the grads point downhill
+        let cfg = tiny_cfg();
+        let mut rng = Pcg32::seeded(53);
+        let mut params = ParamStore::init(&cfg, &mut rng, 0.1);
+        let batch = random_batch(&cfg, 2, &mut rng);
+        let (first, _) = loss_and_grads(&cfg, &params, &batch).unwrap();
+        for _ in 0..30 {
+            let (loss, grads) = loss_and_grads(&cfg, &params, &batch).unwrap();
+            assert!(loss.is_finite());
+            for (p, g) in params.tensors_mut().iter_mut().zip(&grads) {
+                let mut step = g.clone();
+                step.scale(0.2);
+                p.sub_assign(&step).unwrap();
+            }
+        }
+        let (last, _) = loss_and_grads(&cfg, &params, &batch).unwrap();
+        assert!(last < first, "SGD on native grads failed to descend: {first} -> {last}");
+    }
+
+    #[test]
+    fn zero_upstream_grad_gives_zero_param_grads() {
+        let cfg = tiny_cfg();
+        let mut rng = Pcg32::seeded(54);
+        let params = ParamStore::init(&cfg, &mut rng, 0.1);
+        let tokens: Vec<u32> = (0..cfg.seq).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let tape = forward_with_tape(&cfg, &params, &tokens).unwrap();
+        let d_logits = Tensor::zeros(&[cfg.seq, cfg.vocab]);
+        let mut grads = ParamStore::zeros(&cfg);
+        backward_seq(&cfg, &params, &tape, &d_logits, &mut grads).unwrap();
+        for (spec, g) in grads.iter() {
+            assert_eq!(g.max_abs(), 0.0, "{} received gradient from zero upstream", spec.name);
+        }
+    }
+
+    #[test]
+    fn loss_and_grads_rejects_bad_batches() {
+        let cfg = tiny_cfg();
+        let mut rng = Pcg32::seeded(55);
+        let params = ParamStore::init(&cfg, &mut rng, 0.1);
+        // empty batch
+        let empty = Batch { tokens: vec![], targets: vec![] };
+        assert!(loss_and_grads(&cfg, &params, &empty).is_err());
+        // row-count mismatch
+        let mut bad = random_batch(&cfg, 2, &mut rng);
+        bad.targets.pop();
+        assert!(loss_and_grads(&cfg, &params, &bad).is_err());
+        // ragged targets
+        let mut ragged = random_batch(&cfg, 2, &mut rng);
+        ragged.targets[1].pop();
+        assert!(loss_and_grads(&cfg, &params, &ragged).is_err());
+        // out-of-vocab target
+        let mut oob = random_batch(&cfg, 1, &mut rng);
+        oob.targets[0][0] = cfg.vocab as u32;
+        assert!(loss_and_grads(&cfg, &params, &oob).is_err());
+    }
+}

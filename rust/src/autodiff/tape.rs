@@ -1,0 +1,206 @@
+//! Forward activation tape (S16b): one training-time forward pass that
+//! records exactly the intermediates the backward pass needs.
+//!
+//! The taped forward mirrors [`crate::model::forward_one`] operation for
+//! operation (same kernels, same summation order), so its logits are
+//! bit-identical to the reference forward — the test below asserts exact
+//! equality. What it saves per layer is the minimal set:
+//!
+//! * the residual-stream input of each half (`x_in`, `x_mid`) — RMSNorm
+//!   backward needs its *input*,
+//! * the normalized tiles (`nrm1`, `nrm2`) — weight grads of the Q/K/V/W1
+//!   projections,
+//! * per head: the projected `q`/`k`/`v` and the post-softmax `probs`
+//!   (attention backward re-uses probabilities instead of recomputing the
+//!   masked softmax),
+//! * the head concatenation (`concat`) and the post-ReLU hidden tile
+//!   (`hid`) — W^O / W2 weight grads and the ReLU mask.
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::model::MASK_VALUE;
+use crate::params::ParamStore;
+use crate::tensor::{softmax_rows, Tensor};
+
+/// Saved activations for one attention head.
+#[derive(Clone, Debug)]
+pub struct HeadTape {
+    pub q: Tensor,
+    pub k: Tensor,
+    pub v: Tensor,
+    /// Post-softmax attention probabilities `[s, s]` (masked entries are
+    /// exactly zero — the additive `-1e30` mask underflows).
+    pub probs: Tensor,
+}
+
+/// Saved activations for one transformer layer.
+#[derive(Clone, Debug)]
+pub struct LayerTape {
+    /// Residual stream entering the layer `[s, h]`.
+    pub x_in: Tensor,
+    /// `rmsnorm(x_in, g_mha)`.
+    pub nrm1: Tensor,
+    pub heads: Vec<HeadTape>,
+    /// Concatenated head outputs `[s, E*v]`.
+    pub concat: Tensor,
+    /// Residual stream after the MHA half `[s, h]`.
+    pub x_mid: Tensor,
+    /// `rmsnorm(x_mid, g_mlp)`.
+    pub nrm2: Tensor,
+    /// Post-ReLU MLP hidden tile `[s, p]`.
+    pub hid: Tensor,
+}
+
+/// Full forward tape for one sequence.
+#[derive(Clone, Debug)]
+pub struct SeqTape {
+    pub tokens: Vec<u32>,
+    pub layers: Vec<LayerTape>,
+    /// Residual stream after the last layer `[s, h]`.
+    pub x_final: Tensor,
+    /// Output logits `[s, vocab]`.
+    pub logits: Tensor,
+}
+
+/// Run the reference forward for one sequence, taping activations.
+pub fn forward_with_tape(cfg: &ModelConfig, params: &ParamStore, tokens: &[u32]) -> Result<SeqTape> {
+    if tokens.len() != cfg.seq {
+        return Err(Error::Shape(format!(
+            "forward_with_tape: {} tokens, seq={}",
+            tokens.len(),
+            cfg.seq
+        )));
+    }
+    let embed = params.get("embed")?;
+    let pos = params.get("pos")?;
+    let mut x = Tensor::zeros(&[cfg.seq, cfg.hidden]);
+    for (i, &t) in tokens.iter().enumerate() {
+        if t as usize >= cfg.vocab {
+            return Err(Error::Shape(format!("token {t} out of vocab {}", cfg.vocab)));
+        }
+        let erow = embed.row(t as usize);
+        let prow = pos.row(i);
+        let xrow = x.row_mut(i);
+        for (j, r) in xrow.iter_mut().enumerate() {
+            *r = erow[j] + prow[j];
+        }
+    }
+
+    let s = cfg.seq;
+    let scale = 1.0 / (cfg.k as f32).sqrt();
+    let mut layers = Vec::with_capacity(cfg.layers);
+    for n in 0..cfg.layers {
+        let x_in = x.clone();
+        // ---- MHA half: x += Concat_e(Att(nrm·Wq, nrm·Wk, nrm·Wv)) · Wo ----
+        let nrm1 = crate::model::rmsnorm(&x, params.get(&format!("layer_{n}.g_mha"))?)?;
+        let mut concat = Tensor::zeros(&[s, cfg.heads * cfg.v]);
+        let mut heads = Vec::with_capacity(cfg.heads);
+        for e in 0..cfg.heads {
+            let q = nrm1.matmul(params.get(&format!("layer_{n}.head_{e}.wq"))?)?;
+            let k = nrm1.matmul(params.get(&format!("layer_{n}.head_{e}.wk"))?)?;
+            let v = nrm1.matmul(params.get(&format!("layer_{n}.head_{e}.wv"))?)?;
+            let mut scores = q.matmul_bt(&k)?;
+            scores.scale(scale);
+            for i in 0..s {
+                for j in (i + 1)..s {
+                    scores.set(i, j, MASK_VALUE);
+                }
+            }
+            softmax_rows(&mut scores);
+            let probs = scores;
+            let head = probs.matmul(&v)?;
+            for i in 0..s {
+                let dst = concat.row_mut(i);
+                dst[e * cfg.v..(e + 1) * cfg.v].copy_from_slice(head.row(i));
+            }
+            heads.push(HeadTape { q, k, v, probs });
+        }
+        let mha_out = concat.matmul(params.get(&format!("layer_{n}.wo"))?)?;
+        x.add_assign(&mha_out)?;
+        let x_mid = x.clone();
+
+        // ---- MLP half: x += ReLU(nrm2·W1 + b1)·W2 + b2 ----
+        let nrm2 = crate::model::rmsnorm(&x, params.get(&format!("layer_{n}.g_mlp"))?)?;
+        let mut hid = nrm2.matmul(params.get(&format!("layer_{n}.w1"))?)?;
+        hid.add_row_broadcast(params.get(&format!("layer_{n}.b1"))?)?;
+        hid.map_inplace(|v| v.max(0.0));
+        let mut mlp_out = hid.matmul(params.get(&format!("layer_{n}.w2"))?)?;
+        mlp_out.add_row_broadcast(params.get(&format!("layer_{n}.b2"))?)?;
+        x.add_assign(&mlp_out)?;
+
+        layers.push(LayerTape { x_in, nrm1, heads, concat, x_mid, nrm2, hid });
+    }
+
+    let x_final = x.clone();
+    let logits = x.matmul(params.get("w_out")?)?;
+    Ok(SeqTape { tokens: tokens.to_vec(), layers, x_final, logits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { layers: 2, hidden: 16, heads: 2, k: 8, v: 8, mlp: 32, seq: 12, vocab: 32 }
+    }
+
+    #[test]
+    fn taped_forward_is_bitexact_with_reference_forward() {
+        let c = cfg();
+        let mut rng = Pcg32::seeded(30);
+        let params = ParamStore::init(&c, &mut rng, 0.05);
+        let tokens: Vec<u32> = (0..c.seq).map(|_| rng.below(c.vocab) as u32).collect();
+        let tape = forward_with_tape(&c, &params, &tokens).unwrap();
+        let reference = crate::model::forward_one(&c, &params, &tokens).unwrap();
+        assert_eq!(tape.logits, reference, "taped forward diverged from model::forward_one");
+    }
+
+    #[test]
+    fn tape_shapes_are_complete() {
+        let c = cfg();
+        let mut rng = Pcg32::seeded(31);
+        let params = ParamStore::init(&c, &mut rng, 0.05);
+        let tokens: Vec<u32> = (0..c.seq).map(|_| rng.below(c.vocab) as u32).collect();
+        let tape = forward_with_tape(&c, &params, &tokens).unwrap();
+        assert_eq!(tape.layers.len(), c.layers);
+        for lt in &tape.layers {
+            assert_eq!(lt.x_in.shape(), &[c.seq, c.hidden]);
+            assert_eq!(lt.nrm1.shape(), &[c.seq, c.hidden]);
+            assert_eq!(lt.heads.len(), c.heads);
+            for ht in &lt.heads {
+                assert_eq!(ht.q.shape(), &[c.seq, c.k]);
+                assert_eq!(ht.k.shape(), &[c.seq, c.k]);
+                assert_eq!(ht.v.shape(), &[c.seq, c.v]);
+                assert_eq!(ht.probs.shape(), &[c.seq, c.seq]);
+                // each probs row is a distribution over the causal prefix
+                for i in 0..c.seq {
+                    let sum: f32 = ht.probs.row(i).iter().sum();
+                    assert!((sum - 1.0).abs() < 1e-5, "probs row {i} sums to {sum}");
+                    for j in (i + 1)..c.seq {
+                        assert_eq!(ht.probs.at(i, j), 0.0, "mask leaked at ({i},{j})");
+                    }
+                }
+            }
+            assert_eq!(lt.concat.shape(), &[c.seq, c.heads * c.v]);
+            assert_eq!(lt.x_mid.shape(), &[c.seq, c.hidden]);
+            assert_eq!(lt.nrm2.shape(), &[c.seq, c.hidden]);
+            assert_eq!(lt.hid.shape(), &[c.seq, c.mlp]);
+            assert!(lt.hid.data().iter().all(|&v| v >= 0.0), "hid must be post-ReLU");
+        }
+        assert_eq!(tape.x_final.shape(), &[c.seq, c.hidden]);
+        assert_eq!(tape.logits.shape(), &[c.seq, c.vocab]);
+    }
+
+    #[test]
+    fn taped_forward_rejects_bad_inputs() {
+        let c = cfg();
+        let mut rng = Pcg32::seeded(32);
+        let params = ParamStore::init(&c, &mut rng, 0.05);
+        let too_short = vec![0u32; c.seq - 1];
+        assert!(forward_with_tape(&c, &params, &too_short).is_err());
+        let mut bad = vec![0u32; c.seq];
+        bad[3] = c.vocab as u32;
+        assert!(forward_with_tape(&c, &params, &bad).is_err());
+    }
+}

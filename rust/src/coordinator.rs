@@ -12,14 +12,18 @@
 //! claim before continuing:
 //! 1. **Rust-oracle probe** — pure-Rust forward before vs after surgery on
 //!    a held-out probe batch; `max|Δ logits|` must be ≤ `preserve_tol`.
-//! 2. **PJRT probe** — previous stage's compiled `fwd` on old params vs
-//!    next stage's `fwd` on expanded params; same tolerance. This is the
-//!    check that would catch AOT/manifest drift, not just surgery bugs.
+//! 2. **Backend probe** — previous stage's `fwd` executable on old params
+//!    vs next stage's `fwd` on expanded params, through whichever
+//!    [`ExecBackend`] is driving the run; same tolerance. On the PJRT path
+//!    this is the check that would catch AOT/manifest drift, not just
+//!    surgery bugs. A reference-model backend (native) would reproduce
+//!    probe 1 bit for bit, so its result is reused instead of recomputed.
 //!
 //! The coordinator is also the entry point for the §5 future-work use
 //! cases: [`Coordinator::branch`] (model families) reuses the boundary
 //! machinery without the schedule.
 
+use crate::autodiff::ExecBackend;
 use crate::config::{GrowthSchedule, TrainConfig};
 use crate::data::{Batch, Batcher, CorpusKind};
 use crate::error::{Error, Result};
@@ -30,7 +34,7 @@ use crate::model as refmodel;
 use crate::optim::Optimizer;
 use crate::params::ParamStore;
 use crate::rng::Pcg32;
-use crate::runtime::{Manifest, Runtime, StageExec};
+use crate::runtime::{Manifest, StageExec};
 use crate::train::{eval_loss, train_stage, StageReport, TrainState};
 
 /// Coordinator behaviour knobs (CLI-mapped).
@@ -68,6 +72,12 @@ pub struct BoundaryReport {
     pub into_stage: String,
     pub ops: usize,
     pub rust_delta: f32,
+    /// Probe delta measured through the *executing backend* (PJRT
+    /// artifacts, or the native interpreter when running offline). On a
+    /// reference-model backend this equals [`BoundaryReport::rust_delta`]
+    /// by construction and the duplicate probe is skipped. The name
+    /// predates the backend abstraction and is kept for log/report
+    /// compatibility.
     pub pjrt_delta: f32,
     /// Eval loss immediately before/after surgery (PJRT path) — the loss
     /// continuity evidence for E3.
@@ -86,11 +96,14 @@ pub struct RunSummary {
     pub total_steps: usize,
 }
 
-/// The growth coordinator (see module docs).
+/// The growth coordinator (see module docs). Generic over the execution
+/// engine: pass `Box::new(Runtime::cpu()?)` for the PJRT artifact path or
+/// `Box::new(NativeBackend::new())` (with `Manifest::from_schedule`) for
+/// the offline pure-Rust path.
 pub struct Coordinator {
     pub schedule: GrowthSchedule,
     pub manifest: Manifest,
-    pub runtime: Runtime,
+    pub backend: Box<dyn ExecBackend>,
     pub tcfg: TrainConfig,
     pub opts: CoordinatorOptions,
 }
@@ -101,7 +114,7 @@ impl Coordinator {
     pub fn new(
         schedule: GrowthSchedule,
         manifest: Manifest,
-        runtime: Runtime,
+        backend: Box<dyn ExecBackend>,
         tcfg: TrainConfig,
         opts: CoordinatorOptions,
     ) -> Result<Coordinator> {
@@ -127,7 +140,7 @@ impl Coordinator {
                 manifest.batch, schedule.batch
             )));
         }
-        Ok(Coordinator { schedule, manifest, runtime, tcfg, opts })
+        Ok(Coordinator { schedule, manifest, backend, tcfg, opts })
     }
 
     fn scaled_steps(&self, steps: usize) -> usize {
@@ -155,7 +168,7 @@ impl Coordinator {
                 ("schedule", Value::str(self.schedule.name.clone())),
                 ("corpus", Value::str(self.opts.corpus.name())),
                 ("optimizer", Value::str(opt.name())),
-                ("platform", Value::str(self.runtime.platform())),
+                ("platform", Value::str(self.backend.platform())),
                 ("stages", Value::num(self.schedule.stages.len() as f64)),
             ],
         );
@@ -178,10 +191,10 @@ impl Coordinator {
                 )?;
                 boundary_reports.push(report);
             }
-            let exec = self.runtime.load_stage(&self.manifest, &stage_spec.name)?;
+            let exec = self.backend.load_stage(&self.manifest, &stage_spec.name)?;
             let steps = self.scaled_steps(stage_spec.steps);
             let report = train_stage(
-                &self.runtime,
+                self.backend.as_ref(),
                 &exec,
                 &mut params,
                 &mut opt,
@@ -208,7 +221,7 @@ impl Coordinator {
 
         let final_exec = prev_exec.expect("at least one stage");
         let probe = batcher.probe(self.tcfg.seed ^ 0xE7A1);
-        let final_eval_loss = eval_loss(&self.runtime, &final_exec, &params, &probe)?;
+        let final_eval_loss = eval_loss(self.backend.as_ref(), &final_exec, &params, &probe)?;
         logger.event(
             "run_done",
             vec![
@@ -241,10 +254,21 @@ impl Coordinator {
         let probe = batcher.probe(self.tcfg.seed ^ 0xE7A1);
         let timer = crate::metrics::Timer::start();
 
-        // before-surgery references
+        // before-surgery references. A reference-model backend (native)
+        // would recompute the rust-oracle logits bit for bit, so its probe
+        // and loss reuse them instead of running three more forwards.
+        let reference_backend = self.backend.is_reference_model();
         let rust_before = refmodel::forward(params.config(), params, &probe.tokens)?;
-        let pjrt_before = self.runtime.forward(prev_exec, params, &probe.tokens)?;
-        let loss_before = eval_loss(&self.runtime, prev_exec, params, &probe)?;
+        let backend_before = if reference_backend {
+            None
+        } else {
+            Some(self.backend.forward(prev_exec, params, &probe.tokens)?)
+        };
+        let loss_before = if reference_backend {
+            refmodel::cross_entropy(&rust_before, &probe.targets)?
+        } else {
+            eval_loss(self.backend.as_ref(), prev_exec, params, &probe)?
+        };
 
         // the surgery itself (owned path: the pre-surgery store is dead)
         let expand_opts =
@@ -259,13 +283,25 @@ impl Coordinator {
         let surgery_ms = timer.ms();
 
         // after-surgery probes
-        let next_exec = self.runtime.load_stage(&self.manifest, &stage_spec.name)?;
+        let next_exec = self.backend.load_stage(&self.manifest, &stage_spec.name)?;
         let rust_after = refmodel::forward(params.config(), params, &probe.tokens)?;
-        let pjrt_after = self.runtime.forward(&next_exec, params, &probe.tokens)?;
-        let loss_after = eval_loss(&self.runtime, &next_exec, params, &probe)?;
+        let backend_after = if reference_backend {
+            None
+        } else {
+            Some(self.backend.forward(&next_exec, params, &probe.tokens)?)
+        };
+        let loss_after = if reference_backend {
+            refmodel::cross_entropy(&rust_after, &probe.targets)?
+        } else {
+            eval_loss(self.backend.as_ref(), &next_exec, params, &probe)?
+        };
 
         let rust_delta = refmodel::max_logit_delta(&rust_before, &rust_after)?;
-        let pjrt_delta = refmodel::max_logit_delta(&pjrt_before, &pjrt_after)?;
+        let pjrt_delta = match (&backend_before, &backend_after) {
+            (Some(before), Some(after)) => refmodel::max_logit_delta(before, after)?,
+            // reference backend: the backend probe IS the rust oracle
+            _ => rust_delta,
+        };
         logger.event(
             "boundary",
             vec![
@@ -288,7 +324,7 @@ impl Coordinator {
             }
             if pjrt_delta > self.tcfg.preserve_tol {
                 return Err(Error::Train(format!(
-                    "boundary into '{}' violated preservation (pjrt path): max|Δ| = {pjrt_delta}",
+                    "boundary into '{}' violated preservation (backend path): max|Δ| = {pjrt_delta}",
                     stage_spec.name
                 )));
             }
@@ -324,7 +360,7 @@ impl Coordinator {
             ExpandOptions { init: crate::expand::Init::Normal(self.opts.expand_init_std), ..Default::default() };
         let mut params =
             if ops.is_empty() { base.clone() } else { crate::expand::apply_ops(base, ops, &mut rng, &expand_opts)? };
-        let exec = self.runtime.load_stage(&self.manifest, stage_name)?;
+        let exec = self.backend.load_stage(&self.manifest, stage_name)?;
         if params.config() != &exec.meta.config {
             return Err(Error::Config(format!(
                 "branch ops produce {:?} but stage '{stage_name}' expects {:?}",
@@ -343,7 +379,7 @@ impl Coordinator {
         )?;
         let mut state = TrainState::new();
         let report = train_stage(
-            &self.runtime,
+            self.backend.as_ref(),
             &exec,
             &mut params,
             &mut opt,
@@ -353,7 +389,7 @@ impl Coordinator {
             &mut state,
             finetune_steps,
         )?;
-        let eval = eval_loss(&self.runtime, &exec, &params, probe)?;
+        let eval = eval_loss(self.backend.as_ref(), &exec, &params, probe)?;
         Ok((params, report, eval))
     }
 }

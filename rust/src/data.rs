@@ -155,6 +155,19 @@ pub struct Batch {
     pub targets: Vec<Vec<u32>>,
 }
 
+impl Batch {
+    /// Uniform-random token/target rows for a config — the shared
+    /// test/bench batch builder (training data comes from [`Batcher`]).
+    pub fn random(cfg: &crate::config::ModelConfig, rows: usize, seed: u64) -> Batch {
+        let mut rng = Pcg32::seeded(seed);
+        let row = |rng: &mut Pcg32| (0..cfg.seq).map(|_| rng.below(cfg.vocab) as u32).collect();
+        Batch {
+            tokens: (0..rows).map(|_| row(&mut rng)).collect(),
+            targets: (0..rows).map(|_| row(&mut rng)).collect(),
+        }
+    }
+}
+
 /// Samples random `(seq+1)`-windows from a token stream; the window's first
 /// `seq` tokens are inputs and the 1-shifted window is the target.
 pub struct Batcher {

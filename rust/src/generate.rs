@@ -1,6 +1,8 @@
 //! Autoregressive generation from a trained checkpoint (S10c).
 //!
-//! Decodes through the stage's compiled `fwd` artifact: the window of the
+//! Decodes through the stage's `fwd` executable on any [`ExecBackend`]
+//! (PJRT artifact, or the native interpreter for artifact-free offline
+//! runs): the window of the
 //! last `seq` tokens is fed left-aligned (zero-padded on the right — the
 //! causal mask guarantees logits at position `len-1` ignore the padding),
 //! and the next token is sampled from the logits at the last real
@@ -14,11 +16,12 @@
 //! oracle twin. The value of this module is the end-to-end loop: train →
 //! grow → checkpoint → generate.
 
+use crate::autodiff::ExecBackend;
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
 use crate::params::ParamStore;
 use crate::rng::Pcg32;
-use crate::runtime::{Runtime, StageExec};
+use crate::runtime::StageExec;
 
 /// Sampling configuration.
 #[derive(Clone, Copy, Debug)]
@@ -78,12 +81,13 @@ pub fn argmax(row: &[f32]) -> u32 {
     best.unwrap_or(0) as u32
 }
 
-/// Generate `new_tokens` continuation tokens for each prompt.
+/// Generate `new_tokens` continuation tokens for each prompt, through any
+/// [`ExecBackend`] (PJRT artifact or the native interpreter).
 ///
-/// `prompts.len()` must equal the artifact's compiled batch size (pad with
+/// `prompts.len()` must equal the stage's configured batch size (pad with
 /// clones of the last prompt if you have fewer — see the CLI).
 pub fn generate(
-    rt: &Runtime,
+    backend: &dyn ExecBackend,
     stage: &StageExec,
     params: &ParamStore,
     prompts: &[Vec<u32>],
@@ -118,7 +122,7 @@ pub fn generate(
             windows.push(window);
             read_pos.push(pos);
         }
-        let logits = rt.forward(stage, params, &windows)?;
+        let logits = backend.forward(stage, params, &windows)?;
         for ((h, l), &pos) in histories.iter_mut().zip(&logits).zip(&read_pos) {
             let next = sample_from_logits(l.row(pos), sampler, &mut rng);
             h.push(next);

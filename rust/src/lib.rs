@@ -28,9 +28,15 @@
 //!   transformations (Defs. 3.1–3.6) as parameter surgery, plus composition.
 //! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`,
 //!   compiles once, executes on the training hot path.
+//! * [`autodiff`] — **native training backend** (S16): hand-written
+//!   reverse-mode gradients over the reference model (activation taping +
+//!   per-op backwards, finite-difference checked), and the [`autodiff::ExecBackend`]
+//!   trait with its two engines — the PJRT [`runtime::Runtime`] and the
+//!   pure-Rust [`autodiff::NativeBackend`] — so the full grow-as-you-train
+//!   loop runs offline (`texpand train --backend native`).
 //! * [`optim`] — SGD/Adam with expansion-aware moment surgery.
 //! * [`data`] — synthetic corpus generators, byte tokenizer, batcher.
-//! * [`train`] — the training loop for one stage.
+//! * [`train`] — the training loop for one stage (backend-generic).
 //! * [`coordinator`] — the growth coordinator walking a schedule across
 //!   stages, applying boundary surgery and verifying preservation.
 //! * [`metrics`] — CSV/JSONL run logging, timers, serving counters.
@@ -47,6 +53,7 @@
 //!   in-flight KV caches through the same expansion ops** so greedy
 //!   generations continue token-identically (DESIGN.md §9).
 
+pub mod autodiff;
 pub mod bench_util;
 pub mod cli;
 pub mod config;

@@ -13,6 +13,7 @@
 //! Run `texpand <subcommand> --help-flags` is not needed: unknown flags are
 //! rejected with an explicit error, and this header documents the surface.
 
+use texpand::autodiff::{ExecBackend, NativeBackend};
 use texpand::cli::Args;
 use texpand::config::{GrowthSchedule, OptimKind, TrainConfig};
 use texpand::coordinator::{Coordinator, CoordinatorOptions};
@@ -26,25 +27,33 @@ const USAGE: &str = "\
 texpand — composable function-preserving transformer expansions
 
 USAGE:
-  texpand train   [--schedule P] [--artifacts D] [--run-name N] [--runs D]
+  texpand train   [--backend native|pjrt] [--schedule P] [--artifacts D]
+                  [--run-name N] [--runs D]
                   [--steps-scale F] [--lr F] [--optimizer adam|sgd]
                   [--seed N] [--corpus markov|copy|arithmetic]
                   [--corpus-len N] [--no-verify] [--no-checkpoints]
-  texpand verify  [--schedule P] [--artifacts D] [--seed N]
-  texpand family  --base CKPT [--schedule P] [--artifacts D] [--steps N]
+  texpand verify  [--backend native|pjrt] [--schedule P] [--artifacts D]
+                  [--seed N]
+  texpand family  --base CKPT [--backend native|pjrt] [--schedule P]
+                  [--artifacts D] [--steps N]
                   [--runs D] [--run-name N] [--lr F] [--seed N]
-  texpand generate --ckpt PATH [--prompt S] [--tokens N] [--temperature F]
+  texpand generate --ckpt PATH [--backend native|pjrt] [--prompt S]
+                   [--tokens N] [--temperature F]
                    [--top-k N] [--seed N] [--schedule P] [--artifacts D]
   texpand serve   [--ckpt PATH] [--requests N] [--tokens N] [--slots N]
                   [--temperature F] [--top-k N] [--seed N] [--serial]
                   [--corpus markov|copy|arithmetic]
                   [--swap-ops SPEC] [--swap-after-ticks N]
-                  (SPEC e.g. "mlp=256,heads_add=1,layers_add=1@top")
+                  (SPEC e.g. \"mlp=256,heads_add=1,layers_add=1@top\")
   texpand inspect --ckpt PATH
-  texpand info    [--artifacts D]
+  texpand info    [--backend native|pjrt] [--schedule P] [--artifacts D]
+
+Backends: `pjrt` (default) executes AOT-compiled HLO artifacts and needs
+`make artifacts`; `native` interprets the model in pure Rust with
+hand-written reverse-mode gradients — fully offline, no artifacts.
 
 Defaults: --schedule configs/growth_default.json, --artifacts artifacts,
-          --runs runs.";
+          --runs runs, --backend pjrt.";
 
 fn main() {
     let code = match run() {
@@ -99,12 +108,63 @@ fn train_config(args: &Args) -> Result<TrainConfig> {
     Ok(t)
 }
 
+/// Resolve `--backend` into its manifest and a human-readable source
+/// label, WITHOUT constructing an execution engine — `texpand info` needs
+/// only this. `pjrt` loads `manifest.json` from the artifacts dir;
+/// `native` synthesizes the manifest from the schedule — reusing
+/// `schedule` when the caller already loaded it, loading it lazily
+/// otherwise (a pjrt run never touches the schedule file, and a native
+/// run never touches the artifacts dir). The single dispatch site for the
+/// backend flag: every subcommand resolves through this.
+fn resolve_manifest(args: &Args, schedule: Option<&GrowthSchedule>) -> Result<(Manifest, String)> {
+    let artifacts_dir = args.get_or("artifacts", "artifacts");
+    let schedule_path = args.get_or("schedule", "configs/growth_default.json");
+    match args.get_or("backend", "pjrt").as_str() {
+        "native" => {
+            let manifest = match schedule {
+                Some(s) => Manifest::from_schedule(s),
+                None => Manifest::from_schedule(&GrowthSchedule::load(&schedule_path)?),
+            };
+            Ok((manifest, format!("synthesized from {schedule_path} (native backend)")))
+        }
+        "pjrt" => Ok((
+            Manifest::load(&artifacts_dir, "manifest.json")?,
+            format!("{artifacts_dir}/manifest.json"),
+        )),
+        other => Err(Error::Cli(format!("unknown backend '{other}' (expected native|pjrt)"))),
+    }
+}
+
+/// [`resolve_manifest`] plus the execution engine itself, for subcommands
+/// that actually run the model.
+fn backend_for(
+    args: &Args,
+    schedule: Option<&GrowthSchedule>,
+) -> Result<(Manifest, Box<dyn ExecBackend>, String)> {
+    let (manifest, source) = resolve_manifest(args, schedule)?;
+    let backend: Box<dyn ExecBackend> = match args.get_or("backend", "pjrt").as_str() {
+        "native" => Box::new(NativeBackend::new()),
+        // the flag was already validated by resolve_manifest
+        _ => Box::new(Runtime::cpu()?),
+    };
+    Ok((manifest, backend, source))
+}
+
+fn backend_and_manifest(args: &Args) -> Result<(Manifest, Box<dyn ExecBackend>, String)> {
+    backend_for(args, None)
+}
+
+/// Flag hygiene before backend resolution: consume the backend-selection
+/// flags without acting on them yet, then reject leftovers — so a typo'd
+/// flag reports as such on every subcommand instead of surfacing as a
+/// missing manifest or schedule.
+fn reject_unknown_after_backend_flags(args: &Args) -> Result<()> {
+    let _ = (args.get("artifacts"), args.get("schedule"), args.get("backend"));
+    args.reject_unknown()
+}
+
 fn build_coordinator(args: &Args) -> Result<Coordinator> {
     let schedule_path = args.get_or("schedule", "configs/growth_default.json");
-    let artifacts_dir = args.get_or("artifacts", "artifacts");
-    let schedule = GrowthSchedule::load(&schedule_path)?;
-    let manifest = Manifest::load(&artifacts_dir, "manifest.json")?;
-    let runtime = Runtime::cpu()?;
     let tcfg = train_config(args)?;
     let mut opts = CoordinatorOptions::default();
     if let Some(scale) = args.get_f64("steps-scale")? {
@@ -122,14 +182,18 @@ fn build_coordinator(args: &Args) -> Result<Coordinator> {
     if let Some(n) = args.get_usize("corpus-len")? {
         opts.corpus_len = n;
     }
-    Coordinator::new(schedule, manifest, runtime, tcfg, opts)
+    // callers consume their own flags before this call, so everything a
+    // coordinator subcommand accepts is registered by now
+    reject_unknown_after_backend_flags(args)?;
+    let schedule = GrowthSchedule::load(&schedule_path)?;
+    let (manifest, backend, _) = backend_for(args, Some(&schedule))?;
+    Coordinator::new(schedule, manifest, backend, tcfg, opts)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let runs_root = args.get_or("runs", "runs");
     let run_name = args.get_or("run-name", "train");
-    let mut coord = build_coordinator(args)?;
-    args.reject_unknown()?;
+    let mut coord = build_coordinator(args)?; // rejects unknown flags
     let summary = coord.run(&runs_root, &run_name)?;
     println!("\n=== run summary ({}) ===", summary.run_dir);
     println!("{:<10} {:>8} {:>10} {:>10} {:>12} {:>10}", "stage", "steps", "first", "final", "tok/s", "ms/step");
@@ -153,8 +217,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_verify(args: &Args) -> Result<()> {
-    let mut coord = build_coordinator(args)?;
-    args.reject_unknown()?;
+    let mut coord = build_coordinator(args)?; // rejects unknown flags
     // no-training verification: run the schedule with ~0 steps per stage
     coord.opts.steps_scale = 0.0; // clamps to 1 step, keep tiny
     coord.opts.save_checkpoints = false;
@@ -186,8 +249,7 @@ fn cmd_family(args: &Args) -> Result<()> {
     let steps = args.get_usize("steps")?.unwrap_or(50);
     let runs_root = args.get_or("runs", "runs");
     let run_name = args.get_or("run-name", "family");
-    let mut coord = build_coordinator(args)?;
-    args.reject_unknown()?;
+    let mut coord = build_coordinator(args)?; // rejects unknown flags
     let (base, meta) = ParamStore::load(&base_path)?;
     println!("base checkpoint: {base_path} ({} params, meta {})", base.num_scalars(), meta.to_string());
 
@@ -239,7 +301,6 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let ckpt = args.require("ckpt")?;
     let prompt = args.get_or("prompt", "the ");
     let tokens = args.get_usize("tokens")?.unwrap_or(200);
-    let artifacts_dir = args.get_or("artifacts", "artifacts");
     let mut sampler = texpand::generate::Sampler::default();
     if let Some(t) = args.get_f64("temperature")? {
         sampler.temperature = t as f32;
@@ -250,24 +311,24 @@ fn cmd_generate(args: &Args) -> Result<()> {
     if let Some(s) = args.get_u64("seed")? {
         sampler.seed = s;
     }
-    args.reject_unknown()?;
+    reject_unknown_after_backend_flags(args)?;
+    let (manifest, mut backend, _) = backend_and_manifest(args)?;
 
     let (params, _) = ParamStore::load(&ckpt)?;
-    let manifest = Manifest::load(&artifacts_dir, "manifest.json")?;
     let stage_meta = manifest
         .stages
         .iter()
         .find(|s| &s.config == params.config())
         .ok_or_else(|| Error::Config("checkpoint config matches no manifest stage".into()))?
         .clone();
-    let mut rt = Runtime::cpu()?;
-    let stage = rt.load_stage(&manifest, &stage_meta.name)?;
+    let stage = backend.load_stage(&manifest, &stage_meta.name)?;
 
     let tok = texpand::data::ByteTokenizer::new(params.config().vocab)?;
     let ids = tok.encode(prompt.as_bytes());
-    // the artifact is compiled for a fixed batch: replicate the prompt
+    // the stage executes a fixed batch: replicate the prompt
     let prompts = vec![ids; manifest.batch];
-    let out = texpand::generate::generate(&rt, &stage, &params, &prompts, tokens, &sampler)?;
+    let out =
+        texpand::generate::generate(backend.as_ref(), &stage, &params, &prompts, tokens, &sampler)?;
     let text = String::from_utf8_lossy(&tok.decode(&out[0])).into_owned();
     println!(
         "--- {} ({} params, stage {}) | temp {} top-k {:?} ---",
@@ -406,10 +467,10 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let artifacts_dir = args.get_or("artifacts", "artifacts");
-    args.reject_unknown()?;
-    let manifest = Manifest::load(&artifacts_dir, "manifest.json")?;
-    println!("manifest: {artifacts_dir}/manifest.json");
+    reject_unknown_after_backend_flags(args)?;
+    // metadata only: never constructs an execution engine
+    let (manifest, source) = resolve_manifest(args, None)?;
+    println!("manifest: {source}");
     println!("schedule: {}  batch: {}  kernels: {}", manifest.schedule, manifest.batch, manifest.kernels);
     println!("\n{:<10} {:>8} {:>12} {:>40}", "stage", "steps", "params", "config");
     for s in &manifest.stages {

@@ -325,6 +325,133 @@ mod tests {
     }
 
     #[test]
+    fn adam_moments_stay_in_canonical_order_after_each_op() {
+        // after every one of the six ops, each moment tensor must sit at
+        // the same canonical index as its parameter, with the same shape —
+        // the invariant Optimizer::step's positional zip depends on
+        let ops: [GrowthOp; 6] = [
+            GrowthOp::Mlp { p: 32 },
+            GrowthOp::HeadsAdd { count: 1 },
+            GrowthOp::HeadsExpand { v: 8 },
+            GrowthOp::AttnExpand { k: 8 },
+            GrowthOp::Hidden { h: 12 },
+            GrowthOp::LayersAdd { count: 1, position: LayerPosition::Bottom },
+        ];
+        for op in ops {
+            let mut rng = Pcg32::seeded(7);
+            let mut params = ParamStore::init(&cfg(), &mut rng, 0.1);
+            let mut opt = Optimizer::new(&train_cfg(OptimKind::Adam, 0.01), &params);
+            let grads = quadratic_grads(&params);
+            opt.step(&mut params, &grads).unwrap();
+
+            let expanded = crate::expand::apply_ops(
+                &params,
+                std::slice::from_ref(&op),
+                &mut Pcg32::seeded(8),
+                &Default::default(),
+            )
+            .unwrap();
+            opt.expand(std::slice::from_ref(&op)).unwrap();
+            opt.validate_against(&expanded).unwrap();
+            let (m, v) = match &opt {
+                Optimizer::Adam { m, v, .. } => (m, v),
+                _ => unreachable!(),
+            };
+            for ((spec, p), ((m_spec, mt), (v_spec, vt))) in
+                expanded.iter().zip(m.iter().zip(v.iter()))
+            {
+                assert_eq!(spec.name, m_spec.name, "{op:?}: m order diverged");
+                assert_eq!(spec.name, v_spec.name, "{op:?}: v order diverged");
+                assert_eq!(p.shape(), mt.shape(), "{op:?}: {} m shape", spec.name);
+                assert_eq!(p.shape(), vt.shape(), "{op:?}: {} v shape", spec.name);
+                assert!(mt.all_finite() && vt.all_finite(), "{op:?}: {}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn training_resumes_without_loss_spike_after_each_op() {
+        // the satellite acceptance: warm up Adam on the native backend,
+        // expand params + moments with each of the six ops, keep training —
+        // the first post-boundary loss must sit at the pre-boundary level
+        // (preservation) and continued steps must not blow up
+        use crate::autodiff::loss_and_grads;
+        use crate::data::Batcher;
+
+        let base_cfg = cfg();
+        let tcfg = train_cfg(OptimKind::Adam, 1e-3);
+        let mut batcher = Batcher::from_corpus(
+            crate::data::CorpusKind::MarkovText,
+            20_000,
+            base_cfg.vocab,
+            base_cfg.seq,
+            4,
+            11,
+        )
+        .unwrap();
+        let mut rng = Pcg32::seeded(9);
+        let mut params = ParamStore::init(&base_cfg, &mut rng, 0.05);
+        let mut opt = Optimizer::new(&tcfg, &params);
+        let mut pre_loss = f32::NAN;
+        for _ in 0..5 {
+            let batch = batcher.next();
+            let (loss, grads) = loss_and_grads(&base_cfg, &params, &batch).unwrap();
+            pre_loss = loss;
+            opt.step(&mut params, &grads).unwrap();
+        }
+        let probe = batcher.probe(13);
+        let (probe_pre, _) = loss_and_grads(&base_cfg, &params, &probe).unwrap();
+
+        let ops: [GrowthOp; 6] = [
+            GrowthOp::Mlp { p: 32 },
+            GrowthOp::HeadsAdd { count: 1 },
+            GrowthOp::HeadsExpand { v: 8 },
+            GrowthOp::AttnExpand { k: 8 },
+            GrowthOp::Hidden { h: 12 },
+            GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top },
+        ];
+        for op in ops {
+            let expanded = crate::expand::apply_ops(
+                &params,
+                std::slice::from_ref(&op),
+                &mut Pcg32::seeded(10),
+                &Default::default(),
+            )
+            .unwrap();
+            let mut opt2 = opt.clone();
+            opt2.expand(std::slice::from_ref(&op)).unwrap();
+            opt2.validate_against(&expanded).unwrap();
+            let new_cfg = *expanded.config();
+
+            // preservation: probe loss unchanged through the boundary
+            let (probe_post, _) = loss_and_grads(&new_cfg, &expanded, &probe).unwrap();
+            assert!(
+                (probe_post - probe_pre).abs() <= 1e-4,
+                "{op:?}: probe loss moved {probe_pre} -> {probe_post}"
+            );
+
+            // resume: 3 more steps; first post-boundary training loss must
+            // not spike above the pre-boundary level + step noise
+            let mut p2 = expanded;
+            let mut first_post = f32::NAN;
+            for step in 0..3 {
+                let batch = batcher.next();
+                let (loss, grads) = loss_and_grads(&new_cfg, &p2, &batch).unwrap();
+                if step == 0 {
+                    first_post = loss;
+                }
+                assert!(loss.is_finite(), "{op:?}: non-finite loss at resume step {step}");
+                opt2.step(&mut p2, &grads).unwrap();
+            }
+            assert!(
+                first_post <= pre_loss + 0.5,
+                "{op:?}: post-boundary loss spike {pre_loss} -> {first_post}"
+            );
+            assert!(p2.all_finite(), "{op:?}: params went non-finite after resume");
+        }
+    }
+
+    #[test]
     fn sgd_expand_is_noop() {
         let mut opt = Optimizer::Sgd { lr: 0.1 };
         opt.expand(&[GrowthOp::Mlp { p: 32 }]).unwrap();

@@ -148,6 +148,13 @@ impl ParamStore {
         &self.tensors
     }
 
+    /// Consume the store into its canonical-order tensor vector — the
+    /// gradient-export path of the native autodiff backend (gradients are
+    /// accumulated into a zeroed store so they inherit this order for free).
+    pub fn into_tensors(self) -> Vec<Tensor> {
+        self.tensors
+    }
+
     /// Mutable canonical-order tensors (optimizer update path).
     pub fn tensors_mut(&mut self) -> &mut [Tensor] {
         &mut self.tensors

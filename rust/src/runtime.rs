@@ -16,7 +16,7 @@
 
 use std::collections::HashMap;
 
-use crate::config::{param_specs, ModelConfig};
+use crate::config::{param_specs, GrowthSchedule, ModelConfig};
 use crate::data::Batch;
 use crate::error::{Error, Result};
 use crate::json::Value;
@@ -114,6 +114,32 @@ impl Manifest {
         })
     }
 
+    /// Synthesize a manifest directly from a growth schedule — the native
+    /// backend's stage source. Stage metadata matches what the AOT build
+    /// would have written for the same schedule; artifact paths are empty
+    /// (the native backend never reads them), so feeding this manifest to
+    /// the PJRT runtime fails loudly at compile time rather than silently.
+    pub fn from_schedule(schedule: &GrowthSchedule) -> Manifest {
+        Manifest {
+            schedule: schedule.name.clone(),
+            batch: schedule.batch,
+            kernels: "native".to_string(),
+            stages: schedule
+                .stages
+                .iter()
+                .map(|s| ManifestStage {
+                    name: s.name.clone(),
+                    steps: s.steps,
+                    config: s.config,
+                    num_params: s.config.num_params(),
+                    fwd_file: String::new(),
+                    step_file: String::new(),
+                })
+                .collect(),
+            dir: String::new(),
+        }
+    }
+
     /// Find a stage by name.
     pub fn stage(&self, name: &str) -> Result<&ManifestStage> {
         self.stages
@@ -175,6 +201,16 @@ pub struct StageExec {
     pub batch: usize,
     fwd_key: String,
     step_key: String,
+}
+
+impl StageExec {
+    /// Artifact-free handle for backends that interpret the model directly
+    /// (the native autodiff backend). The executable-cache keys stay empty:
+    /// feeding such a handle to the PJRT [`Runtime`] errors with a cache
+    /// miss instead of executing the wrong thing.
+    pub fn native(meta: ManifestStage, batch: usize) -> StageExec {
+        StageExec { meta, batch, fwd_key: String::new(), step_key: String::new() }
+    }
 }
 
 /// Shared PJRT client + per-file compilation cache.
@@ -332,5 +368,37 @@ mod tests {
     fn tokens_literal_rejects_ragged_and_empty() {
         assert!(tokens_to_literal(&[]).is_err());
         assert!(tokens_to_literal(&[vec![1, 2], vec![3]]).is_err());
+    }
+
+    #[test]
+    fn manifest_from_schedule_mirrors_stage_metadata() {
+        let sched = GrowthSchedule::from_json(
+            &Value::parse(
+                r#"{
+                    "name": "synth", "batch": 4, "seq": 8, "vocab": 16,
+                    "base": {"layers":1,"hidden":8,"heads":2,"k":4,"v":4,"mlp":16},
+                    "stages": [
+                        {"steps": 10},
+                        {"steps": 20, "apply": [{"op":"hidden","h":12}]}
+                    ]
+                }"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let m = Manifest::from_schedule(&sched);
+        assert_eq!(m.schedule, "synth");
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.kernels, "native");
+        assert_eq!(m.stages.len(), 2);
+        for (ms, ss) in m.stages.iter().zip(&sched.stages) {
+            assert_eq!(ms.name, ss.name);
+            assert_eq!(ms.config, ss.config);
+            assert_eq!(ms.steps, ss.steps);
+            assert_eq!(ms.num_params, ss.config.num_params());
+            assert!(ms.fwd_file.is_empty() && ms.step_file.is_empty());
+        }
+        assert!(m.stage("stage1").is_ok());
+        assert!(m.stage("stage7").is_err());
     }
 }

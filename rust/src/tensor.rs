@@ -6,10 +6,28 @@
 //! deliberately *not* a general ndarray: rank ≤ 2 covers every parameter in
 //! the canonical layout (DESIGN.md §7) and keeps the surgery code legible.
 //!
-//! The matmul uses an ikj loop order (stream over the output row while
-//! broadcasting one `a[i][k]`), which is the cache-friendly order for
-//! row-major data and, at the reference model's sizes, within ~2x of what
-//! a blocked kernel would get — the PJRT path owns real performance.
+//! The matmul family is the native training hot path ([`crate::autodiff`]
+//! runs every forward *and* backward product through it), so it ships three
+//! kernels tuned for row-major data:
+//!
+//! * [`Tensor::matmul`] — ikj order with the k-loop unrolled in blocks of
+//!   four: one pass over the output row consumes four `a[i][k]` scalars and
+//!   four rows of `b`, quartering the load/store traffic on the accumulator
+//!   row. All-zero blocks are skipped (expansion surgery produces many
+//!   exact zeros). The unrolled body keeps the naive kernel's strict
+//!   left-to-right addition order per output element, so results are
+//!   **bit-identical** to [`Tensor::matmul_naive`] — expansion surgery's
+//!   exact-preservation guarantees (serve hot-swap byte-identical
+//!   continuations) do not depend on k-offset alignment.
+//! * [`Tensor::matmul_bt`] — `A · Bᵀ` as row-dot-products, no transpose
+//!   materialization (attention scores `Q Kᵀ`, and every `dC · Bᵀ`
+//!   gradient product in the backward pass).
+//! * [`Tensor::matmul_at`] — `Aᵀ · C` as rank-1 row updates, no transpose
+//!   materialization (the `Aᵀ · dC` weight-gradient products).
+//!
+//! [`Tensor::matmul_naive`] keeps the original straight-line ikj kernel as
+//! the equivalence oracle for the blocked one (`benches/train_step.rs`
+//! reports the speedup).
 
 use crate::error::{Error, Result};
 use crate::rng::Pcg32;
@@ -180,8 +198,65 @@ impl Tensor {
 
     // ---- linear algebra ----------------------------------------------------
 
-    /// Matrix product `[m,k] x [k,n] -> [m,n]` (ikj order).
+    /// Matrix product `[m,k] x [k,n] -> [m,n]` (blocked ikj order; see the
+    /// module docs). Per output element the additions run in strict
+    /// ascending-k order — the four `acc +=` below are separate rounded
+    /// adds, never one reassociated expression — so on finite inputs the
+    /// result is bit-identical to [`Tensor::matmul_naive`] and independent
+    /// of `m` (row-sliced incremental-decode calls match full-tile calls
+    /// exactly). Non-finite inputs can diverge: in a mixed unroll block the
+    /// blocked kernel still adds `0.0 * b` terms the naive kernel skips,
+    /// and `0.0 * inf` is NaN (DESIGN.md §10.4 scopes the guarantee the
+    /// same way).
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || other.rank() != 2 || self.shape[1] != other.shape[0] {
+            return Err(Error::Shape(format!("matmul: {:?} x {:?}", self.shape, other.shape)));
+        }
+        let (m, k, n) = (self.shape[0], self.shape[1], other.shape[1]);
+        let kb = k / 4 * 4;
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            let mut kk = 0;
+            while kk < kb {
+                let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+                if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                    kk += 4; // expansion surgery produces many exact zeros
+                    continue;
+                }
+                let b0 = &other.data[kk * n..(kk + 1) * n];
+                let b1 = &other.data[(kk + 1) * n..(kk + 2) * n];
+                let b2 = &other.data[(kk + 2) * n..(kk + 3) * n];
+                let b3 = &other.data[(kk + 3) * n..(kk + 4) * n];
+                for j in 0..n {
+                    let mut acc = orow[j];
+                    acc += a0 * b0[j];
+                    acc += a1 * b1[j];
+                    acc += a2 * b2[j];
+                    acc += a3 * b3[j];
+                    orow[j] = acc;
+                }
+                kk += 4;
+            }
+            for kk in kb..k {
+                let a = arow[kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Reference straight-line ikj kernel (the pre-blocking [`Tensor::matmul`]
+    /// body), kept as the equivalence oracle for the blocked kernel and the
+    /// baseline case in `benches/train_step.rs`.
+    pub fn matmul_naive(&self, other: &Tensor) -> Result<Tensor> {
         if self.rank() != 2 || other.rank() != 2 || self.shape[1] != other.shape[0] {
             return Err(Error::Shape(format!("matmul: {:?} x {:?}", self.shape, other.shape)));
         }
@@ -192,9 +267,34 @@ impl Tensor {
             for kk in 0..k {
                 let a = self.data[i * k + kk];
                 if a == 0.0 {
-                    continue; // expansion surgery produces many exact zeros
+                    continue;
                 }
                 let brow = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// `self^T x other`: `[m,k]^T x [m,n] -> [k,n]` without materializing
+    /// the transpose — the `Aᵀ · dC` weight-gradient product shape in the
+    /// autodiff backward pass, streamed as rank-1 row updates.
+    pub fn matmul_at(&self, other: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || other.rank() != 2 || self.shape[0] != other.shape[0] {
+            return Err(Error::Shape(format!("matmul_at: {:?}^T x {:?}", self.shape, other.shape)));
+        }
+        let (m, k, n) = (self.shape[0], self.shape[1], other.shape[1]);
+        let mut out = Tensor::zeros(&[k, n]);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let brow = &other.data[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[kk * n..(kk + 1) * n];
                 for j in 0..n {
                     orow[j] += a * brow[j];
                 }
@@ -401,6 +501,58 @@ mod tests {
         let a = t2(2, 3, &[0.0; 6]);
         assert!(a.matmul(&t2(2, 3, &[0.0; 6])).is_err());
         assert!(a.matmul(&Tensor::ones(&[3])).is_err());
+    }
+
+    #[test]
+    fn blocked_matmul_is_bitexact_with_naive_kernel() {
+        // the unrolled body preserves strict ascending-k addition order, so
+        // equality is exact, not approximate — the serve hot-swap's
+        // byte-identical guarantee rides on this. Shapes hit the unrolled
+        // body, the tail (k % 4 != 0), and degenerate single-row/col cases.
+        let mut rng = Pcg32::seeded(40);
+        for (m, k, n) in [(1, 1, 1), (3, 4, 5), (5, 7, 3), (8, 9, 1), (2, 13, 17), (16, 32, 8)] {
+            let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+            let b = Tensor::randn(&[k, n], &mut rng, 1.0);
+            let blocked = a.matmul(&b).unwrap();
+            let naive = a.matmul_naive(&b).unwrap();
+            assert_eq!(blocked, naive, "({m},{k},{n}): blocked diverged from naive");
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_handles_zero_blocks_and_scattered_zeros() {
+        // all-zero k-blocks take the skip path; scattered zeros inside
+        // mixed blocks take the add-exact-zero path; both must stay
+        // bit-identical to the naive per-element skip
+        let mut rng = Pcg32::seeded(41);
+        let mut a = Tensor::randn(&[3, 12], &mut rng, 1.0);
+        for i in 0..3 {
+            for kk in 4..8 {
+                a.set(i, kk, 0.0); // one full unroll block of zeros
+            }
+        }
+        a.set(0, 1, 0.0); // scattered zero inside a mixed block
+        a.set(2, 10, 0.0);
+        let b = Tensor::randn(&[12, 6], &mut rng, 1.0);
+        assert_eq!(a.matmul(&b).unwrap(), a.matmul_naive(&b).unwrap());
+    }
+
+    #[test]
+    fn matmul_at_matches_explicit_transpose() {
+        let mut rng = Pcg32::seeded(42);
+        let a = Tensor::randn(&[5, 4], &mut rng, 1.0);
+        let b = Tensor::randn(&[5, 7], &mut rng, 1.0);
+        let direct = a.matmul_at(&b).unwrap();
+        assert_eq!(direct.shape(), &[4, 7]);
+        let via_t = a.transpose().unwrap().matmul_naive(&b).unwrap();
+        assert!(direct.max_abs_diff(&via_t).unwrap() < 1e-5);
+    }
+
+    #[test]
+    fn matmul_at_shape_errors() {
+        let a = t2(2, 3, &[0.0; 6]);
+        assert!(a.matmul_at(&t2(3, 2, &[0.0; 6])).is_err());
+        assert!(a.matmul_at(&Tensor::ones(&[2])).is_err());
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Single-stage training loop (S10a).
 //!
-//! One stage = one architecture = one compiled `step` artifact. The loop is
-//! the L3 hot path: batch synthesis → literal marshalling → PJRT execute →
-//! gradient clip → optimizer update → metrics. Python is never involved.
+//! One stage = one architecture = one `step` executable. The loop is the
+//! L3 hot path: batch synthesis → backend step (PJRT artifact or native
+//! autodiff) → gradient clip → optimizer update → metrics. It is written
+//! against [`ExecBackend`], so the same loop drives both engines; Python
+//! is never involved.
 
+use crate::autodiff::ExecBackend;
 use crate::config::TrainConfig;
 use crate::data::Batcher;
 use crate::error::{Error, Result};
@@ -11,7 +14,7 @@ use crate::json::Value;
 use crate::metrics::{RunLogger, Timer};
 use crate::optim::{clip_global_norm, Optimizer};
 use crate::params::ParamStore;
-use crate::runtime::{Runtime, StageExec};
+use crate::runtime::StageExec;
 
 /// Outcome of one stage's training.
 #[derive(Clone, Debug)]
@@ -49,7 +52,7 @@ impl Default for TrainState {
 /// of the method).
 #[allow(clippy::too_many_arguments)]
 pub fn train_stage(
-    rt: &Runtime,
+    backend: &dyn ExecBackend,
     stage: &StageExec,
     params: &mut ParamStore,
     opt: &mut Optimizer,
@@ -72,7 +75,7 @@ pub fn train_stage(
     for local_step in 0..steps {
         let batch = batcher.next();
         let step_timer = Timer::start();
-        let (loss, mut grads) = rt.step(stage, params, &batch)?;
+        let (loss, mut grads) = backend.step(stage, params, &batch)?;
         if !loss.is_finite() {
             return Err(Error::Train(format!(
                 "non-finite loss {loss} at stage '{}' step {local_step}",
@@ -137,13 +140,13 @@ pub fn train_stage(
     Ok(report)
 }
 
-/// Evaluate mean loss on a fixed probe batch via the PJRT fwd path.
+/// Evaluate mean loss on a fixed probe batch via the backend's fwd path.
 pub fn eval_loss(
-    rt: &Runtime,
+    backend: &dyn ExecBackend,
     stage: &StageExec,
     params: &ParamStore,
     batch: &crate::data::Batch,
 ) -> Result<f32> {
-    let logits = rt.forward(stage, params, &batch.tokens)?;
+    let logits = backend.forward(stage, params, &batch.tokens)?;
     crate::model::cross_entropy(&logits, &batch.targets)
 }

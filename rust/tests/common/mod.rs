@@ -1,10 +1,18 @@
-//! Shared helpers for integration tests (require `make artifacts` first).
+//! Shared helpers for integration tests.
+//!
+//! Two worlds: the PJRT artifact world ([`manifest`]) requires `make
+//! artifacts` + real xla bindings and stays `#[ignore]`d in-tree; the
+//! native world ([`tiny_schedule`] / [`tiny_manifest`]) runs fully offline
+//! against the shipped `configs/growth_tiny.json` and the autodiff
+//! backend, and carries the bulk of the integration coverage.
+#![allow(dead_code)] // each test binary uses its own subset of helpers
 
 use texpand::config::GrowthSchedule;
 use texpand::runtime::Manifest;
 
 pub const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
 pub const SCHEDULE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/growth_default.json");
+pub const TINY_SCHEDULE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/growth_tiny.json");
 
 /// Load the shipped manifest, with a clear failure if artifacts are absent.
 pub fn manifest() -> Manifest {
@@ -17,16 +25,22 @@ pub fn schedule() -> GrowthSchedule {
     GrowthSchedule::load(SCHEDULE).expect("shipped schedule must parse")
 }
 
+/// The small offline schedule the native-backend integration tests run on
+/// (3 stages, 2 boundaries, 4 of the 6 expansion ops).
+pub fn tiny_schedule() -> GrowthSchedule {
+    GrowthSchedule::load(TINY_SCHEDULE).expect("shipped tiny schedule must parse")
+}
+
+/// Synthetic manifest for the native backend (no artifacts involved).
+pub fn tiny_manifest() -> Manifest {
+    Manifest::from_schedule(&tiny_schedule())
+}
+
 /// Random token batch for a stage config.
 pub fn random_batch(
     cfg: &texpand::config::ModelConfig,
     batch: usize,
     seed: u64,
 ) -> texpand::data::Batch {
-    let mut rng = texpand::rng::Pcg32::seeded(seed);
-    let row = |rng: &mut texpand::rng::Pcg32| (0..cfg.seq).map(|_| rng.below(cfg.vocab) as u32).collect();
-    texpand::data::Batch {
-        tokens: (0..batch).map(|_| row(&mut rng)).collect(),
-        targets: (0..batch).map(|_| row(&mut rng)).collect(),
-    }
+    texpand::data::Batch::random(cfg, batch, seed)
 }

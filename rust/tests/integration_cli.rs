@@ -1,4 +1,9 @@
 //! Integration: the `texpand` binary end to end (spawned as a subprocess).
+//!
+//! The train/inspect/generate/info flows run un-ignored through
+//! `--backend native` on the tiny schedule — the full offline
+//! grow-as-you-train loop through the real CLI. Only the default
+//! PJRT-backed flow (which needs `make artifacts`) stays gated.
 
 mod common;
 
@@ -36,19 +41,84 @@ fn unknown_flag_rejected() {
 }
 
 #[test]
-#[ignore = "needs AOT artifacts + real PJRT bindings, absent from this repo (stub xla build); run `make artifacts` with the real bindings to enable — tracked in ROADMAP.md"]
-fn info_prints_manifest_summary() {
-    let out = texpand(&["info"]);
-    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
-    let text = String::from_utf8_lossy(&out.stdout);
-    assert!(text.contains("stage0"), "{text}");
-    assert!(text.contains("schedule"), "{text}");
+fn unknown_backend_rejected() {
+    let out = texpand(&["train", "--backend", "tpu-v9"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("tpu-v9"));
 }
 
 #[test]
-#[ignore = "needs AOT artifacts + real PJRT bindings, absent from this repo (stub xla build); run `make artifacts` with the real bindings to enable — tracked in ROADMAP.md"]
+fn info_prints_manifest_summary() {
+    let out = texpand(&["info", "--backend", "native", "--schedule", "configs/growth_tiny.json"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("stage0"), "{text}");
+    assert!(text.contains("growth_tiny"), "{text}");
+    assert!(text.contains("native"), "{text}");
+}
+
+#[test]
 fn train_smoke_then_inspect_and_generate() {
     let runs = std::env::temp_dir().join(format!("texpand-cli-{}", std::process::id()));
+    let runs = runs.to_str().unwrap();
+    let out = texpand(&[
+        "train",
+        "--backend", "native",
+        "--schedule", "configs/growth_tiny.json",
+        "--run-name", "cli-smoke",
+        "--runs", runs,
+        "--steps-scale", "0.2",
+        "--log-every", "100",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("run summary"), "{text}");
+    assert!(text.contains("final eval loss"), "{text}");
+
+    let ckpt = format!("{runs}/cli-smoke/stage2.txpd");
+    let out = texpand(&["inspect", "--ckpt", &ckpt]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("w_out"), "{text}");
+    assert!(text.contains("layer_1"), "{text}"); // stage2 has 2 layers
+
+    let out = texpand(&[
+        "generate",
+        "--backend", "native",
+        "--schedule", "configs/growth_tiny.json",
+        "--ckpt", &ckpt,
+        "--tokens", "20",
+        "--seed", "7",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("stage2"), "{text}");
+    std::fs::remove_dir_all(runs).ok();
+}
+
+#[test]
+fn verify_native_reports_preserving_boundaries() {
+    // `verify` logs under runs/verify in the repo cwd (append-safe); the
+    // assertion target is its stdout report
+    let out = texpand(&["verify", "--backend", "native", "--schedule", "configs/growth_tiny.json"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("preservation verification"), "{text}");
+    assert!(text.contains("PASS"), "{text}");
+    assert!(!text.contains("FAIL"), "{text}");
+}
+
+#[test]
+fn inspect_missing_checkpoint_fails_cleanly() {
+    let out = texpand(&["inspect", "--ckpt", "/nonexistent.txpd"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("error"));
+}
+
+#[test]
+#[ignore = "PJRT-specific: the default --backend pjrt flow needs real xla bindings + `make artifacts` (stub xla build in-tree); the native flow runs un-ignored in train_smoke_then_inspect_and_generate"]
+fn train_smoke_then_inspect_and_generate_pjrt() {
+    let runs = std::env::temp_dir().join(format!("texpand-cli-pjrt-{}", std::process::id()));
     let runs = runs.to_str().unwrap();
     let out = texpand(&[
         "train",
@@ -58,27 +128,10 @@ fn train_smoke_then_inspect_and_generate() {
         "--log-every", "100",
     ]);
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
-    let text = String::from_utf8_lossy(&out.stdout);
-    assert!(text.contains("run summary"), "{text}");
-    assert!(text.contains("final eval loss"), "{text}");
-
     let ckpt = format!("{runs}/cli-smoke/stage3.txpd");
     let out = texpand(&["inspect", "--ckpt", &ckpt]);
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
-    let text = String::from_utf8_lossy(&out.stdout);
-    assert!(text.contains("w_out"), "{text}");
-    assert!(text.contains("401536") || text.contains("401,536"), "{text}");
-
     let out = texpand(&["generate", "--ckpt", &ckpt, "--tokens", "20", "--seed", "7"]);
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
-    let text = String::from_utf8_lossy(&out.stdout);
-    assert!(text.contains("stage3"), "{text}");
     std::fs::remove_dir_all(runs).ok();
-}
-
-#[test]
-fn inspect_missing_checkpoint_fails_cleanly() {
-    let out = texpand(&["inspect", "--ckpt", "/nonexistent.txpd"]);
-    assert!(!out.status.success());
-    assert!(String::from_utf8_lossy(&out.stderr).contains("error"));
 }

@@ -1,13 +1,20 @@
 //! Integration: the growth coordinator end to end (short runs).
+//!
+//! Runs against the **native autodiff backend** on the shipped tiny
+//! schedule (`configs/growth_tiny.json`), so the full train → expand →
+//! keep-training loop executes offline — no AOT artifacts, no PJRT. The
+//! same scenarios work unchanged on the PJRT backend once artifacts exist
+//! (swap `NativeBackend::new()` for `Runtime::cpu()` and the manifest for
+//! the artifact one).
 
 mod common;
 
-use common::{manifest, schedule};
+use common::{tiny_manifest, tiny_schedule};
+use texpand::autodiff::NativeBackend;
 use texpand::config::TrainConfig;
 use texpand::coordinator::{Coordinator, CoordinatorOptions};
 use texpand::data::CorpusKind;
 use texpand::params::ParamStore;
-use texpand::runtime::Runtime;
 
 fn tmp_runs(tag: &str) -> String {
     let d = std::env::temp_dir().join(format!("texpand-coord-{tag}-{}", std::process::id()));
@@ -24,9 +31,9 @@ fn mini_coordinator(steps_scale: f64, save: bool) -> Coordinator {
         ..Default::default()
     };
     Coordinator::new(
-        schedule(),
-        manifest(),
-        Runtime::cpu().unwrap(),
+        tiny_schedule(),
+        tiny_manifest(),
+        Box::new(NativeBackend::new()),
         TrainConfig { log_every: 1000, ..Default::default() },
         opts,
     )
@@ -34,17 +41,16 @@ fn mini_coordinator(steps_scale: f64, save: bool) -> Coordinator {
 }
 
 #[test]
-#[ignore = "needs AOT artifacts + real PJRT bindings, absent from this repo (stub xla build); run `make artifacts` with the real bindings to enable — tracked in ROADMAP.md"]
 fn full_schedule_short_run_preserves_and_descends() {
     let runs = tmp_runs("full");
-    let mut coord = mini_coordinator(0.05, true); // ~7 steps per stage
+    let mut coord = mini_coordinator(1.0, true); // 30 steps per stage
     let summary = coord.run(&runs, "t1").unwrap();
 
-    assert_eq!(summary.stages.len(), 4);
-    assert_eq!(summary.boundaries.len(), 3);
+    assert_eq!(summary.stages.len(), 3);
+    assert_eq!(summary.boundaries.len(), 2);
     for b in &summary.boundaries {
         assert!(b.rust_delta <= 1e-4, "{}: rust {}", b.into_stage, b.rust_delta);
-        assert!(b.pjrt_delta <= 1e-4, "{}: pjrt {}", b.into_stage, b.pjrt_delta);
+        assert!(b.pjrt_delta <= 1e-4, "{}: backend {}", b.into_stage, b.pjrt_delta);
         assert!((b.loss_after - b.loss_before).abs() <= 1e-4, "loss continuity at {}", b.into_stage);
     }
     // losses should broadly descend across the whole run
@@ -62,10 +68,9 @@ fn full_schedule_short_run_preserves_and_descends() {
 }
 
 #[test]
-#[ignore = "needs AOT artifacts + real PJRT bindings, absent from this repo (stub xla build); run `make artifacts` with the real bindings to enable — tracked in ROADMAP.md"]
 fn checkpoints_reload_into_matching_configs() {
     let runs = tmp_runs("ckpt");
-    let mut coord = mini_coordinator(0.02, true);
+    let mut coord = mini_coordinator(0.1, true);
     let summary = coord.run(&runs, "t2").unwrap();
     for (i, st) in coord.schedule.stages.iter().enumerate() {
         let (params, meta) = ParamStore::load(&format!("{}/{}.txpd", summary.run_dir, st.name)).unwrap();
@@ -77,12 +82,11 @@ fn checkpoints_reload_into_matching_configs() {
 }
 
 #[test]
-#[ignore = "needs AOT artifacts + real PJRT bindings, absent from this repo (stub xla build); run `make artifacts` with the real bindings to enable — tracked in ROADMAP.md"]
 fn loss_curve_is_continuous_at_boundaries() {
     // stronger E3 check: the *training* loss right after a boundary must
     // not spike above the pre-boundary loss by more than normal step noise.
     let runs = tmp_runs("cont");
-    let mut coord = mini_coordinator(0.1, false); // 15 steps per stage
+    let mut coord = mini_coordinator(0.5, false); // 15 steps per stage
     let summary = coord.run(&runs, "t3").unwrap();
     for w in summary.stages.windows(2) {
         let (prev, next) = (&w[0], &w[1]);
@@ -99,10 +103,9 @@ fn loss_curve_is_continuous_at_boundaries() {
 }
 
 #[test]
-#[ignore = "needs AOT artifacts + real PJRT bindings, absent from this repo (stub xla build); run `make artifacts` with the real bindings to enable — tracked in ROADMAP.md"]
 fn branch_produces_trainable_family_member() {
     let runs = tmp_runs("branch");
-    let mut coord = mini_coordinator(0.02, true);
+    let mut coord = mini_coordinator(0.1, true);
     let summary = coord.run(&runs, "t4").unwrap();
     let (base, _) = ParamStore::load(&format!("{}/stage0.txpd", summary.run_dir)).unwrap();
 
@@ -127,10 +130,9 @@ fn branch_produces_trainable_family_member() {
 }
 
 #[test]
-#[ignore = "needs AOT artifacts + real PJRT bindings, absent from this repo (stub xla build); run `make artifacts` with the real bindings to enable — tracked in ROADMAP.md"]
 fn branch_rejects_mismatched_stage() {
     let runs = tmp_runs("branch-bad");
-    let mut coord = mini_coordinator(0.02, false);
+    let mut coord = mini_coordinator(0.1, false);
     let cfg0 = coord.schedule.stages[0].config;
     let mut rng = texpand::rng::Pcg32::seeded(0);
     let base = ParamStore::init(&cfg0, &mut rng, 0.02);
@@ -142,14 +144,13 @@ fn branch_rejects_mismatched_stage() {
 }
 
 #[test]
-#[ignore = "needs AOT artifacts + real PJRT bindings, absent from this repo (stub xla build); run `make artifacts` with the real bindings to enable — tracked in ROADMAP.md"]
 fn coordinator_rejects_schedule_manifest_drift() {
-    let mut sched = schedule();
+    let mut sched = tiny_schedule();
     sched.stages[1].config.mlp += 8; // simulate drift
     let result = Coordinator::new(
         sched,
-        manifest(),
-        Runtime::cpu().unwrap(),
+        tiny_manifest(),
+        Box::new(NativeBackend::new()),
         TrainConfig::default(),
         CoordinatorOptions::default(),
     );

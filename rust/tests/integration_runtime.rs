@@ -1,14 +1,113 @@
-//! Integration: manifest validation + PJRT execution of real artifacts.
+//! Integration: backend execution contracts.
+//!
+//! The native-backend family runs offline against the synthesized manifest
+//! (`Manifest::from_schedule` on `configs/growth_tiny.json`). The handful
+//! of genuinely PJRT-specific tests — HLO artifact compilation, the
+//! executable cache, validation of the *on-disk* `manifest.json` — stay
+//! `#[ignore]`d until real xla bindings + `make artifacts` are available.
 
 mod common;
 
-use common::{manifest, random_batch, schedule};
+use common::{manifest, random_batch, schedule, tiny_manifest};
+use texpand::autodiff::{ExecBackend, NativeBackend};
 use texpand::params::ParamStore;
 use texpand::rng::Pcg32;
 use texpand::runtime::{Manifest, Runtime};
 
+// ---------------------------------------------------------------------------
+// Native backend (offline)
+// ---------------------------------------------------------------------------
+
 #[test]
-#[ignore = "needs AOT artifacts + real PJRT bindings, absent from this repo (stub xla build); run `make artifacts` with the real bindings to enable — tracked in ROADMAP.md"]
+fn step_returns_finite_loss_and_usable_grads() {
+    let m = tiny_manifest();
+    let mut be = NativeBackend::new();
+    let stage = be.load_stage(&m, "stage0").unwrap();
+    let cfg = stage.meta.config;
+    let mut rng = Pcg32::seeded(3);
+    let params = ParamStore::init(&cfg, &mut rng, 0.02);
+    let batch = random_batch(&cfg, m.batch, 4);
+
+    let (loss, grads) = be.step(&stage, &params, &batch).unwrap();
+    assert!(loss.is_finite());
+    // random targets => loss near ln(vocab)
+    assert!((loss - (cfg.vocab as f32).ln()).abs() < 1.0, "loss {loss}");
+    assert_eq!(grads.len(), params.len());
+    for (g, (spec, _)) in grads.iter().zip(params.iter()) {
+        assert_eq!(g.shape(), spec.shape.as_slice(), "{}", spec.name);
+        assert!(g.all_finite(), "{}", spec.name);
+    }
+    // at least the output projection must receive gradient signal
+    let w_out_idx = params.specs().iter().position(|s| s.name == "w_out").unwrap();
+    assert!(grads[w_out_idx].max_abs() > 0.0);
+}
+
+#[test]
+fn sgd_on_native_grads_descends() {
+    let m = tiny_manifest();
+    let mut be = NativeBackend::new();
+    let stage = be.load_stage(&m, "stage0").unwrap();
+    let cfg = stage.meta.config;
+    let mut rng = Pcg32::seeded(5);
+    let mut params = ParamStore::init(&cfg, &mut rng, 0.02);
+    let batch = random_batch(&cfg, m.batch, 6);
+
+    let (loss0, grads) = be.step(&stage, &params, &batch).unwrap();
+    for (p, g) in params.tensors_mut().iter_mut().zip(&grads) {
+        let mut step = g.clone();
+        step.scale(0.5);
+        p.sub_assign(&step).unwrap();
+    }
+    let (loss1, _) = be.step(&stage, &params, &batch).unwrap();
+    assert!(loss1 < loss0, "one SGD step must descend on the same batch: {loss0} -> {loss1}");
+}
+
+#[test]
+fn runtime_rejects_mismatched_inputs() {
+    let m = tiny_manifest();
+    let mut be = NativeBackend::new();
+    let stage0 = be.load_stage(&m, "stage0").unwrap();
+    let stage1_cfg = m.stage("stage1").unwrap().config;
+    let mut rng = Pcg32::seeded(7);
+
+    // params for the wrong stage
+    let wrong_params = ParamStore::init(&stage1_cfg, &mut rng, 0.02);
+    let batch = random_batch(&stage0.meta.config, m.batch, 8);
+    assert!(be.forward(&stage0, &wrong_params, &batch.tokens).is_err());
+
+    // wrong batch size
+    let params = ParamStore::init(&stage0.meta.config, &mut rng, 0.02);
+    let small = random_batch(&stage0.meta.config, m.batch - 1, 9);
+    assert!(be.forward(&stage0, &params, &small.tokens).is_err());
+
+    // wrong seq length
+    let mut bad = random_batch(&stage0.meta.config, m.batch, 10);
+    bad.tokens[0].pop();
+    assert!(be.forward(&stage0, &params, &bad.tokens).is_err());
+}
+
+#[test]
+fn native_all_stages_execute() {
+    let m = tiny_manifest();
+    let mut be = NativeBackend::new();
+    for stage_meta in &m.stages {
+        let stage = be.load_stage(&m, &stage_meta.name).unwrap();
+        let mut rng = Pcg32::seeded(11);
+        let params = ParamStore::init(&stage.meta.config, &mut rng, 0.02);
+        let batch = random_batch(&stage.meta.config, m.batch, 12);
+        let logits = be.forward(&stage, &params, &batch.tokens).unwrap();
+        assert_eq!(logits.len(), m.batch, "{}", stage_meta.name);
+        let (loss, _) = be.step(&stage, &params, &batch).unwrap();
+        assert!(loss.is_finite(), "{}", stage_meta.name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT-specific (artifact compilation / on-disk manifest) — still gated
+// ---------------------------------------------------------------------------
+
+#[test]
+#[ignore = "PJRT-specific: validates the on-disk artifacts/manifest.json written by `make artifacts`, absent from this repo (stub xla build); the synthesized-manifest equivalent is unit-tested in runtime.rs (`manifest_from_schedule_mirrors_stage_metadata`)"]
 fn manifest_loads_and_matches_schedule() {
     let m = manifest();
     let s = schedule();
@@ -27,7 +126,7 @@ fn manifest_rejects_missing_dir() {
 }
 
 #[test]
-#[ignore = "needs AOT artifacts + real PJRT bindings, absent from this repo (stub xla build); run `make artifacts` with the real bindings to enable — tracked in ROADMAP.md"]
+#[ignore = "PJRT-specific: tampers with the on-disk artifacts/manifest.json from `make artifacts`, absent from this repo (stub xla build)"]
 fn manifest_rejects_tampered_params() {
     // corrupt one param name in a copy of the manifest: load must fail
     let orig = std::fs::read_to_string(format!("{}/manifest.json", common::ARTIFACTS)).unwrap();
@@ -41,7 +140,7 @@ fn manifest_rejects_tampered_params() {
 }
 
 #[test]
-#[ignore = "needs AOT artifacts + real PJRT bindings, absent from this repo (stub xla build); run `make artifacts` with the real bindings to enable — tracked in ROADMAP.md"]
+#[ignore = "PJRT-specific: exercises HLO compilation + the executable cache, needs real xla bindings + `make artifacts` (stub xla build in-tree); native execution coverage lives in `native_all_stages_execute`"]
 fn stage0_executes_and_caches() {
     let m = manifest();
     let mut rt = Runtime::cpu().unwrap();
@@ -63,8 +162,8 @@ fn stage0_executes_and_caches() {
 }
 
 #[test]
-#[ignore = "needs AOT artifacts + real PJRT bindings, absent from this repo (stub xla build); run `make artifacts` with the real bindings to enable — tracked in ROADMAP.md"]
-fn step_returns_finite_loss_and_usable_grads() {
+#[ignore = "PJRT-specific: executes compiled step artifacts, needs real xla bindings + `make artifacts` (stub xla build in-tree); native equivalents `step_returns_finite_loss_and_usable_grads` / `sgd_on_native_grads_descends` run un-ignored above"]
+fn pjrt_step_returns_finite_loss_and_usable_grads() {
     let m = manifest();
     let mut rt = Runtime::cpu().unwrap();
     let stage = rt.load_stage(&m, "stage0").unwrap();
@@ -75,7 +174,6 @@ fn step_returns_finite_loss_and_usable_grads() {
 
     let (loss, grads) = rt.step(&stage, &params, &batch).unwrap();
     assert!(loss.is_finite());
-    // random targets => loss near ln(vocab)
     assert!((loss - (cfg.vocab as f32).ln()).abs() < 1.0, "loss {loss}");
     assert_eq!(grads.len(), params.len());
     for (g, (spec, _)) in grads.iter().zip(params.iter()) {
@@ -88,7 +186,7 @@ fn step_returns_finite_loss_and_usable_grads() {
 }
 
 #[test]
-#[ignore = "needs AOT artifacts + real PJRT bindings, absent from this repo (stub xla build); run `make artifacts` with the real bindings to enable — tracked in ROADMAP.md"]
+#[ignore = "PJRT-specific: descends through compiled step-artifact gradients, needs real xla bindings + `make artifacts` (stub xla build in-tree); native equivalent `sgd_on_native_grads_descends` runs un-ignored above"]
 fn sgd_on_pjrt_grads_descends() {
     let m = manifest();
     let mut rt = Runtime::cpu().unwrap();
@@ -109,8 +207,8 @@ fn sgd_on_pjrt_grads_descends() {
 }
 
 #[test]
-#[ignore = "needs AOT artifacts + real PJRT bindings, absent from this repo (stub xla build); run `make artifacts` with the real bindings to enable — tracked in ROADMAP.md"]
-fn runtime_rejects_mismatched_inputs() {
+#[ignore = "PJRT-specific: exercises the Runtime's own input validation against compiled artifacts, needs real xla bindings + `make artifacts` (stub xla build in-tree); native equivalent `runtime_rejects_mismatched_inputs` runs un-ignored above"]
+fn pjrt_runtime_rejects_mismatched_inputs() {
     let m = manifest();
     let mut rt = Runtime::cpu().unwrap();
     let stage0 = rt.load_stage(&m, "stage0").unwrap();
@@ -134,7 +232,7 @@ fn runtime_rejects_mismatched_inputs() {
 }
 
 #[test]
-#[ignore = "needs AOT artifacts + real PJRT bindings, absent from this repo (stub xla build); run `make artifacts` with the real bindings to enable — tracked in ROADMAP.md"]
+#[ignore = "PJRT-specific: executes all compiled stage artifacts, needs real xla bindings + `make artifacts` (stub xla build in-tree); native equivalent `native_all_stages_execute` runs un-ignored above"]
 fn all_stages_compile_and_execute() {
     let m = manifest();
     let mut rt = Runtime::cpu().unwrap();
