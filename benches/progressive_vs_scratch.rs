@@ -14,9 +14,18 @@
 //! steps — it is that it reaches comparable loss at a fraction of the
 //! compute, because early steps run on a ~5x smaller model.
 //!
-//! Env: TEXPAND_E3_SCALE (default 1.0) scales the schedule's step counts.
-//! Run: `cargo bench --bench progressive_vs_scratch` (needs artifacts)
+//! Backends: runs **fully offline on the native autodiff backend by
+//! default** (no artifacts — the manifest is synthesized from the
+//! schedule, and batch rows data-parallelize over `TEXPAND_THREADS`).
+//! Set `TEXPAND_E3_BACKEND=pjrt` to run against AOT artifacts instead
+//! (needs `make artifacts`).
+//!
+//! Env: TEXPAND_E3_BACKEND  native|pjrt    (default native)
+//!      TEXPAND_E3_SCHEDULE schedule path  (default configs/growth_default.json)
+//!      TEXPAND_E3_SCALE    step scale     (default 1.0)
+//! Run: `cargo bench --bench progressive_vs_scratch`
 
+use texpand::autodiff::{ExecBackend, NativeBackend};
 use texpand::bench_util::Reporter;
 use texpand::config::{GrowthSchedule, TrainConfig};
 use texpand::coordinator::{Coordinator, CoordinatorOptions};
@@ -29,21 +38,43 @@ use texpand::rng::Pcg32;
 use texpand::runtime::{Manifest, Runtime};
 use texpand::train::{eval_loss, train_stage, TrainState};
 
+fn make_backend(kind: &str) -> Box<dyn ExecBackend> {
+    match kind {
+        "native" => Box::new(NativeBackend::new()),
+        "pjrt" => Box::new(Runtime::cpu().expect("PJRT runtime")),
+        other => panic!("TEXPAND_E3_BACKEND must be native|pjrt, got '{other}'"),
+    }
+}
+
 fn main() {
+    let backend_kind =
+        std::env::var("TEXPAND_E3_BACKEND").unwrap_or_else(|_| "native".to_string());
+    // validate before the manifest branch so a typo'd value reports as
+    // such instead of dying in the artifact loader's "run `make
+    // artifacts`" message
+    assert!(
+        backend_kind == "native" || backend_kind == "pjrt",
+        "TEXPAND_E3_BACKEND must be native|pjrt, got '{backend_kind}'"
+    );
+    let schedule_path = std::env::var("TEXPAND_E3_SCHEDULE")
+        .unwrap_or_else(|_| "configs/growth_default.json".to_string());
     let scale: f64 = std::env::var("TEXPAND_E3_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0);
-    let schedule = GrowthSchedule::load("configs/growth_default.json").unwrap();
-    let manifest = Manifest::load("artifacts", "manifest.json").expect("run `make artifacts`");
+    let schedule = GrowthSchedule::load(&schedule_path).unwrap();
+    let manifest = match backend_kind.as_str() {
+        "native" => Manifest::from_schedule(&schedule),
+        _ => Manifest::load("artifacts", "manifest.json").expect("run `make artifacts`"),
+    };
     let tcfg = TrainConfig { log_every: 10_000, ..Default::default() };
     let corpus = CorpusKind::MarkovText;
     let corpus_len = 200_000;
-    let mut rep = Reporter::new("progressive_vs_scratch (E3)");
+    let mut rep = Reporter::new(format!("progressive_vs_scratch (E3, {backend_kind})"));
 
     // ---- progressive ------------------------------------------------------
     let timer = Timer::start();
     let mut coord = Coordinator::new(
         schedule.clone(),
         manifest.clone(),
-        Box::new(Runtime::cpu().unwrap()),
+        make_backend(&backend_kind),
         tcfg.clone(),
         CoordinatorOptions {
             steps_scale: scale,
@@ -70,8 +101,8 @@ fn main() {
     let timer = Timer::start();
     let final_stage_name = schedule.stages.last().unwrap().name.clone();
     let final_cfg = *schedule.final_config();
-    let mut rt = Runtime::cpu().unwrap();
-    let exec = rt.load_stage(&manifest, &final_stage_name).unwrap();
+    let mut backend = make_backend(&backend_kind);
+    let exec = backend.load_stage(&manifest, &final_stage_name).unwrap();
     let mut rng = Pcg32::seeded(tcfg.seed);
     let mut params = ParamStore::init(&final_cfg, &mut rng, 0.02);
     let mut opt = Optimizer::new(&tcfg, &params);
@@ -87,12 +118,20 @@ fn main() {
     let mut logger = RunLogger::create("runs", "e3-scratch").unwrap().quiet();
     let mut state = TrainState::new();
     let scratch_report = train_stage(
-        &rt, &exec, &mut params, &mut opt, &mut batcher, &tcfg, &mut logger, &mut state, total_steps,
+        backend.as_ref(),
+        &exec,
+        &mut params,
+        &mut opt,
+        &mut batcher,
+        &tcfg,
+        &mut logger,
+        &mut state,
+        total_steps,
     )
     .unwrap();
     let scratch_wall = timer.secs();
     let probe = batcher.probe(tcfg.seed ^ 0xE7A1);
-    let scratch_eval = eval_loss(&rt, &exec, &params, &probe).unwrap();
+    let scratch_eval = eval_loss(backend.as_ref(), &exec, &params, &probe).unwrap();
     let scratch_compute =
         total_steps as f64 * final_cfg.num_params() as f64 * (schedule.batch * final_cfg.seq) as f64;
 
@@ -107,17 +146,20 @@ fn main() {
         "{:<14} {:>8} {:>12.4} {:>12.1} {:>14.3e} {:>10.2}",
         "scratch", total_steps, scratch_eval, scratch_wall, scratch_compute, 1.0
     );
+    let backend_field = || ("backend", Value::str(backend_kind.clone()));
     rep.value_row("progressive final eval loss", "loss", f64::from(summary.final_eval_loss), vec![
+        backend_field(),
         ("steps", Value::num(total_steps as f64)),
         ("compute", Value::num(prog_compute)),
         ("wall_s", Value::num(prog_wall)),
     ]);
     rep.value_row("scratch final eval loss", "loss", f64::from(scratch_eval), vec![
+        backend_field(),
         ("steps", Value::num(total_steps as f64)),
         ("compute", Value::num(scratch_compute)),
         ("wall_s", Value::num(scratch_wall)),
     ]);
-    rep.value_row("progressive/scratch compute ratio", "ratio", rel, vec![]);
+    rep.value_row("progressive/scratch compute ratio", "ratio", rel, vec![backend_field()]);
     rep.value_row(
         "boundary max |Δloss| (continuity)",
         "delta",
@@ -126,7 +168,7 @@ fn main() {
             .iter()
             .map(|b| f64::from((b.loss_after - b.loss_before).abs()))
             .fold(0.0, f64::max),
-        vec![],
+        vec![backend_field()],
     );
     rep.flush();
     println!(
@@ -136,7 +178,7 @@ fn main() {
     );
     println!("loss gap {:+.4} nats; every boundary loss-continuous (function preservation).",
         summary.final_eval_loss - scratch_eval);
-    println!("scratch first-step loss {:.3} vs progressive stage-3 entry {:.3}: the grown model",
+    println!("scratch first-step loss {:.3} vs progressive final-stage entry {:.3}: the grown model",
         scratch_report.first_loss,
         summary.stages.last().unwrap().first_loss);
     println!("never revisits the random-init regime — the paper's knowledge-reuse claim.");

@@ -1,26 +1,38 @@
-//! Native-backend training-step throughput across model sizes.
+//! Native-backend training-step throughput across model sizes and
+//! thread counts.
 //!
-//! Seeds the BENCH trajectory for the offline training path: per-size
-//! step latency + tokens/sec through `autodiff::loss_and_grads` +
-//! `Optimizer::step`, plus the blocked-vs-naive matmul kernel comparison
-//! that justifies the `tensor::matmul` hot-path rework. Rows append to
-//! `runs/bench.jsonl`.
+//! The BENCH trajectory for the offline training path: per-size step
+//! latency + tokens/sec through `autodiff::loss_and_grads` +
+//! `Optimizer::step`; a thread-scaling series over the data-parallel
+//! batch fan-out (rows carry `threads`, `tokens_per_sec` and
+//! `speedup_vs_1t`, and the bench *asserts* serial-vs-parallel grads are
+//! bit-identical before reporting); and the kernel comparisons that
+//! justify the `tensor` hot-path rework — blocked `matmul` vs naive,
+//! tiled `matmul_bt` vs naive, blocked `matmul_at` vs naive. Rows append
+//! to `runs/bench.jsonl`.
 //!
-//! Run: `cargo bench --bench train_step` (no artifacts needed)
+//! Run: `cargo bench --bench train_step` (no artifacts needed).
+//! Env: `TEXPAND_BENCH_BUDGET_MS` shrinks the per-case budget for CI
+//! smoke runs (default 1500); `TEXPAND_THREADS` sizes the default pool.
 
-use texpand::autodiff::loss_and_grads;
+use texpand::autodiff::{loss_and_grads, loss_and_grads_pooled};
 use texpand::bench_util::{bench_for, Reporter};
 use texpand::config::{ModelConfig, OptimKind, TrainConfig};
 use texpand::data::Batch;
 use texpand::json::Value;
 use texpand::optim::Optimizer;
+use texpand::parallel::{env_threads, Pool};
 use texpand::params::ParamStore;
 use texpand::rng::Pcg32;
 use texpand::tensor::Tensor;
 
 fn main() {
     let mut rep = Reporter::new("train_step (native backend)");
-    let budget = std::time::Duration::from_millis(1500);
+    let budget_ms: u64 = std::env::var("TEXPAND_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1500);
+    let budget = std::time::Duration::from_millis(budget_ms);
 
     // three sizes: the test tiny config, the tiny-schedule base, and the
     // default-schedule base
@@ -40,7 +52,7 @@ fn main() {
         let batch = Batch::random(&cfg, batch_rows, 2);
         let tokens_per_step = (batch_rows * cfg.seq) as f64;
 
-        // grads only (the autodiff cost itself)
+        // grads only (the autodiff cost itself, env-sized pool)
         let grad_stats = bench_for(1, budget, || loss_and_grads(&cfg, &params, &batch).unwrap());
         rep.row(
             &format!("{label} loss_and_grads"),
@@ -48,6 +60,7 @@ fn main() {
             vec![
                 ("kind", Value::str("loss_and_grads")),
                 ("params", Value::num(cfg.num_params() as f64)),
+                ("threads", Value::num(env_threads() as f64)),
                 ("tokens_per_sec", Value::num(grad_stats.per_second(tokens_per_step))),
             ],
         );
@@ -65,13 +78,76 @@ fn main() {
             vec![
                 ("kind", Value::str("step")),
                 ("params", Value::num(cfg.num_params() as f64)),
+                ("threads", Value::num(env_threads() as f64)),
                 ("step_ms", Value::num(step_stats.mean_ms())),
                 ("tokens_per_sec", Value::num(tps)),
             ],
         );
     }
 
-    // blocked vs naive matmul on training-shaped products
+    // ---- thread scaling on the largest size -------------------------------
+    // data-parallel batch fan-out: 1 thread vs the machine; the fixed-order
+    // tree reduction makes the grads bit-identical at every count, which is
+    // asserted before any timing is reported.
+    {
+        let (label, cfg, batch_rows) = cases[cases.len() - 1];
+        let mut rng = Pcg32::seeded(1);
+        let params = ParamStore::init(&cfg, &mut rng, 0.02);
+        let batch = Batch::random(&cfg, batch_rows, 2);
+        let tokens_per_step = (batch_rows * cfg.seq) as f64;
+
+        let mut counts = vec![1usize, 2, env_threads()];
+        counts.sort_unstable();
+        counts.dedup();
+
+        // compare bit patterns, not f32 == (which treats -0.0 == +0.0):
+        // the claim is bit-identity, so the check must be that strong
+        let bits = |grads: &[Tensor]| -> Vec<Vec<u32>> {
+            grads.iter().map(|g| g.data().iter().map(|x| x.to_bits()).collect()).collect()
+        };
+        let (base_loss, base_grads) =
+            loss_and_grads_pooled(&cfg, &params, &batch, &Pool::new(1), None).unwrap();
+        let base_bits = bits(&base_grads);
+        let mut bitexact = true;
+        for &threads in &counts {
+            let (l, g) =
+                loss_and_grads_pooled(&cfg, &params, &batch, &Pool::new(threads), None).unwrap();
+            bitexact &= l.to_bits() == base_loss.to_bits() && bits(&g) == base_bits;
+        }
+        assert!(bitexact, "serial vs parallel grads diverged — determinism bug");
+        rep.value_row(
+            &format!("{label} serial-vs-parallel grads bit-identical"),
+            "bitexact",
+            1.0,
+            vec![("kind", Value::str("grads_bitexact"))],
+        );
+
+        let mut t1_ns = f64::NAN;
+        for &threads in &counts {
+            let pool = Pool::new(threads);
+            let stats = bench_for(1, budget, || {
+                loss_and_grads_pooled(&cfg, &params, &batch, &pool, None).unwrap()
+            });
+            if threads == 1 {
+                t1_ns = stats.mean_ns;
+            }
+            let speedup = t1_ns / stats.mean_ns;
+            rep.row(
+                &format!("{label} loss_and_grads @{threads}t ({speedup:.2}x vs 1t)"),
+                &stats,
+                vec![
+                    ("kind", Value::str("loss_and_grads_threads")),
+                    ("params", Value::num(cfg.num_params() as f64)),
+                    ("threads", Value::num(threads as f64)),
+                    ("tokens_per_sec", Value::num(stats.per_second(tokens_per_step))),
+                    ("speedup_vs_1t", Value::num(speedup)),
+                ],
+            );
+        }
+    }
+
+    // ---- kernel comparisons on training-shaped products --------------------
+    // blocked vs naive matmul (forward + backward activation products)
     for (m, k, n) in [(64usize, 64usize, 256usize), (64, 256, 64), (128, 128, 128)] {
         let mut rng = Pcg32::seeded(3);
         let a = Tensor::randn(&[m, k], &mut rng, 1.0);
@@ -84,6 +160,48 @@ fn main() {
             &blocked,
             vec![
                 ("kind", Value::str("matmul_blocked")),
+                ("naive_mean_ns", Value::num(naive.mean_ns)),
+                ("speedup", Value::num(speedup)),
+            ],
+        );
+    }
+
+    // tiled matmul_bt vs naive (Q·Kᵀ scores and every dY·Wᵀ product):
+    // seq×k×seq attention shape and seq×hidden×mlp gradient shape
+    for (m, k, n) in [(64usize, 32usize, 64usize), (64, 128, 64), (128, 64, 128)] {
+        let mut rng = Pcg32::seeded(4);
+        let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+        let b = Tensor::randn(&[n, k], &mut rng, 1.0);
+        assert_eq!(a.matmul_bt(&b).unwrap(), a.matmul_bt_naive(&b).unwrap());
+        let tiled = bench_for(2, budget, || a.matmul_bt(&b).unwrap());
+        let naive = bench_for(2, budget, || a.matmul_bt_naive(&b).unwrap());
+        let speedup = naive.mean_ns / tiled.mean_ns;
+        rep.row(
+            &format!("matmul_bt {m}x{k}x{n} tiled ({speedup:.2}x vs naive)"),
+            &tiled,
+            vec![
+                ("kind", Value::str("matmul_bt_tiled")),
+                ("naive_mean_ns", Value::num(naive.mean_ns)),
+                ("speedup", Value::num(speedup)),
+            ],
+        );
+    }
+
+    // blocked matmul_at vs naive (Aᵀ·dY weight-gradient products):
+    // seq-summed hidden×mlp and hidden×vocab gradient shapes
+    for (m, k, n) in [(64usize, 64usize, 128usize), (64, 128, 64), (64, 64, 256)] {
+        let mut rng = Pcg32::seeded(5);
+        let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+        let b = Tensor::randn(&[m, n], &mut rng, 1.0);
+        assert_eq!(a.matmul_at(&b).unwrap(), a.matmul_at_naive(&b).unwrap());
+        let blocked = bench_for(2, budget, || a.matmul_at(&b).unwrap());
+        let naive = bench_for(2, budget, || a.matmul_at_naive(&b).unwrap());
+        let speedup = naive.mean_ns / blocked.mean_ns;
+        rep.row(
+            &format!("matmul_at {m}x{k}x{n} blocked ({speedup:.2}x vs naive)"),
+            &blocked,
+            vec![
+                ("kind", Value::str("matmul_at_blocked")),
                 ("naive_mean_ns", Value::num(naive.mean_ns)),
                 ("speedup", Value::num(speedup)),
             ],

@@ -39,15 +39,26 @@ echo "==> cargo test -q (tier-1, step 2)"
 cargo test -q
 
 if [ "$FAST" = "0" ]; then
-  echo "==> offline grow-train smoke (native backend, tiny schedule)"
+  echo "==> offline grow-train smoke (native backend, tiny schedule, 2 threads)"
   SMOKE_RUNS="$(mktemp -d)"
   trap 'rm -rf "$SMOKE_RUNS"' EXIT # clean up even when the smoke run fails
   ./target/release/texpand train \
     --backend native \
+    --threads 2 \
     --schedule configs/growth_tiny.json \
     --steps-scale 0.2 \
     --runs "$SMOKE_RUNS" --run-name ci-smoke --no-checkpoints \
     --log-every 100
+
+  echo "==> train-step bench smoke (TEXPAND_THREADS=2, tiny budget)"
+  # also asserts serial-vs-parallel grads are bit-identical (in-bench check)
+  TEXPAND_THREADS=2 TEXPAND_BENCH_BUDGET_MS=60 cargo bench --bench train_step
+  # throughput regressions fail fast: the freshest step rows must report a
+  # nonzero tokens/sec (a NaN serializes as null and also fails this grep)
+  if ! grep '"kind":"step"' runs/bench.jsonl | tail -n 3 | grep -Eq '"tokens_per_sec":[1-9]'; then
+    echo "ci.sh: no nonzero tokens/sec step row in runs/bench.jsonl" >&2
+    exit 1
+  fi
 fi
 
 echo "ci.sh: all green"

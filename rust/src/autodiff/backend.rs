@@ -19,10 +19,21 @@
 //! interpreter could be lax: train/coordinator/generate treat both engines
 //! identically, and the integration suite runs the same scenarios against
 //! either.
+//!
+//! Training steps are **data-parallel over batch rows**: the backend owns
+//! a [`crate::parallel::Pool`] (sized by `TEXPAND_THREADS` / the CLI's
+//! `--threads`) and fans [`crate::autodiff::loss_and_grads_pooled`] out
+//! across it — grads are bit-identical at any thread count thanks to the
+//! fixed-order tree reduction. An optional `micro_batch` (CLI
+//! `--micro-batch`, or `"micro_batch"` in the schedule JSON) enables
+//! gradient accumulation: rows are processed that many at a time, so the
+//! schedule's effective batch can exceed what fits resident (tapes +
+//! per-row grad stores) at once.
 
 use crate::data::Batch;
 use crate::error::{Error, Result};
 use crate::model;
+use crate::parallel::Pool;
 use crate::params::ParamStore;
 use crate::runtime::{Manifest, Runtime, StageExec};
 use crate::tensor::Tensor;
@@ -75,15 +86,50 @@ impl ExecBackend for Runtime {
     }
 }
 
-/// The pure-Rust autodiff engine (see module docs). Stateless: the model is
-/// interpreted directly from the [`ParamStore`], so "loading" a stage is
-/// just adopting its metadata.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct NativeBackend;
+/// The pure-Rust autodiff engine (see module docs). No model state: the
+/// model is interpreted directly from the [`ParamStore`], so "loading" a
+/// stage is just adopting its metadata — the backend carries only its
+/// execution policy (worker pool + micro-batch size).
+#[derive(Clone, Copy, Debug)]
+pub struct NativeBackend {
+    pool: Pool,
+    micro_batch: Option<usize>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new()
+    }
+}
 
 impl NativeBackend {
+    /// Environment-sized pool (`TEXPAND_THREADS`, else all cores), no
+    /// micro-batching.
     pub fn new() -> NativeBackend {
-        NativeBackend
+        NativeBackend { pool: Pool::from_env(), micro_batch: None }
+    }
+
+    /// Backend with an explicit worker count (the CLI's `--threads`).
+    pub fn with_threads(threads: usize) -> NativeBackend {
+        NativeBackend { pool: Pool::new(threads), micro_batch: None }
+    }
+
+    /// Override the worker count in place.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.pool = Pool::new(threads);
+    }
+
+    /// Gradient-accumulation chunk size (`None` = whole batch at once).
+    pub fn set_micro_batch(&mut self, micro_batch: Option<usize>) {
+        self.micro_batch = micro_batch;
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    pub fn micro_batch(&self) -> Option<usize> {
+        self.micro_batch
     }
 
     /// Same input discipline as the PJRT runtime: params must match the
@@ -144,7 +190,13 @@ impl ExecBackend for NativeBackend {
     fn step(&self, stage: &StageExec, params: &ParamStore, batch: &Batch) -> Result<(f32, Vec<Tensor>)> {
         Self::check(stage, params, &batch.tokens)?;
         Self::check(stage, params, &batch.targets)?;
-        super::backward::loss_and_grads(&stage.meta.config, params, batch)
+        super::backward::loss_and_grads_pooled(
+            &stage.meta.config,
+            params,
+            batch,
+            &self.pool,
+            self.micro_batch,
+        )
     }
 }
 
@@ -194,6 +246,35 @@ mod tests {
         let (loss, grads) = be.step(&stage, &params, &batch).unwrap();
         assert!(loss.is_finite());
         assert_eq!(grads.len(), params.len());
+    }
+
+    #[test]
+    fn native_backend_step_is_thread_count_and_micro_batch_stable() {
+        let sched = tiny_schedule();
+        let manifest = Manifest::from_schedule(&sched);
+        let mut be1 = NativeBackend::with_threads(1);
+        let stage = be1.load_stage(&manifest, "stage0").unwrap();
+        let cfg = stage.meta.config;
+        let mut rng = Pcg32::seeded(7);
+        let params = ParamStore::init(&cfg, &mut rng, 0.05);
+        let batch = Batch::random(&cfg, manifest.batch, 9);
+
+        let (loss1, grads1) = be1.step(&stage, &params, &batch).unwrap();
+        let be4 = NativeBackend::with_threads(4);
+        let (loss4, grads4) = be4.step(&stage, &params, &batch).unwrap();
+        // serial vs parallel: bit-identical
+        assert_eq!(loss1.to_bits(), loss4.to_bits());
+        assert_eq!(grads1, grads4);
+
+        // micro-batched accumulation: same step within 1e-6
+        let mut bem = NativeBackend::with_threads(2);
+        bem.set_micro_batch(Some(1));
+        assert_eq!(bem.micro_batch(), Some(1));
+        let (loss_m, grads_m) = bem.step(&stage, &params, &batch).unwrap();
+        assert_eq!(loss1.to_bits(), loss_m.to_bits());
+        for (a, b) in grads_m.iter().zip(&grads1) {
+            assert!(a.max_abs_diff(b).unwrap() <= 1e-6);
+        }
     }
 
     #[test]

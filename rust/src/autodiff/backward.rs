@@ -2,10 +2,21 @@
 //!
 //! [`loss_and_grads`] is the native equivalent of a PJRT `step` artifact:
 //! it returns `(mean cross-entropy, canonical-order gradients)` for one
-//! batch. Gradients are accumulated into a zeroed [`ParamStore`], which
-//! buys two invariants for free: every gradient has exactly its parameter's
-//! shape, and [`ParamStore::into_tensors`] exports them in the canonical
-//! order [`crate::optim::Optimizer::step`] consumes.
+//! batch. Per-sequence tapes are independent, so the batch dimension is
+//! **data-parallel**: [`loss_and_grads_pooled`] fans the rows out across a
+//! [`crate::parallel::Pool`], each row accumulating into its own zeroed
+//! [`ParamStore`] (which buys two invariants for free: every gradient has
+//! exactly its parameter's shape, and [`ParamStore::into_tensors`] exports
+//! them in the canonical order [`crate::optim::Optimizer::step`] consumes).
+//! The per-row stores are then merged by a **fixed-order pairwise tree
+//! reduction** keyed on row index, on the calling thread — the reduction
+//! order depends only on the batch shape, never on the worker count, so
+//! the `(loss, grads)` result is bit-identical at any `--threads` setting
+//! (DESIGN.md §11). Optional micro-batching bounds resident memory: rows
+//! are processed `micro_batch` at a time and chunk gradients accumulate
+//! left-to-right, trading bitwise agreement with the unchunked sum for an
+//! O(1e-7)-relative reassociation difference (the loss itself stays
+//! bit-identical — its f64 terms always sum in row order).
 //!
 //! The walk is the forward tape in reverse (derivations in DESIGN.md §10):
 //!
@@ -23,6 +34,7 @@
 use crate::config::ModelConfig;
 use crate::data::Batch;
 use crate::error::{Error, Result};
+use crate::parallel::Pool;
 use crate::params::ParamStore;
 use crate::tensor::Tensor;
 
@@ -114,13 +126,63 @@ pub fn backward_seq(
     Ok(())
 }
 
+/// Forward + backward for one batch row into a fresh zeroed store. The
+/// unit of work the pool fans out; pure function of its arguments, so row
+/// results cannot depend on scheduling.
+fn row_loss_and_grads(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    tokens: &[u32],
+    targets: &[u32],
+    count: usize,
+) -> Result<(ParamStore, f64)> {
+    let tape = forward_with_tape(cfg, params, tokens)?;
+    // one pass computes both the gradient and this sequence's loss
+    // terms (bit-identical to model::cross_entropy's accumulation)
+    let (d_logits, seq_loss) = cross_entropy_grad_with_loss(&tape.logits, targets, count)?;
+    let mut grads = ParamStore::zeros(cfg);
+    backward_seq(cfg, params, &tape, &d_logits, &mut grads)?;
+    Ok((grads, seq_loss))
+}
+
+/// Pairwise tree reduction of per-row gradient stores in fixed index
+/// order: round 1 merges (0,1), (2,3), ...; round 2 merges the survivors
+/// pairwise again, until one store remains. The pairing is a function of
+/// the store count alone, so the summation tree — and therefore every
+/// f32 rounding step — is identical no matter how many worker threads
+/// produced the inputs.
+fn tree_reduce(mut stores: Vec<ParamStore>) -> Result<ParamStore> {
+    while stores.len() > 1 {
+        let mut next = Vec::with_capacity(stores.len());
+        let mut it = stores.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                for (ta, tb) in a.tensors_mut().iter_mut().zip(b.tensors()) {
+                    ta.add_assign(tb)?;
+                }
+            }
+            next.push(a);
+        }
+        stores = next;
+    }
+    Ok(stores.pop().expect("tree_reduce needs at least one store"))
+}
+
 /// One native training step's math: forward (taped) + mean cross-entropy +
 /// full backward over the batch. Returns `(loss, canonical-order grads)` —
 /// the exact contract of the PJRT `step` artifact.
-pub fn loss_and_grads(
+///
+/// Batch rows fan out over `pool`; results are bit-identical at any
+/// thread count (see the module docs). `micro_batch` caps how many rows
+/// are resident (tape + per-row gradient store) at once: `None` processes
+/// the whole batch in one chunk, `Some(m)` accumulates `ceil(rows/m)`
+/// chunk gradients left-to-right — same grads to ~1e-6, loss bit-exact.
+pub fn loss_and_grads_pooled(
     cfg: &ModelConfig,
     params: &ParamStore,
     batch: &Batch,
+    pool: &Pool,
+    micro_batch: Option<usize>,
 ) -> Result<(f32, Vec<Tensor>)> {
     if batch.tokens.is_empty() || batch.tokens.len() != batch.targets.len() {
         return Err(Error::Train(format!(
@@ -129,22 +191,56 @@ pub fn loss_and_grads(
             batch.targets.len()
         )));
     }
-    let count: usize = batch.targets.iter().map(Vec::len).sum();
-    let mut grads = ParamStore::zeros(cfg);
-    let mut loss_sum = 0.0f64;
     for (toks, tgts) in batch.tokens.iter().zip(&batch.targets) {
         if tgts.len() != toks.len() {
             return Err(Error::Train("loss_and_grads: ragged targets".into()));
         }
-        let tape = forward_with_tape(cfg, params, toks)?;
-        // one pass computes both the gradient and this sequence's loss
-        // terms (bit-identical to model::cross_entropy's accumulation)
-        let (d_logits, seq_loss) = cross_entropy_grad_with_loss(&tape.logits, tgts, count)?;
-        backward_seq(cfg, params, &tape, &d_logits, &mut grads)?;
-        loss_sum += seq_loss;
+    }
+    let rows = batch.tokens.len();
+    let count: usize = batch.targets.iter().map(Vec::len).sum();
+    let micro = micro_batch.unwrap_or(rows).max(1);
+
+    let mut total: Option<ParamStore> = None;
+    let mut loss_sum = 0.0f64;
+    let mut lo = 0usize;
+    while lo < rows {
+        let hi = (lo + micro).min(rows);
+        let indices: Vec<usize> = (lo..hi).collect();
+        let row_results: Vec<Result<(ParamStore, f64)>> = pool.map(&indices, |_, &r| {
+            row_loss_and_grads(cfg, params, &batch.tokens[r], &batch.targets[r], count)
+        });
+        let mut stores = Vec::with_capacity(row_results.len());
+        for res in row_results {
+            let (grads, seq_loss) = res?;
+            // fixed row order — bit-identical to the serial f64 sum
+            loss_sum += seq_loss;
+            stores.push(grads);
+        }
+        let chunk = tree_reduce(stores)?;
+        total = Some(match total {
+            None => chunk,
+            Some(mut acc) => {
+                for (ta, tb) in acc.tensors_mut().iter_mut().zip(chunk.tensors()) {
+                    ta.add_assign(tb)?;
+                }
+                acc
+            }
+        });
+        lo = hi;
     }
     let loss = (loss_sum / count as f64) as f32;
-    Ok((loss, grads.into_tensors()))
+    Ok((loss, total.expect("validated non-empty batch").into_tensors()))
+}
+
+/// [`loss_and_grads_pooled`] with the environment-sized pool
+/// (`TEXPAND_THREADS`) and no micro-batching — the drop-in serial-looking
+/// entry point benches and tests share with the backend.
+pub fn loss_and_grads(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    batch: &Batch,
+) -> Result<(f32, Vec<Tensor>)> {
+    loss_and_grads_pooled(cfg, params, batch, &Pool::from_env(), None)
 }
 
 #[cfg(test)]
@@ -337,6 +433,73 @@ mod tests {
         for (spec, g) in grads.iter() {
             assert_eq!(g.max_abs(), 0.0, "{} received gradient from zero upstream", spec.name);
         }
+    }
+
+    /// Bit patterns of every gradient scalar — the "byte-identical"
+    /// comparison (`==` on f32 would also pass for -0.0 vs +0.0).
+    fn bits_of(grads: &[Tensor]) -> Vec<Vec<u32>> {
+        grads.iter().map(|g| g.data().iter().map(|x| x.to_bits()).collect()).collect()
+    }
+
+    #[test]
+    fn grads_are_bit_identical_at_any_thread_count() {
+        let cfg = tiny_cfg();
+        let mut rng = Pcg32::seeded(60);
+        let params = ParamStore::init(&cfg, &mut rng, 0.1);
+        let batch = random_batch(&cfg, 5, &mut rng);
+        let (l1, g1) =
+            loss_and_grads_pooled(&cfg, &params, &batch, &crate::parallel::Pool::new(1), None)
+                .unwrap();
+        for threads in [2usize, 3, 8] {
+            let pool = crate::parallel::Pool::new(threads);
+            let (ln, gn) = loss_and_grads_pooled(&cfg, &params, &batch, &pool, None).unwrap();
+            assert_eq!(l1.to_bits(), ln.to_bits(), "loss diverged at {threads} threads");
+            assert_eq!(bits_of(&g1), bits_of(&gn), "grads diverged at {threads} threads");
+        }
+        // the default entry point (env-sized pool) is the same computation
+        let (ld, gd) = loss_and_grads(&cfg, &params, &batch).unwrap();
+        assert_eq!(l1.to_bits(), ld.to_bits());
+        assert_eq!(bits_of(&g1), bits_of(&gd));
+    }
+
+    #[test]
+    fn micro_batched_accumulation_matches_full_batch() {
+        let cfg = tiny_cfg();
+        let mut rng = Pcg32::seeded(61);
+        let params = ParamStore::init(&cfg, &mut rng, 0.1);
+        let batch = random_batch(&cfg, 6, &mut rng);
+        let pool = crate::parallel::Pool::new(2);
+        let (full_loss, full_grads) =
+            loss_and_grads_pooled(&cfg, &params, &batch, &pool, None).unwrap();
+        for micro in [1usize, 2, 4] {
+            let (l, g) = loss_and_grads_pooled(&cfg, &params, &batch, &pool, Some(micro)).unwrap();
+            // the loss sums its f64 row terms in row order regardless of
+            // chunking, so it stays bit-exact; grads reassociate
+            assert_eq!(full_loss.to_bits(), l.to_bits(), "micro={micro}");
+            assert_eq!(g.len(), full_grads.len(), "micro={micro}");
+            for (a, b) in g.iter().zip(&full_grads) {
+                assert!(a.max_abs_diff(b).unwrap() <= 1e-6, "micro={micro}");
+            }
+        }
+        // micro >= rows degenerates to exactly the unchunked computation
+        let (_, g_over) = loss_and_grads_pooled(&cfg, &params, &batch, &pool, Some(100)).unwrap();
+        assert_eq!(bits_of(&g_over), bits_of(&full_grads));
+    }
+
+    #[test]
+    fn micro_batched_grads_are_thread_count_independent_too() {
+        let cfg = tiny_cfg();
+        let mut rng = Pcg32::seeded(62);
+        let params = ParamStore::init(&cfg, &mut rng, 0.1);
+        let batch = random_batch(&cfg, 5, &mut rng);
+        let (l1, g1) =
+            loss_and_grads_pooled(&cfg, &params, &batch, &crate::parallel::Pool::new(1), Some(2))
+                .unwrap();
+        let (l4, g4) =
+            loss_and_grads_pooled(&cfg, &params, &batch, &crate::parallel::Pool::new(4), Some(2))
+                .unwrap();
+        assert_eq!(l1.to_bits(), l4.to_bits());
+        assert_eq!(bits_of(&g1), bits_of(&g4));
     }
 
     #[test]

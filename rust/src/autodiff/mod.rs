@@ -20,7 +20,10 @@
 //! * [`backward`] — the full-model reverse pass: [`loss_and_grads`]
 //!   returns `(loss, canonical-order grads)`, the exact contract of a PJRT
 //!   `step` artifact, so [`crate::optim::Optimizer::step`] consumes either
-//!   source unchanged.
+//!   source unchanged. Batch rows are data-parallel over the shared
+//!   [`crate::parallel::Pool`] with a deterministic fixed-order tree
+//!   reduction (bit-identical grads at any thread count), and
+//!   [`loss_and_grads_pooled`] adds gradient-accumulation micro-batching.
 //! * [`backend`] — the [`ExecBackend`] trait (`forward` + `step` +
 //!   `load_stage`) with impls for the PJRT [`crate::runtime::Runtime`] and
 //!   the pure-Rust [`NativeBackend`]; `train`, `coordinator` and
@@ -37,5 +40,5 @@ pub mod ops;
 pub mod tape;
 
 pub use backend::{ExecBackend, NativeBackend};
-pub use backward::{backward_seq, loss_and_grads};
+pub use backward::{backward_seq, loss_and_grads, loss_and_grads_pooled};
 pub use tape::{forward_with_tape, SeqTape};

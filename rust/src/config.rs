@@ -263,6 +263,12 @@ pub struct Stage {
 pub struct GrowthSchedule {
     pub name: String,
     pub batch: usize,
+    /// Optional gradient-accumulation chunk size for the native backend:
+    /// a step still consumes `batch` rows, but only `micro_batch` of them
+    /// are resident (tape + per-row grad store) at a time, so the
+    /// effective batch can exceed memory. `None` = whole batch at once.
+    /// CLI `--micro-batch` overrides.
+    pub micro_batch: Option<usize>,
     pub stages: Vec<Stage>,
 }
 
@@ -306,9 +312,14 @@ impl GrowthSchedule {
                 apply: ops,
             });
         }
+        let micro_batch = v.get("micro_batch").map(|m| m.as_usize()).transpose()?;
+        if micro_batch == Some(0) {
+            return Err(Error::Config("micro_batch must be >= 1".into()));
+        }
         Ok(GrowthSchedule {
             name: v.get("name").map(|n| n.as_str().map(String::from)).transpose()?.unwrap_or_else(|| "unnamed".into()),
             batch: v.get("batch").map(|b| b.as_usize()).transpose()?.unwrap_or(8),
+            micro_batch,
             stages,
         })
     }
@@ -487,6 +498,21 @@ mod tests {
             ]
         }"#
         .to_string()
+    }
+
+    #[test]
+    fn schedule_micro_batch_parses_and_validates() {
+        // absent -> None
+        let s = GrowthSchedule::from_json(&Value::parse(&sched_json()).unwrap()).unwrap();
+        assert_eq!(s.micro_batch, None);
+        // present -> Some
+        let text = sched_json().replace(r#""batch": 4,"#, r#""batch": 4, "micro_batch": 2,"#);
+        let s = GrowthSchedule::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(s.micro_batch, Some(2));
+        // zero -> rejected
+        let text = sched_json().replace(r#""batch": 4,"#, r#""batch": 4, "micro_batch": 0,"#);
+        let err = GrowthSchedule::from_json(&Value::parse(&text).unwrap()).unwrap_err().to_string();
+        assert!(err.contains("micro_batch"), "{err}");
     }
 
     #[test]

@@ -18,6 +18,9 @@
 //!   model and the expansion surgery need.
 //! * [`prop`] — a miniature property-testing harness.
 //! * [`bench_util`] — wall-clock benchmark harness (used by `benches/`).
+//! * [`parallel`] — scoped-thread worker pool (`TEXPAND_THREADS` /
+//!   `--threads`); the single parallelism seam shared by native training
+//!   and the serve decode loop.
 //!
 //! Framework:
 //! * [`config`] — architecture configs, growth schedules, training config.
@@ -66,6 +69,7 @@ pub mod json;
 pub mod metrics;
 pub mod model;
 pub mod optim;
+pub mod parallel;
 pub mod params;
 pub mod prop;
 pub mod rng;

@@ -32,6 +32,7 @@ USAGE:
                   [--steps-scale F] [--lr F] [--optimizer adam|sgd]
                   [--seed N] [--corpus markov|copy|arithmetic]
                   [--corpus-len N] [--no-verify] [--no-checkpoints]
+                  [--threads N] [--micro-batch N]
   texpand verify  [--backend native|pjrt] [--schedule P] [--artifacts D]
                   [--seed N]
   texpand family  --base CKPT [--backend native|pjrt] [--schedule P]
@@ -51,6 +52,12 @@ USAGE:
 Backends: `pjrt` (default) executes AOT-compiled HLO artifacts and needs
 `make artifacts`; `native` interprets the model in pure Rust with
 hand-written reverse-mode gradients — fully offline, no artifacts.
+
+Native-backend parallelism: training steps fan batch rows out across
+worker threads (--threads, or the TEXPAND_THREADS env var; default all
+cores) with bit-identical gradients at any thread count. --micro-batch N
+(or \"micro_batch\" in the schedule JSON) accumulates gradients N rows at
+a time so the schedule's batch can exceed resident memory.
 
 Defaults: --schedule configs/growth_default.json, --artifacts artifacts,
           --runs runs, --backend pjrt.";
@@ -143,9 +150,41 @@ fn backend_for(
 ) -> Result<(Manifest, Box<dyn ExecBackend>, String)> {
     let (manifest, source) = resolve_manifest(args, schedule)?;
     let backend: Box<dyn ExecBackend> = match args.get_or("backend", "pjrt").as_str() {
-        "native" => Box::new(NativeBackend::new()),
+        "native" => {
+            let mut be = NativeBackend::new();
+            if let Some(threads) = args.get_usize("threads")? {
+                if threads == 0 {
+                    return Err(Error::Cli("--threads must be >= 1".into()));
+                }
+                be.set_threads(threads);
+            }
+            // precedence: CLI flag > schedule JSON > none
+            match args.get_usize("micro-batch")? {
+                Some(0) => return Err(Error::Cli("--micro-batch must be >= 1".into())),
+                Some(m) => be.set_micro_batch(Some(m)),
+                None => be.set_micro_batch(schedule.and_then(|s| s.micro_batch)),
+            }
+            Box::new(be)
+        }
         // the flag was already validated by resolve_manifest
-        _ => Box::new(Runtime::cpu()?),
+        _ => {
+            // fail rather than silently ignore native-only knobs: a pjrt
+            // run accepting --micro-batch would fake gradient accumulation
+            if args.get_usize("threads")?.is_some() || args.get_usize("micro-batch")?.is_some() {
+                return Err(Error::Cli(
+                    "--threads / --micro-batch apply to --backend native only".into(),
+                ));
+            }
+            // a schedule-sourced micro_batch is a tuning hint shared with
+            // the native backend, not a user flag — warn instead of fail
+            if schedule.is_some_and(|s| s.micro_batch.is_some()) {
+                eprintln!(
+                    "warning: the schedule's micro_batch applies to --backend native only; \
+                     the pjrt step runs full-batch"
+                );
+            }
+            Box::new(Runtime::cpu()?)
+        }
     };
     Ok((manifest, backend, source))
 }
@@ -165,6 +204,11 @@ fn reject_unknown_after_backend_flags(args: &Args) -> Result<()> {
 
 fn build_coordinator(args: &Args) -> Result<Coordinator> {
     let schedule_path = args.get_or("schedule", "configs/growth_default.json");
+    // training knobs, applied by backend_for after the reject below; the
+    // forward-only subcommands (generate, info) never consume these, so
+    // `texpand generate --threads 8` still fails as an unknown flag
+    // instead of being silently ignored
+    let _ = (args.get("threads"), args.get("micro-batch"));
     let tcfg = train_config(args)?;
     let mut opts = CoordinatorOptions::default();
     if let Some(scale) = args.get_f64("steps-scale")? {

@@ -1,0 +1,208 @@
+//! Scoped-thread worker pool (S17a) — the one parallelism seam.
+//!
+//! Both compute fan-outs in the repo — data-parallel native training
+//! ([`crate::autodiff::loss_and_grads_pooled`] over batch rows) and the
+//! serve scheduler's per-slot decode ([`crate::serve`]) — run through this
+//! [`Pool`], so thread policy lives in exactly one place. The pool is a
+//! *sizing policy*, not a thread cache: each `map`/`map_mut` call spawns
+//! scoped OS threads (`std::thread::scope`) that never outlive the call,
+//! so no `'static` bounds, no channels, no shutdown protocol — the same
+//! property the serve scheduler's old ad-hoc `thread::scope` loop relied
+//! on, now shared.
+//!
+//! Sizing: `Pool::from_env()` honours `TEXPAND_THREADS` (the CLI's
+//! `--threads` flag overrides it per run) and falls back to
+//! `std::thread::available_parallelism`. Work is split into contiguous
+//! index chunks, one per worker, sizes differing by at most one — the
+//! items both call sites feed (batch rows, decode slots) are
+//! near-uniform cost, so static chunking wastes nothing and keeps the
+//! pool dependency-free.
+//!
+//! Determinism: the pool itself adds none and removes none — results are
+//! returned in item order regardless of which worker produced them, and
+//! callers that *reduce* results must do so in a fixed order (see the
+//! deterministic tree reduction in [`crate::autodiff::backward`] and
+//! DESIGN.md §11).
+
+use std::num::NonZeroUsize;
+
+/// Worker count resolution: `TEXPAND_THREADS` env var (values `>= 1`;
+/// unset, empty, `0` or unparsable fall through), else the machine's
+/// available parallelism, else 1.
+pub fn env_threads() -> usize {
+    if let Ok(v) = std::env::var("TEXPAND_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+}
+
+/// A fixed-width scoped-thread pool (see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// Pool of exactly `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> Pool {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// Pool sized by [`env_threads`].
+    pub fn from_env() -> Pool {
+        Pool::new(env_threads())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Apply `f(index, &item)` to every item, fanning out across the
+    /// pool's workers; results come back in item order. With one worker
+    /// (or one item) this runs inline on the caller's thread. A panicking
+    /// task propagates to the caller exactly as inline execution would
+    /// (the worker's panic payload is resumed, not replaced) — callers
+    /// that need to survive a panicking task catch it inside `f`.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        // one body to maintain: drive the mutable fan-out over a vector
+        // of shared references (&T is Send because T: Sync)
+        let mut refs: Vec<&T> = items.iter().collect();
+        self.map_mut(&mut refs, |i, it| f(i, *it))
+    }
+
+    /// [`Pool::map`] with mutable access to each item (the serve decode
+    /// loop advances slots in place). Chunks are disjoint `&mut` splits,
+    /// so no locking anywhere; the same panic policy as [`Pool::map`].
+    pub fn map_mut<T, R, F>(&self, items: &mut [T], f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> R + Sync,
+    {
+        let n = items.len();
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return items.iter_mut().enumerate().map(|(i, it)| f(i, it)).collect();
+        }
+        let fref = &f;
+        let chunked: Vec<Vec<R>> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(workers);
+            let mut rest: &mut [T] = items;
+            let mut start = 0usize;
+            for w in 0..workers {
+                let len = chunk_len(n, workers, w);
+                // `mem::take` moves the slice out so the split halves keep
+                // the full input lifetime (a plain reborrow would not
+                // outlive this iteration)
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(len);
+                rest = tail;
+                let chunk_start = start;
+                start += len;
+                handles.push(scope.spawn(move || {
+                    chunk
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(i, it)| fref(chunk_start + i, it))
+                        .collect::<Vec<R>>()
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|payload| std::panic::resume_unwind(payload)))
+                .collect()
+        });
+        chunked.into_iter().flatten().collect()
+    }
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        Pool::from_env()
+    }
+}
+
+/// Length of worker `w`'s contiguous chunk when splitting `n` items over
+/// `workers` workers: sizes differ by at most one, larger chunks first.
+fn chunk_len(n: usize, workers: usize, w: usize) -> usize {
+    n / workers + usize::from(w < n % workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        assert_eq!(Pool::new(0).threads(), 1);
+        assert_eq!(Pool::new(3).threads(), 3);
+    }
+
+    #[test]
+    fn chunks_cover_everything_once() {
+        for n in [0usize, 1, 2, 5, 7, 16] {
+            for workers in [1usize, 2, 3, 5, 8] {
+                let total: usize = (0..workers).map(|w| chunk_len(n, workers, w)).sum();
+                assert_eq!(total, n, "n={n} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_preserves_item_order() {
+        let items: Vec<usize> = (0..23).collect();
+        for threads in [1usize, 2, 4, 32] {
+            let out = Pool::new(threads).map(&items, |i, &x| {
+                assert_eq!(i, x, "index must match item position");
+                x * 10
+            });
+            let want: Vec<usize> = (0..23).map(|x| x * 10).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_mut_mutates_in_place_and_returns_in_order() {
+        for threads in [1usize, 2, 5] {
+            let mut items: Vec<u64> = (0..9).collect();
+            let out = Pool::new(threads).map_mut(&mut items, |i, x| {
+                *x += 100;
+                i as u64
+            });
+            assert_eq!(items, (100..109).collect::<Vec<u64>>(), "threads={threads}");
+            assert_eq!(out, (0..9).collect::<Vec<u64>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_item_inputs() {
+        let pool = Pool::new(4);
+        let empty: Vec<u32> = vec![];
+        assert!(pool.map(&empty, |_, &x| x).is_empty());
+        let mut one = vec![7u32];
+        assert_eq!(pool.map_mut(&mut one, |_, x| *x * 2), vec![14]);
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        let items: Vec<u64> = (0..17).map(|i| i * 31 + 7).collect();
+        let baseline = Pool::new(1).map(&items, |i, &x| x.wrapping_mul(i as u64 + 1));
+        for threads in [2usize, 3, 8] {
+            let got = Pool::new(threads).map(&items, |i, &x| x.wrapping_mul(i as u64 + 1));
+            assert_eq!(got, baseline, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn env_threads_is_positive() {
+        assert!(env_threads() >= 1);
+    }
+}

@@ -15,7 +15,8 @@
 //!
 //! Ticks are synchronous and swaps only happen between them, so the swap
 //! point needs no locking: the engine is single-owner, and intra-tick
-//! parallelism (thread-per-slot decode) never outlives the tick.
+//! parallelism (the shared [`crate::parallel::Pool`] decode fan-out)
+//! never outlives the tick.
 
 use std::collections::HashMap;
 
@@ -34,7 +35,8 @@ use crate::serve::scheduler::{Completion, Request, RequestId, Scheduler, TickRep
 pub struct EngineOptions {
     /// Maximum concurrently-decoding sequences (scheduler slots).
     pub max_slots: usize,
-    /// Decode slots on scoped OS threads (identical results either way).
+    /// Fan the per-slot decode out over the shared worker pool
+    /// (`TEXPAND_THREADS`-sized; identical results either way).
     pub parallel: bool,
     /// Hot-swap preservation tolerance on the probe batch (same default as
     /// `TrainConfig::preserve_tol`).

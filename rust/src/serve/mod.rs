@@ -7,7 +7,8 @@
 //!   decode state and the object that is *remapped through expansion ops*
 //!   at a hot-swap (the subsystem's central trick).
 //! * [`scheduler`] — request queue + continuous batching across in-flight
-//!   sequences of different lengths, thread-per-slot decode.
+//!   sequences of different lengths; per-slot decode fans out over the
+//!   shared [`crate::parallel::Pool`].
 //! * [`engine`] — the live [`crate::params::ParamStore`] behind a swap
 //!   point; `submit`/`poll`/`tick` plus counters.
 //! * [`hotswap`] — surgery → preservation probe → cache remap → atomic

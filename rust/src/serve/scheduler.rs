@@ -11,9 +11,12 @@
 //! logits (per-request [`Sampler`], per-request RNG stream so results are
 //! independent of batch composition), then run one KV-cached incremental
 //! forward ([`crate::model::forward_incremental`]). Slots are mutually
-//! independent, so the decode fans out across OS threads
-//! (`std::thread::scope`) when `parallel` is set — results are identical
-//! either way, which `integration_serve.rs` asserts.
+//! independent, so when `parallel` is set the decode fans out over the
+//! shared scoped-thread pool ([`crate::parallel::Pool`], sized by
+//! `TEXPAND_THREADS` — the same seam native training parallelizes
+//! through), replacing the old ad-hoc thread-per-slot `std::thread::scope`
+//! loop: worker count no longer grows with slot count, and results are
+//! identical either way, which `integration_serve.rs` asserts.
 //!
 //! Window policy: while a sequence fits the positional table the decode is
 //! purely incremental; past `seq` tokens the window slides, which
@@ -27,6 +30,7 @@ use std::collections::VecDeque;
 use crate::error::{Error, Result};
 use crate::generate::{sample_from_logits, Sampler};
 use crate::model::forward_incremental;
+use crate::parallel::Pool;
 use crate::params::ParamStore;
 use crate::rng::Pcg32;
 use crate::serve::kv::KvCache;
@@ -150,16 +154,24 @@ pub struct Scheduler {
     max_slots: usize,
     next_id: RequestId,
     tick: u64,
+    /// Shared decode fan-out pool (`TEXPAND_THREADS`-sized by default).
+    pool: Pool,
 }
 
 impl Scheduler {
     pub fn new(max_slots: usize) -> Scheduler {
+        Scheduler::with_pool(max_slots, Pool::from_env())
+    }
+
+    /// Scheduler with an explicit worker pool (tests, custom sizing).
+    pub fn with_pool(max_slots: usize, pool: Pool) -> Scheduler {
         Scheduler {
             queue: VecDeque::new(),
             active: Vec::new(),
             max_slots: max_slots.max(1),
             next_id: 0,
             tick: 0,
+            pool,
         }
     }
 
@@ -218,28 +230,22 @@ impl Scheduler {
     }
 
     /// Advance every active slot one token. With `parallel`, slots decode
-    /// on scoped OS threads (identical results — slots share nothing
-    /// mutable). Finished sequences are drained and returned.
+    /// across the shared scoped-thread pool (identical results — slots
+    /// share nothing mutable and the pool returns outcomes in slot
+    /// order). Finished sequences are drained and returned.
     pub fn decode_tick(&mut self, params: &ParamStore, parallel: bool) -> Result<Vec<Completion>> {
         self.tick += 1;
         if self.active.is_empty() {
             return Ok(Vec::new());
         }
         let outcomes: Vec<Result<bool>> = if parallel && self.active.len() > 1 {
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = self
-                    .active
-                    .iter_mut()
-                    .map(|slot| scope.spawn(move || slot.step(params)))
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| {
-                        h.join().unwrap_or_else(|_| {
-                            Err(Error::Serve("decode worker thread panicked".into()))
-                        })
-                    })
-                    .collect()
+            self.pool.map_mut(&mut self.active, |_, slot| {
+                // surface a panicking slot as this tick's Err (the
+                // pre-pool behavior) rather than unwinding through the
+                // engine — the pool itself propagates worker panics like
+                // inline execution, so the catch lives at this call site
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| slot.step(params)))
+                    .unwrap_or_else(|_| Err(Error::Serve("decode worker thread panicked".into())))
             })
         } else {
             self.active.iter_mut().map(|slot| slot.step(params)).collect()
@@ -344,6 +350,33 @@ mod tests {
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].tokens.len(), 14);
         assert!(done[0].tokens.iter().all(|&t| (t as usize) < cfg().vocab));
+    }
+
+    #[test]
+    fn undersized_pool_decodes_all_slots_identically() {
+        // 4 active slots over a 2-worker pool: chunked fan-out must cover
+        // every slot and match the serial decode exactly
+        let p = params();
+        let run = |max_slots: usize, pool: Pool, parallel: bool| {
+            let mut s = Scheduler::with_pool(max_slots, pool);
+            for i in 0..4u32 {
+                s.enqueue(Request {
+                    prompt: vec![i, i + 1],
+                    max_new_tokens: 5,
+                    sampler: Sampler { temperature: 0.9, top_k: Some(6), seed: 11 },
+                });
+            }
+            s.admit(&p).unwrap();
+            let mut done = Vec::new();
+            while !s.is_idle() {
+                done.extend(s.decode_tick(&p, parallel).unwrap());
+            }
+            done.sort_by_key(|c| c.id);
+            done.iter().map(|c| c.tokens.clone()).collect::<Vec<_>>()
+        };
+        let serial = run(4, Pool::new(1), false);
+        assert_eq!(run(4, Pool::new(2), true), serial);
+        assert_eq!(run(4, Pool::new(8), true), serial);
     }
 
     #[test]

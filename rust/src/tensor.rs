@@ -19,15 +19,26 @@
 //!   **bit-identical** to [`Tensor::matmul_naive`] — expansion surgery's
 //!   exact-preservation guarantees (serve hot-swap byte-identical
 //!   continuations) do not depend on k-offset alignment.
-//! * [`Tensor::matmul_bt`] — `A · Bᵀ` as row-dot-products, no transpose
-//!   materialization (attention scores `Q Kᵀ`, and every `dC · Bᵀ`
-//!   gradient product in the backward pass).
-//! * [`Tensor::matmul_at`] — `Aᵀ · C` as rank-1 row updates, no transpose
-//!   materialization (the `Aᵀ · dC` weight-gradient products).
+//! * [`Tensor::matmul_bt`] — `A · Bᵀ` with no transpose materialization
+//!   (attention scores `Q Kᵀ`, and every `dC · Bᵀ` gradient product in
+//!   the backward pass), register-tiled: four `B` rows per pass give four
+//!   independent accumulator chains, breaking the FP-add latency chain a
+//!   single dot product is stuck with.
+//! * [`Tensor::matmul_at`] — `Aᵀ · C` with no transpose materialization
+//!   (the `Aᵀ · dC` weight-gradient products), blocked like `matmul`:
+//!   the summation (i) loop unrolled by four with zero-block skipping,
+//!   quartering traffic on the `[k,n]` output.
 //!
-//! [`Tensor::matmul_naive`] keeps the original straight-line ikj kernel as
-//! the equivalence oracle for the blocked one (`benches/train_step.rs`
-//! reports the speedup).
+//! Every tuned kernel keeps its pre-optimization body as an equivalence
+//! oracle — [`Tensor::matmul_naive`], [`Tensor::matmul_bt_naive`],
+//! [`Tensor::matmul_at_naive`] — asserted exactly equal (`==`, zero
+//! tolerance) on finite inputs: each output element's additions stay in
+//! the oracle's order, so every rounding step matches. The zero-skip
+//! kernels (`matmul`, `matmul_at`) can still flip the *sign of a zero*
+//! (`-0.0 + 0.0` is `+0.0`, and a skipped term adds nothing), which
+//! `==` treats as equal; `matmul_bt` has no skip path and is bitwise
+//! identical. See DESIGN.md §10.4/§11; `benches/train_step.rs` reports
+//! the speedups.
 
 use crate::error::{Error, Result};
 use crate::rng::Pcg32;
@@ -280,8 +291,72 @@ impl Tensor {
 
     /// `self^T x other`: `[m,k]^T x [m,n] -> [k,n]` without materializing
     /// the transpose — the `Aᵀ · dC` weight-gradient product shape in the
-    /// autodiff backward pass, streamed as rank-1 row updates.
+    /// autodiff backward pass. Blocked like [`Tensor::matmul`]: the i-loop
+    /// (the summation axis here) is unrolled in blocks of four, so one
+    /// pass over the `[k,n]` output consumes four `A` rows and four `dC`
+    /// rows — quartering the load/store traffic on the output, which is
+    /// the large operand in every weight-gradient product. All-zero
+    /// 4-blocks of `a[i..i+4][kk]` are skipped (expansion surgery zeros).
+    /// Per output element the four `acc +=` are separate rounded adds in
+    /// ascending-i order, so on finite inputs the result equals
+    /// [`Tensor::matmul_at_naive`] exactly under `==` (same caveat as
+    /// `matmul`: a mixed block still adds exact `0.0 * b` terms the
+    /// naive kernel skips — that extra add can flip a `-0.0`
+    /// accumulator to `+0.0`, and produces NaN for non-finite `b`).
     pub fn matmul_at(&self, other: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || other.rank() != 2 || self.shape[0] != other.shape[0] {
+            return Err(Error::Shape(format!("matmul_at: {:?}^T x {:?}", self.shape, other.shape)));
+        }
+        let (m, k, n) = (self.shape[0], self.shape[1], other.shape[1]);
+        let mb = m / 4 * 4;
+        let mut out = Tensor::zeros(&[k, n]);
+        let mut i = 0;
+        while i < mb {
+            let a0row = &self.data[i * k..(i + 1) * k];
+            let a1row = &self.data[(i + 1) * k..(i + 2) * k];
+            let a2row = &self.data[(i + 2) * k..(i + 3) * k];
+            let a3row = &self.data[(i + 3) * k..(i + 4) * k];
+            let b0 = &other.data[i * n..(i + 1) * n];
+            let b1 = &other.data[(i + 1) * n..(i + 2) * n];
+            let b2 = &other.data[(i + 2) * n..(i + 3) * n];
+            let b3 = &other.data[(i + 3) * n..(i + 4) * n];
+            for kk in 0..k {
+                let (a0, a1, a2, a3) = (a0row[kk], a1row[kk], a2row[kk], a3row[kk]);
+                if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    let mut acc = orow[j];
+                    acc += a0 * b0[j];
+                    acc += a1 * b1[j];
+                    acc += a2 * b2[j];
+                    acc += a3 * b3[j];
+                    orow[j] = acc;
+                }
+            }
+            i += 4;
+        }
+        for i in mb..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let brow = &other.data[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Reference straight-line rank-1-update kernel (the pre-blocking
+    /// [`Tensor::matmul_at`] body), kept as its equivalence oracle and
+    /// bench baseline.
+    pub fn matmul_at_naive(&self, other: &Tensor) -> Result<Tensor> {
         if self.rank() != 2 || other.rank() != 2 || self.shape[0] != other.shape[0] {
             return Err(Error::Shape(format!("matmul_at: {:?}^T x {:?}", self.shape, other.shape)));
         }
@@ -304,8 +379,62 @@ impl Tensor {
     }
 
     /// `self x other^T`: `[m,k] x [n,k] -> [m,n]` without materializing the
-    /// transpose (attention scores `Q K^T`).
+    /// transpose — attention scores `Q Kᵀ` on the forward and every
+    /// `dC · Bᵀ` gradient product on the backward. Register-tiled: four
+    /// `B` rows are dotted against one `A` row per pass, giving four
+    /// independent accumulator chains (the single-accumulator dot product
+    /// is FP-add *latency* bound — f32 addition cannot be reassociated, so
+    /// the compiler cannot break the chain itself) and one `arow` load
+    /// shared across the four. Each output element keeps its own
+    /// accumulator in strict ascending-k order, so the tile is
+    /// bit-identical to [`Tensor::matmul_bt_naive`] — tiling regroups
+    /// *which* dot products run together, never the additions inside one.
     pub fn matmul_bt(&self, other: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || other.rank() != 2 || self.shape[1] != other.shape[1] {
+            return Err(Error::Shape(format!("matmul_bt: {:?} x {:?}^T", self.shape, other.shape)));
+        }
+        let (m, k, n) = (self.shape[0], self.shape[1], other.shape[0]);
+        let nb = n / 4 * 4;
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            let mut j = 0;
+            while j < nb {
+                let b0 = &other.data[j * k..(j + 1) * k];
+                let b1 = &other.data[(j + 1) * k..(j + 2) * k];
+                let b2 = &other.data[(j + 2) * k..(j + 3) * k];
+                let b3 = &other.data[(j + 3) * k..(j + 4) * k];
+                let (mut c0, mut c1, mut c2, mut c3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for kk in 0..k {
+                    let a = arow[kk];
+                    c0 += a * b0[kk];
+                    c1 += a * b1[kk];
+                    c2 += a * b2[kk];
+                    c3 += a * b3[kk];
+                }
+                orow[j] = c0;
+                orow[j + 1] = c1;
+                orow[j + 2] = c2;
+                orow[j + 3] = c3;
+                j += 4;
+            }
+            for j in nb..n {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
+                }
+                orow[j] = acc;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Reference row-dot-product kernel (the pre-tiling
+    /// [`Tensor::matmul_bt`] body), kept as its equivalence oracle and
+    /// bench baseline.
+    pub fn matmul_bt_naive(&self, other: &Tensor) -> Result<Tensor> {
         if self.rank() != 2 || other.rank() != 2 || self.shape[1] != other.shape[1] {
             return Err(Error::Shape(format!("matmul_bt: {:?} x {:?}^T", self.shape, other.shape)));
         }
@@ -549,10 +678,41 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matmul_at_is_bitexact_with_naive_kernel() {
+        // shapes cover the 4-wide i-unroll body, the i-tail (m % 4 != 0),
+        // and degenerate single-row/col cases
+        let mut rng = Pcg32::seeded(43);
+        for (m, k, n) in [(1, 1, 1), (3, 4, 5), (4, 3, 6), (8, 5, 7), (13, 16, 9), (16, 32, 8)] {
+            let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+            let b = Tensor::randn(&[m, n], &mut rng, 1.0);
+            let blocked = a.matmul_at(&b).unwrap();
+            let naive = a.matmul_at_naive(&b).unwrap();
+            assert_eq!(blocked, naive, "({m},{k},{n}): blocked matmul_at diverged from naive");
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_at_handles_zero_blocks_and_scattered_zeros() {
+        // a full i-block of zeros in one column takes the skip path; a
+        // scattered zero inside a mixed block takes the add-exact-zero
+        // path; both must agree with the naive per-element skip
+        let mut rng = Pcg32::seeded(44);
+        let mut a = Tensor::randn(&[9, 6], &mut rng, 1.0);
+        for i in 0..4 {
+            a.set(i, 2, 0.0); // rows 0..4 zero in column 2: one skipped block
+        }
+        a.set(5, 3, 0.0); // scattered zero inside a mixed block
+        a.set(8, 0, 0.0); // zero in the i-tail
+        let b = Tensor::randn(&[9, 5], &mut rng, 1.0);
+        assert_eq!(a.matmul_at(&b).unwrap(), a.matmul_at_naive(&b).unwrap());
+    }
+
+    #[test]
     fn matmul_at_shape_errors() {
         let a = t2(2, 3, &[0.0; 6]);
         assert!(a.matmul_at(&t2(3, 2, &[0.0; 6])).is_err());
         assert!(a.matmul_at(&Tensor::ones(&[2])).is_err());
+        assert!(a.matmul_at_naive(&t2(3, 2, &[0.0; 6])).is_err());
     }
 
     #[test]
@@ -563,6 +723,29 @@ mod tests {
         let direct = a.matmul_bt(&b).unwrap();
         let via_t = a.matmul(&b.transpose().unwrap()).unwrap();
         assert!(direct.max_abs_diff(&via_t).unwrap() < 1e-6);
+    }
+
+    #[test]
+    fn tiled_matmul_bt_is_bitexact_with_naive_kernel() {
+        // per output element the tiled kernel runs the same ascending-k
+        // accumulator as the naive row-dot, so equality is exact. Shapes
+        // cover the 4-wide j-tile, the j-tail (n % 4 != 0), k == 1, and
+        // single-row/col degenerates.
+        let mut rng = Pcg32::seeded(45);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 4), (4, 6, 7), (2, 1, 9), (7, 13, 16), (8, 32, 6)] {
+            let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+            let b = Tensor::randn(&[n, k], &mut rng, 1.0);
+            let tiled = a.matmul_bt(&b).unwrap();
+            let naive = a.matmul_bt_naive(&b).unwrap();
+            assert_eq!(tiled, naive, "({m},{k},{n}): tiled matmul_bt diverged from naive");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_shape_errors() {
+        let a = t2(2, 3, &[0.0; 6]);
+        assert!(a.matmul_bt(&t2(3, 2, &[0.0; 6])).is_err());
+        assert!(a.matmul_bt_naive(&t2(3, 2, &[0.0; 6])).is_err());
     }
 
     #[test]

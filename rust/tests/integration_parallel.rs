@@ -1,0 +1,121 @@
+//! Integration: data-parallel native training, end to end.
+//!
+//! The unit suite proves `loss_and_grads` is bit-identical across thread
+//! counts for a single step; these tests push the same claim through the
+//! whole training stack — batcher, gradient clip, Adam — over multiple
+//! steps, where any nondeterminism would compound, and pin the
+//! micro-batch accumulation contract at the `train_stage` level.
+
+mod common;
+
+use texpand::autodiff::{ExecBackend, NativeBackend};
+use texpand::config::TrainConfig;
+use texpand::data::{Batcher, CorpusKind};
+use texpand::metrics::RunLogger;
+use texpand::optim::Optimizer;
+use texpand::params::ParamStore;
+use texpand::rng::Pcg32;
+use texpand::train::{train_stage, TrainState};
+
+/// Train `steps` steps of the tiny schedule's stage0 on a fresh backend
+/// and return the resulting parameters. `tag` keeps each caller's temp
+/// run directory unique — tests run concurrently in one process, and two
+/// tests asking for the same (threads, micro_batch) must not race on
+/// create/remove of a shared directory.
+fn train_final_params(
+    tag: &str,
+    threads: usize,
+    micro_batch: Option<usize>,
+    steps: usize,
+) -> ParamStore {
+    let manifest = common::tiny_manifest();
+    let mut backend = NativeBackend::with_threads(threads);
+    backend.set_micro_batch(micro_batch);
+    assert_eq!(backend.threads(), threads.max(1));
+    let stage = backend.load_stage(&manifest, "stage0").unwrap();
+    let cfg = stage.meta.config;
+    let tcfg = TrainConfig { seed: 5, log_every: 1000, ..Default::default() };
+    let mut params = ParamStore::init(&cfg, &mut Pcg32::seeded(tcfg.seed), 0.05);
+    let mut opt = Optimizer::new(&tcfg, &params);
+    let mut batcher = Batcher::from_corpus(
+        CorpusKind::MarkovText,
+        20_000,
+        cfg.vocab,
+        cfg.seq,
+        manifest.batch,
+        7,
+    )
+    .unwrap();
+    let dir = std::env::temp_dir().join(format!(
+        "texpand-par-{}-{}-{}-{}",
+        std::process::id(),
+        tag,
+        threads,
+        micro_batch.unwrap_or(0)
+    ));
+    let mut logger =
+        RunLogger::create(dir.to_str().unwrap(), "par").unwrap().quiet();
+    let mut state = TrainState::new();
+    train_stage(
+        &backend,
+        &stage,
+        &mut params,
+        &mut opt,
+        &mut batcher,
+        &tcfg,
+        &mut logger,
+        &mut state,
+        steps,
+    )
+    .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    params
+}
+
+#[test]
+fn multi_step_training_is_bit_identical_across_thread_counts() {
+    // 6 full optimizer steps: if any step's grads depended on scheduling,
+    // the divergence would compound through Adam's moments — demand exact
+    // equality of every final parameter instead
+    let serial = train_final_params("multistep", 1, None, 6);
+    for threads in [2usize, 4] {
+        let parallel = train_final_params("multistep", threads, None, 6);
+        assert_eq!(
+            serial.max_abs_diff(&parallel).unwrap(),
+            0.0,
+            "trajectory diverged at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn micro_batched_training_tracks_full_batch_training() {
+    // accumulation reassociates chunk sums (~1e-7 per step); through a few
+    // Adam steps the trajectories must stay within loose tolerance
+    let full = train_final_params("micro", 2, None, 3);
+    let micro = train_final_params("micro", 2, Some(1), 3);
+    let diff = full.max_abs_diff(&micro).unwrap();
+    assert!(diff <= 1e-3, "micro-batched trajectory drifted {diff}");
+    // and micro-batching must itself be thread-count deterministic
+    let micro_serial = train_final_params("micro", 1, Some(1), 3);
+    assert_eq!(micro.max_abs_diff(&micro_serial).unwrap(), 0.0);
+}
+
+#[test]
+fn backend_step_agrees_with_itself_under_env_pool() {
+    // NativeBackend::new() (env-sized pool) and an explicit 1-thread
+    // backend must produce the same step — the TEXPAND_THREADS setting can
+    // never change results, only wall-clock
+    let manifest = common::tiny_manifest();
+    let mut be_env = NativeBackend::new();
+    let mut be_one = NativeBackend::with_threads(1);
+    let stage = be_env.load_stage(&manifest, "stage0").unwrap();
+    let stage1 = be_one.load_stage(&manifest, "stage0").unwrap();
+    let cfg = stage.meta.config;
+    let params = ParamStore::init(&cfg, &mut Pcg32::seeded(11), 0.05);
+    let batch = common::random_batch(&cfg, manifest.batch, 13);
+    let (loss_env, grads_env) = be_env.step(&stage, &params, &batch).unwrap();
+    let (loss_one, grads_one) = be_one.step(&stage1, &params, &batch).unwrap();
+    assert_eq!(loss_env.to_bits(), loss_one.to_bits());
+    assert_eq!(grads_env, grads_one);
+}
