@@ -20,6 +20,11 @@
 //! Set `TEXPAND_E3_BACKEND=pjrt` to run against AOT artifacts instead
 //! (needs `make artifacts`).
 //!
+//! On the native backend the bench also appends a `policy_compare` series
+//! to `runs/bench.jsonl`: fixed vs plateau vs greedy growth policies on
+//! the same schedule at the same step budget (matched compute), reporting
+//! final eval loss, compute proxy, and how many expansions each committed.
+//!
 //! Env: TEXPAND_E3_BACKEND  native|pjrt    (default native)
 //!      TEXPAND_E3_SCHEDULE schedule path  (default configs/growth_default.json)
 //!      TEXPAND_E3_SCALE    step scale     (default 1.0)
@@ -27,7 +32,7 @@
 
 use texpand::autodiff::{ExecBackend, NativeBackend};
 use texpand::bench_util::Reporter;
-use texpand::config::{GrowthSchedule, TrainConfig};
+use texpand::config::{GrowthSchedule, PolicyKind, TrainConfig};
 use texpand::coordinator::{Coordinator, CoordinatorOptions};
 use texpand::data::{Batcher, CorpusKind};
 use texpand::json::Value;
@@ -44,6 +49,19 @@ fn make_backend(kind: &str) -> Box<dyn ExecBackend> {
         "pjrt" => Box::new(Runtime::cpu().expect("PJRT runtime")),
         other => panic!("TEXPAND_E3_BACKEND must be native|pjrt, got '{other}'"),
     }
+}
+
+/// Hardware-independent compute proxy over a run's segments: Σ steps ×
+/// params × tokens (segments record their own param counts, so this is
+/// correct for adaptive policies whose architectures differ from the
+/// schedule's stage table).
+fn run_compute(summary: &texpand::coordinator::RunSummary, schedule: &GrowthSchedule) -> f64 {
+    let seq = schedule.stages[0].config.seq; // seq never grows
+    summary
+        .stages
+        .iter()
+        .map(|rep| rep.steps_run as f64 * rep.params as f64 * (schedule.batch * seq) as f64)
+        .sum()
 }
 
 fn main() {
@@ -88,14 +106,7 @@ fn main() {
     let summary = coord.run("runs", "e3-progressive").unwrap();
     let prog_wall = timer.secs();
     let total_steps: usize = summary.stages.iter().map(|s| s.steps_run).sum();
-    let prog_compute: f64 = summary
-        .stages
-        .iter()
-        .zip(&schedule.stages)
-        .map(|(rep, spec)| {
-            rep.steps_run as f64 * spec.config.num_params() as f64 * (schedule.batch * spec.config.seq) as f64
-        })
-        .sum();
+    let prog_compute = run_compute(&summary, &schedule);
 
     // ---- scratch (final architecture, same steps, same data) ---------------
     let timer = Timer::start();
@@ -170,6 +181,60 @@ fn main() {
             .fold(0.0, f64::max),
         vec![backend_field()],
     );
+
+    // ---- policy compare: fixed vs plateau vs greedy at matched compute ------
+    // Same schedule, same step budget, same data stream; only the growth
+    // *decisions* differ. Native only: adaptive policies synthesize
+    // architectures the AOT manifest never compiled.
+    if backend_kind == "native" {
+        println!("\n{:<14} {:>8} {:>12} {:>12} {:>14} {:>6}", "policy", "steps", "eval loss", "wall (s)", "compute", "grows");
+        let mut policy_row = |name: &str, s: &texpand::coordinator::RunSummary, wall: f64| {
+            let compute = run_compute(s, &schedule);
+            println!(
+                "{:<14} {:>8} {:>12.4} {:>12.1} {:>14.3e} {:>6}",
+                name,
+                s.total_steps,
+                s.final_eval_loss,
+                wall,
+                compute,
+                s.boundaries.len()
+            );
+            rep.value_row(&format!("policy_compare {name}"), "loss", f64::from(s.final_eval_loss), vec![
+                ("series", Value::str("policy_compare")),
+                ("policy", Value::str(name)),
+                ("backend", Value::str("native")),
+                ("steps", Value::num(s.total_steps as f64)),
+                ("compute", Value::num(compute)),
+                ("expansions", Value::num(s.boundaries.len() as f64)),
+                ("wall_s", Value::num(wall)),
+            ]);
+        };
+        policy_row("fixed", &summary, prog_wall);
+        for kind in [PolicyKind::Plateau, PolicyKind::Greedy] {
+            let mut pcfg = schedule.policy.clone();
+            pcfg.kind = kind;
+            let mut coord = Coordinator::new(
+                schedule.clone(),
+                manifest.clone(),
+                make_backend("native"),
+                tcfg.clone(),
+                CoordinatorOptions {
+                    steps_scale: scale,
+                    save_checkpoints: false,
+                    corpus,
+                    corpus_len,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let mut policy =
+                texpand::growth::build_policy(&schedule, scale, &pcfg, tcfg.seed);
+            let timer = Timer::start();
+            let run_name = format!("e3-policy-{}", kind.name());
+            let s = coord.run_with_policy("runs", &run_name, policy.as_mut()).unwrap();
+            policy_row(kind.name(), &s, timer.secs());
+        }
+    }
     rep.flush();
     println!(
         "\nshape check: progressive used {:.0}% of scratch compute (wall {:.0}%), with",

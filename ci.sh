@@ -50,6 +50,25 @@ if [ "$FAST" = "0" ]; then
     --runs "$SMOKE_RUNS" --run-name ci-smoke --no-checkpoints \
     --log-every 100
 
+  echo "==> policy-driven grow-train smoke (plateau policy, native backend)"
+  ./target/release/texpand train \
+    --backend native \
+    --threads 2 \
+    --schedule configs/growth_tiny.json \
+    --policy plateau \
+    --runs "$SMOKE_RUNS" --run-name ci-policy-smoke --no-checkpoints \
+    --log-every 100
+  # every policy run must leave an auditable decision trail (evidence rows
+  # in the run log); a silent policy is a broken policy
+  if ! grep -q '"event":"decision"' "$SMOKE_RUNS/ci-policy-smoke/events.jsonl"; then
+    echo "ci.sh: no decision rows in $SMOKE_RUNS/ci-policy-smoke/events.jsonl" >&2
+    exit 1
+  fi
+  if ! grep -q '"decision":"expand"' "$SMOKE_RUNS/ci-policy-smoke/events.jsonl"; then
+    echo "ci.sh: plateau smoke never fired an expansion decision" >&2
+    exit 1
+  fi
+
   echo "==> train-step bench smoke (TEXPAND_THREADS=2, tiny budget)"
   # also asserts serial-vs-parallel grads are bit-identical (in-bench check)
   TEXPAND_THREADS=2 TEXPAND_BENCH_BUDGET_MS=60 cargo bench --bench train_step

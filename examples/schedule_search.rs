@@ -1,53 +1,70 @@
 //! §5 use case (c): NAS-lite greedy search over expansion schedules.
 //!
 //! "Neural architecture search techniques could be applied to determine
-//! optimal transformation scheduling" — this example implements the greedy
-//! seed of that idea. Starting from a briefly-trained base model, it
-//! evaluates every candidate *next expansion* (the architecture stages the
-//! AOT manifest provides) by branching the checkpoint — function-preserving,
-//! so every candidate starts from identical quality — finetuning each for a
-//! fixed probe budget, and ranking candidates by loss improvement per unit
-//! of marginal compute. The best candidate is the schedule step a greedy
-//! NAS would commit to before repeating.
+//! optimal transformation scheduling" — the greedy seed of that idea now
+//! lives in the library as the [`GreedyBranch`] growth policy
+//! (`texpand train --backend native --policy greedy`); this example drives
+//! that machinery directly so the ranking is visible:
 //!
-//! Requires artifacts: `make artifacts`.
+//! 1. briefly train the schedule's base architecture;
+//! 2. call [`greedy::rank_candidates`] — the policy's core: branch the
+//!    checkpoint across every candidate op (+ a keep-training control),
+//!    probe-train each for a fixed budget on an identical data stream, and
+//!    score by loss improvement per unit of marginal compute. Function
+//!    preservation means every branch starts from identical quality, so
+//!    the comparison is sound;
+//! 3. print the table and the op a greedy schedule search would commit.
+//!
+//! Runs **fully offline on the native backend by default** (no artifacts).
+//! Set `TEXPAND_SEARCH_BACKEND=pjrt` to train the base through the AOT
+//! artifact path instead (needs `make artifacts`); candidate probing
+//! always runs the native autodiff path — that is what makes the search
+//! cheap enough to run inside training.
+//!
 //! Run: `cargo run --release --example schedule_search [base_steps] [probe_steps]`
 
+use texpand::autodiff::{ExecBackend, NativeBackend};
 use texpand::config::{GrowthSchedule, TrainConfig};
-use texpand::coordinator::{Coordinator, CoordinatorOptions};
 use texpand::data::Batcher;
+use texpand::growth::greedy;
 use texpand::metrics::RunLogger;
 use texpand::optim::Optimizer;
 use texpand::params::ParamStore;
 use texpand::rng::Pcg32;
 use texpand::runtime::{Manifest, Runtime};
-use texpand::train::{eval_loss, train_stage, TrainState};
+use texpand::train::{train_stage, TrainState};
 
 fn main() -> texpand::Result<()> {
     let base_steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(120);
     let probe_steps: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(120);
+    let backend_kind =
+        std::env::var("TEXPAND_SEARCH_BACKEND").unwrap_or_else(|_| "native".to_string());
 
+    assert!(
+        backend_kind == "native" || backend_kind == "pjrt",
+        "TEXPAND_SEARCH_BACKEND must be native|pjrt, got '{backend_kind}'"
+    );
     let schedule = GrowthSchedule::load("configs/growth_default.json")?;
-    let manifest = Manifest::load("artifacts", "manifest.json")?;
+    let manifest = match backend_kind.as_str() {
+        "native" => Manifest::from_schedule(&schedule),
+        _ => Manifest::load("artifacts", "manifest.json")?,
+    };
+    let mut backend: Box<dyn ExecBackend> = if backend_kind == "native" {
+        Box::new(NativeBackend::new())
+    } else {
+        Box::new(Runtime::cpu()?)
+    };
     let tcfg = TrainConfig { log_every: 1000, ..Default::default() };
-    let mut coord = Coordinator::new(
-        schedule.clone(),
-        manifest.clone(),
-        Box::new(Runtime::cpu()?),
-        tcfg.clone(),
-        CoordinatorOptions::default(),
-    )?;
 
     // 1. briefly train the base architecture
-    let mut rt = Runtime::cpu()?;
-    let exec0 = rt.load_stage(&manifest, "stage0")?;
+    let exec0 = backend.load_stage(&manifest, "stage0")?;
     let cfg0 = exec0.meta.config;
     let mut rng = Pcg32::seeded(tcfg.seed);
     let mut base = ParamStore::init(&cfg0, &mut rng, 0.02);
     let mut opt = Optimizer::new(&tcfg, &base);
     let mut batcher = Batcher::from_corpus(
-        coord.opts.corpus,
-        coord.opts.corpus_len,
+        texpand::data::CorpusKind::MarkovText,
+        200_000,
         cfg0.vocab,
         cfg0.seq,
         schedule.batch,
@@ -55,55 +72,62 @@ fn main() -> texpand::Result<()> {
     )?;
     let mut logger = RunLogger::create("runs", "search-base")?.quiet();
     let mut state = TrainState::new();
-    train_stage(&rt, &exec0, &mut base, &mut opt, &mut batcher, &tcfg, &mut logger, &mut state, base_steps)?;
-    let probe = batcher.probe(tcfg.seed ^ 0xE7A1);
-    let base_eval = eval_loss(&rt, &exec0, &base, &probe)?;
-    println!("base ({} params) eval loss after {base_steps} steps: {base_eval:.4}", base.num_scalars());
+    train_stage(
+        backend.as_ref(),
+        &exec0,
+        &mut base,
+        &mut opt,
+        &mut batcher,
+        &tcfg,
+        &mut logger,
+        &mut state,
+        base_steps,
+    )?;
 
-    // 2. candidate next-expansions = every larger manifest stage; greedy
-    //    scoring = Δloss per probe budget, penalized by marginal step cost.
+    // 2. the GreedyBranch policy's core: branch + probe + score
+    let ranked = greedy::rank_candidates(&base, &opt, &batcher, &tcfg, probe_steps, tcfg.seed)?;
+    let base_eval = ranked[0].eval_at_branch;
     println!(
-        "\n{:<10} {:>12} {:>10} {:>10} {:>12} {:>14}",
-        "candidate", "params", "eval", "Δloss", "probe tok/s", "Δloss/Gflop~"
+        "base ({} params, {backend_kind} backend) eval loss after {base_steps} steps: {base_eval:.4}",
+        base.num_scalars()
     );
-    let mut best: Option<(String, f64)> = None;
-    // candidate 0 is the control: keep training the base without expanding
-    for i in 0..schedule.stages.len() {
-        let stage = schedule.stages[i].clone();
-        let ops: Vec<_> = if i == 0 { vec![] } else { schedule.stages[1..=i].iter().flat_map(|s| s.apply.clone()).collect() };
-        let (branched, report, eval) = coord.branch(
-            &base,
-            &ops,
-            &stage.name,
-            probe_steps,
-            "runs",
-            &format!("search-{}", stage.name),
-            &probe,
-        )?;
-        let dloss = f64::from(base_eval - eval);
-        // compute proxy for the probe: steps * params * tokens (relative)
-        let compute = probe_steps as f64 * branched.num_scalars() as f64
-            * (schedule.batch * stage.config.seq) as f64
-            / 1e12;
-        let score = dloss / compute;
+
+    println!(
+        "\n{:<24} {:>12} {:>10} {:>10} {:>10} {:>14}",
+        "candidate", "params", "branch", "eval", "Δloss", "Δloss/Tflop~"
+    );
+    let mut best: Option<&greedy::CandidateScore> = None;
+    for c in &ranked {
+        let label = match &c.op {
+            None => "control (no expand)".to_string(),
+            Some(op) => format!("{op:?}"),
+        };
         println!(
-            "{:<10} {:>12} {:>10.4} {:>10.4} {:>12.0} {:>14.3}",
-            stage.name,
-            branched.num_scalars(),
-            eval,
-            dloss,
-            report.tokens_per_sec,
-            score
+            "{:<24} {:>12} {:>10.4} {:>10.4} {:>10.4} {:>14.3}",
+            label, c.params, c.eval_at_branch, c.eval_after, c.dloss, c.score
         );
-        if best.as_ref().map(|(_, s)| score > *s).unwrap_or(true) {
-            best = Some((stage.name.clone(), score));
+        if c.score.is_finite() && best.map(|b| c.score > b.score).unwrap_or(true) {
+            best = Some(c);
         }
     }
-    let (winner, score) = best.expect("at least one candidate");
+
+    // 3. the greedy commitment
+    let winner = best.expect("at least the control candidate scores");
+    match &winner.op {
+        Some(op) => println!(
+            "\ngreedy schedule search: expand with {op:?} next (Δloss per compute = {:.3}).",
+            winner.score
+        ),
+        None => println!(
+            "\ngreedy schedule search: keep training — no expansion pays for its compute yet \
+             (control Δloss per compute = {:.3}).",
+            winner.score
+        ),
+    }
     println!(
-        "\ngreedy schedule search: expand to `{winner}` next (Δloss per compute = {score:.3}).\n\
-         Every candidate started from the *same* function (preservation ⇒ fair comparison) —\n\
-         the property that makes cheap greedy architecture search sound for growth schedules."
+        "Every candidate branched from the *same* function (branch column ≈ base eval — \n\
+         preservation ⇒ fair comparison). The same machinery runs inside training via\n\
+         `texpand train --backend native --policy greedy`."
     );
     Ok(())
 }

@@ -51,6 +51,16 @@ pub trait ExecBackend {
         false
     }
 
+    /// `true` when `load_stage` resolves AOT artifact files out of the
+    /// manifest (the PJRT runtime). The coordinator only cross-validates
+    /// the manifest against the schedule — and only pins segments to the
+    /// manifest's compiled stage table — for such backends; the native
+    /// backend synthesizes stage metadata for whatever architecture a
+    /// growth policy produces.
+    fn needs_artifacts(&self) -> bool {
+        true
+    }
+
     /// Resolve a manifest stage into an executable handle.
     fn load_stage(&mut self, manifest: &Manifest, stage_name: &str) -> Result<StageExec>;
 
@@ -171,6 +181,10 @@ impl ExecBackend for NativeBackend {
 
     fn is_reference_model(&self) -> bool {
         true
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        false
     }
 
     fn load_stage(&mut self, manifest: &Manifest, stage_name: &str) -> Result<StageExec> {

@@ -74,6 +74,21 @@ impl Args {
         self.get(name).ok_or_else(|| Error::Cli(format!("missing required flag --{name}")))
     }
 
+    /// Enumerated flag: the value must be one of `choices` (error lists
+    /// them), `None` when absent. Used for `--backend`, `--policy`,
+    /// `--optimizer` so a typo'd mode reports the valid set instead of
+    /// surfacing as a downstream failure.
+    pub fn get_choice(&self, name: &str, choices: &[&str]) -> Result<Option<String>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) if choices.contains(&v.as_str()) => Ok(Some(v)),
+            Some(v) => Err(Error::Cli(format!(
+                "--{name} expects one of {}, got '{v}'",
+                choices.join("|")
+            ))),
+        }
+    }
+
     /// Typed numeric flags.
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
         self.get(name)
@@ -171,6 +186,17 @@ mod tests {
         assert!(a.get_f32("bad").is_err());
         assert_eq!(a.get_u64("missing").unwrap(), None);
         assert_eq!(a.get_f32("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn get_choice_validates_against_set() {
+        let a = args("train --policy plateau --backend tpu-v9");
+        assert_eq!(a.get_choice("policy", &["fixed", "plateau", "greedy"]).unwrap().as_deref(), Some("plateau"));
+        let err = a.get_choice("backend", &["native", "pjrt"]).unwrap_err().to_string();
+        assert!(err.contains("native|pjrt") && err.contains("tpu-v9"), "{err}");
+        assert_eq!(a.get_choice("missing", &["x"]).unwrap(), None);
+        // choice lookups count as consumption for reject_unknown
+        a.reject_unknown().unwrap();
     }
 
     #[test]

@@ -246,6 +246,130 @@ impl GrowthOp {
 }
 
 // ---------------------------------------------------------------------------
+// Growth policy configuration
+// ---------------------------------------------------------------------------
+
+/// Which growth policy drives the run (see [`crate::growth`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Replay the schedule's stage table verbatim (the default; exactly the
+    /// pre-policy coordinator behaviour).
+    Fixed,
+    /// Fire the next staged expansion when the eval loss plateaus.
+    Plateau,
+    /// Branch-probe candidate expansions and commit the best loss-per-FLOP.
+    Greedy,
+}
+
+impl PolicyKind {
+    pub fn parse(name: &str) -> Result<PolicyKind> {
+        match name {
+            "fixed" => Ok(PolicyKind::Fixed),
+            "plateau" => Ok(PolicyKind::Plateau),
+            "greedy" => Ok(PolicyKind::Greedy),
+            other => Err(Error::Cli(format!("unknown policy '{other}' (fixed|plateau|greedy)"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Fixed => "fixed",
+            PolicyKind::Plateau => "plateau",
+            PolicyKind::Greedy => "greedy",
+        }
+    }
+}
+
+/// Knobs for the adaptive growth policies, parsed from the schedule JSON's
+/// optional `policy` block. All fields have defaults, so `{"policy": {}}`
+/// and an absent block are equivalent; the CLI `--policy` flag overrides
+/// only `kind`.
+#[derive(Clone, Debug)]
+pub struct PolicyConfig {
+    pub kind: PolicyKind,
+    /// Steps between eval-loss probes feeding the plateau detector.
+    pub eval_every: usize,
+    /// Number of consecutive evals the plateau slope is measured over.
+    pub window: usize,
+    /// Minimum mean per-eval loss improvement; below it the loss counts as
+    /// plateaued.
+    pub min_slope: f32,
+    /// Steps after entering an architecture during which no expansion may
+    /// fire (lets the optimizer re-equilibrate before judging progress).
+    pub cooldown: usize,
+    /// Fire the pending expansion no later than `deadline_scale` × the
+    /// current stage's scheduled steps even without a detected plateau
+    /// (`0` disables the deadline).
+    pub deadline_scale: f64,
+    /// Probe-training steps per candidate branch (greedy policy).
+    pub probe_budget: usize,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            kind: PolicyKind::Fixed,
+            eval_every: 5,
+            window: 4,
+            min_slope: 0.01,
+            cooldown: 10,
+            deadline_scale: 2.0,
+            probe_budget: 8,
+        }
+    }
+}
+
+impl PolicyConfig {
+    /// Parse from the schedule JSON's `policy` value (`None` = defaults).
+    pub fn from_json(v: Option<&Value>) -> Result<PolicyConfig> {
+        let mut cfg = PolicyConfig::default();
+        let Some(v) = v else { return Ok(cfg) };
+        if let Some(kind) = v.get("kind") {
+            cfg.kind = PolicyKind::parse(kind.as_str()?)?;
+        }
+        if let Some(n) = v.get("eval_every") {
+            cfg.eval_every = n.as_usize()?;
+        }
+        if let Some(n) = v.get("window") {
+            cfg.window = n.as_usize()?;
+        }
+        if let Some(n) = v.get("min_slope") {
+            cfg.min_slope = n.as_f64()? as f32;
+        }
+        if let Some(n) = v.get("cooldown") {
+            cfg.cooldown = n.as_usize()?;
+        }
+        if let Some(n) = v.get("deadline_scale") {
+            cfg.deadline_scale = n.as_f64()?;
+        }
+        if let Some(n) = v.get("probe_budget") {
+            cfg.probe_budget = n.as_usize()?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.eval_every == 0 {
+            return Err(Error::Config("policy.eval_every must be >= 1".into()));
+        }
+        if self.window < 2 {
+            return Err(Error::Config("policy.window must be >= 2 (slope needs two points)".into()));
+        }
+        if !self.min_slope.is_finite() || self.min_slope < 0.0 {
+            return Err(Error::Config("policy.min_slope must be finite and >= 0".into()));
+        }
+        if !self.deadline_scale.is_finite() || self.deadline_scale < 0.0 {
+            return Err(Error::Config("policy.deadline_scale must be finite and >= 0".into()));
+        }
+        if self.probe_budget == 0 {
+            return Err(Error::Config("policy.probe_budget must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Growth schedule
 // ---------------------------------------------------------------------------
 
@@ -269,6 +393,8 @@ pub struct GrowthSchedule {
     /// effective batch can exceed memory. `None` = whole batch at once.
     /// CLI `--micro-batch` overrides.
     pub micro_batch: Option<usize>,
+    /// Growth-policy selection + knobs (`policy` block; defaults = fixed).
+    pub policy: PolicyConfig,
     pub stages: Vec<Stage>,
 }
 
@@ -320,6 +446,7 @@ impl GrowthSchedule {
             name: v.get("name").map(|n| n.as_str().map(String::from)).transpose()?.unwrap_or_else(|| "unnamed".into()),
             batch: v.get("batch").map(|b| b.as_usize()).transpose()?.unwrap_or(8),
             micro_batch,
+            policy: PolicyConfig::from_json(v.get("policy"))?,
             stages,
         })
     }
@@ -572,6 +699,48 @@ mod tests {
         let mut sorted = counts.clone();
         sorted.sort_unstable();
         assert_eq!(counts, sorted, "stages must grow monotonically");
+    }
+
+    #[test]
+    fn policy_block_defaults_and_parses() {
+        // absent -> fixed defaults
+        let s = GrowthSchedule::from_json(&Value::parse(&sched_json()).unwrap()).unwrap();
+        assert_eq!(s.policy.kind, PolicyKind::Fixed);
+        assert_eq!(s.policy.window, 4);
+        // present -> overrides merge with defaults
+        let text = sched_json().replace(
+            r#""batch": 4,"#,
+            r#""batch": 4, "policy": {"kind": "plateau", "window": 3, "min_slope": 0.05},"#,
+        );
+        let s = GrowthSchedule::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(s.policy.kind, PolicyKind::Plateau);
+        assert_eq!(s.policy.window, 3);
+        assert!((s.policy.min_slope - 0.05).abs() < 1e-6);
+        assert_eq!(s.policy.eval_every, 5); // untouched default
+    }
+
+    #[test]
+    fn policy_block_rejects_bad_knobs() {
+        for bad in [
+            r#"{"kind": "shrinky"}"#,
+            r#"{"window": 1}"#,
+            r#"{"eval_every": 0}"#,
+            r#"{"probe_budget": 0}"#,
+            r#"{"min_slope": -0.5}"#,
+            r#"{"deadline_scale": -1}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(PolicyConfig::from_json(Some(&v)).is_err(), "{bad}");
+        }
+        assert_eq!(PolicyConfig::from_json(None).unwrap().kind, PolicyKind::Fixed);
+    }
+
+    #[test]
+    fn policy_kind_parse_roundtrip() {
+        for kind in [PolicyKind::Fixed, PolicyKind::Plateau, PolicyKind::Greedy] {
+            assert_eq!(PolicyKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(PolicyKind::parse("bandit").is_err());
     }
 
     #[test]

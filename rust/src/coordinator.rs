@@ -1,41 +1,58 @@
 //! Growth coordinator (S10b) — the framework's top-level orchestration.
 //!
-//! Walks a [`GrowthSchedule`] end to end:
+//! A run is a **policy-driven loop** over architecture segments:
 //!
 //! ```text
 //! init params (stage0 config)
-//!   └─ train stage0 ──▶ boundary: surgery(params, moments) + probes
-//!        └─ train stage1 ──▶ ... ──▶ train stageN, checkpoints per stage
+//!   └─ train segment ──▶ policy: Continue | Expand(ops) | Stop
+//!        │                          │            │
+//!        │◀─── keep stepping ───────┘            │
+//!        └─ boundary: surgery(params, moments) + probes ─▶ next segment
 //! ```
+//!
+//! The stage list is no longer fixed up front: a [`GrowthPolicy`] decides
+//! at every step whether to keep training, expand (and with which ops), or
+//! stop. [`Coordinator::run`] drives the default [`FixedSchedule`] policy,
+//! which replays the schedule's stage table bit-identically to the old
+//! stage-wise loop; [`Coordinator::run_with_policy`] takes any policy
+//! (plateau-triggered staged growth, greedy branch-probe search, ...).
 //!
 //! At every boundary the coordinator *proves* (empirically) the paper's
 //! claim before continuing:
 //! 1. **Rust-oracle probe** — pure-Rust forward before vs after surgery on
 //!    a held-out probe batch; `max|Δ logits|` must be ≤ `preserve_tol`.
-//! 2. **Backend probe** — previous stage's `fwd` executable on old params
-//!    vs next stage's `fwd` on expanded params, through whichever
+//! 2. **Backend probe** — previous segment's `fwd` executable on old
+//!    params vs next segment's `fwd` on expanded params, through whichever
 //!    [`ExecBackend`] is driving the run; same tolerance. On the PJRT path
 //!    this is the check that would catch AOT/manifest drift, not just
 //!    surgery bugs. A reference-model backend (native) would reproduce
 //!    probe 1 bit for bit, so its result is reused instead of recomputed.
+//!
+//! Artifact resolution follows the backend: a backend that
+//! [`ExecBackend::needs_artifacts`] loads stage executables from the AOT
+//! manifest (so its stage table must match the schedule, and only the
+//! fixed policy can drive it); the native backend synthesizes stage
+//! metadata for whatever architecture the policy grew, so adaptive
+//! policies run fully offline.
 //!
 //! The coordinator is also the entry point for the §5 future-work use
 //! cases: [`Coordinator::branch`] (model families) reuses the boundary
 //! machinery without the schedule.
 
 use crate::autodiff::ExecBackend;
-use crate::config::{GrowthSchedule, TrainConfig};
+use crate::config::{GrowthOp, GrowthSchedule, ModelConfig, TrainConfig};
 use crate::data::{Batch, Batcher, CorpusKind};
 use crate::error::{Error, Result};
 use crate::expand::ExpandOptions;
+use crate::growth::{FixedSchedule, GrowthPolicy};
 use crate::json::Value;
 use crate::metrics::RunLogger;
 use crate::model as refmodel;
 use crate::optim::Optimizer;
 use crate::params::ParamStore;
 use crate::rng::Pcg32;
-use crate::runtime::{Manifest, StageExec};
-use crate::train::{eval_loss, train_stage, StageReport, TrainState};
+use crate::runtime::{Manifest, ManifestStage, StageExec};
+use crate::train::{eval_loss, train_segment, SegmentEnd, StageReport, TrainState};
 
 /// Coordinator behaviour knobs (CLI-mapped).
 #[derive(Clone, Debug)]
@@ -44,7 +61,7 @@ pub struct CoordinatorOptions {
     pub steps_scale: f64,
     /// Run the two preservation probes at each boundary (default on).
     pub verify_boundaries: bool,
-    /// Save a checkpoint at the end of every stage.
+    /// Save a checkpoint at the end of every segment.
     pub save_checkpoints: bool,
     /// Synthetic corpus selection.
     pub corpus: CorpusKind,
@@ -90,6 +107,8 @@ pub struct BoundaryReport {
 #[derive(Clone, Debug)]
 pub struct RunSummary {
     pub run_dir: String,
+    /// Which policy drove the run.
+    pub policy: String,
     pub stages: Vec<StageReport>,
     pub boundaries: Vec<BoundaryReport>,
     pub final_eval_loss: f32,
@@ -109,8 +128,11 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Build a coordinator, cross-validating the manifest against the
-    /// schedule (they are written by the two halves of the build).
+    /// Build a coordinator. When the backend resolves stage executables
+    /// from AOT artifacts, the manifest is cross-validated against the
+    /// schedule (they are written by the two halves of the build); a
+    /// reference-model backend synthesizes its stage metadata, so for it
+    /// the manifest is advisory and mismatches are not errors.
     pub fn new(
         schedule: GrowthSchedule,
         manifest: Manifest,
@@ -118,6 +140,15 @@ impl Coordinator {
         tcfg: TrainConfig,
         opts: CoordinatorOptions,
     ) -> Result<Coordinator> {
+        if backend.needs_artifacts() {
+            Self::validate_manifest(&schedule, &manifest)?;
+        }
+        Ok(Coordinator { schedule, manifest, backend, tcfg, opts })
+    }
+
+    /// The manifest/schedule drift check (only meaningful when stage
+    /// executables actually come from the manifest's artifact files).
+    fn validate_manifest(schedule: &GrowthSchedule, manifest: &Manifest) -> Result<()> {
         if manifest.stages.len() != schedule.stages.len() {
             return Err(Error::Manifest(format!(
                 "manifest has {} stages, schedule '{}' has {} — rerun `make artifacts`",
@@ -140,15 +171,57 @@ impl Coordinator {
                 manifest.batch, schedule.batch
             )));
         }
-        Ok(Coordinator { schedule, manifest, backend, tcfg, opts })
+        Ok(())
     }
 
-    fn scaled_steps(&self, steps: usize) -> usize {
-        ((steps as f64 * self.opts.steps_scale).round() as usize).max(1)
+    /// Resolve the executable for a (possibly policy-grown) architecture.
+    /// Artifact backends look the segment up in the manifest — and fail
+    /// loudly if the policy's architecture drifted from what was compiled;
+    /// the native backend gets synthesized stage metadata for exactly the
+    /// architecture the run has grown into.
+    fn load_exec(&mut self, name: &str, cfg: &ModelConfig) -> Result<StageExec> {
+        if self.backend.needs_artifacts() {
+            let exec = self.backend.load_stage(&self.manifest, name)?;
+            if &exec.meta.config != cfg {
+                return Err(Error::Manifest(format!(
+                    "segment '{name}' grew to {:?} but the artifact manifest compiled {:?} — \
+                     adaptive policies need --backend native",
+                    cfg, exec.meta.config
+                )));
+            }
+            return Ok(exec);
+        }
+        let manifest = Manifest {
+            schedule: self.schedule.name.clone(),
+            batch: self.schedule.batch,
+            kernels: "native".to_string(),
+            stages: vec![ManifestStage {
+                name: name.to_string(),
+                steps: 0,
+                config: *cfg,
+                num_params: cfg.num_params(),
+                fwd_file: String::new(),
+                step_file: String::new(),
+            }],
+            dir: String::new(),
+        };
+        self.backend.load_stage(&manifest, name)
     }
 
-    /// Execute the full growth schedule; returns the run summary.
+    /// Execute the growth schedule under the default [`FixedSchedule`]
+    /// policy — exactly the pre-policy coordinator behaviour.
     pub fn run(&mut self, run_root: &str, run_name: &str) -> Result<RunSummary> {
+        let mut policy = FixedSchedule::new(&self.schedule, self.opts.steps_scale);
+        self.run_with_policy(run_root, run_name, &mut policy)
+    }
+
+    /// Execute a policy-driven growth run; returns the run summary.
+    pub fn run_with_policy(
+        &mut self,
+        run_root: &str,
+        run_name: &str,
+        policy: &mut dyn GrowthPolicy,
+    ) -> Result<RunSummary> {
         let mut logger = RunLogger::create(run_root, run_name)?;
         let first_cfg = self.schedule.stages[0].config;
         let mut rng = Pcg32::seeded(self.tcfg.seed);
@@ -166,34 +239,28 @@ impl Coordinator {
             "run_start",
             vec![
                 ("schedule", Value::str(self.schedule.name.clone())),
+                ("policy", Value::str(policy.name())),
                 ("corpus", Value::str(self.opts.corpus.name())),
                 ("optimizer", Value::str(opt.name())),
                 ("platform", Value::str(self.backend.platform())),
                 ("stages", Value::num(self.schedule.stages.len() as f64)),
             ],
         );
+        // one fixed held-out probe batch serves boundary preservation
+        // checks, policy eval observations, and the final eval (stable
+        // across calls by construction, so this matches the old per-use
+        // regeneration bit for bit)
+        let probe = batcher.probe(self.tcfg.seed ^ 0xE7A1);
 
         let mut state = TrainState::new();
         let mut stage_reports = Vec::new();
         let mut boundary_reports = Vec::new();
-        let mut prev_exec: Option<StageExec> = None;
+        let mut segment = 0usize;
 
-        for (i, stage_spec) in self.schedule.stages.clone().iter().enumerate() {
-            if i > 0 && !stage_spec.apply.is_empty() {
-                let report = self.boundary(
-                    &mut params,
-                    &mut opt,
-                    &batcher,
-                    prev_exec.as_ref().expect("stage > 0 has prev"),
-                    stage_spec,
-                    &mut rng,
-                    &mut logger,
-                )?;
-                boundary_reports.push(report);
-            }
-            let exec = self.backend.load_stage(&self.manifest, &stage_spec.name)?;
-            let steps = self.scaled_steps(stage_spec.steps);
-            let report = train_stage(
+        let final_exec = loop {
+            let seg_name = format!("stage{segment}");
+            let exec = self.load_exec(&seg_name, params.config())?;
+            let (report, end) = train_segment(
                 self.backend.as_ref(),
                 &exec,
                 &mut params,
@@ -202,36 +269,57 @@ impl Coordinator {
                 &self.tcfg,
                 &mut logger,
                 &mut state,
-                steps,
+                policy,
+                Some(&probe),
             )?;
             stage_reports.push(report);
             if self.opts.save_checkpoints {
-                let path = format!("{}/{}.txpd", logger.dir(), stage_spec.name);
+                let path = format!("{}/{seg_name}.txpd", logger.dir());
                 params.save(
                     &path,
                     &Value::obj(vec![
-                        ("stage", Value::str(stage_spec.name.clone())),
+                        ("stage", Value::str(seg_name.clone())),
                         ("global_step", Value::num(state.global_step as f64)),
                         ("tokens_seen", Value::num(state.tokens_seen as f64)),
                     ]),
                 )?;
             }
-            prev_exec = Some(exec);
-        }
+            match end {
+                SegmentEnd::Stop => break exec,
+                SegmentEnd::Expand(ops) => {
+                    if !ops.is_empty() {
+                        let report = self.boundary(
+                            &mut params,
+                            &mut opt,
+                            &probe,
+                            &exec,
+                            &ops,
+                            &format!("stage{}", segment + 1),
+                            &mut rng,
+                            &mut logger,
+                        )?;
+                        boundary_reports.push(report);
+                    }
+                    segment += 1;
+                }
+            }
+        };
 
-        let final_exec = prev_exec.expect("at least one stage");
-        let probe = batcher.probe(self.tcfg.seed ^ 0xE7A1);
         let final_eval_loss = eval_loss(self.backend.as_ref(), &final_exec, &params, &probe)?;
         logger.event(
             "run_done",
             vec![
+                ("policy", Value::str(policy.name())),
                 ("final_eval_loss", Value::num(f64::from(final_eval_loss))),
                 ("total_steps", Value::num(state.global_step as f64)),
                 ("tokens_seen", Value::num(state.tokens_seen as f64)),
+                ("est_flops", Value::num(state.est_flops)),
+                ("expansions", Value::num(boundary_reports.len() as f64)),
             ],
         );
         Ok(RunSummary {
             run_dir: logger.dir().to_string(),
+            policy: policy.name().to_string(),
             stages: stage_reports,
             boundaries: boundary_reports,
             final_eval_loss,
@@ -245,13 +333,13 @@ impl Coordinator {
         &mut self,
         params: &mut ParamStore,
         opt: &mut Optimizer,
-        batcher: &Batcher,
+        probe: &Batch,
         prev_exec: &StageExec,
-        stage_spec: &crate::config::Stage,
+        ops: &[GrowthOp],
+        into_name: &str,
         rng: &mut Pcg32,
         logger: &mut RunLogger,
     ) -> Result<BoundaryReport> {
-        let probe = batcher.probe(self.tcfg.seed ^ 0xE7A1);
         let timer = crate::metrics::Timer::start();
 
         // before-surgery references. A reference-model backend (native)
@@ -267,7 +355,7 @@ impl Coordinator {
         let loss_before = if reference_backend {
             refmodel::cross_entropy(&rust_before, &probe.targets)?
         } else {
-            eval_loss(self.backend.as_ref(), prev_exec, params, &probe)?
+            eval_loss(self.backend.as_ref(), prev_exec, params, probe)?
         };
 
         // the surgery itself (owned path: the pre-surgery store is dead)
@@ -277,13 +365,14 @@ impl Coordinator {
             layers: 1, hidden: 1, heads: 1, k: 1, v: 1, mlp: 1, seq: 1, vocab: 1,
         };
         let old = std::mem::replace(params, ParamStore::zeros(&dummy));
-        *params = crate::expand::apply_ops_owned(old, &stage_spec.apply, rng, &expand_opts)?;
-        opt.expand(&stage_spec.apply)?;
+        *params = crate::expand::apply_ops_owned(old, ops, rng, &expand_opts)?;
+        opt.expand(ops)?;
         opt.validate_against(params)?;
         let surgery_ms = timer.ms();
 
         // after-surgery probes
-        let next_exec = self.backend.load_stage(&self.manifest, &stage_spec.name)?;
+        let grown_cfg = *params.config();
+        let next_exec = self.load_exec(into_name, &grown_cfg)?;
         let rust_after = refmodel::forward(params.config(), params, &probe.tokens)?;
         let backend_after = if reference_backend {
             None
@@ -293,7 +382,7 @@ impl Coordinator {
         let loss_after = if reference_backend {
             refmodel::cross_entropy(&rust_after, &probe.targets)?
         } else {
-            eval_loss(self.backend.as_ref(), &next_exec, params, &probe)?
+            eval_loss(self.backend.as_ref(), &next_exec, params, probe)?
         };
 
         let rust_delta = refmodel::max_logit_delta(&rust_before, &rust_after)?;
@@ -305,8 +394,8 @@ impl Coordinator {
         logger.event(
             "boundary",
             vec![
-                ("into_stage", Value::str(stage_spec.name.clone())),
-                ("ops", Value::num(stage_spec.apply.len() as f64)),
+                ("into_stage", Value::str(into_name)),
+                ("ops", Value::num(ops.len() as f64)),
                 ("rust_delta", Value::num(f64::from(rust_delta))),
                 ("pjrt_delta", Value::num(f64::from(pjrt_delta))),
                 ("loss_before", Value::num(f64::from(loss_before))),
@@ -318,20 +407,18 @@ impl Coordinator {
         if self.opts.verify_boundaries {
             if rust_delta > self.tcfg.preserve_tol {
                 return Err(Error::Train(format!(
-                    "boundary into '{}' violated preservation (rust oracle): max|Δ| = {rust_delta}",
-                    stage_spec.name
+                    "boundary into '{into_name}' violated preservation (rust oracle): max|Δ| = {rust_delta}"
                 )));
             }
             if pjrt_delta > self.tcfg.preserve_tol {
                 return Err(Error::Train(format!(
-                    "boundary into '{}' violated preservation (backend path): max|Δ| = {pjrt_delta}",
-                    stage_spec.name
+                    "boundary into '{into_name}' violated preservation (backend path): max|Δ| = {pjrt_delta}"
                 )));
             }
         }
         Ok(BoundaryReport {
-            into_stage: stage_spec.name.clone(),
-            ops: stage_spec.apply.len(),
+            into_stage: into_name.to_string(),
+            ops: ops.len(),
             rust_delta,
             pjrt_delta,
             loss_before,
@@ -378,7 +465,7 @@ impl Coordinator {
             self.tcfg.seed ^ 0xC0DE, // same corpus as the main run
         )?;
         let mut state = TrainState::new();
-        let report = train_stage(
+        let report = crate::train::train_stage(
             self.backend.as_ref(),
             &exec,
             &mut params,

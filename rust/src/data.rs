@@ -170,6 +170,10 @@ impl Batch {
 
 /// Samples random `(seq+1)`-windows from a token stream; the window's first
 /// `seq` tokens are inputs and the 1-shifted window is the target.
+/// `Clone` duplicates the stream *and* the draw RNG: a clone yields the
+/// exact batch sequence the original would — how greedy policy probes
+/// train candidate branches on the very data the live run consumes next.
+#[derive(Clone)]
 pub struct Batcher {
     stream: Vec<u32>,
     seq: usize,

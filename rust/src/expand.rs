@@ -604,6 +604,27 @@ fn wrap_expand(e: Error) -> Error {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Candidate enumeration (growth-policy search)
+// ---------------------------------------------------------------------------
+
+/// Candidate *next* expansions for growth-policy search: one modest,
+/// strictly-growing proposal per op family, derived from the current
+/// dimensions (widths grow geometrically, counts by one — the paper's §5
+/// NAS direction needs a finite action set, not the full op lattice).
+/// Every returned op is valid: `op.apply_to_config(cfg)` succeeds.
+pub fn candidate_ops(cfg: &ModelConfig) -> Vec<GrowthOp> {
+    vec![
+        GrowthOp::Mlp { p: cfg.mlp * 2 },
+        GrowthOp::HeadsAdd { count: 1 },
+        GrowthOp::HeadsExpand { v: cfg.v * 2 },
+        GrowthOp::AttnExpand { k: cfg.k * 2 },
+        // gentler than doubling: hidden width multiplies almost every tensor
+        GrowthOp::Hidden { h: (cfg.hidden + cfg.hidden / 2).max(cfg.hidden + 1) },
+        GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top },
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1010,5 +1031,51 @@ mod net2net_tests {
     fn split_rejects_shrink() {
         let (_, params, _, _) = setup();
         assert!(split_mlp_neurons(&params, 16, &mut Pcg32::seeded(0), 0.0).is_err());
+    }
+}
+
+#[cfg(test)]
+mod candidate_tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::{forward, max_logit_delta};
+
+    #[test]
+    fn candidates_all_apply_and_strictly_grow() {
+        for cfg in [
+            ModelConfig { layers: 1, hidden: 8, heads: 1, k: 4, v: 4, mlp: 16, seq: 8, vocab: 16 },
+            ModelConfig { layers: 2, hidden: 1, heads: 2, k: 1, v: 1, mlp: 1, seq: 8, vocab: 16 },
+        ] {
+            let cands = candidate_ops(&cfg);
+            assert_eq!(cands.len(), 6, "one candidate per op family");
+            for op in cands {
+                let grown = op.apply_to_config(&cfg).unwrap_or_else(|e| panic!("{op:?}: {e}"));
+                assert!(grown.num_params() > cfg.num_params(), "{op:?} did not grow");
+            }
+        }
+    }
+
+    #[test]
+    fn candidates_are_function_preserving_branch_points() {
+        // the property greedy search relies on: every candidate branch
+        // starts from the same function as the base checkpoint
+        let cfg = ModelConfig { layers: 1, hidden: 8, heads: 2, k: 4, v: 4, mlp: 16, seq: 8, vocab: 16 };
+        let mut rng = Pcg32::seeded(77);
+        let params = ParamStore::init(&cfg, &mut rng, 0.1);
+        let toks: Vec<Vec<u32>> =
+            (0..2).map(|_| (0..cfg.seq).map(|_| rng.below(cfg.vocab) as u32).collect()).collect();
+        let base = forward(&cfg, &params, &toks).unwrap();
+        for op in candidate_ops(&cfg) {
+            let branched = apply_ops(
+                &params,
+                std::slice::from_ref(&op),
+                &mut Pcg32::seeded(5),
+                &Default::default(),
+            )
+            .unwrap();
+            let after = forward(branched.config(), &branched, &toks).unwrap();
+            let d = max_logit_delta(&base, &after).unwrap();
+            assert!(d <= 1e-4, "{op:?}: max|Δ| = {d}");
+        }
     }
 }

@@ -1,0 +1,131 @@
+//! The fixed-schedule policy: replay the stage table verbatim.
+//!
+//! This is the pre-refactor coordinator expressed as a policy, and the
+//! refactor's equivalence oracle: a run driven by `FixedSchedule` must be
+//! bit-identical — same batch stream, same surgery RNG draws, same
+//! optimizer trajectory — to the old stage-wise loop
+//! (`integration_policy.rs` asserts this against a hand-rolled replay).
+
+use std::collections::VecDeque;
+
+use crate::config::{GrowthOp, GrowthSchedule};
+
+use super::{scaled_steps, scaled_total, Decision, GrowthPolicy, PolicyCtx, TrainObs};
+
+/// Replays a [`GrowthSchedule`]'s stage table: expansion `i` fires exactly
+/// when the cumulative scaled step count of stages `0..i` completes, and
+/// the run stops after the final stage's budget.
+pub struct FixedSchedule {
+    /// `(fire_at_global_step, ops)` per stage boundary, in order. No-op
+    /// stages (empty `apply`) are kept: they split segments exactly like
+    /// the old per-stage loop did.
+    boundaries: VecDeque<(usize, Vec<GrowthOp>)>,
+    total_steps: usize,
+}
+
+impl FixedSchedule {
+    pub fn new(schedule: &GrowthSchedule, steps_scale: f64) -> FixedSchedule {
+        let mut boundaries = VecDeque::new();
+        let mut cum = 0usize;
+        for (i, stage) in schedule.stages.iter().enumerate() {
+            if i > 0 {
+                boundaries.push_back((cum, stage.apply.clone()));
+            }
+            cum += scaled_steps(stage.steps, steps_scale);
+        }
+        FixedSchedule { boundaries, total_steps: scaled_total(schedule, steps_scale) }
+    }
+}
+
+impl GrowthPolicy for FixedSchedule {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn decide(&mut self, obs: &TrainObs, _ctx: &PolicyCtx<'_>) -> Decision {
+        if let Some((fire_at, _)) = self.boundaries.front() {
+            if obs.global_step >= *fire_at {
+                let (_, ops) = self.boundaries.pop_front().expect("front checked");
+                return Decision::Expand(ops);
+            }
+        }
+        if obs.global_step >= self.total_steps {
+            Decision::Stop
+        } else {
+            Decision::Continue
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::growth::testutil::drive;
+    use crate::json::Value;
+
+    fn sched(json: &str) -> GrowthSchedule {
+        GrowthSchedule::from_json(&Value::parse(json).unwrap()).unwrap()
+    }
+
+    fn three_stage() -> GrowthSchedule {
+        sched(
+            r#"{
+                "name": "f", "batch": 2, "seq": 8, "vocab": 16,
+                "base": {"layers":1,"hidden":8,"heads":1,"k":4,"v":4,"mlp":16},
+                "stages": [
+                    {"steps": 3},
+                    {"steps": 2, "apply": [{"op":"mlp","p":32}]},
+                    {"steps": 2, "apply": [{"op":"heads_add","count":1}]}
+                ]
+            }"#,
+        )
+    }
+
+    #[test]
+    fn fires_boundaries_at_cumulative_steps_then_stops() {
+        let mut p = FixedSchedule::new(&three_stage(), 1.0);
+        assert!(p.eval_every().is_none(), "fixed policy needs no eval probes");
+        let obs: Vec<(f32, Option<f32>)> = (0..7).map(|_| (1.0, None)).collect();
+        let got = drive(&mut p, &obs);
+        assert_eq!(got.len(), 7);
+        assert_eq!(got[0], Decision::Continue);
+        assert_eq!(got[1], Decision::Continue);
+        assert!(matches!(&got[2], Decision::Expand(ops) if ops.len() == 1), "{:?}", got[2]);
+        assert_eq!(got[3], Decision::Continue);
+        assert!(matches!(&got[4], Decision::Expand(ops) if ops.len() == 1), "{:?}", got[4]);
+        assert_eq!(got[5], Decision::Continue);
+        assert_eq!(got[6], Decision::Stop);
+    }
+
+    #[test]
+    fn steps_scale_rescales_boundaries() {
+        // scale 2.0: stages of 6/4/4 steps -> boundaries after 6 and 10,
+        // stop after 14
+        let mut p = FixedSchedule::new(&three_stage(), 2.0);
+        let obs: Vec<(f32, Option<f32>)> = (0..14).map(|_| (1.0, None)).collect();
+        let got = drive(&mut p, &obs);
+        let expand_at: Vec<usize> = got
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| matches!(d, Decision::Expand(_)))
+            .map(|(i, _)| i + 1)
+            .collect();
+        assert_eq!(expand_at, vec![6, 10]);
+        assert_eq!(*got.last().unwrap(), Decision::Stop);
+    }
+
+    #[test]
+    fn no_op_stage_splits_segment_with_empty_ops() {
+        let s = sched(
+            r#"{
+                "name": "noop", "batch": 2, "seq": 8, "vocab": 16,
+                "base": {"layers":1,"hidden":8,"heads":1,"k":4,"v":4,"mlp":16},
+                "stages": [{"steps": 1}, {"steps": 1}]
+            }"#,
+        );
+        let mut p = FixedSchedule::new(&s, 1.0);
+        let got = drive(&mut p, &[(1.0, None), (1.0, None)]);
+        assert_eq!(got[0], Decision::Expand(vec![]));
+        assert_eq!(got[1], Decision::Stop);
+    }
+}

@@ -1,0 +1,255 @@
+//! Growth policies (S17) — the when/what-to-expand decision seam.
+//!
+//! The paper's §5 future work ("neural architecture search techniques could
+//! be applied to determine optimal transformation scheduling") needs the
+//! *decision* separated from the *mechanism*. The mechanism — function-
+//! preserving parameter surgery — lives in [`crate::expand`]; this module
+//! owns the decision: a [`GrowthPolicy`] consumes the per-step
+//! [`TrainObs`] stream produced by [`crate::train::train_segment`] and
+//! answers with a [`Decision`]. The coordinator is a policy-driven loop:
+//!
+//! ```text
+//! train step ─▶ TrainObs ─▶ policy.decide ─▶ Continue | Expand(ops) | Stop
+//!                                             │           │
+//!                                             ▼           ▼
+//!                                        keep stepping  boundary surgery
+//!                                                       (probes + moments)
+//! ```
+//!
+//! Three policies ship:
+//! * [`FixedSchedule`] — replays the schedule's stage table verbatim. It is
+//!   the **equivalence oracle** for the refactor: a fixed-policy run is
+//!   bit-identical (loss trajectory and final parameters) to the
+//!   pre-policy stage-wise coordinator, so every pre-existing test keeps
+//!   its meaning.
+//! * [`LossPlateau`] — keeps the schedule's *what* (the staged op lists)
+//!   but decides *when*: a windowed eval-loss slope detector fires the next
+//!   staged expansion early when progress stalls, or late (deadline) when
+//!   it doesn't.
+//! * [`GreedyBranch`] — decides what *and* when: branches the live
+//!   checkpoint across [`crate::expand::candidate_ops`] (function
+//!   preservation ⇒ every branch starts from identical quality),
+//!   probe-trains each for a fixed budget on the native autodiff path, and
+//!   commits the best loss-per-compute candidate.
+//!
+//! Policies are deliberately *observers with veto power*: they never touch
+//! parameters. All surgery stays in the coordinator's boundary path, so
+//! preservation probes and optimizer-moment surgery run identically no
+//! matter which policy asked for the expansion.
+
+pub mod fixed;
+pub mod greedy;
+pub mod plateau;
+
+pub use fixed::FixedSchedule;
+pub use greedy::GreedyBranch;
+pub use plateau::{LossPlateau, PlateauDetector};
+
+use crate::config::{GrowthOp, GrowthSchedule, PolicyConfig, PolicyKind, TrainConfig};
+use crate::data::Batcher;
+use crate::optim::Optimizer;
+use crate::params::ParamStore;
+
+/// One completed training step, as observed by a policy. Produced by
+/// [`crate::train::train_segment`] after the optimizer update.
+#[derive(Clone, Debug)]
+pub struct TrainObs {
+    /// Completed optimizer steps across the whole run.
+    pub global_step: usize,
+    /// Completed steps since entering the current architecture segment.
+    pub arch_step: usize,
+    /// This step's training loss.
+    pub train_loss: f32,
+    /// Held-out probe loss, populated every [`GrowthPolicy::eval_every`]
+    /// steps (`None` on non-eval steps and for policies that never ask).
+    pub eval_loss: Option<f32>,
+    /// Tokens consumed so far across the run.
+    pub tokens_seen: usize,
+    /// Cumulative estimated training FLOPs (6·params·tokens per step — the
+    /// 6ND-style accounting the paper's §1 cost argument uses).
+    pub est_flops: f64,
+    /// Current scalar parameter count.
+    pub params: usize,
+}
+
+/// A policy's verdict after one observed step.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Decision {
+    /// Keep training the current architecture.
+    Continue,
+    /// End the segment and apply these expansion ops at a boundary. An
+    /// empty op list splits the segment (fresh report/checkpoint) without
+    /// surgery — how the fixed policy reproduces no-op schedule stages.
+    Expand(Vec<GrowthOp>),
+    /// End the run.
+    Stop,
+}
+
+impl Decision {
+    /// Short tag for logs (`metrics::RunLogger::decision`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Decision::Continue => "continue",
+            Decision::Expand(_) => "expand",
+            Decision::Stop => "stop",
+        }
+    }
+}
+
+/// Read-only view of the live run state, passed alongside each
+/// observation. Most policies ignore it; [`GreedyBranch`] uses it to
+/// branch-and-probe candidates (clone params/optimizer/batcher, never
+/// mutate the run).
+pub struct PolicyCtx<'a> {
+    pub params: &'a ParamStore,
+    pub opt: &'a Optimizer,
+    /// The live data stream; also the source of batch geometry
+    /// (`batcher.batch()` / `batcher.seq()`).
+    pub batcher: &'a Batcher,
+    pub tcfg: &'a TrainConfig,
+}
+
+/// The growth-decision seam (see module docs).
+pub trait GrowthPolicy {
+    /// Policy name for logs and run metadata.
+    fn name(&self) -> &'static str;
+
+    /// Steps between eval-loss probes the trainer should feed into
+    /// [`TrainObs::eval_loss`]. `None` = this policy needs no eval
+    /// evidence (the trainer skips the extra forward entirely).
+    fn eval_every(&self) -> Option<usize> {
+        None
+    }
+
+    /// Whether the trainer should log this policy's decisions to the run
+    /// log. On by default; the internal step-budget shim that implements
+    /// plain `train_stage` turns it off so non-policy callers (branch
+    /// finetuning, benches, probe training) don't emit decision noise.
+    fn log_decisions(&self) -> bool {
+        true
+    }
+
+    /// Judge one completed step.
+    fn decide(&mut self, obs: &TrainObs, ctx: &PolicyCtx<'_>) -> Decision;
+}
+
+/// Per-stage scheduled steps under the coordinator's `steps_scale`
+/// (identical rounding to the pre-policy coordinator: per-stage, `max(1)`).
+pub(crate) fn scaled_steps(steps: usize, steps_scale: f64) -> usize {
+    ((steps as f64 * steps_scale).round() as usize).max(1)
+}
+
+/// Total scheduled steps under `steps_scale` — the compute-matched stop
+/// budget shared by all three shipped policies.
+pub(crate) fn scaled_total(schedule: &GrowthSchedule, steps_scale: f64) -> usize {
+    schedule.stages.iter().map(|s| scaled_steps(s.steps, steps_scale)).sum()
+}
+
+/// Construct the policy selected by `pcfg.kind` for a schedule. `seed`
+/// feeds the greedy policy's probe-branch initializers (normally
+/// `TrainConfig::seed`).
+pub fn build_policy(
+    schedule: &GrowthSchedule,
+    steps_scale: f64,
+    pcfg: &PolicyConfig,
+    seed: u64,
+) -> Box<dyn GrowthPolicy> {
+    match pcfg.kind {
+        PolicyKind::Fixed => Box::new(FixedSchedule::new(schedule, steps_scale)),
+        PolicyKind::Plateau => Box::new(LossPlateau::new(schedule, steps_scale, pcfg)),
+        PolicyKind::Greedy => Box::new(GreedyBranch::new(schedule, steps_scale, pcfg, seed)),
+    }
+}
+
+/// Test-only helper: drive a policy through a synthetic
+/// `(train_loss, eval_loss)` observation stream against an inert context,
+/// collecting every decision. Shared by the per-policy unit suites.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    pub(crate) fn drive(
+        policy: &mut dyn GrowthPolicy,
+        losses: &[(f32, Option<f32>)],
+    ) -> Vec<Decision> {
+        let cfg = ModelConfig { layers: 1, hidden: 8, heads: 1, k: 4, v: 4, mlp: 16, seq: 8, vocab: 16 };
+        let params = ParamStore::zeros(&cfg);
+        let tcfg = TrainConfig::default();
+        let opt = Optimizer::new(&tcfg, &params);
+        let batcher =
+            Batcher::from_corpus(crate::data::CorpusKind::MarkovText, 2000, cfg.vocab, cfg.seq, 2, 1)
+                .unwrap();
+        let ctx = PolicyCtx { params: &params, opt: &opt, batcher: &batcher, tcfg: &tcfg };
+        let mut out = Vec::new();
+        let mut arch_step = 0usize;
+        for (i, (train_loss, eval_loss)) in losses.iter().enumerate() {
+            arch_step += 1;
+            let obs = TrainObs {
+                global_step: i + 1,
+                arch_step,
+                train_loss: *train_loss,
+                eval_loss: *eval_loss,
+                tokens_seen: (i + 1) * 16,
+                est_flops: (i + 1) as f64,
+                params: params.num_scalars(),
+            };
+            let d = policy.decide(&obs, &ctx);
+            if matches!(d, Decision::Expand(_)) {
+                arch_step = 0;
+            }
+            out.push(d);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Value;
+
+    fn sched() -> GrowthSchedule {
+        GrowthSchedule::from_json(
+            &Value::parse(
+                r#"{
+                    "name": "p", "batch": 2, "seq": 8, "vocab": 16,
+                    "base": {"layers":1,"hidden":8,"heads":1,"k":4,"v":4,"mlp":16},
+                    "stages": [
+                        {"steps": 10},
+                        {"steps": 20, "apply": [{"op":"mlp","p":32}]}
+                    ]
+                }"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn scaling_matches_coordinator_rounding() {
+        assert_eq!(scaled_steps(10, 1.0), 10);
+        assert_eq!(scaled_steps(10, 0.25), 3); // round(2.5) = 3 (ties away)
+        assert_eq!(scaled_steps(10, 0.0), 1); // clamped to 1
+        assert_eq!(scaled_total(&sched(), 1.0), 30);
+        assert_eq!(scaled_total(&sched(), 0.0), 2);
+    }
+
+    #[test]
+    fn build_policy_honours_kind() {
+        let s = sched();
+        let mut pcfg = PolicyConfig::default();
+        for kind in [PolicyKind::Fixed, PolicyKind::Plateau, PolicyKind::Greedy] {
+            pcfg.kind = kind;
+            let p = build_policy(&s, 1.0, &pcfg, 0);
+            assert_eq!(p.name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn decision_tags() {
+        assert_eq!(Decision::Continue.tag(), "continue");
+        assert_eq!(Decision::Expand(vec![]).tag(), "expand");
+        assert_eq!(Decision::Stop.tag(), "stop");
+    }
+}

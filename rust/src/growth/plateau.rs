@@ -1,0 +1,375 @@
+//! The loss-plateau policy: staged ops, adaptive timing.
+//!
+//! The schedule still says *what* grows (its per-stage `apply` lists, in
+//! order); the policy decides *when*. A [`PlateauDetector`] watches the
+//! eval-loss stream: when the mean per-eval improvement over a sliding
+//! window drops below `min_slope`, the current capacity has stopped paying
+//! for its steps and the next staged expansion fires. Two guard rails keep
+//! it well-behaved:
+//!
+//! * **cooldown** — no expansion may fire within `cooldown` steps of
+//!   entering an architecture (post-surgery, new zero-init capacity needs
+//!   a few steps of gradient signal before progress is judged);
+//! * **deadline** — if no plateau is detected within `deadline_scale` ×
+//!   the stage's scheduled steps, the expansion fires anyway, so a noisy
+//!   eval stream degrades to "a bit later than scheduled", never "never".
+//!
+//! The run stops at the schedule's (scaled) total step budget, making
+//! plateau runs compute-comparable with fixed-schedule runs. Because
+//! per-segment deadlines compound (boundary *i* being late delays every
+//! later boundary), a **budget backstop** force-fires pending expansions
+//! once the remaining budget is only just enough to give each one a
+//! minimal segment — the stop budget can cut training short, but never
+//! silently drop staged growth.
+
+use std::collections::VecDeque;
+
+use crate::config::{GrowthOp, GrowthSchedule, PolicyConfig};
+
+use super::{scaled_steps, scaled_total, Decision, GrowthPolicy, PolicyCtx, TrainObs};
+
+/// Windowed eval-loss slope detector (pure state machine, unit-testable
+/// without a trainer). Feed it one eval loss at a time; it reports whether
+/// the stream has plateaued.
+#[derive(Clone, Debug)]
+pub struct PlateauDetector {
+    window: usize,
+    min_slope: f32,
+    evals: VecDeque<f32>,
+}
+
+impl PlateauDetector {
+    /// `window` >= 2 evals; `min_slope` is the minimum mean per-eval loss
+    /// improvement that still counts as progress.
+    pub fn new(window: usize, min_slope: f32) -> PlateauDetector {
+        PlateauDetector { window: window.max(2), min_slope, evals: VecDeque::new() }
+    }
+
+    /// Observe one eval loss. Returns `true` when the window is full and
+    /// the mean per-eval improvement across it fell below `min_slope`.
+    /// Non-finite evals (NaN/inf — e.g. a diverging probe) clear the
+    /// window: corrupt evidence must never trigger surgery.
+    pub fn observe(&mut self, eval_loss: f32) -> bool {
+        if !eval_loss.is_finite() {
+            self.evals.clear();
+            return false;
+        }
+        self.evals.push_back(eval_loss);
+        if self.evals.len() > self.window {
+            self.evals.pop_front();
+        }
+        if self.evals.len() < self.window {
+            return false; // window longer than the history so far: no verdict
+        }
+        let first = *self.evals.front().expect("window full");
+        let last = *self.evals.back().expect("window full");
+        let slope = (first - last) / (self.window - 1) as f32;
+        slope < self.min_slope
+    }
+
+    /// Forget all history (called across expansion boundaries — the old
+    /// architecture's losses say nothing about the new one's progress).
+    pub fn reset(&mut self) {
+        self.evals.clear();
+    }
+
+    /// Evals currently held (diagnostics/tests).
+    pub fn len(&self) -> usize {
+        self.evals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.evals.is_empty()
+    }
+}
+
+/// One pending staged expansion: the ops plus the arch-step deadline by
+/// which it fires even without a plateau verdict.
+struct PendingExpansion {
+    ops: Vec<GrowthOp>,
+    deadline: Option<usize>,
+}
+
+/// See module docs.
+pub struct LossPlateau {
+    detector: PlateauDetector,
+    pending: VecDeque<PendingExpansion>,
+    total_steps: usize,
+    cooldown: usize,
+    eval_every: usize,
+}
+
+impl LossPlateau {
+    pub fn new(schedule: &GrowthSchedule, steps_scale: f64, pcfg: &PolicyConfig) -> LossPlateau {
+        // boundary into stage i is judged while training stage i-1, so its
+        // deadline scales stage i-1's budget
+        let mut pending = VecDeque::new();
+        for i in 1..schedule.stages.len() {
+            let ops = schedule.stages[i].apply.clone();
+            if ops.is_empty() {
+                continue; // nothing to fire — plateau ignores no-op stages
+            }
+            let prev_budget = scaled_steps(schedule.stages[i - 1].steps, steps_scale);
+            let deadline = if pcfg.deadline_scale > 0.0 {
+                Some(((prev_budget as f64 * pcfg.deadline_scale).round() as usize).max(1))
+            } else {
+                None
+            };
+            pending.push_back(PendingExpansion { ops, deadline });
+        }
+        LossPlateau {
+            detector: PlateauDetector::new(pcfg.window, pcfg.min_slope),
+            pending,
+            total_steps: scaled_total(schedule, steps_scale),
+            cooldown: pcfg.cooldown,
+            eval_every: pcfg.eval_every,
+        }
+    }
+}
+
+impl GrowthPolicy for LossPlateau {
+    fn name(&self) -> &'static str {
+        "plateau"
+    }
+
+    fn eval_every(&self) -> Option<usize> {
+        Some(self.eval_every)
+    }
+
+    fn decide(&mut self, obs: &TrainObs, _ctx: &PolicyCtx<'_>) -> Decision {
+        if obs.global_step >= self.total_steps {
+            return Decision::Stop;
+        }
+        // keep the detector fed even while ineligible to fire, so the
+        // verdict is ready the moment the cooldown lifts
+        let plateaued = match obs.eval_loss {
+            Some(e) => self.detector.observe(e),
+            None => false,
+        };
+        if self.pending.is_empty() {
+            return Decision::Continue; // all staged growth spent: train out the budget
+        }
+        // budget backstop: per-segment deadlines bound *per-boundary*
+        // lateness, but lateness compounds — once the remaining budget is
+        // only just enough to give each pending expansion a minimal
+        // segment, fire now (overriding cooldown and deadline) so staged
+        // growth is never silently dropped at the stop budget
+        let reserve = self.cooldown.max(1);
+        let budget_pressure =
+            obs.global_step + self.pending.len() * reserve >= self.total_steps;
+        if !budget_pressure {
+            if obs.arch_step < self.cooldown {
+                return Decision::Continue; // cooldown suppression
+            }
+            let deadline_hit = self
+                .pending
+                .front()
+                .expect("checked non-empty")
+                .deadline
+                .is_some_and(|d| obs.arch_step >= d);
+            if !(plateaued || deadline_hit) {
+                return Decision::Continue;
+            }
+        }
+        let fired = self.pending.pop_front().expect("checked non-empty");
+        self.detector.reset();
+        Decision::Expand(fired.ops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::growth::testutil::drive;
+    use crate::json::Value;
+
+    fn sched() -> GrowthSchedule {
+        GrowthSchedule::from_json(
+            &Value::parse(
+                r#"{
+                    "name": "pl", "batch": 2, "seq": 8, "vocab": 16,
+                    "base": {"layers":1,"hidden":8,"heads":1,"k":4,"v":4,"mlp":16},
+                    "stages": [
+                        {"steps": 10},
+                        {"steps": 10, "apply": [{"op":"mlp","p":32}]},
+                        {"steps": 10, "apply": [{"op":"heads_add","count":1}]}
+                    ]
+                }"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    fn pcfg(window: usize, min_slope: f32, cooldown: usize, deadline_scale: f64) -> PolicyConfig {
+        PolicyConfig {
+            kind: crate::config::PolicyKind::Plateau,
+            eval_every: 1,
+            window,
+            min_slope,
+            cooldown,
+            deadline_scale,
+            ..Default::default()
+        }
+    }
+
+    // ---- detector ----------------------------------------------------------
+
+    #[test]
+    fn detector_slope_is_mean_improvement_over_window() {
+        let mut d = PlateauDetector::new(3, 0.05);
+        for e in [3.0, 2.9, 2.8] {
+            let fired = d.observe(e);
+            assert!(!fired, "slope 0.1/eval is progress");
+        }
+        // [2.9, 2.8, 2.79]: slope (2.9-2.79)/2 = 0.055 — still just progress
+        assert!(!d.observe(2.79));
+        // [2.8, 2.79, 2.785]: slope (2.8-2.785)/2 = 0.0075 < 0.05 — plateau
+        assert!(d.observe(2.785));
+    }
+
+    #[test]
+    fn detector_nan_and_inf_clear_history() {
+        let mut d = PlateauDetector::new(2, 0.05);
+        assert!(!d.observe(2.0));
+        assert!(!d.observe(f32::NAN), "NaN must never fire");
+        assert_eq!(d.len(), 0, "NaN clears the window");
+        assert!(!d.observe(2.0), "window refilling after NaN");
+        assert!(!d.observe(f32::INFINITY));
+        assert!(d.is_empty());
+        // a fresh flat pair after the reset can fire again
+        assert!(!d.observe(2.0));
+        assert!(d.observe(2.0));
+    }
+
+    #[test]
+    fn detector_window_longer_than_history_never_fires() {
+        // window of 10, only 5 perfectly flat evals: no verdict possible
+        let mut d = PlateauDetector::new(10, 0.05);
+        for _ in 0..5 {
+            assert!(!d.observe(2.0));
+        }
+        assert_eq!(d.len(), 5);
+    }
+
+    #[test]
+    fn detector_reset_forgets() {
+        let mut d = PlateauDetector::new(2, 0.05);
+        assert!(!d.observe(2.0));
+        d.reset();
+        assert!(!d.observe(2.0), "post-reset window is part-full again");
+        assert!(d.observe(2.0));
+    }
+
+    // ---- policy ------------------------------------------------------------
+
+    #[test]
+    fn plateau_fires_staged_ops_in_order_then_stops_at_budget() {
+        // flat losses + tiny window + no cooldown: fires as soon as legal
+        let mut p = LossPlateau::new(&sched(), 1.0, &pcfg(2, 0.5, 0, 0.0));
+        assert_eq!(p.eval_every(), Some(1));
+        let obs: Vec<(f32, Option<f32>)> = (0..30).map(|_| (2.0, Some(2.0))).collect();
+        let got = drive(&mut p, &obs);
+        let expands: Vec<(usize, usize)> = got
+            .iter()
+            .enumerate()
+            .filter_map(|(i, d)| match d {
+                Decision::Expand(ops) => Some((i + 1, ops.len())),
+                _ => None,
+            })
+            .collect();
+        // window fills at eval 2 -> first fire at step 2; detector resets,
+        // refills over 2 more evals -> second at step 4
+        assert_eq!(expands, vec![(2, 1), (4, 1)]);
+        assert_eq!(*got.last().unwrap(), Decision::Stop, "stops at 30-step budget");
+        assert!(!got[..29].iter().any(|d| *d == Decision::Stop));
+    }
+
+    #[test]
+    fn cooldown_suppresses_early_fire() {
+        let mut p = LossPlateau::new(&sched(), 1.0, &pcfg(2, 0.5, 5, 0.0));
+        let obs: Vec<(f32, Option<f32>)> = (0..12).map(|_| (2.0, Some(2.0))).collect();
+        let got = drive(&mut p, &obs);
+        let first_expand = got.iter().position(|d| matches!(d, Decision::Expand(_))).unwrap();
+        assert_eq!(first_expand + 1, 5, "suppressed until arch_step hits cooldown");
+        // second fire also waits out the (restarted) cooldown
+        let second_expand =
+            got.iter().skip(first_expand + 1).position(|d| matches!(d, Decision::Expand(_))).unwrap();
+        assert_eq!(second_expand + 1, 5);
+    }
+
+    #[test]
+    fn descending_loss_defers_expansion_until_budget_backstop() {
+        // steady 0.05/eval improvement (above min_slope 0.01), no deadline:
+        // no plateau fire — but the budget backstop must still get both
+        // staged expansions in before the 30-step budget. cooldown 0 ⇒
+        // reserve 1 step per pending expansion: fire at 28 (2 pending) and
+        // 29 (1 pending).
+        let mut p = LossPlateau::new(&sched(), 1.0, &pcfg(3, 0.01, 0, 0.0));
+        let obs: Vec<(f32, Option<f32>)> =
+            (0..29).map(|i| (2.0, Some(3.0 - 0.05 * i as f32))).collect();
+        let got = drive(&mut p, &obs);
+        let expand_at: Vec<usize> = got
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| matches!(d, Decision::Expand(_)))
+            .map(|(i, _)| i + 1)
+            .collect();
+        assert!(
+            !got[..27].iter().any(|d| matches!(d, Decision::Expand(_))),
+            "steady improvement must hold off expansion until budget pressure"
+        );
+        assert_eq!(expand_at, vec![28, 29], "backstop fires all staged growth before the budget");
+    }
+
+    #[test]
+    fn budget_backstop_reserves_cooldown_per_pending_expansion() {
+        // cooldown 5 ⇒ reserve 5 steps per pending expansion: with a
+        // never-plateauing stream and no deadline, pressure hits at
+        // 30 - 2*5 = 20 (2 pending) then 30 - 5 = 25 (1 pending)
+        let mut p = LossPlateau::new(&sched(), 1.0, &pcfg(3, 0.01, 5, 0.0));
+        let obs: Vec<(f32, Option<f32>)> =
+            (0..29).map(|i| (2.0, Some(5.0 - 0.05 * i as f32))).collect();
+        let got = drive(&mut p, &obs);
+        let expand_at: Vec<usize> = got
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| matches!(d, Decision::Expand(_)))
+            .map(|(i, _)| i + 1)
+            .collect();
+        assert_eq!(expand_at, vec![20, 25]);
+    }
+
+    #[test]
+    fn deadline_forces_fire_despite_progress() {
+        // same descending stream, but deadline_scale 1.5 over a 10-step
+        // stage -> forced fire at arch_step 15
+        let mut p = LossPlateau::new(&sched(), 1.0, &pcfg(3, 0.01, 0, 1.5));
+        let obs: Vec<(f32, Option<f32>)> =
+            (0..29).map(|i| (2.0, Some(3.0 - 0.05 * i as f32))).collect();
+        let got = drive(&mut p, &obs);
+        let first_expand = got.iter().position(|d| matches!(d, Decision::Expand(_))).unwrap();
+        assert_eq!(first_expand + 1, 15);
+    }
+
+    #[test]
+    fn nan_evals_suppress_fire_at_policy_level() {
+        let mut p = LossPlateau::new(&sched(), 1.0, &pcfg(2, 0.5, 0, 0.0));
+        let obs: Vec<(f32, Option<f32>)> = (0..6).map(|_| (2.0, Some(f32::NAN))).collect();
+        let got = drive(&mut p, &obs);
+        assert!(
+            !got.iter().any(|d| matches!(d, Decision::Expand(_))),
+            "an all-NaN eval stream must never trigger surgery"
+        );
+    }
+
+    #[test]
+    fn exhausted_staged_ops_continue_to_budget() {
+        let mut p = LossPlateau::new(&sched(), 1.0, &pcfg(2, 0.5, 0, 0.0));
+        let obs: Vec<(f32, Option<f32>)> = (0..29).map(|_| (2.0, Some(2.0))).collect();
+        let got = drive(&mut p, &obs);
+        let expands = got.iter().filter(|d| matches!(d, Decision::Expand(_))).count();
+        assert_eq!(expands, 2, "only two staged expansions exist");
+        assert_eq!(got[28], Decision::Continue, "keeps training after growth is spent");
+    }
+}

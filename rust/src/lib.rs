@@ -39,9 +39,14 @@
 //!   loop runs offline (`texpand train --backend native`).
 //! * [`optim`] — SGD/Adam with expansion-aware moment surgery.
 //! * [`data`] — synthetic corpus generators, byte tokenizer, batcher.
-//! * [`train`] — the training loop for one stage (backend-generic).
-//! * [`coordinator`] — the growth coordinator walking a schedule across
-//!   stages, applying boundary surgery and verifying preservation.
+//! * [`train`] — the training loop for one architecture segment
+//!   (backend-generic), producing the per-step [`growth::TrainObs`] stream.
+//! * [`growth`] — **growth policies** (S17): the [`growth::GrowthPolicy`]
+//!   seam deciding when/what to expand — fixed stage-table replay,
+//!   loss-plateau triggering, and greedy branch-probe search
+//!   (`--policy fixed|plateau|greedy`).
+//! * [`coordinator`] — the growth coordinator: a policy-driven loop over
+//!   segments, applying boundary surgery and verifying preservation.
 //! * [`metrics`] — CSV/JSONL run logging, timers, serving counters.
 //! * [`cli`] — argument parsing for the `texpand` binary.
 //!
@@ -65,6 +70,7 @@ pub mod data;
 pub mod error;
 pub mod expand;
 pub mod generate;
+pub mod growth;
 pub mod json;
 pub mod metrics;
 pub mod model;

@@ -15,7 +15,7 @@
 
 use texpand::autodiff::{ExecBackend, NativeBackend};
 use texpand::cli::Args;
-use texpand::config::{GrowthSchedule, OptimKind, TrainConfig};
+use texpand::config::{GrowthSchedule, OptimKind, PolicyKind, TrainConfig};
 use texpand::coordinator::{Coordinator, CoordinatorOptions};
 use texpand::data::CorpusKind;
 use texpand::error::{Error, Result};
@@ -28,6 +28,7 @@ texpand — composable function-preserving transformer expansions
 
 USAGE:
   texpand train   [--backend native|pjrt] [--schedule P] [--artifacts D]
+                  [--policy fixed|plateau|greedy]
                   [--run-name N] [--runs D]
                   [--steps-scale F] [--lr F] [--optimizer adam|sgd]
                   [--seed N] [--corpus markov|copy|arithmetic]
@@ -58,6 +59,14 @@ worker threads (--threads, or the TEXPAND_THREADS env var; default all
 cores) with bit-identical gradients at any thread count. --micro-batch N
 (or \"micro_batch\" in the schedule JSON) accumulates gradients N rows at
 a time so the schedule's batch can exceed resident memory.
+
+Growth policies (--policy, or \"policy\" block in the schedule JSON):
+`fixed` (default) replays the schedule's stage table verbatim; `plateau`
+fires the next staged expansion when the eval loss stops improving
+(window/cooldown/deadline knobs in the JSON policy block); `greedy`
+branch-probes candidate expansions and commits the best loss-per-compute
+one. plateau/greedy decide architectures at run time, so they need
+--backend native; pjrt executes a fixed AOT stage table only.
 
 Defaults: --schedule configs/growth_default.json, --artifacts artifacts,
           --runs runs, --backend pjrt.";
@@ -102,12 +111,8 @@ fn train_config(args: &Args) -> Result<TrainConfig> {
     if let Some(seed) = args.get_u64("seed")? {
         t.seed = seed;
     }
-    if let Some(opt) = args.get("optimizer") {
-        t.optimizer = match opt.as_str() {
-            "adam" => OptimKind::Adam,
-            "sgd" => OptimKind::Sgd,
-            other => return Err(Error::Cli(format!("unknown optimizer '{other}'"))),
-        };
+    if let Some(opt) = args.get_choice("optimizer", &["adam", "sgd"])? {
+        t.optimizer = if opt == "adam" { OptimKind::Adam } else { OptimKind::Sgd };
     }
     if let Some(le) = args.get_usize("log-every")? {
         t.log_every = le.max(1);
@@ -237,9 +242,47 @@ fn build_coordinator(args: &Args) -> Result<Coordinator> {
 fn cmd_train(args: &Args) -> Result<()> {
     let runs_root = args.get_or("runs", "runs");
     let run_name = args.get_or("run-name", "train");
+    // adaptive policies synthesize architectures at run time; the pjrt
+    // backend can only execute its precompiled stage table — reject the
+    // combination up front, BEFORE any manifest/artifact resolution, so
+    // the error is about the policy and not about missing artifacts
+    let policy_flag = args
+        .get_choice("policy", &["fixed", "plateau", "greedy"])?
+        .map(|p| PolicyKind::parse(&p))
+        .transpose()?;
+    let backend_is_native = args.get_or("backend", "pjrt") == "native";
+    let reject_adaptive_on_pjrt = |kind: PolicyKind| -> Result<()> {
+        if kind != PolicyKind::Fixed && !backend_is_native {
+            return Err(Error::Cli(format!(
+                "--policy {} grows architectures at run time and needs --backend native; \
+                 the pjrt backend executes a fixed stage table of AOT artifacts (--policy fixed)",
+                kind.name()
+            )));
+        }
+        Ok(())
+    };
+    if let Some(kind) = policy_flag {
+        reject_adaptive_on_pjrt(kind)?;
+    } else if !backend_is_native {
+        // the schedule JSON's policy block can also select an adaptive
+        // kind; peek at it before artifact resolution so the error talks
+        // about the policy, not about missing artifacts. An unreadable
+        // schedule falls through to build_coordinator's own error.
+        if let Ok(s) = GrowthSchedule::load(&args.get_or("schedule", "configs/growth_default.json")) {
+            reject_adaptive_on_pjrt(s.policy.kind)?;
+        }
+    }
     let mut coord = build_coordinator(args)?; // rejects unknown flags
-    let summary = coord.run(&runs_root, &run_name)?;
-    println!("\n=== run summary ({}) ===", summary.run_dir);
+    let mut pcfg = coord.schedule.policy.clone();
+    if let Some(kind) = policy_flag {
+        pcfg.kind = kind;
+    }
+    // belt-and-braces: nothing adaptive may reach a pjrt run
+    reject_adaptive_on_pjrt(pcfg.kind)?;
+    let mut policy =
+        texpand::growth::build_policy(&coord.schedule, coord.opts.steps_scale, &pcfg, coord.tcfg.seed);
+    let summary = coord.run_with_policy(&runs_root, &run_name, policy.as_mut())?;
+    println!("\n=== run summary ({}, policy {}) ===", summary.run_dir, summary.policy);
     println!("{:<10} {:>8} {:>10} {:>10} {:>12} {:>10}", "stage", "steps", "first", "final", "tok/s", "ms/step");
     for s in &summary.stages {
         println!(

@@ -75,6 +75,44 @@ impl RunLogger {
         }
     }
 
+    /// Log one growth-policy decision together with the evidence it was
+    /// made on (S17). One row per eval-bearing observation plus every
+    /// non-`Continue` verdict — the audit trail for "why did the model
+    /// grow here": `ci.sh` smoke-greps these rows, and the policy-compare
+    /// bench reads them back.
+    pub fn decision(
+        &mut self,
+        policy: &str,
+        obs: &crate::growth::TrainObs,
+        decision: &crate::growth::Decision,
+    ) {
+        let ops = match decision {
+            crate::growth::Decision::Expand(ops) => {
+                Value::Arr(ops.iter().map(|o| Value::str(o.kind())).collect())
+            }
+            _ => Value::Null,
+        };
+        let eval = match obs.eval_loss {
+            Some(e) => Value::num(f64::from(e)),
+            None => Value::Null,
+        };
+        self.event(
+            "decision",
+            vec![
+                ("policy", Value::str(policy)),
+                ("decision", Value::str(decision.tag())),
+                ("ops", ops),
+                ("global_step", Value::num(obs.global_step as f64)),
+                ("arch_step", Value::num(obs.arch_step as f64)),
+                ("train_loss", Value::num(f64::from(obs.train_loss))),
+                ("eval_loss", eval),
+                ("tokens_seen", Value::num(obs.tokens_seen as f64)),
+                ("est_flops", Value::num(obs.est_flops)),
+                ("params", Value::num(obs.params as f64)),
+            ],
+        );
+    }
+
     /// Append one loss-curve row.
     pub fn loss_row(&mut self, global_step: usize, stage: &str, loss: f32, tokens_seen: usize) {
         let _ = writeln!(
@@ -206,6 +244,45 @@ mod tests {
         assert_eq!(csv.lines().filter(|l| l.starts_with("global_step")).count(), 1);
         assert_eq!(csv.lines().count(), 3);
         std::fs::remove_dir_all(format!("{root}/run2")).unwrap();
+    }
+
+    #[test]
+    fn decision_rows_carry_evidence() {
+        use crate::config::GrowthOp;
+        use crate::growth::{Decision, TrainObs};
+
+        let root = tmpdir("decision");
+        let mut log = RunLogger::create(&root, "run3").unwrap().quiet();
+        let obs = TrainObs {
+            global_step: 7,
+            arch_step: 3,
+            train_loss: 2.5,
+            eval_loss: Some(2.4),
+            tokens_seen: 448,
+            est_flops: 1e9,
+            params: 1234,
+        };
+        log.decision("plateau", &obs, &Decision::Expand(vec![GrowthOp::Mlp { p: 64 }]));
+        let no_eval = TrainObs { eval_loss: None, ..obs };
+        log.decision("plateau", &no_eval, &Decision::Continue);
+        drop(log);
+
+        let events = std::fs::read_to_string(format!("{root}/run3/events.jsonl")).unwrap();
+        let mut lines = events.lines();
+        let first = Value::parse(lines.next().unwrap()).unwrap();
+        assert_eq!(first.req("event").unwrap().as_str().unwrap(), "decision");
+        assert_eq!(first.req("policy").unwrap().as_str().unwrap(), "plateau");
+        assert_eq!(first.req("decision").unwrap().as_str().unwrap(), "expand");
+        let ops = first.req("ops").unwrap().as_arr().unwrap();
+        assert_eq!(ops.len(), 1);
+        assert_eq!(ops[0].as_str().unwrap(), "mlp");
+        assert_eq!(first.req("global_step").unwrap().as_i64().unwrap(), 7);
+        assert!((first.req("eval_loss").unwrap().as_f64().unwrap() - 2.4).abs() < 1e-6);
+        let second = Value::parse(lines.next().unwrap()).unwrap();
+        assert_eq!(second.req("decision").unwrap().as_str().unwrap(), "continue");
+        assert_eq!(second.req("eval_loss").unwrap(), &Value::Null);
+        assert_eq!(second.req("ops").unwrap(), &Value::Null);
+        std::fs::remove_dir_all(format!("{root}/run3")).unwrap();
     }
 
     #[test]

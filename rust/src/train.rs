@@ -1,22 +1,34 @@
-//! Single-stage training loop (S10a).
+//! Single-segment training loop (S10a) + the policy observation stream.
 //!
-//! One stage = one architecture = one `step` executable. The loop is the
+//! One segment = one architecture = one `step` executable. The loop is the
 //! L3 hot path: batch synthesis → backend step (PJRT artifact or native
 //! autodiff) → gradient clip → optimizer update → metrics. It is written
 //! against [`ExecBackend`], so the same loop drives both engines; Python
 //! is never involved.
+//!
+//! Two entry points share the inner loop:
+//! * [`train_segment`] — policy-driven: after every optimizer update a
+//!   [`TrainObs`] (step, losses, tokens, estimated FLOPs) is handed to a
+//!   [`GrowthPolicy`], whose [`Decision`] ends the segment (expand/stop)
+//!   or lets it continue. Eval losses are probed on a fixed held-out batch
+//!   only at the cadence the policy asks for — a pure forward pass, so
+//!   observation never perturbs the training trajectory.
+//! * [`train_stage`] — the classic fixed-step-count loop, expressed as a
+//!   segment driven by an internal step-budget shim. Identical numerics to
+//!   the pre-policy implementation.
 
 use crate::autodiff::ExecBackend;
 use crate::config::TrainConfig;
-use crate::data::Batcher;
+use crate::data::{Batch, Batcher};
 use crate::error::{Error, Result};
+use crate::growth::{Decision, GrowthPolicy, PolicyCtx, TrainObs};
 use crate::json::Value;
 use crate::metrics::{RunLogger, Timer};
 use crate::optim::{clip_global_norm, Optimizer};
 use crate::params::ParamStore;
 use crate::runtime::StageExec;
 
-/// Outcome of one stage's training.
+/// Outcome of one segment's training.
 #[derive(Clone, Debug)]
 pub struct StageReport {
     pub stage: String,
@@ -27,17 +39,24 @@ pub struct StageReport {
     pub tail_mean_loss: f32,
     pub tokens_per_sec: f64,
     pub step_ms_mean: f64,
+    /// Scalar parameter count of the architecture this segment trained —
+    /// segments are no longer pinned to schedule stages, so compute
+    /// accounting (steps × params × tokens) needs it recorded per segment.
+    pub params: usize,
 }
 
-/// Mutable cross-stage training state threaded through the coordinator.
+/// Mutable cross-segment training state threaded through the coordinator.
 pub struct TrainState {
     pub global_step: usize,
     pub tokens_seen: usize,
+    /// Cumulative estimated training FLOPs (6·params·tokens per step),
+    /// the evidence stream policies judge compute efficiency against.
+    pub est_flops: f64,
 }
 
 impl TrainState {
     pub fn new() -> TrainState {
-        TrainState { global_step: 0, tokens_seen: 0 }
+        TrainState { global_step: 0, tokens_seen: 0, est_flops: 0.0 }
     }
 }
 
@@ -47,11 +66,70 @@ impl Default for TrainState {
     }
 }
 
-/// Train `steps` steps of one stage. Fails fast on non-finite loss (the
+/// Why a policy-driven segment ended.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SegmentEnd {
+    /// The policy asked for an expansion boundary with these ops (empty =
+    /// split the segment without surgery).
+    Expand(Vec<crate::config::GrowthOp>),
+    /// The policy ended the run.
+    Stop,
+}
+
+/// Internal shim making [`train_stage`] a degenerate policy-driven
+/// segment: stop after exactly `steps` steps, no eval probes, no decision
+/// logging. Keeping ONE inner loop is what guarantees the fixed-policy
+/// coordinator stays bit-identical to plain staged training.
+struct StepBudget {
+    steps: usize,
+}
+
+impl GrowthPolicy for StepBudget {
+    fn name(&self) -> &'static str {
+        "steps"
+    }
+
+    fn log_decisions(&self) -> bool {
+        false
+    }
+
+    fn decide(&mut self, obs: &TrainObs, _ctx: &PolicyCtx<'_>) -> Decision {
+        if obs.arch_step >= self.steps {
+            Decision::Stop
+        } else {
+            Decision::Continue
+        }
+    }
+}
+
+fn log_step_event(
+    logger: &mut RunLogger,
+    stage: &str,
+    global_step: usize,
+    local_step: usize,
+    loss: f32,
+    grad_norm: f32,
+) {
+    logger.event(
+        "step",
+        vec![
+            ("stage", Value::str(stage)),
+            ("global_step", Value::num(global_step as f64)),
+            ("local_step", Value::num(local_step as f64)),
+            ("loss", Value::num(f64::from(loss))),
+            ("grad_norm", Value::num(f64::from(grad_norm))),
+        ],
+    );
+}
+
+/// Train one segment under `policy` control. Returns the segment report
+/// and the decision that ended it. `probe` is the fixed held-out batch
+/// eval observations are measured on (`None` = the policy gets no eval
+/// signal even if it asks). Fails fast on non-finite loss (the
 /// preservation property makes boundary loss spikes a bug, not a hazard
 /// of the method).
 #[allow(clippy::too_many_arguments)]
-pub fn train_stage(
+pub fn train_segment(
     backend: &dyn ExecBackend,
     stage: &StageExec,
     params: &mut ParamStore,
@@ -60,19 +138,20 @@ pub fn train_stage(
     tcfg: &TrainConfig,
     logger: &mut RunLogger,
     state: &mut TrainState,
-    steps: usize,
-) -> Result<StageReport> {
-    if steps == 0 {
-        return Err(Error::Train(format!("stage '{}' scheduled for 0 steps", stage.meta.name)));
-    }
+    policy: &mut dyn GrowthPolicy,
+    probe: Option<&Batch>,
+) -> Result<(StageReport, SegmentEnd)> {
     opt.validate_against(params)?;
     let tokens_per_step = stage.batch * stage.meta.config.seq;
     let timer = Timer::start();
     let mut first_loss = f32::NAN;
     let mut last_losses: Vec<f32> = Vec::new();
     let mut step_ms_total = 0.0f64;
+    let num_params = params.num_scalars();
+    let mut last_step_event = (0usize, f32::NAN, f32::NAN);
 
-    for local_step in 0..steps {
+    let mut local_step = 0usize;
+    let end = loop {
         let batch = batcher.next();
         let step_timer = Timer::start();
         let (loss, mut grads) = backend.step(stage, params, &batch)?;
@@ -98,22 +177,52 @@ pub fn train_stage(
         }
         state.global_step += 1;
         state.tokens_seen += tokens_per_step;
+        state.est_flops += 6.0 * num_params as f64 * tokens_per_step as f64;
         logger.loss_row(state.global_step, &stage.meta.name, loss, state.tokens_seen);
-        if local_step % tcfg.log_every == 0 || local_step + 1 == steps {
-            logger.event(
-                "step",
-                vec![
-                    ("stage", Value::str(stage.meta.name.clone())),
-                    ("global_step", Value::num(state.global_step as f64)),
-                    ("local_step", Value::num(local_step as f64)),
-                    ("loss", Value::num(f64::from(loss))),
-                    ("grad_norm", Value::num(f64::from(grad_norm))),
-                ],
-            );
+        last_step_event = (local_step, loss, grad_norm);
+        if local_step % tcfg.log_every == 0 {
+            log_step_event(logger, &stage.meta.name, state.global_step, local_step, loss, grad_norm);
         }
-    }
 
-    let final_loss = *last_losses.last().unwrap();
+        // --- observe & decide -------------------------------------------
+        let arch_step = local_step + 1;
+        let eval_loss = match (policy.eval_every(), probe) {
+            (Some(k), Some(p)) if arch_step % k == 0 => {
+                Some(eval_loss(backend, stage, params, p)?)
+            }
+            _ => None,
+        };
+        let obs = TrainObs {
+            global_step: state.global_step,
+            arch_step,
+            train_loss: loss,
+            eval_loss,
+            tokens_seen: state.tokens_seen,
+            est_flops: state.est_flops,
+            params: num_params,
+        };
+        let ctx = PolicyCtx { params: &*params, opt: &*opt, batcher: &*batcher, tcfg };
+        let decision = policy.decide(&obs, &ctx);
+        if policy.log_decisions() && (obs.eval_loss.is_some() || decision != Decision::Continue) {
+            logger.decision(policy.name(), &obs, &decision);
+        }
+        local_step += 1;
+        match decision {
+            Decision::Continue => {}
+            Decision::Expand(ops) => break SegmentEnd::Expand(ops),
+            Decision::Stop => break SegmentEnd::Stop,
+        }
+    };
+
+    let steps = local_step;
+    // the segment's last step always gets a `step` event (the fixed-count
+    // loop logged `local_step + 1 == steps`; a policy-driven segment only
+    // knows its last step after the fact)
+    let (ls, loss, gn) = last_step_event;
+    if ls % tcfg.log_every != 0 {
+        log_step_event(logger, &stage.meta.name, state.global_step, ls, loss, gn);
+    }
+    let final_loss = *last_losses.last().expect("at least one step ran");
     let tail_mean_loss = last_losses.iter().sum::<f32>() / last_losses.len() as f32;
     let report = StageReport {
         stage: stage.meta.name.clone(),
@@ -123,6 +232,7 @@ pub fn train_stage(
         tail_mean_loss,
         tokens_per_sec: (steps * tokens_per_step) as f64 / timer.secs(),
         step_ms_mean: step_ms_total / steps as f64,
+        params: num_params,
     };
     logger.event(
         "stage_done",
@@ -134,9 +244,34 @@ pub fn train_stage(
             ("tail_mean_loss", Value::num(f64::from(report.tail_mean_loss))),
             ("tokens_per_sec", Value::num(report.tokens_per_sec)),
             ("step_ms_mean", Value::num(report.step_ms_mean)),
-            ("params", Value::num(params.num_scalars() as f64)),
+            ("params", Value::num(num_params as f64)),
         ],
     );
+    Ok((report, end))
+}
+
+/// Train exactly `steps` steps of one stage (the non-policy entry point:
+/// branch finetuning, probe training, benches).
+#[allow(clippy::too_many_arguments)]
+pub fn train_stage(
+    backend: &dyn ExecBackend,
+    stage: &StageExec,
+    params: &mut ParamStore,
+    opt: &mut Optimizer,
+    batcher: &mut Batcher,
+    tcfg: &TrainConfig,
+    logger: &mut RunLogger,
+    state: &mut TrainState,
+    steps: usize,
+) -> Result<StageReport> {
+    if steps == 0 {
+        return Err(Error::Train(format!("stage '{}' scheduled for 0 steps", stage.meta.name)));
+    }
+    let mut shim = StepBudget { steps };
+    let (report, end) = train_segment(
+        backend, stage, params, opt, batcher, tcfg, logger, state, &mut shim, None,
+    )?;
+    debug_assert_eq!(end, SegmentEnd::Stop);
     Ok(report)
 }
 

@@ -109,6 +109,56 @@ fn verify_native_reports_preserving_boundaries() {
 }
 
 #[test]
+fn pjrt_backend_rejects_adaptive_policy_with_clear_error() {
+    // must fail up front with guidance, NOT with a missing-artifacts error
+    let out = texpand(&["train", "--backend", "pjrt", "--policy", "plateau"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--backend native"), "{err}");
+    assert!(!err.contains("manifest.json"), "policy check must precede artifact resolution: {err}");
+}
+
+#[test]
+fn unknown_policy_value_rejected() {
+    let out = texpand(&["train", "--backend", "native", "--policy", "bandit"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("fixed|plateau|greedy"), "{err}");
+}
+
+#[test]
+fn policy_flag_rejected_on_non_train_subcommands() {
+    // verify proves fixed-schedule boundaries; an adaptive-policy flag
+    // there would be silently meaningless, so it must be an unknown flag
+    let out = texpand(&["verify", "--backend", "native", "--schedule", "configs/growth_tiny.json", "--policy", "plateau"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--policy"));
+}
+
+#[test]
+fn train_plateau_policy_logs_decisions() {
+    let runs = std::env::temp_dir().join(format!("texpand-cli-policy-{}", std::process::id()));
+    let runs = runs.to_str().unwrap();
+    let out = texpand(&[
+        "train",
+        "--backend", "native",
+        "--schedule", "configs/growth_tiny.json",
+        "--policy", "plateau",
+        "--run-name", "cli-plateau",
+        "--runs", runs,
+        "--steps-scale", "0.4",
+        "--no-checkpoints",
+        "--log-every", "100",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("policy plateau"), "{text}");
+    let events = std::fs::read_to_string(format!("{runs}/cli-plateau/events.jsonl")).unwrap();
+    assert!(events.contains(r#""event":"decision""#), "no decision rows logged");
+    std::fs::remove_dir_all(runs).ok();
+}
+
+#[test]
 fn inspect_missing_checkpoint_fails_cleanly() {
     let out = texpand(&["inspect", "--ckpt", "/nonexistent.txpd"]);
     assert!(!out.status.success());

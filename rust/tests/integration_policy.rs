@@ -1,0 +1,268 @@
+//! Integration: policy-driven growth, end to end (native backend).
+//!
+//! The load-bearing test is the **equivalence oracle**: a coordinator run
+//! under the default `FixedSchedule` policy must be bit-identical — every
+//! loss-curve row and every final parameter — to a hand-rolled replay of
+//! the pre-refactor stage-wise loop (train_stage per stage, surgery at
+//! each boundary). That pins the refactor: the policy seam added a
+//! decision point, not a numerics change. The adaptive policies then get
+//! their own offline end-to-end runs.
+
+mod common;
+
+use common::{tiny_manifest, tiny_schedule};
+use texpand::autodiff::{ExecBackend, NativeBackend};
+use texpand::config::{PolicyConfig, PolicyKind, TrainConfig};
+use texpand::coordinator::{Coordinator, CoordinatorOptions};
+use texpand::data::{Batcher, CorpusKind};
+use texpand::expand::{apply_ops_owned, ExpandOptions, Init};
+use texpand::growth::{GreedyBranch, LossPlateau};
+use texpand::metrics::RunLogger;
+use texpand::optim::Optimizer;
+use texpand::params::ParamStore;
+use texpand::rng::Pcg32;
+use texpand::train::{train_stage, TrainState};
+
+fn tmp_runs(tag: &str) -> String {
+    let d = std::env::temp_dir().join(format!("texpand-policy-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d.to_str().unwrap().to_string()
+}
+
+const CORPUS_LEN: usize = 50_000;
+
+fn mini_coordinator(steps_scale: f64, save: bool) -> Coordinator {
+    Coordinator::new(
+        tiny_schedule(),
+        tiny_manifest(),
+        Box::new(NativeBackend::new()),
+        TrainConfig { log_every: 1000, ..Default::default() },
+        CoordinatorOptions {
+            steps_scale,
+            save_checkpoints: save,
+            corpus: CorpusKind::MarkovText,
+            corpus_len: CORPUS_LEN,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Strip the wall-clock column from a loss.csv (the only
+/// non-deterministic field).
+fn loss_rows_without_wall(dir: &str) -> Vec<String> {
+    let csv = std::fs::read_to_string(format!("{dir}/loss.csv")).unwrap();
+    csv.lines()
+        .skip(1) // header
+        .map(|l| {
+            let (row, _wall) = l.rsplit_once(',').unwrap();
+            row.to_string()
+        })
+        .collect()
+}
+
+#[test]
+fn fixed_policy_bit_identical_to_stagewise_replay() {
+    // --- the policy-driven run (FixedSchedule via Coordinator::run) -----
+    let runs = tmp_runs("oracle");
+    let mut coord = mini_coordinator(1.0, true);
+    let summary = coord.run(&runs, "policy").unwrap();
+    assert_eq!(summary.policy, "fixed");
+    assert_eq!(summary.stages.len(), 3);
+    assert_eq!(summary.boundaries.len(), 2);
+
+    // --- the pre-refactor semantics, replayed by hand -------------------
+    // exactly what Coordinator::run did before the policy seam: per stage,
+    // (surgery if i > 0) then train_stage for its scheduled step count,
+    // all on one shared rng/batcher/optimizer lineage
+    let sched = tiny_schedule();
+    let manifest = tiny_manifest();
+    let tcfg = TrainConfig { log_every: 1000, ..Default::default() };
+    let mut backend = NativeBackend::new();
+    let mut rng = Pcg32::seeded(tcfg.seed);
+    let first_cfg = sched.stages[0].config;
+    let mut params = ParamStore::init(&first_cfg, &mut rng, 0.02);
+    let mut opt = Optimizer::new(&tcfg, &params);
+    let mut batcher = Batcher::from_corpus(
+        CorpusKind::MarkovText,
+        CORPUS_LEN,
+        first_cfg.vocab,
+        first_cfg.seq,
+        sched.batch,
+        tcfg.seed ^ 0xC0DE,
+    )
+    .unwrap();
+    let mut logger = RunLogger::create(&runs, "replay").unwrap().quiet();
+    let mut state = TrainState::new();
+    for (i, stage) in sched.stages.iter().enumerate() {
+        if i > 0 && !stage.apply.is_empty() {
+            let dummy = texpand::config::ModelConfig {
+                layers: 1, hidden: 1, heads: 1, k: 1, v: 1, mlp: 1, seq: 1, vocab: 1,
+            };
+            let old = std::mem::replace(&mut params, ParamStore::zeros(&dummy));
+            let expand_opts = ExpandOptions { init: Init::Normal(0.02), ..Default::default() };
+            params = apply_ops_owned(old, &stage.apply, &mut rng, &expand_opts).unwrap();
+            opt.expand(&stage.apply).unwrap();
+        }
+        let exec = backend.load_stage(&manifest, &stage.name).unwrap();
+        train_stage(
+            &backend,
+            &exec,
+            &mut params,
+            &mut opt,
+            &mut batcher,
+            &tcfg,
+            &mut logger,
+            &mut state,
+            stage.steps,
+        )
+        .unwrap();
+    }
+    drop(logger);
+
+    // --- bit-identical loss trajectory ----------------------------------
+    let policy_rows = loss_rows_without_wall(&format!("{runs}/policy"));
+    let replay_rows = loss_rows_without_wall(&format!("{runs}/replay"));
+    assert_eq!(policy_rows.len(), 90, "30 steps x 3 stages");
+    assert_eq!(
+        policy_rows, replay_rows,
+        "loss trajectory diverged between policy-driven and stage-wise runs"
+    );
+
+    // --- bit-identical final parameters ---------------------------------
+    let (ckpt, _) = ParamStore::load(&format!("{runs}/policy/stage2.txpd")).unwrap();
+    assert_eq!(ckpt.config(), params.config());
+    for ((spec, a), (_, b)) in ckpt.iter().zip(params.iter()) {
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "param '{}' diverged", spec.name);
+        }
+    }
+    std::fs::remove_dir_all(&runs).unwrap();
+}
+
+#[test]
+fn plateau_policy_runs_offline_with_logged_expansions() {
+    let runs = tmp_runs("plateau");
+    let mut coord = mini_coordinator(0.5, false); // 15 steps per stage, 45 total
+    let pcfg = PolicyConfig {
+        kind: PolicyKind::Plateau,
+        eval_every: 2,
+        window: 2,
+        min_slope: 1.0, // tiny-model progress is < 1 nat/eval: plateaus fast
+        cooldown: 3,
+        deadline_scale: 2.0,
+        probe_budget: 4,
+    };
+    let mut policy = LossPlateau::new(&coord.schedule, coord.opts.steps_scale, &pcfg);
+    let summary = coord.run_with_policy(&runs, "plateau", &mut policy).unwrap();
+
+    assert_eq!(summary.policy, "plateau");
+    assert_eq!(summary.total_steps, 45, "stops exactly at the scaled step budget");
+    assert_eq!(summary.boundaries.len(), 2, "both staged expansions fired");
+    for b in &summary.boundaries {
+        assert!(b.rust_delta <= 1e-4, "{}: preservation {}", b.into_stage, b.rust_delta);
+        assert!(b.pjrt_delta <= 1e-4, "{}: backend {}", b.into_stage, b.pjrt_delta);
+    }
+    // the run grew to the schedule's final architecture
+    let final_cfg = *coord.schedule.final_config();
+    assert_eq!(summary.stages.len(), 3);
+    assert_eq!(summary.stages.last().unwrap().params, final_cfg.num_params());
+
+    // the decision audit trail is in the run log, evidence attached
+    let events = std::fs::read_to_string(format!("{}/events.jsonl", summary.run_dir)).unwrap();
+    let expansions = events.lines().filter(|l| l.contains(r#""decision":"expand""#)).count();
+    assert_eq!(expansions, 2, "one decision row per committed expansion");
+    assert!(
+        events.lines().any(|l| l.contains(r#""event":"decision""#) && l.contains(r#""eval_loss":"#)),
+        "decision rows must carry their eval evidence"
+    );
+    std::fs::remove_dir_all(&runs).unwrap();
+}
+
+#[test]
+fn greedy_policy_runs_offline_and_any_commit_preserves() {
+    // two-stage schedule so the greedy param cap (= final stage size) sits
+    // above the base architecture and probing is reachable
+    let runs = tmp_runs("greedy");
+    let schedule = texpand::config::GrowthSchedule::from_json(
+        &texpand::json::Value::parse(
+            r#"{
+                "name": "greedy-it", "batch": 2, "seq": 8, "vocab": 16,
+                "base": {"layers":1,"hidden":8,"heads":1,"k":4,"v":4,"mlp":16},
+                "stages": [
+                    {"steps": 10},
+                    {"steps": 10, "apply": [{"op":"mlp","p":32},{"op":"heads_add","count":1}]}
+                ]
+            }"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let manifest = texpand::runtime::Manifest::from_schedule(&schedule);
+    let tcfg = TrainConfig { log_every: 1000, ..Default::default() };
+    let mut coord = Coordinator::new(
+        schedule.clone(),
+        manifest,
+        Box::new(NativeBackend::new()),
+        tcfg.clone(),
+        CoordinatorOptions {
+            save_checkpoints: false,
+            corpus_len: 20_000,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let pcfg = PolicyConfig {
+        kind: PolicyKind::Greedy,
+        eval_every: 2,
+        window: 2,
+        min_slope: 1.0,
+        cooldown: 2,
+        deadline_scale: 0.0,
+        probe_budget: 2,
+    };
+    let mut policy = GreedyBranch::new(&schedule, 1.0, &pcfg, tcfg.seed);
+    let summary = coord.run_with_policy(&runs, "greedy", &mut policy).unwrap();
+
+    assert_eq!(summary.policy, "greedy");
+    assert_eq!(summary.total_steps, 20, "greedy spends exactly the matched budget");
+    // commits are data-dependent; whatever was committed must preserve
+    for b in &summary.boundaries {
+        assert_eq!(b.ops, 1, "greedy commits one op per boundary");
+        assert!(b.rust_delta <= 1e-4, "{}: preservation {}", b.into_stage, b.rust_delta);
+    }
+    let events = std::fs::read_to_string(format!("{}/events.jsonl", summary.run_dir)).unwrap();
+    assert!(
+        events.lines().any(|l| l.contains(r#""event":"decision""#)),
+        "greedy run must leave a decision audit trail"
+    );
+    std::fs::remove_dir_all(&runs).unwrap();
+}
+
+/// The plateau policy must behave identically through the public
+/// `build_policy` factory (what `texpand train --policy plateau` uses).
+#[test]
+fn build_policy_plateau_matches_direct_construction() {
+    let runs = tmp_runs("factory");
+    let pcfg = PolicyConfig {
+        kind: PolicyKind::Plateau,
+        eval_every: 2,
+        window: 2,
+        min_slope: 1.0,
+        cooldown: 3,
+        deadline_scale: 2.0,
+        probe_budget: 4,
+    };
+    let mut direct_coord = mini_coordinator(0.5, false);
+    let mut direct = LossPlateau::new(&direct_coord.schedule, 0.5, &pcfg);
+    let a = direct_coord.run_with_policy(&runs, "direct", &mut direct).unwrap();
+
+    let mut factory_coord = mini_coordinator(0.5, false);
+    let mut boxed = texpand::growth::build_policy(&factory_coord.schedule, 0.5, &pcfg, 0);
+    let b = factory_coord.run_with_policy(&runs, "factory", boxed.as_mut()).unwrap();
+
+    assert_eq!(a.total_steps, b.total_steps);
+    assert_eq!(a.boundaries.len(), b.boundaries.len());
+    assert_eq!(a.final_eval_loss.to_bits(), b.final_eval_loss.to_bits());
+    std::fs::remove_dir_all(&runs).unwrap();
+}
