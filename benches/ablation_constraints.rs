@@ -17,7 +17,7 @@
 
 use texpand::bench_util::Reporter;
 use texpand::config::{GrowthOp, LayerPosition, ModelConfig};
-use texpand::expand::{apply_ops, ExpandOptions, Init};
+use texpand::expand::{ExpandOptions, ExpansionPlan, Init};
 use texpand::json::Value;
 use texpand::model::{forward, max_logit_delta};
 use texpand::params::ParamStore;
@@ -61,9 +61,10 @@ fn main() {
         "transform", "constrained", "free-random", "violated", "no-scaling"
     );
     for (name, ops) in &cases {
+        let plan = ExpansionPlan::new(&cfg, ops.clone()).unwrap();
         let mut row = Vec::new();
         for (vname, opts) in &variants {
-            let out = apply_ops(&params, ops, &mut Pcg32::seeded(9), opts).unwrap();
+            let out = plan.materialize(&params, opts, &mut Pcg32::seeded(9)).unwrap();
             let d = max_logit_delta(&base, &forward(out.config(), &out, &tokens).unwrap()).unwrap();
             rep.value_row(&format!("{name} [{vname}]"), "max_abs_delta", d as f64, vec![
                 ("transform", Value::str(*name)),

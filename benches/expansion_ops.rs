@@ -10,7 +10,7 @@
 
 use texpand::bench_util::{bench, Reporter};
 use texpand::config::{GrowthOp, LayerPosition, ModelConfig, OptimKind, TrainConfig};
-use texpand::expand::{apply_op, ExpandOptions};
+use texpand::expand::{ExpandOptions, ExpansionPlan};
 use texpand::json::Value;
 use texpand::optim::Optimizer;
 use texpand::params::ParamStore;
@@ -52,8 +52,9 @@ fn main() {
         let params = ParamStore::init(&cfg, &mut rng, 0.02);
         let n_params = params.num_scalars();
         for (op_name, op) in ops_for(&cfg) {
+            let plan = ExpansionPlan::new(&cfg, vec![op.clone()]).expect("valid op");
             let stats = bench(1, 5, || {
-                apply_op(&params, &op, &mut Pcg32::seeded(2), &opts).expect("surgery")
+                plan.materialize(&params, &opts, &mut Pcg32::seeded(2)).expect("surgery")
             });
             rep.row(
                 &format!("{scale_name:<14} {op_name}"),
@@ -65,10 +66,13 @@ fn main() {
         let tcfg = TrainConfig { optimizer: OptimKind::Adam, ..Default::default() };
         let boundary_ops =
             vec![GrowthOp::Mlp { p: cfg.mlp * 2 }, GrowthOp::HeadsAdd { count: 1 }];
+        let boundary_plan = ExpansionPlan::new(&cfg, boundary_ops).unwrap();
         let stats = bench(1, 3, || {
             let mut opt = Optimizer::new(&tcfg, &params);
-            let p2 = texpand::expand::apply_ops(&params, &boundary_ops, &mut Pcg32::seeded(3), &opts).unwrap();
-            opt.expand(&boundary_ops).unwrap();
+            let mut p2 = params.clone();
+            boundary_plan
+                .apply_train(&mut p2, &mut opt, &opts, &mut Pcg32::seeded(3))
+                .unwrap();
             (p2, opt)
         });
         rep.row(

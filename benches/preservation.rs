@@ -14,7 +14,7 @@
 
 use texpand::bench_util::Reporter;
 use texpand::config::{GrowthOp, LayerPosition, ModelConfig};
-use texpand::expand::{apply_ops, ExpandOptions, Init};
+use texpand::expand::{ExpandOptions, ExpansionPlan, Init};
 use texpand::json::Value;
 use texpand::model::{forward, max_logit_delta};
 use texpand::params::ParamStore;
@@ -61,13 +61,15 @@ fn main() {
         scale_power: 1.0,
     };
     for (name, ops) in &cases {
-        let good = apply_ops(&params, ops, &mut Pcg32::seeded(2), &opts).expect(name);
+        let plan = ExpansionPlan::new(&cfg, ops.clone()).expect(name);
+        let good = plan.materialize(&params, &opts, &mut Pcg32::seeded(2)).expect(name);
+        assert_eq!(good.num_scalars(), plan.params_after(), "{name}: plan param prediction");
         let d = max_logit_delta(&base, &forward(good.config(), &good, &tokens).unwrap()).unwrap();
         rep.value_row(&format!("rust-oracle  {name}"), "max_abs_delta", d as f64, vec![
             ("harness", Value::str("rust")),
             ("violated", Value::Bool(false)),
         ]);
-        let bad = apply_ops(&params, ops, &mut Pcg32::seeded(2), &violated).expect(name);
+        let bad = plan.materialize(&params, &violated, &mut Pcg32::seeded(2)).expect(name);
         let d = max_logit_delta(&base, &forward(bad.config(), &bad, &tokens).unwrap()).unwrap();
         rep.value_row(&format!("rust-oracle  {name} [VIOLATED]"), "max_abs_delta", d as f64, vec![
             ("harness", Value::str("rust")),
@@ -89,7 +91,10 @@ fn main() {
             let mut prev = rt.load_stage(&manifest, &sched_stages[0].name).unwrap();
             for stage in &schedule.stages[1..] {
                 let before = rt.forward(&prev, &params, &toks).unwrap();
-                params = apply_ops(&params, &stage.apply, &mut rng, &opts).unwrap();
+                params = ExpansionPlan::new(params.config(), stage.apply.clone())
+                    .unwrap()
+                    .materialize(&params, &opts, &mut rng)
+                    .unwrap();
                 let next = rt.load_stage(&manifest, &stage.name).unwrap();
                 let after = rt.forward(&next, &params, &toks).unwrap();
                 let d = max_logit_delta(&before, &after).unwrap();

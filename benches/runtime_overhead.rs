@@ -72,6 +72,30 @@ fn main() {
     let data = bench(2, 50, || batcher.next());
     rep.row("batch synthesis", &data, vec![]);
 
+    // plan-apply overhead: the full boundary transaction through the
+    // ExpansionPlan seam (validation + construction + params surgery +
+    // Adam moment surgery). Once per boundary, not per step — reported so
+    // the plan seam's cost stays visible next to the per-step numbers.
+    let plan_ops = vec![texpand::config::GrowthOp::Mlp { p: cfg.mlp * 2 }];
+    let plan_apply = bench(1, 5, || {
+        let plan = texpand::expand::ExpansionPlan::new(&cfg, plan_ops.clone()).unwrap();
+        let mut grown = params.clone();
+        let mut boundary_opt = Optimizer::new(&tcfg, &params);
+        plan.apply_train(
+            &mut grown,
+            &mut boundary_opt,
+            &texpand::expand::ExpandOptions::default(),
+            &mut Pcg32::seeded(9),
+        )
+        .unwrap();
+        (grown, boundary_opt)
+    });
+    rep.row(
+        "plan_apply (validate + params + adam moments, mlp x2)",
+        &plan_apply,
+        vec![("params", Value::num(params.num_scalars() as f64))],
+    );
+
     // the rust reference forward, for scale (oracle only, never hot path)
     let fwd_rust = bench(1, 3, || texpand::model::forward(&cfg, &params, &batch.tokens).unwrap());
     rep.row("rust-oracle forward (probe-only path)", &fwd_rust, vec![]);

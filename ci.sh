@@ -50,6 +50,20 @@ if [ "$FAST" = "0" ]; then
     --runs "$SMOKE_RUNS" --run-name ci-smoke --no-checkpoints \
     --log-every 100
 
+  echo "==> plan dry-run vs trained run (final param count must agree exactly)"
+  # `texpand plan` predicts the whole schedule offline as ExpansionPlans;
+  # its final param count is a plan *postcondition*, so it must match the
+  # params the trained smoke run actually ended on (StageReport.params in
+  # the last stage_done event) scalar for scalar.
+  PLAN_PARAMS="$(./target/release/texpand plan --schedule configs/growth_tiny.json \
+    | grep -E '^final params:' | grep -oE '[0-9]+')"
+  TRAIN_PARAMS="$(grep '"event":"stage_done"' "$SMOKE_RUNS/ci-smoke/events.jsonl" \
+    | tail -n 1 | grep -oE '"params":[0-9]+' | grep -oE '[0-9]+')"
+  if [ -z "$PLAN_PARAMS" ] || [ -z "$TRAIN_PARAMS" ] || [ "$PLAN_PARAMS" != "$TRAIN_PARAMS" ]; then
+    echo "ci.sh: plan dry-run final params ($PLAN_PARAMS) != trained final params ($TRAIN_PARAMS)" >&2
+    exit 1
+  fi
+
   echo "==> policy-driven grow-train smoke (plateau policy, native backend)"
   ./target/release/texpand train \
     --backend native \

@@ -11,7 +11,7 @@
 
 use texpand::config::{GrowthOp, GrowthSchedule, LayerPosition, TrainConfig};
 use texpand::data::{Batcher, CorpusKind};
-use texpand::expand::{apply_ops, ExpandOptions, Init};
+use texpand::expand::{ExpandOptions, ExpansionPlan, Init};
 use texpand::metrics::RunLogger;
 use texpand::model::{cross_entropy, forward};
 use texpand::optim::Optimizer;
@@ -68,8 +68,9 @@ fn main() -> texpand::Result<()> {
             scale_factors: false,
             scale_power: 1.0,
         };
-        let good = apply_ops(&params, ops, &mut Pcg32::seeded(11), &good_opts)?;
-        let bad = apply_ops(&params, ops, &mut Pcg32::seeded(11), &bad_opts)?;
+        let plan = ExpansionPlan::new(params.config(), ops.clone())?;
+        let good = plan.materialize(&params, &good_opts, &mut Pcg32::seeded(11))?;
+        let bad = plan.materialize(&params, &bad_opts, &mut Pcg32::seeded(11))?;
         let good_logits = forward(good.config(), &good, &probe.tokens)?;
         let bad_logits = forward(bad.config(), &bad, &probe.tokens)?;
         let good_delta = texpand::model::max_logit_delta(&base_logits, &good_logits)?;

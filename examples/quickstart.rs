@@ -8,7 +8,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use texpand::config::{GrowthOp, LayerPosition, ModelConfig};
-use texpand::expand::{apply_ops, ExpandOptions, Init};
+use texpand::expand::{ExpandOptions, ExpansionPlan, Init};
 use texpand::model::{forward, max_logit_delta};
 use texpand::params::ParamStore;
 use texpand::rng::Pcg32;
@@ -51,7 +51,11 @@ fn main() -> texpand::Result<()> {
 
     println!("\n{:<40} {:>12} {:>12} {:>10}", "transformation", "params", "max|Δ|", "preserved");
     for (name, ops) in cases {
-        let expanded = apply_ops(&params, &ops, &mut rng, &opts)?;
+        // an ExpansionPlan validates the composition and predicts the
+        // outcome before any surgery runs
+        let plan = ExpansionPlan::new(&cfg, ops)?;
+        let expanded = plan.materialize(&params, &opts, &mut rng)?;
+        assert_eq!(expanded.num_scalars(), plan.params_after(), "plan prediction is exact");
         let new_logits = forward(expanded.config(), &expanded, &tokens)?;
         let delta = max_logit_delta(&base_logits, &new_logits)?;
         println!(

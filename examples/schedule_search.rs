@@ -98,9 +98,10 @@ fn main() -> texpand::Result<()> {
     );
     let mut best: Option<&greedy::CandidateScore> = None;
     for c in &ranked {
-        let label = match &c.op {
-            None => "control (no expand)".to_string(),
-            Some(op) => format!("{op:?}"),
+        let label = if c.plan.is_identity() {
+            "control (no expand)".to_string()
+        } else {
+            format!("{:?}", c.plan.ops()[0])
         };
         println!(
             "{:<24} {:>12} {:>10.4} {:>10.4} {:>10.4} {:>14.3}",
@@ -113,16 +114,20 @@ fn main() -> texpand::Result<()> {
 
     // 3. the greedy commitment
     let winner = best.expect("at least the control candidate scores");
-    match &winner.op {
-        Some(op) => println!(
-            "\ngreedy schedule search: expand with {op:?} next (Δloss per compute = {:.3}).",
-            winner.score
-        ),
-        None => println!(
+    if winner.plan.is_identity() {
+        println!(
             "\ngreedy schedule search: keep training — no expansion pays for its compute yet \
              (control Δloss per compute = {:.3}).",
             winner.score
-        ),
+        );
+    } else {
+        println!(
+            "\ngreedy schedule search: expand with {:?} next (Δloss per compute = {:.3}; \
+             plan: {}).",
+            winner.plan.ops()[0],
+            winner.score,
+            winner.plan.summary()
+        );
     }
     println!(
         "Every candidate branched from the *same* function (branch column ≈ base eval — \n\

@@ -13,7 +13,7 @@
 //! Run: `cargo run --release --example serving_hot_swap`
 
 use texpand::config::{GrowthOp, LayerPosition, ModelConfig};
-use texpand::expand::{ExpandOptions, Init};
+use texpand::expand::{ExpandOptions, ExpansionPlan, Init};
 use texpand::generate::{generate_ref, Sampler};
 use texpand::params::ParamStore;
 use texpand::rng::Pcg32;
@@ -48,21 +48,27 @@ fn main() -> texpand::Result<()> {
     }
     println!("{} sequences in flight after 8 ticks", engine.pending());
 
-    // ...grow the live model mid-flight (Defs. 3.1 + 3.2 + 3.6 composed)
-    let ops = vec![
-        GrowthOp::Mlp { p: 128 },
-        GrowthOp::HeadsAdd { count: 1 },
-        GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top },
-    ];
+    // ...grow the live model mid-flight (Defs. 3.1 + 3.2 + 3.6 composed
+    // into one validated, inspectable ExpansionPlan)
+    let plan = ExpansionPlan::new(
+        engine.config(),
+        vec![
+            GrowthOp::Mlp { p: 128 },
+            GrowthOp::HeadsAdd { count: 1 },
+            GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top },
+        ],
+    )?;
+    println!("swap plan: {}", plan.summary());
     let opts = ExpandOptions { init: Init::Normal(0.3), ..Default::default() };
-    let report = engine.hot_swap(&ops, &mut Pcg32::seeded(9), &opts)?;
+    let report = engine.hot_swap(&plan, &mut Pcg32::seeded(9), &opts)?;
     println!(
-        "hot-swap committed: {} ops, probe max|Δ logits| = {:.3e}, params {} -> {}, \
-         {} in-flight KV caches remapped, {:.2} ms",
+        "hot-swap committed: {} ops, probe max|Δ logits| = {:.3e}, params {} -> {} \
+         (predicted {}), {} in-flight KV caches remapped, {:.2} ms",
         report.ops,
         report.probe_delta,
         report.params_before,
         report.params_after,
+        report.params_predicted,
         report.remapped_sequences,
         report.swap_ms
     );
@@ -84,7 +90,8 @@ fn main() -> texpand::Result<()> {
     // negative control: violating the zero-init constraints must be caught
     // by the probe, leaving the (already expanded) engine untouched
     let bad = ExpandOptions { init: Init::Normal(0.5), zero_constrained: false, ..Default::default() };
-    match engine.hot_swap(&[GrowthOp::Mlp { p: 256 }], &mut Pcg32::seeded(10), &bad) {
+    let bad_plan = ExpansionPlan::new(engine.config(), vec![GrowthOp::Mlp { p: 256 }])?;
+    match engine.hot_swap(&bad_plan, &mut Pcg32::seeded(10), &bad) {
         Err(e) => println!("violating swap rejected as expected: {e}"),
         Ok(_) => panic!("constraint-violating swap must not commit"),
     }

@@ -247,7 +247,7 @@ pub fn loss_and_grads(
 mod tests {
     use super::*;
     use crate::config::{GrowthOp, LayerPosition};
-    use crate::expand::{apply_ops, ExpandOptions};
+    use crate::expand::{ExpandOptions, ExpansionPlan};
     use crate::prop::Runner;
     use crate::rng::Pcg32;
 
@@ -375,13 +375,10 @@ mod tests {
             GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top },
         ];
         for op in ops {
-            let expanded = apply_ops(
-                &params,
-                std::slice::from_ref(&op),
-                &mut Pcg32::seeded(52),
-                &ExpandOptions::default(),
-            )
-            .unwrap();
+            let expanded = ExpansionPlan::new(params.config(), vec![op.clone()])
+                .unwrap()
+                .materialize(&params, &ExpandOptions::default(), &mut Pcg32::seeded(52))
+                .unwrap();
             let new_cfg = *expanded.config();
             let (loss_after, grads) = loss_and_grads(&new_cfg, &expanded, &batch).unwrap();
             assert!(loss_after.is_finite(), "{op:?}: non-finite loss");

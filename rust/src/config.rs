@@ -232,6 +232,46 @@ impl GrowthOp {
         Ok(out)
     }
 
+    /// Serialize to the schedule JSON object form — the exact inverse of
+    /// [`GrowthOp::from_json`], so plans and policy decision logs can emit
+    /// schedules that parse back losslessly (`texpand plan --json`).
+    pub fn to_json(&self) -> Value {
+        match *self {
+            GrowthOp::Mlp { p } => Value::obj(vec![
+                ("op", Value::str("mlp")),
+                ("p", Value::num(p as f64)),
+            ]),
+            GrowthOp::HeadsAdd { count } => Value::obj(vec![
+                ("op", Value::str("heads_add")),
+                ("count", Value::num(count as f64)),
+            ]),
+            GrowthOp::HeadsExpand { v } => Value::obj(vec![
+                ("op", Value::str("heads_expand")),
+                ("v", Value::num(v as f64)),
+            ]),
+            GrowthOp::AttnExpand { k } => Value::obj(vec![
+                ("op", Value::str("attn_expand")),
+                ("k", Value::num(k as f64)),
+            ]),
+            GrowthOp::Hidden { h } => Value::obj(vec![
+                ("op", Value::str("hidden")),
+                ("h", Value::num(h as f64)),
+            ]),
+            GrowthOp::LayersAdd { count, position } => {
+                let pos = match position {
+                    LayerPosition::Top => Value::str("top"),
+                    LayerPosition::Bottom => Value::str("bottom"),
+                    LayerPosition::At(p) => Value::num(p as f64),
+                };
+                Value::obj(vec![
+                    ("op", Value::str("layers_add")),
+                    ("count", Value::num(count as f64)),
+                    ("position", pos),
+                ])
+            }
+        }
+    }
+
     /// Human-readable op name (metrics, logs, bench rows).
     pub fn kind(&self) -> &'static str {
         match self {
@@ -580,6 +620,30 @@ mod tests {
             let got = GrowthOp::from_json(&Value::parse(text).unwrap()).unwrap();
             assert_eq!(got, want, "{text}");
             assert!(got.apply_to_config(&cfg()).is_ok(), "{text}");
+        }
+    }
+
+    #[test]
+    fn op_json_roundtrips_all_six_kinds() {
+        // to_json must be the exact inverse of from_json over every op
+        // kind and every layers_add position form
+        let ops = [
+            GrowthOp::Mlp { p: 64 },
+            GrowthOp::HeadsAdd { count: 3 },
+            GrowthOp::HeadsExpand { v: 16 },
+            GrowthOp::AttnExpand { k: 16 },
+            GrowthOp::Hidden { h: 32 },
+            GrowthOp::LayersAdd { count: 2, position: LayerPosition::Top },
+            GrowthOp::LayersAdd { count: 1, position: LayerPosition::Bottom },
+            GrowthOp::LayersAdd { count: 1, position: LayerPosition::At(1) },
+        ];
+        for op in ops {
+            let round = GrowthOp::from_json(&op.to_json()).unwrap();
+            assert_eq!(round, op, "{op:?} did not round-trip");
+            // and through a serialize -> parse cycle (text form)
+            let reparsed =
+                GrowthOp::from_json(&Value::parse(&op.to_json().to_string()).unwrap()).unwrap();
+            assert_eq!(reparsed, op, "{op:?} did not survive text round-trip");
         }
     }
 

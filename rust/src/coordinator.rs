@@ -4,15 +4,15 @@
 //!
 //! ```text
 //! init params (stage0 config)
-//!   └─ train segment ──▶ policy: Continue | Expand(ops) | Stop
+//!   └─ train segment ──▶ policy: Continue | Expand(plan) | Stop
 //!        │                          │            │
 //!        │◀─── keep stepping ───────┘            │
 //!        └─ boundary: surgery(params, moments) + probes ─▶ next segment
 //! ```
 //!
 //! The stage list is no longer fixed up front: a [`GrowthPolicy`] decides
-//! at every step whether to keep training, expand (and with which ops), or
-//! stop. [`Coordinator::run`] drives the default [`FixedSchedule`] policy,
+//! at every step whether to keep training, expand (carrying a validated
+//! [`ExpansionPlan`] with its predicted outcome), or stop. [`Coordinator::run`] drives the default [`FixedSchedule`] policy,
 //! which replays the schedule's stage table bit-identically to the old
 //! stage-wise loop; [`Coordinator::run_with_policy`] takes any policy
 //! (plateau-triggered staged growth, greedy branch-probe search, ...).
@@ -40,10 +40,10 @@
 //! machinery without the schedule.
 
 use crate::autodiff::ExecBackend;
-use crate::config::{GrowthOp, GrowthSchedule, ModelConfig, TrainConfig};
+use crate::config::{GrowthSchedule, ModelConfig, TrainConfig};
 use crate::data::{Batch, Batcher, CorpusKind};
 use crate::error::{Error, Result};
-use crate::expand::ExpandOptions;
+use crate::expand::{ExpandOptions, ExpansionPlan};
 use crate::growth::{FixedSchedule, GrowthPolicy};
 use crate::json::Value;
 use crate::metrics::RunLogger;
@@ -286,14 +286,14 @@ impl Coordinator {
             }
             match end {
                 SegmentEnd::Stop => break exec,
-                SegmentEnd::Expand(ops) => {
-                    if !ops.is_empty() {
+                SegmentEnd::Expand(plan) => {
+                    if !plan.is_identity() {
                         let report = self.boundary(
                             &mut params,
                             &mut opt,
                             &probe,
                             &exec,
-                            &ops,
+                            &plan,
                             &format!("stage{}", segment + 1),
                             &mut rng,
                             &mut logger,
@@ -327,7 +327,10 @@ impl Coordinator {
         })
     }
 
-    /// Apply one boundary's surgery with both preservation probes.
+    /// Apply one boundary's plan with both preservation probes. The plan
+    /// is the transaction: params and optimizer moments expand through
+    /// [`ExpansionPlan::apply_train`], which validates everything before
+    /// mutating and post-checks the predicted config and param count.
     #[allow(clippy::too_many_arguments)]
     fn boundary(
         &mut self,
@@ -335,7 +338,7 @@ impl Coordinator {
         opt: &mut Optimizer,
         probe: &Batch,
         prev_exec: &StageExec,
-        ops: &[GrowthOp],
+        plan: &ExpansionPlan,
         into_name: &str,
         rng: &mut Pcg32,
         logger: &mut RunLogger,
@@ -358,16 +361,10 @@ impl Coordinator {
             eval_loss(self.backend.as_ref(), prev_exec, params, probe)?
         };
 
-        // the surgery itself (owned path: the pre-surgery store is dead)
+        // the transaction: params + moments through the one plan seam
         let expand_opts =
             ExpandOptions { init: crate::expand::Init::Normal(self.opts.expand_init_std), ..Default::default() };
-        let dummy = crate::config::ModelConfig {
-            layers: 1, hidden: 1, heads: 1, k: 1, v: 1, mlp: 1, seq: 1, vocab: 1,
-        };
-        let old = std::mem::replace(params, ParamStore::zeros(&dummy));
-        *params = crate::expand::apply_ops_owned(old, ops, rng, &expand_opts)?;
-        opt.expand(ops)?;
-        opt.validate_against(params)?;
+        plan.apply_train(params, opt, &expand_opts, rng)?;
         let surgery_ms = timer.ms();
 
         // after-surgery probes
@@ -395,13 +392,18 @@ impl Coordinator {
             "boundary",
             vec![
                 ("into_stage", Value::str(into_name)),
-                ("ops", Value::num(ops.len() as f64)),
+                ("ops", Value::num(plan.ops().len() as f64)),
                 ("rust_delta", Value::num(f64::from(rust_delta))),
                 ("pjrt_delta", Value::num(f64::from(pjrt_delta))),
                 ("loss_before", Value::num(f64::from(loss_before))),
                 ("loss_after", Value::num(f64::from(loss_after))),
                 ("surgery_ms", Value::num(surgery_ms)),
                 ("params_after", Value::num(params.num_scalars() as f64)),
+                // plan predictions next to the measured outcome — the
+                // param prediction is exact (asserted by apply_train), the
+                // FLOPs prediction is the cost-model estimate
+                ("params_predicted", Value::num(plan.params_after() as f64)),
+                ("flops_delta_est", Value::num(plan.flops_delta())),
             ],
         );
         if self.opts.verify_boundaries {
@@ -418,7 +420,7 @@ impl Coordinator {
         }
         Ok(BoundaryReport {
             into_stage: into_name.to_string(),
-            ops: ops.len(),
+            ops: plan.ops().len(),
             rust_delta,
             pjrt_delta,
             loss_before,
@@ -445,8 +447,8 @@ impl Coordinator {
         let mut rng = Pcg32::seeded(self.tcfg.seed ^ 0xB4A2C4);
         let expand_opts =
             ExpandOptions { init: crate::expand::Init::Normal(self.opts.expand_init_std), ..Default::default() };
-        let mut params =
-            if ops.is_empty() { base.clone() } else { crate::expand::apply_ops(base, ops, &mut rng, &expand_opts)? };
+        let plan = ExpansionPlan::new(base.config(), ops.to_vec())?;
+        let mut params = plan.materialize(base, &expand_opts, &mut rng)?;
         let exec = self.backend.load_stage(&self.manifest, stage_name)?;
         if params.config() != &exec.meta.config {
             return Err(Error::Config(format!(

@@ -19,9 +19,21 @@
 //!   factors (Eq. 19 `sqrt(k_hat/k)` on W^K, Eq. 24 `sqrt(h/h_hat)` on the
 //!   RMSNorm gains; E6/E7 ablations).
 //!
-//! Optimizer-moment surgery lives in [`crate::optim`]: moments follow the
-//! *same* geometric surgery with all-zero new slices (a freshly added
-//! parameter has no gradient history).
+//! Optimizer-moment surgery follows the *same* geometric surgery with
+//! all-zero new slices (a freshly added parameter has no gradient
+//! history); it is dispatched through the plan API like everything else.
+//!
+//! ## Entry point
+//!
+//! The surgery cores in this module are **crate-internal mechanism**. The
+//! one public way to expand anything — parameters, optimizer moments,
+//! live KV caches — is an [`ExpansionPlan`] ([`plan`]): validate the op
+//! composition up front, inspect the predicted deltas, then
+//! [`Expandable::apply_plan`] transactionally.
+
+pub mod plan;
+
+pub use plan::{ApplyOutcome, ConstraintNote, Expandable, ExpansionPlan, StagedKv};
 
 use std::collections::HashMap;
 
@@ -368,9 +380,13 @@ fn apply_op_map(
 }
 
 // ---------------------------------------------------------------------------
-// Public per-transformation API (paper Defs. 3.1-3.6)
+// Per-transformation API (paper Defs. 3.1-3.6) — test-only wrappers over
+// the map cores, kept for the per-theorem unit suites below. Production
+// paths (and everything outside this subsystem) compose ops through an
+// [`ExpansionPlan`] instead, which drives `apply_ops_owned`.
 // ---------------------------------------------------------------------------
 
+#[cfg(test)]
 macro_rules! single_op {
     ($store:expr, $rng:expr, $opts:expr, $core:expr) => {{
         let cfg = *$store.config();
@@ -385,7 +401,8 @@ macro_rules! single_op {
 /// Surgery per layer: `W1 [h,p] -> [h,p̂]` (new columns unconstrained,
 /// Eq. 6), `b1 [p] -> [p̂]` (unconstrained, Eq. 7), `W2 [p,h] -> [p̂,h]`
 /// (new rows **zero**, Thm 3.1 / Eq. 9).
-pub fn expand_mlp(
+#[cfg(test)]
+pub(crate) fn expand_mlp(
     store: &ParamStore,
     new_p: usize,
     rng: &mut Pcg32,
@@ -400,7 +417,8 @@ pub fn expand_mlp(
 ///
 /// Per new head: fresh `W^Q/W^K/W^V` (unconstrained) and `v` **zero** rows
 /// appended to `W^O` (Thm 3.2 / Eq. 12).
-pub fn add_heads(
+#[cfg(test)]
+pub(crate) fn add_heads(
     store: &ParamStore,
     count: usize,
     rng: &mut Pcg32,
@@ -416,7 +434,8 @@ pub fn add_heads(
 /// `W^V` gains unconstrained columns (Eq. 13); `W^O`, viewed as `E` stacked
 /// `(v, h)` splits (Eq. 15), gains `(new_v - v)` **zero** rows inside each
 /// split (Thm 3.3 / Eq. 16) — an interleaved insertion, not an append.
-pub fn expand_heads(
+#[cfg(test)]
+pub(crate) fn expand_heads(
     store: &ParamStore,
     new_v: usize,
     rng: &mut Pcg32,
@@ -432,7 +451,8 @@ pub fn expand_heads(
 /// `W^Q` gains unconstrained columns (Eq. 18). `W^K`'s pre-existing columns
 /// are scaled by `sqrt(new_k)/sqrt(k)` (Eq. 19) — compensating attention's
 /// `1/sqrt(k)` — and its new columns are **zero** (Thm 3.4 / Eq. 20).
-pub fn expand_attention(
+#[cfg(test)]
+pub(crate) fn expand_attention(
     store: &ParamStore,
     new_k: usize,
     rng: &mut Pcg32,
@@ -452,7 +472,8 @@ pub fn expand_attention(
 /// (Eq. 24); new gain entries are zeroed (conservative — they multiply
 /// zero activations either way; must match `transforms.py`). Everything
 /// else (`W^out` rows, `W1` rows, `W^{Q,K,V}` rows) is unconstrained.
-pub fn expand_hidden(
+#[cfg(test)]
+pub(crate) fn expand_hidden(
     store: &ParamStore,
     new_h: usize,
     rng: &mut Pcg32,
@@ -468,7 +489,8 @@ pub fn expand_hidden(
 /// The new layers' `W^O`, `W2` and `b2` are **zero** (Thm 3.6), making each
 /// inserted block compute `I_n + 0`; norm gains start at 1 and `W^{Q,K,V}`,
 /// `W1`, `b1` are unconstrained. Downstream layer indices shift up.
-pub fn add_layers(
+#[cfg(test)]
+pub(crate) fn add_layers(
     store: &ParamStore,
     count: usize,
     position: LayerPosition,
@@ -484,21 +506,14 @@ pub fn add_layers(
 // Op dispatch / composition
 // ---------------------------------------------------------------------------
 
-/// Apply one schedule op to the store.
-pub fn apply_op(
-    store: &ParamStore,
-    op: &GrowthOp,
-    rng: &mut Pcg32,
-    opts: &ExpandOptions,
-) -> Result<ParamStore> {
-    apply_ops(store, std::slice::from_ref(op), rng, opts)
-}
-
 /// Apply a composed op sequence (Section 3: the transformations compose).
 ///
 /// The whole sequence shares one owned tensor map: one full-store copy in,
 /// one canonical rebuild out, untouched tensors never copied in between.
-pub fn apply_ops(
+/// Test-only convenience; non-test callers go through `ExpansionPlan`,
+/// whose apply uses the owned variant below.
+#[cfg(test)]
+pub(crate) fn apply_ops(
     store: &ParamStore,
     ops: &[GrowthOp],
     rng: &mut Pcg32,
@@ -509,10 +524,10 @@ pub fn apply_ops(
     apply_ops_map(cfg, map, ops, rng, opts)
 }
 
-/// Owned variant of [`apply_ops`]: consumes the store, so even the initial
-/// full-store copy is avoided — the coordinator's boundary path uses this
-/// (the pre-surgery store is dead after the boundary anyway).
-pub fn apply_ops_owned(
+/// Owned variant of the composed-sequence surgery: consumes the store, so
+/// even the initial full-store copy is avoided — `ExpansionPlan` applies
+/// drive this (the pre-surgery store is dead after a boundary anyway).
+pub(crate) fn apply_ops_owned(
     store: ParamStore,
     ops: &[GrowthOp],
     rng: &mut Pcg32,

@@ -1,0 +1,785 @@
+//! `ExpansionPlan` (S18) — the one transactional expansion entry point.
+//!
+//! The paper's six ops *compose* (Section 3), but composition used to live
+//! in three separate per-op `match` ladders: `expand::apply_ops` for
+//! parameters, `Optimizer::expand` for Adam moments, and the serve-side
+//! KV remap — each re-validating (or not) the same op sequence. This
+//! module reifies an op sequence into a first-class, inspectable **plan**,
+//! in the spirit of LEMON's "expansion as a mapping object":
+//!
+//! * [`ExpansionPlan::new`] validates the whole composition against the
+//!   *intermediate* config after each op, before anything mutates — an
+//!   invalid third op is rejected while params, moments and caches are all
+//!   still untouched;
+//! * the plan carries the predicted post-plan [`ModelConfig`], the
+//!   **exact** parameter-count delta, an **estimated** FLOPs delta, and
+//!   the zero-init preservation constraints of Thms. 3.1–3.6 as
+//!   inspectable metadata ([`ConstraintNote`]);
+//! * [`Expandable::apply_plan`] is the single dispatch seam: `ParamStore`
+//!   (surgery), [`Optimizer`] (moment surgery) and [`StagedKv`] (in-flight
+//!   KV cache remap) all consume the same plan object;
+//! * applies are **transactional**: validation happens before mutation,
+//!   and each apply post-checks that it landed exactly on the plan's
+//!   predicted config and parameter count. [`ExpansionPlan::apply_probed`]
+//!   additionally gates on a preservation probe with copy-on-apply
+//!   semantics — the caller's store is untouched unless the probe passes —
+//!   which is what the serve hot-swap runs under live traffic.
+//!
+//! ## Why the param delta is exact but the FLOPs delta is an estimate
+//!
+//! The post-plan parameter count is pure shape arithmetic
+//! ([`ModelConfig::num_params`]) over the validated config trajectory —
+//! every apply asserts it to the scalar. Forward FLOPs depend on context
+//! length, kernel blocking and cache behaviour; [`est_fwd_flops_per_token`]
+//! counts matmul multiply-accumulates at full-`seq` attention context plus
+//! leading-order vector work, which is the right *ranking* currency for
+//! growth policies but not a wall-clock promise. DESIGN.md §13.
+
+use crate::config::{GrowthOp, ModelConfig};
+use crate::error::{Error, Result};
+use crate::expand::{apply_ops_owned, ExpandOptions};
+use crate::json::Value;
+use crate::metrics::Timer;
+use crate::model;
+use crate::optim::Optimizer;
+use crate::params::ParamStore;
+use crate::rng::Pcg32;
+use crate::serve::kv::KvCache;
+
+/// Estimated forward FLOPs per token for one architecture, at full-`seq`
+/// attention context (a multiply-accumulate counts as 2 FLOPs). Matmuls
+/// are exact at that context length; norms/softmax/residuals are counted
+/// at leading order. This is a cost *model* — see the module docs for why
+/// plans treat it as an estimate while the param delta is exact.
+pub fn est_fwd_flops_per_token(cfg: &ModelConfig) -> f64 {
+    let h = cfg.hidden as f64;
+    let k = cfg.k as f64;
+    let v = cfg.v as f64;
+    let e = cfg.heads as f64;
+    let p = cfg.mlp as f64;
+    let s = cfg.seq as f64;
+    let o = cfg.vocab as f64;
+    let per_layer = 2.0 * h * e * (2.0 * k + v)   // W^Q / W^K / W^V projections
+        + 2.0 * e * s * (k + v)                   // q·K^T scores + probs·V
+        + 2.0 * e * v * h                         // W^O
+        + 4.0 * h * p                             // W1 + W2
+        + 8.0 * h + 5.0 * e * s + p; // rmsnorms, residual adds, softmax, relu
+    cfg.layers as f64 * per_layer + 2.0 * h * o + h // unembed + pos add
+}
+
+/// The zero-init / scaling constraints one op's preservation theorem
+/// imposes, as inspectable plan metadata (what the surgery will pin to
+/// zero, and which kept slices it will rescale).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConstraintNote {
+    /// Index of the op this note describes, in plan order.
+    pub op_index: usize,
+    /// `GrowthOp::kind()` of that op.
+    pub op_kind: &'static str,
+    /// Parameter families whose **new** slices the theorem pins to zero.
+    pub zero_init: Vec<&'static str>,
+    /// Reparametrization factor applied to **kept** slices, if the op has
+    /// one (Eq. 19 / Eq. 24).
+    pub scaling: Option<String>,
+}
+
+fn constraint_note(op_index: usize, op: &GrowthOp, before: &ModelConfig) -> ConstraintNote {
+    let (zero_init, scaling) = match *op {
+        GrowthOp::Mlp { .. } => (vec!["w2 new rows (Thm 3.1, Eq. 9)"], None),
+        GrowthOp::HeadsAdd { .. } => (vec!["wo rows of new heads (Thm 3.2, Eq. 12)"], None),
+        GrowthOp::HeadsExpand { .. } => {
+            (vec!["wo inserted rows inside each head split (Thm 3.3, Eq. 16)"], None)
+        }
+        GrowthOp::AttnExpand { k } => (
+            vec!["wk new cols (Thm 3.4, Eq. 20)"],
+            Some(format!("wk kept cols *= sqrt({k}/{}) (Eq. 19)", before.k)),
+        ),
+        GrowthOp::Hidden { h } => (
+            vec![
+                "embed new cols (Thm 3.5, Eq. 37)",
+                "pos new cols (Eq. 33)",
+                "wo new cols (Eq. 36)",
+                "w2 new cols (Eq. 34)",
+                "b2 new entries (Eq. 35)",
+            ],
+            Some(format!("norm gains *= sqrt({}/{h}) (Eq. 24)", before.hidden)),
+        ),
+        GrowthOp::LayersAdd { .. } => {
+            (vec!["inserted layers' wo, w2, b2 (Thm 3.6: each new block computes I + 0)"], None)
+        }
+    };
+    ConstraintNote { op_index, op_kind: op.kind(), zero_init, scaling }
+}
+
+/// A validated, inspectable expansion: op sequence + predicted outcome.
+/// See the module docs. Construction is the validation point; apply is
+/// transactional against the prediction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExpansionPlan {
+    from: ModelConfig,
+    ops: Vec<GrowthOp>,
+    /// Config after each op (same length as `ops`; empty for an identity
+    /// plan). The last entry — or `from` — is the predicted target.
+    trajectory: Vec<ModelConfig>,
+    params_before: usize,
+    params_after: usize,
+    flops_before: f64,
+    flops_after: f64,
+    constraints: Vec<ConstraintNote>,
+}
+
+impl ExpansionPlan {
+    /// Validate `ops` as a composition starting from `from`: each op is
+    /// checked against the *intermediate* config produced by its
+    /// predecessors, so e.g. a `LayersAdd` at a position only valid after
+    /// an earlier `LayersAdd` is accepted, and a shrink anywhere in the
+    /// chain is rejected before anything mutates.
+    pub fn new(from: &ModelConfig, ops: Vec<GrowthOp>) -> Result<ExpansionPlan> {
+        from.validate()?;
+        let mut trajectory = Vec::with_capacity(ops.len());
+        let mut constraints = Vec::with_capacity(ops.len());
+        let mut cfg = *from;
+        for (i, op) in ops.iter().enumerate() {
+            constraints.push(constraint_note(i, op, &cfg));
+            cfg = op.apply_to_config(&cfg).map_err(|e| {
+                Error::Expand(format!("plan op {i} ({}) invalid: {e}", op.kind()))
+            })?;
+            trajectory.push(cfg);
+        }
+        Ok(ExpansionPlan {
+            from: *from,
+            params_before: from.num_params(),
+            params_after: cfg.num_params(),
+            flops_before: est_fwd_flops_per_token(from),
+            flops_after: est_fwd_flops_per_token(&cfg),
+            ops,
+            trajectory,
+            constraints,
+        })
+    }
+
+    /// The no-op plan: keep the architecture as is. Used by policies to
+    /// split segments without surgery and as the greedy control branch.
+    pub fn identity(cfg: &ModelConfig) -> ExpansionPlan {
+        ExpansionPlan::new(cfg, Vec::new()).expect("identity plan over a valid config")
+    }
+
+    pub fn ops(&self) -> &[GrowthOp] {
+        &self.ops
+    }
+
+    pub fn from_config(&self) -> &ModelConfig {
+        &self.from
+    }
+
+    /// The predicted post-plan architecture (exact: applies post-check it).
+    pub fn target_config(&self) -> &ModelConfig {
+        self.trajectory.last().unwrap_or(&self.from)
+    }
+
+    /// Config after each op, in plan order (empty for an identity plan).
+    pub fn trajectory(&self) -> &[ModelConfig] {
+        &self.trajectory
+    }
+
+    pub fn params_before(&self) -> usize {
+        self.params_before
+    }
+
+    pub fn params_after(&self) -> usize {
+        self.params_after
+    }
+
+    /// Exact scalar-parameter growth (ops only ever grow, so this is the
+    /// full delta).
+    pub fn param_delta(&self) -> usize {
+        self.params_after - self.params_before
+    }
+
+    pub fn flops_before(&self) -> f64 {
+        self.flops_before
+    }
+
+    pub fn flops_after(&self) -> f64 {
+        self.flops_after
+    }
+
+    /// Estimated per-token forward-FLOPs growth.
+    pub fn flops_delta(&self) -> f64 {
+        self.flops_after - self.flops_before
+    }
+
+    /// Estimated training FLOPs for `tokens` tokens on the post-plan
+    /// architecture (forward + backward ≈ 3× forward — the 6ND-style
+    /// accounting the policies' compute matching uses).
+    pub fn est_train_flops(&self, tokens: f64) -> f64 {
+        3.0 * self.flops_after * tokens
+    }
+
+    /// The preservation constraints each op's theorem imposes, in order.
+    pub fn constraints(&self) -> &[ConstraintNote] {
+        &self.constraints
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Check a live object's config is the one this plan was built from —
+    /// every apply calls this before touching anything.
+    pub fn validate_source(&self, cfg: &ModelConfig) -> Result<()> {
+        if cfg != &self.from {
+            return Err(Error::Expand(format!(
+                "plan was built from {:?} but is being applied to {:?}",
+                self.from, cfg
+            )));
+        }
+        Ok(())
+    }
+
+    /// One-line human summary (CLI tables, log lines).
+    pub fn summary(&self) -> String {
+        if self.is_identity() {
+            return format!("identity ({} params)", self.params_before);
+        }
+        let ops: Vec<String> = self.ops.iter().map(|o| o.kind().to_string()).collect();
+        format!(
+            "{}: {} -> {} params (+{}), ~{:.2}x fwd FLOPs",
+            ops.join("+"),
+            self.params_before,
+            self.params_after,
+            self.param_delta(),
+            self.flops_after / self.flops_before
+        )
+    }
+
+    /// Full metadata as JSON — what decision logs and `texpand plan` emit.
+    /// `ops` round-trip through [`GrowthOp::from_json`].
+    pub fn to_json(&self) -> Value {
+        let constraints = self
+            .constraints
+            .iter()
+            .map(|c| {
+                Value::obj(vec![
+                    ("op_index", Value::num(c.op_index as f64)),
+                    ("op", Value::str(c.op_kind)),
+                    (
+                        "zero_init",
+                        Value::Arr(c.zero_init.iter().map(|z| Value::str(*z)).collect()),
+                    ),
+                    (
+                        "scaling",
+                        match &c.scaling {
+                            Some(s) => Value::str(s.clone()),
+                            None => Value::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("from", self.from.to_json()),
+            ("to", self.target_config().to_json()),
+            ("ops", Value::Arr(self.ops.iter().map(|o| o.to_json()).collect())),
+            ("params_before", Value::num(self.params_before as f64)),
+            ("params_after", Value::num(self.params_after as f64)),
+            ("param_delta", Value::num(self.param_delta() as f64)),
+            ("fwd_flops_per_tok_before", Value::num(self.flops_before)),
+            ("fwd_flops_per_tok_after", Value::num(self.flops_after)),
+            ("constraints", Value::Arr(constraints)),
+        ])
+    }
+
+    /// Apply to a borrowed store, returning the expanded copy (the
+    /// read-only entry for probes, branches, benches and examples).
+    pub fn materialize(
+        &self,
+        store: &ParamStore,
+        opts: &ExpandOptions,
+        rng: &mut Pcg32,
+    ) -> Result<ParamStore> {
+        let mut out = store.clone();
+        out.apply_plan(self, opts, rng)?;
+        Ok(out)
+    }
+
+    /// The train-side boundary: expand parameters **and** optimizer
+    /// moments as one transaction. All validation (source config,
+    /// moment/param layout agreement) runs before either mutates, and the
+    /// moment layout is re-validated against the grown params after.
+    pub fn apply_train(
+        &self,
+        params: &mut ParamStore,
+        opt: &mut Optimizer,
+        opts: &ExpandOptions,
+        rng: &mut Pcg32,
+    ) -> Result<()> {
+        self.validate_source(params.config())?;
+        opt.validate_against(params)?;
+        if self.is_identity() {
+            return Ok(());
+        }
+        params.apply_plan(self, opts, rng)?;
+        opt.apply_plan(self, opts, rng)?;
+        opt.validate_against(params)
+    }
+
+    /// Probe-gated copy-on-apply (the serve hot-swap gate, now built into
+    /// the plan API): surgery on a *copy* of `params`, then a preservation
+    /// probe — pure-Rust oracle forward on `probe` rows before vs after;
+    /// `max|Δ logits| > tol` rejects the plan with the caller's store
+    /// untouched. On success the staged store is returned for the caller
+    /// to commit atomically.
+    pub fn apply_probed(
+        &self,
+        params: &ParamStore,
+        opts: &ExpandOptions,
+        rng: &mut Pcg32,
+        probe: &[Vec<u32>],
+        tol: f32,
+    ) -> Result<ApplyOutcome> {
+        self.validate_source(params.config())?;
+        let timer = Timer::start();
+        let before = model::forward(params.config(), params, probe)?;
+        let staged = self.materialize(params, opts, rng)?;
+        let after = model::forward(staged.config(), &staged, probe)?;
+        let probe_delta = model::max_logit_delta(&before, &after)?;
+        if probe_delta > tol {
+            return Err(Error::Expand(format!(
+                "plan rejected: probe max|Δ logits| = {probe_delta:.3e} > tol {tol:.0e}; \
+                 source params unchanged"
+            )));
+        }
+        Ok(ApplyOutcome { params: staged, probe_delta, surgery_ms: timer.ms() })
+    }
+}
+
+/// Result of [`ExpansionPlan::apply_probed`]: the staged expanded store
+/// plus the probe evidence, for the caller to commit.
+#[derive(Clone, Debug)]
+pub struct ApplyOutcome {
+    pub params: ParamStore,
+    /// `max|Δ logits|` on the probe batch (≤ the tolerance by construction).
+    pub probe_delta: f32,
+    /// Wall time of surgery + both probe forwards.
+    pub surgery_ms: f64,
+}
+
+/// The single expansion dispatch seam: anything that must ride through an
+/// architecture change implements this against the *same* plan object, so
+/// validation, predicted-outcome checks and preservation semantics cannot
+/// drift between parameters, optimizer state and serving state.
+pub trait Expandable {
+    /// Transform `self` across the plan's boundary. Implementations
+    /// validate before mutating and post-check the plan's predictions.
+    fn apply_plan(
+        &mut self,
+        plan: &ExpansionPlan,
+        opts: &ExpandOptions,
+        rng: &mut Pcg32,
+    ) -> Result<()>;
+}
+
+/// Shape-only placeholder config for `mem::replace` during owned surgery.
+fn dummy_cfg() -> ModelConfig {
+    ModelConfig { layers: 1, hidden: 1, heads: 1, k: 1, v: 1, mlp: 1, seq: 1, vocab: 1 }
+}
+
+impl Expandable for ParamStore {
+    /// Parameter surgery (Defs. 3.1–3.6), on the owned fast path: one map
+    /// move in, one canonical rebuild out. All op-composition validation
+    /// already ran at plan construction, so the only pre-mutation check
+    /// needed is the source config; the post-conditions assert the store
+    /// landed exactly on the plan's predicted config and param count.
+    fn apply_plan(
+        &mut self,
+        plan: &ExpansionPlan,
+        opts: &ExpandOptions,
+        rng: &mut Pcg32,
+    ) -> Result<()> {
+        plan.validate_source(self.config())?;
+        if plan.is_identity() {
+            return Ok(());
+        }
+        let old = std::mem::replace(self, ParamStore::zeros(&dummy_cfg()));
+        *self = apply_ops_owned(old, plan.ops(), rng, opts)?;
+        if self.config() != plan.target_config() {
+            return Err(Error::Expand(format!(
+                "plan postcondition violated: surgery produced {:?}, plan predicted {:?}",
+                self.config(),
+                plan.target_config()
+            )));
+        }
+        if self.num_scalars() != plan.params_after() {
+            return Err(Error::Expand(format!(
+                "plan postcondition violated: {} scalars after surgery, plan predicted {}",
+                self.num_scalars(),
+                plan.params_after()
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Expandable for Optimizer {
+    /// Adam moment surgery: the same geometric surgery as the parameters
+    /// with all-new slices zero (fresh capacity has no gradient history),
+    /// and the paper's two reparametrizations inverted — a param scaled by
+    /// `c` has gradients scaled by `1/c`, so the first moment rescales by
+    /// `c^-1` and the second by `c^-2` (`ExpandOptions::for_moments`).
+    /// SGD is stateless: identity.
+    fn apply_plan(
+        &mut self,
+        plan: &ExpansionPlan,
+        _opts: &ExpandOptions,
+        _rng: &mut Pcg32,
+    ) -> Result<()> {
+        match self {
+            Optimizer::Sgd { .. } => Ok(()),
+            Optimizer::Adam { m, v, .. } => {
+                plan.validate_source(m.config())?;
+                if plan.is_identity() {
+                    return Ok(());
+                }
+                // surgery is deterministic under Init::Zeros; rng is unused entropy
+                let mut rng = Pcg32::seeded(0);
+                let old_m = std::mem::replace(m, ParamStore::zeros(&dummy_cfg()));
+                *m = apply_ops_owned(old_m, plan.ops(), &mut rng, &ExpandOptions::for_moments(-1.0))?;
+                let old_v = std::mem::replace(v, ParamStore::zeros(&dummy_cfg()));
+                *v = apply_ops_owned(old_v, plan.ops(), &mut rng, &ExpandOptions::for_moments(-2.0))?;
+                if m.config() != plan.target_config() || v.config() != plan.target_config() {
+                    return Err(Error::Expand(
+                        "plan postcondition violated: moment configs diverged from plan target"
+                            .into(),
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// An in-flight KV cache staged through a hot-swap: a clone of the live
+/// cache paired with the post-surgery parameters its K/V rows are rebuilt
+/// from. The serve-side [`Expandable`] target — the engine stages one per
+/// slot, applies the plan to each, and commits all-or-nothing.
+pub struct StagedKv<'p> {
+    pub cache: KvCache,
+    pub new_params: &'p ParamStore,
+}
+
+impl Expandable for StagedKv<'_> {
+    /// Remap the cache through the plan's ops (structural residual-stream
+    /// remap + K/V rebuild from the new weights — DESIGN.md §9.3). The new
+    /// params must be the plan's target; the remap itself re-checks the op
+    /// trajectory against them.
+    fn apply_plan(
+        &mut self,
+        plan: &ExpansionPlan,
+        _opts: &ExpandOptions,
+        _rng: &mut Pcg32,
+    ) -> Result<()> {
+        plan.validate_source(self.cache.config())?;
+        if plan.is_identity() {
+            return Ok(());
+        }
+        self.cache.remap(plan.ops(), self.new_params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LayerPosition, OptimKind, TrainConfig};
+    use crate::expand::{candidate_ops, Init};
+    use crate::prop::Runner;
+
+    const PRESERVE_TOL: f32 = 1e-4; // DESIGN.md §8
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { layers: 2, hidden: 16, heads: 2, k: 8, v: 8, mlp: 32, seq: 16, vocab: 32 }
+    }
+
+    fn all_six() -> Vec<GrowthOp> {
+        vec![
+            GrowthOp::Mlp { p: 64 },
+            GrowthOp::HeadsAdd { count: 1 },
+            GrowthOp::HeadsExpand { v: 16 },
+            GrowthOp::AttnExpand { k: 16 },
+            GrowthOp::Hidden { h: 32 },
+            GrowthOp::LayersAdd { count: 2, position: LayerPosition::Top },
+        ]
+    }
+
+    fn big() -> ExpandOptions {
+        ExpandOptions { init: Init::Normal(0.5), ..Default::default() }
+    }
+
+    // ---- construction & metadata ---------------------------------------
+
+    #[test]
+    fn plan_predicts_config_params_and_flops() {
+        let c = cfg();
+        let plan = ExpansionPlan::new(&c, all_six()).unwrap();
+        assert_eq!(plan.ops().len(), 6);
+        assert_eq!(plan.from_config(), &c);
+        let t = plan.target_config();
+        assert_eq!((t.mlp, t.heads, t.v, t.k, t.hidden, t.layers), (64, 3, 16, 16, 32, 4));
+        assert_eq!(plan.params_before(), c.num_params());
+        assert_eq!(plan.params_after(), t.num_params());
+        assert_eq!(plan.param_delta(), t.num_params() - c.num_params());
+        assert!(plan.flops_after() > plan.flops_before());
+        assert!(plan.flops_delta() > 0.0);
+        assert!(plan.est_train_flops(1000.0) > plan.flops_after() * 1000.0);
+        // trajectory: one intermediate per op, monotone param growth
+        assert_eq!(plan.trajectory().len(), 6);
+        let mut prev = c.num_params();
+        for step in plan.trajectory() {
+            assert!(step.num_params() > prev);
+            prev = step.num_params();
+        }
+    }
+
+    #[test]
+    fn plan_validates_against_intermediate_configs() {
+        let c = cfg();
+        // LayersAdd At(3) is invalid against the base (2 layers) but valid
+        // after an earlier LayersAdd — intermediate validation must accept
+        let ok = ExpansionPlan::new(
+            &c,
+            vec![
+                GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top },
+                GrowthOp::LayersAdd { count: 1, position: LayerPosition::At(3) },
+            ],
+        );
+        assert!(ok.is_ok());
+        // and reject it when no prior op makes room
+        let err = ExpansionPlan::new(
+            &c,
+            vec![GrowthOp::LayersAdd { count: 1, position: LayerPosition::At(3) }],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("plan op 0"), "{err}");
+        // a shrink *later* in the chain is caught before anything mutates:
+        // mlp 32 -> 64 -> "64" is not strict growth
+        let err = ExpansionPlan::new(
+            &c,
+            vec![GrowthOp::Mlp { p: 64 }, GrowthOp::Mlp { p: 64 }],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("plan op 1"), "{err}");
+    }
+
+    #[test]
+    fn constraint_metadata_tracks_intermediate_dims() {
+        let c = cfg();
+        let plan = ExpansionPlan::new(
+            &c,
+            vec![GrowthOp::AttnExpand { k: 16 }, GrowthOp::Hidden { h: 32 }],
+        )
+        .unwrap();
+        let notes = plan.constraints();
+        assert_eq!(notes.len(), 2);
+        assert_eq!(notes[0].op_kind, "attn_expand");
+        assert!(notes[0].scaling.as_deref().unwrap().contains("sqrt(16/8)"));
+        assert!(!notes[0].zero_init.is_empty());
+        assert_eq!(notes[1].op_kind, "hidden");
+        // the hidden op's note is computed against the *intermediate*
+        // config (hidden still 16 after attn_expand)
+        assert!(notes[1].scaling.as_deref().unwrap().contains("sqrt(16/32)"));
+        assert_eq!(notes[1].zero_init.len(), 5);
+    }
+
+    #[test]
+    fn identity_plan_is_inert() {
+        let c = cfg();
+        let plan = ExpansionPlan::identity(&c);
+        assert!(plan.is_identity());
+        assert_eq!(plan.target_config(), &c);
+        assert_eq!(plan.param_delta(), 0);
+        let mut params = ParamStore::init(&c, &mut Pcg32::seeded(1), 0.05);
+        let before = params.clone();
+        let mut opt = Optimizer::new(&TrainConfig::default(), &params);
+        plan.apply_train(&mut params, &mut opt, &big(), &mut Pcg32::seeded(2)).unwrap();
+        assert_eq!(params, before, "identity apply must not touch the store");
+        assert!(plan.summary().contains("identity"));
+    }
+
+    #[test]
+    fn plan_json_carries_roundtrippable_ops() {
+        let plan = ExpansionPlan::new(&cfg(), all_six()).unwrap();
+        let j = plan.to_json();
+        assert_eq!(
+            j.req("param_delta").unwrap().as_i64().unwrap() as usize,
+            plan.param_delta()
+        );
+        let ops_json = j.req("ops").unwrap().as_arr().unwrap();
+        assert_eq!(ops_json.len(), 6);
+        for (v, op) in ops_json.iter().zip(plan.ops()) {
+            assert_eq!(&GrowthOp::from_json(v).unwrap(), op);
+        }
+        assert_eq!(
+            ModelConfig::from_json(j.req("to").unwrap()).unwrap(),
+            *plan.target_config()
+        );
+        assert_eq!(j.req("constraints").unwrap().as_arr().unwrap().len(), 6);
+    }
+
+    // ---- apply seam ------------------------------------------------------
+
+    #[test]
+    fn apply_plan_rejects_wrong_source_without_mutating() {
+        let c = cfg();
+        let other = ModelConfig { mlp: 48, ..c };
+        let plan = ExpansionPlan::new(&other, vec![GrowthOp::Mlp { p: 96 }]).unwrap();
+        let mut params = ParamStore::init(&c, &mut Pcg32::seeded(3), 0.05);
+        let before = params.clone();
+        let err =
+            params.apply_plan(&plan, &big(), &mut Pcg32::seeded(4)).unwrap_err().to_string();
+        assert!(err.contains("built from"), "{err}");
+        assert_eq!(params, before, "failed validation must leave the store untouched");
+    }
+
+    #[test]
+    fn apply_train_expands_params_and_moments_together() {
+        let c = cfg();
+        let tcfg = TrainConfig { optimizer: OptimKind::Adam, ..Default::default() };
+        let mut params = ParamStore::init(&c, &mut Pcg32::seeded(5), 0.05);
+        let mut opt = Optimizer::new(&tcfg, &params);
+        // give the moments some history
+        let grads: Vec<_> = params.tensors().to_vec();
+        opt.step(&mut params, &grads).unwrap();
+        let plan = ExpansionPlan::new(&c, all_six()).unwrap();
+        plan.apply_train(&mut params, &mut opt, &big(), &mut Pcg32::seeded(6)).unwrap();
+        assert_eq!(params.config(), plan.target_config());
+        assert_eq!(params.num_scalars(), plan.params_after());
+        opt.validate_against(&params).unwrap();
+        // and stepping still works post-surgery
+        let grads: Vec<_> = params.tensors().to_vec();
+        opt.step(&mut params, &grads).unwrap();
+    }
+
+    #[test]
+    fn apply_probed_gates_on_preservation_and_stages_a_copy() {
+        let c = cfg();
+        let mut rng = Pcg32::seeded(7);
+        let params = ParamStore::init(&c, &mut rng, 0.05);
+        let probe: Vec<Vec<u32>> =
+            (0..2).map(|_| (0..c.seq).map(|_| rng.below(c.vocab) as u32).collect()).collect();
+        let plan = ExpansionPlan::new(&c, vec![GrowthOp::Mlp { p: 64 }]).unwrap();
+
+        // theorem-respecting surgery passes, source untouched
+        let out = plan.apply_probed(&params, &big(), &mut Pcg32::seeded(8), &probe, 1e-4).unwrap();
+        assert!(out.probe_delta <= 1e-4);
+        assert_eq!(out.params.config(), plan.target_config());
+        assert_eq!(params.config(), &c, "apply_probed must stage, not mutate");
+        assert!(out.surgery_ms >= 0.0);
+
+        // constraint-violating surgery is rejected by the built-in probe
+        let violate =
+            ExpandOptions { init: Init::Normal(0.5), zero_constrained: false, ..Default::default() };
+        let err = plan
+            .apply_probed(&params, &violate, &mut Pcg32::seeded(8), &probe, 1e-4)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rejected"), "{err}");
+        assert_eq!(params.config(), &c);
+    }
+
+    #[test]
+    fn staged_kv_rides_a_plan() {
+        let c = cfg();
+        let mut rng = Pcg32::seeded(9);
+        let params = ParamStore::init(&c, &mut rng, 0.05);
+        let mut cache = KvCache::new(&c);
+        for t in [1u32, 2, 3] {
+            model::forward_incremental(&c, &params, &mut cache, t).unwrap();
+        }
+        let plan = ExpansionPlan::new(
+            &c,
+            vec![GrowthOp::Hidden { h: 24 }, GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top }],
+        )
+        .unwrap();
+        let new_params = plan.materialize(&params, &big(), &mut Pcg32::seeded(10)).unwrap();
+        let mut staged = StagedKv { cache: cache.clone(), new_params: &new_params };
+        staged.apply_plan(&plan, &big(), &mut Pcg32::seeded(11)).unwrap();
+        assert_eq!(staged.cache.config(), plan.target_config());
+        assert_eq!(staged.cache.len(), cache.len());
+        // the original cache is untouched (staging semantics)
+        assert_eq!(cache.config(), &c);
+    }
+
+    // ---- satellite: composed-plan property test -------------------------
+
+    #[test]
+    fn prop_random_candidate_compositions_preserve_and_land_on_prediction() {
+        // random valid sequences drawn from expand::candidate_ops at each
+        // intermediate config, composed into ONE plan: (a) function is
+        // preserved within the probe tolerance, (b) the store lands
+        // exactly on the plan's predicted ModelConfig and param count.
+        let base = ModelConfig { layers: 1, hidden: 8, heads: 1, k: 4, v: 4, mlp: 8, seq: 8, vocab: 16 };
+        Runner::new("plan-candidate-composability", 12).run(
+            |rng| {
+                let n_ops = 1 + rng.below(3);
+                let mut cfg = base;
+                let mut ops = Vec::new();
+                for _ in 0..n_ops {
+                    let cands = candidate_ops(&cfg);
+                    let op = cands[rng.below(cands.len())].clone();
+                    cfg = op.apply_to_config(&cfg).unwrap();
+                    ops.push(op);
+                }
+                (ops, rng.next_u64())
+            },
+            |(ops, seed)| {
+                let plan = ExpansionPlan::new(&base, ops.clone()).map_err(|e| e.to_string())?;
+                let mut rng = Pcg32::seeded(*seed);
+                let params = ParamStore::init(&base, &mut rng, 0.05);
+                let toks: Vec<Vec<u32>> =
+                    vec![(0..base.seq).map(|_| rng.below(base.vocab) as u32).collect()];
+                let before = model::forward(&base, &params, &toks).map_err(|e| e.to_string())?;
+                let grown =
+                    plan.materialize(&params, &big(), &mut rng).map_err(|e| e.to_string())?;
+                // (b) exact landing on the prediction
+                if grown.config() != plan.target_config() {
+                    return Err(format!(
+                        "landed on {:?}, predicted {:?}",
+                        grown.config(),
+                        plan.target_config()
+                    ));
+                }
+                if grown.num_scalars() != plan.params_after() {
+                    return Err(format!(
+                        "{} scalars, predicted {}",
+                        grown.num_scalars(),
+                        plan.params_after()
+                    ));
+                }
+                // (a) preservation within the probe tolerance
+                let after =
+                    model::forward(grown.config(), &grown, &toks).map_err(|e| e.to_string())?;
+                let d = model::max_logit_delta(&before, &after).map_err(|e| e.to_string())?;
+                if d <= PRESERVE_TOL {
+                    Ok(())
+                } else {
+                    Err(format!("max|Δ| = {d} over {:?}", ops))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn flops_estimate_is_monotone_in_every_dim() {
+        let c = cfg();
+        let base = est_fwd_flops_per_token(&c);
+        for op in candidate_ops(&c) {
+            let grown = op.apply_to_config(&c).unwrap();
+            assert!(
+                est_fwd_flops_per_token(&grown) > base,
+                "{op:?} did not grow the FLOPs estimate"
+            );
+        }
+    }
+}

@@ -5,10 +5,16 @@
 //! bit-identical — same batch stream, same surgery RNG draws, same
 //! optimizer trajectory — to the old stage-wise loop
 //! (`integration_policy.rs` asserts this against a hand-rolled replay).
+//!
+//! Each boundary is compiled into an [`ExpansionPlan`] at construction:
+//! the schedule's per-stage configs make the source config of every
+//! boundary known up front, so the whole stage table is validated as a
+//! plan sequence before a single training step runs.
 
 use std::collections::VecDeque;
 
-use crate::config::{GrowthOp, GrowthSchedule};
+use crate::config::GrowthSchedule;
+use crate::expand::ExpansionPlan;
 
 use super::{scaled_steps, scaled_total, Decision, GrowthPolicy, PolicyCtx, TrainObs};
 
@@ -16,10 +22,10 @@ use super::{scaled_steps, scaled_total, Decision, GrowthPolicy, PolicyCtx, Train
 /// when the cumulative scaled step count of stages `0..i` completes, and
 /// the run stops after the final stage's budget.
 pub struct FixedSchedule {
-    /// `(fire_at_global_step, ops)` per stage boundary, in order. No-op
-    /// stages (empty `apply`) are kept: they split segments exactly like
-    /// the old per-stage loop did.
-    boundaries: VecDeque<(usize, Vec<GrowthOp>)>,
+    /// `(fire_at_global_step, plan)` per stage boundary, in order. No-op
+    /// stages (empty `apply`) become identity plans: they split segments
+    /// exactly like the old per-stage loop did.
+    boundaries: VecDeque<(usize, ExpansionPlan)>,
     total_steps: usize,
 }
 
@@ -29,7 +35,14 @@ impl FixedSchedule {
         let mut cum = 0usize;
         for (i, stage) in schedule.stages.iter().enumerate() {
             if i > 0 {
-                boundaries.push_back((cum, stage.apply.clone()));
+                // the boundary into stage i starts from stage i-1's config;
+                // the schedule parser already composed every op, so plan
+                // construction cannot fail on a loaded schedule
+                let plan =
+                    ExpansionPlan::new(&schedule.stages[i - 1].config, stage.apply.clone())
+                        .expect("schedule ops validated at parse time");
+                debug_assert_eq!(plan.target_config(), &stage.config);
+                boundaries.push_back((cum, plan));
             }
             cum += scaled_steps(stage.steps, steps_scale);
         }
@@ -45,8 +58,8 @@ impl GrowthPolicy for FixedSchedule {
     fn decide(&mut self, obs: &TrainObs, _ctx: &PolicyCtx<'_>) -> Decision {
         if let Some((fire_at, _)) = self.boundaries.front() {
             if obs.global_step >= *fire_at {
-                let (_, ops) = self.boundaries.pop_front().expect("front checked");
-                return Decision::Expand(ops);
+                let (_, plan) = self.boundaries.pop_front().expect("front checked");
+                return Decision::Expand(plan);
             }
         }
         if obs.global_step >= self.total_steps {
@@ -90,11 +103,30 @@ mod tests {
         assert_eq!(got.len(), 7);
         assert_eq!(got[0], Decision::Continue);
         assert_eq!(got[1], Decision::Continue);
-        assert!(matches!(&got[2], Decision::Expand(ops) if ops.len() == 1), "{:?}", got[2]);
+        assert!(
+            matches!(&got[2], Decision::Expand(plan) if plan.ops().len() == 1),
+            "{:?}",
+            got[2]
+        );
         assert_eq!(got[3], Decision::Continue);
-        assert!(matches!(&got[4], Decision::Expand(ops) if ops.len() == 1), "{:?}", got[4]);
+        assert!(
+            matches!(&got[4], Decision::Expand(plan) if plan.ops().len() == 1),
+            "{:?}",
+            got[4]
+        );
         assert_eq!(got[5], Decision::Continue);
         assert_eq!(got[6], Decision::Stop);
+    }
+
+    #[test]
+    fn boundary_plans_predict_stage_configs() {
+        let s = three_stage();
+        let p = FixedSchedule::new(&s, 1.0);
+        assert_eq!(p.boundaries.len(), 2);
+        for ((_, plan), stage) in p.boundaries.iter().zip(&s.stages[1..]) {
+            assert_eq!(plan.target_config(), &stage.config);
+            assert_eq!(plan.params_after(), stage.config.num_params());
+        }
     }
 
     #[test]
@@ -115,7 +147,7 @@ mod tests {
     }
 
     #[test]
-    fn no_op_stage_splits_segment_with_empty_ops() {
+    fn no_op_stage_splits_segment_with_identity_plan() {
         let s = sched(
             r#"{
                 "name": "noop", "batch": 2, "seq": 8, "vocab": 16,
@@ -125,7 +157,10 @@ mod tests {
         );
         let mut p = FixedSchedule::new(&s, 1.0);
         let got = drive(&mut p, &[(1.0, None), (1.0, None)]);
-        assert_eq!(got[0], Decision::Expand(vec![]));
+        match &got[0] {
+            Decision::Expand(plan) => assert!(plan.is_identity()),
+            other => panic!("expected identity expand, got {other:?}"),
+        }
         assert_eq!(got[1], Decision::Stop);
     }
 }

@@ -18,10 +18,10 @@
 //! evaluated on a clone of the batcher.
 
 use crate::autodiff::loss_and_grads;
-use crate::config::{GrowthOp, GrowthSchedule, PolicyConfig, TrainConfig};
+use crate::config::{GrowthSchedule, PolicyConfig, TrainConfig};
 use crate::data::Batcher;
 use crate::error::Result;
-use crate::expand::{apply_ops, candidate_ops, ExpandOptions, Init};
+use crate::expand::{candidate_ops, Expandable, ExpandOptions, ExpansionPlan, Init};
 use crate::model;
 use crate::optim::{clip_global_norm, Optimizer};
 use crate::params::ParamStore;
@@ -33,9 +33,10 @@ use super::{scaled_total, Decision, GrowthPolicy, PlateauDetector, PolicyCtx, Tr
 /// `examples/schedule_search.rs` for its ranking table).
 #[derive(Clone, Debug)]
 pub struct CandidateScore {
-    /// `None` is the control: keep training the current architecture.
-    pub op: Option<GrowthOp>,
-    /// Scalar parameter count of the branch.
+    /// The candidate plan; the identity plan is the control (keep training
+    /// the current architecture).
+    pub plan: ExpansionPlan,
+    /// Scalar parameter count of the branch (== `plan.params_after()`).
     pub params: usize,
     /// Probe eval loss immediately after branching — equals the base
     /// model's eval loss up to preservation tolerance, which is what makes
@@ -45,16 +46,18 @@ pub struct CandidateScore {
     pub eval_after: f32,
     /// Loss improvement over the shared starting point.
     pub dloss: f64,
-    /// Relative probe compute (steps × params × tokens, in 1e12 units).
+    /// Probe training compute from the plan's own estimate
+    /// (`plan.est_train_flops` over the probe tokens), in TFLOPs.
     pub probe_compute: f64,
     /// The greedy objective: `dloss / probe_compute`.
     pub score: f64,
 }
 
-/// Branch the checkpoint across the control + every candidate op,
+/// Branch the checkpoint across the control + every candidate plan,
 /// probe-train each for `probe_budget` steps on an identical cloned data
-/// stream, and score by loss improvement per unit compute. Pure native
-/// path (no backend, no logger) — callers own run-state cloning semantics.
+/// stream, and score by loss improvement per unit of the *plan's own*
+/// compute estimate. Pure native path (no backend, no logger) — callers
+/// own run-state cloning semantics.
 pub fn rank_candidates(
     params: &ParamStore,
     opt: &Optimizer,
@@ -70,23 +73,18 @@ pub fn rank_candidates(
     let base_logits = model::forward(params.config(), params, &probe.tokens)?;
     let base_eval = model::cross_entropy(&base_logits, &probe.targets)?;
 
-    let mut candidates: Vec<Option<GrowthOp>> = vec![None];
-    candidates.extend(candidate_ops(params.config()).into_iter().map(Some));
+    let mut candidates = vec![ExpansionPlan::identity(params.config())];
+    for op in candidate_ops(params.config()) {
+        candidates.push(ExpansionPlan::new(params.config(), vec![op])?);
+    }
 
     let mut out = Vec::with_capacity(candidates.len());
-    for (i, cand) in candidates.into_iter().enumerate() {
+    for (i, plan) in candidates.into_iter().enumerate() {
         let mut rng = Pcg32::new(seed, 0x6EED ^ i as u64);
-        let (mut branch, mut branch_opt) = match &cand {
-            None => (params.clone(), opt.clone()),
-            Some(op) => {
-                let expand_opts =
-                    ExpandOptions { init: Init::Normal(0.02), ..Default::default() };
-                let branch = apply_ops(params, std::slice::from_ref(op), &mut rng, &expand_opts)?;
-                let mut branch_opt = opt.clone();
-                branch_opt.expand(std::slice::from_ref(op))?;
-                (branch, branch_opt)
-            }
-        };
+        let expand_opts = ExpandOptions { init: Init::Normal(0.02), ..Default::default() };
+        let mut branch = plan.materialize(params, &expand_opts, &mut rng)?;
+        let mut branch_opt = opt.clone();
+        branch_opt.apply_plan(&plan, &expand_opts, &mut rng)?;
         let cfg = *branch.config();
         let eval_at_branch = {
             let logits = model::forward(&cfg, &branch, &probe.tokens)?;
@@ -106,13 +104,12 @@ pub fn rank_candidates(
             let logits = model::forward(&cfg, &branch, &probe.tokens)?;
             model::cross_entropy(&logits, &probe.targets)?
         };
-        let n = branch.num_scalars();
-        let probe_compute =
-            probe_budget as f64 * n as f64 * (batcher.batch() * cfg.seq) as f64 / 1e12;
+        let probe_tokens = (probe_budget * batcher.batch() * cfg.seq) as f64;
+        let probe_compute = plan.est_train_flops(probe_tokens) / 1e12;
         let dloss = f64::from(base_eval - eval_after);
         out.push(CandidateScore {
-            op: cand,
-            params: n,
+            params: plan.params_after(),
+            plan,
             eval_at_branch,
             eval_after,
             dloss,
@@ -231,12 +228,13 @@ impl GrowthPolicy for GreedyBranch {
         // is the matched-compute bound, not a soft target); the control is
         // always eligible since current params are below the cap here
         let best = ranked
-            .iter()
+            .into_iter()
             .filter(|c| c.score.is_finite() && c.params <= self.max_params)
             .max_by(|a, b| a.score.total_cmp(&b.score));
-        match best.and_then(|c| c.op.clone()) {
-            Some(op) => Decision::Expand(vec![op]),
-            None => Decision::Continue, // control won (or no eligible candidate)
+        match best {
+            Some(c) if !c.plan.is_identity() => Decision::Expand(c.plan),
+            // control won (or no eligible candidate)
+            _ => Decision::Continue,
         }
     }
 }
@@ -282,7 +280,7 @@ mod tests {
 
         let ranked = rank_candidates(&params, &opt, &batcher, &tcfg, 2, 42).unwrap();
         assert_eq!(ranked.len(), 7, "control + six candidates");
-        assert!(ranked[0].op.is_none(), "first entry is the control");
+        assert!(ranked[0].plan.is_identity(), "first entry is the control");
         let base_eval = ranked[0].eval_at_branch;
         for c in &ranked {
             // the paper's property, load-bearing for the ranking: every
@@ -290,16 +288,19 @@ mod tests {
             assert!(
                 (c.eval_at_branch - base_eval).abs() <= 1e-4,
                 "{:?}: branch eval {} != base {}",
-                c.op,
+                c.plan.ops(),
                 c.eval_at_branch,
                 base_eval
             );
-            assert!(c.eval_after.is_finite(), "{:?}", c.op);
-            assert!(c.probe_compute > 0.0, "{:?}", c.op);
-            assert!(c.score.is_finite(), "{:?}", c.op);
+            assert!(c.eval_after.is_finite(), "{:?}", c.plan.ops());
+            assert!(c.probe_compute > 0.0, "{:?}", c.plan.ops());
+            assert!(c.score.is_finite(), "{:?}", c.plan.ops());
+            assert_eq!(c.params, c.plan.params_after(), "score params must be the plan's");
         }
         // expansions really did grow
         assert!(ranked[1..].iter().all(|c| c.params > ranked[0].params));
+        // and costlier plans carry larger compute estimates than the control
+        assert!(ranked[1..].iter().all(|c| c.probe_compute > ranked[0].probe_compute));
     }
 
     #[test]
@@ -314,7 +315,7 @@ mod tests {
         let a = rank_candidates(&params, &opt, &batcher, &tcfg, 2, 7).unwrap();
         let b = rank_candidates(&params, &opt, &batcher, &tcfg, 2, 7).unwrap();
         for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.eval_after.to_bits(), y.eval_after.to_bits(), "{:?}", x.op);
+            assert_eq!(x.eval_after.to_bits(), y.eval_after.to_bits(), "{:?}", x.plan.ops());
         }
     }
 
@@ -340,8 +341,8 @@ mod tests {
         assert_eq!(got.len(), 20);
         assert_eq!(*got.last().unwrap(), Decision::Stop);
         for d in &got {
-            if let Decision::Expand(ops) = d {
-                assert_eq!(ops.len(), 1, "greedy commits exactly one op per boundary");
+            if let Decision::Expand(plan) = d {
+                assert_eq!(plan.ops().len(), 1, "greedy commits exactly one op per boundary");
             }
         }
     }

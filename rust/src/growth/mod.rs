@@ -9,12 +9,16 @@
 //! answers with a [`Decision`]. The coordinator is a policy-driven loop:
 //!
 //! ```text
-//! train step ─▶ TrainObs ─▶ policy.decide ─▶ Continue | Expand(ops) | Stop
+//! train step ─▶ TrainObs ─▶ policy.decide ─▶ Continue | Expand(plan) | Stop
 //!                                             │           │
 //!                                             ▼           ▼
 //!                                        keep stepping  boundary surgery
-//!                                                       (probes + moments)
+//!                                                       (plan.apply_train)
 //! ```
+//!
+//! Decisions carry a validated [`ExpansionPlan`], not a raw op list: the
+//! policy commits to a predicted outcome (target config, exact param
+//! delta, estimated FLOPs delta) and the boundary holds it to that.
 //!
 //! Three policies ship:
 //! * [`FixedSchedule`] — replays the schedule's stage table verbatim. It is
@@ -45,8 +49,9 @@ pub use fixed::FixedSchedule;
 pub use greedy::GreedyBranch;
 pub use plateau::{LossPlateau, PlateauDetector};
 
-use crate::config::{GrowthOp, GrowthSchedule, PolicyConfig, PolicyKind, TrainConfig};
+use crate::config::{GrowthSchedule, PolicyConfig, PolicyKind, TrainConfig};
 use crate::data::Batcher;
+use crate::expand::ExpansionPlan;
 use crate::optim::Optimizer;
 use crate::params::ParamStore;
 
@@ -77,10 +82,10 @@ pub struct TrainObs {
 pub enum Decision {
     /// Keep training the current architecture.
     Continue,
-    /// End the segment and apply these expansion ops at a boundary. An
-    /// empty op list splits the segment (fresh report/checkpoint) without
+    /// End the segment and apply this validated plan at a boundary. An
+    /// identity plan splits the segment (fresh report/checkpoint) without
     /// surgery — how the fixed policy reproduces no-op schedule stages.
-    Expand(Vec<GrowthOp>),
+    Expand(ExpansionPlan),
     /// End the run.
     Stop,
 }
@@ -248,8 +253,11 @@ mod tests {
 
     #[test]
     fn decision_tags() {
+        let cfg = crate::config::ModelConfig {
+            layers: 1, hidden: 8, heads: 1, k: 4, v: 4, mlp: 16, seq: 8, vocab: 16,
+        };
         assert_eq!(Decision::Continue.tag(), "continue");
-        assert_eq!(Decision::Expand(vec![]).tag(), "expand");
+        assert_eq!(Decision::Expand(ExpansionPlan::identity(&cfg)).tag(), "expand");
         assert_eq!(Decision::Stop.tag(), "stop");
     }
 }

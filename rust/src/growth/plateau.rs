@@ -24,7 +24,8 @@
 
 use std::collections::VecDeque;
 
-use crate::config::{GrowthOp, GrowthSchedule, PolicyConfig};
+use crate::config::{GrowthSchedule, PolicyConfig};
+use crate::expand::ExpansionPlan;
 
 use super::{scaled_steps, scaled_total, Decision, GrowthPolicy, PolicyCtx, TrainObs};
 
@@ -83,10 +84,10 @@ impl PlateauDetector {
     }
 }
 
-/// One pending staged expansion: the ops plus the arch-step deadline by
-/// which it fires even without a plateau verdict.
+/// One pending staged expansion: the validated plan plus the arch-step
+/// deadline by which it fires even without a plateau verdict.
 struct PendingExpansion {
-    ops: Vec<GrowthOp>,
+    plan: ExpansionPlan,
     deadline: Option<usize>,
 }
 
@@ -109,13 +110,19 @@ impl LossPlateau {
             if ops.is_empty() {
                 continue; // nothing to fire — plateau ignores no-op stages
             }
+            // stage configs chain through no-op stages (a skipped stage's
+            // config equals its predecessor's), so stage i-1's config is
+            // always the live config when this plan fires
+            let plan = ExpansionPlan::new(&schedule.stages[i - 1].config, ops)
+                .expect("schedule ops validated at parse time");
+            debug_assert_eq!(plan.target_config(), &schedule.stages[i].config);
             let prev_budget = scaled_steps(schedule.stages[i - 1].steps, steps_scale);
             let deadline = if pcfg.deadline_scale > 0.0 {
                 Some(((prev_budget as f64 * pcfg.deadline_scale).round() as usize).max(1))
             } else {
                 None
             };
-            pending.push_back(PendingExpansion { ops, deadline });
+            pending.push_back(PendingExpansion { plan, deadline });
         }
         LossPlateau {
             detector: PlateauDetector::new(pcfg.window, pcfg.min_slope),
@@ -173,7 +180,7 @@ impl GrowthPolicy for LossPlateau {
         }
         let fired = self.pending.pop_front().expect("checked non-empty");
         self.detector.reset();
-        Decision::Expand(fired.ops)
+        Decision::Expand(fired.plan)
     }
 }
 
@@ -274,7 +281,7 @@ mod tests {
             .iter()
             .enumerate()
             .filter_map(|(i, d)| match d {
-                Decision::Expand(ops) => Some((i + 1, ops.len())),
+                Decision::Expand(plan) => Some((i + 1, plan.ops().len())),
                 _ => None,
             })
             .collect();

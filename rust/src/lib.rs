@@ -28,7 +28,12 @@
 //! * [`model`] — pure-Rust reference transformer forward (paper Eqs. 1–5),
 //!   the PJRT-independent oracle for preservation checks.
 //! * [`expand`] — **the paper's contribution**: the six function-preserving
-//!   transformations (Defs. 3.1–3.6) as parameter surgery, plus composition.
+//!   transformations (Defs. 3.1–3.6) as parameter surgery, plus
+//!   composition. The one public entry point is [`expand::ExpansionPlan`]
+//!   (S18): a validated, inspectable op composition carrying the predicted
+//!   config, exact param delta and estimated FLOPs delta, applied
+//!   transactionally to params, optimizer moments and live KV caches
+//!   through the [`expand::Expandable`] seam (DESIGN.md §13).
 //! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`,
 //!   compiles once, executes on the training hot path.
 //! * [`autodiff`] — **native training backend** (S16): hand-written

@@ -7,6 +7,8 @@
 //!   generate  sample text from a trained checkpoint via the fwd artifact
 //!   serve     KV-cached batched inference engine on the pure-Rust path,
 //!             with optional mid-run function-preserving hot-swap
+//!   plan      dry-run a growth schedule as ExpansionPlans: config /
+//!             param / FLOP trajectory, no training
 //!   inspect   print a checkpoint's config and tensor statistics
 //!   info      print the artifact manifest summary
 //!
@@ -45,8 +47,10 @@ USAGE:
   texpand serve   [--ckpt PATH] [--requests N] [--tokens N] [--slots N]
                   [--temperature F] [--top-k N] [--seed N] [--serial]
                   [--corpus markov|copy|arithmetic]
+                  [--max-pending N] [--timeout-ticks N]
                   [--swap-ops SPEC] [--swap-after-ticks N]
                   (SPEC e.g. \"mlp=256,heads_add=1,layers_add=1@top\")
+  texpand plan    [--schedule P] [--json]
   texpand inspect --ckpt PATH
   texpand info    [--backend native|pjrt] [--schedule P] [--artifacts D]
 
@@ -93,6 +97,7 @@ fn run() -> Result<()> {
         Some("family") => cmd_family(&args),
         Some("generate") => cmd_generate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("plan") => cmd_plan(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("info") => cmd_info(&args),
         Some(other) => Err(Error::Cli(format!("unknown subcommand '{other}'"))),
@@ -455,6 +460,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let swap_ops = args.get("swap-ops").map(|s| texpand::serve::parse_swap_spec(&s)).transpose()?;
     let swap_after = args.get_u64("swap-after-ticks")?.unwrap_or(tokens as u64 / 2);
     let serial = args.has("serial");
+    let max_pending = args.get_usize("max-pending")?;
+    let timeout_ticks = args.get_u64("timeout-ticks")?;
     let ckpt = args.get("ckpt");
     args.reject_unknown()?;
 
@@ -476,7 +483,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg
     );
 
-    let opts = EngineOptions { max_slots: slots, parallel: !serial, ..Default::default() };
+    let mut opts = EngineOptions { max_slots: slots, parallel: !serial, ..Default::default() };
+    if let Some(n) = max_pending {
+        opts.max_pending = n;
+    }
+    if let Some(n) = timeout_ticks {
+        opts.request_timeout_ticks = n;
+    }
     let mut engine = Engine::new(params, opts);
 
     // corpus-derived prompts: staggered windows over synthesized text
@@ -487,6 +500,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for i in 0..requests {
         let start = (i * 97) % (text.len() - prompt_len);
         let prompt = tok.encode(&text[start..start + prompt_len]);
+        // backpressure-aware feeding: when the engine is at capacity,
+        // drain ticks until a slot frees instead of aborting the run
+        while !engine.has_capacity() {
+            engine.tick()?;
+        }
         ids.push(engine.submit(prompt, tokens, sampler)?);
     }
 
@@ -496,15 +514,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine.tick()?;
         if let (false, Some(ops)) = (swapped, &swap_ops) {
             if engine.ticks() >= swap_after {
+                let plan = texpand::expand::ExpansionPlan::new(engine.config(), ops.clone())?;
+                println!("hot-swap plan: {}", plan.summary());
                 let expand_opts = texpand::expand::ExpandOptions::default();
-                let report = engine.hot_swap(ops, &mut swap_rng, &expand_opts)?;
+                let report = engine.hot_swap(&plan, &mut swap_rng, &expand_opts)?;
                 println!(
                     "hot-swap committed mid-flight: {} ops, probe max|Δ| = {:.3e}, \
-                     params {} -> {}, {} in-flight caches remapped, {:.1} ms",
+                     params {} -> {} (predicted {}), {} in-flight caches remapped, {:.1} ms",
                     report.ops,
                     report.probe_delta,
                     report.params_before,
                     report.params_after,
+                    report.params_predicted,
                     report.remapped_sequences,
                     report.swap_ms
                 );
@@ -523,12 +544,96 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for id in ids {
         let c = engine.poll(id).expect("engine idle implies all requests completed");
         let text = String::from_utf8_lossy(&tok.decode(&c.tokens)).into_owned();
+        let tag = match c.finish {
+            texpand::serve::FinishReason::MaxTokens => "",
+            texpand::serve::FinishReason::TimedOut => " [TIMED OUT]",
+        };
         println!(
-            "[req {id}] {} prompt + {} generated in {} ticks: {text:?}",
+            "[req {id}] {} prompt + {} generated in {} ticks{tag}: {text:?}",
             c.prompt_len, c.generated, c.ticks_in_flight
         );
     }
     println!("\ncounters: {}", engine.counters().to_json().to_pretty());
+    Ok(())
+}
+
+/// `texpand plan` — dry-run a growth schedule as a chain of
+/// `ExpansionPlan`s, printing the config / param / FLOP trajectory without
+/// training anything. The printed final param count is exact (ci.sh
+/// cross-checks it against a trained run's final `StageReport.params`);
+/// the FLOPs column is the plans' cost-model estimate. `--json` emits the
+/// full plan metadata (ops round-trip through `GrowthOp::from_json`).
+fn cmd_plan(args: &Args) -> Result<()> {
+    let schedule_path = args.get_or("schedule", "configs/growth_default.json");
+    let as_json = args.has("json");
+    args.reject_unknown()?;
+    let schedule = GrowthSchedule::load(&schedule_path)?;
+
+    let mut cfg = schedule.stages[0].config;
+    let mut plans = Vec::new();
+    for stage in &schedule.stages[1..] {
+        let plan = texpand::expand::ExpansionPlan::new(&cfg, stage.apply.clone())?;
+        cfg = *plan.target_config();
+        plans.push((stage.name.clone(), plan));
+    }
+
+    if as_json {
+        // machine-readable mode: stdout is exactly one JSON document
+        let doc = Value::obj(vec![
+            ("schedule", Value::str(schedule.name.clone())),
+            ("final_params", Value::num(cfg.num_params() as f64)),
+            (
+                "plans",
+                Value::Arr(
+                    plans
+                        .iter()
+                        .map(|(name, p)| {
+                            // splice the plan fields into the stage row
+                            let mut fields =
+                                vec![("into_stage".to_string(), Value::str(name.clone()))];
+                            if let Value::Obj(plan_fields) = p.to_json() {
+                                fields.extend(plan_fields);
+                            }
+                            Value::Obj(fields)
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        println!("{}", doc.to_pretty());
+    } else {
+        println!("schedule '{}' ({}): {} stages, dry-run", schedule.name, schedule_path, schedule.stages.len());
+        println!(
+            "\n{:<10} {:>30} {:>12} {:>10} {:>14}",
+            "stage", "ops", "params", "Δparams", "fwd MFLOP/tok"
+        );
+        let base = &schedule.stages[0];
+        println!(
+            "{:<10} {:>30} {:>12} {:>10} {:>14.2}",
+            base.name,
+            "(base)",
+            base.config.num_params(),
+            "-",
+            texpand::expand::plan::est_fwd_flops_per_token(&base.config) / 1e6
+        );
+        for (name, plan) in &plans {
+            let ops: Vec<&str> = plan.ops().iter().map(|o| o.kind()).collect();
+            println!(
+                "{:<10} {:>30} {:>12} {:>10} {:>14.2}",
+                name,
+                if ops.is_empty() { "(none)".to_string() } else { ops.join("+") },
+                plan.params_after(),
+                format!("+{}", plan.param_delta()),
+                plan.flops_after() / 1e6
+            );
+        }
+        println!(
+            "\nparam counts are exact (plan postcondition); FLOPs are the cost-model \
+             estimate (DESIGN.md §13)."
+        );
+        // the machine-greppable line ci.sh keys on
+        println!("final params: {}", cfg.num_params());
+    }
     Ok(())
 }
 

@@ -79,18 +79,22 @@ impl RunLogger {
     /// made on (S17). One row per eval-bearing observation plus every
     /// non-`Continue` verdict — the audit trail for "why did the model
     /// grow here": `ci.sh` smoke-greps these rows, and the policy-compare
-    /// bench reads them back.
+    /// bench reads them back. An `Expand` decision carries its full
+    /// [`crate::expand::ExpansionPlan`] metadata (round-trippable ops,
+    /// exact param delta, estimated FLOPs delta, predicted config) as the
+    /// `plan` field, so the log alone reconstructs what was committed.
     pub fn decision(
         &mut self,
         policy: &str,
         obs: &crate::growth::TrainObs,
         decision: &crate::growth::Decision,
     ) {
-        let ops = match decision {
-            crate::growth::Decision::Expand(ops) => {
-                Value::Arr(ops.iter().map(|o| Value::str(o.kind())).collect())
-            }
-            _ => Value::Null,
+        let (ops, plan) = match decision {
+            crate::growth::Decision::Expand(plan) => (
+                Value::Arr(plan.ops().iter().map(|o| Value::str(o.kind())).collect()),
+                plan.to_json(),
+            ),
+            _ => (Value::Null, Value::Null),
         };
         let eval = match obs.eval_loss {
             Some(e) => Value::num(f64::from(e)),
@@ -102,6 +106,7 @@ impl RunLogger {
                 ("policy", Value::str(policy)),
                 ("decision", Value::str(decision.tag())),
                 ("ops", ops),
+                ("plan", plan),
                 ("global_step", Value::num(obs.global_step as f64)),
                 ("arch_step", Value::num(obs.arch_step as f64)),
                 ("train_loss", Value::num(f64::from(obs.train_loss))),
@@ -140,6 +145,12 @@ pub struct ServeCounters {
     pub ticks: u64,
     /// Committed hot-swaps.
     pub swaps: u64,
+    /// Submissions refused by queue backpressure
+    /// (`EngineOptions::max_pending`).
+    pub rejected: u64,
+    /// In-flight sequences expired by the per-request deadline
+    /// (`EngineOptions::request_timeout_ticks`).
+    pub timeouts: u64,
     pub decode_ns: u128,
     pub prime_ns: u128,
     pub swap_ns: u128,
@@ -171,6 +182,8 @@ impl ServeCounters {
             ("prompt_tokens", Value::num(self.prompt_tokens as f64)),
             ("ticks", Value::num(self.ticks as f64)),
             ("swaps", Value::num(self.swaps as f64)),
+            ("rejected", Value::num(self.rejected as f64)),
+            ("timeouts", Value::num(self.timeouts as f64)),
             ("decode_ms", Value::num(self.decode_ns as f64 / 1e6)),
             ("prime_ms", Value::num(self.prime_ns as f64 / 1e6)),
             ("swap_ms", Value::num(self.swap_ns as f64 / 1e6)),
@@ -247,8 +260,9 @@ mod tests {
     }
 
     #[test]
-    fn decision_rows_carry_evidence() {
-        use crate::config::GrowthOp;
+    fn decision_rows_carry_evidence_and_plan_metadata() {
+        use crate::config::{GrowthOp, ModelConfig};
+        use crate::expand::ExpansionPlan;
         use crate::growth::{Decision, TrainObs};
 
         let root = tmpdir("decision");
@@ -262,7 +276,9 @@ mod tests {
             est_flops: 1e9,
             params: 1234,
         };
-        log.decision("plateau", &obs, &Decision::Expand(vec![GrowthOp::Mlp { p: 64 }]));
+        let cfg = ModelConfig { layers: 1, hidden: 8, heads: 1, k: 4, v: 4, mlp: 16, seq: 8, vocab: 16 };
+        let plan = ExpansionPlan::new(&cfg, vec![GrowthOp::Mlp { p: 64 }]).unwrap();
+        log.decision("plateau", &obs, &Decision::Expand(plan.clone()));
         let no_eval = TrainObs { eval_loss: None, ..obs };
         log.decision("plateau", &no_eval, &Decision::Continue);
         drop(log);
@@ -276,12 +292,26 @@ mod tests {
         let ops = first.req("ops").unwrap().as_arr().unwrap();
         assert_eq!(ops.len(), 1);
         assert_eq!(ops[0].as_str().unwrap(), "mlp");
+        // the plan metadata is the decision's evidence: exact param delta,
+        // round-trippable op objects, predicted target config
+        let plan_json = first.req("plan").unwrap();
+        assert_eq!(
+            plan_json.req("param_delta").unwrap().as_i64().unwrap() as usize,
+            plan.param_delta()
+        );
+        let op0 = &plan_json.req("ops").unwrap().as_arr().unwrap()[0];
+        assert_eq!(GrowthOp::from_json(op0).unwrap(), GrowthOp::Mlp { p: 64 });
+        assert_eq!(
+            ModelConfig::from_json(plan_json.req("to").unwrap()).unwrap().mlp,
+            64
+        );
         assert_eq!(first.req("global_step").unwrap().as_i64().unwrap(), 7);
         assert!((first.req("eval_loss").unwrap().as_f64().unwrap() - 2.4).abs() < 1e-6);
         let second = Value::parse(lines.next().unwrap()).unwrap();
         assert_eq!(second.req("decision").unwrap().as_str().unwrap(), "continue");
         assert_eq!(second.req("eval_loss").unwrap(), &Value::Null);
         assert_eq!(second.req("ops").unwrap(), &Value::Null);
+        assert_eq!(second.req("plan").unwrap(), &Value::Null);
         std::fs::remove_dir_all(format!("{root}/run3")).unwrap();
     }
 

@@ -3,7 +3,9 @@
 //! The PJRT `step` artifacts return *gradients*; the optimizer itself runs
 //! here so that its state lives next to the parameters it tracks — at every
 //! expansion boundary the coordinator transforms parameters *and* moments
-//! with one code path ([`Optimizer::expand`]).
+//! through one plan ([`crate::expand::ExpansionPlan::apply_train`]; the
+//! moment surgery itself is the optimizer's `Expandable` impl in
+//! [`crate::expand::plan`]).
 //!
 //! ## Moment surgery
 //!
@@ -16,11 +18,9 @@
 //! so the first moment is rescaled by `c^-1` and the second by `c^-2` —
 //! exactly what `ExpandOptions::for_moments(-1.0 / -2.0)` implements.
 
-use crate::config::{GrowthOp, OptimKind, TrainConfig};
+use crate::config::{OptimKind, TrainConfig};
 use crate::error::{Error, Result};
-use crate::expand::{apply_ops_owned, ExpandOptions};
 use crate::params::ParamStore;
-use crate::rng::Pcg32;
 use crate::tensor::Tensor;
 
 /// Optimizer state (moments stored as ParamStores so they share the
@@ -125,26 +125,6 @@ impl Optimizer {
         Ok(())
     }
 
-    /// Transform optimizer state across an expansion boundary so that it
-    /// matches the post-surgery parameter layout (see module docs).
-    pub fn expand(&mut self, ops: &[GrowthOp]) -> Result<()> {
-        match self {
-            Optimizer::Sgd { .. } => Ok(()), // stateless
-            Optimizer::Adam { m, v, .. } => {
-                // surgery is deterministic under Init::Zeros; rng is unused entropy
-                let mut rng = Pcg32::seeded(0);
-                let dummy = crate::config::ModelConfig {
-                    layers: 1, hidden: 1, heads: 1, k: 1, v: 1, mlp: 1, seq: 1, vocab: 1,
-                };
-                let old_m = std::mem::replace(m, ParamStore::zeros(&dummy));
-                *m = apply_ops_owned(old_m, ops, &mut rng, &ExpandOptions::for_moments(-1.0))?;
-                let old_v = std::mem::replace(v, ParamStore::zeros(&dummy));
-                *v = apply_ops_owned(old_v, ops, &mut rng, &ExpandOptions::for_moments(-2.0))?;
-                Ok(())
-            }
-        }
-    }
-
     /// Expanded-state invariant check: moments must mirror the param layout.
     pub fn validate_against(&self, params: &ParamStore) -> Result<()> {
         if let Optimizer::Adam { m, v, .. } = self {
@@ -181,7 +161,24 @@ pub fn clip_global_norm(grads: &mut [Tensor], max_norm: f32) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{LayerPosition, ModelConfig};
+    use crate::config::{GrowthOp, LayerPosition, ModelConfig};
+    use crate::expand::{Expandable, ExpansionPlan};
+    use crate::rng::Pcg32;
+
+    /// Expand params + moments through the plan seam (the only entry).
+    fn expand_both(
+        params: &ParamStore,
+        opt: &mut Optimizer,
+        ops: &[GrowthOp],
+        seed: u64,
+    ) -> ParamStore {
+        let plan = ExpansionPlan::new(params.config(), ops.to_vec()).unwrap();
+        let expanded = plan
+            .materialize(params, &Default::default(), &mut Pcg32::seeded(seed))
+            .unwrap();
+        opt.apply_plan(&plan, &Default::default(), &mut Pcg32::seeded(seed)).unwrap();
+        expanded
+    }
 
     fn cfg() -> ModelConfig {
         ModelConfig { layers: 1, hidden: 8, heads: 2, k: 4, v: 4, mlp: 16, seq: 8, vocab: 16 }
@@ -276,8 +273,7 @@ mod tests {
             GrowthOp::Hidden { h: 12 },
             GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top },
         ];
-        let expanded = crate::expand::apply_ops(&params, &ops, &mut Pcg32::seeded(4), &Default::default()).unwrap();
-        opt.expand(&ops).unwrap();
+        let expanded = expand_both(&params, &mut opt, &ops, 4);
         opt.validate_against(&expanded).unwrap();
         // and stepping still works post-surgery
         let mut p2 = expanded.clone();
@@ -299,7 +295,7 @@ mod tests {
         let old_k = cfg().k;
         let new_k = 2 * old_k;
         let ops = vec![GrowthOp::AttnExpand { k: new_k }];
-        opt.expand(&ops).unwrap();
+        expand_both(&params, &mut opt, &ops, 4);
         let (m_after, v_after) = match &opt {
             Optimizer::Adam { m, v, .. } => (m.clone(), v.clone()),
             _ => unreachable!(),
@@ -344,14 +340,7 @@ mod tests {
             let grads = quadratic_grads(&params);
             opt.step(&mut params, &grads).unwrap();
 
-            let expanded = crate::expand::apply_ops(
-                &params,
-                std::slice::from_ref(&op),
-                &mut Pcg32::seeded(8),
-                &Default::default(),
-            )
-            .unwrap();
-            opt.expand(std::slice::from_ref(&op)).unwrap();
+            let expanded = expand_both(&params, &mut opt, std::slice::from_ref(&op), 8);
             opt.validate_against(&expanded).unwrap();
             let (m, v) = match &opt {
                 Optimizer::Adam { m, v, .. } => (m, v),
@@ -411,15 +400,8 @@ mod tests {
             GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top },
         ];
         for op in ops {
-            let expanded = crate::expand::apply_ops(
-                &params,
-                std::slice::from_ref(&op),
-                &mut Pcg32::seeded(10),
-                &Default::default(),
-            )
-            .unwrap();
             let mut opt2 = opt.clone();
-            opt2.expand(std::slice::from_ref(&op)).unwrap();
+            let expanded = expand_both(&params, &mut opt2, std::slice::from_ref(&op), 10);
             opt2.validate_against(&expanded).unwrap();
             let new_cfg = *expanded.config();
 
@@ -454,7 +436,8 @@ mod tests {
     #[test]
     fn sgd_expand_is_noop() {
         let mut opt = Optimizer::Sgd { lr: 0.1 };
-        opt.expand(&[GrowthOp::Mlp { p: 32 }]).unwrap();
+        let plan = ExpansionPlan::new(&cfg(), vec![GrowthOp::Mlp { p: 32 }]).unwrap();
+        opt.apply_plan(&plan, &Default::default(), &mut Pcg32::seeded(0)).unwrap();
         let params = ParamStore::zeros(&cfg());
         opt.validate_against(&params).unwrap();
     }

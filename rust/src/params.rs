@@ -28,7 +28,7 @@ const MAGIC: &[u8; 4] = b"TXPD";
 const VERSION: u32 = 1;
 
 /// Named parameter tensors in canonical order.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ParamStore {
     config: ModelConfig,
     specs: Vec<ParamSpec>,

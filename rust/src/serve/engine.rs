@@ -20,9 +20,9 @@
 
 use std::collections::HashMap;
 
-use crate::config::{GrowthOp, ModelConfig};
+use crate::config::ModelConfig;
 use crate::error::{Error, Result};
-use crate::expand::ExpandOptions;
+use crate::expand::{ExpandOptions, ExpansionPlan};
 use crate::generate::Sampler;
 use crate::metrics::{ServeCounters, Timer};
 use crate::params::ParamStore;
@@ -45,6 +45,15 @@ pub struct EngineOptions {
     pub probe_rows: usize,
     /// Seed for probe synthesis.
     pub probe_seed: u64,
+    /// Queue backpressure: maximum queued + in-flight requests. `submit`
+    /// rejects over-capacity (counted in `ServeCounters::rejected`);
+    /// `0` disables the bound.
+    pub max_pending: usize,
+    /// Per-request deadline: a sequence still decoding after this many
+    /// ticks in its slot is expired at the next tick — its partial output
+    /// completes with [`crate::serve::FinishReason::TimedOut`] and frees
+    /// the slot (counted in `ServeCounters::timeouts`). `0` disables.
+    pub request_timeout_ticks: u64,
 }
 
 impl Default for EngineOptions {
@@ -55,6 +64,8 @@ impl Default for EngineOptions {
             preserve_tol: 1e-4,
             probe_rows: 2,
             probe_seed: 0xBEE,
+            max_pending: 1024,
+            request_timeout_ticks: 0,
         }
     }
 }
@@ -113,6 +124,14 @@ impl Engine {
         self.sched.is_idle()
     }
 
+    /// True when `submit` would not be rejected by queue backpressure —
+    /// the single definition of the admission predicate (callers that
+    /// want to wait for capacity poll this and `tick` instead of
+    /// re-deriving the rule).
+    pub fn has_capacity(&self) -> bool {
+        self.opts.max_pending == 0 || self.pending() < self.opts.max_pending
+    }
+
     /// Enqueue a generation request; decoding starts at the next tick with
     /// a free slot.
     pub fn submit(
@@ -131,6 +150,14 @@ impl Engine {
         if let Some(&t) = prompt.iter().find(|&&t| t as usize >= cfg.vocab) {
             return Err(Error::Serve(format!("prompt token {t} out of vocab {}", cfg.vocab)));
         }
+        if !self.has_capacity() {
+            self.counters.rejected += 1;
+            return Err(Error::Serve(format!(
+                "engine at capacity: {} pending >= max_pending {} (backpressure)",
+                self.pending(),
+                self.opts.max_pending
+            )));
+        }
         self.counters.submitted += 1;
         Ok(self.sched.enqueue(Request { prompt, max_new_tokens, sampler }))
     }
@@ -140,9 +167,17 @@ impl Engine {
         self.completed.remove(&id)
     }
 
-    /// One scheduler round: admit, then advance every in-flight sequence
-    /// one token.
+    /// One scheduler round: expire timed-out slots, admit queued requests
+    /// into the freed capacity, then advance every in-flight sequence one
+    /// token.
     pub fn tick(&mut self) -> Result<TickReport> {
+        let expired = self.sched.expire(self.opts.request_timeout_ticks);
+        let timed_out = expired.len();
+        for c in expired {
+            self.counters.timeouts += 1;
+            self.completed.insert(c.id, c);
+        }
+
         let prime_timer = Timer::start();
         let (admitted, prompt_tokens) = self.sched.admit(&self.params)?;
         if admitted > 0 {
@@ -164,6 +199,7 @@ impl Engine {
             prompt_tokens,
             decoded: decoding,
             completed: completions.len(),
+            expired: timed_out,
         };
         for c in completions {
             self.counters.completed += 1;
@@ -187,15 +223,17 @@ impl Engine {
 
     /// Zero-downtime function-preserving expansion of the live model.
     ///
-    /// Runs between ticks: applies `ops` to a copy of the live parameters,
-    /// verifies `max|Δ logits| ≤ preserve_tol` on the held-out probe batch,
-    /// remaps every in-flight KV cache through the same ops, refreshes
-    /// pending logits, and atomically swaps. On any failure — including a
-    /// rejected probe — the live model and every cache are untouched and
-    /// serving continues on the old parameters.
+    /// Runs between ticks: applies the plan to a copy of the live
+    /// parameters (the plan's built-in probe gate verifies
+    /// `max|Δ logits| ≤ preserve_tol` on the held-out probe batch), remaps
+    /// every in-flight KV cache through the same plan, refreshes pending
+    /// logits, and atomically swaps. On any failure — including a rejected
+    /// probe — the live model and every cache are untouched and serving
+    /// continues on the old parameters. The report pairs the plan's
+    /// predicted deltas with the measured outcome.
     pub fn hot_swap(
         &mut self,
-        ops: &[GrowthOp],
+        plan: &ExpansionPlan,
         rng: &mut Pcg32,
         expand_opts: &ExpandOptions,
     ) -> Result<SwapReport> {
@@ -203,7 +241,7 @@ impl Engine {
         let report = hotswap::hot_swap(
             &mut self.params,
             &mut self.sched.active,
-            ops,
+            plan,
             rng,
             expand_opts,
             &self.probe,
@@ -221,8 +259,9 @@ impl Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::LayerPosition;
+    use crate::config::{GrowthOp, LayerPosition};
     use crate::expand::Init;
+    use crate::serve::FinishReason;
 
     fn cfg() -> ModelConfig {
         ModelConfig { layers: 1, hidden: 8, heads: 1, k: 4, v: 4, mlp: 16, seq: 8, vocab: 16 }
@@ -272,15 +311,20 @@ mod tests {
         let mut e = engine(2);
         e.submit(vec![1, 2], 6, greedy()).unwrap();
         e.tick().unwrap();
-        let ops = vec![
-            GrowthOp::Mlp { p: 32 },
-            GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top },
-        ];
+        let plan = ExpansionPlan::new(
+            e.config(),
+            vec![
+                GrowthOp::Mlp { p: 32 },
+                GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top },
+            ],
+        )
+        .unwrap();
         let opts = ExpandOptions { init: Init::Normal(0.3), ..Default::default() };
         let before = e.params().num_scalars();
-        let report = e.hot_swap(&ops, &mut Pcg32::seeded(9), &opts).unwrap();
+        let report = e.hot_swap(&plan, &mut Pcg32::seeded(9), &opts).unwrap();
         assert_eq!(report.params_before, before);
         assert!(report.params_after > before);
+        assert_eq!(report.params_after, report.params_predicted);
         assert!(report.probe_delta <= 1e-4);
         assert_eq!(report.remapped_sequences, 1);
         assert_eq!((e.config().mlp, e.config().layers), (32, 2));
@@ -299,13 +343,81 @@ mod tests {
             zero_constrained: false,
             ..Default::default()
         };
-        let err = e
-            .hot_swap(&[GrowthOp::Mlp { p: 32 }], &mut Pcg32::seeded(9), &opts)
-            .unwrap_err()
-            .to_string();
+        let plan = ExpansionPlan::new(e.config(), vec![GrowthOp::Mlp { p: 32 }]).unwrap();
+        let err = e.hot_swap(&plan, &mut Pcg32::seeded(9), &opts).unwrap_err().to_string();
         assert!(err.contains("rejected"), "{err}");
         assert_eq!(e.config(), &cfg(), "live config must be untouched");
         assert_eq!(e.counters().swaps, 0);
         e.run_until_idle().unwrap(); // decoding continues on the old model
+    }
+
+    #[test]
+    fn submit_backpressure_rejects_over_capacity() {
+        let params = ParamStore::init(&cfg(), &mut Pcg32::seeded(2), 0.05);
+        let mut e = Engine::new(
+            params,
+            EngineOptions { max_slots: 1, parallel: false, max_pending: 2, ..Default::default() },
+        );
+        assert!(e.has_capacity());
+        assert!(e.submit(vec![1], 3, greedy()).is_ok());
+        assert!(e.submit(vec![2], 3, greedy()).is_ok());
+        assert!(!e.has_capacity(), "has_capacity is the submit admission predicate");
+        let err = e.submit(vec![3], 3, greedy()).unwrap_err().to_string();
+        assert!(err.contains("capacity"), "{err}");
+        assert_eq!(e.counters().rejected, 1);
+        assert_eq!(e.counters().submitted, 2, "rejected requests are not submissions");
+        // draining frees capacity for new submissions
+        e.run_until_idle().unwrap();
+        assert!(e.has_capacity());
+        assert!(e.submit(vec![3], 3, greedy()).is_ok());
+    }
+
+    #[test]
+    fn request_timeout_expires_slot_with_partial_output() {
+        let params = ParamStore::init(&cfg(), &mut Pcg32::seeded(2), 0.05);
+        let mut e = Engine::new(
+            params,
+            EngineOptions {
+                max_slots: 2,
+                parallel: false,
+                request_timeout_ticks: 3,
+                ..Default::default()
+            },
+        );
+        // wants 50 tokens but is only allowed 3 ticks in its slot
+        let slow = e.submit(vec![1, 2], 50, greedy()).unwrap();
+        let fast = e.submit(vec![3], 2, greedy()).unwrap();
+        e.run_until_idle().unwrap();
+        let c = e.poll(slow).expect("timed-out request still completes");
+        assert_eq!(c.finish, FinishReason::TimedOut);
+        assert!(c.generated < 50, "partial output: {}", c.generated);
+        assert!(c.generated >= 3, "got the ticks it was allowed: {}", c.generated);
+        assert_eq!(c.tokens.len(), 2 + c.generated);
+        let f = e.poll(fast).unwrap();
+        assert_eq!(f.finish, FinishReason::MaxTokens);
+        assert_eq!(e.counters().timeouts, 1);
+        assert_eq!(e.counters().completed, 1, "only the fast request completed normally");
+    }
+
+    #[test]
+    fn zero_knobs_disable_backpressure_and_timeouts() {
+        let params = ParamStore::init(&cfg(), &mut Pcg32::seeded(2), 0.05);
+        let mut e = Engine::new(
+            params,
+            EngineOptions {
+                max_slots: 1,
+                parallel: false,
+                max_pending: 0,
+                request_timeout_ticks: 0,
+                ..Default::default()
+            },
+        );
+        for i in 0..10u32 {
+            e.submit(vec![i % 16], 8, greedy()).unwrap();
+        }
+        e.run_until_idle().unwrap();
+        assert_eq!(e.counters().completed, 10);
+        assert_eq!(e.counters().rejected, 0);
+        assert_eq!(e.counters().timeouts, 0);
     }
 }

@@ -3,33 +3,32 @@
 //! The swap is the serving-side payoff of the paper: because every
 //! expansion op is function-preserving, a grown model can replace its
 //! smaller predecessor **under live traffic** with zero output drift —
-//! in-flight generations continue as if nothing happened. The sequence,
-//! mirroring the growth coordinator's boundary protocol:
+//! in-flight generations continue as if nothing happened. The whole swap
+//! speaks [`ExpansionPlan`], the same currency as the training boundary:
 //!
-//! 1. **Surgery** — `expand::apply_ops` on a copy of the live store (the
-//!    live params serve every tick until the swap commits).
-//! 2. **Preservation probe** — the pure-Rust oracle forward on a held-out
-//!    probe batch, before vs after; `max|Δ logits| > tol` rejects the swap
-//!    with the live state untouched (e.g. an op sequence built with
-//!    constraint-violating init, the paper's E6 ablation).
-//! 3. **KV-cache remap** — every in-flight sequence's cache is remapped
-//!    through the same ops ([`crate::serve::kv::KvCache::remap`]) into
-//!    fresh copies, and pending logits are recomputed from the remapped
-//!    final hidden state.
-//! 4. **Atomic commit** — params and caches swap together, only after
-//!    every remap succeeded; a failure at any point leaves the engine
+//! 1. **Plan-gated surgery + probe** — [`ExpansionPlan::apply_probed`]
+//!    stages the expanded parameters from a copy of the live store and
+//!    verifies preservation on a held-out probe batch; a violating plan
+//!    (e.g. built with constraint-breaking init, the paper's E6 ablation)
+//!    is rejected with the live state untouched.
+//! 2. **KV-cache remap** — every in-flight sequence's cache is staged
+//!    through the same plan ([`StagedKv`]'s `Expandable::apply_plan`) and
+//!    its pending logits recomputed from the remapped final hidden state.
+//! 3. **Atomic commit** — params and caches swap together, only after
+//!    every stage succeeded; a failure at any point leaves the engine
 //!    serving the old model.
+//!
+//! The report carries the plan's *predicted* deltas next to the measured
+//! outcome, so a drifting cost model is visible in serving logs.
 
-use crate::config::GrowthOp;
 use crate::error::{Error, Result};
-use crate::expand::{apply_ops, ExpandOptions};
+use crate::expand::{Expandable, ExpandOptions, ExpansionPlan, StagedKv};
 use crate::metrics::Timer;
-use crate::model;
 use crate::params::ParamStore;
 use crate::rng::Pcg32;
 use crate::serve::scheduler::Slot;
 
-/// Outcome of a committed hot-swap.
+/// Outcome of a committed hot-swap, predicted-vs-actual.
 #[derive(Clone, Debug)]
 pub struct SwapReport {
     /// Ops applied.
@@ -38,67 +37,67 @@ pub struct SwapReport {
     pub probe_delta: f32,
     pub params_before: usize,
     pub params_after: usize,
-    /// In-flight KV caches remapped through the ops.
+    /// The plan's predicted post-swap param count — equals `params_after`
+    /// by the plan postcondition; reported so logs show the prediction
+    /// held.
+    pub params_predicted: usize,
+    /// The plan's estimated per-token forward-FLOPs delta (an estimate,
+    /// unlike the exact param delta — DESIGN.md §13).
+    pub flops_delta_est: f64,
+    /// In-flight KV caches remapped through the plan.
     pub remapped_sequences: usize,
     /// Wall time of surgery + probe + remap + commit.
     pub swap_ms: f64,
 }
 
-/// Grow `params` by `ops` under live traffic (see module docs). `probe`
+/// Grow `params` by `plan` under live traffic (see module docs). `probe`
 /// rows must be full-`seq` token rows; `slots` are the in-flight sequences
 /// whose caches ride through the swap.
 pub(crate) fn hot_swap(
     params: &mut ParamStore,
     slots: &mut [Slot],
-    ops: &[GrowthOp],
+    plan: &ExpansionPlan,
     rng: &mut Pcg32,
     expand_opts: &ExpandOptions,
     probe: &[Vec<u32>],
     tol: f32,
 ) -> Result<SwapReport> {
-    if ops.is_empty() {
-        return Err(Error::Serve("hot-swap with no ops".into()));
+    if plan.is_identity() {
+        return Err(Error::Serve("hot-swap with an identity plan (no ops)".into()));
     }
     let timer = Timer::start();
 
-    // 1. surgery on a copy — the live store keeps serving until commit
-    let before = model::forward(params.config(), params, probe)?;
-    let new_params = apply_ops(params, ops, rng, expand_opts)
-        .map_err(|e| Error::Serve(format!("hot-swap surgery failed: {e}")))?;
+    // 1. plan-gated surgery on a staged copy — the live store keeps
+    //    serving until commit; the preservation probe is the plan's own
+    let staged_params = plan
+        .apply_probed(params, expand_opts, rng, probe, tol)
+        .map_err(|e| Error::Serve(format!("hot-swap {e}")))?;
 
-    // 2. preservation probe (coordinator-style, pure-Rust oracle)
-    let after = model::forward(new_params.config(), &new_params, probe)?;
-    let probe_delta = model::max_logit_delta(&before, &after)?;
-    if probe_delta > tol {
-        return Err(Error::Serve(format!(
-            "hot-swap rejected: probe max|Δ logits| = {probe_delta:.3e} > tol {tol:.0e}; \
-             live params unchanged"
-        )));
-    }
-
-    // 3. remap every in-flight cache into a staged copy (commit is all-or-
+    // 2. remap every in-flight cache into a staged copy (commit is all-or-
     //    nothing: a half-remapped engine must be unreachable)
     let mut staged = Vec::with_capacity(slots.len());
     for slot in slots.iter() {
-        let mut cache = slot.cache.clone();
-        cache.remap(ops, &new_params)?;
-        let logits = cache.last_logits(&new_params)?.into_vec();
-        staged.push((cache, logits));
+        let mut kv = StagedKv { cache: slot.cache.clone(), new_params: &staged_params.params };
+        kv.apply_plan(plan, expand_opts, rng)?;
+        let logits = kv.cache.last_logits(&staged_params.params)?.into_vec();
+        staged.push((kv.cache, logits));
     }
 
-    // 4. commit
+    // 3. commit
     let params_before = params.num_scalars();
     for (slot, (cache, logits)) in slots.iter_mut().zip(staged) {
         slot.cache = cache;
         slot.logits = logits;
     }
-    *params = new_params;
+    *params = staged_params.params;
 
     Ok(SwapReport {
-        ops: ops.len(),
-        probe_delta,
+        ops: plan.ops().len(),
+        probe_delta: staged_params.probe_delta,
         params_before,
         params_after: params.num_scalars(),
+        params_predicted: plan.params_after(),
+        flops_delta_est: plan.flops_delta(),
         remapped_sequences: slots.len(),
         swap_ms: timer.ms(),
     })
@@ -107,7 +106,7 @@ pub(crate) fn hot_swap(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ModelConfig;
+    use crate::config::{GrowthOp, ModelConfig};
     use crate::expand::Init;
 
     fn cfg() -> ModelConfig {
@@ -120,39 +119,36 @@ mod tests {
     }
 
     #[test]
-    fn swap_without_traffic_succeeds_and_reports() {
+    fn swap_without_traffic_succeeds_and_reports_predictions() {
         let c = cfg();
         let mut params = ParamStore::init(&c, &mut Pcg32::seeded(5), 0.05);
         let n0 = params.num_scalars();
         let opts = ExpandOptions { init: Init::Normal(0.3), ..Default::default() };
-        let report = hot_swap(
-            &mut params,
-            &mut [],
-            &[GrowthOp::Mlp { p: 32 }],
-            &mut Pcg32::seeded(7),
-            &opts,
-            &probe(&c, 2),
-            1e-4,
-        )
-        .unwrap();
+        let plan = ExpansionPlan::new(&c, vec![GrowthOp::Mlp { p: 32 }]).unwrap();
+        let report =
+            hot_swap(&mut params, &mut [], &plan, &mut Pcg32::seeded(7), &opts, &probe(&c, 2), 1e-4)
+                .unwrap();
         assert_eq!(report.ops, 1);
         assert_eq!(report.remapped_sequences, 0);
         assert!(report.probe_delta <= 1e-4);
         assert_eq!(report.params_before, n0);
         assert_eq!(report.params_after, params.num_scalars());
+        assert_eq!(report.params_predicted, report.params_after, "plan prediction must hold");
+        assert!(report.flops_delta_est > 0.0);
         assert_eq!(params.config().mlp, 32);
         assert!(report.swap_ms >= 0.0);
     }
 
     #[test]
-    fn empty_op_list_is_rejected() {
+    fn identity_plan_is_rejected() {
         let c = cfg();
         let mut params = ParamStore::init(&c, &mut Pcg32::seeded(5), 0.05);
         let opts = ExpandOptions::default();
+        let plan = ExpansionPlan::identity(&c);
         assert!(hot_swap(
             &mut params,
             &mut [],
-            &[],
+            &plan,
             &mut Pcg32::seeded(7),
             &opts,
             &probe(&c, 1),
@@ -170,10 +166,11 @@ mod tests {
             zero_constrained: false,
             ..Default::default()
         };
+        let plan = ExpansionPlan::new(&c, vec![GrowthOp::Mlp { p: 32 }]).unwrap();
         let err = hot_swap(
             &mut params,
             &mut [],
-            &[GrowthOp::Mlp { p: 32 }],
+            &plan,
             &mut Pcg32::seeded(7),
             &opts,
             &probe(&c, 2),

@@ -208,7 +208,8 @@ impl KvCache {
 
     /// Remap the cache through an expansion-op sequence so that decoding
     /// continues under `new_params` as if the whole history had been fed to
-    /// the expanded model.
+    /// the expanded model. Crate-internal mechanism: the public entry is
+    /// [`crate::expand::StagedKv`]'s `Expandable::apply_plan`.
     ///
     /// Two phases: (1) structural remap of the residual-stream buffers
     /// (zero-column extension under `hidden`, copy insertion under
@@ -216,7 +217,7 @@ impl KvCache {
     /// inputs and the *new* projection weights — which also covers new
     /// heads, widened K/V dims and the `sqrt(k̂/k)` key rescaling without
     /// op-specific K/V surgery. Exactness argument: DESIGN.md §9.3.
-    pub fn remap(&mut self, ops: &[GrowthOp], new_params: &ParamStore) -> Result<()> {
+    pub(crate) fn remap(&mut self, ops: &[GrowthOp], new_params: &ParamStore) -> Result<()> {
         let mut cfg = self.cfg;
         for op in ops {
             let next = op
@@ -278,9 +279,19 @@ impl KvCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::expand::{apply_ops, ExpandOptions, Init};
+    use crate::expand::{Expandable, ExpandOptions, ExpansionPlan, Init, StagedKv};
     use crate::model::{forward_incremental, forward_one};
     use crate::rng::Pcg32;
+
+    /// Remap `cache` through `ops` via the plan seam (the only entry).
+    fn remap_via_plan(cache: &mut KvCache, ops: &[GrowthOp], new_params: &ParamStore) -> Result<()> {
+        let plan = ExpansionPlan::new(cache.config(), ops.to_vec())
+            .map_err(|e| Error::Serve(format!("kv remap: {e}")))?;
+        let mut staged = StagedKv { cache: cache.clone(), new_params };
+        staged.apply_plan(&plan, &ExpandOptions::default(), &mut Pcg32::seeded(0))?;
+        *cache = staged.cache;
+        Ok(())
+    }
 
     fn cfg() -> ModelConfig {
         ModelConfig { layers: 2, hidden: 16, heads: 2, k: 8, v: 8, mlp: 32, seq: 16, vocab: 32 }
@@ -355,12 +366,15 @@ mod tests {
             let mut rng = Pcg32::seeded(11);
             let params = ParamStore::init(&c, &mut rng, 0.05);
             let history: Vec<u32> = (0..6).map(|_| rng.below(c.vocab) as u32).collect();
-            let new_params = apply_ops(&params, &ops, &mut rng, &opts).unwrap();
+            let new_params = ExpansionPlan::new(&c, ops.clone())
+                .unwrap()
+                .materialize(&params, &opts, &mut rng)
+                .unwrap();
 
             // path A: prime under old params, remap, feed one more token
             let mut remapped = KvCache::new(&c);
             feed(&mut remapped, &params, &history);
-            remapped.remap(&ops, &new_params).unwrap();
+            remap_via_plan(&mut remapped, &ops, &new_params).unwrap();
             let next = 9u32;
             let a = forward_incremental(new_params.config(), &new_params, &mut remapped, next).unwrap();
 
@@ -392,11 +406,14 @@ mod tests {
         let mut rng = Pcg32::seeded(13);
         let params = ParamStore::init(&c, &mut rng, 0.05);
         let history: Vec<u32> = (0..5).map(|_| rng.below(c.vocab) as u32).collect();
-        let new_params = apply_ops(&params, &ops, &mut rng, &opts).unwrap();
+        let new_params = ExpansionPlan::new(&c, ops.clone())
+            .unwrap()
+            .materialize(&params, &opts, &mut rng)
+            .unwrap();
 
         let mut remapped = KvCache::new(&c);
         feed(&mut remapped, &params, &history);
-        remapped.remap(&ops, &new_params).unwrap();
+        remap_via_plan(&mut remapped, &ops, &new_params).unwrap();
         let a = forward_incremental(new_params.config(), &new_params, &mut remapped, 3).unwrap();
 
         let mut window: Vec<u32> = history.clone();
@@ -416,7 +433,7 @@ mod tests {
         feed(&mut cache, &params, &[1, 2]);
         // ops say mlp=64 but hand the cache the *old* params
         let ops = vec![GrowthOp::Mlp { p: 64 }];
-        let err = cache.remap(&ops, &params).unwrap_err().to_string();
+        let err = remap_via_plan(&mut cache, &ops, &params).unwrap_err().to_string();
         assert!(err.contains("kv remap"), "{err}");
     }
 }

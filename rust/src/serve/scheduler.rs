@@ -43,6 +43,10 @@ pub type RequestId = u64;
 pub enum FinishReason {
     /// Generated the requested number of tokens.
     MaxTokens,
+    /// Exceeded the engine's per-request deadline
+    /// (`EngineOptions::request_timeout_ticks`); the completion carries
+    /// the partial output decoded before expiry.
+    TimedOut,
 }
 
 /// One queued generation request.
@@ -145,6 +149,8 @@ pub struct TickReport {
     pub decoded: usize,
     /// Requests that finished this tick.
     pub completed: usize,
+    /// In-flight sequences expired by the per-request deadline this tick.
+    pub expired: usize,
 }
 
 /// Request queue + in-flight slots (see module docs).
@@ -227,6 +233,29 @@ impl Scheduler {
             admitted += 1;
         }
         Ok((admitted, prompt_tokens))
+    }
+
+    /// Expire in-flight sequences that have spent `timeout_ticks` or more
+    /// ticks in their slot (`0` disables). Run at the start of a tick,
+    /// before admission, so freed slots are immediately reusable. Expired
+    /// sequences complete with their partial output and
+    /// [`FinishReason::TimedOut`].
+    pub fn expire(&mut self, timeout_ticks: u64) -> Vec<Completion> {
+        if timeout_ticks == 0 || self.active.is_empty() {
+            return Vec::new();
+        }
+        let tick = self.tick;
+        let mut expired = Vec::new();
+        let mut kept = Vec::with_capacity(self.active.len());
+        for slot in self.active.drain(..) {
+            if tick.saturating_sub(slot.admitted_tick) >= timeout_ticks {
+                expired.push(slot.into_completion(FinishReason::TimedOut, tick));
+            } else {
+                kept.push(slot);
+            }
+        }
+        self.active = kept;
+        expired
     }
 
     /// Advance every active slot one token. With `parallel`, slots decode
@@ -350,6 +379,37 @@ mod tests {
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].tokens.len(), 14);
         assert!(done[0].tokens.iter().all(|&t| (t as usize) < cfg().vocab));
+    }
+
+    #[test]
+    fn expire_frees_slots_and_returns_partial_completions() {
+        let p = params();
+        let mut s = Scheduler::new(1);
+        let slow = s.enqueue(greedy_req(vec![1, 2], 50));
+        let waiting = s.enqueue(greedy_req(vec![3], 2));
+        s.admit(&p).unwrap();
+        for _ in 0..2 {
+            assert!(s.decode_tick(&p, false).unwrap().is_empty());
+        }
+        // timeout 0 disables
+        assert!(s.expire(0).is_empty());
+        // 2 ticks in flight < 5: nothing expires yet
+        assert!(s.expire(5).is_empty());
+        let expired = s.expire(2);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].id, slow);
+        assert_eq!(expired[0].finish, FinishReason::TimedOut);
+        assert_eq!(expired[0].generated, 2, "partial output survives expiry");
+        assert_eq!(expired[0].tokens.len(), 2 + 2);
+        assert_eq!(expired[0].ticks_in_flight, 2);
+        // the freed slot admits the queued request
+        assert_eq!(s.admit(&p).unwrap().0, 1);
+        let mut done = Vec::new();
+        while !s.is_idle() {
+            done.extend(s.decode_tick(&p, false).unwrap());
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, waiting);
     }
 
     #[test]

@@ -69,9 +69,9 @@ impl Default for TrainState {
 /// Why a policy-driven segment ended.
 #[derive(Clone, Debug, PartialEq)]
 pub enum SegmentEnd {
-    /// The policy asked for an expansion boundary with these ops (empty =
-    /// split the segment without surgery).
-    Expand(Vec<crate::config::GrowthOp>),
+    /// The policy asked for an expansion boundary with this plan (an
+    /// identity plan = split the segment without surgery).
+    Expand(crate::expand::ExpansionPlan),
     /// The policy ended the run.
     Stop,
 }
@@ -209,7 +209,7 @@ pub fn train_segment(
         local_step += 1;
         match decision {
             Decision::Continue => {}
-            Decision::Expand(ops) => break SegmentEnd::Expand(ops),
+            Decision::Expand(plan) => break SegmentEnd::Expand(plan),
             Decision::Stop => break SegmentEnd::Stop,
         }
     };

@@ -58,6 +58,53 @@ fn info_prints_manifest_summary() {
 }
 
 #[test]
+fn plan_dry_run_prints_exact_final_params() {
+    let out = texpand(&["plan", "--schedule", "configs/growth_tiny.json"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    // the trajectory table names every stage and its ops
+    assert!(text.contains("stage0"), "{text}");
+    assert!(text.contains("mlp+layers_add"), "{text}");
+    assert!(text.contains("attn_expand+hidden"), "{text}");
+    // the machine-greppable final line matches the schedule's final config
+    // exactly (param predictions are plan postconditions, not estimates)
+    let want = texpand::config::GrowthSchedule::load(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/configs/growth_tiny.json"
+    ))
+    .unwrap()
+    .final_config()
+    .num_params();
+    assert!(text.contains(&format!("final params: {want}")), "{text}");
+}
+
+#[test]
+fn plan_json_emits_roundtrippable_ops() {
+    let out = texpand(&["plan", "--schedule", "configs/growth_tiny.json", "--json"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    // --json mode's stdout is exactly one valid JSON document
+    let doc = texpand::json::Value::parse(text.trim()).unwrap();
+    let want = texpand::config::GrowthSchedule::load(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/configs/growth_tiny.json"
+    ))
+    .unwrap()
+    .final_config()
+    .num_params();
+    assert_eq!(doc.req("final_params").unwrap().as_i64().unwrap() as usize, want);
+    let plans = doc.req("plans").unwrap().as_arr().unwrap();
+    assert_eq!(plans.len(), 2, "two boundaries in the tiny schedule");
+    for p in plans {
+        for op in p.req("ops").unwrap().as_arr().unwrap() {
+            // every emitted op must parse back through the schedule parser
+            texpand::config::GrowthOp::from_json(op).unwrap();
+        }
+        assert!(p.req("param_delta").unwrap().as_i64().unwrap() > 0);
+    }
+}
+
+#[test]
 fn train_smoke_then_inspect_and_generate() {
     let runs = std::env::temp_dir().join(format!("texpand-cli-{}", std::process::id()));
     let runs = runs.to_str().unwrap();

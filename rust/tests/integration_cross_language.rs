@@ -9,7 +9,7 @@ mod common;
 
 use common::{manifest, random_batch};
 use texpand::config::{GrowthOp, LayerPosition};
-use texpand::expand::{apply_ops, ExpandOptions, Init};
+use texpand::expand::{ExpandOptions, ExpansionPlan, Init};
 use texpand::model::{cross_entropy, forward, max_logit_delta};
 use texpand::params::ParamStore;
 use texpand::rng::Pcg32;
@@ -77,7 +77,10 @@ fn surgery_preserves_across_the_language_boundary() {
     // the schedule's stage0→stage1 ops (mlp 256, heads_add 1)
     let ops = vec![GrowthOp::Mlp { p: 256 }, GrowthOp::HeadsAdd { count: 1 }];
     let opts = ExpandOptions { init: Init::Normal(0.2), ..Default::default() };
-    let params1 = apply_ops(&params0, &ops, &mut rng, &opts).unwrap();
+    let params1 = ExpansionPlan::new(params0.config(), ops)
+        .unwrap()
+        .materialize(&params0, &opts, &mut rng)
+        .unwrap();
     assert_eq!(params1.config(), &stage1.meta.config);
 
     let before = rt.forward(&stage0, &params0, &batch.tokens).unwrap();
@@ -105,7 +108,10 @@ fn composed_surgery_reaches_final_stage_exactly() {
     let all_ops: Vec<GrowthOp> = s.stages.iter().flat_map(|st| st.apply.clone()).collect();
     assert!(all_ops.len() >= 6, "default schedule should compose many ops");
     let opts = ExpandOptions { init: Init::Normal(0.2), ..Default::default() };
-    let params_final = apply_ops(&params0, &all_ops, &mut rng, &opts).unwrap();
+    let params_final = ExpansionPlan::new(params0.config(), all_ops)
+        .unwrap()
+        .materialize(&params0, &opts, &mut rng)
+        .unwrap();
     assert_eq!(params_final.config(), &last.meta.config);
 
     let before = rt.forward(&first, &params0, &batch.tokens).unwrap();
@@ -133,7 +139,10 @@ fn violated_constraints_break_preservation_through_pjrt() {
         zero_constrained: false,
         ..Default::default()
     };
-    let bad = apply_ops(&params0, &ops, &mut rng, &opts).unwrap();
+    let bad = ExpansionPlan::new(params0.config(), ops)
+        .unwrap()
+        .materialize(&params0, &opts, &mut rng)
+        .unwrap();
     let before = rt.forward(&stage0, &params0, &batch.tokens).unwrap();
     let after = rt.forward(&stage1, &bad, &batch.tokens).unwrap();
     let delta = max_logit_delta(&before, &after).unwrap();
@@ -168,7 +177,10 @@ fn add_layers_positions_agree_with_artifacts() {
             })
             .collect();
         let opts = ExpandOptions { init: Init::Normal(0.2), ..Default::default() };
-        let params3 = apply_ops(&params2, &ops, &mut rng, &opts).unwrap();
+        let params3 = ExpansionPlan::new(params2.config(), ops)
+            .unwrap()
+            .materialize(&params2, &opts, &mut rng)
+            .unwrap();
         let after = rt.forward(&stage3, &params3, &batch.tokens).unwrap();
         let delta = max_logit_delta(&before, &after).unwrap();
         assert!(delta <= CROSS_TOL, "{position:?}: max|Δ| = {delta}");

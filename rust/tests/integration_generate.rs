@@ -86,7 +86,10 @@ fn generation_preserved_across_expansion() {
         init: texpand::expand::Init::Normal(0.2),
         ..Default::default()
     };
-    let params1 = texpand::expand::apply_ops(&params0, &ops, &mut rng, &opts).unwrap();
+    let params1 = texpand::expand::ExpansionPlan::new(params0.config(), ops)
+        .unwrap()
+        .materialize(&params0, &opts, &mut rng)
+        .unwrap();
     assert_eq!(params1.config(), &stage1.meta.config);
 
     let prompts = vec![vec![7u32, 8, 9]; m.batch];

@@ -15,7 +15,7 @@ use texpand::autodiff::{ExecBackend, NativeBackend};
 use texpand::config::{PolicyConfig, PolicyKind, TrainConfig};
 use texpand::coordinator::{Coordinator, CoordinatorOptions};
 use texpand::data::{Batcher, CorpusKind};
-use texpand::expand::{apply_ops_owned, ExpandOptions, Init};
+use texpand::expand::{ExpandOptions, ExpansionPlan, Init};
 use texpand::growth::{GreedyBranch, LossPlateau};
 use texpand::metrics::RunLogger;
 use texpand::optim::Optimizer;
@@ -96,13 +96,9 @@ fn fixed_policy_bit_identical_to_stagewise_replay() {
     let mut state = TrainState::new();
     for (i, stage) in sched.stages.iter().enumerate() {
         if i > 0 && !stage.apply.is_empty() {
-            let dummy = texpand::config::ModelConfig {
-                layers: 1, hidden: 1, heads: 1, k: 1, v: 1, mlp: 1, seq: 1, vocab: 1,
-            };
-            let old = std::mem::replace(&mut params, ParamStore::zeros(&dummy));
             let expand_opts = ExpandOptions { init: Init::Normal(0.02), ..Default::default() };
-            params = apply_ops_owned(old, &stage.apply, &mut rng, &expand_opts).unwrap();
-            opt.expand(&stage.apply).unwrap();
+            let plan = ExpansionPlan::new(params.config(), stage.apply.clone()).unwrap();
+            plan.apply_train(&mut params, &mut opt, &expand_opts, &mut rng).unwrap();
         }
         let exec = backend.load_stage(&manifest, &stage.name).unwrap();
         train_stage(

@@ -10,7 +10,7 @@
 //!     preservation probe at `max|Δ logits| ≤ preserve_tol`.
 
 use texpand::config::{GrowthOp, LayerPosition, ModelConfig};
-use texpand::expand::{ExpandOptions, Init};
+use texpand::expand::{ExpandOptions, ExpansionPlan, Init};
 use texpand::generate::{generate_ref, Sampler};
 use texpand::params::ParamStore;
 use texpand::rng::Pcg32;
@@ -38,6 +38,12 @@ fn greedy() -> Sampler {
 
 fn engine(params: ParamStore, slots: usize, parallel: bool) -> Engine {
     Engine::new(params, EngineOptions { max_slots: slots, parallel, ..Default::default() })
+}
+
+/// Build a validated plan from the engine's live config (the only swap
+/// currency the engine accepts).
+fn plan_for(eng: &Engine, ops: Vec<GrowthOp>) -> ExpansionPlan {
+    ExpansionPlan::new(eng.config(), ops).unwrap()
 }
 
 /// Run every prompt through the engine and return completions in submit
@@ -108,14 +114,18 @@ fn hot_swap_mid_flight_keeps_greedy_continuations_identical() {
     }
     assert!(!eng.is_idle(), "swap must land mid-flight");
 
-    let ops = vec![
-        GrowthOp::Mlp { p: 64 },
-        GrowthOp::HeadsAdd { count: 1 },
-        GrowthOp::LayersAdd { count: 1, position: LayerPosition::At(1) },
-    ];
+    let plan = plan_for(
+        &eng,
+        vec![
+            GrowthOp::Mlp { p: 64 },
+            GrowthOp::HeadsAdd { count: 1 },
+            GrowthOp::LayersAdd { count: 1, position: LayerPosition::At(1) },
+        ],
+    );
     // aggressive unconstrained init: preservation must hold regardless
     let opts = ExpandOptions { init: Init::Normal(0.3), ..Default::default() };
-    let report = eng.hot_swap(&ops, &mut Pcg32::seeded(9), &opts).unwrap();
+    let report = eng.hot_swap(&plan, &mut Pcg32::seeded(9), &opts).unwrap();
+    assert_eq!(report.params_after, report.params_predicted, "plan prediction must hold");
     assert!(report.probe_delta <= PRESERVE_TOL, "probe delta {}", report.probe_delta);
     assert_eq!(report.remapped_sequences, 3);
     assert_eq!((eng.config().mlp, eng.config().heads, eng.config().layers), (64, 3, 3));
@@ -138,9 +148,9 @@ fn hot_swap_with_scaling_ops_stays_within_probe_tolerance() {
     for _ in 0..3 {
         eng.tick().unwrap();
     }
-    let ops = vec![GrowthOp::AttnExpand { k: 16 }, GrowthOp::Hidden { h: 24 }];
+    let plan = plan_for(&eng, vec![GrowthOp::AttnExpand { k: 16 }, GrowthOp::Hidden { h: 24 }]);
     let opts = ExpandOptions { init: Init::Normal(0.3), ..Default::default() };
-    let report = eng.hot_swap(&ops, &mut Pcg32::seeded(11), &opts).unwrap();
+    let report = eng.hot_swap(&plan, &mut Pcg32::seeded(11), &opts).unwrap();
     assert!(report.probe_delta <= PRESERVE_TOL, "probe delta {}", report.probe_delta);
     assert_eq!((eng.config().k, eng.config().hidden), (16, 24));
     eng.run_until_idle().unwrap();
@@ -167,8 +177,8 @@ fn rejected_swap_leaves_serving_byte_identical() {
         zero_constrained: false,
         ..Default::default()
     };
-    let err =
-        eng.hot_swap(&[GrowthOp::Mlp { p: 64 }], &mut Pcg32::seeded(13), &opts).unwrap_err();
+    let plan = plan_for(&eng, vec![GrowthOp::Mlp { p: 64 }]);
+    let err = eng.hot_swap(&plan, &mut Pcg32::seeded(13), &opts).unwrap_err();
     assert!(err.to_string().contains("rejected"), "{err}");
     assert_eq!(eng.config(), &cfg());
 
@@ -193,16 +203,18 @@ fn two_consecutive_swaps_compose_under_load() {
     for _ in 0..3 {
         eng.tick().unwrap();
     }
-    eng.hot_swap(&[GrowthOp::Mlp { p: 48 }], &mut rng, &opts).unwrap();
+    let first = plan_for(&eng, vec![GrowthOp::Mlp { p: 48 }]);
+    eng.hot_swap(&first, &mut rng, &opts).unwrap();
     for _ in 0..3 {
         eng.tick().unwrap();
     }
-    eng.hot_swap(
-        &[GrowthOp::HeadsAdd { count: 1 }, GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top }],
-        &mut rng,
-        &opts,
-    )
-    .unwrap();
+    // the second plan is built from the *grown* live config — plans are
+    // config-anchored, so composition across swaps is explicit
+    let second = plan_for(
+        &eng,
+        vec![GrowthOp::HeadsAdd { count: 1 }, GrowthOp::LayersAdd { count: 1, position: LayerPosition::Top }],
+    );
+    eng.hot_swap(&second, &mut rng, &opts).unwrap();
     assert_eq!(eng.counters().swaps, 2);
 
     eng.run_until_idle().unwrap();
