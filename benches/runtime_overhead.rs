@@ -1,30 +1,86 @@
 //! L3 runtime-overhead decomposition (DESIGN.md §Perf target: coordinator
 //! overhead < 10% of PJRT execute time at the final stage).
 //!
-//! Breaks one training step into its cost components:
-//!   marshal   — ParamStore -> Literals (+ tokens)
-//!   execute   — PJRT step (includes XLA compute + output tuple copy-out)
-//!   clip+adam — L3 optimizer work
-//!   batch     — data synthesis
-//! and reports the overhead fraction. Also measures the one-time costs
-//! (HLO parse+compile) and the pure-Rust reference forward for comparison
-//! (showing why the hot path runs on XLA, not the rust oracle).
+//! Two sections:
 //!
-//! Run: `cargo bench --bench runtime_overhead` (needs artifacts)
+//! * `metrics_overhead` — artifact-free: decode throughput of the serve
+//!   engine with the obs registry publishing vs disabled. The registry is
+//!   on the per-token hot path, so its cost must stay < 5% (DESIGN.md
+//!   §14); ci.sh asserts the row exists.
+//! * PJRT step decomposition — breaks one training step into its cost
+//!   components (marshal / execute / clip+adam / batch) and reports the
+//!   overhead fraction, plus one-time costs (HLO parse+compile) and the
+//!   pure-Rust reference forward for scale. Needs `make artifacts`;
+//!   skipped with a note when the manifest is absent, so the bench stays
+//!   runnable offline.
+//!
+//! Run: `cargo bench --bench runtime_overhead`
 
 use texpand::bench_util::{bench, Reporter};
 use texpand::config::{OptimKind, TrainConfig};
 use texpand::data::{Batcher, CorpusKind};
+use texpand::generate::Sampler;
 use texpand::json::Value;
 use texpand::metrics::Timer;
+use texpand::obs::MetricsRegistry;
 use texpand::optim::{clip_global_norm, Optimizer};
 use texpand::params::ParamStore;
 use texpand::rng::Pcg32;
 use texpand::runtime::{tensor_to_literal, tokens_to_literal, Manifest, Runtime};
+use texpand::serve::{Engine, EngineOptions};
+
+/// Decode tokens/sec of a fixed serving burst, with the engine publishing
+/// into a fresh registry (`metrics` on) or with instrumentation compiled
+/// to `None` (`metrics` off). Fresh engine + registry per round so no
+/// histogram state carries over; the best of the timed rounds is returned
+/// (least scheduler noise), the first round is warmup.
+fn decode_tps(metrics: bool) -> f64 {
+    let cfg = texpand::config::ModelConfig {
+        layers: 2, hidden: 32, heads: 2, k: 16, v: 16, mlp: 64, seq: 48, vocab: 128,
+    };
+    let mut best = 0.0f64;
+    for round in 0..4u64 {
+        let registry = MetricsRegistry::new();
+        let params = ParamStore::init(&cfg, &mut Pcg32::seeded(7), 0.02);
+        let opts = EngineOptions { max_slots: 4, parallel: false, metrics, ..Default::default() };
+        let mut engine = Engine::with_registry(params, opts, &registry);
+        let sampler = Sampler { seed: round, ..Default::default() };
+        for i in 0..8usize {
+            let prompt: Vec<u32> =
+                (0..8usize).map(|t| ((i * 13 + t * 7) % cfg.vocab) as u32).collect();
+            engine.submit(prompt, 24, sampler).unwrap();
+        }
+        engine.run_until_idle().unwrap();
+        let tps = engine.counters().tokens_per_sec();
+        if round > 0 {
+            best = best.max(tps);
+        }
+    }
+    best
+}
 
 fn main() {
-    let manifest = Manifest::load("artifacts", "manifest.json").expect("run `make artifacts`");
     let mut rep = Reporter::new("runtime_overhead");
+
+    // --- metrics overhead (artifact-free) --------------------------------
+    let on_tps = decode_tps(true);
+    let off_tps = decode_tps(false);
+    let overhead = if off_tps > 0.0 { (off_tps - on_tps) / off_tps } else { 0.0 };
+    let kind = vec![("kind", Value::str("metrics_overhead"))];
+    rep.value_row("decode tok/s (metrics on)", "tokens_per_sec", on_tps, kind.clone());
+    rep.value_row("decode tok/s (metrics off)", "tokens_per_sec", off_tps, kind.clone());
+    rep.value_row("metrics overhead (1 - on/off)", "overhead_fraction", overhead, kind);
+    println!("target: metrics overhead_fraction < 0.05 (DESIGN.md §14).");
+
+    // --- PJRT step decomposition (needs `make artifacts`) ----------------
+    let manifest = match Manifest::load("artifacts", "manifest.json") {
+        Ok(m) => m,
+        Err(e) => {
+            println!("\nskipping pjrt step decomposition ({e}); run `make artifacts` to enable");
+            rep.flush();
+            return;
+        }
+    };
 
     // one-time costs: parse + compile per stage
     let mut rt = Runtime::cpu().unwrap();

@@ -92,6 +92,58 @@ if [ "$FAST" = "0" ]; then
     echo "ci.sh: no nonzero tokens/sec step row in runs/bench.jsonl" >&2
     exit 1
   fi
+
+  echo "==> serve metrics smoke (live /metrics scrape over HTTP + span log)"
+  # the binary is its own scraper (`texpand scrape`): CI images have no
+  # curl. Port 0 picks a free port; the resolved address is parsed from
+  # the linger line, which only prints after serving drained — so the
+  # scrape below must see nonzero counters.
+  SERVE_LOG="$SMOKE_RUNS/serve-smoke.log"
+  ./target/release/texpand serve \
+    --requests 6 --tokens 32 --slots 2 --serial \
+    --metrics-addr 127.0.0.1:0 --metrics-linger-ms 30000 \
+    --runs "$SMOKE_RUNS" --run-name ci-serve-smoke > "$SERVE_LOG" 2>&1 &
+  SERVE_PID=$!
+  ADDR=""
+  for _ in $(seq 1 300); do
+    ADDR="$(sed -n 's|^metrics lingering on http://\([^ ]*\) .*|\1|p' "$SERVE_LOG")"
+    [ -n "$ADDR" ] && break
+    sleep 0.1
+  done
+  if [ -z "$ADDR" ]; then
+    echo "ci.sh: serve never reached the metrics linger phase" >&2
+    cat "$SERVE_LOG" >&2
+    exit 1
+  fi
+  SCRAPE="$(./target/release/texpand scrape --addr "$ADDR")"
+  if ! echo "$SCRAPE" | grep -Eq '^texpand_serve_tokens_generated_total [1-9]'; then
+    echo "ci.sh: scrape missing nonzero texpand_serve_tokens_generated_total" >&2
+    echo "$SCRAPE" >&2
+    exit 1
+  fi
+  if ! echo "$SCRAPE" | grep -q '^# TYPE texpand_serve_decode_latency_ms histogram'; then
+    echo "ci.sh: scrape missing decode latency histogram TYPE header" >&2
+    exit 1
+  fi
+  if ! echo "$SCRAPE" | grep -q 'texpand_serve_decode_latency_ms_bucket{le="+Inf"}'; then
+    echo "ci.sh: decode latency histogram has no +Inf bucket" >&2
+    exit 1
+  fi
+  ./target/release/texpand scrape --addr "$ADDR" --path /quitz > /dev/null
+  wait "$SERVE_PID"
+  if ! grep -q '"event":"span"' "$SMOKE_RUNS/ci-serve-smoke/events.jsonl"; then
+    echo "ci.sh: no span rows in $SMOKE_RUNS/ci-serve-smoke/events.jsonl" >&2
+    exit 1
+  fi
+
+  echo "==> runtime-overhead bench smoke (metrics on/off decode cost)"
+  # artifact-free section only (the PJRT decomposition self-skips); the
+  # freshest rows must include the metrics_overhead fraction
+  TEXPAND_THREADS=2 TEXPAND_BENCH_BUDGET_MS=60 cargo bench --bench runtime_overhead
+  if ! grep '"kind":"metrics_overhead"' runs/bench.jsonl | tail -n 3 | grep -q '"overhead_fraction":'; then
+    echo "ci.sh: no metrics_overhead overhead_fraction row in runs/bench.jsonl" >&2
+    exit 1
+  fi
 fi
 
 echo "ci.sh: all green"

@@ -317,6 +317,13 @@ impl Coordinator {
                 ("expansions", Value::num(boundary_reports.len() as f64)),
             ],
         );
+        logger.flush();
+        if let Some(e) = logger.take_write_error() {
+            eprintln!(
+                "warning: run log writes failed ({} lines dropped): {e}",
+                logger.dropped_lines()
+            );
+        }
         Ok(RunSummary {
             run_dir: logger.dir().to_string(),
             policy: policy.name().to_string(),
@@ -406,6 +413,12 @@ impl Coordinator {
                 ("flops_delta_est", Value::num(plan.flops_delta())),
             ],
         );
+        // an expansion boundary is the event this whole repo exists for:
+        // make it visible to a live scrape, and durable in the log
+        crate::obs::global()
+            .counter("texpand_train_expansions_total", "Committed expansion boundaries")
+            .inc();
+        logger.flush();
         if self.opts.verify_boundaries {
             if rust_delta > self.tcfg.preserve_tol {
                 return Err(Error::Train(format!(

@@ -53,6 +53,12 @@
 //! * [`coordinator`] — the growth coordinator: a policy-driven loop over
 //!   segments, applying boundary surgery and verifying preservation.
 //! * [`metrics`] — CSV/JSONL run logging, timers, serving counters.
+//! * [`obs`] — live observability (S19): lock-free metrics registry
+//!   (counters/gauges/fixed-bucket latency histograms with p50/p95/p99
+//!   estimation), Prometheus text exposition served over a `std::net`
+//!   HTTP listener (`/metrics`, `/healthz`), and per-request
+//!   queued→prefill→decode span tracing on the serve path
+//!   (DESIGN.md §14).
 //! * [`cli`] — argument parsing for the `texpand` binary.
 //!
 //! Serving & hot-swap (S15; `texpand serve`):
@@ -79,6 +85,7 @@ pub mod growth;
 pub mod json;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod parallel;
 pub mod params;

@@ -7,6 +7,8 @@
 //!   generate  sample text from a trained checkpoint via the fwd artifact
 //!   serve     KV-cached batched inference engine on the pure-Rust path,
 //!             with optional mid-run function-preserving hot-swap
+//!   scrape    std::net HTTP GET against a running --metrics-addr
+//!             listener (curl-free metrics client for CI)
 //!   plan      dry-run a growth schedule as ExpansionPlans: config /
 //!             param / FLOP trajectory, no training
 //!   inspect   print a checkpoint's config and tensor statistics
@@ -36,6 +38,7 @@ USAGE:
                   [--seed N] [--corpus markov|copy|arithmetic]
                   [--corpus-len N] [--no-verify] [--no-checkpoints]
                   [--threads N] [--micro-batch N]
+                  [--metrics-addr HOST:PORT]
   texpand verify  [--backend native|pjrt] [--schedule P] [--artifacts D]
                   [--seed N]
   texpand family  --base CKPT [--backend native|pjrt] [--schedule P]
@@ -50,6 +53,9 @@ USAGE:
                   [--max-pending N] [--timeout-ticks N]
                   [--swap-ops SPEC] [--swap-after-ticks N]
                   (SPEC e.g. \"mlp=256,heads_add=1,layers_add=1@top\")
+                  [--metrics-addr HOST:PORT] [--metrics-linger-ms N]
+                  [--runs D] [--run-name N]
+  texpand scrape  --addr HOST:PORT [--path /metrics] [--timeout-ms N]
   texpand plan    [--schedule P] [--json]
   texpand inspect --ckpt PATH
   texpand info    [--backend native|pjrt] [--schedule P] [--artifacts D]
@@ -71,6 +77,14 @@ fires the next staged expansion when the eval loss stops improving
 branch-probes candidate expansions and commits the best loss-per-compute
 one. plateau/greedy decide architectures at run time, so they need
 --backend native; pjrt executes a fixed AOT stage table only.
+
+Observability: --metrics-addr (train, serve) binds a std::net HTTP
+listener exposing the live metrics registry as Prometheus text at
+/metrics (plus /healthz); port 0 picks a free port, printed at startup.
+serve additionally logs per-request span events to
+runs/<name>/events.jsonl, and --metrics-linger-ms keeps the listener up
+after serving drains so late scrapes still land (GET /quitz releases it
+early). `texpand scrape` is the matching curl-free client.
 
 Defaults: --schedule configs/growth_default.json, --artifacts artifacts,
           --runs runs, --backend pjrt.";
@@ -97,6 +111,7 @@ fn run() -> Result<()> {
         Some("family") => cmd_family(&args),
         Some("generate") => cmd_generate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("scrape") => cmd_scrape(&args),
         Some("plan") => cmd_plan(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("info") => cmd_info(&args),
@@ -247,6 +262,9 @@ fn build_coordinator(args: &Args) -> Result<Coordinator> {
 fn cmd_train(args: &Args) -> Result<()> {
     let runs_root = args.get_or("runs", "runs");
     let run_name = args.get_or("run-name", "train");
+    // consumed here (before build_coordinator rejects unknown flags);
+    // bound after the coordinator is constructed so flag errors win
+    let metrics_addr = args.get("metrics-addr");
     // adaptive policies synthesize architectures at run time; the pjrt
     // backend can only execute its precompiled stage table — reject the
     // combination up front, BEFORE any manifest/artifact resolution, so
@@ -286,7 +304,20 @@ fn cmd_train(args: &Args) -> Result<()> {
     reject_adaptive_on_pjrt(pcfg.kind)?;
     let mut policy =
         texpand::growth::build_policy(&coord.schedule, coord.opts.steps_scale, &pcfg, coord.tcfg.seed);
+    // live scrape target for the whole run: train_segment publishes
+    // step/loss/throughput gauges into the same global registry
+    let metrics_server = match &metrics_addr {
+        Some(addr) => {
+            let srv = texpand::obs::MetricsServer::bind(addr, texpand::obs::global().clone())?;
+            println!("metrics listening on http://{}/metrics", srv.local_addr());
+            Some(srv)
+        }
+        None => None,
+    };
     let summary = coord.run_with_policy(&runs_root, &run_name, policy.as_mut())?;
+    if let Some(srv) = metrics_server {
+        srv.shutdown();
+    }
     println!("\n=== run summary ({}, policy {}) ===", summary.run_dir, summary.policy);
     println!("{:<10} {:>8} {:>10} {:>10} {:>12} {:>10}", "stage", "steps", "first", "final", "tok/s", "ms/step");
     for s in &summary.stages {
@@ -463,6 +494,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_pending = args.get_usize("max-pending")?;
     let timeout_ticks = args.get_u64("timeout-ticks")?;
     let ckpt = args.get("ckpt");
+    let metrics_addr = args.get("metrics-addr");
+    let linger_ms = args.get_u64("metrics-linger-ms")?.unwrap_or(0);
+    let runs_root = args.get_or("runs", "runs");
+    let run_name = args.get_or("run-name", "serve");
     args.reject_unknown()?;
 
     let params = match &ckpt {
@@ -492,6 +527,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let mut engine = Engine::new(params, opts);
 
+    // live scrape target + span log: the engine publishes into the global
+    // registry, so one listener covers counters, gauges and latency
+    // histograms; per-request spans land in runs/<name>/events.jsonl
+    let metrics_server = match &metrics_addr {
+        Some(addr) => {
+            let srv = texpand::obs::MetricsServer::bind(addr, texpand::obs::global().clone())?;
+            println!("metrics listening on http://{}/metrics", srv.local_addr());
+            Some(srv)
+        }
+        None => None,
+    };
+    let mut logger = texpand::metrics::RunLogger::create(&runs_root, &run_name)?.quiet();
+    logger.event(
+        "serve_start",
+        vec![
+            ("requests", Value::num(requests as f64)),
+            ("tokens", Value::num(tokens as f64)),
+            ("slots", Value::num(slots as f64)),
+        ],
+    );
+
     // corpus-derived prompts: staggered windows over synthesized text
     let tok = texpand::data::ByteTokenizer::new(cfg.vocab)?;
     let text = texpand::data::generate_corpus(corpus, 4096, seed ^ 0x5E7E);
@@ -512,6 +568,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut swapped = false;
     while !engine.is_idle() {
         engine.tick()?;
+        for span in engine.take_spans() {
+            logger.event("span", span.fields());
+        }
         if let (false, Some(ops)) = (swapped, &swap_ops) {
             if engine.ticks() >= swap_after {
                 let plan = texpand::expand::ExpansionPlan::new(engine.config(), ops.clone())?;
@@ -554,6 +613,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     println!("\ncounters: {}", engine.counters().to_json().to_pretty());
+    // backpressure-drain ticks finish requests before the main loop runs;
+    // sweep any spans still buffered in the engine into the log
+    for span in engine.take_spans() {
+        logger.event("span", span.fields());
+    }
+    logger.event("serve_done", vec![("counters", engine.counters().to_json())]);
+    logger.flush();
+    if let Some(e) = logger.take_write_error() {
+        eprintln!(
+            "warning: serve log writes failed ({} lines dropped): {e}",
+            logger.dropped_lines()
+        );
+    }
+    if let Some(srv) = metrics_server {
+        if linger_ms > 0 {
+            println!(
+                "metrics lingering on http://{} for {linger_ms} ms (GET /quitz to release)",
+                srv.local_addr()
+            );
+            srv.wait_for_quit(std::time::Duration::from_millis(linger_ms));
+        }
+        srv.shutdown();
+    }
+    Ok(())
+}
+
+/// `texpand scrape` — one HTTP GET against a `--metrics-addr` listener
+/// using the std::net client in [`texpand::obs`]; CI images have no curl,
+/// so the binary is its own scraper. Prints the response body verbatim.
+fn cmd_scrape(args: &Args) -> Result<()> {
+    let addr = args.require("addr")?;
+    let path = args.get_or("path", "/metrics");
+    let timeout_ms = args.get_u64("timeout-ms")?.unwrap_or(5000);
+    args.reject_unknown()?;
+    let timeout = std::time::Duration::from_millis(timeout_ms.max(1));
+    let (status, body) = texpand::obs::http_get(&addr, &path, timeout)?;
+    if status != 200 {
+        return Err(Error::Serve(format!("GET {path} on {addr} returned HTTP {status}")));
+    }
+    print!("{body}");
     Ok(())
 }
 

@@ -2,12 +2,16 @@
 //!
 //! A [`RunLogger`] owns one run directory (`runs/<name>/`) and writes:
 //! * `events.jsonl` — every structured event (step losses, boundary
-//!   surgeries, preservation probes, throughput);
+//!   surgeries, preservation probes, throughput, serve spans);
 //! * `loss.csv` — `global_step,stage,loss,tokens_seen,wall_ms` rows, the
 //!   series behind the E3 loss-curve figures.
 //!
-//! Logging is line-buffered append; a crashed run keeps everything logged
-//! so far (the coordinator re-opens with a fresh run name on restart).
+//! Writes are buffered and never abort the run: a failed line is counted
+//! ([`RunLogger::dropped_lines`]) and the *first* underlying IO error is
+//! kept for the owner to surface ([`RunLogger::take_write_error`]) — a
+//! full disk should cost log lines, not the training run. Callers flush
+//! at segment boundaries ([`RunLogger::flush`]); dropping the logger
+//! flushes too, so a completed run is always fully on disk.
 
 use std::io::Write;
 use std::time::Instant;
@@ -18,10 +22,16 @@ use crate::json::Value;
 /// Structured logger for one training/benchmark run.
 pub struct RunLogger {
     dir: String,
-    events: std::fs::File,
-    loss_csv: std::fs::File,
+    events: Box<dyn Write + Send>,
+    events_path: String,
+    loss_csv: Box<dyn Write + Send>,
+    loss_path: String,
     start: Instant,
     quiet: bool,
+    /// Event/CSV lines lost to write failures.
+    dropped_lines: u64,
+    /// First write/flush failure, kept until taken.
+    write_error: Option<Error>,
 }
 
 impl RunLogger {
@@ -46,7 +56,17 @@ impl RunLogger {
         if fresh {
             writeln!(loss_csv, "global_step,stage,loss,tokens_seen,wall_ms").map_err(|e| Error::io(&loss_path, e))?;
         }
-        Ok(RunLogger { dir, events, loss_csv, start: Instant::now(), quiet: false })
+        Ok(RunLogger {
+            dir,
+            events: Box::new(std::io::BufWriter::new(events)),
+            events_path,
+            loss_csv: Box::new(std::io::BufWriter::new(loss_csv)),
+            loss_path,
+            start: Instant::now(),
+            quiet: false,
+            dropped_lines: 0,
+            write_error: None,
+        })
     }
 
     /// Suppress stdout mirroring (benches).
@@ -64,12 +84,41 @@ impl RunLogger {
         self.start.elapsed().as_secs_f64() * 1e3
     }
 
+    /// Lines lost to write failures so far.
+    pub fn dropped_lines(&self) -> u64 {
+        self.dropped_lines
+    }
+
+    /// Take the first recorded write/flush failure, if any (take-once;
+    /// the owner decides whether to warn or abort).
+    pub fn take_write_error(&mut self) -> Option<Error> {
+        self.write_error.take()
+    }
+
+    /// Flush both buffered writers — called at segment boundaries so a
+    /// crash between segments loses at most one segment's tail. Flush
+    /// failures are recorded like write failures.
+    pub fn flush(&mut self) {
+        if let Err(e) = self.events.flush() {
+            let path = self.events_path.clone();
+            self.write_error.get_or_insert_with(|| Error::io(path, e));
+        }
+        if let Err(e) = self.loss_csv.flush() {
+            let path = self.loss_path.clone();
+            self.write_error.get_or_insert_with(|| Error::io(path, e));
+        }
+    }
+
     /// Write a structured event (adds `t_ms` automatically).
     pub fn event(&mut self, kind: &str, fields: Vec<(&str, Value)>) {
         let mut all = vec![("event", Value::str(kind)), ("t_ms", Value::num(self.elapsed_ms()))];
         all.extend(fields);
         let line = Value::obj(all).to_string();
-        let _ = writeln!(self.events, "{line}");
+        if let Err(e) = writeln!(self.events, "{line}") {
+            self.dropped_lines += 1;
+            let path = self.events_path.clone();
+            self.write_error.get_or_insert_with(|| Error::io(path, e));
+        }
         if !self.quiet {
             println!("[{kind}] {line}");
         }
@@ -83,6 +132,8 @@ impl RunLogger {
     /// [`crate::expand::ExpansionPlan`] metadata (round-trippable ops,
     /// exact param delta, estimated FLOPs delta, predicted config) as the
     /// `plan` field, so the log alone reconstructs what was committed.
+    /// Each row also bumps the `texpand_policy_decisions_total` counter
+    /// (labelled by verdict) in the global metrics registry.
     pub fn decision(
         &mut self,
         policy: &str,
@@ -100,6 +151,13 @@ impl RunLogger {
             Some(e) => Value::num(f64::from(e)),
             None => Value::Null,
         };
+        crate::obs::global()
+            .counter_with(
+                "texpand_policy_decisions_total",
+                "Growth policy decisions by verdict",
+                &[("decision", decision.tag())],
+            )
+            .inc();
         self.event(
             "decision",
             vec![
@@ -120,11 +178,36 @@ impl RunLogger {
 
     /// Append one loss-curve row.
     pub fn loss_row(&mut self, global_step: usize, stage: &str, loss: f32, tokens_seen: usize) {
-        let _ = writeln!(
+        if let Err(e) = writeln!(
             self.loss_csv,
             "{global_step},{stage},{loss},{tokens_seen},{:.1}",
             self.elapsed_ms()
-        );
+        ) {
+            self.dropped_lines += 1;
+            let path = self.loss_path.clone();
+            self.write_error.get_or_insert_with(|| Error::io(path, e));
+        }
+    }
+}
+
+/// p50/p95/p99 of one request phase in milliseconds, estimated from the
+/// serve engine's fixed-bucket latency histograms (exact to within one
+/// bucket width — see [`crate::obs::histogram`]). All zero until the
+/// first request finishes or when engine metrics are disabled.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhasePercentiles {
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl PhasePercentiles {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("p50_ms", Value::num(self.p50_ms)),
+            ("p95_ms", Value::num(self.p95_ms)),
+            ("p99_ms", Value::num(self.p99_ms)),
+        ])
     }
 }
 
@@ -132,7 +215,9 @@ impl RunLogger {
 ///
 /// Maintained by [`crate::serve::Engine`]: one counter bump per tick /
 /// admission / swap, wall time split by phase so decode throughput is not
-/// polluted by prompt priming or swap surgery.
+/// polluted by prompt priming or swap surgery. The `*_latency` percentile
+/// fields mirror the engine's phase histograms, refreshed as requests
+/// finish.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServeCounters {
     pub submitted: u64,
@@ -154,6 +239,14 @@ pub struct ServeCounters {
     pub decode_ns: u128,
     pub prime_ns: u128,
     pub swap_ns: u128,
+    /// Queue-wait percentiles across finished requests.
+    pub queue_latency: PhasePercentiles,
+    /// Prompt-prime percentiles across finished requests.
+    pub prefill_latency: PhasePercentiles,
+    /// Decode-phase percentiles across finished requests.
+    pub decode_latency: PhasePercentiles,
+    /// Submit-to-finish percentiles across finished requests.
+    pub total_latency: PhasePercentiles,
 }
 
 impl ServeCounters {
@@ -173,7 +266,10 @@ impl ServeCounters {
         self.decode_ns as f64 / 1e6 / self.ticks as f64
     }
 
-    /// Structured snapshot for `events.jsonl` / CLI output.
+    /// Structured snapshot for `events.jsonl` / CLI output. The first 13
+    /// fields are the pre-percentile layout, kept in place and in order
+    /// so existing consumers parse unchanged; the `*_latency` objects are
+    /// appended after them.
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("submitted", Value::num(self.submitted as f64)),
@@ -189,6 +285,10 @@ impl ServeCounters {
             ("swap_ms", Value::num(self.swap_ns as f64 / 1e6)),
             ("tokens_per_sec", Value::num(self.tokens_per_sec())),
             ("mean_tick_ms", Value::num(self.mean_tick_ms())),
+            ("queue_latency", self.queue_latency.to_json()),
+            ("prefill_latency", self.prefill_latency.to_json()),
+            ("decode_latency", self.decode_latency.to_json()),
+            ("total_latency", self.total_latency.to_json()),
         ])
     }
 }
@@ -260,6 +360,58 @@ mod tests {
     }
 
     #[test]
+    fn flush_makes_buffered_lines_visible_before_drop() {
+        let root = tmpdir("flush");
+        let mut log = RunLogger::create(&root, "run4").unwrap().quiet();
+        log.event("x", vec![]);
+        log.flush();
+        assert!(log.take_write_error().is_none());
+        assert_eq!(log.dropped_lines(), 0);
+        let events = std::fs::read_to_string(format!("{root}/run4/events.jsonl")).unwrap();
+        assert_eq!(events.lines().count(), 1, "flushed line visible while logger is open");
+        drop(log);
+        std::fs::remove_dir_all(format!("{root}/run4")).unwrap();
+    }
+
+    /// Writer that fails every write/flush, for the error path.
+    struct FailingWriter;
+
+    impl Write for FailingWriter {
+        fn write(&mut self, _: &[u8]) -> std::io::Result<usize> {
+            Err(std::io::Error::new(std::io::ErrorKind::WriteZero, "disk full"))
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::WriteZero, "disk full"))
+        }
+    }
+
+    #[test]
+    fn failed_writes_are_counted_and_first_error_surfaced() {
+        let mut log = RunLogger {
+            dir: String::new(),
+            events: Box::new(FailingWriter),
+            events_path: "ram/events.jsonl".into(),
+            loss_csv: Box::new(FailingWriter),
+            loss_path: "ram/loss.csv".into(),
+            start: Instant::now(),
+            quiet: true,
+            dropped_lines: 0,
+            write_error: None,
+        };
+        log.event("a", vec![]);
+        log.loss_row(1, "s", 1.0, 1);
+        log.event("b", vec![]);
+        assert_eq!(log.dropped_lines(), 3, "every failed line is counted");
+        let err = log.take_write_error().expect("first error kept");
+        assert!(err.to_string().contains("ram/events.jsonl"), "{err}");
+        assert!(log.take_write_error().is_none(), "take-once");
+        log.flush();
+        let err = log.take_write_error().expect("flush failures surface too");
+        assert!(err.to_string().contains("disk full"), "{err}");
+        assert_eq!(log.dropped_lines(), 3, "flush does not bump dropped lines");
+    }
+
+    #[test]
     fn decision_rows_carry_evidence_and_plan_metadata() {
         use crate::config::{GrowthOp, ModelConfig};
         use crate::expand::ExpansionPlan;
@@ -323,11 +475,16 @@ mod tests {
         c.tokens_generated = 500;
         c.decode_ns = 1_000_000_000; // 1 s
         c.ticks = 10;
+        c.decode_latency = PhasePercentiles { p50_ms: 1.0, p95_ms: 2.0, p99_ms: 3.0 };
         assert!((c.tokens_per_sec() - 500.0).abs() < 1e-9);
         assert!((c.mean_tick_ms() - 100.0).abs() < 1e-9);
         let j = c.to_json();
         assert_eq!(j.req("tokens_generated").unwrap().as_i64().unwrap(), 500);
         assert!((j.req("tokens_per_sec").unwrap().as_f64().unwrap() - 500.0).abs() < 1e-9);
+        let d = j.req("decode_latency").unwrap();
+        assert!((d.req("p95_ms").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-12);
+        let q = j.req("queue_latency").unwrap();
+        assert_eq!(q.req("p50_ms").unwrap().as_f64().unwrap(), 0.0, "untouched phases are zero");
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Fixed-bucket latency histogram (S19a): the registry's distribution
+//! primitive.
+//!
+//! Buckets are fixed at registration time, so the record path is two
+//! relaxed atomic increments plus one CAS loop for the running sum — no
+//! locks, no allocation, cheap enough for the decode/train hot paths. The
+//! price is estimation error on quantiles: a quantile is interpolated
+//! linearly inside the bucket holding its rank, so the estimate is exact
+//! to within one bucket width (the property `tests/integration_obs.rs`
+//! checks against a sorted-quantile oracle). Bucket counts are
+//! *non-cumulative* in memory and cumulated only at snapshot time, which
+//! keeps `observe` a single `fetch_add`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Default latency buckets in milliseconds: log-ish spacing from 50 µs to
+/// 5 s, the range a decode tick / prompt prime / hot-swap can plausibly
+/// span on this codebase's model sizes.
+pub const LATENCY_MS_BOUNDS: [f64; 16] = [
+    0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0,
+    5000.0,
+];
+
+/// Lock-free histogram storage shared by every [`crate::obs::Histogram`]
+/// handle of one series.
+pub(crate) struct HistogramCore {
+    /// Finite ascending upper bounds; bucket `i` counts `v <= bounds[i]`
+    /// (minus the lower buckets). One extra +Inf bucket lives at the end
+    /// of `buckets`.
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Running sum of observed values as `f64::to_bits` (CAS-updated).
+    sum_bits: AtomicU64,
+}
+
+impl HistogramCore {
+    /// Panics on empty, non-finite or non-ascending bounds (registration
+    /// is programmer-authored, so a bad bucket layout is a bug, not an
+    /// input error).
+    pub(crate) fn new(bounds: &[f64]) -> HistogramCore {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket bound");
+        for w in bounds.windows(2) {
+            assert!(w[0] < w[1], "histogram bounds must be strictly ascending: {w:?}");
+        }
+        assert!(bounds.iter().all(|b| b.is_finite()), "histogram bounds must be finite");
+        HistogramCore {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    pub(crate) fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Record one observation. NaN is dropped (a NaN latency is a caller
+    /// bug; poisoning the sum would corrupt every later export).
+    pub(crate) fn observe(&self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        // first bucket whose bound is >= v, i.e. Prometheus `le` semantics
+        let idx = self.bounds.partition_point(|b| v > *b);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Point-in-time copy (buckets may lag `count` by in-flight
+    /// observations; each bucket is individually consistent).
+    pub(crate) fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            bounds: self.bounds.clone(),
+            counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Owned copy of a histogram's state: the quantile-estimation and
+/// exposition input.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    /// Finite ascending bucket upper bounds.
+    pub bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; `counts.len() == bounds.len()+1`
+    /// with the final entry the +Inf bucket.
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    /// Cumulative count up to and including bucket `i` (the `le` value the
+    /// exposition format wants).
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut cum = 0u64;
+        self.counts
+            .iter()
+            .map(|c| {
+                cum += c;
+                cum
+            })
+            .collect()
+    }
+
+    /// Mean of all observations (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Estimate the `q`-quantile (`0 < q <= 1`) by locating the bucket
+    /// holding rank `max(1, ceil(q*n))` and interpolating linearly inside
+    /// it — the same rank convention as a sorted-array oracle
+    /// `sorted[max(1, ceil(q*n)) - 1]`, so estimate and oracle always land
+    /// in the same bucket and differ by at most that bucket's width.
+    /// Ranks falling in the +Inf bucket clamp to the last finite bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).max(1).min(self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= rank {
+                if i >= self.bounds.len() {
+                    // +Inf bucket: no upper edge to interpolate towards
+                    return self.bounds[self.bounds.len() - 1];
+                }
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = self.bounds[i];
+                return lo + (hi - lo) * ((rank - cum) as f64 / c as f64);
+            }
+            cum += c;
+        }
+        self.bounds[self.bounds.len() - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_fills_le_buckets_and_sum() {
+        let h = HistogramCore::new(&[1.0, 10.0]);
+        for v in [0.5, 1.0, 3.0, 100.0] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        // le semantics: 1.0 lands in the first bucket, 100.0 in +Inf
+        assert_eq!(s.counts, vec![2, 1, 1]);
+        assert_eq!(s.cumulative(), vec![2, 3, 4]);
+        assert_eq!(s.count, 4);
+        assert!((s.sum - 104.5).abs() < 1e-12);
+        assert!((s.mean() - 26.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_observations_are_dropped() {
+        let h = HistogramCore::new(&[1.0]);
+        h.observe(f64::NAN);
+        h.observe(0.5);
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        assert!(s.sum.is_finite());
+    }
+
+    #[test]
+    fn quantile_interpolates_within_the_rank_bucket() {
+        let h = HistogramCore::new(&[10.0, 20.0, 30.0]);
+        // 10 observations spread 5 in (0,10], 5 in (10,20]
+        for _ in 0..5 {
+            h.observe(5.0);
+        }
+        for _ in 0..5 {
+            h.observe(15.0);
+        }
+        let s = h.snapshot();
+        // p50 rank = 5 -> last of the first bucket -> its upper edge
+        assert!((s.quantile(0.5) - 10.0).abs() < 1e-12);
+        // p100 rank = 10 -> last of the second bucket -> 20.0
+        assert!((s.quantile(1.0) - 20.0).abs() < 1e-12);
+        // monotone in q
+        assert!(s.quantile(0.5) <= s.quantile(0.95));
+        assert!(s.quantile(0.95) <= s.quantile(0.99));
+    }
+
+    #[test]
+    fn quantile_edge_cases() {
+        let empty = HistogramCore::new(&[1.0]).snapshot();
+        assert_eq!(empty.quantile(0.5), 0.0);
+        let h = HistogramCore::new(&[1.0, 2.0]);
+        h.observe(1e9); // +Inf bucket only
+        assert_eq!(h.snapshot().quantile(0.99), 2.0, "+Inf rank clamps to the last finite bound");
+    }
+
+    #[test]
+    fn concurrent_observe_loses_nothing() {
+        let h = std::sync::Arc::new(HistogramCore::new(&LATENCY_MS_BOUNDS));
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..1000 {
+                        h.observe((t * 1000 + i) as f64 * 0.01);
+                    }
+                });
+            }
+        });
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 4000);
+        assert_eq!(snap.cumulative().last().copied(), Some(4000));
+        assert!((snap.sum - (0..4000).map(|i| i as f64 * 0.01).sum::<f64>()).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn rejects_unsorted_bounds() {
+        HistogramCore::new(&[2.0, 1.0]);
+    }
+}

@@ -1,0 +1,255 @@
+//! Minimal HTTP/1.1 face for the metrics registry (S19d; no hyper/axum in
+//! the offline crate set).
+//!
+//! [`MetricsServer::bind`] spawns one background thread running a
+//! nonblocking accept loop; connections are handled serially on that
+//! thread (a scrape endpoint has one client — the collector — so
+//! per-connection threads would buy nothing). Routes:
+//!
+//! * `GET /metrics`  — Prometheus text exposition of the bound registry;
+//! * `GET /healthz`  — liveness probe, `ok`;
+//! * `GET /quitz`    — sets a quit flag the owning process can poll
+//!   ([`MetricsServer::wait_for_quit`]) — the hook `ci.sh` uses to release
+//!   a lingering smoke run without killing it;
+//! * anything else   — `404` (unknown path) or `405` (non-GET).
+//!
+//! Binding port `0` picks a free port; [`MetricsServer::local_addr`]
+//! reports it. [`http_get`] is the matching `std::net` client (used by
+//! `texpand scrape` and the integration tests) so CI needs no curl.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::obs::prometheus;
+use crate::obs::registry::MetricsRegistry;
+
+/// How long one connection may take to deliver its request / accept our
+/// response before being dropped. Scrapes are local and tiny.
+const IO_TIMEOUT: Duration = Duration::from_millis(500);
+/// Accept-loop poll interval (the listener is nonblocking).
+const POLL: Duration = Duration::from_millis(10);
+
+/// Background `/metrics` + `/healthz` HTTP listener over a registry.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    quit: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// serving `registry` on a background thread.
+    pub fn bind(addr: &str, registry: Arc<MetricsRegistry>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Serve(format!("metrics listener bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::Serve(format!("metrics listener local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Serve(format!("metrics listener nonblocking: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let quit = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let stop = stop.clone();
+            let quit = quit.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            // best-effort: a broken scrape connection must
+                            // never take the serving process down
+                            let _ = handle_conn(stream, &registry, &quit);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(POLL);
+                        }
+                        Err(_) => std::thread::sleep(POLL),
+                    }
+                }
+            })
+        };
+        Ok(MetricsServer { addr: local, stop, quit, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the picked port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once a client has requested `GET /quitz`.
+    pub fn quit_requested(&self) -> bool {
+        self.quit.load(Ordering::Relaxed)
+    }
+
+    /// Block until `/quitz` is hit or `timeout` elapses; returns whether
+    /// quit was requested.
+    pub fn wait_for_quit(&self, timeout: Duration) -> bool {
+        let start = Instant::now();
+        while start.elapsed() < timeout {
+            if self.quit_requested() {
+                return true;
+            }
+            std::thread::sleep(POLL);
+        }
+        self.quit_requested()
+    }
+
+    /// Stop the accept loop and join the listener thread.
+    pub fn shutdown(self) {
+        // Drop does the work; the method exists so call sites read as
+        // intent rather than as an unused-variable drop.
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Read one request, route it, write one response, close.
+fn handle_conn(
+    mut stream: TcpStream,
+    registry: &MetricsRegistry,
+    quit: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let request_line = read_request_line(&mut stream)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, content_type, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain; charset=utf-8", "method not allowed\n".to_string())
+    } else {
+        match path {
+            "/metrics" => {
+                ("200 OK", "text/plain; version=0.0.4; charset=utf-8", prometheus::render(registry))
+            }
+            "/healthz" => ("200 OK", "text/plain; charset=utf-8", "ok\n".to_string()),
+            "/quitz" => {
+                quit.store(true, Ordering::Relaxed);
+                ("200 OK", "text/plain; charset=utf-8", "bye\n".to_string())
+            }
+            _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+        }
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+/// Read up to the end of the request head and return its first line. The
+/// buffer is capped: a scrape request head has no business exceeding 8 KiB.
+fn read_request_line(stream: &mut TcpStream) -> std::io::Result<String> {
+    let mut buf = Vec::with_capacity(256);
+    let mut chunk = [0u8; 512];
+    loop {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+            break;
+        }
+    }
+    let text = String::from_utf8_lossy(&buf);
+    Ok(text.lines().next().unwrap_or("").to_string())
+}
+
+/// Tiny blocking HTTP GET returning `(status_code, body)`. `addr` is
+/// `host:port`; the server side must close the connection after the
+/// response (ours does), which is what bounds the read.
+pub fn http_get(addr: &str, path: &str, timeout: Duration) -> Result<(u16, String)> {
+    let sock_addr = addr
+        .to_socket_addrs()
+        .map_err(|e| Error::Serve(format!("resolve {addr}: {e}")))?
+        .next()
+        .ok_or_else(|| Error::Serve(format!("resolve {addr}: no addresses")))?;
+    let mut stream = TcpStream::connect_timeout(&sock_addr, timeout)
+        .map_err(|e| Error::Serve(format!("connect {addr}: {e}")))?;
+    stream
+        .set_read_timeout(Some(timeout))
+        .map_err(|e| Error::Serve(format!("read timeout: {e}")))?;
+    stream
+        .set_write_timeout(Some(timeout))
+        .map_err(|e| Error::Serve(format!("write timeout: {e}")))?;
+    let request = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    stream
+        .write_all(request.as_bytes())
+        .map_err(|e| Error::Serve(format!("send GET {path}: {e}")))?;
+    let mut raw = String::new();
+    stream
+        .read_to_string(&mut raw)
+        .map_err(|e| Error::Serve(format!("read GET {path} response: {e}")))?;
+    let status = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| Error::Serve(format!("malformed HTTP response from {addr}")))?;
+    let body = match raw.find("\r\n\r\n") {
+        Some(i) => raw[i + 4..].to_string(),
+        None => String::new(),
+    };
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server() -> (MetricsServer, Arc<MetricsRegistry>) {
+        let reg = Arc::new(MetricsRegistry::new());
+        reg.counter("http_test_total", "test counter").add(3);
+        let srv = MetricsServer::bind("127.0.0.1:0", reg.clone()).unwrap();
+        (srv, reg)
+    }
+
+    #[test]
+    fn serves_metrics_and_healthz() {
+        let (srv, _reg) = server();
+        let addr = srv.local_addr().to_string();
+        let (status, body) = http_get(&addr, "/healthz", Duration::from_secs(2)).unwrap();
+        assert_eq!((status, body.as_str()), (200, "ok\n"));
+        let (status, body) = http_get(&addr, "/metrics", Duration::from_secs(2)).unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("http_test_total 3\n"), "{body}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn unknown_path_is_404_and_quitz_sets_flag() {
+        let (srv, _reg) = server();
+        let addr = srv.local_addr().to_string();
+        let (status, _) = http_get(&addr, "/nope", Duration::from_secs(2)).unwrap();
+        assert_eq!(status, 404);
+        assert!(!srv.quit_requested());
+        let (status, body) = http_get(&addr, "/quitz", Duration::from_secs(2)).unwrap();
+        assert_eq!((status, body.as_str()), (200, "bye\n"));
+        assert!(srv.wait_for_quit(Duration::from_secs(2)));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn scrape_reflects_live_updates() {
+        let (srv, reg) = server();
+        let addr = srv.local_addr().to_string();
+        reg.counter("http_test_total", "test counter").add(4);
+        let (_, body) = http_get(&addr, "/metrics", Duration::from_secs(2)).unwrap();
+        assert!(body.contains("http_test_total 7\n"), "{body}");
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,36 @@
+//! Live observability layer (S19): metrics registry, Prometheus text
+//! exposition over HTTP, and per-request span tracing.
+//!
+//! Everything here is hand-rolled on `std` — no prometheus/hyper/tracing
+//! crates — and offline-friendly. The pieces:
+//!
+//! * [`registry`] — [`MetricsRegistry`] of named counter/gauge/histogram
+//!   families with optional labels; handles are `Arc`-backed atomics, so
+//!   the record path never takes the registry lock. [`global()`] is the
+//!   process-wide instance the CLI exposes.
+//! * [`histogram`] — fixed-bucket latency histogram with p50/p95/p99
+//!   estimation ([`LATENCY_MS_BOUNDS`] is the shared bucket layout).
+//! * [`prometheus`] — [`render`] a registry snapshot in text exposition
+//!   format 0.0.4.
+//! * [`http`] — [`MetricsServer`], a `std::net` listener serving
+//!   `/metrics` + `/healthz` (+ `/quitz` for CI), and the matching
+//!   [`http_get`] client used by `texpand scrape`.
+//! * [`span`] — [`SpanTracker`]/[`Span`]: per-request
+//!   queued→prefill→decode→finish phase records on the serve path.
+//!
+//! Design notes live in DESIGN.md §14.
+
+pub mod histogram;
+pub mod http;
+pub mod prometheus;
+pub mod registry;
+pub mod span;
+
+pub use histogram::{HistogramSnapshot, LATENCY_MS_BOUNDS};
+pub use http::{http_get, MetricsServer};
+pub use prometheus::render;
+pub use registry::{
+    global, Counter, FamilySnapshot, Gauge, Histogram, MetricKind, MetricsRegistry, SeriesSnapshot,
+    SeriesValue,
+};
+pub use span::{Span, SpanTracker};

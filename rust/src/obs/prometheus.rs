@@ -1,0 +1,177 @@
+//! Prometheus text exposition (S19c): render a registry snapshot in the
+//! text format version 0.0.4.
+//!
+//! The format contract (what `tests/integration_obs.rs` parses back):
+//!
+//! * every family emits `# HELP <name> <help>` then `# TYPE <name> <kind>`
+//!   before any of its samples;
+//! * counters/gauges emit one `<name>{<labels>} <value>` line per series
+//!   (no braces when unlabelled);
+//! * histograms emit **cumulative** `<name>_bucket{le="<bound>"}` lines in
+//!   ascending bound order ending with `le="+Inf"` (== `_count`), then
+//!   `<name>_sum` and `<name>_count`;
+//! * help text escapes `\` and newline; label values escape `\`, `"` and
+//!   newline;
+//! * non-finite values render as `NaN` / `+Inf` / `-Inf`.
+//!
+//! Families render in registration order and series in sorted label
+//! order, so output is deterministic for golden assertions.
+
+use crate::obs::registry::{FamilySnapshot, MetricsRegistry, SeriesValue};
+
+/// Render the full exposition document for `registry`.
+pub fn render(registry: &MetricsRegistry) -> String {
+    render_families(&registry.snapshot())
+}
+
+/// Render pre-taken family snapshots (split out for tests).
+pub fn render_families(families: &[FamilySnapshot]) -> String {
+    let mut out = String::new();
+    for fam in families {
+        out.push_str(&format!("# HELP {} {}\n", fam.name, escape_help(&fam.help)));
+        out.push_str(&format!("# TYPE {} {}\n", fam.name, fam.kind.name()));
+        for series in &fam.series {
+            match &series.value {
+                SeriesValue::Counter(v) => {
+                    out.push_str(&format!("{}{} {v}\n", fam.name, labels(&series.labels, None)));
+                }
+                SeriesValue::Gauge(v) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        fam.name,
+                        labels(&series.labels, None),
+                        fmt_value(*v)
+                    ));
+                }
+                SeriesValue::Histogram(h) => {
+                    let cum = h.cumulative();
+                    for (bound, c) in h.bounds.iter().zip(&cum) {
+                        out.push_str(&format!(
+                            "{}_bucket{} {c}\n",
+                            fam.name,
+                            labels(&series.labels, Some(&fmt_value(*bound)))
+                        ));
+                    }
+                    let total = cum.last().copied().unwrap_or(0);
+                    out.push_str(&format!(
+                        "{}_bucket{} {total}\n",
+                        fam.name,
+                        labels(&series.labels, Some("+Inf"))
+                    ));
+                    out.push_str(&format!(
+                        "{}_sum{} {}\n",
+                        fam.name,
+                        labels(&series.labels, None),
+                        fmt_value(h.sum)
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{} {}\n",
+                        fam.name,
+                        labels(&series.labels, None),
+                        h.count
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Render a label set as `{k="v",...}`, optionally appending the
+/// histogram `le` label; empty label sets render as nothing.
+fn labels(pairs: &[(String, String)], le: Option<&str>) -> String {
+    if pairs.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        pairs.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+/// Escape a HELP line payload: backslash and newline.
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Escape a label value: backslash, double quote and newline.
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Format a sample value: non-finite spellings per the format, shortest
+/// round-trip `f64` otherwise.
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render_with_type_headers() {
+        let reg = MetricsRegistry::new();
+        reg.counter("requests_total", "Total requests").add(7);
+        reg.gauge("queue_depth", "Queued requests").set(2.5);
+        let text = render(&reg);
+        assert!(text.contains("# HELP requests_total Total requests\n"));
+        assert!(text.contains("# TYPE requests_total counter\n"));
+        assert!(text.contains("requests_total 7\n"));
+        assert!(text.contains("# TYPE queue_depth gauge\n"));
+        assert!(text.contains("queue_depth 2.5\n"));
+    }
+
+    #[test]
+    fn labels_render_sorted_and_escaped() {
+        let reg = MetricsRegistry::new();
+        reg.counter_with("c_total", "c", &[("b", "plain"), ("a", "q\"uote\\slash\nline")]).inc();
+        let text = render(&reg);
+        assert!(
+            text.contains("c_total{a=\"q\\\"uote\\\\slash\\nline\",b=\"plain\"} 1\n"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets_sum_count() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("lat_ms", "Latency", &[1.0, 5.0]);
+        h.observe(0.5);
+        h.observe(3.0);
+        h.observe(100.0);
+        let text = render(&reg);
+        assert!(text.contains("# TYPE lat_ms histogram\n"));
+        assert!(text.contains("lat_ms_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("lat_ms_bucket{le=\"5\"} 2\n"));
+        assert!(text.contains("lat_ms_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text.contains("lat_ms_sum 104.5\n"));
+        assert!(text.contains("lat_ms_count 3\n"));
+    }
+
+    #[test]
+    fn non_finite_values_use_format_spellings() {
+        assert_eq!(fmt_value(f64::NAN), "NaN");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fmt_value(0.25), "0.25");
+    }
+
+    #[test]
+    fn help_escapes_newlines() {
+        let reg = MetricsRegistry::new();
+        reg.gauge("g", "line one\nline two \\ done").set(1.0);
+        let text = render(&reg);
+        assert!(text.contains("# HELP g line one\\nline two \\\\ done\n"));
+    }
+}

@@ -1,0 +1,409 @@
+//! Metric registry (S19b): named counter/gauge/histogram families.
+//!
+//! The registry is a `Mutex`-guarded table of **families** (name + help +
+//! kind) each holding label-keyed **series**. The mutex is taken only at
+//! registration and snapshot time: registering returns a cloneable handle
+//! wrapping the series' `Arc`'d atomic storage, so the hot path
+//! (`Counter::inc`, `Gauge::set`, `Histogram::observe`) is a relaxed
+//! atomic op with no lock and no allocation. Call sites acquire handles
+//! once (engine construction, segment start) and bump them per
+//! tick/step — the same handle-then-bump shape as the Prometheus client
+//! libraries.
+//!
+//! Re-registering an existing (name, labels) pair returns a handle to the
+//! *same* storage, so independent subsystems sharing the process-global
+//! registry ([`crate::obs::global`]) compose without coordination.
+//! Registering a name under a different kind (or a histogram under
+//! different buckets) panics: that is a programmer error the process
+//! should not limp past, exactly like a malformed bucket layout.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::obs::histogram::{HistogramCore, HistogramSnapshot};
+
+/// Metric family kind (drives the `# TYPE` exposition line).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    /// The exposition-format type keyword.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// Monotone counter handle (cloneable; clones share storage).
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge handle storing an `f64` as its bit pattern.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram handle (see [`crate::obs::histogram`]).
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Histogram {
+    /// Record one observation (NaN is dropped).
+    pub fn observe(&self, v: f64) {
+        self.0.observe(v);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        self.0.snapshot()
+    }
+}
+
+type LabelSet = Vec<(String, String)>;
+
+/// One family's series storage (all series of a family share a kind).
+enum Series {
+    Counter(HashMap<LabelSet, Arc<AtomicU64>>),
+    Gauge(HashMap<LabelSet, Arc<AtomicU64>>),
+    Histogram(Vec<f64>, HashMap<LabelSet, Arc<HistogramCore>>),
+}
+
+impl Series {
+    fn kind(&self) -> MetricKind {
+        match self {
+            Series::Counter(_) => MetricKind::Counter,
+            Series::Gauge(_) => MetricKind::Gauge,
+            Series::Histogram(..) => MetricKind::Histogram,
+        }
+    }
+}
+
+struct Family {
+    name: String,
+    help: String,
+    series: Series,
+}
+
+/// Process-wide metric table (see module docs). Cheap to share behind an
+/// `Arc`; most code uses the [`crate::obs::global`] instance, tests build
+/// their own for isolation (the test binary runs tests concurrently).
+pub struct MetricsRegistry {
+    families: Mutex<Vec<Family>>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry { families: Mutex::new(Vec::new()) }
+    }
+
+    /// Register (or re-acquire) an unlabelled counter.
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        self.counter_with(name, help, &[])
+    }
+
+    /// Register (or re-acquire) a counter series under `labels`.
+    pub fn counter_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        let key = label_key(labels);
+        let mut families = self.lock();
+        let fam = find_or_insert(&mut families, name, help, MetricKind::Counter);
+        let Series::Counter(map) = &mut fam.series else { unreachable!() };
+        Counter(map.entry(key).or_insert_with(|| Arc::new(AtomicU64::new(0))).clone())
+    }
+
+    /// Register (or re-acquire) an unlabelled gauge.
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        self.gauge_with(name, help, &[])
+    }
+
+    /// Register (or re-acquire) a gauge series under `labels`.
+    pub fn gauge_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        let key = label_key(labels);
+        let mut families = self.lock();
+        let fam = find_or_insert(&mut families, name, help, MetricKind::Gauge);
+        let Series::Gauge(map) = &mut fam.series else { unreachable!() };
+        Gauge(map.entry(key).or_insert_with(|| Arc::new(AtomicU64::new(0f64.to_bits()))).clone())
+    }
+
+    /// Register (or re-acquire) an unlabelled histogram with `bounds`
+    /// bucket upper edges (finite, strictly ascending). A family's bounds
+    /// are fixed by its first registration; re-registering with different
+    /// bounds panics.
+    pub fn histogram(&self, name: &str, help: &str, bounds: &[f64]) -> Histogram {
+        self.histogram_with(name, help, bounds, &[])
+    }
+
+    /// Labelled [`MetricsRegistry::histogram`]. `le` is reserved for the
+    /// bucket label and rejected.
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        help: &str,
+        bounds: &[f64],
+        labels: &[(&str, &str)],
+    ) -> Histogram {
+        assert!(labels.iter().all(|(k, _)| *k != "le"), "label 'le' is reserved for buckets");
+        let key = label_key(labels);
+        let mut families = self.lock();
+        let fam = find_or_insert(&mut families, name, help, MetricKind::Histogram);
+        let Series::Histogram(fam_bounds, map) = &mut fam.series else { unreachable!() };
+        if fam_bounds.is_empty() {
+            *fam_bounds = bounds.to_vec();
+        } else {
+            assert_eq!(
+                &fam_bounds[..],
+                bounds,
+                "histogram '{name}' re-registered with new buckets"
+            );
+        }
+        Histogram(map.entry(key).or_insert_with(|| Arc::new(HistogramCore::new(bounds))).clone())
+    }
+
+    /// Point-in-time copy of every family for exposition, in registration
+    /// order with series sorted by label set (deterministic output).
+    pub fn snapshot(&self) -> Vec<FamilySnapshot> {
+        let families = self.lock();
+        families
+            .iter()
+            .map(|fam| {
+                let mut series: Vec<SeriesSnapshot> = match &fam.series {
+                    Series::Counter(map) => map
+                        .iter()
+                        .map(|(k, v)| SeriesSnapshot {
+                            labels: k.clone(),
+                            value: SeriesValue::Counter(v.load(Ordering::Relaxed)),
+                        })
+                        .collect(),
+                    Series::Gauge(map) => map
+                        .iter()
+                        .map(|(k, v)| SeriesSnapshot {
+                            labels: k.clone(),
+                            value: SeriesValue::Gauge(f64::from_bits(v.load(Ordering::Relaxed))),
+                        })
+                        .collect(),
+                    Series::Histogram(_, map) => map
+                        .iter()
+                        .map(|(k, v)| SeriesSnapshot {
+                            labels: k.clone(),
+                            value: SeriesValue::Histogram(v.snapshot()),
+                        })
+                        .collect(),
+                };
+                series.sort_by(|a, b| a.labels.cmp(&b.labels));
+                FamilySnapshot {
+                    name: fam.name.clone(),
+                    help: fam.help.clone(),
+                    kind: fam.series.kind(),
+                    series,
+                }
+            })
+            .collect()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<Family>> {
+        // a panic while holding the registration lock leaves plain data
+        // in a valid state; don't cascade the poison into every exporter
+        self.families.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// One family in a [`MetricsRegistry::snapshot`].
+pub struct FamilySnapshot {
+    pub name: String,
+    pub help: String,
+    pub kind: MetricKind,
+    pub series: Vec<SeriesSnapshot>,
+}
+
+/// One labelled series within a family snapshot.
+pub struct SeriesSnapshot {
+    pub labels: Vec<(String, String)>,
+    pub value: SeriesValue,
+}
+
+/// A series' sampled value.
+pub enum SeriesValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(HistogramSnapshot),
+}
+
+fn label_key(labels: &[(&str, &str)]) -> LabelSet {
+    for (k, _) in labels {
+        assert!(valid_label_name(k), "invalid metric label name '{k}'");
+    }
+    let mut key: LabelSet = labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    key.sort();
+    key
+}
+
+fn find_or_insert<'a>(
+    families: &'a mut Vec<Family>,
+    name: &str,
+    help: &str,
+    kind: MetricKind,
+) -> &'a mut Family {
+    assert!(valid_metric_name(name), "invalid metric name '{name}'");
+    if let Some(i) = families.iter().position(|f| f.name == name) {
+        let fam = &mut families[i];
+        assert_eq!(
+            fam.series.kind(),
+            kind,
+            "metric '{name}' already registered as a {}",
+            fam.series.kind().name()
+        );
+        return fam;
+    }
+    let series = match kind {
+        MetricKind::Counter => Series::Counter(HashMap::new()),
+        MetricKind::Gauge => Series::Gauge(HashMap::new()),
+        MetricKind::Histogram => Series::Histogram(Vec::new(), HashMap::new()),
+    };
+    families.push(Family { name: name.to_string(), help: help.to_string(), series });
+    families.last_mut().expect("just pushed")
+}
+
+/// Exposition-format metric name: `[a-zA-Z_:][a-zA-Z0-9_:]*`.
+pub fn valid_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Exposition-format label name: `[a-zA-Z_][a-zA-Z0-9_]*`.
+pub fn valid_label_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+static GLOBAL: OnceLock<Arc<MetricsRegistry>> = OnceLock::new();
+
+/// The process-global registry: what `texpand serve --metrics-addr`
+/// exposes and what the train/serve/coordinator instrumentation points
+/// publish into by default.
+pub fn global() -> &'static Arc<MetricsRegistry> {
+    GLOBAL.get_or_init(|| Arc::new(MetricsRegistry::new()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_share_storage_across_reregistration() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("requests_total", "requests");
+        let b = reg.counter("requests_total", "requests");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        let g = reg.gauge("depth", "queue depth");
+        g.set(4.5);
+        assert_eq!(reg.gauge("depth", "queue depth").get(), 4.5);
+    }
+
+    #[test]
+    fn labelled_series_are_independent() {
+        let reg = MetricsRegistry::new();
+        let ok = reg.counter_with("decisions_total", "verdicts", &[("decision", "continue")]);
+        let grow = reg.counter_with("decisions_total", "verdicts", &[("decision", "expand")]);
+        ok.inc();
+        ok.inc();
+        grow.inc();
+        assert_eq!(ok.get(), 2);
+        assert_eq!(grow.get(), 1);
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].series.len(), 2);
+    }
+
+    #[test]
+    fn label_order_does_not_split_series() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter_with("x_total", "x", &[("a", "1"), ("b", "2")]);
+        let b = reg.counter_with("x_total", "x", &[("b", "2"), ("a", "1")]);
+        a.inc();
+        assert_eq!(b.get(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_mismatch_panics() {
+        let reg = MetricsRegistry::new();
+        let _ = reg.counter("thing", "a counter");
+        let _ = reg.gauge("thing", "now a gauge");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid metric name")]
+    fn bad_names_panic() {
+        let _ = MetricsRegistry::new().counter("9starts-with-digit", "bad");
+    }
+
+    #[test]
+    fn snapshot_is_deterministic_and_typed() {
+        let reg = MetricsRegistry::new();
+        reg.histogram("lat_ms", "latency", &[1.0, 2.0]).observe(1.5);
+        reg.counter("c_total", "c").inc();
+        let snap = reg.snapshot();
+        assert_eq!(snap[0].name, "lat_ms");
+        assert_eq!(snap[0].kind, MetricKind::Histogram);
+        assert_eq!(snap[1].kind, MetricKind::Counter);
+        match &snap[0].series[0].value {
+            SeriesValue::Histogram(h) => assert_eq!(h.count, 1),
+            _ => panic!("expected histogram value"),
+        }
+    }
+
+    #[test]
+    fn global_registry_is_a_singleton() {
+        let a = global().clone();
+        let c = a.counter("texpand_obs_registry_selftest_total", "test-only");
+        c.inc();
+        let before = c.get();
+        global().counter("texpand_obs_registry_selftest_total", "test-only").inc();
+        assert_eq!(c.get(), before + 1);
+    }
+}

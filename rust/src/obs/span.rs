@@ -1,0 +1,207 @@
+//! Per-request span records (S19e): one [`Span`] per served request
+//! capturing where its wall time went.
+//!
+//! The serve engine drives a [`SpanTracker`] through the request
+//! lifecycle: `on_submit` when a request enters the queue, `on_admit`
+//! when the scheduler primes it into a slot (carrying the measured
+//! prefill cost), `on_finish` when it completes or times out. The
+//! finished [`Span`] is what feeds the phase-latency histograms and is
+//! emitted as a `span` event to `events.jsonl`, giving offline tooling
+//! the same per-request decomposition the live histograms aggregate.
+//!
+//! Phase accounting: `queue_ms` is the submit→admit wall time *minus*
+//! the prefill cost (the prime happens inside `admit`, so a request's
+//! admission timestamp already includes its own prefill), clamped at
+//! zero; `decode_ms` is admit→finish; `total_ms` is submit→finish.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::json::Value;
+
+/// Completed request trace. Tick fields are scheduler tick indices; the
+/// `_ms` fields are wall-clock phase durations.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub id: u64,
+    pub queued_tick: u64,
+    pub admitted_tick: u64,
+    pub finished_tick: u64,
+    pub queue_ms: f64,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    pub total_ms: f64,
+    pub prompt_tokens: usize,
+    pub generated: usize,
+    /// Finish reason tag (`"max_tokens"` or `"timed_out"`).
+    pub finish: &'static str,
+}
+
+impl Span {
+    /// Flat field list for `RunLogger::event("span", ...)`.
+    pub fn fields(&self) -> Vec<(&'static str, Value)> {
+        vec![
+            ("id", Value::num(self.id as f64)),
+            ("queued_tick", Value::num(self.queued_tick as f64)),
+            ("admitted_tick", Value::num(self.admitted_tick as f64)),
+            ("finished_tick", Value::num(self.finished_tick as f64)),
+            ("queue_ms", Value::num(self.queue_ms)),
+            ("prefill_ms", Value::num(self.prefill_ms)),
+            ("decode_ms", Value::num(self.decode_ms)),
+            ("total_ms", Value::num(self.total_ms)),
+            ("prompt_tokens", Value::num(self.prompt_tokens as f64)),
+            ("generated", Value::num(self.generated as f64)),
+            ("finish", Value::str(self.finish)),
+        ]
+    }
+}
+
+/// In-flight request state between lifecycle callbacks.
+struct OpenSpan {
+    queued_tick: u64,
+    queued_at: Instant,
+    admitted_tick: u64,
+    admitted_at: Option<Instant>,
+    prefill_ms: f64,
+    prompt_tokens: usize,
+}
+
+/// Tracks open request spans by id; owned by the serve engine.
+#[derive(Default)]
+pub struct SpanTracker {
+    open: HashMap<u64, OpenSpan>,
+}
+
+impl SpanTracker {
+    pub fn new() -> SpanTracker {
+        SpanTracker::default()
+    }
+
+    /// Number of requests currently tracked (queued or in flight).
+    pub fn open_count(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Request `id` entered the queue at scheduler tick `tick`.
+    pub fn on_submit(&mut self, id: u64, tick: u64) {
+        self.open.insert(
+            id,
+            OpenSpan {
+                queued_tick: tick,
+                queued_at: Instant::now(),
+                admitted_tick: tick,
+                admitted_at: None,
+                prefill_ms: 0.0,
+                prompt_tokens: 0,
+            },
+        );
+    }
+
+    /// Request `id` was primed into a slot; `prefill_ms` is the measured
+    /// prime cost, already elapsed by the time this is called.
+    pub fn on_admit(&mut self, id: u64, tick: u64, prompt_tokens: usize, prefill_ms: f64) {
+        if let Some(open) = self.open.get_mut(&id) {
+            open.admitted_tick = tick;
+            open.admitted_at = Some(Instant::now());
+            open.prefill_ms = prefill_ms;
+            open.prompt_tokens = prompt_tokens;
+        }
+    }
+
+    /// Request `id` finished; returns the completed span, or `None` for
+    /// ids this tracker never saw (e.g. metrics were enabled mid-run).
+    pub fn on_finish(
+        &mut self,
+        id: u64,
+        tick: u64,
+        generated: usize,
+        finish: &'static str,
+    ) -> Option<Span> {
+        let open = self.open.remove(&id)?;
+        let now = Instant::now();
+        let total_ms = now.duration_since(open.queued_at).as_secs_f64() * 1e3;
+        let (admit_ms, decode_ms) = match open.admitted_at {
+            Some(at) => {
+                let admit_ms = at.duration_since(open.queued_at).as_secs_f64() * 1e3;
+                (admit_ms, now.duration_since(at).as_secs_f64() * 1e3)
+            }
+            // never admitted (timed out in queue): all time is queue time
+            None => (total_ms + open.prefill_ms, 0.0),
+        };
+        Some(Span {
+            id,
+            queued_tick: open.queued_tick,
+            admitted_tick: open.admitted_tick,
+            finished_tick: tick,
+            queue_ms: (admit_ms - open.prefill_ms).max(0.0),
+            prefill_ms: open.prefill_ms,
+            decode_ms,
+            total_ms,
+            prompt_tokens: open.prompt_tokens,
+            generated,
+            finish,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_produces_consistent_phases() {
+        let mut t = SpanTracker::new();
+        t.on_submit(7, 3);
+        assert_eq!(t.open_count(), 1);
+        t.on_admit(7, 5, 12, 0.0);
+        let span = t.on_finish(7, 9, 20, "max_tokens").unwrap();
+        assert_eq!(t.open_count(), 0);
+        assert_eq!(
+            (span.id, span.queued_tick, span.admitted_tick, span.finished_tick),
+            (7, 3, 5, 9)
+        );
+        assert_eq!((span.prompt_tokens, span.generated, span.finish), (12, 20, "max_tokens"));
+        assert!(span.queue_ms >= 0.0);
+        assert!(span.total_ms >= span.decode_ms);
+    }
+
+    #[test]
+    fn prefill_is_subtracted_from_queue_time() {
+        let mut t = SpanTracker::new();
+        t.on_submit(1, 0);
+        // claim a prefill cost far larger than the real elapsed time:
+        // queue_ms must clamp at zero rather than go negative
+        t.on_admit(1, 1, 4, 1e6);
+        let span = t.on_finish(1, 2, 1, "max_tokens").unwrap();
+        assert_eq!(span.queue_ms, 0.0);
+        assert_eq!(span.prefill_ms, 1e6);
+    }
+
+    #[test]
+    fn never_admitted_request_charges_queue_only() {
+        let mut t = SpanTracker::new();
+        t.on_submit(2, 0);
+        let span = t.on_finish(2, 4, 0, "timed_out").unwrap();
+        assert_eq!(span.decode_ms, 0.0);
+        assert_eq!(span.finish, "timed_out");
+        assert!(span.queue_ms >= 0.0);
+    }
+
+    #[test]
+    fn unknown_id_yields_none() {
+        let mut t = SpanTracker::new();
+        assert!(t.on_finish(99, 0, 0, "max_tokens").is_none());
+    }
+
+    #[test]
+    fn span_fields_are_flat_json() {
+        let mut t = SpanTracker::new();
+        t.on_submit(1, 0);
+        t.on_admit(1, 0, 3, 0.1);
+        let span = t.on_finish(1, 1, 2, "max_tokens").unwrap();
+        let fields = span.fields();
+        assert_eq!(fields.len(), 11);
+        assert_eq!(fields[0].0, "id");
+        assert_eq!(fields[10].0, "finish");
+    }
+}

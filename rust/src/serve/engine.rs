@@ -13,6 +13,16 @@
 //! * [`Engine::counters`] — throughput/latency counters
 //!   ([`crate::metrics::ServeCounters`]).
 //!
+//! Unless `EngineOptions::metrics` is off, the engine also publishes
+//! live counters, queue/in-flight gauges and per-phase latency
+//! histograms through a [`crate::obs::MetricsRegistry`] (the process
+//! [`crate::obs::global`] one by default, an explicit one via
+//! [`Engine::with_registry`]) and traces every request as a
+//! [`crate::obs::Span`] — drained with [`Engine::take_spans`] for the
+//! run log. The instrumentation is handle-based atomics, so the decode
+//! hot path never takes a lock (`benches/runtime_overhead.rs` measures
+//! the on/off cost).
+//!
 //! Ticks are synchronous and swaps only happen between them, so the swap
 //! point needs no locking: the engine is single-owner, and intra-tick
 //! parallelism (the shared [`crate::parallel::Pool`] decode fan-out)
@@ -24,7 +34,10 @@ use crate::config::ModelConfig;
 use crate::error::{Error, Result};
 use crate::expand::{ExpandOptions, ExpansionPlan};
 use crate::generate::Sampler;
-use crate::metrics::{ServeCounters, Timer};
+use crate::metrics::{PhasePercentiles, ServeCounters, Timer};
+use crate::obs::{
+    self, Counter, Gauge, Histogram, MetricsRegistry, Span, SpanTracker, LATENCY_MS_BOUNDS,
+};
 use crate::params::ParamStore;
 use crate::rng::Pcg32;
 use crate::serve::hotswap::{self, SwapReport};
@@ -54,6 +67,9 @@ pub struct EngineOptions {
     /// completes with [`crate::serve::FinishReason::TimedOut`] and frees
     /// the slot (counted in `ServeCounters::timeouts`). `0` disables.
     pub request_timeout_ticks: u64,
+    /// Publish registry metrics + span traces (on by default; the off
+    /// switch exists for the overhead benchmark and metrics-free embeds).
+    pub metrics: bool,
 }
 
 impl Default for EngineOptions {
@@ -66,7 +82,61 @@ impl Default for EngineOptions {
             probe_seed: 0xBEE,
             max_pending: 1024,
             request_timeout_ticks: 0,
+            metrics: true,
         }
+    }
+}
+
+/// Registry handles the engine publishes through (one registration at
+/// construction; every update afterwards is a lock-free atomic bump).
+struct EngineMetrics {
+    submitted: Counter,
+    completed: Counter,
+    tokens_generated: Counter,
+    prompt_tokens: Counter,
+    rejected: Counter,
+    timeouts: Counter,
+    swaps: Counter,
+    swap_rejected: Counter,
+    queued: Gauge,
+    in_flight: Gauge,
+    queue_ms: Histogram,
+    prefill_ms: Histogram,
+    decode_ms: Histogram,
+    total_ms: Histogram,
+    swap_ms: Histogram,
+}
+
+impl EngineMetrics {
+    fn register(reg: &MetricsRegistry) -> EngineMetrics {
+        let lat = &LATENCY_MS_BOUNDS;
+        EngineMetrics {
+            submitted: reg.counter("texpand_serve_submitted_total", "Requests accepted by submit"),
+            completed: reg.counter("texpand_serve_completed_total", "Requests finished normally"),
+            tokens_generated: reg.counter("texpand_serve_tokens_generated_total", "Tokens decoded"),
+            prompt_tokens: reg.counter("texpand_serve_prompt_tokens_total", "Primed prompt tokens"),
+            rejected: reg.counter("texpand_serve_rejected_total", "Backpressure rejections"),
+            timeouts: reg.counter("texpand_serve_timeouts_total", "Requests expired by deadline"),
+            swaps: reg.counter("texpand_serve_swaps_total", "Successful hot swaps"),
+            swap_rejected: reg.counter("texpand_serve_swap_rejected_total", "Rejected hot swaps"),
+            queued: reg.gauge("texpand_serve_queued", "Requests waiting in queue"),
+            in_flight: reg.gauge("texpand_serve_in_flight", "Sequences decoding in slots"),
+            queue_ms: reg.histogram("texpand_serve_queue_latency_ms", "Queue wait (ms)", lat),
+            prefill_ms: reg.histogram("texpand_serve_prefill_latency_ms", "Prompt prime (ms)", lat),
+            decode_ms: reg.histogram("texpand_serve_decode_latency_ms", "Decode phase (ms)", lat),
+            total_ms: reg.histogram("texpand_serve_total_latency_ms", "Submit to finish (ms)", lat),
+            swap_ms: reg.histogram("texpand_serve_swap_ms", "Hot swap duration (ms)", lat),
+        }
+    }
+}
+
+/// p50/p95/p99 snapshot of a phase histogram (for `ServeCounters`).
+fn percentiles_of(h: &Histogram) -> PhasePercentiles {
+    let s = h.snapshot();
+    PhasePercentiles {
+        p50_ms: s.quantile(0.50),
+        p95_ms: s.quantile(0.95),
+        p99_ms: s.quantile(0.99),
     }
 }
 
@@ -79,16 +149,32 @@ pub struct Engine {
     opts: EngineOptions,
     /// Held-out probe batch (full-`seq` rows) for swap verification.
     probe: Vec<Vec<u32>>,
+    /// Registry handles (`None` when `opts.metrics` is off).
+    metrics: Option<EngineMetrics>,
+    spans: SpanTracker,
+    finished_spans: Vec<Span>,
 }
 
 impl Engine {
-    /// Build an engine serving `params`.
+    /// Build an engine serving `params`, publishing metrics through the
+    /// process-global registry.
     pub fn new(params: ParamStore, opts: EngineOptions) -> Engine {
+        Engine::with_registry(params, opts, obs::global())
+    }
+
+    /// Build an engine publishing through an explicit registry (tests and
+    /// benchmarks; production uses [`Engine::new`]).
+    pub fn with_registry(
+        params: ParamStore,
+        opts: EngineOptions,
+        registry: &MetricsRegistry,
+    ) -> Engine {
         let cfg = *params.config();
         let mut rng = Pcg32::new(opts.probe_seed, 0x9B0E);
         let probe = (0..opts.probe_rows.max(1))
             .map(|_| (0..cfg.seq).map(|_| rng.below(cfg.vocab) as u32).collect())
             .collect();
+        let metrics = opts.metrics.then(|| EngineMetrics::register(registry));
         Engine {
             params,
             sched: Scheduler::new(opts.max_slots),
@@ -96,6 +182,9 @@ impl Engine {
             counters: ServeCounters::default(),
             opts,
             probe,
+            metrics,
+            spans: SpanTracker::new(),
+            finished_spans: Vec::new(),
         }
     }
 
@@ -112,6 +201,12 @@ impl Engine {
     /// Throughput/latency counters.
     pub fn counters(&self) -> &ServeCounters {
         &self.counters
+    }
+
+    /// Drain the spans of requests finished since the last call (empty
+    /// when `EngineOptions::metrics` is off).
+    pub fn take_spans(&mut self) -> Vec<Span> {
+        std::mem::take(&mut self.finished_spans)
     }
 
     /// Queued + in-flight requests.
@@ -152,6 +247,9 @@ impl Engine {
         }
         if !self.has_capacity() {
             self.counters.rejected += 1;
+            if let Some(m) = &self.metrics {
+                m.rejected.inc();
+            }
             return Err(Error::Serve(format!(
                 "engine at capacity: {} pending >= max_pending {} (backpressure)",
                 self.pending(),
@@ -159,12 +257,35 @@ impl Engine {
             )));
         }
         self.counters.submitted += 1;
-        Ok(self.sched.enqueue(Request { prompt, max_new_tokens, sampler }))
+        let id = self.sched.enqueue(Request { prompt, max_new_tokens, sampler });
+        if let Some(m) = &self.metrics {
+            m.submitted.inc();
+            m.queued.set(self.sched.queued() as f64);
+            self.spans.on_submit(id, self.sched.ticks());
+        }
+        Ok(id)
     }
 
     /// Take a finished request's completion, if it has finished.
     pub fn poll(&mut self, id: RequestId) -> Option<Completion> {
         self.completed.remove(&id)
+    }
+
+    /// Close a request's span: feed the phase histograms, refresh the
+    /// percentile fields in `counters`, stash the span for `take_spans`.
+    fn finish_span(&mut self, c: &Completion, finish: &'static str) {
+        let Some(m) = &self.metrics else { return };
+        let tick = self.sched.ticks();
+        let Some(span) = self.spans.on_finish(c.id, tick, c.generated, finish) else { return };
+        m.queue_ms.observe(span.queue_ms);
+        m.prefill_ms.observe(span.prefill_ms);
+        m.decode_ms.observe(span.decode_ms);
+        m.total_ms.observe(span.total_ms);
+        self.counters.queue_latency = percentiles_of(&m.queue_ms);
+        self.counters.prefill_latency = percentiles_of(&m.prefill_ms);
+        self.counters.decode_latency = percentiles_of(&m.decode_ms);
+        self.counters.total_latency = percentiles_of(&m.total_ms);
+        self.finished_spans.push(span);
     }
 
     /// One scheduler round: expire timed-out slots, admit queued requests
@@ -175,13 +296,24 @@ impl Engine {
         let timed_out = expired.len();
         for c in expired {
             self.counters.timeouts += 1;
+            if let Some(m) = &self.metrics {
+                m.timeouts.inc();
+            }
+            self.finish_span(&c, "timed_out");
             self.completed.insert(c.id, c);
         }
 
-        let prime_timer = Timer::start();
-        let (admitted, prompt_tokens) = self.sched.admit(&self.params)?;
-        if admitted > 0 {
-            self.counters.prime_ns += (prime_timer.ms() * 1e6) as u128;
+        let admissions = self.sched.admit(&self.params)?;
+        let mut prompt_tokens = 0;
+        for a in &admissions {
+            prompt_tokens += a.prompt_tokens;
+            self.counters.prime_ns += (a.prime_ms * 1e6) as u128;
+            if let Some(m) = &self.metrics {
+                m.prompt_tokens.add(a.prompt_tokens as u64);
+                self.spans.on_admit(a.id, self.sched.ticks(), a.prompt_tokens, a.prime_ms);
+            }
+        }
+        if !admissions.is_empty() {
             self.counters.prompt_tokens += prompt_tokens as u64;
         }
 
@@ -192,10 +324,13 @@ impl Engine {
             self.counters.decode_ns += (decode_timer.ms() * 1e6) as u128;
             self.counters.tokens_generated += decoding as u64;
             self.counters.ticks += 1;
+            if let Some(m) = &self.metrics {
+                m.tokens_generated.add(decoding as u64);
+            }
         }
 
         let report = TickReport {
-            admitted,
+            admitted: admissions.len(),
             prompt_tokens,
             decoded: decoding,
             completed: completions.len(),
@@ -203,7 +338,15 @@ impl Engine {
         };
         for c in completions {
             self.counters.completed += 1;
+            if let Some(m) = &self.metrics {
+                m.completed.inc();
+            }
+            self.finish_span(&c, "max_tokens");
             self.completed.insert(c.id, c);
+        }
+        if let Some(m) = &self.metrics {
+            m.queued.set(self.sched.queued() as f64);
+            m.in_flight.set(self.sched.in_flight() as f64);
         }
         Ok(report)
     }
@@ -238,7 +381,7 @@ impl Engine {
         expand_opts: &ExpandOptions,
     ) -> Result<SwapReport> {
         let timer = Timer::start();
-        let report = hotswap::hot_swap(
+        let result = hotswap::hot_swap(
             &mut self.params,
             &mut self.sched.active,
             plan,
@@ -246,13 +389,28 @@ impl Engine {
             expand_opts,
             &self.probe,
             self.opts.preserve_tol,
-        )?;
-        self.counters.swaps += 1;
-        self.counters.swap_ns += (timer.ms() * 1e6) as u128;
-        // the probe batch keeps its token content: none of the paper's six
-        // ops touches seq or vocab, so the rows stay valid full-`seq`
-        // windows under the new config
-        Ok(report)
+        );
+        match result {
+            Ok(report) => {
+                let ms = timer.ms();
+                self.counters.swaps += 1;
+                self.counters.swap_ns += (ms * 1e6) as u128;
+                if let Some(m) = &self.metrics {
+                    m.swaps.inc();
+                    m.swap_ms.observe(ms);
+                }
+                // the probe batch keeps its token content: none of the
+                // paper's six ops touches seq or vocab, so the rows stay
+                // valid full-`seq` windows under the new config
+                Ok(report)
+            }
+            Err(e) => {
+                if let Some(m) = &self.metrics {
+                    m.swap_rejected.inc();
+                }
+                Err(e)
+            }
+        }
     }
 }
 
@@ -419,5 +577,44 @@ mod tests {
         assert_eq!(e.counters().completed, 10);
         assert_eq!(e.counters().rejected, 0);
         assert_eq!(e.counters().timeouts, 0);
+    }
+
+    #[test]
+    fn spans_cover_completions_with_metrics_on() {
+        let reg = MetricsRegistry::new();
+        let params = ParamStore::init(&cfg(), &mut Pcg32::seeded(2), 0.05);
+        let mut e = Engine::with_registry(
+            params,
+            EngineOptions { max_slots: 2, parallel: false, ..Default::default() },
+            &reg,
+        );
+        e.submit(vec![1, 2], 3, greedy()).unwrap();
+        e.submit(vec![3], 4, greedy()).unwrap();
+        e.run_until_idle().unwrap();
+        let spans = e.take_spans();
+        assert_eq!(spans.len(), 2);
+        assert!(spans.iter().all(|s| s.finish == "max_tokens"));
+        assert!(spans.iter().all(|s| s.total_ms >= s.decode_ms));
+        assert!(e.take_spans().is_empty(), "take_spans drains");
+        let p = e.counters().decode_latency;
+        assert!(p.p50_ms <= p.p95_ms && p.p95_ms <= p.p99_ms);
+        let text = crate::obs::render(&reg);
+        assert!(text.contains("texpand_serve_completed_total 2\n"), "{text}");
+        assert!(text.contains("texpand_serve_tokens_generated_total 7\n"), "{text}");
+    }
+
+    #[test]
+    fn metrics_off_engine_tracks_no_spans() {
+        let params = ParamStore::init(&cfg(), &mut Pcg32::seeded(2), 0.05);
+        let mut e = Engine::new(
+            params,
+            EngineOptions { max_slots: 2, parallel: false, metrics: false, ..Default::default() },
+        );
+        e.submit(vec![1], 3, greedy()).unwrap();
+        e.run_until_idle().unwrap();
+        assert!(e.take_spans().is_empty());
+        assert_eq!(e.counters().completed, 1);
+        let p = e.counters().decode_latency;
+        assert_eq!((p.p50_ms, p.p95_ms, p.p99_ms), (0.0, 0.0, 0.0));
     }
 }

@@ -28,7 +28,7 @@ pub mod scheduler;
 pub use engine::{Engine, EngineOptions};
 pub use hotswap::SwapReport;
 pub use kv::KvCache;
-pub use scheduler::{Completion, FinishReason, Request, RequestId, TickReport};
+pub use scheduler::{Admission, Completion, FinishReason, Request, RequestId, TickReport};
 
 use crate::config::{GrowthOp, LayerPosition};
 use crate::error::{Error, Result};

@@ -29,6 +29,7 @@ use std::collections::VecDeque;
 
 use crate::error::{Error, Result};
 use crate::generate::{sample_from_logits, Sampler};
+use crate::metrics::Timer;
 use crate::model::forward_incremental;
 use crate::parallel::Pool;
 use crate::params::ParamStore;
@@ -138,6 +139,18 @@ impl Slot {
     }
 }
 
+/// One admission made by [`Scheduler::admit`]: which request entered a
+/// slot, how much prompt it primed and what the prime cost — the record
+/// the engine's span tracker and prefill histogram consume.
+#[derive(Clone, Copy, Debug)]
+pub struct Admission {
+    pub id: RequestId,
+    /// Prompt tokens primed through the KV cache (window-clipped).
+    pub prompt_tokens: usize,
+    /// Wall-clock cost of the prime.
+    pub prime_ms: f64,
+}
+
 /// Outcome of one scheduler tick.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TickReport {
@@ -206,11 +219,11 @@ impl Scheduler {
     }
 
     /// Admit queued requests into free slots, priming each prompt through
-    /// the KV cache. Returns `(admitted, prompt_tokens_processed)`.
-    pub fn admit(&mut self, params: &ParamStore) -> Result<(usize, usize)> {
+    /// the KV cache. Returns one [`Admission`] per request admitted, each
+    /// carrying its prompt size and measured prime cost.
+    pub fn admit(&mut self, params: &ParamStore) -> Result<Vec<Admission>> {
         let cfg = *params.config();
-        let mut admitted = 0;
-        let mut prompt_tokens = 0;
+        let mut admissions = Vec::new();
         while self.active.len() < self.max_slots {
             let Some((id, req)) = self.queue.pop_front() else { break };
             let mut slot = Slot {
@@ -227,12 +240,13 @@ impl Scheduler {
                 logits: Vec::new(),
                 admitted_tick: self.tick,
             };
-            prompt_tokens += slot.history.len().min(cfg.seq);
+            let prompt_tokens = slot.history.len().min(cfg.seq);
+            let prime = Timer::start();
             slot.reprime(params)?;
+            admissions.push(Admission { id, prompt_tokens, prime_ms: prime.ms() });
             self.active.push(slot);
-            admitted += 1;
         }
-        Ok((admitted, prompt_tokens))
+        Ok(admissions)
     }
 
     /// Expire in-flight sequences that have spent `timeout_ticks` or more
@@ -332,12 +346,13 @@ mod tests {
             s.enqueue(greedy_req(vec![i % 16], 4));
         }
         assert_eq!(s.queued(), 5);
-        let (admitted, prompt_tokens) = s.admit(&p).unwrap();
-        assert_eq!(admitted, 2);
-        assert_eq!(prompt_tokens, 2);
+        let admissions = s.admit(&p).unwrap();
+        assert_eq!(admissions.len(), 2);
+        assert_eq!(admissions.iter().map(|a| a.prompt_tokens).sum::<usize>(), 2);
+        assert!(admissions.iter().all(|a| a.prime_ms >= 0.0));
         assert_eq!((s.queued(), s.in_flight()), (3, 2));
         // no free slots: second admit is a no-op
-        assert_eq!(s.admit(&p).unwrap().0, 0);
+        assert_eq!(s.admit(&p).unwrap().len(), 0);
     }
 
     #[test]
@@ -403,7 +418,7 @@ mod tests {
         assert_eq!(expired[0].tokens.len(), 2 + 2);
         assert_eq!(expired[0].ticks_in_flight, 2);
         // the freed slot admits the queued request
-        assert_eq!(s.admit(&p).unwrap().0, 1);
+        assert_eq!(s.admit(&p).unwrap().len(), 1);
         let mut done = Vec::new();
         while !s.is_idle() {
             done.extend(s.decode_tick(&p, false).unwrap());

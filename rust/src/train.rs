@@ -150,6 +150,16 @@ pub fn train_segment(
     let num_params = params.num_scalars();
     let mut last_step_event = (0usize, f32::NAN, f32::NAN);
 
+    // live training gauges: same registry the serve path publishes
+    // through, so one /metrics scrape covers either mode
+    let reg = crate::obs::global();
+    let step_gauge = reg.gauge("texpand_train_step", "Global optimizer step");
+    let loss_gauge = reg.gauge("texpand_train_loss", "Latest training loss");
+    let tps_gauge = reg.gauge("texpand_train_tokens_per_sec", "Latest step throughput");
+    let params_gauge = reg.gauge("texpand_train_params", "Scalar parameter count");
+    let tokens_counter = reg.counter("texpand_train_tokens_total", "Training tokens consumed");
+    params_gauge.set(num_params as f64);
+
     let mut local_step = 0usize;
     let end = loop {
         let batch = batcher.next();
@@ -166,7 +176,8 @@ pub fn train_segment(
             None => f32::NAN,
         };
         opt.step(params, &grads)?;
-        step_ms_total += step_timer.ms();
+        let step_ms = step_timer.ms();
+        step_ms_total += step_ms;
 
         if local_step == 0 {
             first_loss = loss;
@@ -178,6 +189,12 @@ pub fn train_segment(
         state.global_step += 1;
         state.tokens_seen += tokens_per_step;
         state.est_flops += 6.0 * num_params as f64 * tokens_per_step as f64;
+        step_gauge.set(state.global_step as f64);
+        loss_gauge.set(f64::from(loss));
+        if step_ms > 0.0 {
+            tps_gauge.set(tokens_per_step as f64 / (step_ms / 1e3));
+        }
+        tokens_counter.add(tokens_per_step as u64);
         logger.loss_row(state.global_step, &stage.meta.name, loss, state.tokens_seen);
         last_step_event = (local_step, loss, grad_norm);
         if local_step % tcfg.log_every == 0 {
@@ -247,6 +264,8 @@ pub fn train_segment(
             ("params", Value::num(num_params as f64)),
         ],
     );
+    // segment boundary: buffered log lines hit disk before surgery/eval
+    logger.flush();
     Ok((report, end))
 }
 

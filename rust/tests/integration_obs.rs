@@ -1,0 +1,309 @@
+//! Integration: the observability layer end to end (S19; DESIGN.md §14).
+//!
+//! Three acceptance properties:
+//! (a) `/metrics` output is valid Prometheus text exposition — parsed
+//!     back here: HELP/TYPE headers precede samples, names are valid,
+//!     label escaping round-trips, histogram buckets are cumulative,
+//!     monotone and end in a `le="+Inf"` bucket equal to `_count`;
+//! (b) the serve engine publishes counters, latency histograms and
+//!     per-request spans through a registry, live over real TCP;
+//! (c) histogram percentile estimates match an exact sorted-quantile
+//!     oracle to within one bucket width (property test).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use texpand::config::{GrowthOp, ModelConfig};
+use texpand::expand::{ExpandOptions, ExpansionPlan};
+use texpand::generate::Sampler;
+use texpand::obs::registry::valid_metric_name;
+use texpand::obs::{http_get, render, MetricsRegistry, MetricsServer, LATENCY_MS_BOUNDS};
+use texpand::params::ParamStore;
+use texpand::prop::Runner;
+use texpand::rng::Pcg32;
+use texpand::serve::{Engine, EngineOptions};
+
+/// Per-series histogram state accumulated while walking an exposition
+/// document (keyed by family + labels minus `le`).
+#[derive(Default)]
+struct HistSeries {
+    last_le: f64,
+    last_cum: u64,
+    buckets: usize,
+    inf_cum: Option<u64>,
+    sum_seen: bool,
+    count: Option<u64>,
+}
+
+/// Split a rendered label body into (labels minus `le`, the `le` value).
+/// Test label values deliberately avoid commas, so a plain split is safe.
+fn strip_le(labels: &str) -> (String, Option<String>) {
+    let mut le = None;
+    let kept: Vec<&str> = labels
+        .split(',')
+        .filter(|part| match part.strip_prefix("le=\"") {
+            Some(v) => {
+                le = Some(v.trim_end_matches('"').to_string());
+                false
+            }
+            None => !part.is_empty(),
+        })
+        .collect();
+    (kept.join(","), le)
+}
+
+/// Parse an exposition document back and assert the format contract the
+/// module docs of `obs::prometheus` promise.
+fn validate_exposition(text: &str) {
+    let mut seen_families: Vec<String> = Vec::new();
+    let mut pending_help: Option<String> = None;
+    let mut current: Option<(String, String)> = None;
+    let mut hists: HashMap<String, HistSeries> = HashMap::new();
+
+    for line in text.lines() {
+        assert!(!line.is_empty(), "exposition has no blank lines");
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split(' ').next().unwrap().to_string();
+            assert!(!seen_families.contains(&name), "family '{name}' emitted twice");
+            pending_help = Some(name);
+            current = None;
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let name = it.next().unwrap().to_string();
+            let kind = it.next().unwrap_or("").to_string();
+            assert_eq!(pending_help.take(), Some(name.clone()), "TYPE without HELP: {line}");
+            assert!(valid_metric_name(&name), "invalid family name '{name}'");
+            assert!(
+                ["counter", "gauge", "histogram"].contains(&kind.as_str()),
+                "unknown kind in {line}"
+            );
+            seen_families.push(name.clone());
+            current = Some((name, kind));
+        } else {
+            let (fam, kind) = current.clone().expect("sample line before any TYPE header");
+            let (series, value) = line.rsplit_once(' ').expect("sample line has no value");
+            let (name_part, label_part) = match series.find('{') {
+                Some(i) => {
+                    assert!(series.ends_with('}'), "unterminated labels in {line}");
+                    (&series[..i], &series[i + 1..series.len() - 1])
+                }
+                None => (series, ""),
+            };
+            match kind.as_str() {
+                "counter" => {
+                    assert_eq!(name_part, fam, "stray sample {line}");
+                    value.parse::<u64>().expect("counter value must be an unsigned integer");
+                }
+                "gauge" => {
+                    assert_eq!(name_part, fam, "stray sample {line}");
+                    // Rust's f64 parser accepts the format's NaN/+Inf/-Inf
+                    value.parse::<f64>().expect("gauge value must parse");
+                }
+                "histogram" => {
+                    let (key_labels, le) = strip_le(label_part);
+                    let key = format!("{fam}|{key_labels}");
+                    let suffix = name_part
+                        .strip_prefix(fam.as_str())
+                        .unwrap_or_else(|| panic!("sample '{line}' outside family '{fam}'"));
+                    match suffix {
+                        "_bucket" => {
+                            let le = le.expect("bucket line without le label");
+                            let cum = value.parse::<u64>().expect("bucket count");
+                            let h = hists.entry(key).or_default();
+                            assert!(cum >= h.last_cum, "non-monotone cumulative bucket: {line}");
+                            if le == "+Inf" {
+                                assert!(h.inf_cum.is_none(), "duplicate +Inf bucket: {line}");
+                                h.inf_cum = Some(cum);
+                            } else {
+                                let bound = le.parse::<f64>().expect("finite le bound");
+                                assert!(h.inf_cum.is_none(), "finite bucket after +Inf: {line}");
+                                assert!(
+                                    h.buckets == 0 || bound > h.last_le,
+                                    "bucket bounds not ascending: {line}"
+                                );
+                                h.last_le = bound;
+                            }
+                            h.buckets += 1;
+                            h.last_cum = cum;
+                        }
+                        "_sum" => {
+                            value.parse::<f64>().expect("histogram sum");
+                            hists.entry(key).or_default().sum_seen = true;
+                        }
+                        "_count" => {
+                            let count = value.parse::<u64>().expect("histogram count");
+                            let h = hists.entry(key).or_default();
+                            assert_eq!(
+                                h.inf_cum,
+                                Some(count),
+                                "histogram _count must equal its +Inf bucket ({fam})"
+                            );
+                            h.count = Some(count);
+                        }
+                        _ => panic!("unexpected sample '{line}' in histogram family '{fam}'"),
+                    }
+                }
+                other => panic!("unreachable kind {other}"),
+            }
+        }
+    }
+    assert!(!seen_families.is_empty(), "document announced no families");
+    for (key, h) in &hists {
+        assert!(h.inf_cum.is_some(), "histogram series {key} missing +Inf bucket");
+        assert!(h.sum_seen, "histogram series {key} missing _sum");
+        assert!(h.count.is_some(), "histogram series {key} missing _count");
+    }
+}
+
+/// A registry exercising every family kind, labels, non-finite values and
+/// out-of-range histogram observations.
+fn populated_registry() -> MetricsRegistry {
+    let reg = MetricsRegistry::new();
+    reg.counter("obs_requests_total", "Total requests").add(7);
+    reg.counter_with("obs_decisions_total", "Verdicts", &[("decision", "expand")]).inc();
+    reg.counter_with("obs_decisions_total", "Verdicts", &[("decision", "continue")]).add(3);
+    reg.gauge("obs_queue_depth", "Queued requests").set(2.5);
+    reg.gauge("obs_headroom", "help text with \\ and\nnewline").set(f64::INFINITY);
+    let h = reg.histogram("obs_lat_ms", "Latency", &LATENCY_MS_BOUNDS);
+    for v in [0.02, 0.3, 4.0, 40.0, 900.0, 20_000.0] {
+        h.observe(v);
+    }
+    let hl =
+        reg.histogram_with("obs_phase_ms", "Phase cost", &[1.0, 5.0, 25.0], &[("phase", "decode")]);
+    hl.observe(0.5);
+    hl.observe(3.0);
+    hl.observe(100.0);
+    reg
+}
+
+#[test]
+fn rendered_exposition_parses_back_valid() {
+    let reg = populated_registry();
+    let text = render(&reg);
+    validate_exposition(&text);
+    assert!(text.contains("obs_requests_total 7\n"), "{text}");
+    assert!(text.contains("obs_decisions_total{decision=\"expand\"} 1\n"), "{text}");
+    assert!(text.contains("obs_headroom +Inf\n"), "{text}");
+    assert!(text.contains("# HELP obs_headroom help text with \\\\ and\\nnewline\n"), "{text}");
+    assert!(text.contains("obs_lat_ms_count 6\n"), "{text}");
+    // 20000 ms exceeds the last finite bound: +Inf bucket only
+    assert!(text.contains("obs_lat_ms_bucket{le=\"5000\"} 5\n"), "{text}");
+    assert!(text.contains("obs_lat_ms_bucket{le=\"+Inf\"} 6\n"), "{text}");
+}
+
+#[test]
+fn label_escaping_round_trips() {
+    let reg = MetricsRegistry::new();
+    let original = "a\\b \"q\"\nend";
+    reg.counter_with("obs_esc_total", "escapes", &[("path", original)]).inc();
+    let text = render(&reg);
+    assert!(text.contains("obs_esc_total{path=\"a\\\\b \\\"q\\\"\\nend\"} 1\n"), "{text}");
+    let start = text.find("path=\"").unwrap() + "path=\"".len();
+    let end = text.rfind("\"} 1").unwrap();
+    let unescaped =
+        text[start..end].replace("\\n", "\n").replace("\\\"", "\"").replace("\\\\", "\\");
+    assert_eq!(unescaped, original, "label value must survive an escape round-trip");
+}
+
+#[test]
+fn metrics_server_serves_valid_exposition_over_tcp() {
+    let reg = Arc::new(populated_registry());
+    let srv = MetricsServer::bind("127.0.0.1:0", reg.clone()).unwrap();
+    let addr = srv.local_addr().to_string();
+    let (status, body) = http_get(&addr, "/healthz", Duration::from_secs(5)).unwrap();
+    assert_eq!((status, body.as_str()), (200, "ok\n"));
+    let (status, body) = http_get(&addr, "/metrics", Duration::from_secs(5)).unwrap();
+    assert_eq!(status, 200);
+    validate_exposition(&body);
+    assert!(body.contains("obs_requests_total 7\n"), "{body}");
+    // live updates are visible to the next scrape
+    reg.counter("obs_requests_total", "Total requests").add(2);
+    let (_, body) = http_get(&addr, "/metrics", Duration::from_secs(5)).unwrap();
+    assert!(body.contains("obs_requests_total 9\n"), "{body}");
+    srv.shutdown();
+}
+
+#[test]
+fn engine_publishes_counters_histograms_and_spans() {
+    let reg = MetricsRegistry::new();
+    let cfg =
+        ModelConfig { layers: 1, hidden: 8, heads: 1, k: 4, v: 4, mlp: 16, seq: 8, vocab: 16 };
+    let params = ParamStore::init(&cfg, &mut Pcg32::seeded(11), 0.05);
+    let opts = EngineOptions { max_slots: 2, parallel: false, ..Default::default() };
+    let mut engine = Engine::with_registry(params, opts, &reg);
+    let sampler = Sampler { temperature: 0.0, top_k: None, seed: 0 };
+    for i in 0..4u32 {
+        engine.submit(vec![i % 16, (i + 3) % 16], 5, sampler).unwrap();
+    }
+    engine.run_until_idle().unwrap();
+
+    let spans = engine.take_spans();
+    assert_eq!(spans.len(), 4, "one span per completed request");
+    for s in &spans {
+        assert_eq!((s.finish, s.generated), ("max_tokens", 5));
+        assert!(s.queue_ms >= 0.0 && s.prefill_ms >= 0.0 && s.decode_ms >= 0.0);
+        assert!(s.total_ms + 1e-6 >= s.decode_ms);
+        assert!(s.finished_tick >= s.admitted_tick);
+    }
+    assert!(engine.take_spans().is_empty(), "take_spans drains");
+
+    let text = render(&reg);
+    validate_exposition(&text);
+    assert!(text.contains("texpand_serve_completed_total 4\n"), "{text}");
+    assert!(text.contains("texpand_serve_tokens_generated_total 20\n"), "{text}");
+    assert!(text.contains("texpand_serve_decode_latency_ms_count 4\n"), "{text}");
+    let c = engine.counters();
+    assert!(c.total_latency.p50_ms <= c.total_latency.p95_ms + 1e-9);
+    assert!(c.total_latency.p95_ms <= c.total_latency.p99_ms + 1e-9);
+
+    // hot-swap instrumentation: a committed swap bumps the swap counter
+    // and lands one swap-duration observation
+    engine.submit(vec![1, 2], 4, sampler).unwrap();
+    engine.tick().unwrap();
+    let plan = ExpansionPlan::new(engine.config(), vec![GrowthOp::Mlp { p: 32 }]).unwrap();
+    engine.hot_swap(&plan, &mut Pcg32::seeded(5), &ExpandOptions::default()).unwrap();
+    engine.run_until_idle().unwrap();
+    let text = render(&reg);
+    validate_exposition(&text);
+    assert!(text.contains("texpand_serve_swaps_total 1\n"), "{text}");
+    assert!(text.contains("texpand_serve_swap_ms_count 1\n"), "{text}");
+    assert_eq!(engine.take_spans().len(), 1, "the post-swap request gets a span too");
+}
+
+#[test]
+fn histogram_quantiles_match_sorted_oracle_within_one_bucket() {
+    Runner::new("histogram quantile vs sorted oracle", 60).run(
+        |rng| {
+            let n = 1 + rng.below(200);
+            // uniform in [0, 4000) ms — strictly below the last finite
+            // bound, so the oracle bucket always has a finite upper edge
+            (0..n).map(|_| rng.below(4_000_000) as f64 / 1000.0).collect::<Vec<f64>>()
+        },
+        |samples| {
+            let reg = MetricsRegistry::new();
+            let h = reg.histogram("obs_oracle_ms", "oracle", &LATENCY_MS_BOUNDS);
+            for &v in samples {
+                h.observe(v);
+            }
+            let snap = h.snapshot();
+            let mut sorted = samples.clone();
+            sorted.sort_by(f64::total_cmp);
+            for q in [0.5, 0.95, 0.99] {
+                let est = snap.quantile(q);
+                let n = sorted.len();
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let exact = sorted[rank - 1];
+                let i = LATENCY_MS_BOUNDS.partition_point(|b| exact > *b);
+                let lo = if i == 0 { 0.0 } else { LATENCY_MS_BOUNDS[i - 1] };
+                let hi = LATENCY_MS_BOUNDS[i];
+                if (est - exact).abs() > (hi - lo) + 1e-9 {
+                    return Err(format!(
+                        "q={q}: estimate {est} vs oracle {exact} off by more than bucket [{lo}, {hi}]"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
