@@ -1,12 +1,17 @@
 //! L3 runtime-overhead decomposition (DESIGN.md §Perf target: coordinator
 //! overhead < 10% of PJRT execute time at the final stage).
 //!
-//! Two sections:
+//! Three sections:
 //!
 //! * `metrics_overhead` — artifact-free: decode throughput of the serve
 //!   engine with the obs registry publishing vs disabled. The registry is
 //!   on the per-token hot path, so its cost must stay < 5% (DESIGN.md
 //!   §14); ci.sh asserts the row exists.
+//! * `span_export_overhead` — artifact-free: the same burst with the full
+//!   live span-export path on top (ring push per finished request + a
+//!   `/spans` tail client streaming over real TCP), relative to the
+//!   metrics-on baseline. Target < 5% (DESIGN.md §15); ci.sh asserts the
+//!   row exists.
 //! * PJRT step decomposition — breaks one training step into its cost
 //!   components (marshal / execute / clip+adam / batch) and reports the
 //!   overhead fraction, plus one-time costs (HLO parse+compile) and the
@@ -16,13 +21,16 @@
 //!
 //! Run: `cargo bench --bench runtime_overhead`
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
 use texpand::bench_util::{bench, Reporter};
 use texpand::config::{OptimKind, TrainConfig};
 use texpand::data::{Batcher, CorpusKind};
 use texpand::generate::Sampler;
 use texpand::json::Value;
 use texpand::metrics::Timer;
-use texpand::obs::MetricsRegistry;
+use texpand::obs::{http_stream_lines, MetricsRegistry, MetricsServer, SpanRing};
 use texpand::optim::{clip_global_norm, Optimizer};
 use texpand::params::ParamStore;
 use texpand::rng::Pcg32;
@@ -59,6 +67,69 @@ fn decode_tps(metrics: bool) -> f64 {
     best
 }
 
+/// Decode tokens/sec of the same burst with the full span-export path on:
+/// registry publishing, every finished request span pushed into the live
+/// ring, and a `/spans` tail client streaming the ring over real TCP for
+/// the whole burst. Returns the best timed-round throughput plus the
+/// total spans the tail clients received (proof the path was exercised).
+fn decode_tps_span_export() -> (f64, usize) {
+    let cfg = texpand::config::ModelConfig {
+        layers: 2, hidden: 32, heads: 2, k: 16, v: 16, mlp: 64, seq: 48, vocab: 128,
+    };
+    let mut best = 0.0f64;
+    let mut streamed = 0usize;
+    for round in 0..4u64 {
+        let registry = Arc::new(MetricsRegistry::new());
+        let ring = Arc::new(SpanRing::new(1024));
+        let srv =
+            MetricsServer::bind_with_spans("127.0.0.1:0", registry.clone(), Some(ring.clone()))
+                .unwrap();
+        let addr = srv.local_addr().to_string();
+        let received = Arc::new(AtomicUsize::new(0));
+        let tail = {
+            let received = received.clone();
+            std::thread::spawn(move || {
+                let _ = http_stream_lines(
+                    &addr,
+                    "/spans",
+                    std::time::Duration::from_secs(2),
+                    None,
+                    &mut |_| {
+                        received.fetch_add(1, Ordering::Relaxed);
+                    },
+                );
+            })
+        };
+        // handshake: a warmup line must round-trip before the burst so
+        // the tail client is attached while the engine is being timed
+        ring.push("{\"event\":\"warmup\"}".to_string());
+        let deadline = Timer::start();
+        while received.load(Ordering::Relaxed) == 0 && deadline.ms() < 2000.0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let params = ParamStore::init(&cfg, &mut Pcg32::seeded(7), 0.02);
+        let opts =
+            EngineOptions { max_slots: 4, parallel: false, metrics: true, ..Default::default() };
+        let mut engine = Engine::with_registry(params, opts, &registry);
+        engine.set_span_ring(ring.clone());
+        let sampler = Sampler { seed: round, ..Default::default() };
+        for i in 0..8usize {
+            let prompt: Vec<u32> =
+                (0..8usize).map(|t| ((i * 13 + t * 7) % cfg.vocab) as u32).collect();
+            engine.submit(prompt, 24, sampler).unwrap();
+        }
+        engine.run_until_idle().unwrap();
+        let tps = engine.counters().tokens_per_sec();
+        srv.shutdown();
+        tail.join().unwrap();
+        streamed += received.load(Ordering::Relaxed).saturating_sub(1); // minus warmup
+        if round > 0 {
+            best = best.max(tps);
+        }
+    }
+    (best, streamed)
+}
+
 fn main() {
     let mut rep = Reporter::new("runtime_overhead");
 
@@ -71,6 +142,15 @@ fn main() {
     rep.value_row("decode tok/s (metrics off)", "tokens_per_sec", off_tps, kind.clone());
     rep.value_row("metrics overhead (1 - on/off)", "overhead_fraction", overhead, kind);
     println!("target: metrics overhead_fraction < 0.05 (DESIGN.md §14).");
+
+    // --- span-export overhead (artifact-free) ----------------------------
+    let (spans_tps, streamed) = decode_tps_span_export();
+    let span_overhead = if on_tps > 0.0 { (on_tps - spans_tps) / on_tps } else { 0.0 };
+    let kind = vec![("kind", Value::str("span_export_overhead"))];
+    rep.value_row("decode tok/s (span export on)", "tokens_per_sec", spans_tps, kind.clone());
+    rep.value_row("spans streamed to the tail client", "count", streamed as f64, kind.clone());
+    rep.value_row("span export overhead (1 - spans/on)", "overhead_fraction", span_overhead, kind);
+    println!("target: span export overhead_fraction < 0.05 (DESIGN.md §15).");
 
     // --- PJRT step decomposition (needs `make artifacts`) ----------------
     let manifest = match Manifest::load("artifacts", "manifest.json") {

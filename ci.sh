@@ -64,6 +64,28 @@ if [ "$FAST" = "0" ]; then
     exit 1
   fi
 
+  echo "==> run-store + growth-timeline smoke (runs stats / report over the smoke run)"
+  # the store must see every expansion of the smoke run with a nonzero
+  # measured param delta, and the report must show a preservation
+  # measurement at each of the tiny schedule's 2 boundaries
+  STATS="$(./target/release/texpand runs stats ci-smoke --runs "$SMOKE_RUNS")"
+  if ! echo "$STATS" | grep -Eq '^expansions: [1-9]'; then
+    echo "ci.sh: runs stats reported no expansions for ci-smoke" >&2
+    echo "$STATS" >&2
+    exit 1
+  fi
+  if ! echo "$STATS" | grep -Eq '^params_delta_total: [1-9]'; then
+    echo "ci.sh: runs stats reported a zero param delta for ci-smoke" >&2
+    echo "$STATS" >&2
+    exit 1
+  fi
+  REPORT="$(./target/release/texpand report ci-smoke --runs "$SMOKE_RUNS")"
+  if [ "$(echo "$REPORT" | grep -c 'preservation: probe')" -lt 2 ]; then
+    echo "ci.sh: report missing a preservation row per boundary" >&2
+    echo "$REPORT" >&2
+    exit 1
+  fi
+
   echo "==> policy-driven grow-train smoke (plateau policy, native backend)"
   ./target/release/texpand train \
     --backend native \
@@ -136,12 +158,16 @@ if [ "$FAST" = "0" ]; then
     exit 1
   fi
 
-  echo "==> runtime-overhead bench smoke (metrics on/off decode cost)"
-  # artifact-free section only (the PJRT decomposition self-skips); the
-  # freshest rows must include the metrics_overhead fraction
+  echo "==> runtime-overhead bench smoke (metrics + span-export decode cost)"
+  # artifact-free sections only (the PJRT decomposition self-skips); the
+  # freshest rows must include both overhead fractions
   TEXPAND_THREADS=2 TEXPAND_BENCH_BUDGET_MS=60 cargo bench --bench runtime_overhead
   if ! grep '"kind":"metrics_overhead"' runs/bench.jsonl | tail -n 3 | grep -q '"overhead_fraction":'; then
     echo "ci.sh: no metrics_overhead overhead_fraction row in runs/bench.jsonl" >&2
+    exit 1
+  fi
+  if ! grep '"kind":"span_export_overhead"' runs/bench.jsonl | tail -n 3 | grep -q '"overhead_fraction":'; then
+    echo "ci.sh: no span_export_overhead overhead_fraction row in runs/bench.jsonl" >&2
     exit 1
   fi
 fi

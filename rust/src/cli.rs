@@ -1,9 +1,11 @@
 //! Command-line argument parsing (S11; no `clap` offline).
 //!
-//! Syntax: `texpand <subcommand> [--flag value]... [--switch]...`.
-//! [`Args`] splits the raw argv into a subcommand, `--key value` flags and
-//! bare switches, with typed accessors and unknown-flag detection so typos
-//! fail instead of being silently ignored.
+//! Syntax: `texpand <subcommand> [positional]... [--flag value]... [--switch]...`.
+//! [`Args`] splits the raw argv into a subcommand, positional operands,
+//! `--key value` flags and bare switches, with typed accessors and
+//! unknown-flag/-positional detection so typos fail instead of being
+//! silently ignored. Positionals belong *before* the flags: a bare token
+//! right after `--flag` is that flag's value, not an operand.
 
 use std::collections::{HashMap, HashSet};
 
@@ -13,9 +15,11 @@ use crate::error::{Error, Result};
 #[derive(Clone, Debug)]
 pub struct Args {
     pub subcommand: Option<String>,
+    positionals: Vec<String>,
     flags: HashMap<String, String>,
     switches: HashSet<String>,
     consumed: std::cell::RefCell<HashSet<String>>,
+    consumed_positionals: std::cell::RefCell<HashSet<usize>>,
 }
 
 impl Args {
@@ -28,11 +32,16 @@ impl Args {
             Some(first) if !first.starts_with("--") => Some(it.next().unwrap()),
             _ => None,
         };
+        let mut positionals = Vec::new();
         let mut flags = HashMap::new();
         let mut switches = HashSet::new();
         while let Some(arg) = it.next() {
             let Some(name) = arg.strip_prefix("--") else {
-                return Err(Error::Cli(format!("unexpected positional argument '{arg}'")));
+                // collected, not rejected: subcommands that take operands
+                // claim them via `positional`; `reject_unknown` catches
+                // the rest (so `texpand train oops` still fails)
+                positionals.push(arg);
+                continue;
             };
             if name.is_empty() {
                 return Err(Error::Cli("empty flag '--'".into()));
@@ -50,12 +59,32 @@ impl Args {
                 }
             }
         }
-        Ok(Args { subcommand, flags, switches, consumed: Default::default() })
+        Ok(Args {
+            subcommand,
+            positionals,
+            flags,
+            switches,
+            consumed: Default::default(),
+            consumed_positionals: Default::default(),
+        })
     }
 
     /// Parse from the process environment.
     pub fn from_env() -> Result<Args> {
         Args::parse(std::env::args().skip(1))
+    }
+
+    /// The `i`-th positional operand after the subcommand, if present.
+    pub fn positional(&self, i: usize) -> Option<String> {
+        self.consumed_positionals.borrow_mut().insert(i);
+        self.positionals.get(i).cloned()
+    }
+
+    /// Required positional operand; `what` names it in the error
+    /// (e.g. "RUN").
+    pub fn require_positional(&self, i: usize, what: &str) -> Result<String> {
+        self.positional(i)
+            .ok_or_else(|| Error::Cli(format!("missing required {what} argument")))
     }
 
     /// String flag.
@@ -119,8 +148,19 @@ impl Args {
         self.switches.contains(name)
     }
 
-    /// After consuming all known flags, reject anything left over.
+    /// After consuming all known flags and positionals, reject anything
+    /// left over (typo'd flags, stray operands).
     pub fn reject_unknown(&self) -> Result<()> {
+        let pos_consumed = self.consumed_positionals.borrow();
+        if let Some(stray) = self
+            .positionals
+            .iter()
+            .enumerate()
+            .find(|(i, _)| !pos_consumed.contains(i))
+            .map(|(_, s)| s)
+        {
+            return Err(Error::Cli(format!("unexpected positional argument '{stray}'")));
+        }
         let consumed = self.consumed.borrow();
         let unknown: Vec<&String> = self
             .flags
@@ -208,7 +248,25 @@ mod tests {
 
     #[test]
     fn rejects_positional_noise() {
-        assert!(Args::parse(vec!["train".into(), "oops".into()]).is_err());
+        // parse collects the operand; reject_unknown (which every
+        // subcommand calls) refuses it if nothing claimed it
+        let a = args("train oops --schedule s.json");
+        let _ = a.get("schedule");
+        let err = a.reject_unknown().unwrap_err().to_string();
+        assert!(err.contains("'oops'"), "{err}");
+    }
+
+    #[test]
+    fn claimed_positionals_pass_reject_unknown() {
+        let a = args("runs stats smoke-1 --runs runs");
+        assert_eq!(a.positional(0).as_deref(), Some("stats"));
+        assert_eq!(a.require_positional(1, "RUN").unwrap(), "smoke-1");
+        let _ = a.get("runs");
+        a.reject_unknown().unwrap();
+        // out-of-range positionals report what was expected
+        assert_eq!(a.positional(2), None);
+        let err = a.require_positional(2, "THING").unwrap_err().to_string();
+        assert!(err.contains("THING"), "{err}");
     }
 
     #[test]

@@ -369,6 +369,7 @@ impl Coordinator {
         };
 
         // the transaction: params + moments through the one plan seam
+        let params_before = params.num_scalars();
         let expand_opts =
             ExpandOptions { init: crate::expand::Init::Normal(self.opts.expand_init_std), ..Default::default() };
         plan.apply_train(params, opt, &expand_opts, rng)?;
@@ -405,12 +406,17 @@ impl Coordinator {
                 ("loss_before", Value::num(f64::from(loss_before))),
                 ("loss_after", Value::num(f64::from(loss_after))),
                 ("surgery_ms", Value::num(surgery_ms)),
+                ("params_before", Value::num(params_before as f64)),
                 ("params_after", Value::num(params.num_scalars() as f64)),
+                ("param_delta", Value::num((params.num_scalars() - params_before) as f64)),
                 // plan predictions next to the measured outcome — the
                 // param prediction is exact (asserted by apply_train), the
                 // FLOPs prediction is the cost-model estimate
                 ("params_predicted", Value::num(plan.params_after() as f64)),
                 ("flops_delta_est", Value::num(plan.flops_delta())),
+                // full plan evidence: the run store rebuilds and
+                // cross-checks this via ExpansionPlan::from_json
+                ("plan", plan.to_json()),
             ],
         );
         // an expansion boundary is the event this whole repo exists for:
@@ -418,6 +424,37 @@ impl Coordinator {
         crate::obs::global()
             .counter("texpand_train_expansions_total", "Committed expansion boundaries")
             .inc();
+        // preservation-drift monitor: one event + gauge per boundary, so a
+        // whole multi-stage run leaves a queryable preservation trail and a
+        // live scrape sees the most recent boundary's drift
+        let drift = rust_delta.max(pjrt_delta);
+        let tol = self.tcfg.preserve_tol;
+        let within_tol = drift <= tol;
+        crate::obs::global()
+            .gauge(
+                "texpand_preservation_drift",
+                "max|delta logits| across both probes at the latest expansion boundary",
+            )
+            .set(f64::from(drift));
+        logger.event(
+            "preservation",
+            vec![
+                ("boundary", Value::str(into_name)),
+                ("probe_delta", Value::num(f64::from(rust_delta))),
+                ("backend_delta", Value::num(f64::from(pjrt_delta))),
+                ("eval_before", Value::num(f64::from(loss_before))),
+                ("eval_after", Value::num(f64::from(loss_after))),
+                ("eval_drift", Value::num(f64::from(loss_after - loss_before))),
+                ("tol", Value::num(f64::from(tol))),
+                ("within_tol", Value::Bool(within_tol)),
+            ],
+        );
+        if !within_tol {
+            eprintln!(
+                "warning: preservation drift {drift:.3e} exceeds probe tolerance {tol:.0e} \
+                 at boundary into '{into_name}'"
+            );
+        }
         logger.flush();
         if self.opts.verify_boundaries {
             if rust_delta > self.tcfg.preserve_tol {

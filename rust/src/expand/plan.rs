@@ -290,6 +290,35 @@ impl ExpansionPlan {
         ])
     }
 
+    /// Rebuild a plan from its [`ExpansionPlan::to_json`] record (run-store
+    /// ingestion of `decision`/`boundary` evidence). The `from` config and
+    /// `ops` are the source of truth — the plan is re-derived through
+    /// [`ExpansionPlan::new`], re-running all validation — and the
+    /// recorded `to`/`params_after` are then cross-checked against the
+    /// rebuilt prediction, so a tampered or stale log row fails loudly
+    /// instead of resurrecting as believable evidence.
+    pub fn from_json(v: &Value) -> Result<ExpansionPlan> {
+        let from = ModelConfig::from_json(v.req("from")?)?;
+        let ops_json = v.req("ops")?.as_arr()?;
+        let ops = ops_json.iter().map(GrowthOp::from_json).collect::<Result<Vec<_>>>()?;
+        let plan = ExpansionPlan::new(&from, ops)?;
+        let to = ModelConfig::from_json(v.req("to")?)?;
+        if &to != plan.target_config() {
+            return Err(Error::Expand(format!(
+                "plan json: recorded target {to:?} != rebuilt prediction {:?}",
+                plan.target_config()
+            )));
+        }
+        let params_after = v.req("params_after")?.as_usize()?;
+        if params_after != plan.params_after() {
+            return Err(Error::Expand(format!(
+                "plan json: recorded params_after {params_after} != rebuilt {}",
+                plan.params_after()
+            )));
+        }
+        Ok(plan)
+    }
+
     /// Apply to a borrowed store, returning the expanded copy (the
     /// read-only entry for probes, branches, benches and examples).
     pub fn materialize(
@@ -625,6 +654,31 @@ mod tests {
             *plan.target_config()
         );
         assert_eq!(j.req("constraints").unwrap().as_arr().unwrap().len(), 6);
+    }
+
+    #[test]
+    fn plan_from_json_round_trips_and_cross_checks() {
+        let plan = ExpansionPlan::new(&cfg(), all_six()).unwrap();
+        let j = plan.to_json();
+        let back = ExpansionPlan::from_json(&j).unwrap();
+        assert_eq!(back, plan);
+        // a tampered target config is rejected, not trusted
+        let mut fields: Vec<(&str, Value)> = Vec::new();
+        for key in ["from", "ops", "params_before", "params_after", "param_delta"] {
+            fields.push((key, j.req(key).unwrap().clone()));
+        }
+        fields.push(("to", plan.from_config().to_json())); // wrong: claims no growth
+        let tampered = Value::obj(fields);
+        let err = ExpansionPlan::from_json(&tampered).unwrap_err().to_string();
+        assert!(err.contains("recorded target"), "{err}");
+        // a tampered param count is rejected too
+        let mut fields: Vec<(&str, Value)> = Vec::new();
+        for key in ["from", "to", "ops"] {
+            fields.push((key, j.req(key).unwrap().clone()));
+        }
+        fields.push(("params_after", Value::num(1.0)));
+        let err = ExpansionPlan::from_json(&Value::obj(fields)).unwrap_err().to_string();
+        assert!(err.contains("params_after"), "{err}");
     }
 
     // ---- apply seam ------------------------------------------------------

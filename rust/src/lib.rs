@@ -53,12 +53,16 @@
 //! * [`coordinator`] — the growth coordinator: a policy-driven loop over
 //!   segments, applying boundary surgery and verifying preservation.
 //! * [`metrics`] — CSV/JSONL run logging, timers, serving counters.
-//! * [`obs`] — live observability (S19): lock-free metrics registry
+//! * [`obs`] — live observability (S19/S20): lock-free metrics registry
 //!   (counters/gauges/fixed-bucket latency histograms with p50/p95/p99
-//!   estimation), Prometheus text exposition served over a `std::net`
-//!   HTTP listener (`/metrics`, `/healthz`), and per-request
-//!   queued→prefill→decode span tracing on the serve path
-//!   (DESIGN.md §14).
+//!   estimation and per-bucket request-id exemplars), Prometheus text
+//!   exposition served over a `std::net` HTTP listener (`/metrics`,
+//!   `/healthz`, plus chunked live span streaming at `/spans` from a
+//!   bounded [`obs::SpanRing`]), per-request queued→prefill→decode span
+//!   tracing on the serve path, and the [`obs::RunStore`] — append-only
+//!   ingestion of run event logs into `runs/.store` with per-run
+//!   aggregate stats backing `texpand runs` and the `texpand report`
+//!   growth-timeline / preservation-drift reporter (DESIGN.md §14–§15).
 //! * [`cli`] — argument parsing for the `texpand` binary.
 //!
 //! Serving & hot-swap (S15; `texpand serve`):

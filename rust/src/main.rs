@@ -8,7 +8,13 @@
 //!   serve     KV-cached batched inference engine on the pure-Rust path,
 //!             with optional mid-run function-preserving hot-swap
 //!   scrape    std::net HTTP GET against a running --metrics-addr
-//!             listener (curl-free metrics client for CI)
+//!             listener (curl-free metrics client for CI); --spans tails
+//!             the live span stream
+//!   runs      ingest run event logs into the runs/.store run store and
+//!             list/show/aggregate them
+//!   report    growth-timeline report for one stored run: per-stage loss
+//!             curve, expansions with predicted-vs-actual deltas, and the
+//!             preservation-drift monitor per boundary
 //!   plan      dry-run a growth schedule as ExpansionPlans: config /
 //!             param / FLOP trajectory, no training
 //!   inspect   print a checkpoint's config and tensor statistics
@@ -54,8 +60,11 @@ USAGE:
                   [--swap-ops SPEC] [--swap-after-ticks N]
                   (SPEC e.g. \"mlp=256,heads_add=1,layers_add=1@top\")
                   [--metrics-addr HOST:PORT] [--metrics-linger-ms N]
-                  [--runs D] [--run-name N]
+                  [--runs D] [--run-name N] [--span-sample N]
   texpand scrape  --addr HOST:PORT [--path /metrics] [--timeout-ms N]
+                  [--spans] [--count N]
+  texpand runs    [list|show|stats] [RUN] [--runs D]
+  texpand report  RUN [--runs D]
   texpand plan    [--schedule P] [--json]
   texpand inspect --ckpt PATH
   texpand info    [--backend native|pjrt] [--schedule P] [--artifacts D]
@@ -82,9 +91,20 @@ Observability: --metrics-addr (train, serve) binds a std::net HTTP
 listener exposing the live metrics registry as Prometheus text at
 /metrics (plus /healthz); port 0 picks a free port, printed at startup.
 serve additionally logs per-request span events to
-runs/<name>/events.jsonl, and --metrics-linger-ms keeps the listener up
-after serving drains so late scrapes still land (GET /quitz releases it
-early). `texpand scrape` is the matching curl-free client.
+runs/<name>/events.jsonl, streams them live over chunked HTTP at /spans
+(tail with `texpand scrape --spans`; --span-sample N keeps 1-in-N
+traces without thinning any counter), and --metrics-linger-ms keeps the
+listener up after serving drains so late scrapes still land (GET /quitz
+releases it early). `texpand scrape` is the matching curl-free client.
+Latency histogram buckets carry the most recent request id as an
+exemplar annotation in the /metrics text.
+
+Run store: `texpand runs` ingests runs/<name>/events.jsonl into an
+append-only indexed store at runs/.store (list/show/stats), and
+`texpand report RUN` renders the growth timeline — per-stage loss
+curves, each expansion's predicted-vs-actual param/FLOP deltas, and a
+preservation-drift row per boundary checked against the probe
+tolerance.
 
 Defaults: --schedule configs/growth_default.json, --artifacts artifacts,
           --runs runs, --backend pjrt.";
@@ -112,6 +132,8 @@ fn run() -> Result<()> {
         Some("generate") => cmd_generate(&args),
         Some("serve") => cmd_serve(&args),
         Some("scrape") => cmd_scrape(&args),
+        Some("runs") => cmd_runs(&args),
+        Some("report") => cmd_report(&args),
         Some("plan") => cmd_plan(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("info") => cmd_info(&args),
@@ -496,6 +518,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let ckpt = args.get("ckpt");
     let metrics_addr = args.get("metrics-addr");
     let linger_ms = args.get_u64("metrics-linger-ms")?.unwrap_or(0);
+    let span_sample = args.get_u64("span-sample")?.unwrap_or(1).max(1);
     let runs_root = args.get_or("runs", "runs");
     let run_name = args.get_or("run-name", "serve");
     args.reject_unknown()?;
@@ -518,7 +541,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg
     );
 
-    let mut opts = EngineOptions { max_slots: slots, parallel: !serial, ..Default::default() };
+    let mut opts = EngineOptions {
+        max_slots: slots,
+        parallel: !serial,
+        span_sample,
+        ..Default::default()
+    };
     if let Some(n) = max_pending {
         opts.max_pending = n;
     }
@@ -529,15 +557,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     // live scrape target + span log: the engine publishes into the global
     // registry, so one listener covers counters, gauges and latency
-    // histograms; per-request spans land in runs/<name>/events.jsonl
+    // histograms; per-request spans land in runs/<name>/events.jsonl and
+    // (when a listener is up) stream live from a bounded ring at /spans
+    let span_ring = metrics_addr
+        .as_ref()
+        .map(|_| std::sync::Arc::new(texpand::obs::SpanRing::new(1024)));
     let metrics_server = match &metrics_addr {
         Some(addr) => {
-            let srv = texpand::obs::MetricsServer::bind(addr, texpand::obs::global().clone())?;
-            println!("metrics listening on http://{}/metrics", srv.local_addr());
+            let srv = texpand::obs::MetricsServer::bind_with_spans(
+                addr,
+                texpand::obs::global().clone(),
+                span_ring.clone(),
+            )?;
+            println!("metrics listening on http://{}/metrics (spans at /spans)", srv.local_addr());
             Some(srv)
         }
         None => None,
     };
+    if let Some(ring) = &span_ring {
+        engine.set_span_ring(std::sync::Arc::clone(ring));
+    }
     let mut logger = texpand::metrics::RunLogger::create(&runs_root, &run_name)?.quiet();
     logger.event(
         "serve_start",
@@ -587,6 +626,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     report.params_predicted,
                     report.remapped_sequences,
                     report.swap_ms
+                );
+                // the serve-side preservation monitor: same event shape
+                // the training coordinator logs at every boundary
+                let within_tol = report.probe_delta <= opts.preserve_tol;
+                logger.event(
+                    "preservation",
+                    vec![
+                        ("boundary", Value::str("hot_swap")),
+                        ("probe_delta", Value::num(f64::from(report.probe_delta))),
+                        ("backend_delta", Value::num(f64::from(report.probe_delta))),
+                        ("tol", Value::num(f64::from(opts.preserve_tol))),
+                        ("within_tol", Value::Bool(within_tol)),
+                    ],
                 );
                 swapped = true;
             }
@@ -642,17 +694,259 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// `texpand scrape` — one HTTP GET against a `--metrics-addr` listener
 /// using the std::net client in [`texpand::obs`]; CI images have no curl,
 /// so the binary is its own scraper. Prints the response body verbatim.
+/// `--spans` switches to the chunked `/spans` stream and tails it — one
+/// JSON span per line — until `--count N` lines arrive, the server
+/// stops, or the stream goes quiet for `--timeout-ms`.
 fn cmd_scrape(args: &Args) -> Result<()> {
     let addr = args.require("addr")?;
-    let path = args.get_or("path", "/metrics");
+    let spans = args.has("spans");
+    let count = args.get_usize("count")?;
+    let path = args.get_or("path", if spans { "/spans" } else { "/metrics" });
     let timeout_ms = args.get_u64("timeout-ms")?.unwrap_or(5000);
     args.reject_unknown()?;
     let timeout = std::time::Duration::from_millis(timeout_ms.max(1));
+    if spans {
+        let n = texpand::obs::http_stream_lines(&addr, &path, timeout, count, &mut |line| {
+            println!("{line}");
+        })?;
+        if n == 0 {
+            eprintln!("(no spans arrived before the stream went quiet)");
+        }
+        return Ok(());
+    }
+    if count.is_some() {
+        return Err(Error::Cli("--count applies to --spans streaming only".into()));
+    }
     let (status, body) = texpand::obs::http_get(&addr, &path, timeout)?;
     if status != 200 {
         return Err(Error::Serve(format!("GET {path} on {addr} returned HTTP {status}")));
     }
     print!("{body}");
+    Ok(())
+}
+
+/// `texpand runs` — the run store CLI. `list` ingests every run under
+/// the runs root (plus bench.jsonl) and tabulates them; `show RUN`
+/// prints the run's aggregate summary as JSON; `stats RUN` prints it as
+/// greppable `key: value` lines (ci.sh keys on `expansions:` and
+/// `params_delta_total:`). Every action ingests first, so the store is
+/// always current with the source logs.
+fn cmd_runs(args: &Args) -> Result<()> {
+    use texpand::obs::RunStore;
+    let action = args.positional(0).unwrap_or_else(|| "list".to_string());
+    let runs_root = args.get_or("runs", "runs");
+    match action.as_str() {
+        "list" => {
+            args.reject_unknown()?;
+            let store = RunStore::open(&runs_root)?;
+            let reports = store.ingest_all()?;
+            if reports.is_empty() {
+                println!("(no runs with events.jsonl under {runs_root})");
+                return Ok(());
+            }
+            println!("{:<28} {:>9} {:>6} {:>12}", "run", "records", "new", "bytes");
+            for (name, r) in &reports {
+                println!(
+                    "{:<28} {:>9} {:>6} {:>12}",
+                    name, r.total_records, r.new_records, r.source_bytes
+                );
+            }
+            Ok(())
+        }
+        "show" | "stats" => {
+            let run = args.require_positional(1, "RUN")?;
+            args.reject_unknown()?;
+            let store = RunStore::open(&runs_root)?;
+            store.ingest(&run)?;
+            let s = store.stats(&run)?;
+            if action == "show" {
+                println!("{}", s.to_json().to_pretty());
+                return Ok(());
+            }
+            println!("run: {}", s.run);
+            println!("policy: {}", s.policy.as_deref().unwrap_or("?"));
+            println!("schedule: {}", s.schedule.as_deref().unwrap_or("?"));
+            println!("records: {}", s.records);
+            println!("malformed: {}", s.malformed);
+            println!("segments: {}", s.segments.len());
+            println!("loss_points: {}", s.loss_points.len());
+            println!("expansions: {}", s.expansions.len());
+            println!("params_delta_total: {}", s.params_delta_total());
+            let within = s.preservation.iter().filter(|p| p.within_tol).count();
+            println!("preservation_within_tol: {within}/{}", s.preservation.len());
+            println!("decisions: {} (expand: {})", s.decisions, s.expand_decisions);
+            println!("spans: {}", s.spans);
+            if let Some(sv) = &s.serve {
+                println!(
+                    "serve: completed {} / {} tokens / {:.0} tok/s / {} swaps",
+                    sv.completed, sv.tokens_generated, sv.tokens_per_sec, sv.swaps
+                );
+            }
+            if let Some(f) = s.final_eval_loss {
+                println!("final_eval_loss: {f:.4}");
+            }
+            if let Some(n) = s.total_steps {
+                println!("total_steps: {n}");
+            }
+            Ok(())
+        }
+        other => {
+            Err(Error::Cli(format!("unknown runs action '{other}' (expected list|show|stats)")))
+        }
+    }
+}
+
+/// Compress a loss trajectory into a fixed-width unicode sparkline
+/// (bucket means, darker = higher loss). Empty when nothing is finite.
+fn sparkline(values: &[f64], width: usize) -> String {
+    const LEVELS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let finite: Vec<f64> = values.iter().copied().filter(|v| v.is_finite()).collect();
+    if finite.is_empty() {
+        return String::new();
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in &finite {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = (hi - lo).max(1e-12);
+    let n = finite.len();
+    let w = width.max(1).min(n);
+    let mut out = String::with_capacity(w * 3);
+    for i in 0..w {
+        let a = i * n / w;
+        let b = ((i + 1) * n / w).max(a + 1).min(n);
+        let mean = finite[a..b].iter().sum::<f64>() / (b - a) as f64;
+        let lvl = (((mean - lo) / span) * 7.0).round().clamp(0.0, 7.0) as usize;
+        out.push(LEVELS[lvl]);
+    }
+    out
+}
+
+/// `texpand report RUN` — the growth-timeline reporter. Renders, from
+/// the run store: every trained stage with its loss sparkline, each
+/// expansion boundary with the plan's predicted param/FLOP deltas next
+/// to the measured ones, a preservation-drift row per boundary checked
+/// against the probe tolerance, and the serve phase percentiles when
+/// the run served traffic.
+fn cmd_report(args: &Args) -> Result<()> {
+    use texpand::obs::RunStore;
+    let run = args.require_positional(0, "RUN")?;
+    let runs_root = args.get_or("runs", "runs");
+    args.reject_unknown()?;
+    let store = RunStore::open(&runs_root)?;
+    store.ingest(&run)?;
+    let s = store.stats(&run)?;
+    println!(
+        "=== growth timeline: {run} (policy {}, schedule {}) ===",
+        s.policy.as_deref().unwrap_or("?"),
+        s.schedule.as_deref().unwrap_or("?")
+    );
+    if s.malformed > 0 {
+        println!("({} malformed record(s) skipped)", s.malformed);
+    }
+
+    let print_expansion = |e: &texpand::obs::store::ExpansionRecord| {
+        println!("  └─ expansion into '{}' ({} op(s), {:.1} ms surgery)", e.into_stage, e.ops, e.surgery_ms);
+        let measured = e
+            .param_delta
+            .or(e.params_before.map(|b| e.params_after.saturating_sub(b)));
+        let predicted = e
+            .plan
+            .as_ref()
+            .map(|p| p.param_delta() as u64)
+            .or(e.params_before.map(|b| e.params_predicted.saturating_sub(b)));
+        let verdict = match (measured, predicted) {
+            (Some(m), Some(p)) if m == p => "exact",
+            (Some(_), Some(_)) => "MISMATCH",
+            _ => "unrecorded",
+        };
+        println!(
+            "       params -> {} (measured Δ {}, predicted Δ {}; {verdict})",
+            e.params_after,
+            measured.map_or("?".to_string(), |m| format!("+{m}")),
+            predicted.map_or("?".to_string(), |p| format!("+{p}")),
+        );
+        println!("       est fwd FLOP/tok Δ {:+.3e}", e.flops_delta_est);
+        if let Some(err) = &e.plan_error {
+            println!("       plan evidence INVALID: {err}");
+        }
+        match s.preservation.iter().find(|p| p.boundary == e.into_stage) {
+            Some(p) => {
+                let status = if p.within_tol { "ok" } else { "DRIFT EXCEEDS TOL" };
+                println!(
+                    "       preservation: probe Δ {:.3e} / backend Δ {:.3e} vs tol {:.0e} \
+                     [{status}]; eval {:.4} -> {:.4} (drift {:+.4})",
+                    p.probe_delta, p.backend_delta, p.tol, p.eval_before, p.eval_after, p.eval_drift
+                );
+            }
+            None => println!("       preservation: (no measurement recorded at this boundary)"),
+        }
+    };
+
+    for (i, seg) in s.segments.iter().enumerate() {
+        let pts: Vec<f64> = s
+            .loss_points
+            .iter()
+            .filter(|p| p.stage == seg.stage)
+            .map(|p| p.loss)
+            .collect();
+        println!(
+            "\n{:<10} {:>5} steps  loss {:.4} -> {:.4}  {:>10} params  {:>8.0} tok/s  {}",
+            seg.stage,
+            seg.steps,
+            seg.first_loss,
+            seg.final_loss,
+            seg.params,
+            seg.tokens_per_sec,
+            sparkline(&pts, 40)
+        );
+        if let Some(e) = s.expansions.get(i) {
+            print_expansion(e);
+        }
+    }
+    // boundaries past the last recorded segment (crashed/partial runs,
+    // or serve-only logs with boundary events but no stage_done rows)
+    for e in s.expansions.iter().skip(s.segments.len()) {
+        print_expansion(e);
+    }
+    // serve-side preservation measurements (hot swaps) have no segment row
+    for p in &s.preservation {
+        if !s.expansions.iter().any(|e| e.into_stage == p.boundary) {
+            let status = if p.within_tol { "ok" } else { "DRIFT EXCEEDS TOL" };
+            println!(
+                "\npreservation ({}): probe Δ {:.3e} vs tol {:.0e} [{status}]",
+                p.boundary, p.probe_delta, p.tol
+            );
+        }
+    }
+
+    if let Some(sv) = &s.serve {
+        println!(
+            "\nserve: {} completed, {} tokens, {:.0} tok/s, {} swaps, {} rejected, {} timeouts",
+            sv.completed, sv.tokens_generated, sv.tokens_per_sec, sv.swaps, sv.rejected, sv.timeouts
+        );
+        println!("  {:<8} {:>9} {:>9} {:>9}", "phase", "p50 ms", "p95 ms", "p99 ms");
+        for (name, p) in [
+            ("queue", &sv.queue_latency),
+            ("prefill", &sv.prefill_latency),
+            ("decode", &sv.decode_latency),
+            ("total", &sv.total_latency),
+        ] {
+            println!("  {:<8} {:>9.2} {:>9.2} {:>9.2}", name, p.p50_ms, p.p95_ms, p.p99_ms);
+        }
+    }
+
+    let within = s.preservation.iter().filter(|p| p.within_tol).count();
+    println!(
+        "\n{} expansion(s), Δparams total {}; preservation within tol at {within}/{} boundaries",
+        s.expansions.len(),
+        s.params_delta_total(),
+        s.preservation.len()
+    );
+    if let (Some(f), Some(n)) = (s.final_eval_loss, s.total_steps) {
+        println!("final eval loss {f:.4} over {n} steps");
+    }
     Ok(())
 }
 

@@ -79,6 +79,11 @@ impl RunLogger {
         &self.dir
     }
 
+    /// Path of the structured event log (what the run store ingests).
+    pub fn events_path(&self) -> &str {
+        &self.events_path
+    }
+
     /// Milliseconds since logger creation.
     pub fn elapsed_ms(&self) -> f64 {
         self.start.elapsed().as_secs_f64() * 1e3
@@ -208,6 +213,14 @@ impl PhasePercentiles {
             ("p95_ms", Value::num(self.p95_ms)),
             ("p99_ms", Value::num(self.p99_ms)),
         ])
+    }
+
+    /// Parse back the [`PhasePercentiles::to_json`] layout (run-store
+    /// ingestion of `serve_done` events). Missing fields read as zero,
+    /// matching the all-zero default before any request finishes.
+    pub fn from_json(v: &Value) -> PhasePercentiles {
+        let f = |k: &str| v.get(k).and_then(|x| x.as_f64().ok()).unwrap_or(0.0);
+        PhasePercentiles { p50_ms: f("p50_ms"), p95_ms: f("p95_ms"), p99_ms: f("p99_ms") }
     }
 }
 
@@ -485,6 +498,13 @@ mod tests {
         assert!((d.req("p95_ms").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-12);
         let q = j.req("queue_latency").unwrap();
         assert_eq!(q.req("p50_ms").unwrap().as_f64().unwrap(), 0.0, "untouched phases are zero");
+    }
+
+    #[test]
+    fn phase_percentiles_round_trip_json() {
+        let p = PhasePercentiles { p50_ms: 1.5, p95_ms: 9.0, p99_ms: 20.25 };
+        assert_eq!(PhasePercentiles::from_json(&p.to_json()), p);
+        assert_eq!(PhasePercentiles::from_json(&Value::obj(vec![])), PhasePercentiles::default());
     }
 
     #[test]

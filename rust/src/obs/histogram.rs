@@ -10,6 +10,14 @@
 //! checks against a sorted-quantile oracle). Bucket counts are
 //! *non-cumulative* in memory and cumulated only at snapshot time, which
 //! keeps `observe` a single `fetch_add`.
+//!
+//! Exemplars (S20c): each bucket additionally keeps a *recent* request id
+//! and observed value, written by `observe_with_exemplar` with plain
+//! relaxed stores. Two racing writers may interleave id and value from
+//! different observations; an exemplar is a debugging breadcrumb ("one
+//! request that landed here recently"), not an invariant, so last-write
+//! -wins per slot is the intended semantics and the cost stays at two
+//! stores on the hot path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -32,6 +40,11 @@ pub(crate) struct HistogramCore {
     count: AtomicU64,
     /// Running sum of observed values as `f64::to_bits` (CAS-updated).
     sum_bits: AtomicU64,
+    /// Per-bucket recent request id, stored as `id + 1` so 0 means "no
+    /// exemplar yet" (ids themselves start at 0).
+    exemplar_ids: Vec<AtomicU64>,
+    /// Per-bucket recent observed value as `f64::to_bits`.
+    exemplar_vals: Vec<AtomicU64>,
 }
 
 impl HistogramCore {
@@ -49,6 +62,8 @@ impl HistogramCore {
             buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
             count: AtomicU64::new(0),
             sum_bits: AtomicU64::new(0f64.to_bits()),
+            exemplar_ids: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            exemplar_vals: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
@@ -59,12 +74,26 @@ impl HistogramCore {
     /// Record one observation. NaN is dropped (a NaN latency is a caller
     /// bug; poisoning the sum would corrupt every later export).
     pub(crate) fn observe(&self, v: f64) {
+        self.record(v, None);
+    }
+
+    /// Record one observation and remember `id` as the bucket's recent
+    /// exemplar, linking the bucket back to a concrete request span.
+    pub(crate) fn observe_with_exemplar(&self, v: f64, id: u64) {
+        self.record(v, Some(id));
+    }
+
+    fn record(&self, v: f64, exemplar: Option<u64>) {
         if v.is_nan() {
             return;
         }
         // first bucket whose bound is >= v, i.e. Prometheus `le` semantics
         let idx = self.bounds.partition_point(|b| v > *b);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        if let Some(id) = exemplar {
+            self.exemplar_ids[idx].store(id + 1, Ordering::Relaxed);
+            self.exemplar_vals[idx].store(v.to_bits(), Ordering::Relaxed);
+        }
         self.count.fetch_add(1, Ordering::Relaxed);
         let mut cur = self.sum_bits.load(Ordering::Relaxed);
         loop {
@@ -84,13 +113,36 @@ impl HistogramCore {
     /// Point-in-time copy (buckets may lag `count` by in-flight
     /// observations; each bucket is individually consistent).
     pub(crate) fn snapshot(&self) -> HistogramSnapshot {
+        let exemplars = self
+            .exemplar_ids
+            .iter()
+            .zip(&self.exemplar_vals)
+            .map(|(id, val)| {
+                let raw = id.load(Ordering::Relaxed);
+                (raw != 0).then(|| Exemplar {
+                    request_id: raw - 1,
+                    value: f64::from_bits(val.load(Ordering::Relaxed)),
+                })
+            })
+            .collect();
         HistogramSnapshot {
             bounds: self.bounds.clone(),
             counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
             count: self.count.load(Ordering::Relaxed),
             sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+            exemplars,
         }
     }
+}
+
+/// A recent observation pinned to a bucket: the request id that produced
+/// it and the observed value. Rendered as an OpenMetrics-style
+/// `# {request_id="..."} value` annotation on the bucket line, linking
+/// aggregate tail latency back to one concrete span in the run store.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Exemplar {
+    pub request_id: u64,
+    pub value: f64,
 }
 
 /// Owned copy of a histogram's state: the quantile-estimation and
@@ -104,6 +156,9 @@ pub struct HistogramSnapshot {
     pub counts: Vec<u64>,
     pub count: u64,
     pub sum: f64,
+    /// Recent exemplar per bucket (same indexing as `counts`); `None`
+    /// where no exemplar-tagged observation has landed yet.
+    pub exemplars: Vec<Option<Exemplar>>,
 }
 
 impl HistogramSnapshot {
@@ -241,5 +296,19 @@ mod tests {
     #[should_panic(expected = "strictly ascending")]
     fn rejects_unsorted_bounds() {
         HistogramCore::new(&[2.0, 1.0]);
+    }
+
+    #[test]
+    fn exemplars_track_recent_id_per_bucket() {
+        let h = HistogramCore::new(&[1.0, 10.0]);
+        h.observe(0.5); // no exemplar
+        h.observe_with_exemplar(0.7, 0); // id 0 is representable (stored as id+1)
+        h.observe_with_exemplar(5.0, 41);
+        h.observe_with_exemplar(6.0, 42); // same bucket: last write wins
+        let s = h.snapshot();
+        assert_eq!(s.exemplars.len(), s.counts.len());
+        assert_eq!(s.exemplars[0], Some(Exemplar { request_id: 0, value: 0.7 }));
+        assert_eq!(s.exemplars[1], Some(Exemplar { request_id: 42, value: 6.0 }));
+        assert_eq!(s.exemplars[2], None, "+Inf bucket never hit");
     }
 }

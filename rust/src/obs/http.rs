@@ -11,11 +11,20 @@
 //! * `GET /quitz`    — sets a quit flag the owning process can poll
 //!   ([`MetricsServer::wait_for_quit`]) — the hook `ci.sh` uses to release
 //!   a lingering smoke run without killing it;
+//! * `GET /spans`    — chunked-streaming JSONL tail of the span ring
+//!   (only when bound with [`MetricsServer::bind_with_spans`]); each
+//!   finished request span is one chunk. Unlike the other routes this one
+//!   is long-lived, so it runs on its own detached thread — the serial
+//!   accept loop stays free to answer `/metrics` while a tail client is
+//!   attached, and a client that stops reading is disconnected by the
+//!   write timeout rather than wedging anything;
 //! * anything else   — `404` (unknown path) or `405` (non-GET).
 //!
 //! Binding port `0` picks a free port; [`MetricsServer::local_addr`]
 //! reports it. [`http_get`] is the matching `std::net` client (used by
-//! `texpand scrape` and the integration tests) so CI needs no curl.
+//! `texpand scrape` and the integration tests) so CI needs no curl;
+//! [`http_stream_lines`] is the chunked-decoding tail client behind
+//! `texpand scrape --spans`.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -26,6 +35,7 @@ use std::time::{Duration, Instant};
 use crate::error::{Error, Result};
 use crate::obs::prometheus;
 use crate::obs::registry::MetricsRegistry;
+use crate::obs::span::SpanRing;
 
 /// How long one connection may take to deliver its request / accept our
 /// response before being dropped. Scrapes are local and tiny.
@@ -43,8 +53,19 @@ pub struct MetricsServer {
 
 impl MetricsServer {
     /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
-    /// serving `registry` on a background thread.
+    /// serving `registry` on a background thread. `/spans` answers 404;
+    /// use [`MetricsServer::bind_with_spans`] to enable live span export.
     pub fn bind(addr: &str, registry: Arc<MetricsRegistry>) -> Result<MetricsServer> {
+        MetricsServer::bind_with_spans(addr, registry, None)
+    }
+
+    /// [`MetricsServer::bind`] plus an optional span ring: when `spans`
+    /// is `Some`, `GET /spans` streams its contents as chunked JSONL.
+    pub fn bind_with_spans(
+        addr: &str,
+        registry: Arc<MetricsRegistry>,
+        spans: Option<Arc<SpanRing>>,
+    ) -> Result<MetricsServer> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| Error::Serve(format!("metrics listener bind {addr}: {e}")))?;
         let local = listener
@@ -64,7 +85,7 @@ impl MetricsServer {
                         Ok((stream, _)) => {
                             // best-effort: a broken scrape connection must
                             // never take the serving process down
-                            let _ = handle_conn(stream, &registry, &quit);
+                            let _ = handle_conn(stream, &registry, &quit, &spans, &stop);
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(POLL);
@@ -116,11 +137,15 @@ impl Drop for MetricsServer {
     }
 }
 
-/// Read one request, route it, write one response, close.
+/// Read one request, route it, write one response, close. The `/spans`
+/// route is the exception: it hands the stream to a detached streaming
+/// thread and returns immediately so the accept loop stays responsive.
 fn handle_conn(
     mut stream: TcpStream,
     registry: &MetricsRegistry,
     quit: &AtomicBool,
+    spans: &Option<Arc<SpanRing>>,
+    stop: &Arc<AtomicBool>,
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(IO_TIMEOUT))?;
     stream.set_write_timeout(Some(IO_TIMEOUT))?;
@@ -128,6 +153,17 @@ fn handle_conn(
     let mut parts = request_line.split_whitespace();
     let method = parts.next().unwrap_or("");
     let path = parts.next().unwrap_or("");
+    if method == "GET" && path == "/spans" {
+        if let Some(ring) = spans {
+            let ring = ring.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let _ = stream_spans(stream, &ring, &stop);
+            });
+            return Ok(());
+        }
+        // fall through to the 404 arm: this server has no span ring
+    }
     let (status, content_type, body) = if method != "GET" {
         ("405 Method Not Allowed", "text/plain; charset=utf-8", "method not allowed\n".to_string())
     } else {
@@ -140,6 +176,9 @@ fn handle_conn(
                 quit.store(true, Ordering::Relaxed);
                 ("200 OK", "text/plain; charset=utf-8", "bye\n".to_string())
             }
+            "/spans" => {
+                ("404 Not Found", "text/plain; charset=utf-8", "span export not enabled\n".to_string())
+            }
             _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
         }
     };
@@ -149,6 +188,43 @@ fn handle_conn(
     );
     stream.write_all(response.as_bytes())?;
     stream.flush()
+}
+
+/// Stream the span ring over `stream` as chunked JSONL until the client
+/// disconnects (any write error — including the write timeout when the
+/// client stops reading) or the server's stop flag is set (clean 0-chunk
+/// terminator). Each span line becomes one chunk, so a tail client sees
+/// spans as they finish rather than per flush.
+fn stream_spans(
+    mut stream: TcpStream,
+    ring: &SpanRing,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: application/jsonl; charset=utf-8\r\n\
+          Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+    )?;
+    let mut cursor = 0u64; // start at the oldest retained span: tailers see the backlog
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            stream.write_all(b"0\r\n\r\n")?;
+            return stream.flush();
+        }
+        let (lines, next) = ring.read_from(cursor);
+        cursor = next;
+        if lines.is_empty() {
+            std::thread::sleep(POLL);
+            continue;
+        }
+        for line in &lines {
+            // chunk payload is the span line plus its newline
+            stream.write_all(format!("{:x}\r\n", line.len() + 1).as_bytes())?;
+            stream.write_all(line.as_bytes())?;
+            stream.write_all(b"\n\r\n")?;
+        }
+        stream.flush()?;
+    }
 }
 
 /// Read up to the end of the request head and return its first line. The
@@ -174,13 +250,7 @@ fn read_request_line(stream: &mut TcpStream) -> std::io::Result<String> {
 /// `host:port`; the server side must close the connection after the
 /// response (ours does), which is what bounds the read.
 pub fn http_get(addr: &str, path: &str, timeout: Duration) -> Result<(u16, String)> {
-    let sock_addr = addr
-        .to_socket_addrs()
-        .map_err(|e| Error::Serve(format!("resolve {addr}: {e}")))?
-        .next()
-        .ok_or_else(|| Error::Serve(format!("resolve {addr}: no addresses")))?;
-    let mut stream = TcpStream::connect_timeout(&sock_addr, timeout)
-        .map_err(|e| Error::Serve(format!("connect {addr}: {e}")))?;
+    let mut stream = connect(addr, timeout)?;
     stream
         .set_read_timeout(Some(timeout))
         .map_err(|e| Error::Serve(format!("read timeout: {e}")))?;
@@ -205,6 +275,136 @@ pub fn http_get(addr: &str, path: &str, timeout: Duration) -> Result<(u16, Strin
         None => String::new(),
     };
     Ok((status, body))
+}
+
+/// Resolve and connect with actionable error messages: connection
+/// refused and timeout — the two ways a scrape against a dead or wrong
+/// address fails — say what to check instead of just the OS error.
+fn connect(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let sock_addr = addr
+        .to_socket_addrs()
+        .map_err(|e| Error::Serve(format!("resolve {addr}: {e}")))?
+        .next()
+        .ok_or_else(|| Error::Serve(format!("resolve {addr}: no addresses")))?;
+    TcpStream::connect_timeout(&sock_addr, timeout).map_err(|e| {
+        let hint = match e.kind() {
+            std::io::ErrorKind::ConnectionRefused => {
+                " (connection refused — is the server running on that address?)"
+            }
+            std::io::ErrorKind::TimedOut => {
+                " (connection timed out — check the host/port and that the server is reachable)"
+            }
+            _ => "",
+        };
+        Error::Serve(format!("connect {addr}: {e}{hint}"))
+    })
+}
+
+/// Streaming HTTP GET for chunked JSONL routes (`/spans`): decodes the
+/// chunked body incrementally and invokes `on_line` per complete line.
+///
+/// Returns the number of lines delivered. Stops after `max_lines` when
+/// given, on the server's terminating 0-chunk, on connection close, or —
+/// because a live tail has no natural end — on a read timeout, which is
+/// reported as a normal return rather than an error.
+pub fn http_stream_lines(
+    addr: &str,
+    path: &str,
+    timeout: Duration,
+    max_lines: Option<usize>,
+    on_line: &mut dyn FnMut(&str),
+) -> Result<usize> {
+    let mut stream = connect(addr, timeout)?;
+    stream
+        .set_read_timeout(Some(timeout))
+        .map_err(|e| Error::Serve(format!("read timeout: {e}")))?;
+    stream
+        .set_write_timeout(Some(timeout))
+        .map_err(|e| Error::Serve(format!("write timeout: {e}")))?;
+    let request = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    stream
+        .write_all(request.as_bytes())
+        .map_err(|e| Error::Serve(format!("send GET {path}: {e}")))?;
+
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    // headers first
+    let header_end = loop {
+        if let Some(i) = find_subslice(&buf, b"\r\n\r\n") {
+            break i + 4;
+        }
+        if buf.len() > 64 * 1024 {
+            return Err(Error::Serve(format!("oversized response head from {addr}")));
+        }
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| Error::Serve(format!("read GET {path} response head: {e}")))?;
+        if n == 0 {
+            return Err(Error::Serve(format!("{addr} closed before sending headers for {path}")));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..header_end]).to_string();
+    let status = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| Error::Serve(format!("malformed HTTP response from {addr}")))?;
+    if status != 200 {
+        let body_preview = String::from_utf8_lossy(&buf[header_end..]).trim().to_string();
+        return Err(Error::Serve(format!("GET {path} on {addr}: HTTP {status} {body_preview}")));
+    }
+    if !head.to_ascii_lowercase().contains("transfer-encoding: chunked") {
+        return Err(Error::Serve(format!("GET {path} on {addr}: not a chunked stream")));
+    }
+    buf.drain(..header_end);
+
+    let mut body: Vec<u8> = Vec::new(); // decoded bytes awaiting a newline
+    let mut count = 0usize;
+    'outer: loop {
+        // decode every complete chunk currently buffered
+        loop {
+            let Some(size_end) = find_subslice(&buf, b"\r\n") else { break };
+            let size_str = String::from_utf8_lossy(&buf[..size_end]).trim().to_string();
+            let size = usize::from_str_radix(&size_str, 16).map_err(|_| {
+                Error::Serve(format!("bad chunk size '{size_str}' in {path} stream from {addr}"))
+            })?;
+            if size == 0 {
+                break 'outer; // server's clean terminator
+            }
+            let frame = size_end + 2 + size + 2; // size line + payload + CRLF
+            if buf.len() < frame {
+                break; // partial chunk: read more first
+            }
+            body.extend_from_slice(&buf[size_end + 2..size_end + 2 + size]);
+            buf.drain(..frame);
+            while let Some(nl) = body.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = body.drain(..nl + 1).collect();
+                on_line(String::from_utf8_lossy(&line[..nl]).as_ref());
+                count += 1;
+                if max_lines.is_some_and(|max| count >= max) {
+                    break 'outer;
+                }
+            }
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break, // connection closed
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            // a quiet tail is a normal way for a live stream to end
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                break;
+            }
+            Err(e) => return Err(Error::Serve(format!("read GET {path} stream: {e}"))),
+        }
+    }
+    Ok(count)
+}
+
+fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
 }
 
 #[cfg(test)]
@@ -250,6 +450,61 @@ mod tests {
         reg.counter("http_test_total", "test counter").add(4);
         let (_, body) = http_get(&addr, "/metrics", Duration::from_secs(2)).unwrap();
         assert!(body.contains("http_test_total 7\n"), "{body}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn connect_refused_error_says_what_to_check() {
+        // bind-then-drop guarantees the port is closed (nothing listening)
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let err = http_get(&addr, "/metrics", Duration::from_secs(2)).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("connection refused"), "missing hint: {msg}");
+        assert!(msg.contains("is the server running"), "missing hint: {msg}");
+        // the streaming client shares the same connect path and hint
+        let err = http_stream_lines(&addr, "/spans", Duration::from_secs(2), None, &mut |_| {})
+            .unwrap_err();
+        assert!(err.to_string().contains("connection refused"), "{err}");
+    }
+
+    #[test]
+    fn spans_route_is_404_without_a_ring() {
+        let (srv, _reg) = server();
+        let addr = srv.local_addr().to_string();
+        let (status, body) = http_get(&addr, "/spans", Duration::from_secs(2)).unwrap();
+        assert_eq!(status, 404);
+        assert!(body.contains("span export not enabled"), "{body}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn spans_route_streams_ring_lines_as_chunks() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let ring = Arc::new(SpanRing::new(16));
+        ring.push("{\"id\":1}".to_string());
+        ring.push("{\"id\":2}".to_string());
+        let srv = MetricsServer::bind_with_spans("127.0.0.1:0", reg, Some(ring.clone())).unwrap();
+        let addr = srv.local_addr().to_string();
+        // the third span arrives while the client is already tailing, so
+        // reaching max_lines=3 proves live delivery, not just backlog
+        let pusher = {
+            let ring = ring.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(100));
+                ring.push("{\"id\":3}".to_string());
+            })
+        };
+        let mut lines = Vec::new();
+        let n = http_stream_lines(&addr, "/spans", Duration::from_secs(5), Some(3), &mut |l| {
+            lines.push(l.to_string());
+        })
+        .unwrap();
+        pusher.join().unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(lines, vec!["{\"id\":1}", "{\"id\":2}", "{\"id\":3}"]);
         srv.shutdown();
     }
 }

@@ -1,5 +1,6 @@
-//! Live observability layer (S19): metrics registry, Prometheus text
-//! exposition over HTTP, and per-request span tracing.
+//! Live observability layer (S19/S20): metrics registry, Prometheus text
+//! exposition over HTTP, per-request span tracing, live span streaming,
+//! and the durable run store.
 //!
 //! Everything here is hand-rolled on `std` — no prometheus/hyper/tracing
 //! crates — and offline-friendly. The pieces:
@@ -9,28 +10,36 @@
 //!   the record path never takes the registry lock. [`global()`] is the
 //!   process-wide instance the CLI exposes.
 //! * [`histogram`] — fixed-bucket latency histogram with p50/p95/p99
-//!   estimation ([`LATENCY_MS_BOUNDS`] is the shared bucket layout).
+//!   estimation ([`LATENCY_MS_BOUNDS`] is the shared bucket layout) and
+//!   per-bucket [`Exemplar`] request ids.
 //! * [`prometheus`] — [`render`] a registry snapshot in text exposition
-//!   format 0.0.4.
+//!   format 0.0.4, with OpenMetrics-style exemplar annotations.
 //! * [`http`] — [`MetricsServer`], a `std::net` listener serving
-//!   `/metrics` + `/healthz` (+ `/quitz` for CI), and the matching
-//!   [`http_get`] client used by `texpand scrape`.
+//!   `/metrics` + `/healthz` + `/spans` (+ `/quitz` for CI), the
+//!   matching [`http_get`] client used by `texpand scrape`, and
+//!   [`http_stream_lines`] for tailing the chunked `/spans` stream.
 //! * [`span`] — [`SpanTracker`]/[`Span`]: per-request
-//!   queued→prefill→decode→finish phase records on the serve path.
+//!   queued→prefill→decode→finish phase records on the serve path, and
+//!   [`SpanRing`], the bounded buffer `/spans` streams from.
+//! * [`store`] — [`RunStore`]: append-only ingestion of run event logs
+//!   into `runs/.store/` with aggregate [`RunStats`] per run; backs
+//!   `texpand runs` and `texpand report`.
 //!
-//! Design notes live in DESIGN.md §14.
+//! Design notes live in DESIGN.md §14–§15.
 
 pub mod histogram;
 pub mod http;
 pub mod prometheus;
 pub mod registry;
 pub mod span;
+pub mod store;
 
-pub use histogram::{HistogramSnapshot, LATENCY_MS_BOUNDS};
-pub use http::{http_get, MetricsServer};
+pub use histogram::{Exemplar, HistogramSnapshot, LATENCY_MS_BOUNDS};
+pub use http::{http_get, http_stream_lines, MetricsServer};
 pub use prometheus::render;
 pub use registry::{
     global, Counter, FamilySnapshot, Gauge, Histogram, MetricKind, MetricsRegistry, SeriesSnapshot,
     SeriesValue,
 };
-pub use span::{Span, SpanTracker};
+pub use span::{Span, SpanRing, SpanTracker};
+pub use store::{IngestReport, RunStats, RunStore};

@@ -12,7 +12,12 @@
 //!   `<name>_sum` and `<name>_count`;
 //! * help text escapes `\` and newline; label values escape `\`, `"` and
 //!   newline;
-//! * non-finite values render as `NaN` / `+Inf` / `-Inf`.
+//! * non-finite values render as `NaN` / `+Inf` / `-Inf`;
+//! * bucket lines carrying an exemplar append an OpenMetrics-style
+//!   annotation ` # {request_id="<id>"} <observed value>` — prometheus
+//!   0.0.4 parsers treat everything after `#` on a sample line as a
+//!   comment, so plain scrapers stay compatible while the annotation
+//!   links a bucket to a concrete span in the run store.
 //!
 //! Families render in registration order and series in sorted label
 //! order, so output is deterministic for golden assertions.
@@ -45,18 +50,20 @@ pub fn render_families(families: &[FamilySnapshot]) -> String {
                 }
                 SeriesValue::Histogram(h) => {
                     let cum = h.cumulative();
-                    for (bound, c) in h.bounds.iter().zip(&cum) {
+                    for (i, (bound, c)) in h.bounds.iter().zip(&cum).enumerate() {
                         out.push_str(&format!(
-                            "{}_bucket{} {c}\n",
+                            "{}_bucket{} {c}{}\n",
                             fam.name,
-                            labels(&series.labels, Some(&fmt_value(*bound)))
+                            labels(&series.labels, Some(&fmt_value(*bound))),
+                            exemplar_suffix(h.exemplars.get(i))
                         ));
                     }
                     let total = cum.last().copied().unwrap_or(0);
                     out.push_str(&format!(
-                        "{}_bucket{} {total}\n",
+                        "{}_bucket{} {total}{}\n",
                         fam.name,
-                        labels(&series.labels, Some("+Inf"))
+                        labels(&series.labels, Some("+Inf")),
+                        exemplar_suffix(h.exemplars.get(h.bounds.len()))
                     ));
                     out.push_str(&format!(
                         "{}_sum{} {}\n",
@@ -75,6 +82,17 @@ pub fn render_families(families: &[FamilySnapshot]) -> String {
         }
     }
     out
+}
+
+/// OpenMetrics-style exemplar annotation for one bucket (empty when the
+/// bucket has none).
+fn exemplar_suffix(ex: Option<&Option<crate::obs::histogram::Exemplar>>) -> String {
+    match ex {
+        Some(Some(e)) => {
+            format!(" # {{request_id=\"{}\"}} {}", e.request_id, fmt_value(e.value))
+        }
+        _ => String::new(),
+    }
 }
 
 /// Render a label set as `{k="v",...}`, optionally appending the
@@ -157,6 +175,19 @@ mod tests {
         assert!(text.contains("lat_ms_bucket{le=\"+Inf\"} 3\n"));
         assert!(text.contains("lat_ms_sum 104.5\n"));
         assert!(text.contains("lat_ms_count 3\n"));
+    }
+
+    #[test]
+    fn exemplar_annotations_attach_to_bucket_lines() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("lat_ms", "Latency", &[1.0, 5.0]);
+        h.observe(0.5); // no exemplar on the first bucket
+        h.observe_with_exemplar(3.0, 17);
+        let text = render(&reg);
+        assert!(text.contains("lat_ms_bucket{le=\"1\"} 1\n"), "{text}");
+        assert!(text.contains("lat_ms_bucket{le=\"5\"} 2 # {request_id=\"17\"} 3\n"), "{text}");
+        // cumulative +Inf line carries no exemplar (nothing landed there)
+        assert!(text.contains("lat_ms_bucket{le=\"+Inf\"} 2\n"), "{text}");
     }
 
     #[test]

@@ -84,6 +84,12 @@ impl Histogram {
         self.0.observe(v);
     }
 
+    /// Record one observation and pin `request_id` as the landing
+    /// bucket's recent exemplar (see [`crate::obs::histogram::Exemplar`]).
+    pub fn observe_with_exemplar(&self, v: f64, request_id: u64) {
+        self.0.observe_with_exemplar(v, request_id);
+    }
+
     pub fn snapshot(&self) -> HistogramSnapshot {
         self.0.snapshot()
     }

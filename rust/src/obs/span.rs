@@ -13,8 +13,16 @@
 //! the prefill cost (the prime happens inside `admit`, so a request's
 //! admission timestamp already includes its own prefill), clamped at
 //! zero; `decode_ms` is admit→finish; `total_ms` is submit→finish.
+//!
+//! Live export (S20b): a [`SpanRing`] is the bounded hand-off between
+//! the engine's span path and the `/spans` chunked-streaming HTTP route
+//! ([`crate::obs::http::MetricsServer`]). Finished spans are pushed as
+//! JSONL lines; slow or absent consumers cost the *oldest* buffered
+//! spans (counted by [`SpanRing::dropped`], surfaced as the
+//! `texpand_spans_dropped_total` counter), never the serving loop.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::json::Value;
@@ -144,6 +152,73 @@ impl SpanTracker {
     }
 }
 
+/// Interior state of a [`SpanRing`]: sequence number of the oldest
+/// buffered line plus the lines themselves.
+struct RingInner {
+    first_seq: u64,
+    buf: VecDeque<String>,
+}
+
+/// Bounded ring of serialized span lines shared between the serve
+/// engine (producer) and `/spans` streaming connections (consumers).
+///
+/// Each pushed line gets a monotonically increasing sequence number;
+/// consumers poll with [`SpanRing::read_from`] holding their own cursor,
+/// so any number of readers can tail independently. When the buffer is
+/// full the *oldest* line is evicted and the drop counter bumped — the
+/// producer never blocks and memory stays bounded regardless of
+/// consumer speed.
+pub struct SpanRing {
+    cap: usize,
+    inner: Mutex<RingInner>,
+}
+
+impl SpanRing {
+    /// A ring holding at most `cap` lines (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> SpanRing {
+        SpanRing {
+            cap: cap.max(1),
+            inner: Mutex::new(RingInner { first_seq: 0, buf: VecDeque::new() }),
+        }
+    }
+
+    /// Append one span line. Returns `true` if an old line was evicted
+    /// to make room (callers count that as a dropped span).
+    pub fn push(&self, line: String) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let mut dropped = false;
+        if inner.buf.len() == self.cap {
+            inner.buf.pop_front();
+            inner.first_seq += 1;
+            dropped = true;
+        }
+        inner.buf.push_back(line);
+        dropped
+    }
+
+    /// Lines with sequence numbers `>= from`, plus the cursor to pass
+    /// next time. A reader that fell behind the eviction horizon is
+    /// skipped forward to the oldest retained line (the gap is exactly
+    /// what the drop counter accounts for).
+    pub fn read_from(&self, from: u64) -> (Vec<String>, u64) {
+        let inner = self.inner.lock().unwrap();
+        let next_seq = inner.first_seq + inner.buf.len() as u64;
+        let start = from.max(inner.first_seq);
+        let skip = (start - inner.first_seq) as usize;
+        let lines = inner.buf.iter().skip(skip).cloned().collect();
+        (lines, next_seq)
+    }
+
+    /// Number of lines currently buffered.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,5 +278,45 @@ mod tests {
         assert_eq!(fields.len(), 11);
         assert_eq!(fields[0].0, "id");
         assert_eq!(fields[10].0, "finish");
+    }
+
+    #[test]
+    fn ring_read_from_tracks_cursor() {
+        let ring = SpanRing::new(8);
+        assert!(!ring.push("a".into()));
+        assert!(!ring.push("b".into()));
+        let (lines, next) = ring.read_from(0);
+        assert_eq!(lines, vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(next, 2);
+        // cursor points past the end: nothing new
+        let (lines, next) = ring.read_from(next);
+        assert!(lines.is_empty());
+        assert_eq!(next, 2);
+        ring.push("c".into());
+        let (lines, next) = ring.read_from(next);
+        assert_eq!(lines, vec!["c".to_string()]);
+        assert_eq!(next, 3);
+    }
+
+    #[test]
+    fn ring_overflow_evicts_oldest_and_reports_drop() {
+        let ring = SpanRing::new(2);
+        assert!(!ring.push("a".into()));
+        assert!(!ring.push("b".into()));
+        assert!(ring.push("c".into())); // evicts "a"
+        assert_eq!(ring.len(), 2);
+        // a reader still at cursor 0 skips ahead past the eviction
+        let (lines, next) = ring.read_from(0);
+        assert_eq!(lines, vec!["b".to_string(), "c".to_string()]);
+        assert_eq!(next, 3);
+    }
+
+    #[test]
+    fn ring_cap_clamps_to_one() {
+        let ring = SpanRing::new(0);
+        assert!(!ring.push("a".into()));
+        assert!(ring.push("b".into()));
+        let (lines, _) = ring.read_from(0);
+        assert_eq!(lines, vec!["b".to_string()]);
     }
 }

@@ -1,0 +1,788 @@
+//! Run store (S20a): the durable, queryable home of run evidence.
+//!
+//! A run emits `runs/<name>/events.jsonl` (and benches append to
+//! `runs/bench.jsonl`); both are write-side artifacts — buffered, owned
+//! by the emitting process, gone from view the moment you want to ask
+//! "what did expansion 2 of last week's run cost?". The [`RunStore`]
+//! ingests them into `runs/.store/`:
+//!
+//! ```text
+//! runs/.store/
+//!   index.json            # per-run byte offsets + record counts (atomic rewrite)
+//!   bench.jsonl           # ingested bench rows (append-only)
+//!   <run>/records.jsonl   # ingested event lines, append-only
+//!   <run>/summary.json    # aggregate RunStats, rewritten per ingest
+//! ```
+//!
+//! **Append-only argument.** Source logs are append-only by contract
+//! (`RunLogger` opens with `O_APPEND`), so ingestion is an offset cursor:
+//! copy every *complete* (newline-terminated) line past the cursor,
+//! advance the cursor by exactly those bytes. A torn tail line is left
+//! for the next ingest; re-running ingest is idempotent. The store files
+//! are themselves append-only, so a crash mid-ingest costs at most a
+//! re-copy of the lines whose index update didn't land — duplicates are
+//! impossible because the index is rewritten atomically (tmp + rename)
+//! *after* the append and offsets only ever advance. The one exception:
+//! a source file *shorter* than its cursor means the run name was reused
+//! by a fresh run, and the store re-ingests that run from scratch.
+//! There is no compaction: event logs are small (one line per
+//! step/boundary/span), and an aggregate [`RunStats`] summary is
+//! maintained per ingest so readers rarely need the raw records at all.
+//!
+//! **Stats.** [`RunStore::stats`] folds the ingested records into a
+//! [`RunStats`]: segments, the loss trajectory, every expansion with its
+//! [`ExpansionPlan`] evidence (rebuilt and cross-checked through
+//! [`ExpansionPlan::from_json`] — a tampered plan row fails loudly),
+//! preservation-drift measurements per boundary, serve phase
+//! percentiles, and span/decision counts. `texpand runs` and `texpand
+//! report` are the CLI faces over this.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+
+use crate::error::{Error, Result};
+use crate::expand::ExpansionPlan;
+use crate::json::Value;
+use crate::metrics::PhasePercentiles;
+
+/// Handle on `<runs_root>/.store/`.
+pub struct RunStore {
+    runs_root: String,
+    store_dir: String,
+}
+
+/// What one [`RunStore::ingest`] call did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IngestReport {
+    /// Records copied by this call.
+    pub new_records: u64,
+    /// Records in the store for this run after the call.
+    pub total_records: u64,
+    /// Source bytes consumed so far (the cursor).
+    pub source_bytes: u64,
+}
+
+/// Per-run cursor state in `index.json`.
+#[derive(Clone, Copy, Debug, Default)]
+struct IndexEntry {
+    events_bytes: u64,
+    records: u64,
+}
+
+type Index = BTreeMap<String, IndexEntry>;
+
+impl RunStore {
+    /// Open (creating if needed) the store under `runs_root`.
+    pub fn open(runs_root: &str) -> Result<RunStore> {
+        let store_dir = format!("{runs_root}/.store");
+        std::fs::create_dir_all(&store_dir).map_err(|e| Error::io(&store_dir, e))?;
+        Ok(RunStore { runs_root: runs_root.to_string(), store_dir })
+    }
+
+    /// The store directory (`<runs_root>/.store`).
+    pub fn dir(&self) -> &str {
+        &self.store_dir
+    }
+
+    /// Runs with ingested records, sorted by name.
+    pub fn runs(&self) -> Result<Vec<String>> {
+        Ok(self.load_index()?.0.keys().cloned().collect())
+    }
+
+    /// Ingest new complete lines of `<runs_root>/<run>/events.jsonl` and
+    /// refresh the run's `summary.json`. Idempotent; safe to call on a
+    /// live run (the torn tail line waits for the next call).
+    pub fn ingest(&self, run: &str) -> Result<IngestReport> {
+        let (mut index, bench_bytes) = self.load_index()?;
+        let src = format!("{}/{run}/events.jsonl", self.runs_root);
+        let data = std::fs::read(&src).map_err(|e| Error::io(&src, e))?;
+        let entry = index.entry(run.to_string()).or_default();
+        let run_dir = format!("{}/{run}", self.store_dir);
+        std::fs::create_dir_all(&run_dir).map_err(|e| Error::io(&run_dir, e))?;
+        let records_path = format!("{run_dir}/records.jsonl");
+        if (data.len() as u64) < entry.events_bytes {
+            // source shrank: the run name was reused; restart from scratch
+            std::fs::write(&records_path, b"").map_err(|e| Error::io(&records_path, e))?;
+            *entry = IndexEntry::default();
+        }
+        let new_records = append_complete_lines(&data, &records_path, entry)?;
+        let report = IngestReport {
+            new_records,
+            total_records: entry.records,
+            source_bytes: entry.events_bytes,
+        };
+        self.save_index(&index, bench_bytes)?;
+        if new_records > 0 {
+            let stats = self.stats(run)?;
+            let summary_path = format!("{run_dir}/summary.json");
+            write_atomic(&summary_path, &format!("{}\n", stats.to_json().to_pretty()))?;
+        }
+        Ok(report)
+    }
+
+    /// Ingest every run directory under `runs_root` that has an
+    /// `events.jsonl`, plus `bench.jsonl`. Returns per-run reports.
+    pub fn ingest_all(&self) -> Result<Vec<(String, IngestReport)>> {
+        let mut names = Vec::new();
+        let entries =
+            std::fs::read_dir(&self.runs_root).map_err(|e| Error::io(&self.runs_root, e))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| Error::io(&self.runs_root, e))?;
+            let name = entry.file_name().to_string_lossy().to_string();
+            if name == ".store" {
+                continue;
+            }
+            let events = format!("{}/{name}/events.jsonl", self.runs_root);
+            if std::path::Path::new(&events).is_file() {
+                names.push(name);
+            }
+        }
+        names.sort();
+        let mut reports = Vec::with_capacity(names.len());
+        for name in names {
+            let report = self.ingest(&name)?;
+            reports.push((name, report));
+        }
+        self.ingest_bench()?;
+        Ok(reports)
+    }
+
+    /// Ingest new complete lines of `<runs_root>/bench.jsonl` into
+    /// `.store/bench.jsonl` (no-op when the source doesn't exist).
+    pub fn ingest_bench(&self) -> Result<u64> {
+        let src = format!("{}/bench.jsonl", self.runs_root);
+        let data = match std::fs::read(&src) {
+            Ok(d) => d,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+            Err(e) => return Err(Error::io(&src, e)),
+        };
+        let (index, bench_bytes) = self.load_index()?;
+        let dst = format!("{}/bench.jsonl", self.store_dir);
+        let mut entry = IndexEntry { events_bytes: bench_bytes, records: 0 };
+        if (data.len() as u64) < entry.events_bytes {
+            std::fs::write(&dst, b"").map_err(|e| Error::io(&dst, e))?;
+            entry.events_bytes = 0;
+        }
+        let new = append_complete_lines(&data, &dst, &mut entry)?;
+        self.save_index(&index, entry.events_bytes)?;
+        Ok(new)
+    }
+
+    /// Aggregate the ingested records of `run` (see [`RunStats`]).
+    pub fn stats(&self, run: &str) -> Result<RunStats> {
+        let path = format!("{}/{run}/records.jsonl", self.store_dir);
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::io(format!("{path} (run not ingested? try `texpand runs list`)"), e)
+        })?;
+        let mut stats = RunStats::new(run);
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match Value::parse(line) {
+                Ok(v) => stats.absorb(&v),
+                Err(_) => stats.malformed += 1,
+            }
+            stats.records += 1;
+        }
+        Ok(stats)
+    }
+
+    fn index_path(&self) -> String {
+        format!("{}/index.json", self.store_dir)
+    }
+
+    fn load_index(&self) -> Result<(Index, u64)> {
+        let path = self.index_path();
+        if !std::path::Path::new(&path).is_file() {
+            return Ok((Index::new(), 0));
+        }
+        let v = Value::load(&path)?;
+        let mut index = Index::new();
+        for (name, entry) in v.req("runs")?.as_obj()? {
+            index.insert(
+                name.clone(),
+                IndexEntry {
+                    events_bytes: entry.req("events_bytes")?.as_i64()? as u64,
+                    records: entry.req("records")?.as_i64()? as u64,
+                },
+            );
+        }
+        let bench_bytes = v.get("bench_bytes").and_then(|b| b.as_i64().ok()).unwrap_or(0) as u64;
+        Ok((index, bench_bytes))
+    }
+
+    fn save_index(&self, index: &Index, bench_bytes: u64) -> Result<()> {
+        let runs = index
+            .iter()
+            .map(|(name, e)| {
+                (
+                    name.clone(),
+                    Value::obj(vec![
+                        ("events_bytes", Value::num(e.events_bytes as f64)),
+                        ("records", Value::num(e.records as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        let doc = Value::obj(vec![
+            ("version", Value::num(1.0)),
+            ("bench_bytes", Value::num(bench_bytes as f64)),
+            ("runs", Value::Obj(runs)),
+        ]);
+        write_atomic(&self.index_path(), &format!("{}\n", doc.to_pretty()))
+    }
+}
+
+/// Append every complete line of `data` past the entry's cursor to
+/// `dst`, advancing the cursor. The cursor only moves past
+/// newline-terminated bytes, so a torn tail is re-examined next call.
+fn append_complete_lines(data: &[u8], dst: &str, entry: &mut IndexEntry) -> Result<u64> {
+    let offset = entry.events_bytes as usize;
+    let slice = &data[offset.min(data.len())..];
+    let Some(last_nl) = slice.iter().rposition(|&b| b == b'\n') else {
+        return Ok(0);
+    };
+    let complete = &slice[..last_nl + 1];
+    let mut out = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dst)
+        .map_err(|e| Error::io(dst, e))?;
+    out.write_all(complete).map_err(|e| Error::io(dst, e))?;
+    out.flush().map_err(|e| Error::io(dst, e))?;
+    let new_records = complete.iter().filter(|&&b| b == b'\n').count() as u64;
+    entry.events_bytes += complete.len() as u64;
+    entry.records += new_records;
+    Ok(new_records)
+}
+
+/// Write `content` to `path` atomically (tmp file + rename), so readers
+/// never observe a half-written index or summary.
+fn write_atomic(path: &str, content: &str) -> Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, content).map_err(|e| Error::io(&tmp, e))?;
+    std::fs::rename(&tmp, path).map_err(|e| Error::io(path, e))
+}
+
+/// One trained segment (from a `stage_done` event).
+#[derive(Clone, Debug)]
+pub struct SegmentStats {
+    pub stage: String,
+    pub steps: u64,
+    pub first_loss: f64,
+    pub final_loss: f64,
+    pub tokens_per_sec: f64,
+    pub params: u64,
+}
+
+/// One loss-curve sample (from a `step` event).
+#[derive(Clone, Debug)]
+pub struct LossPoint {
+    pub global_step: u64,
+    pub stage: String,
+    pub loss: f64,
+}
+
+/// One applied expansion (from a `boundary` event), predictions next to
+/// measurements.
+#[derive(Clone, Debug)]
+pub struct ExpansionRecord {
+    pub into_stage: String,
+    pub ops: u64,
+    pub rust_delta: f64,
+    pub pjrt_delta: f64,
+    pub loss_before: f64,
+    pub loss_after: f64,
+    pub surgery_ms: f64,
+    pub params_after: u64,
+    pub params_predicted: u64,
+    /// Measured pre-surgery param count (absent in pre-store logs).
+    pub params_before: Option<u64>,
+    pub param_delta: Option<u64>,
+    pub flops_delta_est: f64,
+    /// The plan evidence, rebuilt and cross-checked via
+    /// [`ExpansionPlan::from_json`]; `None` when the event carried no
+    /// plan (pre-store logs).
+    pub plan: Option<ExpansionPlan>,
+    /// Why plan evidence failed validation, when it did.
+    pub plan_error: Option<String>,
+}
+
+/// One preservation measurement (from a `preservation` event).
+#[derive(Clone, Debug)]
+pub struct PreservationRecord {
+    pub boundary: String,
+    pub probe_delta: f64,
+    pub backend_delta: f64,
+    pub eval_before: f64,
+    pub eval_after: f64,
+    pub eval_drift: f64,
+    pub tol: f64,
+    pub within_tol: bool,
+}
+
+/// Serve-phase outcome (from the last `serve_done` event).
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub completed: u64,
+    pub tokens_generated: u64,
+    pub tokens_per_sec: f64,
+    pub rejected: u64,
+    pub timeouts: u64,
+    pub swaps: u64,
+    pub queue_latency: PhasePercentiles,
+    pub prefill_latency: PhasePercentiles,
+    pub decode_latency: PhasePercentiles,
+    pub total_latency: PhasePercentiles,
+}
+
+/// Aggregate view of one ingested run — what `texpand runs stats` prints
+/// and `summary.json` stores.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub run: String,
+    pub records: u64,
+    pub malformed: u64,
+    pub policy: Option<String>,
+    pub schedule: Option<String>,
+    pub segments: Vec<SegmentStats>,
+    pub loss_points: Vec<LossPoint>,
+    pub expansions: Vec<ExpansionRecord>,
+    pub preservation: Vec<PreservationRecord>,
+    pub decisions: u64,
+    pub expand_decisions: u64,
+    pub spans: u64,
+    pub serve: Option<ServeStats>,
+    pub final_eval_loss: Option<f64>,
+    pub total_steps: Option<u64>,
+    pub tokens_seen: Option<f64>,
+}
+
+fn num(v: &Value, key: &str) -> f64 {
+    v.get(key).and_then(|x| x.as_f64().ok()).unwrap_or(f64::NAN)
+}
+
+fn int(v: &Value, key: &str) -> u64 {
+    v.get(key).and_then(|x| x.as_i64().ok()).map(|n| n.max(0) as u64).unwrap_or(0)
+}
+
+fn text(v: &Value, key: &str) -> String {
+    v.get(key).and_then(|x| x.as_str().ok()).unwrap_or("?").to_string()
+}
+
+impl RunStats {
+    fn new(run: &str) -> RunStats {
+        RunStats { run: run.to_string(), ..Default::default() }
+    }
+
+    /// Total measured parameter growth across every expansion (falls back
+    /// to the plan's exact delta for rows predating the measured field).
+    pub fn params_delta_total(&self) -> u64 {
+        self.expansions
+            .iter()
+            .map(|e| {
+                e.param_delta
+                    .or(e.plan.as_ref().map(|p| p.param_delta() as u64))
+                    .unwrap_or(e.params_after.saturating_sub(e.params_before.unwrap_or(0)))
+            })
+            .sum()
+    }
+
+    /// Fold one event record into the aggregates. Unknown events are
+    /// counted in `records` by the caller and otherwise ignored, so the
+    /// store never chokes on a newer writer's vocabulary.
+    fn absorb(&mut self, v: &Value) {
+        let kind = v.get("event").and_then(|e| e.as_str().ok()).unwrap_or("");
+        match kind {
+            "run_start" => {
+                self.policy = Some(text(v, "policy"));
+                self.schedule = Some(text(v, "schedule"));
+            }
+            "step" => {
+                self.loss_points.push(LossPoint {
+                    global_step: int(v, "global_step"),
+                    stage: text(v, "stage"),
+                    loss: num(v, "loss"),
+                });
+            }
+            "stage_done" => {
+                self.segments.push(SegmentStats {
+                    stage: text(v, "stage"),
+                    steps: int(v, "steps"),
+                    first_loss: num(v, "first_loss"),
+                    final_loss: num(v, "final_loss"),
+                    tokens_per_sec: num(v, "tokens_per_sec"),
+                    params: int(v, "params"),
+                });
+            }
+            "boundary" => {
+                let (plan, plan_error) = match v.get("plan") {
+                    Some(p) if p != &Value::Null => match ExpansionPlan::from_json(p) {
+                        Ok(plan) => (Some(plan), None),
+                        Err(e) => (None, Some(e.to_string())),
+                    },
+                    _ => (None, None),
+                };
+                self.expansions.push(ExpansionRecord {
+                    into_stage: text(v, "into_stage"),
+                    ops: int(v, "ops"),
+                    rust_delta: num(v, "rust_delta"),
+                    pjrt_delta: num(v, "pjrt_delta"),
+                    loss_before: num(v, "loss_before"),
+                    loss_after: num(v, "loss_after"),
+                    surgery_ms: num(v, "surgery_ms"),
+                    params_after: int(v, "params_after"),
+                    params_predicted: int(v, "params_predicted"),
+                    params_before: v.get("params_before").and_then(|x| x.as_i64().ok()).map(|n| n as u64),
+                    param_delta: v.get("param_delta").and_then(|x| x.as_i64().ok()).map(|n| n as u64),
+                    flops_delta_est: num(v, "flops_delta_est"),
+                    plan,
+                    plan_error,
+                });
+            }
+            "preservation" => {
+                self.preservation.push(PreservationRecord {
+                    boundary: text(v, "boundary"),
+                    probe_delta: num(v, "probe_delta"),
+                    backend_delta: num(v, "backend_delta"),
+                    eval_before: num(v, "eval_before"),
+                    eval_after: num(v, "eval_after"),
+                    eval_drift: num(v, "eval_drift"),
+                    tol: num(v, "tol"),
+                    within_tol: v
+                        .get("within_tol")
+                        .and_then(|x| x.as_bool().ok())
+                        .unwrap_or(false),
+                });
+            }
+            "decision" => {
+                self.decisions += 1;
+                if v.get("decision").and_then(|d| d.as_str().ok()) == Some("expand") {
+                    self.expand_decisions += 1;
+                }
+            }
+            "span" => self.spans += 1,
+            "serve_done" => {
+                let Some(c) = v.get("counters") else { return };
+                self.serve = Some(ServeStats {
+                    completed: int(c, "completed"),
+                    tokens_generated: int(c, "tokens_generated"),
+                    tokens_per_sec: num(c, "tokens_per_sec"),
+                    rejected: int(c, "rejected"),
+                    timeouts: int(c, "timeouts"),
+                    swaps: int(c, "swaps"),
+                    queue_latency: phase(c, "queue_latency"),
+                    prefill_latency: phase(c, "prefill_latency"),
+                    decode_latency: phase(c, "decode_latency"),
+                    total_latency: phase(c, "total_latency"),
+                });
+            }
+            "run_done" => {
+                self.final_eval_loss = v.get("final_eval_loss").and_then(|x| x.as_f64().ok());
+                self.total_steps = v.get("total_steps").and_then(|x| x.as_i64().ok()).map(|n| n as u64);
+                self.tokens_seen = v.get("tokens_seen").and_then(|x| x.as_f64().ok());
+            }
+            _ => {}
+        }
+    }
+
+    /// The `summary.json` document.
+    pub fn to_json(&self) -> Value {
+        let segments = self
+            .segments
+            .iter()
+            .map(|s| {
+                Value::obj(vec![
+                    ("stage", Value::str(s.stage.clone())),
+                    ("steps", Value::num(s.steps as f64)),
+                    ("first_loss", Value::num(s.first_loss)),
+                    ("final_loss", Value::num(s.final_loss)),
+                    ("tokens_per_sec", Value::num(s.tokens_per_sec)),
+                    ("params", Value::num(s.params as f64)),
+                ])
+            })
+            .collect();
+        let expansions = self
+            .expansions
+            .iter()
+            .map(|e| {
+                Value::obj(vec![
+                    ("into_stage", Value::str(e.into_stage.clone())),
+                    ("ops", Value::num(e.ops as f64)),
+                    ("rust_delta", Value::num(e.rust_delta)),
+                    ("pjrt_delta", Value::num(e.pjrt_delta)),
+                    ("loss_before", Value::num(e.loss_before)),
+                    ("loss_after", Value::num(e.loss_after)),
+                    ("surgery_ms", Value::num(e.surgery_ms)),
+                    ("params_after", Value::num(e.params_after as f64)),
+                    ("params_predicted", Value::num(e.params_predicted as f64)),
+                    (
+                        "param_delta",
+                        match e.param_delta {
+                            Some(d) => Value::num(d as f64),
+                            None => Value::Null,
+                        },
+                    ),
+                    ("flops_delta_est", Value::num(e.flops_delta_est)),
+                    ("plan_valid", Value::Bool(e.plan.is_some())),
+                    (
+                        "plan_error",
+                        match &e.plan_error {
+                            Some(err) => Value::str(err.clone()),
+                            None => Value::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        let preservation = self
+            .preservation
+            .iter()
+            .map(|p| {
+                Value::obj(vec![
+                    ("boundary", Value::str(p.boundary.clone())),
+                    ("probe_delta", Value::num(p.probe_delta)),
+                    ("backend_delta", Value::num(p.backend_delta)),
+                    ("eval_before", Value::num(p.eval_before)),
+                    ("eval_after", Value::num(p.eval_after)),
+                    ("eval_drift", Value::num(p.eval_drift)),
+                    ("tol", Value::num(p.tol)),
+                    ("within_tol", Value::Bool(p.within_tol)),
+                ])
+            })
+            .collect();
+        let serve = match &self.serve {
+            Some(s) => Value::obj(vec![
+                ("completed", Value::num(s.completed as f64)),
+                ("tokens_generated", Value::num(s.tokens_generated as f64)),
+                ("tokens_per_sec", Value::num(s.tokens_per_sec)),
+                ("rejected", Value::num(s.rejected as f64)),
+                ("timeouts", Value::num(s.timeouts as f64)),
+                ("swaps", Value::num(s.swaps as f64)),
+                ("queue_latency", s.queue_latency.to_json()),
+                ("prefill_latency", s.prefill_latency.to_json()),
+                ("decode_latency", s.decode_latency.to_json()),
+                ("total_latency", s.total_latency.to_json()),
+            ]),
+            None => Value::Null,
+        };
+        let opt_num = |x: Option<f64>| match x {
+            Some(n) => Value::num(n),
+            None => Value::Null,
+        };
+        Value::obj(vec![
+            ("run", Value::str(self.run.clone())),
+            ("records", Value::num(self.records as f64)),
+            ("malformed", Value::num(self.malformed as f64)),
+            (
+                "policy",
+                match &self.policy {
+                    Some(p) => Value::str(p.clone()),
+                    None => Value::Null,
+                },
+            ),
+            (
+                "schedule",
+                match &self.schedule {
+                    Some(s) => Value::str(s.clone()),
+                    None => Value::Null,
+                },
+            ),
+            ("segments", Value::Arr(segments)),
+            ("loss_points", Value::num(self.loss_points.len() as f64)),
+            ("expansions", Value::Arr(expansions)),
+            ("params_delta_total", Value::num(self.params_delta_total() as f64)),
+            ("preservation", Value::Arr(preservation)),
+            ("decisions", Value::num(self.decisions as f64)),
+            ("expand_decisions", Value::num(self.expand_decisions as f64)),
+            ("spans", Value::num(self.spans as f64)),
+            ("serve", serve),
+            ("final_eval_loss", opt_num(self.final_eval_loss)),
+            (
+                "total_steps",
+                match self.total_steps {
+                    Some(n) => Value::num(n as f64),
+                    None => Value::Null,
+                },
+            ),
+            ("tokens_seen", opt_num(self.tokens_seen)),
+        ])
+    }
+}
+
+/// Parse a nested phase-percentile object off a counters record.
+fn phase(c: &Value, key: &str) -> PhasePercentiles {
+    c.get(key).map(PhasePercentiles::from_json).unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GrowthOp, ModelConfig};
+
+    fn tmp_root(tag: &str) -> String {
+        let d = std::env::temp_dir().join(format!("texpand-store-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d.to_str().unwrap().to_string()
+    }
+
+    fn write_events(root: &str, run: &str, lines: &[&str]) {
+        let dir = format!("{root}/{run}");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut text = lines.join("\n");
+        text.push('\n');
+        std::fs::write(format!("{dir}/events.jsonl"), text).unwrap();
+    }
+
+    #[test]
+    fn ingest_is_incremental_and_idempotent() {
+        let root = tmp_root("incr");
+        write_events(
+            &root,
+            "r1",
+            &[r#"{"event":"run_start","policy":"fixed","schedule":"s"}"#],
+        );
+        let store = RunStore::open(&root).unwrap();
+        let rep = store.ingest("r1").unwrap();
+        assert_eq!((rep.new_records, rep.total_records), (1, 1));
+        // idempotent: nothing new
+        let rep = store.ingest("r1").unwrap();
+        assert_eq!((rep.new_records, rep.total_records), (0, 1));
+        // append one complete line plus a torn tail (no newline)
+        let path = format!("{root}/r1/events.jsonl");
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"event\":\"span\",\"id\":1}\n{\"event\":\"spa").unwrap();
+        drop(f);
+        let rep = store.ingest("r1").unwrap();
+        assert_eq!((rep.new_records, rep.total_records), (1, 2), "torn tail not ingested");
+        // finishing the torn line makes it land
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"n\",\"id\":2}\n").unwrap();
+        drop(f);
+        let rep = store.ingest("r1").unwrap();
+        assert_eq!((rep.new_records, rep.total_records), (1, 3));
+        let stats = store.stats("r1").unwrap();
+        assert_eq!(stats.records, 3);
+        assert_eq!(stats.spans, 2);
+        assert_eq!(stats.malformed, 0, "torn line was never half-ingested");
+        assert_eq!(store.runs().unwrap(), vec!["r1".to_string()]);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn reused_run_name_restarts_ingestion() {
+        let root = tmp_root("reuse");
+        write_events(&root, "r", &[r#"{"event":"span","id":1}"#, r#"{"event":"span","id":2}"#]);
+        let store = RunStore::open(&root).unwrap();
+        store.ingest("r").unwrap();
+        // a fresh (shorter) source under the same name: restart, no dupes
+        write_events(&root, "r", &[r#"{"event":"span","id":9}"#]);
+        let rep = store.ingest("r").unwrap();
+        assert_eq!((rep.new_records, rep.total_records), (1, 1));
+        assert_eq!(store.stats("r").unwrap().spans, 1);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn stats_aggregate_run_events_and_validate_plans() {
+        let root = tmp_root("stats");
+        let cfg = ModelConfig { layers: 1, hidden: 8, heads: 1, k: 4, v: 4, mlp: 16, seq: 8, vocab: 16 };
+        let plan = ExpansionPlan::new(&cfg, vec![GrowthOp::Mlp { p: 32 }]).unwrap();
+        let boundary = Value::obj(vec![
+            ("event", Value::str("boundary")),
+            ("into_stage", Value::str("stage1")),
+            ("ops", Value::num(1.0)),
+            ("rust_delta", Value::num(1e-7)),
+            ("pjrt_delta", Value::num(1e-7)),
+            ("loss_before", Value::num(2.5)),
+            ("loss_after", Value::num(2.5)),
+            ("surgery_ms", Value::num(3.0)),
+            ("params_before", Value::num(plan.params_before() as f64)),
+            ("params_after", Value::num(plan.params_after() as f64)),
+            ("param_delta", Value::num(plan.param_delta() as f64)),
+            ("params_predicted", Value::num(plan.params_after() as f64)),
+            ("flops_delta_est", Value::num(plan.flops_delta())),
+            ("plan", plan.to_json()),
+        ]);
+        let lines = [
+            r#"{"event":"run_start","policy":"fixed","schedule":"tiny"}"#.to_string(),
+            r#"{"event":"step","stage":"stage0","global_step":0,"loss":3.0}"#.to_string(),
+            r#"{"event":"stage_done","stage":"stage0","steps":5,"first_loss":3.0,"final_loss":2.5,"tokens_per_sec":100.0,"params":123}"#.to_string(),
+            boundary.to_string(),
+            r#"{"event":"preservation","boundary":"stage1","probe_delta":1e-7,"backend_delta":1e-7,"eval_before":2.5,"eval_after":2.5,"eval_drift":0.0,"tol":1e-4,"within_tol":true}"#.to_string(),
+            r#"{"event":"decision","decision":"expand"}"#.to_string(),
+            r#"{"event":"run_done","final_eval_loss":2.2,"total_steps":10,"tokens_seen":640}"#.to_string(),
+            "not json at all".to_string(),
+        ];
+        let refs: Vec<&str> = lines.iter().map(|s| s.as_str()).collect();
+        write_events(&root, "r", &refs);
+        let store = RunStore::open(&root).unwrap();
+        store.ingest("r").unwrap();
+        let s = store.stats("r").unwrap();
+        assert_eq!(s.policy.as_deref(), Some("fixed"));
+        assert_eq!(s.segments.len(), 1);
+        assert_eq!(s.loss_points.len(), 1);
+        assert_eq!(s.expansions.len(), 1);
+        assert_eq!(s.preservation.len(), 1);
+        assert!(s.preservation[0].within_tol);
+        assert_eq!((s.decisions, s.expand_decisions), (1, 1));
+        assert_eq!(s.malformed, 1);
+        assert_eq!(s.params_delta_total(), plan.param_delta() as u64);
+        let e = &s.expansions[0];
+        assert!(e.plan.is_some(), "plan evidence rebuilt: {:?}", e.plan_error);
+        assert_eq!(e.plan.as_ref().unwrap().param_delta(), plan.param_delta());
+        assert_eq!(s.final_eval_loss, Some(2.2));
+        // summary.json landed and parses
+        let summary = Value::load(&format!("{}/r/summary.json", store.dir())).unwrap();
+        assert_eq!(summary.req("expansions").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(summary.req("params_delta_total").unwrap().as_i64().unwrap() as usize, plan.param_delta());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn tampered_plan_evidence_is_flagged_not_trusted() {
+        let root = tmp_root("tamper");
+        let cfg = ModelConfig { layers: 1, hidden: 8, heads: 1, k: 4, v: 4, mlp: 16, seq: 8, vocab: 16 };
+        let plan = ExpansionPlan::new(&cfg, vec![GrowthOp::Mlp { p: 32 }]).unwrap();
+        let mut fields: Vec<(&str, Value)> = Vec::new();
+        let j = plan.to_json();
+        for key in ["from", "ops", "to"] {
+            fields.push((key, j.req(key).unwrap().clone()));
+        }
+        fields.push(("params_after", Value::num(1.0))); // tampered
+        let boundary = Value::obj(vec![
+            ("event", Value::str("boundary")),
+            ("into_stage", Value::str("stage1")),
+            ("plan", Value::obj(fields)),
+        ]);
+        write_events(&root, "r", &[boundary.to_string().as_str()]);
+        let store = RunStore::open(&root).unwrap();
+        store.ingest("r").unwrap();
+        let s = store.stats("r").unwrap();
+        assert_eq!(s.expansions.len(), 1);
+        assert!(s.expansions[0].plan.is_none());
+        assert!(s.expansions[0].plan_error.as_deref().unwrap().contains("params_after"));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn bench_rows_ingest_by_offset() {
+        let root = tmp_root("bench");
+        std::fs::write(format!("{root}/bench.jsonl"), "{\"kind\":\"step\"}\n").unwrap();
+        let store = RunStore::open(&root).unwrap();
+        assert_eq!(store.ingest_bench().unwrap(), 1);
+        assert_eq!(store.ingest_bench().unwrap(), 0);
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(format!("{root}/bench.jsonl"))
+            .unwrap();
+        f.write_all(b"{\"kind\":\"step2\"}\n").unwrap();
+        drop(f);
+        assert_eq!(store.ingest_bench().unwrap(), 1);
+        let stored = std::fs::read_to_string(format!("{}/bench.jsonl", store.dir())).unwrap();
+        assert_eq!(stored.lines().count(), 2);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+}

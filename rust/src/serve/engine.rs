@@ -29,6 +29,7 @@
 //! never outlives the tick.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
@@ -36,7 +37,8 @@ use crate::expand::{ExpandOptions, ExpansionPlan};
 use crate::generate::Sampler;
 use crate::metrics::{PhasePercentiles, ServeCounters, Timer};
 use crate::obs::{
-    self, Counter, Gauge, Histogram, MetricsRegistry, Span, SpanTracker, LATENCY_MS_BOUNDS,
+    self, Counter, Gauge, Histogram, MetricsRegistry, Span, SpanRing, SpanTracker,
+    LATENCY_MS_BOUNDS,
 };
 use crate::params::ParamStore;
 use crate::rng::Pcg32;
@@ -70,6 +72,11 @@ pub struct EngineOptions {
     /// Publish registry metrics + span traces (on by default; the off
     /// switch exists for the overhead benchmark and metrics-free embeds).
     pub metrics: bool,
+    /// Span sampling: keep 1-in-N finished spans (`take_spans` + the
+    /// live `/spans` ring). Counters and latency histograms always see
+    /// every request regardless — sampling thins only the per-request
+    /// trace stream. `0` and `1` both mean "keep everything".
+    pub span_sample: u64,
 }
 
 impl Default for EngineOptions {
@@ -83,6 +90,7 @@ impl Default for EngineOptions {
             max_pending: 1024,
             request_timeout_ticks: 0,
             metrics: true,
+            span_sample: 1,
         }
     }
 }
@@ -105,6 +113,8 @@ struct EngineMetrics {
     decode_ms: Histogram,
     total_ms: Histogram,
     swap_ms: Histogram,
+    spans_dropped: Counter,
+    preservation_drift: Gauge,
 }
 
 impl EngineMetrics {
@@ -126,6 +136,12 @@ impl EngineMetrics {
             decode_ms: reg.histogram("texpand_serve_decode_latency_ms", "Decode phase (ms)", lat),
             total_ms: reg.histogram("texpand_serve_total_latency_ms", "Submit to finish (ms)", lat),
             swap_ms: reg.histogram("texpand_serve_swap_ms", "Hot swap duration (ms)", lat),
+            spans_dropped: reg
+                .counter("texpand_spans_dropped_total", "Spans evicted from the live export ring"),
+            preservation_drift: reg.gauge(
+                "texpand_preservation_drift",
+                "max|delta logits| on the probe batch at the latest hot swap",
+            ),
         }
     }
 }
@@ -153,6 +169,9 @@ pub struct Engine {
     metrics: Option<EngineMetrics>,
     spans: SpanTracker,
     finished_spans: Vec<Span>,
+    /// Live export ring shared with the `/spans` HTTP route (`None`
+    /// unless [`Engine::set_span_ring`] attached one).
+    span_ring: Option<Arc<SpanRing>>,
 }
 
 impl Engine {
@@ -185,7 +204,15 @@ impl Engine {
             metrics,
             spans: SpanTracker::new(),
             finished_spans: Vec::new(),
+            span_ring: None,
         }
+    }
+
+    /// Attach the bounded ring the `/spans` route streams from: every
+    /// kept span is also pushed there as a JSON line. Evictions (a slow
+    /// or absent consumer) bump `texpand_spans_dropped_total`.
+    pub fn set_span_ring(&mut self, ring: Arc<SpanRing>) {
+        self.span_ring = Some(ring);
     }
 
     /// The live architecture (changes after a successful hot-swap).
@@ -271,20 +298,33 @@ impl Engine {
         self.completed.remove(&id)
     }
 
-    /// Close a request's span: feed the phase histograms, refresh the
-    /// percentile fields in `counters`, stash the span for `take_spans`.
+    /// Close a request's span: feed the phase histograms (tagging each
+    /// bucket with the request id as its exemplar), refresh the
+    /// percentile fields in `counters`, and — subject to
+    /// `EngineOptions::span_sample` — stash the span for `take_spans`
+    /// and the live export ring. Sampled-out requests still hit every
+    /// counter and histogram; only the trace record is thinned.
     fn finish_span(&mut self, c: &Completion, finish: &'static str) {
         let Some(m) = &self.metrics else { return };
         let tick = self.sched.ticks();
         let Some(span) = self.spans.on_finish(c.id, tick, c.generated, finish) else { return };
-        m.queue_ms.observe(span.queue_ms);
-        m.prefill_ms.observe(span.prefill_ms);
-        m.decode_ms.observe(span.decode_ms);
-        m.total_ms.observe(span.total_ms);
+        m.queue_ms.observe_with_exemplar(span.queue_ms, c.id);
+        m.prefill_ms.observe_with_exemplar(span.prefill_ms, c.id);
+        m.decode_ms.observe_with_exemplar(span.decode_ms, c.id);
+        m.total_ms.observe_with_exemplar(span.total_ms, c.id);
         self.counters.queue_latency = percentiles_of(&m.queue_ms);
         self.counters.prefill_latency = percentiles_of(&m.prefill_ms);
         self.counters.decode_latency = percentiles_of(&m.decode_ms);
         self.counters.total_latency = percentiles_of(&m.total_ms);
+        let sample = self.opts.span_sample.max(1);
+        if c.id % sample != 0 {
+            return;
+        }
+        if let Some(ring) = &self.span_ring {
+            if ring.push(crate::json::Value::obj(span.fields()).to_string()) {
+                m.spans_dropped.inc();
+            }
+        }
         self.finished_spans.push(span);
     }
 
@@ -398,6 +438,7 @@ impl Engine {
                 if let Some(m) = &self.metrics {
                     m.swaps.inc();
                     m.swap_ms.observe(ms);
+                    m.preservation_drift.set(f64::from(report.probe_delta));
                 }
                 // the probe batch keeps its token content: none of the
                 // paper's six ops touches seq or vocab, so the rows stay
@@ -601,6 +642,57 @@ mod tests {
         let text = crate::obs::render(&reg);
         assert!(text.contains("texpand_serve_completed_total 2\n"), "{text}");
         assert!(text.contains("texpand_serve_tokens_generated_total 7\n"), "{text}");
+    }
+
+    #[test]
+    fn span_sampling_thins_traces_but_not_counters() {
+        let reg = MetricsRegistry::new();
+        let params = ParamStore::init(&cfg(), &mut Pcg32::seeded(2), 0.05);
+        let mut e = Engine::with_registry(
+            params,
+            EngineOptions { max_slots: 2, parallel: false, span_sample: 2, ..Default::default() },
+            &reg,
+        );
+        for i in 0..4u32 {
+            e.submit(vec![i % 16], 3, greedy()).unwrap();
+        }
+        e.run_until_idle().unwrap();
+        // ids 0..4, keep id % 2 == 0 → half the traces survive
+        let spans = e.take_spans();
+        assert_eq!(spans.len(), 2);
+        assert!(spans.iter().all(|s| s.id % 2 == 0));
+        // ...but aggregates saw all four requests
+        assert_eq!(e.counters().completed, 4);
+        let text = crate::obs::render(&reg);
+        assert!(text.contains("texpand_serve_completed_total 4\n"), "{text}");
+        assert!(text.contains("texpand_serve_total_latency_ms_count 4\n"), "{text}");
+    }
+
+    #[test]
+    fn span_ring_receives_json_lines_and_counts_drops() {
+        let reg = MetricsRegistry::new();
+        let params = ParamStore::init(&cfg(), &mut Pcg32::seeded(2), 0.05);
+        let mut e = Engine::with_registry(
+            params,
+            EngineOptions { max_slots: 2, parallel: false, ..Default::default() },
+            &reg,
+        );
+        let ring = Arc::new(SpanRing::new(3));
+        e.set_span_ring(Arc::clone(&ring));
+        for i in 0..5u32 {
+            e.submit(vec![i % 16], 2, greedy()).unwrap();
+        }
+        e.run_until_idle().unwrap();
+        // capacity 3, 5 spans pushed → 2 evictions, newest 3 retained
+        assert_eq!(ring.len(), 3);
+        let (lines, _) = ring.read_from(0);
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            let v = crate::json::Value::parse(line).unwrap();
+            assert_eq!(v.req("finish").unwrap().as_str().unwrap(), "max_tokens");
+        }
+        let text = crate::obs::render(&reg);
+        assert!(text.contains("texpand_spans_dropped_total 2\n"), "{text}");
     }
 
     #[test]

@@ -158,6 +158,7 @@ pub fn train_segment(
     let tps_gauge = reg.gauge("texpand_train_tokens_per_sec", "Latest step throughput");
     let params_gauge = reg.gauge("texpand_train_params", "Scalar parameter count");
     let tokens_counter = reg.counter("texpand_train_tokens_total", "Training tokens consumed");
+    let eval_gauge = reg.gauge("texpand_train_eval_loss", "Latest held-out probe loss");
     params_gauge.set(num_params as f64);
 
     let mut local_step = 0usize;
@@ -205,7 +206,9 @@ pub fn train_segment(
         let arch_step = local_step + 1;
         let eval_loss = match (policy.eval_every(), probe) {
             (Some(k), Some(p)) if arch_step % k == 0 => {
-                Some(eval_loss(backend, stage, params, p)?)
+                let e = eval_loss(backend, stage, params, p)?;
+                eval_gauge.set(f64::from(e));
+                Some(e)
             }
             _ => None,
         };

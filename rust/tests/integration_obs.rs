@@ -1,12 +1,17 @@
-//! Integration: the observability layer end to end (S19; DESIGN.md §14).
+//! Integration: the observability layer end to end (S19/S20;
+//! DESIGN.md §14–§15).
 //!
-//! Three acceptance properties:
+//! Acceptance properties:
 //! (a) `/metrics` output is valid Prometheus text exposition — parsed
 //!     back here: HELP/TYPE headers precede samples, names are valid,
 //!     label escaping round-trips, histogram buckets are cumulative,
-//!     monotone and end in a `le="+Inf"` bucket equal to `_count`;
+//!     monotone and end in a `le="+Inf"` bucket equal to `_count`, and
+//!     exemplar annotations appear only on `_bucket` lines in the
+//!     ` # {request_id="N"} V` shape (malformed ones are rejected);
 //! (b) the serve engine publishes counters, latency histograms and
-//!     per-request spans through a registry, live over real TCP;
+//!     per-request spans through a registry, live over real TCP, and
+//!     the `/spans` route streams ring contents as chunked JSON lines,
+//!     surviving a client that disconnects mid-stream;
 //! (c) histogram percentile estimates match an exact sorted-quantile
 //!     oracle to within one bucket width (property test).
 
@@ -18,7 +23,10 @@ use texpand::config::{GrowthOp, ModelConfig};
 use texpand::expand::{ExpandOptions, ExpansionPlan};
 use texpand::generate::Sampler;
 use texpand::obs::registry::valid_metric_name;
-use texpand::obs::{http_get, render, MetricsRegistry, MetricsServer, LATENCY_MS_BOUNDS};
+use texpand::obs::{
+    http_get, http_stream_lines, render, MetricsRegistry, MetricsServer, SpanRing,
+    LATENCY_MS_BOUNDS,
+};
 use texpand::params::ParamStore;
 use texpand::prop::Runner;
 use texpand::rng::Pcg32;
@@ -82,7 +90,13 @@ fn validate_exposition(text: &str) {
             current = Some((name, kind));
         } else {
             let (fam, kind) = current.clone().expect("sample line before any TYPE header");
-            let (series, value) = line.rsplit_once(' ').expect("sample line has no value");
+            // exemplar annotations ride after the sample as a ` # {...} V`
+            // comment; split them off before parsing the sample itself
+            let (sample, exemplar) = match line.split_once(" # ") {
+                Some((s, e)) => (s, Some(e)),
+                None => (line, None),
+            };
+            let (series, value) = sample.rsplit_once(' ').expect("sample line has no value");
             let (name_part, label_part) = match series.find('{') {
                 Some(i) => {
                     assert!(series.ends_with('}'), "unterminated labels in {line}");
@@ -93,10 +107,12 @@ fn validate_exposition(text: &str) {
             match kind.as_str() {
                 "counter" => {
                     assert_eq!(name_part, fam, "stray sample {line}");
+                    assert!(exemplar.is_none(), "exemplar on a counter line: {line}");
                     value.parse::<u64>().expect("counter value must be an unsigned integer");
                 }
                 "gauge" => {
                     assert_eq!(name_part, fam, "stray sample {line}");
+                    assert!(exemplar.is_none(), "exemplar on a gauge line: {line}");
                     // Rust's f64 parser accepts the format's NaN/+Inf/-Inf
                     value.parse::<f64>().expect("gauge value must parse");
                 }
@@ -108,6 +124,9 @@ fn validate_exposition(text: &str) {
                         .unwrap_or_else(|| panic!("sample '{line}' outside family '{fam}'"));
                     match suffix {
                         "_bucket" => {
+                            if let Some(ex) = exemplar {
+                                validate_exemplar(ex, line);
+                            }
                             let le = le.expect("bucket line without le label");
                             let cum = value.parse::<u64>().expect("bucket count");
                             let h = hists.entry(key).or_default();
@@ -128,10 +147,12 @@ fn validate_exposition(text: &str) {
                             h.last_cum = cum;
                         }
                         "_sum" => {
+                            assert!(exemplar.is_none(), "exemplar on a _sum line: {line}");
                             value.parse::<f64>().expect("histogram sum");
                             hists.entry(key).or_default().sum_seen = true;
                         }
                         "_count" => {
+                            assert!(exemplar.is_none(), "exemplar on a _count line: {line}");
                             let count = value.parse::<u64>().expect("histogram count");
                             let h = hists.entry(key).or_default();
                             assert_eq!(
@@ -154,6 +175,19 @@ fn validate_exposition(text: &str) {
         assert!(h.sum_seen, "histogram series {key} missing _sum");
         assert!(h.count.is_some(), "histogram series {key} missing _count");
     }
+}
+
+/// Assert one exemplar annotation matches the promised shape:
+/// `{request_id="N"} V` with a u64 id and a parseable value.
+fn validate_exemplar(ex: &str, line: &str) {
+    let rest = ex
+        .strip_prefix("{request_id=\"")
+        .unwrap_or_else(|| panic!("exemplar must open with request_id: {line}"));
+    let (id, value) = rest
+        .split_once("\"} ")
+        .unwrap_or_else(|| panic!("exemplar must close its label set and carry a value: {line}"));
+    id.parse::<u64>().unwrap_or_else(|_| panic!("exemplar request id must be a u64: {line}"));
+    value.parse::<f64>().unwrap_or_else(|_| panic!("exemplar value must parse: {line}"));
 }
 
 /// A registry exercising every family kind, labels, non-finite values and
@@ -221,6 +255,83 @@ fn metrics_server_serves_valid_exposition_over_tcp() {
     reg.counter("obs_requests_total", "Total requests").add(2);
     let (_, body) = http_get(&addr, "/metrics", Duration::from_secs(5)).unwrap();
     assert!(body.contains("obs_requests_total 9\n"), "{body}");
+    srv.shutdown();
+}
+
+#[test]
+fn exemplar_annotations_round_trip_through_the_validator() {
+    let reg = MetricsRegistry::new();
+    let h = reg.histogram("obs_ex_ms", "Exemplified latency", &[1.0, 10.0, 100.0]);
+    h.observe_with_exemplar(0.5, 41);
+    h.observe_with_exemplar(0.7, 42); // same bucket: latest id wins
+    h.observe_with_exemplar(50.0, 7);
+    h.observe(5.0); // no exemplar recorded for the middle bucket... yet
+    let text = render(&reg);
+    validate_exposition(&text);
+    assert!(text.contains("obs_ex_ms_bucket{le=\"1\"} 2 # {request_id=\"42\"} 0.7\n"), "{text}");
+    assert!(text.contains("obs_ex_ms_bucket{le=\"100\"} 4 # {request_id=\"7\"} 50\n"), "{text}");
+    // the plain observe left its bucket annotation-free
+    assert!(text.contains("obs_ex_ms_bucket{le=\"10\"} 3\n"), "{text}");
+}
+
+#[test]
+fn malformed_exemplar_annotations_are_rejected() {
+    let cases = [
+        // exemplar on a counter sample
+        "# HELP bad_total t\n# TYPE bad_total counter\nbad_total 1 # {request_id=\"1\"} 2\n",
+        // wrong label name
+        "# HELP bad_ms t\n# TYPE bad_ms histogram\nbad_ms_bucket{le=\"+Inf\"} 1 # {trace=\"1\"} 2\n",
+        // non-numeric id
+        "# HELP bad_ms t\n# TYPE bad_ms histogram\nbad_ms_bucket{le=\"+Inf\"} 1 # {request_id=\"x\"} 2\n",
+        // annotation with no value
+        "# HELP bad_ms t\n# TYPE bad_ms histogram\nbad_ms_bucket{le=\"+Inf\"} 1 # {request_id=\"1\"}\n",
+    ];
+    for doc in cases {
+        let result = std::panic::catch_unwind(|| validate_exposition(doc));
+        assert!(result.is_err(), "validator accepted malformed exemplar doc:\n{doc}");
+    }
+}
+
+#[test]
+fn spans_route_streams_live_and_survives_midstream_disconnect() {
+    let reg = Arc::new(MetricsRegistry::new());
+    reg.counter("obs_alive_total", "liveness witness").inc();
+    let ring = Arc::new(SpanRing::new(64));
+    let srv = MetricsServer::bind_with_spans("127.0.0.1:0", reg.clone(), Some(ring.clone())).unwrap();
+    let addr = srv.local_addr().to_string();
+    for i in 0..4u64 {
+        ring.push(format!("{{\"id\":{i}}}"));
+    }
+    // client 1: read two spans, then disconnect mid-stream (the server
+    // still holds spans 2 and 3 for this cursor when we hang up)
+    let mut got = Vec::new();
+    let n = http_stream_lines(&addr, "/spans", Duration::from_secs(5), Some(2), &mut |l| {
+        got.push(l.to_string());
+    })
+    .unwrap();
+    assert_eq!((n, got.as_slice()), (2, &["{\"id\":0}".to_string(), "{\"id\":1}".to_string()][..]));
+    // the accept loop must not be wedged by the dangling stream thread:
+    // /metrics still answers...
+    let (status, body) = http_get(&addr, "/metrics", Duration::from_secs(5)).unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("obs_alive_total 1\n"), "{body}");
+    // ...and a fresh /spans client gets the full backlog plus a span
+    // pushed while it is connected (live delivery, not just replay)
+    let pusher = {
+        let ring = Arc::clone(&ring);
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(100));
+            ring.push("{\"id\":99}".to_string());
+        })
+    };
+    let mut got = Vec::new();
+    let n = http_stream_lines(&addr, "/spans", Duration::from_secs(5), Some(5), &mut |l| {
+        got.push(l.to_string());
+    })
+    .unwrap();
+    pusher.join().unwrap();
+    assert_eq!(n, 5, "4 backlog + 1 live span: {got:?}");
+    assert_eq!(got.last().map(String::as_str), Some("{\"id\":99}"));
     srv.shutdown();
 }
 

@@ -1,0 +1,132 @@
+//! Integration: the run store over real coordinator output (S20a).
+//!
+//! The unit tests in `obs::store` cover cursor mechanics on synthetic
+//! logs; these tests close the loop with the actual writers: a native
+//! 3-stage growth run on `configs/growth_tiny.json` must ingest into
+//! stats that (a) count every expansion with valid, cross-checked plan
+//! evidence, (b) show measured param deltas equal to the plan's exact
+//! prediction, and (c) carry a within-tolerance preservation record for
+//! every boundary — the properties `texpand report` and the CI smoke
+//! lean on.
+
+mod common;
+
+use common::{tiny_manifest, tiny_schedule};
+use texpand::autodiff::NativeBackend;
+use texpand::config::TrainConfig;
+use texpand::coordinator::{Coordinator, CoordinatorOptions};
+use texpand::data::CorpusKind;
+use texpand::json::Value;
+use texpand::obs::RunStore;
+
+fn tmp_runs(tag: &str) -> String {
+    let d = std::env::temp_dir().join(format!("texpand-store-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d.to_str().unwrap().to_string()
+}
+
+#[test]
+fn growth_run_ingests_into_complete_stats() {
+    let runs = tmp_runs("e2e");
+    let opts = CoordinatorOptions {
+        steps_scale: 0.2, // 6 steps per stage: enough to emit every event kind
+        save_checkpoints: false,
+        corpus: CorpusKind::MarkovText,
+        corpus_len: 50_000,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(
+        tiny_schedule(),
+        tiny_manifest(),
+        Box::new(NativeBackend::new()),
+        TrainConfig { log_every: 1000, ..Default::default() },
+        opts,
+    )
+    .unwrap();
+    let summary = coord.run(&runs, "grow").unwrap();
+    assert_eq!(summary.boundaries.len(), 2, "tiny schedule has 2 boundaries");
+
+    let store = RunStore::open(&runs).unwrap();
+    let reports = store.ingest_all().unwrap();
+    assert_eq!(reports.len(), 1);
+    assert_eq!(reports[0].0, "grow");
+    assert!(reports[0].1.new_records > 0);
+
+    let s = store.stats("grow").unwrap();
+    assert_eq!(s.malformed, 0, "a real run log must parse cleanly");
+    assert_eq!(s.policy.as_deref(), Some("fixed"));
+    assert_eq!(s.segments.len(), 3);
+    assert!(s.loss_points.len() >= s.segments.len(), "loss curve sampled per segment");
+
+    // every expansion carries validated plan evidence, and the measured
+    // param delta equals the plan's exact prediction
+    assert_eq!(s.expansions.len(), 2);
+    for e in &s.expansions {
+        let plan = e.plan.as_ref().unwrap_or_else(|| {
+            panic!("expansion into '{}' lost its plan: {:?}", e.into_stage, e.plan_error)
+        });
+        let measured = e.param_delta.expect("measured delta recorded");
+        assert_eq!(measured, plan.param_delta() as u64, "at '{}'", e.into_stage);
+        assert_eq!(e.params_after, plan.params_after() as u64, "at '{}'", e.into_stage);
+    }
+    assert!(s.params_delta_total() > 0, "growth must add parameters");
+
+    // every boundary has a preservation measurement, within tolerance
+    assert_eq!(s.preservation.len(), 2);
+    for (e, p) in s.expansions.iter().zip(&s.preservation) {
+        assert_eq!(p.boundary, e.into_stage);
+        assert!(p.within_tol, "drift {} vs tol {} at '{}'", p.probe_delta, p.tol, p.boundary);
+        assert!(p.probe_delta <= p.tol);
+    }
+
+    assert!(s.final_eval_loss.unwrap().is_finite());
+    assert_eq!(s.total_steps, Some(summary.total_steps as u64));
+
+    // the summary document landed next to the records and agrees
+    let doc = Value::load(&format!("{}/grow/summary.json", store.dir())).unwrap();
+    assert_eq!(doc.req("expansions").unwrap().as_arr().unwrap().len(), 2);
+    assert_eq!(
+        doc.req("params_delta_total").unwrap().as_i64().unwrap() as u64,
+        s.params_delta_total()
+    );
+
+    // re-ingest of a finished run is a no-op
+    assert_eq!(store.ingest("grow").unwrap().new_records, 0);
+    std::fs::remove_dir_all(&runs).unwrap();
+}
+
+#[test]
+fn ingest_all_discovers_runs_and_skips_non_runs() {
+    let runs = tmp_runs("discover");
+    for (name, id) in [("beta", 2), ("alpha", 1)] {
+        let dir = format!("{runs}/{name}");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            format!("{dir}/events.jsonl"),
+            format!("{{\"event\":\"span\",\"id\":{id}}}\n"),
+        )
+        .unwrap();
+    }
+    // a directory without events.jsonl is not a run
+    std::fs::create_dir_all(format!("{runs}/scratch")).unwrap();
+    std::fs::write(format!("{runs}/bench.jsonl"), "{\"kind\":\"row\"}\n").unwrap();
+
+    let store = RunStore::open(&runs).unwrap();
+    let reports = store.ingest_all().unwrap();
+    let names: Vec<&str> = reports.iter().map(|(n, _)| n.as_str()).collect();
+    assert_eq!(names, ["alpha", "beta"], "sorted, .store and scratch skipped");
+    assert!(reports.iter().all(|(_, r)| r.new_records == 1));
+    assert_eq!(store.runs().unwrap(), vec!["alpha".to_string(), "beta".to_string()]);
+
+    // second pass: everything is already ingested (including bench rows)
+    let reports = store.ingest_all().unwrap();
+    assert!(reports.iter().all(|(_, r)| r.new_records == 0 && r.total_records == 1));
+    let bench = std::fs::read_to_string(format!("{}/bench.jsonl", store.dir())).unwrap();
+    assert_eq!(bench.lines().count(), 1);
+
+    // asking for a run that was never ingested names the fix
+    let err = store.stats("nope").unwrap_err().to_string();
+    assert!(err.contains("not ingested"), "{err}");
+    std::fs::remove_dir_all(&runs).unwrap();
+}
