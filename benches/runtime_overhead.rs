@@ -25,8 +25,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use texpand::bench_util::{bench, Reporter};
+use texpand::ckpt::{Chain, RunCheckpoint};
 use texpand::config::{OptimKind, TrainConfig};
-use texpand::data::{Batcher, CorpusKind};
+use texpand::data::{Batch, Batcher, CorpusKind};
 use texpand::generate::Sampler;
 use texpand::json::Value;
 use texpand::metrics::Timer;
@@ -151,6 +152,74 @@ fn main() {
     rep.value_row("spans streamed to the tail client", "count", streamed as f64, kind.clone());
     rep.value_row("span export overhead (1 - spans/on)", "overhead_fraction", span_overhead, kind);
     println!("target: span export overhead_fraction < 0.05 (DESIGN.md §15).");
+
+    // --- checkpoint-write overhead (artifact-free) -----------------------
+    // cost of one durable recovery point (full RunCheckpoint through
+    // Chain::save: serialize + checksum + tmp + fsync + rename) relative
+    // to a native training step on the same model, amortized over a
+    // --checkpoint-every 10 cadence. Target < 5% (DESIGN.md §16.6).
+    {
+        let cfg = texpand::config::ModelConfig {
+            layers: 2, hidden: 32, heads: 2, k: 16, v: 16, mlp: 64, seq: 32, vocab: 128,
+        };
+        let mut rng = Pcg32::seeded(21);
+        let mut params = ParamStore::init(&cfg, &mut rng, 0.02);
+        let tcfg = TrainConfig { optimizer: OptimKind::Adam, ..Default::default() };
+        let mut opt = Optimizer::new(&tcfg, &params);
+        let batch = Batch::random(&cfg, 4, 2);
+        let step = bench(1, 10, || {
+            let (loss, grads) =
+                texpand::autodiff::loss_and_grads(&cfg, &params, &batch).unwrap();
+            opt.step(&mut params, &grads).unwrap();
+            loss
+        });
+
+        let (adam_t, adam_m, adam_v) = match &opt {
+            Optimizer::Adam { t, m, v, .. } => (*t, Some(m.clone()), Some(v.clone())),
+            Optimizer::Sgd { .. } => (0, None, None),
+        };
+        let ck = RunCheckpoint {
+            fingerprint: Value::obj(vec![("schedule", Value::str("bench"))]),
+            global_step: 10,
+            tokens_seen: 10 * 4 * cfg.seq,
+            est_flops: 0.0,
+            segment: 0,
+            local_step: 10,
+            surgery_rng: (1, 3, None),
+            batcher_rng: (5, 7, None),
+            policy: "fixed".into(),
+            policy_state: Value::Null,
+            opt_kind: "adam".into(),
+            adam_t,
+            last_plan: None,
+            params: params.clone(),
+            adam_m,
+            adam_v,
+        };
+        let dir = std::env::temp_dir()
+            .join(format!("texpand-bench-ckpt-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let chain = Chain::open(&dir, 2).unwrap();
+        let ckpt = bench(1, 10, || chain.save(&ck).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+
+        const EVERY: f64 = 10.0;
+        let overhead = ckpt.mean_ns / (EVERY * step.mean_ns);
+        let kind = vec![("kind", Value::str("checkpoint_write_overhead"))];
+        rep.row(
+            "checkpoint write (params + adam moments, small model)",
+            &ckpt,
+            [kind.clone(), vec![("params", Value::num(params.num_scalars() as f64))]].concat(),
+        );
+        rep.row("native train step (same model)", &step, kind.clone());
+        rep.value_row(
+            "checkpoint overhead at --checkpoint-every 10",
+            "overhead_fraction",
+            overhead,
+            kind,
+        );
+        println!("target: checkpoint overhead_fraction < 0.05 at every=10 (DESIGN.md §16.6).");
+    }
 
     // --- PJRT step decomposition (needs `make artifacts`) ----------------
     let manifest = match Manifest::load("artifacts", "manifest.json") {

@@ -105,6 +105,41 @@ if [ "$FAST" = "0" ]; then
     exit 1
   fi
 
+  echo "==> crash/resume smoke (kill at step 5, resume must be bit-identical)"
+  # oracle: the same run never interrupted; the resumed run's final params
+  # must match it byte for byte (DESIGN.md §16)
+  ./target/release/texpand train \
+    --backend native --threads 2 \
+    --schedule configs/growth_tiny.json --steps-scale 0.2 \
+    --runs "$SMOKE_RUNS" --run-name ci-resume-oracle --log-every 100
+  if TEXPAND_FAULT=train_step:5 ./target/release/texpand train \
+    --backend native --threads 2 \
+    --schedule configs/growth_tiny.json --steps-scale 0.2 \
+    --runs "$SMOKE_RUNS" --run-name ci-resume \
+    --checkpoint-every 1 --log-every 100 > /dev/null 2>&1; then
+    echo "ci.sh: fault-armed run was supposed to abort at step 5" >&2
+    exit 1
+  fi
+  ./target/release/texpand train \
+    --backend native --threads 2 \
+    --schedule configs/growth_tiny.json --steps-scale 0.2 \
+    --runs "$SMOKE_RUNS" --run-name ci-resume \
+    --checkpoint-every 1 --resume --log-every 100
+  if ! cmp -s "$SMOKE_RUNS/ci-resume/stage2.txpd" "$SMOKE_RUNS/ci-resume-oracle/stage2.txpd"; then
+    echo "ci.sh: resumed final params differ from the uninterrupted oracle" >&2
+    exit 1
+  fi
+  # the recovery trail must be in the event log: checkpoint rows from
+  # before the kill, a resume row from the restart
+  if ! grep -q '"event":"checkpoint"' "$SMOKE_RUNS/ci-resume/events.jsonl"; then
+    echo "ci.sh: no checkpoint rows in $SMOKE_RUNS/ci-resume/events.jsonl" >&2
+    exit 1
+  fi
+  if ! grep -q '"event":"resume"' "$SMOKE_RUNS/ci-resume/events.jsonl"; then
+    echo "ci.sh: no resume row in $SMOKE_RUNS/ci-resume/events.jsonl" >&2
+    exit 1
+  fi
+
   echo "==> train-step bench smoke (TEXPAND_THREADS=2, tiny budget)"
   # also asserts serial-vs-parallel grads are bit-identical (in-bench check)
   TEXPAND_THREADS=2 TEXPAND_BENCH_BUDGET_MS=60 cargo bench --bench train_step
@@ -168,6 +203,10 @@ if [ "$FAST" = "0" ]; then
   fi
   if ! grep '"kind":"span_export_overhead"' runs/bench.jsonl | tail -n 3 | grep -q '"overhead_fraction":'; then
     echo "ci.sh: no span_export_overhead overhead_fraction row in runs/bench.jsonl" >&2
+    exit 1
+  fi
+  if ! grep '"kind":"checkpoint_write_overhead"' runs/bench.jsonl | tail -n 3 | grep -q '"overhead_fraction":'; then
+    echo "ci.sh: no checkpoint_write_overhead overhead_fraction row in runs/bench.jsonl" >&2
     exit 1
   fi
 fi

@@ -1,0 +1,231 @@
+//! Retained checkpoint generation chain (DESIGN.md §16.4).
+//!
+//! One directory holds `gen-NNNNNN.txck` files, numbered monotonically.
+//! [`Chain::save`] writes the next generation atomically and prunes down
+//! to the last K; [`Chain::load_latest_valid`] walks generations newest
+//! to oldest, skipping (with a warning) any that fail checksum validation
+//! — so a torn or bit-flipped latest file degrades to "resume from the
+//! previous good recovery point" rather than an abort. Only when *every*
+//! retained generation is corrupt does the load error out: silently
+//! restarting from scratch would overwrite the evidence the operator
+//! needs.
+
+use std::path::{Path, PathBuf};
+
+use super::RunCheckpoint;
+use crate::error::{Error, Result};
+
+pub struct Chain {
+    dir: PathBuf,
+    /// Number of generations retained after each save (≥ 1).
+    keep: usize,
+}
+
+fn gen_of(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("gen-")?.strip_suffix(".txck")?;
+    if digits.len() == 6 {
+        digits.parse().ok()
+    } else {
+        None
+    }
+}
+
+impl Chain {
+    /// Open (creating if needed) a chain directory.
+    pub fn open(dir: &Path, keep: usize) -> Result<Chain> {
+        std::fs::create_dir_all(dir).map_err(|e| Error::io(&dir.display().to_string(), e))?;
+        Ok(Chain { dir: dir.to_path_buf(), keep: keep.max(1) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// On-disk path of generation `gen` (whether or not it exists yet).
+    pub fn path_of(&self, gen: u64) -> PathBuf {
+        self.dir.join(format!("gen-{gen:06}.txck"))
+    }
+
+    /// Generation numbers currently on disk, ascending. Stale `.tmp`
+    /// leftovers from a crashed write are ignored.
+    pub fn generations(&self) -> Result<Vec<u64>> {
+        let rd = std::fs::read_dir(&self.dir)
+            .map_err(|e| Error::io(&self.dir.display().to_string(), e))?;
+        let mut gens: Vec<u64> = rd
+            .filter_map(|ent| ent.ok())
+            .filter_map(|ent| gen_of(&ent.file_name().to_string_lossy()))
+            .collect();
+        gens.sort_unstable();
+        Ok(gens)
+    }
+
+    /// Write the next generation atomically, prune to the last `keep`,
+    /// and sweep any stale `.tmp` files. Returns `(gen, bytes_written)`.
+    pub fn save(&self, ck: &RunCheckpoint) -> Result<(u64, u64)> {
+        let gens = self.generations()?;
+        let gen = gens.last().map_or(1, |g| g + 1);
+        let path = self.path_of(gen);
+        let bytes = ck.save(path.to_str().ok_or_else(|| {
+            Error::Checkpoint(format!("non-UTF-8 checkpoint path {}", path.display()))
+        })?)?;
+        // prune oldest generations beyond the retention window
+        let mut all = gens;
+        all.push(gen);
+        while all.len() > self.keep {
+            let victim = all.remove(0);
+            std::fs::remove_file(self.path_of(victim)).ok();
+        }
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for ent in rd.filter_map(|e| e.ok()) {
+                if ent.file_name().to_string_lossy().ends_with(".tmp") {
+                    std::fs::remove_file(ent.path()).ok();
+                }
+            }
+        }
+        Ok((gen, bytes))
+    }
+
+    /// Newest checkpoint that passes full checksum validation, or
+    /// `Ok(None)` for an empty chain. Corrupt generations are skipped
+    /// with a warning on stderr; if generations exist but *all* are
+    /// corrupt, that is an error, not a silent fresh start.
+    pub fn load_latest_valid(&self) -> Result<Option<(u64, RunCheckpoint)>> {
+        let gens = self.generations()?;
+        if gens.is_empty() {
+            return Ok(None);
+        }
+        let mut last_err = None;
+        for &gen in gens.iter().rev() {
+            let path = self.path_of(gen);
+            match RunCheckpoint::load(&path.display().to_string()) {
+                Ok(ck) => return Ok(Some((gen, ck))),
+                Err(e) => {
+                    eprintln!(
+                        "warning: checkpoint generation {gen} is unreadable ({e}); \
+                         falling back to the previous generation"
+                    );
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(Error::Checkpoint(format!(
+            "all {} retained checkpoint generations in {} are corrupt (last error: {})",
+            gens.len(),
+            self.dir.display(),
+            last_err.expect("non-empty chain had no error")
+        )))
+    }
+
+    /// Delete every retained generation (fresh, non-resume run start).
+    pub fn reset(&self) -> Result<()> {
+        for gen in self.generations()? {
+            let p = self.path_of(gen);
+            std::fs::remove_file(&p).map_err(|e| Error::io(&p.display().to_string(), e))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Value;
+    use crate::params::ParamStore;
+    use crate::rng::Pcg32;
+
+    fn ck(step: usize) -> RunCheckpoint {
+        let cfg = crate::config::ModelConfig {
+            layers: 1,
+            hidden: 8,
+            heads: 2,
+            k: 4,
+            v: 4,
+            mlp: 16,
+            seq: 8,
+            vocab: 32,
+        };
+        let mut rng = Pcg32::seeded(step as u64 + 1);
+        RunCheckpoint {
+            fingerprint: Value::obj(vec![("schedule", Value::str("t"))]),
+            global_step: step,
+            tokens_seen: step * 64,
+            est_flops: step as f64,
+            segment: 0,
+            local_step: step,
+            surgery_rng: (1, 3, None),
+            batcher_rng: (5, 7, None),
+            policy: "fixed".into(),
+            policy_state: Value::Null,
+            opt_kind: "sgd".into(),
+            adam_t: 0,
+            last_plan: None,
+            params: ParamStore::init(&cfg, &mut rng, 0.02),
+            adam_m: None,
+            adam_v: None,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("texpand-chain-{}-{tag}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn save_prunes_to_keep_and_resumes_latest() {
+        let dir = tmp_dir("prune");
+        let chain = Chain::open(&dir, 3).unwrap();
+        assert!(chain.load_latest_valid().unwrap().is_none());
+        for step in 1..=5 {
+            let (gen, _) = chain.save(&ck(step * 10)).unwrap();
+            assert_eq!(gen, step as u64);
+        }
+        assert_eq!(chain.generations().unwrap(), vec![3, 4, 5]);
+        let (gen, back) = chain.load_latest_valid().unwrap().unwrap();
+        assert_eq!((gen, back.global_step), (5, 50));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_latest_falls_back_to_previous_generation() {
+        let dir = tmp_dir("fallback");
+        let chain = Chain::open(&dir, 3).unwrap();
+        chain.save(&ck(10)).unwrap();
+        chain.save(&ck(20)).unwrap();
+        // flip one bit mid-payload in the newest generation
+        let latest = dir.join("gen-000002.txck");
+        let mut bytes = std::fs::read(&latest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x04;
+        std::fs::write(&latest, &bytes).unwrap();
+        let (gen, back) = chain.load_latest_valid().unwrap().unwrap();
+        assert_eq!((gen, back.global_step), (1, 10));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn all_corrupt_is_an_error_not_a_fresh_start() {
+        let dir = tmp_dir("allbad");
+        let chain = Chain::open(&dir, 3).unwrap();
+        chain.save(&ck(10)).unwrap();
+        let p = dir.join("gen-000001.txck");
+        std::fs::write(&p, b"TXCKgarbage").unwrap();
+        assert!(chain.load_latest_valid().is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reset_clears_generations_and_tmp_is_ignored() {
+        let dir = tmp_dir("reset");
+        let chain = Chain::open(&dir, 2).unwrap();
+        chain.save(&ck(10)).unwrap();
+        std::fs::write(dir.join("gen-000009.txck.tmp"), b"torn").unwrap();
+        assert_eq!(chain.generations().unwrap(), vec![1]);
+        chain.reset().unwrap();
+        assert!(chain.load_latest_valid().unwrap().is_none());
+        // next save sweeps the stale tmp
+        chain.save(&ck(20)).unwrap();
+        assert!(!dir.join("gen-000009.txck.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,671 @@
+//! Durable run state: atomic, versioned, checksummed whole-run
+//! checkpoints with a retained generation chain (DESIGN.md §16).
+//!
+//! A [`RunCheckpoint`] captures *everything* a growth run mutates —
+//! parameters, Adam moments, every live RNG (boundary-surgery generator
+//! and batcher cursor), cross-segment counters, the growth policy's
+//! internal state, the current segment index, and the last applied
+//! [`ExpansionPlan`](crate::expand::ExpansionPlan) as evidence — so that
+//! `texpand train --resume` replays the exact trajectory an uninterrupted
+//! run would have taken, bit for bit (the determinism guarantees from the
+//! parallel-training and policy work make that a checkable property, not
+//! an aspiration).
+//!
+//! ## Container format (`TXCK` version 1)
+//!
+//! ```text
+//! magic "TXCK" | u32 version (LE) | u64 header_len (LE) | u32 header_crc32 (LE)
+//! | header JSON (header_len bytes) | payload sections (concatenated)
+//! ```
+//!
+//! The header carries all scalar state plus a `sections` table — one
+//! entry per tensor store (`params`, `adam_m`, `adam_v`) with its byte
+//! length and CRC-32. Tensor payloads are raw f32 little-endian in the
+//! [`ParamStore`] canonical spec order; no per-tensor framing is needed
+//! because the header's `config` determines every spec. Exactness rules:
+//! `u64`/`f64`-bit values are hex strings (JSON numbers cap at 2^53);
+//! `f32` values round-trip exactly through the shortest-representation
+//! float formatter the [`crate::json`] writer uses.
+//!
+//! ## Atomicity and the generation chain
+//!
+//! [`Chain`] writes `gen-NNNNNN.txck` files via tmp + `fsync` + `rename`
+//! (+ parent-dir fsync), keeping the last K generations. A crash mid-write
+//! leaves only a `.tmp` the chain ignores; a torn or bit-flipped file
+//! fails its CRC at load and [`Chain::load_latest_valid`] falls back to
+//! the previous good generation with a warning.
+
+pub mod chain;
+pub mod checksum;
+
+pub use chain::Chain;
+
+use crate::config::{ModelConfig, OptimKind, TrainConfig};
+use crate::data::Batcher;
+use crate::error::{Error, Result};
+use crate::growth::GrowthPolicy;
+use crate::json::Value;
+use crate::metrics::{RunLogger, Timer};
+use crate::optim::Optimizer;
+use crate::params::ParamStore;
+use crate::train::TrainState;
+
+pub const MAGIC: &[u8; 4] = b"TXCK";
+pub const VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// hex codecs for values JSON numbers can't carry exactly
+// ---------------------------------------------------------------------------
+
+fn hex_u64(v: u64) -> Value {
+    Value::str(format!("{v:016x}"))
+}
+
+fn parse_hex_u64(v: &Value, what: &str) -> Result<u64> {
+    let s = v.as_str()?;
+    u64::from_str_radix(s, 16)
+        .map_err(|_| Error::Checkpoint(format!("{what}: bad hex u64 {s:?}")))
+}
+
+fn hex_f64(v: f64) -> Value {
+    hex_u64(v.to_bits())
+}
+
+fn parse_hex_f64(v: &Value, what: &str) -> Result<f64> {
+    Ok(f64::from_bits(parse_hex_u64(v, what)?))
+}
+
+/// `(state, inc, spare_normal)` RNG parts ⇄ JSON (see [`crate::rng::Pcg32::to_parts`]).
+fn rng_to_json(parts: (u64, u64, Option<f64>)) -> Value {
+    Value::obj(vec![
+        ("state", hex_u64(parts.0)),
+        ("inc", hex_u64(parts.1)),
+        ("spare_bits", match parts.2 {
+            Some(z) => hex_f64(z),
+            None => Value::Null,
+        }),
+    ])
+}
+
+fn rng_from_json(v: &Value, what: &str) -> Result<(u64, u64, Option<f64>)> {
+    let state = parse_hex_u64(v.req("state")?, what)?;
+    let inc = parse_hex_u64(v.req("inc")?, what)?;
+    let spare = match v.req("spare_bits")? {
+        Value::Null => None,
+        bits => Some(parse_hex_f64(bits, what)?),
+    };
+    Ok((state, inc, spare))
+}
+
+// ---------------------------------------------------------------------------
+// RunCheckpoint
+// ---------------------------------------------------------------------------
+
+/// Complete run state at one recovery point. See module docs for the
+/// on-disk format; [`RunCheckpoint::save`]/[`RunCheckpoint::load`] are the
+/// codec, [`Chain`] manages the retained generations.
+#[derive(Clone, Debug)]
+pub struct RunCheckpoint {
+    /// Run identity (schedule/policy/seed/corpus/batch/steps-scale) — a
+    /// resume against a different configuration is rejected up front
+    /// instead of silently diverging.
+    pub fingerprint: Value,
+    pub global_step: usize,
+    pub tokens_seen: usize,
+    pub est_flops: f64,
+    /// Segment index (`stageN`) the run was in when captured.
+    pub segment: usize,
+    /// Steps already completed *within* the current segment — the policy
+    /// observation cadence (`arch_step`) resumes from here.
+    pub local_step: usize,
+    /// Boundary-surgery RNG (constant during a segment; advances only at
+    /// expansion boundaries).
+    pub surgery_rng: (u64, u64, Option<f64>),
+    /// The batcher's draw cursor; the token stream itself is rebuilt
+    /// deterministically from the fingerprinted corpus parameters.
+    pub batcher_rng: (u64, u64, Option<f64>),
+    /// Name of the policy that produced `policy_state`.
+    pub policy: String,
+    /// Opaque policy snapshot ([`GrowthPolicy::snapshot`]).
+    pub policy_state: Value,
+    /// `"adam"` or `"sgd"`.
+    pub opt_kind: String,
+    /// Adam update count (bias correction); 0 for SGD.
+    pub adam_t: u64,
+    /// The last applied expansion plan (evidence for the timeline; `None`
+    /// before the first boundary).
+    pub last_plan: Option<Value>,
+    pub params: ParamStore,
+    pub adam_m: Option<ParamStore>,
+    pub adam_v: Option<ParamStore>,
+}
+
+impl RunCheckpoint {
+    pub fn config(&self) -> &ModelConfig {
+        self.params.config()
+    }
+
+    /// Rebuild the optimizer this checkpoint captured. Hyperparameters
+    /// come from the live `tcfg` (they are not run state); the moment
+    /// stores and update count come from the checkpoint.
+    pub fn to_optimizer(&self, tcfg: &TrainConfig) -> Result<Optimizer> {
+        let want = match tcfg.optimizer {
+            OptimKind::Adam => "adam",
+            OptimKind::Sgd => "sgd",
+        };
+        if want != self.opt_kind {
+            return Err(Error::Checkpoint(format!(
+                "checkpoint captured a {} optimizer but the run is configured for {want}",
+                self.opt_kind
+            )));
+        }
+        match self.opt_kind.as_str() {
+            "sgd" => Ok(Optimizer::Sgd { lr: tcfg.lr }),
+            "adam" => {
+                let (m, v) = match (&self.adam_m, &self.adam_v) {
+                    (Some(m), Some(v)) => (m.clone(), v.clone()),
+                    _ => {
+                        return Err(Error::Checkpoint(
+                            "adam checkpoint is missing moment sections".into(),
+                        ))
+                    }
+                };
+                Ok(Optimizer::Adam {
+                    lr: tcfg.lr,
+                    beta1: tcfg.beta1,
+                    beta2: tcfg.beta2,
+                    eps: tcfg.adam_eps,
+                    t: self.adam_t,
+                    m,
+                    v,
+                })
+            }
+            other => Err(Error::Checkpoint(format!("unknown optimizer kind {other:?}"))),
+        }
+    }
+
+    fn header(&self, sections: &[(String, u32, usize)]) -> Value {
+        Value::obj(vec![
+            ("fingerprint", self.fingerprint.clone()),
+            (
+                "state",
+                Value::obj(vec![
+                    ("global_step", Value::num(self.global_step as f64)),
+                    ("tokens_seen", Value::num(self.tokens_seen as f64)),
+                    ("est_flops_bits", hex_f64(self.est_flops)),
+                    ("segment", Value::num(self.segment as f64)),
+                    ("local_step", Value::num(self.local_step as f64)),
+                ]),
+            ),
+            ("config", self.params.config().to_json()),
+            (
+                "rng",
+                Value::obj(vec![
+                    ("surgery", rng_to_json(self.surgery_rng)),
+                    ("batcher", rng_to_json(self.batcher_rng)),
+                ]),
+            ),
+            (
+                "policy",
+                Value::obj(vec![
+                    ("name", Value::str(self.policy.clone())),
+                    ("state", self.policy_state.clone()),
+                ]),
+            ),
+            (
+                "optimizer",
+                Value::obj(vec![
+                    ("kind", Value::str(self.opt_kind.clone())),
+                    ("t", hex_u64(self.adam_t)),
+                ]),
+            ),
+            ("last_plan", self.last_plan.clone().unwrap_or(Value::Null)),
+            (
+                "sections",
+                Value::Arr(
+                    sections
+                        .iter()
+                        .map(|(name, crc, bytes)| {
+                            Value::obj(vec![
+                                ("name", Value::str(name.clone())),
+                                ("crc32", Value::num(*crc as f64)),
+                                ("bytes", Value::num(*bytes as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Serialize into the `TXCK` container and write it atomically
+    /// (tmp + fsync + rename + parent-dir fsync). Returns the byte size.
+    /// Fault points `ckpt_mid_write` / `ckpt_pre_rename` sit inside
+    /// ([`crate::faults`]) for the crash-recovery tests.
+    pub fn save(&self, path: &str) -> Result<u64> {
+        use std::io::Write;
+
+        let mut stores: Vec<(&str, &ParamStore)> = vec![("params", &self.params)];
+        if let Some(m) = &self.adam_m {
+            stores.push(("adam_m", m));
+        }
+        if let Some(v) = &self.adam_v {
+            stores.push(("adam_v", v));
+        }
+
+        let mut payload = Vec::new();
+        let mut sections = Vec::new();
+        for (name, store) in &stores {
+            let start = payload.len();
+            for t in store.tensors() {
+                for v in t.data() {
+                    payload.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            let body = &payload[start..];
+            sections.push((name.to_string(), checksum::crc32(body), body.len()));
+        }
+
+        let header = self.header(&sections).to_string().into_bytes();
+        let mut doc = Vec::with_capacity(4 + 4 + 8 + 4 + header.len() + payload.len());
+        doc.extend_from_slice(MAGIC);
+        doc.extend_from_slice(&VERSION.to_le_bytes());
+        doc.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        doc.extend_from_slice(&checksum::crc32(&header).to_le_bytes());
+        doc.extend_from_slice(&header);
+        doc.extend_from_slice(&payload);
+
+        let tmp = format!("{path}.tmp");
+        let io = |e: std::io::Error| Error::io(&tmp, e);
+        {
+            let mut f = std::fs::File::create(&tmp).map_err(io)?;
+            // two-phase write with the mid-write fault point between: an
+            // injected crash here leaves a torn tmp file on disk, which the
+            // chain must ignore and the checksum must reject
+            let half = doc.len() / 2;
+            f.write_all(&doc[..half]).map_err(io)?;
+            f.flush().map_err(io)?;
+            crate::faults::fault_point("ckpt_mid_write");
+            f.write_all(&doc[half..]).map_err(io)?;
+            // the durability point: file contents reach disk before the
+            // rename can expose them under the real name
+            f.sync_all().map_err(io)?;
+        }
+        crate::faults::fault_point("ckpt_pre_rename");
+        std::fs::rename(&tmp, path).map_err(|e| Error::io(path, e))?;
+        // fsync the directory so the rename itself survives power loss
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if let Ok(d) = std::fs::File::open(parent) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(doc.len() as u64)
+    }
+
+    /// Parse and checksum-validate a `TXCK` container. Any torn write,
+    /// truncation or bit flip surfaces as `Error::Checkpoint` — the chain
+    /// treats that as "this generation is bad, try the previous one".
+    pub fn load(path: &str) -> Result<RunCheckpoint> {
+        let doc = std::fs::read(path).map_err(|e| Error::io(path, e))?;
+        let bad = |msg: String| Error::Checkpoint(format!("{path}: {msg}"));
+        if doc.len() < 20 || &doc[0..4] != MAGIC {
+            return Err(bad("not a TXCK checkpoint (bad magic or truncated)".into()));
+        }
+        let version = u32::from_le_bytes(doc[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(bad(format!("unsupported version {version} (expected {VERSION})")));
+        }
+        let header_len = u64::from_le_bytes(doc[8..16].try_into().unwrap()) as usize;
+        let header_crc = u32::from_le_bytes(doc[16..20].try_into().unwrap());
+        let header_end = 20usize
+            .checked_add(header_len)
+            .filter(|&e| e <= doc.len())
+            .ok_or_else(|| bad("truncated header".into()))?;
+        let header_bytes = &doc[20..header_end];
+        if checksum::crc32(header_bytes) != header_crc {
+            return Err(bad("header checksum mismatch".into()));
+        }
+        let header = Value::parse(
+            std::str::from_utf8(header_bytes).map_err(|_| bad("header is not UTF-8".into()))?,
+        )?;
+
+        let config = ModelConfig::from_json(header.req("config")?)?;
+        let state = header.req("state")?;
+        let rng = header.req("rng")?;
+        let pol = header.req("policy")?;
+        let optv = header.req("optimizer")?;
+
+        // payload sections, each validated against its own checksum
+        let mut cursor = header_end;
+        let mut params = None;
+        let mut adam_m = None;
+        let mut adam_v = None;
+        for sec in header.req("sections")?.as_arr()? {
+            let name = sec.req("name")?.as_str()?;
+            let bytes = sec.req("bytes")?.as_usize()?;
+            let crc = sec.req("crc32")?.as_i64()? as u32;
+            let end = cursor
+                .checked_add(bytes)
+                .filter(|&e| e <= doc.len())
+                .ok_or_else(|| bad(format!("section '{name}' truncated")))?;
+            let body = &doc[cursor..end];
+            cursor = end;
+            if checksum::crc32(body) != crc {
+                return Err(bad(format!("section '{name}' checksum mismatch")));
+            }
+            let mut store = ParamStore::zeros(&config);
+            if bytes != store.num_scalars() * 4 {
+                return Err(bad(format!(
+                    "section '{name}' holds {bytes} bytes but the config needs {}",
+                    store.num_scalars() * 4
+                )));
+            }
+            let mut off = 0;
+            for t in store.tensors_mut() {
+                for v in t.data_mut() {
+                    *v = f32::from_le_bytes(body[off..off + 4].try_into().unwrap());
+                    off += 4;
+                }
+            }
+            match name {
+                "params" => params = Some(store),
+                "adam_m" => adam_m = Some(store),
+                "adam_v" => adam_v = Some(store),
+                other => return Err(bad(format!("unknown section '{other}'"))),
+            }
+        }
+        if cursor != doc.len() {
+            return Err(bad(format!("{} trailing bytes after sections", doc.len() - cursor)));
+        }
+        let params = params.ok_or_else(|| bad("missing 'params' section".into()))?;
+
+        Ok(RunCheckpoint {
+            fingerprint: header.req("fingerprint")?.clone(),
+            global_step: state.req("global_step")?.as_usize()?,
+            tokens_seen: state.req("tokens_seen")?.as_usize()?,
+            est_flops: parse_hex_f64(state.req("est_flops_bits")?, "est_flops")?,
+            segment: state.req("segment")?.as_usize()?,
+            local_step: state.req("local_step")?.as_usize()?,
+            surgery_rng: rng_from_json(rng.req("surgery")?, "surgery rng")?,
+            batcher_rng: rng_from_json(rng.req("batcher")?, "batcher rng")?,
+            policy: pol.req("name")?.as_str()?.to_string(),
+            policy_state: pol.req("state")?.clone(),
+            opt_kind: optv.req("kind")?.as_str()?.to_string(),
+            adam_t: parse_hex_u64(optv.req("t")?, "adam t")?,
+            last_plan: match header.req("last_plan")? {
+                Value::Null => None,
+                plan => Some(plan.clone()),
+            },
+            params,
+            adam_m,
+            adam_v,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CkptHook — the training-loop attachment point
+// ---------------------------------------------------------------------------
+
+/// Checkpoint writer threaded through `train_segment` / the coordinator.
+///
+/// Owns the generation [`Chain`] plus the per-segment context the inner
+/// loop can't see (run fingerprint, segment index, boundary-surgery RNG
+/// snapshot, last applied plan). The coordinator refreshes the segment
+/// fields before each segment and forces a write at every expansion
+/// boundary; the training loop calls [`CkptHook::maybe_write`] after each
+/// completed optimizer step.
+pub struct CkptHook {
+    pub chain: Chain,
+    /// Write every N global steps (0 = only forced boundary checkpoints).
+    pub every: usize,
+    pub fingerprint: Value,
+    pub segment: usize,
+    pub surgery_rng: (u64, u64, Option<f64>),
+    pub last_plan: Option<Value>,
+    /// Segment-local step to resume the next segment's loop at (consumed
+    /// once by `train_segment`; 0 for fresh segments).
+    resume_local_step: usize,
+}
+
+impl CkptHook {
+    pub fn new(chain: Chain, every: usize, fingerprint: Value) -> CkptHook {
+        CkptHook {
+            chain,
+            every,
+            fingerprint,
+            segment: 0,
+            surgery_rng: (0, 0, None),
+            last_plan: None,
+            resume_local_step: 0,
+        }
+    }
+
+    /// Arm the next `train_segment` call to start its local step counter
+    /// mid-segment (the resume path).
+    pub fn set_resume_local_step(&mut self, step: usize) {
+        self.resume_local_step = step;
+    }
+
+    /// One-shot consumption by `train_segment` at loop entry.
+    pub fn take_resume_local_step(&mut self) -> usize {
+        std::mem::take(&mut self.resume_local_step)
+    }
+
+    /// Interval trigger: write when `--checkpoint-every` divides the
+    /// global step. Called after the optimizer update and state bump, so
+    /// the captured state is "step N fully applied, step N+1 not started".
+    #[allow(clippy::too_many_arguments)]
+    pub fn maybe_write(
+        &mut self,
+        local_step: usize,
+        params: &ParamStore,
+        opt: &Optimizer,
+        batcher: &Batcher,
+        policy: &dyn GrowthPolicy,
+        state: &TrainState,
+        logger: &mut RunLogger,
+    ) -> Result<()> {
+        if self.every == 0 || state.global_step % self.every != 0 {
+            return Ok(());
+        }
+        self.write("interval", local_step, params, opt, batcher, policy, state, logger)
+    }
+
+    /// Capture and durably write one generation, then log/instrument it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn write(
+        &mut self,
+        trigger: &str,
+        local_step: usize,
+        params: &ParamStore,
+        opt: &Optimizer,
+        batcher: &Batcher,
+        policy: &dyn GrowthPolicy,
+        state: &TrainState,
+        logger: &mut RunLogger,
+    ) -> Result<()> {
+        let (opt_kind, adam_t, adam_m, adam_v) = match opt {
+            Optimizer::Sgd { .. } => ("sgd", 0, None, None),
+            Optimizer::Adam { t, m, v, .. } => ("adam", *t, Some(m.clone()), Some(v.clone())),
+        };
+        let ck = RunCheckpoint {
+            fingerprint: self.fingerprint.clone(),
+            global_step: state.global_step,
+            tokens_seen: state.tokens_seen,
+            est_flops: state.est_flops,
+            segment: self.segment,
+            local_step,
+            surgery_rng: self.surgery_rng,
+            batcher_rng: batcher.rng_parts(),
+            policy: policy.name().to_string(),
+            policy_state: policy.snapshot(),
+            opt_kind: opt_kind.to_string(),
+            adam_t,
+            last_plan: self.last_plan.clone(),
+            params: params.clone(),
+            adam_m,
+            adam_v,
+        };
+        let timer = Timer::start();
+        let (gen, bytes) = self.chain.save(&ck)?;
+        let write_ms = timer.ms();
+
+        let reg = crate::obs::global();
+        reg.counter("texpand_checkpoints_total", "Checkpoint generations written").inc();
+        reg.histogram(
+            "texpand_checkpoint_write_ms",
+            "Checkpoint serialize+fsync+rename duration (ms)",
+            &crate::obs::LATENCY_MS_BOUNDS,
+        )
+        .observe(write_ms);
+        logger.event(
+            "checkpoint",
+            vec![
+                ("gen", Value::num(gen as f64)),
+                ("trigger", Value::str(trigger)),
+                ("global_step", Value::num(state.global_step as f64)),
+                ("segment", Value::num(self.segment as f64)),
+                ("bytes", Value::num(bytes as f64)),
+                ("write_ms", Value::num(write_ms)),
+            ],
+        );
+        // a recovery point that isn't on disk when the crash comes is no
+        // recovery point: flush the log with the checkpoint
+        logger.flush();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig { layers: 1, hidden: 8, heads: 2, k: 4, v: 4, mlp: 16, seq: 8, vocab: 32 }
+    }
+
+    fn sample_checkpoint() -> RunCheckpoint {
+        let cfg = tiny_cfg();
+        let mut rng = Pcg32::seeded(11);
+        let params = ParamStore::init(&cfg, &mut rng, 0.02);
+        let m = ParamStore::init(&cfg, &mut rng, 0.001);
+        let v = ParamStore::init(&cfg, &mut rng, 0.0001);
+        let mut surgery = Pcg32::seeded(3);
+        let _ = surgery.normal(); // populate the spare so it round-trips
+        RunCheckpoint {
+            fingerprint: Value::obj(vec![("schedule", Value::str("t"))]),
+            global_step: 123,
+            tokens_seen: 4567,
+            est_flops: 8.9e12,
+            segment: 2,
+            local_step: 17,
+            surgery_rng: surgery.to_parts(),
+            batcher_rng: Pcg32::new(9, 0xBA7C).to_parts(),
+            policy: "fixed".into(),
+            policy_state: Value::obj(vec![("fired", Value::num(1.0))]),
+            opt_kind: "adam".into(),
+            adam_t: 123,
+            last_plan: Some(Value::obj(vec![("ops", Value::Arr(vec![]))])),
+            params,
+            adam_m: Some(m),
+            adam_v: Some(v),
+        }
+    }
+
+    fn tmp_path(tag: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("texpand-ckpt-{}-{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("ck.txck").to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn round_trip_is_bit_identical() {
+        let ck = sample_checkpoint();
+        let path = tmp_path("roundtrip");
+        ck.save(&path).unwrap();
+        let back = RunCheckpoint::load(&path).unwrap();
+        assert_eq!(back.global_step, ck.global_step);
+        assert_eq!(back.tokens_seen, ck.tokens_seen);
+        assert_eq!(back.est_flops.to_bits(), ck.est_flops.to_bits());
+        assert_eq!(back.segment, ck.segment);
+        assert_eq!(back.local_step, ck.local_step);
+        assert_eq!(back.surgery_rng, ck.surgery_rng);
+        assert_eq!(back.batcher_rng, ck.batcher_rng);
+        assert_eq!(back.policy, ck.policy);
+        assert_eq!(back.policy_state.to_string(), ck.policy_state.to_string());
+        assert_eq!(back.opt_kind, ck.opt_kind);
+        assert_eq!(back.adam_t, ck.adam_t);
+        assert_eq!(
+            back.last_plan.as_ref().map(|p| p.to_string()),
+            ck.last_plan.as_ref().map(|p| p.to_string())
+        );
+        for (want, got) in [
+            (&ck.params, &back.params),
+            (ck.adam_m.as_ref().unwrap(), back.adam_m.as_ref().unwrap()),
+            (ck.adam_v.as_ref().unwrap(), back.adam_v.as_ref().unwrap()),
+        ] {
+            assert_eq!(want.config(), got.config());
+            for ((sa, ta), (_, tb)) in want.iter().zip(got.iter()) {
+                for (a, b) in ta.data().iter().zip(tb.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "param {} differs", sa.name);
+                }
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sgd_checkpoint_omits_moment_sections() {
+        let mut ck = sample_checkpoint();
+        ck.opt_kind = "sgd".into();
+        ck.adam_t = 0;
+        ck.adam_m = None;
+        ck.adam_v = None;
+        let path = tmp_path("sgd");
+        ck.save(&path).unwrap();
+        let back = RunCheckpoint::load(&path).unwrap();
+        assert!(back.adam_m.is_none() && back.adam_v.is_none());
+        let opt = back.to_optimizer(&TrainConfig { optimizer: OptimKind::Sgd, ..Default::default() }).unwrap();
+        assert!(matches!(opt, Optimizer::Sgd { .. }));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn to_optimizer_rejects_kind_mismatch() {
+        let ck = sample_checkpoint(); // adam
+        let sgd_cfg = TrainConfig { optimizer: OptimKind::Sgd, ..Default::default() };
+        assert!(ck.to_optimizer(&sgd_cfg).is_err());
+        let adam = ck.to_optimizer(&TrainConfig::default()).unwrap();
+        match adam {
+            Optimizer::Adam { t, .. } => assert_eq!(t, 123),
+            _ => panic!("expected adam"),
+        }
+    }
+
+    #[test]
+    fn every_corrupted_byte_region_is_detected() {
+        let ck = sample_checkpoint();
+        let path = tmp_path("corrupt");
+        ck.save(&path).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        // flip one bit in several structurally distinct regions: magic,
+        // version, header json, each payload section
+        for pos in [0usize, 5, 25, clean.len() / 2, clean.len() - 1] {
+            let mut bad = clean.clone();
+            bad[pos] ^= 0x10;
+            std::fs::write(&path, &bad).unwrap();
+            assert!(
+                RunCheckpoint::load(&path).is_err(),
+                "bit flip at byte {pos} loaded successfully"
+            );
+        }
+        // truncation at any boundary is also rejected
+        for cut in [3usize, 19, clean.len() / 3, clean.len() - 1] {
+            std::fs::write(&path, &clean[..cut]).unwrap();
+            assert!(RunCheckpoint::load(&path).is_err(), "truncation to {cut} bytes loaded");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

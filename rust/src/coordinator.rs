@@ -39,8 +39,11 @@
 //! cases: [`Coordinator::branch`] (model families) reuses the boundary
 //! machinery without the schedule.
 
+use std::path::Path;
+
 use crate::autodiff::ExecBackend;
-use crate::config::{GrowthSchedule, ModelConfig, TrainConfig};
+use crate::ckpt::{Chain, CkptHook};
+use crate::config::{GrowthSchedule, ModelConfig, OptimKind, TrainConfig};
 use crate::data::{Batch, Batcher, CorpusKind};
 use crate::error::{Error, Result};
 use crate::expand::{ExpandOptions, ExpansionPlan};
@@ -68,6 +71,14 @@ pub struct CoordinatorOptions {
     pub corpus_len: usize,
     /// Initializer std for unconstrained expansion parameters.
     pub expand_init_std: f32,
+    /// Write a durable [`crate::ckpt`] run checkpoint every N global steps
+    /// (0 = boundary checkpoints only, and only when resume is requested).
+    pub checkpoint_every: usize,
+    /// Generations retained in the checkpoint chain.
+    pub checkpoint_keep: usize,
+    /// Resume from the newest valid checkpoint generation under the run
+    /// dir instead of starting fresh.
+    pub resume: bool,
 }
 
 impl Default for CoordinatorOptions {
@@ -79,6 +90,9 @@ impl Default for CoordinatorOptions {
             corpus: CorpusKind::MarkovText,
             corpus_len: 200_000,
             expand_init_std: 0.02,
+            checkpoint_every: 0,
+            checkpoint_keep: 3,
+            resume: false,
         }
     }
 }
@@ -174,6 +188,35 @@ impl Coordinator {
         Ok(())
     }
 
+    /// The run-identity fingerprint written into every checkpoint: the
+    /// inputs that determine the deterministic training trajectory.
+    /// Resuming under any different value would silently diverge from the
+    /// interrupted run, so [`Coordinator::run_with_policy`] compares this
+    /// against the stored fingerprint and rejects mismatches up front.
+    /// `seed` and `steps_scale` are serialized as hex bit patterns so the
+    /// comparison is exact, not Display-rounded.
+    fn fingerprint(&self, policy_name: &str) -> Value {
+        Value::obj(vec![
+            ("schedule", Value::str(self.schedule.name.clone())),
+            ("policy", Value::str(policy_name)),
+            ("seed", Value::str(format!("{:016x}", self.tcfg.seed))),
+            (
+                "optimizer",
+                Value::str(match self.tcfg.optimizer {
+                    OptimKind::Adam => "adam",
+                    OptimKind::Sgd => "sgd",
+                }),
+            ),
+            ("corpus", Value::str(self.opts.corpus.name())),
+            ("corpus_len", Value::num(self.opts.corpus_len as f64)),
+            ("batch", Value::num(self.schedule.batch as f64)),
+            (
+                "steps_scale_bits",
+                Value::str(format!("{:016x}", self.opts.steps_scale.to_bits())),
+            ),
+        ])
+    }
+
     /// Resolve the executable for a (possibly policy-grown) architecture.
     /// Artifact backends look the segment up in the manifest — and fail
     /// loudly if the policy's architecture drifted from what was compiled;
@@ -222,19 +265,102 @@ impl Coordinator {
         run_name: &str,
         policy: &mut dyn GrowthPolicy,
     ) -> Result<RunSummary> {
+        // durable-run setup happens BEFORE the logger opens its append
+        // handles: a resume must rewind loss.csv first, or the logger
+        // would keep appending to the renamed-away inode
+        let run_dir = format!("{run_root}/{run_name}");
+        let ckpt_active = self.opts.checkpoint_every > 0 || self.opts.resume;
+        let mut ckpt_hook: Option<CkptHook> = None;
+        let mut resumed: Option<(u64, crate::ckpt::RunCheckpoint)> = None;
+        if ckpt_active {
+            let chain =
+                Chain::open(&Path::new(&run_dir).join("ckpt"), self.opts.checkpoint_keep)?;
+            let fingerprint = self.fingerprint(policy.name());
+            if self.opts.resume {
+                match chain.load_latest_valid()? {
+                    Some((gen, ck)) => {
+                        if ck.fingerprint.to_string() != fingerprint.to_string() {
+                            return Err(Error::Checkpoint(format!(
+                                "resume rejected: checkpoint gen {gen} was written by a run \
+                                 with identity {} but this invocation is {} — a resume under \
+                                 different inputs would silently diverge",
+                                ck.fingerprint.to_string(),
+                                fingerprint.to_string()
+                            )));
+                        }
+                        rewind_loss_csv(&run_dir, ck.global_step)?;
+                        resumed = Some((gen, ck));
+                    }
+                    None => eprintln!(
+                        "warning: --resume requested but no checkpoint exists under \
+                         {run_dir}/ckpt; starting fresh"
+                    ),
+                }
+            } else {
+                // a fresh run must not leave stale generations behind for
+                // a later --resume to pick up
+                chain.reset()?;
+            }
+            ckpt_hook = Some(CkptHook::new(chain, self.opts.checkpoint_every, fingerprint));
+        }
         let mut logger = RunLogger::create(run_root, run_name)?;
         let first_cfg = self.schedule.stages[0].config;
-        let mut rng = Pcg32::seeded(self.tcfg.seed);
-        let mut params = ParamStore::init(&first_cfg, &mut rng, 0.02);
-        let mut opt = Optimizer::new(&self.tcfg, &params);
-        let mut batcher = Batcher::from_corpus(
-            self.opts.corpus,
-            self.opts.corpus_len,
-            first_cfg.vocab,
-            first_cfg.seq,
-            self.schedule.batch,
-            self.tcfg.seed ^ 0xC0DE,
-        )?;
+        // evidence for the events log; also keeps resume-state reporting
+        // alive after `resumed` is consumed by the init below
+        let resume_meta =
+            resumed.as_ref().map(|(gen, ck)| (*gen, ck.global_step, ck.segment, ck.local_step));
+
+        // run state: either the deterministic fresh-start path (unchanged
+        // from before checkpointing existed, so non-resumed runs are
+        // bit-identical to older builds) or a full restore from the
+        // newest valid checkpoint generation
+        let (mut rng, mut params, mut opt, mut batcher, mut state, mut segment) = match resumed {
+            Some((_, ck)) => {
+                policy.restore(&ck.policy_state)?;
+                let rng = Pcg32::from_parts(
+                    ck.surgery_rng.0,
+                    ck.surgery_rng.1,
+                    ck.surgery_rng.2,
+                );
+                let opt = ck.to_optimizer(&self.tcfg)?;
+                // seq/vocab are invariant under every growth op, so the
+                // stage-0 geometry rebuilds the same token stream the
+                // interrupted run was drawing from; only the draw cursor
+                // needs restoring
+                let mut batcher = Batcher::from_corpus(
+                    self.opts.corpus,
+                    self.opts.corpus_len,
+                    first_cfg.vocab,
+                    first_cfg.seq,
+                    self.schedule.batch,
+                    self.tcfg.seed ^ 0xC0DE,
+                )?;
+                batcher.restore_rng(ck.batcher_rng.0, ck.batcher_rng.1, ck.batcher_rng.2);
+                let mut state = TrainState::new();
+                state.global_step = ck.global_step;
+                state.tokens_seen = ck.tokens_seen;
+                state.est_flops = ck.est_flops;
+                if let Some(h) = ckpt_hook.as_mut() {
+                    h.last_plan = ck.last_plan.clone();
+                    h.set_resume_local_step(ck.local_step);
+                }
+                (rng, ck.params, opt, batcher, state, ck.segment)
+            }
+            None => {
+                let mut rng = Pcg32::seeded(self.tcfg.seed);
+                let params = ParamStore::init(&first_cfg, &mut rng, 0.02);
+                let opt = Optimizer::new(&self.tcfg, &params);
+                let batcher = Batcher::from_corpus(
+                    self.opts.corpus,
+                    self.opts.corpus_len,
+                    first_cfg.vocab,
+                    first_cfg.seq,
+                    self.schedule.batch,
+                    self.tcfg.seed ^ 0xC0DE,
+                )?;
+                (rng, params, opt, batcher, TrainState::new(), 0)
+            }
+        };
         logger.event(
             "run_start",
             vec![
@@ -246,20 +372,42 @@ impl Coordinator {
                 ("stages", Value::num(self.schedule.stages.len() as f64)),
             ],
         );
+        if let Some((gen, global_step, seg, local_step)) = resume_meta {
+            println!(
+                "resuming from checkpoint gen {gen}: global step {global_step}, \
+                 segment {seg} (+{local_step} local steps)"
+            );
+            logger.event(
+                "resume",
+                vec![
+                    ("gen", Value::num(gen as f64)),
+                    ("global_step", Value::num(global_step as f64)),
+                    ("segment", Value::num(seg as f64)),
+                    ("local_step", Value::num(local_step as f64)),
+                ],
+            );
+            logger.flush();
+        }
         // one fixed held-out probe batch serves boundary preservation
         // checks, policy eval observations, and the final eval (stable
         // across calls by construction, so this matches the old per-use
-        // regeneration bit for bit)
+        // regeneration bit for bit; an independent stream, so a resumed
+        // run regenerates it identically)
         let probe = batcher.probe(self.tcfg.seed ^ 0xE7A1);
 
-        let mut state = TrainState::new();
         let mut stage_reports = Vec::new();
         let mut boundary_reports = Vec::new();
-        let mut segment = 0usize;
 
         let final_exec = loop {
             let seg_name = format!("stage{segment}");
             let exec = self.load_exec(&seg_name, params.config())?;
+            if let Some(h) = ckpt_hook.as_mut() {
+                // the hook captures segment context at write time; the
+                // surgery RNG only advances at boundaries, so its parts
+                // here are exactly what a restored segment needs
+                h.segment = segment;
+                h.surgery_rng = rng.to_parts();
+            }
             let (report, end) = train_segment(
                 self.backend.as_ref(),
                 &exec,
@@ -271,6 +419,7 @@ impl Coordinator {
                 &mut state,
                 policy,
                 Some(&probe),
+                ckpt_hook.as_mut(),
             )?;
             stage_reports.push(report);
             if self.opts.save_checkpoints {
@@ -301,6 +450,26 @@ impl Coordinator {
                         boundary_reports.push(report);
                     }
                     segment += 1;
+                    // forced checkpoint at every expansion boundary
+                    // (identity plans too — they also end a segment):
+                    // the post-surgery params, expanded Adam moments and
+                    // advanced surgery RNG are exactly the state a crash
+                    // during the next segment must not lose
+                    if let Some(h) = ckpt_hook.as_mut() {
+                        h.segment = segment;
+                        h.surgery_rng = rng.to_parts();
+                        h.last_plan = Some(plan.to_json());
+                        h.write(
+                            "boundary",
+                            0,
+                            &params,
+                            &opt,
+                            &batcher,
+                            &*policy,
+                            &state,
+                            &mut logger,
+                        )?;
+                    }
                 }
             }
         };
@@ -531,4 +700,39 @@ impl Coordinator {
         let eval = eval_loss(self.backend.as_ref(), &exec, &params, probe)?;
         Ok((params, report, eval))
     }
+}
+
+/// Trim `loss.csv` back to the checkpointed step so a resumed run appends
+/// a continuation instead of duplicating (or interleaving with) rows the
+/// crashed run wrote past its last checkpoint. Keeps the header plus every
+/// *complete* 5-column row whose step is ≤ `global_step`; a partially
+/// flushed final line — the torn-write crash case — fails the column
+/// count and is dropped. The rewrite itself is tmp+rename atomic, so a
+/// crash during the rewind cannot lose the file either.
+fn rewind_loss_csv(run_dir: &str, global_step: usize) -> Result<()> {
+    let path = format!("{run_dir}/loss.csv");
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        // no loss.csv yet (crash before the first flush): nothing to trim
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(Error::io(&path, e)),
+    };
+    let mut kept = String::with_capacity(text.len());
+    for (i, line) in text.lines().enumerate() {
+        let keep = if i == 0 {
+            // RunLogger writes the header before any row on a fresh file
+            line == "global_step,stage,loss,tokens_seen,wall_ms"
+        } else {
+            let cols: Vec<&str> = line.split(',').collect();
+            cols.len() == 5 && cols[0].parse::<usize>().is_ok_and(|s| s <= global_step)
+        };
+        if keep {
+            kept.push_str(line);
+            kept.push('\n');
+        }
+    }
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, kept.as_bytes()).map_err(|e| Error::io(&tmp, e))?;
+    std::fs::rename(&tmp, &path).map_err(|e| Error::io(&path, e))?;
+    Ok(())
 }

@@ -231,6 +231,20 @@ impl Batcher {
         Batch { tokens, targets }
     }
 
+    /// Snapshot the draw RNG for checkpointing (the stream itself is
+    /// reconstructed deterministically from the corpus parameters at
+    /// resume, so the cursor state *is* the whole mutable state).
+    pub fn rng_parts(&self) -> (u64, u64, Option<f64>) {
+        self.rng.to_parts()
+    }
+
+    /// Restore the draw RNG from [`Batcher::rng_parts`] output: the next
+    /// [`Batcher::next`] yields exactly the batch the snapshotted batcher
+    /// would have yielded.
+    pub fn restore_rng(&mut self, state: u64, inc: u64, spare_normal: Option<f64>) {
+        self.rng = Pcg32::from_parts(state, inc, spare_normal);
+    }
+
     /// A held-out probe batch drawn from an independent stream position
     /// generator (stable across calls — used for preservation checks and
     /// eval loss so train/probe randomness never interleave).
@@ -362,6 +376,20 @@ mod tests {
         assert_eq!(p1.tokens, p2.tokens);
         // probe with a different seed differs
         assert_ne!(p1.tokens, a.probe(6).tokens);
+    }
+
+    #[test]
+    fn batcher_rng_round_trip_resumes_batch_stream() {
+        let stream: Vec<u32> = (0..1000).map(|i| i % 50).collect();
+        let mut live = Batcher::new(stream.clone(), 16, 2, 9).unwrap();
+        let _ = live.next();
+        let _ = live.next();
+        let (state, inc, spare) = live.rng_parts();
+        let mut restored = Batcher::new(stream, 16, 2, 9).unwrap();
+        restored.restore_rng(state, inc, spare);
+        for _ in 0..8 {
+            assert_eq!(live.next().tokens, restored.next().tokens);
+        }
     }
 
     #[test]

@@ -1,0 +1,86 @@
+//! Env-gated crash injection for the durability tests (DESIGN.md §16.5).
+//!
+//! `TEXPAND_FAULT=<site>:<nth>` makes the `nth` (1-based) hit of the named
+//! [`fault_point`] abort the process — `std::process::abort()`, no
+//! destructors, no buffered-writer flush — simulating a SIGKILL/power-cut
+//! at an exactly reproducible program point. Sites currently wired:
+//!
+//! * `train_step`      — top of every optimizer step (coordinator loop)
+//! * `ckpt_mid_write`  — inside the checkpoint tmp-file write, after the
+//!   header+partial payload have been flushed (a torn file exists on disk)
+//! * `ckpt_pre_rename` — tmp file complete and fsynced, rename not issued
+//!
+//! The variable is read once per process (the first `fault_point` call)
+//! and hit counts are per-site globals, so a single env setting arms
+//! exactly one crash per run. Unset, the fast path is one relaxed atomic
+//! load — cheap enough to sit on the training hot path.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Parsed `TEXPAND_FAULT` value: which site fires, on which hit.
+struct Armed {
+    site: String,
+    nth: u64,
+}
+
+fn armed() -> Option<&'static Armed> {
+    static ARMED: OnceLock<Option<Armed>> = OnceLock::new();
+    ARMED
+        .get_or_init(|| {
+            let spec = std::env::var("TEXPAND_FAULT").ok()?;
+            let (site, nth) = spec.split_once(':')?;
+            let nth: u64 = nth.parse().ok().filter(|&n| n > 0)?;
+            Some(Armed { site: site.to_string(), nth })
+        })
+        .as_ref()
+}
+
+/// Fast pre-check: 0 = unknown, 1 = disarmed (env absent/unparseable),
+/// 2 = armed. Keeps the common no-fault path to one atomic load after
+/// the first call.
+static STATE: AtomicU8 = AtomicU8::new(0);
+
+/// A named crash-injection point. No-op unless `TEXPAND_FAULT=<site>:<nth>`
+/// names this site, in which case the `nth` hit aborts the process.
+pub fn fault_point(site: &str) {
+    match STATE.load(Ordering::Relaxed) {
+        1 => return,
+        2 => {}
+        _ => {
+            let s = if armed().is_some() { 2 } else { 1 };
+            STATE.store(s, Ordering::Relaxed);
+            if s == 1 {
+                return;
+            }
+        }
+    }
+    let Some(a) = armed() else { return };
+    if a.site != site {
+        return;
+    }
+    static HITS: AtomicU64 = AtomicU64::new(0);
+    let hit = HITS.fetch_add(1, Ordering::Relaxed) + 1;
+    if hit == a.nth {
+        eprintln!("TEXPAND_FAULT: aborting at fault point '{site}' (hit {hit})");
+        std::process::abort();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The abort path can't run in-process; what is testable here is that
+    // unarmed fault points are free of side effects and panic-free. The
+    // armed path is exercised by `rust/tests/integration_ckpt.rs`, which
+    // arms TEXPAND_FAULT on a spawned child binary.
+    #[test]
+    fn unarmed_fault_points_are_noops() {
+        for _ in 0..3 {
+            fault_point("train_step");
+            fault_point("ckpt_mid_write");
+            fault_point("nonexistent_site");
+        }
+    }
+}

@@ -14,7 +14,9 @@
 use std::collections::VecDeque;
 
 use crate::config::GrowthSchedule;
+use crate::error::{Error, Result};
 use crate::expand::ExpansionPlan;
+use crate::json::Value;
 
 use super::{scaled_steps, scaled_total, Decision, GrowthPolicy, PolicyCtx, TrainObs};
 
@@ -67,6 +69,28 @@ impl GrowthPolicy for FixedSchedule {
         } else {
             Decision::Continue
         }
+    }
+
+    // The only mutable state is which boundaries already fired; the plans
+    // themselves are rebuilt deterministically from the schedule at
+    // resume, so the snapshot is just the remaining-boundary count.
+    fn snapshot(&self) -> Value {
+        Value::obj(vec![("remaining", Value::num(self.boundaries.len() as f64))])
+    }
+
+    fn restore(&mut self, state: &Value) -> Result<()> {
+        let remaining = state.req("remaining")?.as_usize()?;
+        if remaining > self.boundaries.len() {
+            return Err(Error::Checkpoint(format!(
+                "fixed policy: checkpoint has {remaining} boundaries remaining but the \
+                 schedule only defines {}",
+                self.boundaries.len()
+            )));
+        }
+        while self.boundaries.len() > remaining {
+            self.boundaries.pop_front();
+        }
+        Ok(())
     }
 }
 
@@ -144,6 +168,27 @@ mod tests {
             .collect();
         assert_eq!(expand_at, vec![6, 10]);
         assert_eq!(*got.last().unwrap(), Decision::Stop);
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_mid_schedule() {
+        let s = three_stage();
+        let mut oracle = FixedSchedule::new(&s, 1.0);
+        // fire the first boundary (step 3), snapshot, then check a fresh
+        // restored policy replays the rest of the decision stream
+        let obs: Vec<(f32, Option<f32>)> = (0..3).map(|_| (1.0, None)).collect();
+        let pre = drive(&mut oracle, &obs);
+        assert!(matches!(pre[2], Decision::Expand(_)));
+        let snap = oracle.snapshot();
+
+        let mut resumed = FixedSchedule::new(&s, 1.0);
+        resumed.restore(&snap).unwrap();
+        assert_eq!(resumed.boundaries.len(), 1);
+        // restore rejects a snapshot claiming more boundaries than exist
+        let mut tiny = FixedSchedule::new(&s, 1.0);
+        tiny.boundaries.pop_front();
+        tiny.boundaries.pop_front();
+        assert!(tiny.restore(&Value::obj(vec![("remaining", Value::num(9.0))])).is_err());
     }
 
     #[test]

@@ -20,8 +20,9 @@
 use crate::autodiff::loss_and_grads;
 use crate::config::{GrowthSchedule, PolicyConfig, TrainConfig};
 use crate::data::Batcher;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::expand::{candidate_ops, Expandable, ExpandOptions, ExpansionPlan, Init};
+use crate::json::Value;
 use crate::model;
 use crate::optim::{clip_global_norm, Optimizer};
 use crate::params::ParamStore;
@@ -237,6 +238,53 @@ impl GrowthPolicy for GreedyBranch {
             _ => Decision::Continue,
         }
     }
+
+    // Mutable state: the detector window, the probe-seed RNG, and the
+    // deadline re-arm latch. The RNG matters for bit-identical resume —
+    // each probe round draws its branch seed from it.
+    fn snapshot(&self) -> Value {
+        let (state, inc, spare) = self.rng.to_parts();
+        Value::obj(vec![
+            (
+                "evals",
+                Value::Arr(self.detector.evals().iter().map(|&e| Value::num(e as f64)).collect()),
+            ),
+            ("deadline_armed", Value::Bool(self.deadline_armed)),
+            ("last_arch_step", Value::num(self.last_arch_step as f64)),
+            (
+                "rng",
+                Value::obj(vec![
+                    ("state", Value::str(format!("{state:016x}"))),
+                    ("inc", Value::str(format!("{inc:016x}"))),
+                    ("spare_bits", match spare {
+                        Some(z) => Value::str(format!("{:016x}", z.to_bits())),
+                        None => Value::Null,
+                    }),
+                ]),
+            ),
+        ])
+    }
+
+    fn restore(&mut self, state: &Value) -> Result<()> {
+        self.detector.reset();
+        for e in state.req("evals")?.as_arr()? {
+            self.detector.push_eval(e.as_f64()? as f32);
+        }
+        self.deadline_armed = state.req("deadline_armed")?.as_bool()?;
+        self.last_arch_step = state.req("last_arch_step")?.as_usize()?;
+        let rng = state.req("rng")?;
+        let hex = |v: &Value| -> Result<u64> {
+            let s = v.as_str()?;
+            u64::from_str_radix(s, 16)
+                .map_err(|_| Error::Checkpoint(format!("greedy rng: bad hex {s:?}")))
+        };
+        let spare = match rng.req("spare_bits")? {
+            Value::Null => None,
+            bits => Some(f64::from_bits(hex(bits)?)),
+        };
+        self.rng = Pcg32::from_parts(hex(rng.req("state")?)?, hex(rng.req("inc")?)?, spare);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -345,6 +393,35 @@ mod tests {
                 assert_eq!(plan.ops().len(), 1, "greedy commits exactly one op per boundary");
             }
         }
+    }
+
+    #[test]
+    fn snapshot_restore_round_trips_rng_and_window() {
+        let pcfg = PolicyConfig {
+            kind: PolicyKind::Greedy,
+            eval_every: 1,
+            window: 3,
+            min_slope: 0.5,
+            cooldown: 0,
+            deadline_scale: 0.0,
+            probe_budget: 1,
+        };
+        let mut p = GreedyBranch::new(&sched(), 1.0, &pcfg, 11);
+        // advance the probe-seed rng and part-fill the window
+        let _ = p.rng.next_u64();
+        p.detector.push_eval(2.5);
+        p.detector.push_eval(2.25);
+        p.deadline_armed = false;
+        p.last_arch_step = 7;
+        let snap = p.snapshot();
+
+        let mut q = GreedyBranch::new(&sched(), 1.0, &pcfg, 11);
+        q.restore(&snap).unwrap();
+        assert_eq!(q.detector.evals(), p.detector.evals());
+        assert!(!q.deadline_armed);
+        assert_eq!(q.last_arch_step, 7);
+        assert_eq!(q.rng.to_parts(), p.rng.to_parts());
+        assert_eq!(q.rng.next_u64(), p.rng.next_u64(), "probe seeds must continue identically");
     }
 
     #[test]

@@ -136,6 +136,28 @@ pub trait GrowthPolicy {
 
     /// Judge one completed step.
     fn decide(&mut self, obs: &TrainObs, ctx: &PolicyCtx<'_>) -> Decision;
+
+    /// Serializable snapshot of the policy's mutable state, captured at a
+    /// checkpoint (DESIGN.md §16.3). `Null` means "this policy is
+    /// stateless" — the default suits shims like the internal step-budget
+    /// driver. Shipped policies override both methods so a resumed run
+    /// replays the exact decision stream an uninterrupted run would emit.
+    fn snapshot(&self) -> crate::json::Value {
+        crate::json::Value::Null
+    }
+
+    /// Restore state captured by [`GrowthPolicy::snapshot`] on the resume
+    /// path. Must accept exactly what `snapshot` produced; the default
+    /// accepts only `Null`.
+    fn restore(&mut self, state: &crate::json::Value) -> crate::error::Result<()> {
+        match state {
+            crate::json::Value::Null => Ok(()),
+            _ => Err(crate::error::Error::Checkpoint(format!(
+                "policy '{}' has no state to restore but the checkpoint carries some",
+                self.name()
+            ))),
+        }
+    }
 }
 
 /// Per-stage scheduled steps under the coordinator's `steps_scale`

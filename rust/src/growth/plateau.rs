@@ -25,7 +25,9 @@
 use std::collections::VecDeque;
 
 use crate::config::{GrowthSchedule, PolicyConfig};
+use crate::error::{Error, Result};
 use crate::expand::ExpansionPlan;
+use crate::json::Value;
 
 use super::{scaled_steps, scaled_total, Decision, GrowthPolicy, PolicyCtx, TrainObs};
 
@@ -77,6 +79,20 @@ impl PlateauDetector {
     /// Evals currently held (diagnostics/tests).
     pub fn len(&self) -> usize {
         self.evals.len()
+    }
+
+    /// The held evals, oldest first (checkpoint snapshot path).
+    pub fn evals(&self) -> &VecDeque<f32> {
+        &self.evals
+    }
+
+    /// Append one eval without producing a verdict (checkpoint restore
+    /// path — the stream was already judged before the snapshot).
+    pub fn push_eval(&mut self, eval_loss: f32) {
+        self.evals.push_back(eval_loss);
+        while self.evals.len() > self.window {
+            self.evals.pop_front();
+        }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -181,6 +197,39 @@ impl GrowthPolicy for LossPlateau {
         let fired = self.pending.pop_front().expect("checked non-empty");
         self.detector.reset();
         Decision::Expand(fired.plan)
+    }
+
+    // Mutable state: the detector's eval window and how many staged
+    // expansions remain. Deadlines/cooldown are config-derived and come
+    // back identically from the schedule at resume. f32 evals survive the
+    // JSON round trip exactly (f64 shortest-round-trip formatting).
+    fn snapshot(&self) -> Value {
+        Value::obj(vec![
+            ("pending", Value::num(self.pending.len() as f64)),
+            (
+                "evals",
+                Value::Arr(self.detector.evals.iter().map(|&e| Value::num(e as f64)).collect()),
+            ),
+        ])
+    }
+
+    fn restore(&mut self, state: &Value) -> Result<()> {
+        let pending = state.req("pending")?.as_usize()?;
+        if pending > self.pending.len() {
+            return Err(Error::Checkpoint(format!(
+                "plateau policy: checkpoint has {pending} expansions pending but the \
+                 schedule only defines {}",
+                self.pending.len()
+            )));
+        }
+        while self.pending.len() > pending {
+            self.pending.pop_front();
+        }
+        self.detector.evals.clear();
+        for e in state.req("evals")?.as_arr()? {
+            self.detector.evals.push_back(e.as_f64()? as f32);
+        }
+        Ok(())
     }
 }
 
@@ -368,6 +417,26 @@ mod tests {
             !got.iter().any(|d| matches!(d, Decision::Expand(_))),
             "an all-NaN eval stream must never trigger surgery"
         );
+    }
+
+    #[test]
+    fn snapshot_restore_preserves_detector_window_and_pending() {
+        let mut p = LossPlateau::new(&sched(), 1.0, &pcfg(3, 0.5, 0, 0.0));
+        // two evals in a 3-window (no verdict yet), nothing fired
+        let _ = drive(&mut p, &[(2.0, Some(2.5)), (2.0, Some(2.25))]);
+        let snap = p.snapshot();
+
+        let mut resumed = LossPlateau::new(&sched(), 1.0, &pcfg(3, 0.5, 0, 0.0));
+        resumed.restore(&snap).unwrap();
+        assert_eq!(resumed.pending.len(), 2);
+        assert_eq!(resumed.detector.len(), 2);
+        assert_eq!(resumed.detector.evals, p.detector.evals);
+        // bit-exact evals: the third flat observation fires on both
+        let a = drive(&mut p, &[(2.0, Some(2.25))]);
+        let b = drive(&mut resumed, &[(2.0, Some(2.25))]);
+        assert!(matches!(a[0], Decision::Expand(_)));
+        assert!(matches!(b[0], Decision::Expand(_)));
+        assert_eq!(resumed.pending.len(), p.pending.len());
     }
 
     #[test]

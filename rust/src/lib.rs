@@ -53,6 +53,15 @@
 //! * [`coordinator`] — the growth coordinator: a policy-driven loop over
 //!   segments, applying boundary surgery and verifying preservation.
 //! * [`metrics`] — CSV/JSONL run logging, timers, serving counters.
+//! * [`ckpt`] — **durable run state** (S21): atomic, versioned, checksummed
+//!   whole-run checkpoints (params + Adam moments + every live RNG +
+//!   batcher cursor + policy state + last applied plan) written
+//!   tmp+fsync+rename into a retained generation chain, so
+//!   `texpand train --resume` is bit-identical to an uninterrupted run
+//!   and a torn/corrupted file falls back to the previous good
+//!   generation (DESIGN.md §16).
+//! * [`faults`] — env-gated crash-injection points
+//!   (`TEXPAND_FAULT=<site>:<nth>`) backing the crash-recovery tests.
 //! * [`obs`] — live observability (S19/S20): lock-free metrics registry
 //!   (counters/gauges/fixed-bucket latency histograms with p50/p95/p99
 //!   estimation and per-bucket request-id exemplars), Prometheus text
@@ -78,12 +87,14 @@
 
 pub mod autodiff;
 pub mod bench_util;
+pub mod ckpt;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod expand;
+pub mod faults;
 pub mod generate;
 pub mod growth;
 pub mod json;

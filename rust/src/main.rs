@@ -43,6 +43,7 @@ USAGE:
                   [--steps-scale F] [--lr F] [--optimizer adam|sgd]
                   [--seed N] [--corpus markov|copy|arithmetic]
                   [--corpus-len N] [--no-verify] [--no-checkpoints]
+                  [--checkpoint-every N] [--checkpoint-keep K] [--resume]
                   [--threads N] [--micro-batch N]
                   [--metrics-addr HOST:PORT]
   texpand verify  [--backend native|pjrt] [--schedule P] [--artifacts D]
@@ -53,7 +54,8 @@ USAGE:
   texpand generate --ckpt PATH [--backend native|pjrt] [--prompt S]
                    [--tokens N] [--temperature F]
                    [--top-k N] [--seed N] [--schedule P] [--artifacts D]
-  texpand serve   [--ckpt PATH] [--requests N] [--tokens N] [--slots N]
+  texpand serve   [--ckpt PATH] [--checkpoint PATH]
+                  [--requests N] [--tokens N] [--slots N]
                   [--temperature F] [--top-k N] [--seed N] [--serial]
                   [--corpus markov|copy|arithmetic]
                   [--max-pending N] [--timeout-ticks N]
@@ -102,9 +104,20 @@ exemplar annotation in the /metrics text.
 Run store: `texpand runs` ingests runs/<name>/events.jsonl into an
 append-only indexed store at runs/.store (list/show/stats), and
 `texpand report RUN` renders the growth timeline — per-stage loss
-curves, each expansion's predicted-vs-actual param/FLOP deltas, and a
+curves, each expansion's predicted-vs-actual param/FLOP deltas, a
 preservation-drift row per boundary checked against the probe
-tolerance.
+tolerance, and the run's durable recovery points. Corrupted source-log
+lines are counted (runs list `bad` column), never fatal.
+
+Durable runs: train --checkpoint-every N writes an atomic, checksummed
+run checkpoint (params, optimizer moments, RNG streams, policy state)
+to runs/<name>/ckpt/gen-NNNNNN.txck every N global steps and at every
+expansion boundary, keeping the last --checkpoint-keep (default 3)
+generations. --resume restarts bit-identically from the newest valid
+generation — a torn or corrupted latest file falls back to the previous
+one. serve --checkpoint PATH warm-starts the engine from a run
+checkpoint file (or the newest valid generation when PATH is a ckpt
+directory); --ckpt stays the plain .txpd weights loader.
 
 Defaults: --schedule configs/growth_default.json, --artifacts artifacts,
           --runs runs, --backend pjrt.";
@@ -287,6 +300,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     // consumed here (before build_coordinator rejects unknown flags);
     // bound after the coordinator is constructed so flag errors win
     let metrics_addr = args.get("metrics-addr");
+    // durable-run knobs (DESIGN.md §16): applied to the coordinator
+    // options after construction, like the other train-only flags
+    let checkpoint_every = args.get_usize("checkpoint-every")?;
+    let checkpoint_keep = args.get_usize("checkpoint-keep")?;
+    let resume = args.has("resume");
+    if checkpoint_keep == Some(0) {
+        return Err(Error::Cli("--checkpoint-keep must be >= 1".into()));
+    }
     // adaptive policies synthesize architectures at run time; the pjrt
     // backend can only execute its precompiled stage table — reject the
     // combination up front, BEFORE any manifest/artifact resolution, so
@@ -318,6 +339,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
     }
     let mut coord = build_coordinator(args)?; // rejects unknown flags
+    if let Some(n) = checkpoint_every {
+        coord.opts.checkpoint_every = n;
+    }
+    if let Some(k) = checkpoint_keep {
+        coord.opts.checkpoint_keep = k;
+    }
+    coord.opts.resume = resume;
     let mut pcfg = coord.schedule.policy.clone();
     if let Some(kind) = policy_flag {
         pcfg.kind = kind;
@@ -516,6 +544,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_pending = args.get_usize("max-pending")?;
     let timeout_ticks = args.get_u64("timeout-ticks")?;
     let ckpt = args.get("ckpt");
+    let warm = args.get("checkpoint");
+    if ckpt.is_some() && warm.is_some() {
+        return Err(Error::Cli(
+            "--ckpt and --checkpoint both select the model; pass one".into(),
+        ));
+    }
     let metrics_addr = args.get("metrics-addr");
     let linger_ms = args.get_u64("metrics-linger-ms")?.unwrap_or(0);
     let span_sample = args.get_u64("span-sample")?.unwrap_or(1).max(1);
@@ -523,23 +557,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let run_name = args.get_or("run-name", "serve");
     args.reject_unknown()?;
 
-    let params = match &ckpt {
-        Some(path) => ParamStore::load(path)?.0,
-        None => {
+    let (params, source) = match (&warm, &ckpt) {
+        // warm start: the durable run checkpoint's trained weights go
+        // straight into the engine (DESIGN.md §16). A directory means
+        // "the run's ckpt chain" — serve the newest valid generation.
+        (Some(path), _) => {
+            let p = std::path::Path::new(path);
+            let (label, ck) = if p.is_dir() {
+                let (gen, ck) = texpand::ckpt::Chain::open(p, 1)?
+                    .load_latest_valid()?
+                    .ok_or_else(|| {
+                        Error::Checkpoint(format!("no valid checkpoint generation under {path}"))
+                    })?;
+                (format!("{path} (gen {gen})"), ck)
+            } else {
+                (path.clone(), texpand::ckpt::RunCheckpoint::load(path)?)
+            };
+            let label =
+                format!("{label}, warm-start at global step {}", ck.global_step);
+            (ck.params, label)
+        }
+        (None, Some(path)) => (ParamStore::load(path)?.0, path.clone()),
+        (None, None) => {
             // demo model: untrained, but every serving mechanism is live
             let cfg = texpand::config::ModelConfig {
                 layers: 2, hidden: 32, heads: 2, k: 16, v: 16, mlp: 64, seq: 48, vocab: 128,
             };
-            ParamStore::init(&cfg, &mut texpand::rng::Pcg32::seeded(seed), 0.02)
+            let params =
+                ParamStore::init(&cfg, &mut texpand::rng::Pcg32::seeded(seed), 0.02);
+            (params, "<random demo model>".to_string())
         }
     };
     let cfg = *params.config();
-    println!(
-        "serving {} ({} params, {:?})",
-        ckpt.as_deref().unwrap_or("<random demo model>"),
-        params.num_scalars(),
-        cfg
-    );
+    println!("serving {source} ({} params, {cfg:?})", params.num_scalars());
 
     let mut opts = EngineOptions {
         max_slots: slots,
@@ -744,11 +794,11 @@ fn cmd_runs(args: &Args) -> Result<()> {
                 println!("(no runs with events.jsonl under {runs_root})");
                 return Ok(());
             }
-            println!("{:<28} {:>9} {:>6} {:>12}", "run", "records", "new", "bytes");
+            println!("{:<28} {:>9} {:>6} {:>12} {:>5}", "run", "records", "new", "bytes", "bad");
             for (name, r) in &reports {
                 println!(
-                    "{:<28} {:>9} {:>6} {:>12}",
-                    name, r.total_records, r.new_records, r.source_bytes
+                    "{:<28} {:>9} {:>6} {:>12} {:>5}",
+                    name, r.total_records, r.new_records, r.source_bytes, r.parse_errors
                 );
             }
             Ok(())
@@ -757,7 +807,14 @@ fn cmd_runs(args: &Args) -> Result<()> {
             let run = args.require_positional(1, "RUN")?;
             args.reject_unknown()?;
             let store = RunStore::open(&runs_root)?;
-            store.ingest(&run)?;
+            let rep = store.ingest(&run)?;
+            if rep.parse_errors > 0 {
+                eprintln!(
+                    "warning: {} corrupted line(s) in {run}'s event log were counted and \
+                     skipped during ingest",
+                    rep.parse_errors
+                );
+            }
             let s = store.stats(&run)?;
             if action == "show" {
                 println!("{}", s.to_json().to_pretty());
@@ -775,6 +832,8 @@ fn cmd_runs(args: &Args) -> Result<()> {
             let within = s.preservation.iter().filter(|p| p.within_tol).count();
             println!("preservation_within_tol: {within}/{}", s.preservation.len());
             println!("decisions: {} (expand: {})", s.decisions, s.expand_decisions);
+            println!("checkpoints: {}", s.checkpoints.len());
+            println!("resumes: {}", s.resumes.len());
             println!("spans: {}", s.spans);
             if let Some(sv) = &s.serve {
                 println!(
@@ -917,6 +976,24 @@ fn cmd_report(args: &Args) -> Result<()> {
             println!(
                 "\npreservation ({}): probe Δ {:.3e} vs tol {:.0e} [{status}]",
                 p.boundary, p.probe_delta, p.tol
+            );
+        }
+    }
+
+    // the run's durable recovery points: where a crash could have been
+    // resumed from, and any resume that actually happened
+    if !s.checkpoints.is_empty() || !s.resumes.is_empty() {
+        println!("\nrecovery points ({} checkpoint(s) written):", s.checkpoints.len());
+        for c in &s.checkpoints {
+            println!(
+                "  gen {:>4}  step {:>6}  segment {:<3} [{}]  {} bytes in {:.1} ms",
+                c.gen, c.global_step, c.segment, c.trigger, c.bytes, c.write_ms
+            );
+        }
+        for r in &s.resumes {
+            println!(
+                "  ↻ resumed from gen {} at step {} (segment {})",
+                r.gen, r.global_step, r.segment
             );
         }
     }

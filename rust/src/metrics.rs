@@ -69,6 +69,26 @@ impl RunLogger {
         })
     }
 
+    /// Build a logger over arbitrary writers — nothing touches the
+    /// filesystem. This is the injection seam the durability tests use to
+    /// drive the error path with failing writers (`rust/tests/common`).
+    pub fn with_writers(
+        events: Box<dyn Write + Send>,
+        loss_csv: Box<dyn Write + Send>,
+    ) -> RunLogger {
+        RunLogger {
+            dir: String::new(),
+            events,
+            events_path: "<mem>/events.jsonl".into(),
+            loss_csv,
+            loss_path: "<mem>/loss.csv".into(),
+            start: Instant::now(),
+            quiet: true,
+            dropped_lines: 0,
+            write_error: None,
+        }
+    }
+
     /// Suppress stdout mirroring (benches).
     pub fn quiet(mut self) -> RunLogger {
         self.quiet = true;
@@ -179,6 +199,10 @@ impl RunLogger {
                 ("params", Value::num(obs.params as f64)),
             ],
         );
+        // decisions are recovery evidence (why did the model grow here):
+        // push them to disk immediately so a crash right after a verdict
+        // never loses the verdict (DESIGN.md §16.5)
+        self.flush();
     }
 
     /// Append one loss-curve row.
@@ -400,28 +424,47 @@ mod tests {
 
     #[test]
     fn failed_writes_are_counted_and_first_error_surfaced() {
-        let mut log = RunLogger {
-            dir: String::new(),
-            events: Box::new(FailingWriter),
-            events_path: "ram/events.jsonl".into(),
-            loss_csv: Box::new(FailingWriter),
-            loss_path: "ram/loss.csv".into(),
-            start: Instant::now(),
-            quiet: true,
-            dropped_lines: 0,
-            write_error: None,
-        };
+        let mut log = RunLogger::with_writers(Box::new(FailingWriter), Box::new(FailingWriter));
         log.event("a", vec![]);
         log.loss_row(1, "s", 1.0, 1);
         log.event("b", vec![]);
         assert_eq!(log.dropped_lines(), 3, "every failed line is counted");
         let err = log.take_write_error().expect("first error kept");
-        assert!(err.to_string().contains("ram/events.jsonl"), "{err}");
+        assert!(err.to_string().contains("events.jsonl"), "{err}");
         assert!(log.take_write_error().is_none(), "take-once");
         log.flush();
         let err = log.take_write_error().expect("flush failures surface too");
         assert!(err.to_string().contains("disk full"), "{err}");
         assert_eq!(log.dropped_lines(), 3, "flush does not bump dropped lines");
+    }
+
+    #[test]
+    fn decision_rows_flush_immediately() {
+        use crate::growth::{Decision, TrainObs};
+        // a decision on a healthy logger is durable without an explicit
+        // caller-side flush — read the file back while the logger is open
+        let root = tmpdir("decision-flush");
+        let mut log = RunLogger::create(&root, "run5").unwrap().quiet();
+        let obs = TrainObs {
+            global_step: 1,
+            arch_step: 1,
+            train_loss: 2.0,
+            eval_loss: Some(2.0),
+            tokens_seen: 16,
+            est_flops: 1.0,
+            params: 10,
+        };
+        log.decision("plateau", &obs, &Decision::Continue);
+        let events = std::fs::read_to_string(format!("{root}/run5/events.jsonl")).unwrap();
+        assert_eq!(events.lines().count(), 1, "decision visible before drop");
+        drop(log);
+        std::fs::remove_dir_all(format!("{root}/run5")).unwrap();
+
+        // and on a failing writer, the flush inside decision() surfaces
+        // the error right away instead of deferring it to run teardown
+        let mut bad = RunLogger::with_writers(Box::new(FailingWriter), Box::new(FailingWriter));
+        bad.decision("plateau", &obs, &Decision::Continue);
+        assert!(bad.take_write_error().is_some(), "decision flush reports the failure");
     }
 
     #[test]

@@ -60,6 +60,12 @@ pub struct IngestReport {
     pub total_records: u64,
     /// Source bytes consumed so far (the cursor).
     pub source_bytes: u64,
+    /// Lines ingested so far that are not valid JSON (cumulative, like
+    /// `total_records`). A crashed writer's torn tail never lands here —
+    /// the cursor stops before it — so nonzero means the source log was
+    /// corrupted in place (bit rot, truncated flush, manual edits).
+    /// Ingestion keeps going; the damage is counted, not fatal.
+    pub parse_errors: u64,
 }
 
 /// Per-run cursor state in `index.json`.
@@ -67,6 +73,7 @@ pub struct IngestReport {
 struct IndexEntry {
     events_bytes: u64,
     records: u64,
+    parse_errors: u64,
 }
 
 type Index = BTreeMap<String, IndexEntry>;
@@ -110,6 +117,7 @@ impl RunStore {
             new_records,
             total_records: entry.records,
             source_bytes: entry.events_bytes,
+            parse_errors: entry.parse_errors,
         };
         self.save_index(&index, bench_bytes)?;
         if new_records > 0 {
@@ -205,6 +213,11 @@ impl RunStore {
                 IndexEntry {
                     events_bytes: entry.req("events_bytes")?.as_i64()? as u64,
                     records: entry.req("records")?.as_i64()? as u64,
+                    // absent in pre-resilience indexes: default clean
+                    parse_errors: entry
+                        .get("parse_errors")
+                        .and_then(|p| p.as_i64().ok())
+                        .unwrap_or(0) as u64,
                 },
             );
         }
@@ -221,6 +234,7 @@ impl RunStore {
                     Value::obj(vec![
                         ("events_bytes", Value::num(e.events_bytes as f64)),
                         ("records", Value::num(e.records as f64)),
+                        ("parse_errors", Value::num(e.parse_errors as f64)),
                     ]),
                 )
             })
@@ -237,6 +251,10 @@ impl RunStore {
 /// Append every complete line of `data` past the entry's cursor to
 /// `dst`, advancing the cursor. The cursor only moves past
 /// newline-terminated bytes, so a torn tail is re-examined next call.
+/// Each newly copied line is also trial-parsed: lines that are not valid
+/// JSON (in-place corruption of the source log) are *counted* in the
+/// entry's `parse_errors` but still copied and cursor-advanced, so one
+/// flipped bit can never wedge ingestion or shift the offset math.
 fn append_complete_lines(data: &[u8], dst: &str, entry: &mut IndexEntry) -> Result<u64> {
     let offset = entry.events_bytes as usize;
     let slice = &data[offset.min(data.len())..];
@@ -252,8 +270,13 @@ fn append_complete_lines(data: &[u8], dst: &str, entry: &mut IndexEntry) -> Resu
     out.write_all(complete).map_err(|e| Error::io(dst, e))?;
     out.flush().map_err(|e| Error::io(dst, e))?;
     let new_records = complete.iter().filter(|&&b| b == b'\n').count() as u64;
+    let bad = String::from_utf8_lossy(complete)
+        .lines()
+        .filter(|l| !l.trim().is_empty() && Value::parse(l).is_err())
+        .count() as u64;
     entry.events_bytes += complete.len() as u64;
     entry.records += new_records;
+    entry.parse_errors += bad;
     Ok(new_records)
 }
 
@@ -322,6 +345,29 @@ pub struct PreservationRecord {
     pub within_tol: bool,
 }
 
+/// One durable recovery point (from a `checkpoint` event).
+#[derive(Clone, Debug)]
+pub struct CheckpointRecord {
+    /// Generation number in the run's `ckpt/` chain.
+    pub gen: u64,
+    /// `"interval"` (every N steps) or `"boundary"` (forced at an
+    /// expansion).
+    pub trigger: String,
+    pub global_step: u64,
+    pub segment: u64,
+    pub bytes: u64,
+    pub write_ms: f64,
+}
+
+/// One resume-from-checkpoint (from a `resume` event) — evidence that a
+/// recovery point was actually exercised.
+#[derive(Clone, Debug)]
+pub struct ResumeRecord {
+    pub gen: u64,
+    pub global_step: u64,
+    pub segment: u64,
+}
+
 /// Serve-phase outcome (from the last `serve_done` event).
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
@@ -352,6 +398,8 @@ pub struct RunStats {
     pub preservation: Vec<PreservationRecord>,
     pub decisions: u64,
     pub expand_decisions: u64,
+    pub checkpoints: Vec<CheckpointRecord>,
+    pub resumes: Vec<ResumeRecord>,
     pub spans: u64,
     pub serve: Option<ServeStats>,
     pub final_eval_loss: Option<f64>,
@@ -461,6 +509,23 @@ impl RunStats {
                 if v.get("decision").and_then(|d| d.as_str().ok()) == Some("expand") {
                     self.expand_decisions += 1;
                 }
+            }
+            "checkpoint" => {
+                self.checkpoints.push(CheckpointRecord {
+                    gen: int(v, "gen"),
+                    trigger: text(v, "trigger"),
+                    global_step: int(v, "global_step"),
+                    segment: int(v, "segment"),
+                    bytes: int(v, "bytes"),
+                    write_ms: num(v, "write_ms"),
+                });
+            }
+            "resume" => {
+                self.resumes.push(ResumeRecord {
+                    gen: int(v, "gen"),
+                    global_step: int(v, "global_step"),
+                    segment: int(v, "segment"),
+                });
             }
             "span" => self.spans += 1,
             "serve_done" => {
@@ -596,6 +661,39 @@ impl RunStats {
             ("preservation", Value::Arr(preservation)),
             ("decisions", Value::num(self.decisions as f64)),
             ("expand_decisions", Value::num(self.expand_decisions as f64)),
+            (
+                "checkpoints",
+                Value::Arr(
+                    self.checkpoints
+                        .iter()
+                        .map(|c| {
+                            Value::obj(vec![
+                                ("gen", Value::num(c.gen as f64)),
+                                ("trigger", Value::str(c.trigger.clone())),
+                                ("global_step", Value::num(c.global_step as f64)),
+                                ("segment", Value::num(c.segment as f64)),
+                                ("bytes", Value::num(c.bytes as f64)),
+                                ("write_ms", Value::num(c.write_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "resumes",
+                Value::Arr(
+                    self.resumes
+                        .iter()
+                        .map(|r| {
+                            Value::obj(vec![
+                                ("gen", Value::num(r.gen as f64)),
+                                ("global_step", Value::num(r.global_step as f64)),
+                                ("segment", Value::num(r.segment as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("spans", Value::num(self.spans as f64)),
             ("serve", serve),
             ("final_eval_loss", opt_num(self.final_eval_loss)),
@@ -764,6 +862,67 @@ mod tests {
         assert_eq!(s.expansions.len(), 1);
         assert!(s.expansions[0].plan.is_none());
         assert!(s.expansions[0].plan_error.as_deref().unwrap().contains("params_after"));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn bit_flipped_lines_are_counted_not_fatal() {
+        let root = tmp_root("bitflip");
+        // a healthy log...
+        let mut good = vec![
+            r#"{"event":"run_start","policy":"fixed","schedule":"s"}"#.to_string(),
+            r#"{"event":"span","id":1}"#.to_string(),
+            r#"{"event":"run_done","final_eval_loss":2.0,"total_steps":3}"#.to_string(),
+        ];
+        // ...with one line corrupted in place (bit 5 of its first byte:
+        // '{' 0x7B -> 0x5B '[', which still parses — so flip a byte in
+        // the middle to break the string structure instead)
+        let mut bytes = good[1].clone().into_bytes();
+        bytes[8] ^= 0x20;
+        good[1] = String::from_utf8_lossy(&bytes).into_owned();
+        assert!(Value::parse(&good[1]).is_err(), "corrupted line must not parse: {}", good[1]);
+        let refs: Vec<&str> = good.iter().map(|s| s.as_str()).collect();
+        write_events(&root, "r", &refs);
+
+        let store = RunStore::open(&root).unwrap();
+        let rep = store.ingest("r").unwrap();
+        assert_eq!(rep.new_records, 3, "corrupted line still ingested");
+        assert_eq!(rep.parse_errors, 1, "and counted as damage");
+        // the count is cumulative and survives the index round-trip
+        let rep = store.ingest("r").unwrap();
+        assert_eq!((rep.new_records, rep.parse_errors), (0, 1));
+        // aggregation agrees and the surviving records are intact
+        let s = store.stats("r").unwrap();
+        assert_eq!(s.malformed, 1);
+        assert_eq!(s.policy.as_deref(), Some("fixed"));
+        assert_eq!(s.final_eval_loss, Some(2.0));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_and_resume_events_become_recovery_points() {
+        let root = tmp_root("ckptev");
+        let lines = [
+            r#"{"event":"run_start","policy":"fixed","schedule":"s"}"#,
+            r#"{"event":"checkpoint","gen":1,"trigger":"interval","global_step":4,"segment":0,"bytes":2048,"write_ms":1.5}"#,
+            r#"{"event":"checkpoint","gen":2,"trigger":"boundary","global_step":6,"segment":1,"bytes":4096,"write_ms":2.0}"#,
+            r#"{"event":"resume","gen":2,"global_step":6,"segment":1,"local_step":0}"#,
+        ];
+        write_events(&root, "r", &lines);
+        let store = RunStore::open(&root).unwrap();
+        store.ingest("r").unwrap();
+        let s = store.stats("r").unwrap();
+        assert_eq!(s.checkpoints.len(), 2);
+        assert_eq!(s.checkpoints[0].trigger, "interval");
+        assert_eq!(s.checkpoints[1].gen, 2);
+        assert_eq!(s.checkpoints[1].trigger, "boundary");
+        assert_eq!(s.checkpoints[1].global_step, 6);
+        assert_eq!(s.resumes.len(), 1);
+        assert_eq!(s.resumes[0].gen, 2);
+        // summary.json carries the recovery points for `texpand report`
+        let summary = Value::load(&format!("{}/r/summary.json", store.dir())).unwrap();
+        assert_eq!(summary.req("checkpoints").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(summary.req("resumes").unwrap().as_arr().unwrap().len(), 1);
         std::fs::remove_dir_all(&root).unwrap();
     }
 

@@ -128,6 +128,12 @@ fn log_step_event(
 /// signal even if it asks). Fails fast on non-finite loss (the
 /// preservation property makes boundary loss spikes a bug, not a hazard
 /// of the method).
+///
+/// `ckpt` is the durable-run attachment point (DESIGN.md §16): when
+/// present, the loop asks it to write an interval checkpoint after each
+/// fully applied optimizer step, and starts its local step counter from
+/// the hook's pending resume offset so a resumed segment re-enters the
+/// loop exactly where the checkpointed one left off.
 #[allow(clippy::too_many_arguments)]
 pub fn train_segment(
     backend: &dyn ExecBackend,
@@ -140,6 +146,7 @@ pub fn train_segment(
     state: &mut TrainState,
     policy: &mut dyn GrowthPolicy,
     probe: Option<&Batch>,
+    mut ckpt: Option<&mut crate::ckpt::CkptHook>,
 ) -> Result<(StageReport, SegmentEnd)> {
     opt.validate_against(params)?;
     let tokens_per_step = stage.batch * stage.meta.config.seq;
@@ -161,8 +168,16 @@ pub fn train_segment(
     let eval_gauge = reg.gauge("texpand_train_eval_loss", "Latest held-out probe loss");
     params_gauge.set(num_params as f64);
 
-    let mut local_step = 0usize;
+    // a resumed segment continues its local step count; the enclosing
+    // run's global counters arrive already-restored in `state`
+    let mut local_step = match ckpt.as_deref_mut() {
+        Some(h) => h.take_resume_local_step(),
+        None => 0,
+    };
     let end = loop {
+        // crash-injection site for the recovery tests: "the process died
+        // between two optimizer steps"
+        crate::faults::fault_point("train_step");
         let batch = batcher.next();
         let step_timer = Timer::start();
         let (loss, mut grads) = backend.step(stage, params, &batch)?;
@@ -180,7 +195,7 @@ pub fn train_segment(
         let step_ms = step_timer.ms();
         step_ms_total += step_ms;
 
-        if local_step == 0 {
+        if last_losses.is_empty() {
             first_loss = loss;
         }
         last_losses.push(loss);
@@ -228,7 +243,14 @@ pub fn train_segment(
         }
         local_step += 1;
         match decision {
-            Decision::Continue => {}
+            Decision::Continue => {
+                // interval checkpoint only on continuing steps: segment
+                // ends get a forced boundary write from the coordinator,
+                // which also knows the post-surgery state to capture
+                if let Some(h) = ckpt.as_deref_mut() {
+                    h.maybe_write(local_step, params, opt, batcher, &*policy, state, logger)?;
+                }
+            }
             Decision::Expand(plan) => break SegmentEnd::Expand(plan),
             Decision::Stop => break SegmentEnd::Stop,
         }
@@ -291,7 +313,7 @@ pub fn train_stage(
     }
     let mut shim = StepBudget { steps };
     let (report, end) = train_segment(
-        backend, stage, params, opt, batcher, tcfg, logger, state, &mut shim, None,
+        backend, stage, params, opt, batcher, tcfg, logger, state, &mut shim, None, None,
     )?;
     debug_assert_eq!(end, SegmentEnd::Stop);
     Ok(report)

@@ -44,3 +44,60 @@ pub fn random_batch(
 ) -> texpand::data::Batch {
     texpand::data::Batch::random(cfg, batch, seed)
 }
+
+// --- fault-injection helpers (DESIGN.md §16.5) ------------------------
+//
+// Two complementary failure models share this module:
+//  * process death — a spawned `texpand` child armed with
+//    `TEXPAND_FAULT=<site>:<nth>` aborts at an exact program point
+//    ([`fault_env`] builds the pair, [`texpand_cmd`] the child);
+//  * I/O failure  — [`FailingWriter`] makes a `RunLogger` writer start
+//    erroring ENOSPC-style after a set number of writes, for the
+//    error-surfacing (not crash-recovery) paths.
+
+/// The env `(key, value)` pair arming fault site `site` to abort the
+/// child process on its `nth` (1-based) hit. See `texpand::faults`.
+pub fn fault_env(site: &str, nth: usize) -> (String, String) {
+    ("TEXPAND_FAULT".to_string(), format!("{site}:{nth}"))
+}
+
+/// A `texpand` binary invocation rooted at `dir`. Tests that write runs
+/// or checkpoints point this at a temp dir so the repo tree stays clean;
+/// pass absolute schedule paths ([`TINY_SCHEDULE`]) alongside.
+pub fn texpand_cmd(dir: &std::path::Path) -> std::process::Command {
+    let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_texpand"));
+    cmd.current_dir(dir);
+    cmd
+}
+
+/// A writer that succeeds for the first `ok_writes` write calls and then
+/// fails every write and flush — the deterministic stand-in for a disk
+/// that fills up mid-run. Box it into `RunLogger::with_writers` to drive
+/// the logger's error-surfacing paths.
+pub struct FailingWriter {
+    ok_writes: usize,
+    written: usize,
+}
+
+impl FailingWriter {
+    pub fn after(ok_writes: usize) -> FailingWriter {
+        FailingWriter { ok_writes, written: 0 }
+    }
+}
+
+impl std::io::Write for FailingWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.written >= self.ok_writes {
+            return Err(std::io::Error::new(std::io::ErrorKind::WriteZero, "injected write failure"));
+        }
+        self.written += 1;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        if self.written >= self.ok_writes {
+            return Err(std::io::Error::new(std::io::ErrorKind::WriteZero, "injected flush failure"));
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,407 @@
+//! Integration: durable checkpoint/resume under crash-recovery fault
+//! injection (DESIGN.md §16).
+//!
+//! The crash tests spawn the real `texpand` binary as a child process
+//! armed with `TEXPAND_FAULT=<site>:<nth>` (see `texpand::faults`), kill
+//! it at an exact program point, resume with `--resume`, and assert the
+//! resumed run is **bit-identical** — final params byte-for-byte, loss
+//! curve row-for-row — to an oracle run that was never interrupted. That
+//! is the contract the checkpoint subsystem exists to keep: a crash plus
+//! a resume must be indistinguishable from no crash at all.
+//!
+//! Everything runs offline on `--backend native` with the tiny schedule
+//! (3 stages, 2 expansion boundaries, 18 optimizer steps at scale 0.2).
+
+mod common;
+
+use std::path::{Path, PathBuf};
+
+/// 0.2 × (30,30,30) steps = 6 per stage, 18 total; boundaries after
+/// global steps 6 and 12.
+const SCALE: &str = "0.2";
+const TOTAL_STEPS: usize = 18;
+
+fn setup(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("texpand-ckpt-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One `texpand train` invocation rooted at `dir` (run lands in
+/// `dir/runs/run`), optionally armed with a fault site.
+fn train(dir: &Path, extra: &[&str], fault: Option<(String, String)>) -> std::process::Output {
+    let mut cmd = common::texpand_cmd(dir);
+    cmd.args([
+        "train",
+        "--backend",
+        "native",
+        "--schedule",
+        common::TINY_SCHEDULE,
+        "--steps-scale",
+        SCALE,
+        "--seed",
+        "11",
+        "--log-every",
+        "100",
+        "--runs",
+        "runs",
+        "--run-name",
+        "run",
+    ]);
+    cmd.args(extra);
+    if let Some((k, v)) = fault {
+        cmd.env(k, v);
+    }
+    cmd.output().expect("spawn texpand")
+}
+
+/// Final trained weights, byte for byte (the bit-identicality witness).
+fn final_params(dir: &Path) -> Vec<u8> {
+    let p = dir.join("runs/run/stage2.txpd");
+    std::fs::read(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+/// loss.csv with the wall-clock column stripped (wall_ms is the one
+/// legitimately nondeterministic field).
+fn loss_prefix(dir: &Path) -> Vec<String> {
+    let text = std::fs::read_to_string(dir.join("runs/run/loss.csv")).unwrap();
+    text.lines()
+        .map(|l| l.split(',').take(4).collect::<Vec<_>>().join(","))
+        .collect()
+}
+
+fn events(dir: &Path) -> String {
+    std::fs::read_to_string(dir.join("runs/run/events.jsonl")).unwrap()
+}
+
+/// A crash at a random optimizer step resumes to the exact same final
+/// weights and loss curve as a run that was never interrupted.
+#[test]
+fn kill_at_random_step_then_resume_matches_uninterrupted_oracle() {
+    let oracle_dir = setup("oracle");
+    let out = train(&oracle_dir, &[], None);
+    assert!(out.status.success(), "oracle: {}", String::from_utf8_lossy(&out.stderr));
+    let want_params = final_params(&oracle_dir);
+    let want_loss = loss_prefix(&oracle_dir);
+    assert_eq!(want_loss.len(), TOTAL_STEPS + 1, "header + one row per step");
+
+    // pick the kill step from the clock: every run of the suite probes a
+    // different point in [2, TOTAL_STEPS-1] — including steps right after
+    // an expansion boundary, where resume must rebuild the grown
+    // architecture and its expanded Adam moments
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .subsec_nanos() as usize;
+    let nth = 2 + nanos % (TOTAL_STEPS - 2);
+
+    let crash_dir = setup("crash");
+    let out = train(
+        &crash_dir,
+        &["--checkpoint-every", "1"],
+        Some(common::fault_env("train_step", nth)),
+    );
+    assert!(!out.status.success(), "fault at step {nth} should abort the child");
+
+    let out = train(&crash_dir, &["--checkpoint-every", "1", "--resume"], None);
+    assert!(
+        out.status.success(),
+        "resume after kill at step {nth}: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("resuming from checkpoint"), "kill at step {nth}: {stdout}");
+
+    assert_eq!(
+        final_params(&crash_dir),
+        want_params,
+        "resumed params diverged from oracle (killed at step {nth})"
+    );
+    assert_eq!(
+        loss_prefix(&crash_dir),
+        want_loss,
+        "resumed loss curve diverged from oracle (killed at step {nth})"
+    );
+    // the evidence trail survives: checkpoint rows from before the crash,
+    // a resume row from after
+    let ev = events(&crash_dir);
+    assert!(ev.contains(r#""event":"checkpoint""#), "killed at step {nth}: {ev}");
+    assert!(ev.contains(r#""event":"resume""#), "killed at step {nth}: {ev}");
+
+    std::fs::remove_dir_all(&oracle_dir).ok();
+    std::fs::remove_dir_all(&crash_dir).ok();
+}
+
+/// A crash in the middle of writing a checkpoint file leaves a torn
+/// `.tmp` behind — never a corrupt generation. Resume picks up the last
+/// completed generation and still converges to the oracle bit for bit.
+#[test]
+fn crash_mid_checkpoint_write_leaves_a_recoverable_chain() {
+    let oracle_dir = setup("midw-oracle");
+    let out = train(&oracle_dir, &[], None);
+    assert!(out.status.success(), "oracle: {}", String::from_utf8_lossy(&out.stderr));
+
+    let crash_dir = setup("midw-crash");
+    let out = train(
+        &crash_dir,
+        &["--checkpoint-every", "1"],
+        Some(common::fault_env("ckpt_mid_write", 3)),
+    );
+    assert!(!out.status.success(), "mid-write fault should abort the child");
+    // the torn write is a .tmp, not a gen-*.txck: atomicity held
+    let ckpt_dir = crash_dir.join("runs/run/ckpt");
+    let torn: Vec<String> = std::fs::read_dir(&ckpt_dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".tmp"))
+        .collect();
+    assert!(!torn.is_empty(), "expected a torn .tmp from the mid-write crash");
+
+    let out = train(&crash_dir, &["--checkpoint-every", "1", "--resume"], None);
+    assert!(out.status.success(), "resume: {}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(final_params(&crash_dir), final_params(&oracle_dir));
+    // the completed run swept the stale tmp
+    let leftover = std::fs::read_dir(&ckpt_dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .any(|e| e.file_name().to_string_lossy().ends_with(".tmp"));
+    assert!(!leftover, "completed resume left a stale .tmp in the chain dir");
+
+    std::fs::remove_dir_all(&oracle_dir).ok();
+    std::fs::remove_dir_all(&crash_dir).ok();
+}
+
+/// A crash just before the atomic rename publishes the checkpoint: the
+/// fully-written tmp is not a generation either, and resume recovers.
+#[test]
+fn crash_before_rename_is_equivalent_to_crash_before_write() {
+    let oracle_dir = setup("ren-oracle");
+    let out = train(&oracle_dir, &[], None);
+    assert!(out.status.success(), "oracle: {}", String::from_utf8_lossy(&out.stderr));
+
+    let crash_dir = setup("ren-crash");
+    let out = train(
+        &crash_dir,
+        &["--checkpoint-every", "1"],
+        Some(common::fault_env("ckpt_pre_rename", 2)),
+    );
+    assert!(!out.status.success(), "pre-rename fault should abort the child");
+
+    let out = train(&crash_dir, &["--checkpoint-every", "1", "--resume"], None);
+    assert!(out.status.success(), "resume: {}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(final_params(&crash_dir), final_params(&oracle_dir));
+
+    std::fs::remove_dir_all(&oracle_dir).ok();
+    std::fs::remove_dir_all(&crash_dir).ok();
+}
+
+/// Bit-flip the newest generation after a crash: resume must fall back
+/// to the previous good generation (with a warning) and still reproduce
+/// the oracle exactly.
+#[test]
+fn corrupted_latest_generation_falls_back_on_resume() {
+    let oracle_dir = setup("corr-oracle");
+    let out = train(&oracle_dir, &[], None);
+    assert!(out.status.success(), "oracle: {}", String::from_utf8_lossy(&out.stderr));
+
+    let crash_dir = setup("corr-crash");
+    let out = train(
+        &crash_dir,
+        &["--checkpoint-every", "1"],
+        Some(common::fault_env("train_step", 10)),
+    );
+    assert!(!out.status.success());
+
+    // corrupt the newest retained generation mid-payload
+    let ckpt_dir = crash_dir.join("runs/run/ckpt");
+    let mut gens: Vec<PathBuf> = std::fs::read_dir(&ckpt_dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "txck"))
+        .collect();
+    gens.sort();
+    assert!(gens.len() >= 2, "need at least two generations to test fallback: {gens:?}");
+    let newest = gens.last().unwrap();
+    let mut bytes = std::fs::read(newest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(newest, &bytes).unwrap();
+
+    let out = train(&crash_dir, &["--checkpoint-every", "1", "--resume"], None);
+    assert!(out.status.success(), "resume: {}", String::from_utf8_lossy(&out.stderr));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("falling back to the previous generation"),
+        "expected a corrupt-generation warning: {stderr}"
+    );
+    assert_eq!(final_params(&crash_dir), final_params(&oracle_dir));
+    assert_eq!(loss_prefix(&crash_dir), loss_prefix(&oracle_dir));
+
+    std::fs::remove_dir_all(&oracle_dir).ok();
+    std::fs::remove_dir_all(&crash_dir).ok();
+}
+
+/// Resuming under different run inputs (a different seed here) is
+/// rejected up front via the stored fingerprint — never a silent
+/// divergence.
+#[test]
+fn resume_under_different_inputs_is_rejected() {
+    let dir = setup("fpr");
+    let out = train(
+        &dir,
+        &["--checkpoint-every", "1"],
+        Some(common::fault_env("train_step", 4)),
+    );
+    assert!(!out.status.success());
+
+    let mut cmd = common::texpand_cmd(&dir);
+    cmd.args([
+        "train",
+        "--backend",
+        "native",
+        "--schedule",
+        common::TINY_SCHEDULE,
+        "--steps-scale",
+        SCALE,
+        "--seed",
+        "12", // != 11
+        "--runs",
+        "runs",
+        "--run-name",
+        "run",
+        "--checkpoint-every",
+        "1",
+        "--resume",
+    ]);
+    let out = cmd.output().expect("spawn texpand");
+    assert!(!out.status.success(), "resume under a different seed must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("resume rejected"), "{stderr}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite 4 (in-process): a boundary checkpoint captures the
+/// post-surgery optimizer in canonical order — restored Adam moments
+/// validate against the restored params, and the *next* expansion plan
+/// applies cleanly on top of the restored pair.
+#[test]
+fn boundary_checkpoint_restores_optimizer_across_expansion() {
+    use texpand::autodiff::NativeBackend;
+    use texpand::ckpt::{Chain, RunCheckpoint};
+    use texpand::config::TrainConfig;
+    use texpand::coordinator::{Coordinator, CoordinatorOptions};
+    use texpand::expand::{ExpandOptions, ExpansionPlan};
+
+    let root = setup("boundary");
+    let tcfg = TrainConfig { log_every: 1000, ..Default::default() };
+    let opts = CoordinatorOptions {
+        steps_scale: 0.1, // 3 steps per stage
+        save_checkpoints: false,
+        corpus_len: 50_000,
+        // huge interval: only the forced boundary writes fire
+        checkpoint_every: 100_000,
+        ..Default::default()
+    };
+    let schedule = common::tiny_schedule();
+    let mut coord = Coordinator::new(
+        schedule.clone(),
+        common::tiny_manifest(),
+        Box::new(NativeBackend::new()),
+        tcfg.clone(),
+        opts,
+    )
+    .unwrap();
+    let root_str = root.to_str().unwrap();
+    coord.run(root_str, "run").unwrap();
+
+    let chain = Chain::open(&root.join("run/ckpt"), 3).unwrap();
+    let gens = chain.generations().unwrap();
+    assert_eq!(gens.len(), 2, "one forced checkpoint per expansion boundary");
+
+    // first boundary: the run has just grown into stage1
+    let first = chain.path_of(gens[0]);
+    let ck = RunCheckpoint::load(first.to_str().unwrap()).unwrap();
+    assert_eq!(ck.segment, 1);
+    assert_eq!(ck.local_step, 0, "boundary checkpoints restart the segment");
+    assert_eq!(ck.opt_kind, "adam");
+    assert!(ck.last_plan.is_some(), "boundary checkpoint records the applied plan");
+    assert_eq!(ck.params.config(), &schedule.stages[1].config);
+
+    // the restored moment stores line up with the restored params...
+    let mut params = ck.params.clone();
+    let mut opt = ck.to_optimizer(&tcfg).unwrap();
+    opt.validate_against(&params).unwrap();
+
+    // ...and survive the *next* scheduled surgery on top of them
+    let plan = ExpansionPlan::new(params.config(), schedule.stages[2].apply.clone()).unwrap();
+    let mut rng = texpand::rng::Pcg32::seeded(99);
+    plan.apply_train(&mut params, &mut opt, &ExpandOptions::default(), &mut rng).unwrap();
+    opt.validate_against(&params).unwrap();
+    assert_eq!(params.config(), &schedule.stages[2].config);
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Satellite 3's I/O half: a logger over failing writers surfaces the
+/// injected error through `take_write_error` and counts dropped lines —
+/// it never panics or aborts the run.
+#[test]
+fn injected_write_failures_surface_through_the_run_logger() {
+    use texpand::growth::{Decision, TrainObs};
+    use texpand::metrics::RunLogger;
+
+    let mut log = RunLogger::with_writers(
+        Box::new(common::FailingWriter::after(0)),
+        Box::new(common::FailingWriter::after(0)),
+    );
+    log.event("a", vec![]);
+    assert_eq!(log.dropped_lines(), 1);
+
+    let obs = TrainObs {
+        global_step: 1,
+        arch_step: 1,
+        train_loss: 2.0,
+        eval_loss: None,
+        tokens_seen: 64,
+        est_flops: 0.0,
+        params: 10,
+    };
+    log.decision("fixed", &obs, &Decision::Continue);
+    let err = log.take_write_error().expect("failing writer must surface an error");
+    assert!(err.to_string().contains("injected"), "{err}");
+    assert!(log.dropped_lines() >= 2);
+}
+
+/// `texpand serve --checkpoint <run>/ckpt` warm-starts the engine from
+/// the newest valid generation's trained weights.
+#[test]
+fn serve_warm_starts_from_run_checkpoint() {
+    let dir = setup("serve");
+    let out = train(&dir, &["--checkpoint-every", "4"], None);
+    assert!(out.status.success(), "train: {}", String::from_utf8_lossy(&out.stderr));
+
+    let mut cmd = common::texpand_cmd(&dir);
+    cmd.args([
+        "serve",
+        "--checkpoint",
+        "runs/run/ckpt",
+        "--requests",
+        "2",
+        "--tokens",
+        "6",
+        "--slots",
+        "2",
+        "--seed",
+        "3",
+    ]);
+    let out = cmd.output().expect("spawn texpand");
+    assert!(out.status.success(), "serve: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("warm-start"), "{stdout}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
