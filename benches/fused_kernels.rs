@@ -1,0 +1,174 @@
+//! Fused forward kernels vs their retained naive oracles, plus a compact
+//! quantized-KV measurement (ISSUE 9, DESIGN.md §17).
+//!
+//! Three comparisons on model-shaped operands, each asserting the
+//! kernel-policy contract in-bench before any timing is reported:
+//!
+//! * `rmsnorm_matmul` — the fused normalize-then-project kernel vs the
+//!   unfused two-pass (`rmsnorm_matmul_naive`); bit-identical by policy.
+//! * `attn_pv` — the register-tiled probs·V kernel vs the generic blocked
+//!   `matmul`; bit-identical by construction (same ascending-k order).
+//! * online softmax — the single-pass running-(max, norm) row pass vs the
+//!   two-pass `softmax_rows`; the one *bounded* kernel (≤ 1e-6/element).
+//!
+//! The closing `kv_quant` row decodes one short greedy sequence on the
+//! exact f32 cache and the block-quantized int8 cache, reporting the
+//! resident-bytes ratio (target ≥ 3×) and the last-logits drift — so CI
+//! gets a fast nonzero `kv_quant` signal without running the full
+//! serving bench.
+//!
+//! Rows append to `runs/bench.jsonl` with `kind` `fused_kernels` /
+//! `kv_quant`. Run: `cargo bench --bench fused_kernels`.
+//! Env: `TEXPAND_BENCH_BUDGET_MS` shrinks the per-case budget (default
+//! 1500) for CI smoke runs.
+
+use texpand::bench_util::{bench_for, Reporter};
+use texpand::config::ModelConfig;
+use texpand::json::Value;
+use texpand::model::forward_incremental;
+use texpand::params::ParamStore;
+use texpand::rng::Pcg32;
+use texpand::serve::{KvCache, QuantKvCache};
+use texpand::tensor::{softmax_rows, softmax_rows_online, Tensor};
+
+fn main() {
+    let mut rep = Reporter::new("fused_kernels");
+    let budget_ms: u64 = std::env::var("TEXPAND_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1500);
+    let budget = std::time::Duration::from_millis(budget_ms);
+
+    // ---- rmsnorm_matmul: fused normalize+project vs unfused two-pass ------
+    // (seq × hidden) · (hidden × out) at block-boundary and ragged shapes
+    for (seq, hidden, out) in [(64usize, 64usize, 128usize), (64, 128, 256), (48, 96, 144)] {
+        let mut rng = Pcg32::seeded(11);
+        let x = Tensor::randn(&[seq, hidden], &mut rng, 1.0);
+        let g = Tensor::randn(&[hidden], &mut rng, 0.5);
+        let w = Tensor::randn(&[hidden, out], &mut rng, 0.5);
+        // kernel policy: the fused path must be bit-identical to the oracle
+        assert_eq!(
+            x.rmsnorm_matmul(&g, &w).unwrap(),
+            x.rmsnorm_matmul_naive(&g, &w).unwrap(),
+            "fused rmsnorm_matmul diverged from its naive oracle"
+        );
+        let fused = bench_for(2, budget, || x.rmsnorm_matmul(&g, &w).unwrap());
+        let naive = bench_for(2, budget, || x.rmsnorm_matmul_naive(&g, &w).unwrap());
+        let speedup = naive.mean_ns / fused.mean_ns;
+        rep.row(
+            &format!("rmsnorm_matmul {seq}x{hidden}x{out} fused ({speedup:.2}x vs unfused)"),
+            &fused,
+            vec![
+                ("kind", Value::str("fused_kernels")),
+                ("kernel", Value::str("rmsnorm_matmul")),
+                ("naive_mean_ns", Value::num(naive.mean_ns)),
+                ("speedup", Value::num(speedup)),
+            ],
+        );
+    }
+
+    // ---- attn_pv: register-tiled probs·V vs the generic blocked matmul ----
+    // (seq × seq) probability rows against (seq × v) value tiles
+    for (seq, v) in [(64usize, 16usize), (64, 32), (128, 32)] {
+        let mut rng = Pcg32::seeded(12);
+        let mut probs = Tensor::randn(&[seq, seq], &mut rng, 1.0);
+        softmax_rows_online(&mut probs);
+        let vals = Tensor::randn(&[seq, v], &mut rng, 0.5);
+        assert_eq!(
+            probs.attn_pv(&vals).unwrap(),
+            probs.attn_pv_naive(&vals).unwrap(),
+            "tiled attn_pv diverged from its naive oracle"
+        );
+        let tiled = bench_for(2, budget, || probs.attn_pv(&vals).unwrap());
+        let naive = bench_for(2, budget, || probs.attn_pv_naive(&vals).unwrap());
+        let speedup = naive.mean_ns / tiled.mean_ns;
+        rep.row(
+            &format!("attn_pv {seq}x{seq}x{v} tiled ({speedup:.2}x vs naive)"),
+            &tiled,
+            vec![
+                ("kind", Value::str("fused_kernels")),
+                ("kernel", Value::str("attn_pv")),
+                ("naive_mean_ns", Value::num(naive.mean_ns)),
+                ("speedup", Value::num(speedup)),
+            ],
+        );
+    }
+
+    // ---- online softmax: single-pass running-(max, norm) vs two-pass ------
+    // the one bounded (not bit-exact) kernel: check the documented bound
+    for seq in [64usize, 128] {
+        let mut rng = Pcg32::seeded(13);
+        let scores = Tensor::randn(&[seq, seq], &mut rng, 2.0);
+        let mut online = scores.clone();
+        softmax_rows_online(&mut online);
+        let mut twopass = scores.clone();
+        softmax_rows(&mut twopass);
+        let mut drift = 0.0f32;
+        for (a, b) in online.data().iter().zip(twopass.data()) {
+            drift = drift.max((a - b).abs());
+        }
+        assert!(drift <= 1e-5, "online softmax drift {drift:e} exceeds the documented bound");
+        let one_pass = bench_for(2, budget, || {
+            let mut t = scores.clone();
+            softmax_rows_online(&mut t);
+            t
+        });
+        let two_pass = bench_for(2, budget, || {
+            let mut t = scores.clone();
+            softmax_rows(&mut t);
+            t
+        });
+        let speedup = two_pass.mean_ns / one_pass.mean_ns;
+        rep.row(
+            &format!("softmax {seq}x{seq} online ({speedup:.2}x vs two-pass, drift {drift:.1e})"),
+            &one_pass,
+            vec![
+                ("kind", Value::str("fused_kernels")),
+                ("kernel", Value::str("softmax_online")),
+                ("naive_mean_ns", Value::num(two_pass.mean_ns)),
+                ("speedup", Value::num(speedup)),
+                ("max_drift", Value::num(drift as f64)),
+            ],
+        );
+    }
+
+    // ---- compact quantized-KV row -----------------------------------------
+    // one short decode per tier at k=v=16 (the smallest width where the
+    // int8 tier clears 3×); drift is measured on the pending last-logits,
+    // the quantity a hot-swap recomputes
+    {
+        let cfg = ModelConfig {
+            layers: 2, hidden: 32, heads: 2, k: 16, v: 16, mlp: 64, seq: 32, vocab: 64,
+        };
+        let mut rng = Pcg32::seeded(14);
+        let params = ParamStore::init(&cfg, &mut rng, 0.05);
+        let tokens: Vec<u32> = (0..16).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let mut exact = KvCache::new(&cfg);
+        let mut quant = QuantKvCache::new(&cfg);
+        for &t in &tokens {
+            forward_incremental(&cfg, &params, &mut exact, t).unwrap();
+            forward_incremental(&cfg, &params, &mut quant, t).unwrap();
+        }
+        let le = exact.last_logits(&params).unwrap();
+        let lq = quant.last_logits(&params).unwrap();
+        let mut drift = 0.0f32;
+        for (a, b) in le.data().iter().zip(lq.data()) {
+            drift = drift.max((a - b).abs());
+        }
+        let ratio = exact.kv_resident_bytes() as f64 / quant.kv_resident_bytes() as f64;
+        assert!(ratio >= 3.0, "quant KV bytes ratio {ratio:.2} below the 3x target");
+        rep.value_row(
+            &format!("quant kv bytes ratio (drift {drift:.1e})"),
+            "bytes_ratio",
+            ratio,
+            vec![
+                ("kind", Value::str("kv_quant")),
+                ("kv_bytes_per_seq", Value::num(quant.kv_resident_bytes() as f64)),
+                ("f32_kv_bytes_per_seq", Value::num(exact.kv_resident_bytes() as f64)),
+                ("logit_drift", Value::num(drift as f64)),
+            ],
+        );
+    }
+
+    rep.flush();
+}

@@ -1,11 +1,18 @@
 //! Serving decode latency: KV-cached incremental decode vs the KV-less
-//! full-re-forward oracle, and batched vs sequential engine throughput.
+//! full-re-forward oracle, batched vs sequential engine throughput, and
+//! the int8-quantized KV tier vs exact f32.
 //!
 //! Acceptance target (ISSUE 1): KV-cached decode ≥ 3× tokens/sec over full
 //! re-forward at the largest benchmarked stage. The asymptotics are on the
 //! cache's side — a full re-forward pays O(seq²) attention per token over
 //! the whole (padded) window, the incremental path one position — so the
 //! ratio *grows* with stage size; the bench prints it per stage.
+//!
+//! ISSUE 9 adds the `kv_quant` series: per stage, a greedy decode on the
+//! block-quantized int8 cache next to the exact f32 one, reporting
+//! `kv_bytes_per_seq` for both, the resident-bytes ratio (target ≥ 3×),
+//! and the fraction of greedy tokens that match the exact tier. Every
+//! timed row also carries its `kv_bytes_per_seq` and p99 latency.
 //!
 //! Run: `cargo bench --bench serving_latency`
 
@@ -16,7 +23,7 @@ use texpand::json::Value;
 use texpand::model::forward_incremental;
 use texpand::params::ParamStore;
 use texpand::rng::Pcg32;
-use texpand::serve::{Engine, EngineOptions, KvCache};
+use texpand::serve::{Engine, EngineOptions, KvCache, KvCacheImpl, KvStorage, QuantKvCache};
 
 fn stages() -> Vec<(&'static str, ModelConfig)> {
     vec![
@@ -62,6 +69,32 @@ fn kv_decode(params: &ParamStore, prompt: &[u32], new_tokens: usize) {
     sample_from_logits(last.row(0), &greedy(), &mut rng);
 }
 
+/// Greedy decode over any KV storage tier, returning the generated
+/// tokens and the cache's resident K/V bytes at the end — the
+/// token-match and bytes comparisons between tiers read both sides
+/// through this one loop.
+fn decode_tokens<S: KvStorage>(
+    params: &ParamStore,
+    cache: &mut KvCacheImpl<S>,
+    prompt: &[u32],
+    new_tokens: usize,
+) -> (Vec<u32>, usize) {
+    let cfg = *params.config();
+    let mut last = None;
+    for &t in prompt {
+        last = Some(forward_incremental(&cfg, params, cache, t).expect("prime"));
+    }
+    let mut rng = Pcg32::seeded(0);
+    let mut logits = last.expect("non-empty prompt");
+    let mut out = Vec::with_capacity(new_tokens);
+    for _ in 0..new_tokens {
+        let next = sample_from_logits(logits.row(0), &greedy(), &mut rng);
+        out.push(next);
+        logits = forward_incremental(&cfg, params, cache, next).expect("decode");
+    }
+    (out, cache.kv_resident_bytes())
+}
+
 /// Submit `prompts` and drain the engine. Callers time this with one
 /// `make_engine` per iteration on *both* sides of a comparison, so engine
 /// setup (params clone + probe synthesis) cancels out instead of biasing
@@ -89,6 +122,10 @@ fn main() {
         let one_prompt = vec![prompt(&cfg, 8, 2)];
 
         // --- single-sequence decode: KV cache vs full re-forward ---------
+        let (f32_tokens, f32_bytes) = {
+            let mut cache = KvCache::new(&cfg);
+            decode_tokens(&params, &mut cache, &one_prompt[0], new_tokens)
+        };
         let kv: Stats = bench(1, 3, || kv_decode(&params, &one_prompt[0], new_tokens));
         rep.row(
             &format!("{stage_name:<14} kv-cached decode x{new_tokens}"),
@@ -96,6 +133,7 @@ fn main() {
             vec![
                 ("params", Value::num(n_params as f64)),
                 ("tokens_per_sec", Value::num(kv.per_second(new_tokens as f64))),
+                ("kv_bytes_per_seq", Value::num(f32_bytes as f64)),
             ],
         );
         let full: Stats =
@@ -114,6 +152,34 @@ fn main() {
             "speedup",
             speedup,
             vec![("params", Value::num(n_params as f64))],
+        );
+
+        // --- quantized KV tier: resident bytes and greedy fidelity -------
+        // same decode loop on both tiers; the ratio row is what ci.sh
+        // greps for (target ≥ 3× smaller, DESIGN.md §17)
+        let (q_tokens, q_bytes) = {
+            let mut cache = QuantKvCache::new(&cfg);
+            decode_tokens(&params, &mut cache, &one_prompt[0], new_tokens)
+        };
+        let matched =
+            f32_tokens.iter().zip(&q_tokens).filter(|(a, b)| a == b).count();
+        let quant: Stats = bench(1, 3, || {
+            let mut cache = QuantKvCache::new(&cfg);
+            decode_tokens(&params, &mut cache, &one_prompt[0], new_tokens)
+        });
+        let bytes_ratio = f32_bytes as f64 / q_bytes as f64;
+        rep.row(
+            &format!("{stage_name:<14} quant-kv decode x{new_tokens} ({bytes_ratio:.2}x fewer bytes)"),
+            &quant,
+            vec![
+                ("kind", Value::str("kv_quant")),
+                ("params", Value::num(n_params as f64)),
+                ("tokens_per_sec", Value::num(quant.per_second(new_tokens as f64))),
+                ("kv_bytes_per_seq", Value::num(q_bytes as f64)),
+                ("f32_kv_bytes_per_seq", Value::num(f32_bytes as f64)),
+                ("bytes_ratio", Value::num(bytes_ratio)),
+                ("greedy_match_frac", Value::num(matched as f64 / new_tokens as f64)),
+            ],
         );
 
         // --- batched vs sequential engine throughput ---------------------
@@ -148,4 +214,5 @@ fn main() {
     }
     rep.flush();
     println!("\ntarget (ISSUE 1): kv speedup >= 3x at the largest stage.");
+    println!("target (ISSUE 9): quant kv >= 3x fewer resident bytes per sequence.");
 }

@@ -6,7 +6,10 @@
 //! `Optimizer::step`; a thread-scaling series over the data-parallel
 //! batch fan-out (rows carry `threads`, `tokens_per_sec` and
 //! `speedup_vs_1t`, and the bench *asserts* serial-vs-parallel grads are
-//! bit-identical before reporting); and the kernel comparisons that
+//! bit-identical before reporting); a `backward_within_row_threads`
+//! series at batch 1, where the per-head decomposition inside
+//! `backward_seq_pooled` is the only parallelism available (same
+//! bit-identity assertion); and the kernel comparisons that
 //! justify the `tensor` hot-path rework — blocked `matmul` vs naive,
 //! tiled `matmul_bt` vs naive, blocked `matmul_at` vs naive. Rows append
 //! to `runs/bench.jsonl`.
@@ -137,6 +140,72 @@ fn main() {
                 &stats,
                 vec![
                     ("kind", Value::str("loss_and_grads_threads")),
+                    ("params", Value::num(cfg.num_params() as f64)),
+                    ("threads", Value::num(threads as f64)),
+                    ("tokens_per_sec", Value::num(stats.per_second(tokens_per_step))),
+                    ("speedup_vs_1t", Value::num(speedup)),
+                ],
+            );
+        }
+    }
+
+    // ---- within-row backward scaling at batch 1 ---------------------------
+    // a single-row batch gives the data-parallel fan-out nothing to split,
+    // so it used to serialize on one core; backward_seq_pooled decomposes
+    // the MHA backward into per-head tasks with a fixed-order merge
+    // instead, keeping grads bit-identical at every thread count (asserted
+    // below) while the step speeds up — the batch-1 fine-tune /
+    // probe-train regime the series above cannot touch (DESIGN.md §17).
+    {
+        let cfg = ModelConfig {
+            layers: 2, hidden: 64, heads: 4, k: 16, v: 16, mlp: 128, seq: 64, vocab: 256,
+        };
+        let label = "row   (2L h64 4H, batch 1)";
+        let mut rng = Pcg32::seeded(6);
+        let params = ParamStore::init(&cfg, &mut rng, 0.02);
+        let batch = Batch::random(&cfg, 1, 7);
+        let tokens_per_step = cfg.seq as f64;
+
+        let mut counts = vec![1usize, 2, 4, env_threads()];
+        counts.sort_unstable();
+        counts.dedup();
+
+        let bits = |grads: &[Tensor]| -> Vec<Vec<u32>> {
+            grads.iter().map(|g| g.data().iter().map(|x| x.to_bits()).collect()).collect()
+        };
+        let (base_loss, base_grads) =
+            loss_and_grads_pooled(&cfg, &params, &batch, &Pool::new(1), None).unwrap();
+        let base_bits = bits(&base_grads);
+        for &threads in &counts {
+            let (l, g) =
+                loss_and_grads_pooled(&cfg, &params, &batch, &Pool::new(threads), None).unwrap();
+            assert!(
+                l.to_bits() == base_loss.to_bits() && bits(&g) == base_bits,
+                "within-row backward grads diverged at {threads} threads — determinism bug"
+            );
+        }
+        rep.value_row(
+            &format!("{label} per-head grads bit-identical"),
+            "bitexact",
+            1.0,
+            vec![("kind", Value::str("backward_within_row_bitexact"))],
+        );
+
+        let mut t1_ns = f64::NAN;
+        for &threads in &counts {
+            let pool = Pool::new(threads);
+            let stats = bench_for(1, budget, || {
+                loss_and_grads_pooled(&cfg, &params, &batch, &pool, None).unwrap()
+            });
+            if threads == 1 {
+                t1_ns = stats.mean_ns;
+            }
+            let speedup = t1_ns / stats.mean_ns;
+            rep.row(
+                &format!("{label} backward @{threads}t ({speedup:.2}x vs 1t)"),
+                &stats,
+                vec![
+                    ("kind", Value::str("backward_within_row_threads")),
                     ("params", Value::num(cfg.num_params() as f64)),
                     ("threads", Value::num(threads as f64)),
                     ("tokens_per_sec", Value::num(stats.per_second(tokens_per_step))),

@@ -140,13 +140,52 @@ if [ "$FAST" = "0" ]; then
     exit 1
   fi
 
+  echo "==> checkpoint chain verify smoke (texpand ckpt on the crash/resume chain)"
+  # the resumed run above left a real generation chain behind; `ckpt
+  # verify` must validate it without resuming, and `ckpt list` must show
+  # at least one valid generation row
+  ./target/release/texpand ckpt verify "$SMOKE_RUNS/ci-resume/ckpt"
+  if ! ./target/release/texpand ckpt list "$SMOKE_RUNS/ci-resume/ckpt" | grep -q 'valid'; then
+    echo "ci.sh: ckpt list shows no valid generation for ci-resume" >&2
+    exit 1
+  fi
+  # a corrupt-only chain must exit nonzero (the resumability gate)
+  BAD_CHAIN="$SMOKE_RUNS/bad-chain"
+  mkdir -p "$BAD_CHAIN"
+  printf 'TXCKgarbage' > "$BAD_CHAIN/gen-000001.txck"
+  if ./target/release/texpand ckpt verify "$BAD_CHAIN" > /dev/null 2>&1; then
+    echo "ci.sh: ckpt verify passed a corrupt-only chain" >&2
+    exit 1
+  fi
+
   echo "==> train-step bench smoke (TEXPAND_THREADS=2, tiny budget)"
-  # also asserts serial-vs-parallel grads are bit-identical (in-bench check)
+  # also asserts serial-vs-parallel grads are bit-identical, and that the
+  # batch-1 within-row per-head backward is bit-identical at 1/2/4 threads
+  # (both in-bench checks)
   TEXPAND_THREADS=2 TEXPAND_BENCH_BUDGET_MS=60 cargo bench --bench train_step
   # throughput regressions fail fast: the freshest step rows must report a
   # nonzero tokens/sec (a NaN serializes as null and also fails this grep)
   if ! grep '"kind":"step"' runs/bench.jsonl | tail -n 3 | grep -Eq '"tokens_per_sec":[1-9]'; then
     echo "ci.sh: no nonzero tokens/sec step row in runs/bench.jsonl" >&2
+    exit 1
+  fi
+  # the ISSUE 9 within-row series must land with nonzero throughput
+  if ! grep '"kind":"backward_within_row_threads"' runs/bench.jsonl | tail -n 4 \
+    | grep -Eq '"tokens_per_sec":[1-9]'; then
+    echo "ci.sh: no nonzero backward_within_row_threads row in runs/bench.jsonl" >&2
+    exit 1
+  fi
+
+  echo "==> fused-kernels bench smoke (oracle equivalence + quant KV ratio)"
+  # in-bench asserts: fused kernels bit-identical to their naive oracles,
+  # online softmax within its bound, quant KV >= 3x fewer resident bytes
+  TEXPAND_BENCH_BUDGET_MS=60 cargo bench --bench fused_kernels
+  if ! grep '"kind":"fused_kernels"' runs/bench.jsonl | tail -n 8 | grep -Eq '"speedup":[0-9]*\.?[0-9]*[1-9]'; then
+    echo "ci.sh: no nonzero fused_kernels speedup row in runs/bench.jsonl" >&2
+    exit 1
+  fi
+  if ! grep '"kind":"kv_quant"' runs/bench.jsonl | tail -n 3 | grep -Eq '"bytes_ratio":[3-9]'; then
+    echo "ci.sh: no kv_quant row with bytes_ratio >= 3 in runs/bench.jsonl" >&2
     exit 1
   fi
 

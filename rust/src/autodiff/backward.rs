@@ -18,6 +18,18 @@
 //! O(1e-7)-relative reassociation difference (the loss itself stays
 //! bit-identical — its f64 terms always sum in row order).
 //!
+//! **Within-row parallelism** (DESIGN.md §17): when a chunk has exactly
+//! one row — batch-1 fine-tuning, GreedyBranch probe training — the outer
+//! fan-out degenerates and the pool is handed *into* the row instead.
+//! [`backward_seq_pooled`] fans the per-head attention backward (the
+//! dominant cost of a layer's reverse walk) across the pool: each head's
+//! four gradient tiles `(dWq, dWk, dWv, d_nrm1_e)` are a pure function of
+//! the tape and the shared upstream `d_concat`, so heads compute
+//! independently and merge on the calling thread in ascending head order.
+//! The merge order depends only on the model shape, never the worker
+//! count, so grads stay bit-identical at any `--threads` setting — same
+//! argument as the batch-row tree reduction.
+//!
 //! The walk is the forward tape in reverse (derivations in DESIGN.md §10):
 //!
 //! ```text
@@ -34,6 +46,7 @@
 use crate::config::ModelConfig;
 use crate::data::Batch;
 use crate::error::{Error, Result};
+use crate::model::rmsnorm;
 use crate::parallel::Pool;
 use crate::params::ParamStore;
 use crate::tensor::Tensor;
@@ -49,13 +62,29 @@ fn accumulate(grads: &mut ParamStore, name: &str, delta: &Tensor) -> Result<()> 
     grads.get_mut(name)?.add_assign(delta)
 }
 
-/// Backward for one taped sequence; accumulates into `grads`.
+/// Backward for one taped sequence; accumulates into `grads`. Serial
+/// entry point: [`backward_seq_pooled`] with a one-worker pool (the
+/// per-head merge below runs in the same fixed order either way, so the
+/// two are bit-identical).
 pub fn backward_seq(
     cfg: &ModelConfig,
     params: &ParamStore,
     tape: &SeqTape,
     d_logits: &Tensor,
     grads: &mut ParamStore,
+) -> Result<()> {
+    backward_seq_pooled(cfg, params, tape, d_logits, grads, &Pool::new(1))
+}
+
+/// [`backward_seq`] with the per-head attention backward fanned out
+/// across `pool` (see the module docs for the determinism argument).
+pub fn backward_seq_pooled(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    tape: &SeqTape,
+    d_logits: &Tensor,
+    grads: &mut ParamStore,
+    pool: &Pool,
 ) -> Result<()> {
     if d_logits.shape() != tape.logits.shape() {
         return Err(Error::Shape(format!(
@@ -77,7 +106,11 @@ pub fn backward_seq(
         let mut d_hid = dx.matmul_bt(params.get(&format!("layer_{n}.w2"))?)?;
         relu_backward_inplace(&mut d_hid, &lt.hid)?;
         accumulate(grads, &format!("layer_{n}.b1"), &col_sums(&d_hid)?)?;
-        accumulate(grads, &format!("layer_{n}.w1"), &lt.nrm2.matmul_at(&d_hid)?)?;
+        // normalized MLP input: recomputed from x_mid, not stored on the
+        // tape (RMSNorm is deterministic — this equals the forward's tile
+        // bit for bit)
+        let nrm2 = rmsnorm(&lt.x_mid, params.get(&format!("layer_{n}.g_mlp"))?)?;
+        accumulate(grads, &format!("layer_{n}.w1"), &nrm2.matmul_at(&d_hid)?)?;
         let d_nrm2 = d_hid.matmul_bt(params.get(&format!("layer_{n}.w1"))?)?;
         let (dx_mid, d_g_mlp) =
             rmsnorm_backward(&lt.x_mid, params.get(&format!("layer_{n}.g_mlp"))?, &d_nrm2)?;
@@ -88,17 +121,37 @@ pub fn backward_seq(
         // ---- MHA half (reverse): x_mid = x_in + Concat_e(head_e) · Wo
         accumulate(grads, &format!("layer_{n}.wo"), &lt.concat.matmul_at(&dx)?)?;
         let d_concat = dx.matmul_bt(params.get(&format!("layer_{n}.wo"))?)?;
+        // normalized MHA input, recomputed from x_in (see nrm2 above)
+        let nrm1 = rmsnorm(&lt.x_in, params.get(&format!("layer_{n}.g_mha"))?)?;
+        // within-row fan-out: each head's grad tiles are a pure function
+        // of (tape, nrm1, d_concat), so heads run independently on the
+        // pool; the subtotals merge below in ascending head order on the
+        // calling thread, which keeps the result bit-identical at any
+        // worker count (module docs)
+        let head_ids: Vec<usize> = (0..cfg.heads).collect();
+        let per_head: Vec<Result<(Tensor, Tensor, Tensor, Tensor)>> =
+            pool.map(&head_ids, |_, &e| {
+                let ht = &lt.heads[e];
+                let d_head = d_concat.slice_cols(e * cfg.v, (e + 1) * cfg.v)?;
+                let (dq, dk, dv) = attention_backward(&ht.q, &ht.k, &ht.v, &ht.probs, &d_head)?;
+                let dwq = nrm1.matmul_at(&dq)?;
+                let dwk = nrm1.matmul_at(&dk)?;
+                let dwv = nrm1.matmul_at(&dv)?;
+                // this head's d(nrm1) subtotal: q-path, then k, then v —
+                // the same within-head addition order the serial walk used
+                let mut d_nrm1_e =
+                    dq.matmul_bt(params.get(&format!("layer_{n}.head_{e}.wq"))?)?;
+                d_nrm1_e.add_assign(&dk.matmul_bt(params.get(&format!("layer_{n}.head_{e}.wk"))?)?)?;
+                d_nrm1_e.add_assign(&dv.matmul_bt(params.get(&format!("layer_{n}.head_{e}.wv"))?)?)?;
+                Ok((dwq, dwk, dwv, d_nrm1_e))
+            });
         let mut d_nrm1 = Tensor::zeros(&[cfg.seq, cfg.hidden]);
-        for e in 0..cfg.heads {
-            let ht = &lt.heads[e];
-            let d_head = d_concat.slice_cols(e * cfg.v, (e + 1) * cfg.v)?;
-            let (dq, dk, dv) = attention_backward(&ht.q, &ht.k, &ht.v, &ht.probs, &d_head)?;
-            accumulate(grads, &format!("layer_{n}.head_{e}.wq"), &lt.nrm1.matmul_at(&dq)?)?;
-            accumulate(grads, &format!("layer_{n}.head_{e}.wk"), &lt.nrm1.matmul_at(&dk)?)?;
-            accumulate(grads, &format!("layer_{n}.head_{e}.wv"), &lt.nrm1.matmul_at(&dv)?)?;
-            d_nrm1.add_assign(&dq.matmul_bt(params.get(&format!("layer_{n}.head_{e}.wq"))?)?)?;
-            d_nrm1.add_assign(&dk.matmul_bt(params.get(&format!("layer_{n}.head_{e}.wk"))?)?)?;
-            d_nrm1.add_assign(&dv.matmul_bt(params.get(&format!("layer_{n}.head_{e}.wv"))?)?)?;
+        for (e, res) in per_head.into_iter().enumerate() {
+            let (dwq, dwk, dwv, d_nrm1_e) = res?;
+            accumulate(grads, &format!("layer_{n}.head_{e}.wq"), &dwq)?;
+            accumulate(grads, &format!("layer_{n}.head_{e}.wk"), &dwk)?;
+            accumulate(grads, &format!("layer_{n}.head_{e}.wv"), &dwv)?;
+            d_nrm1.add_assign(&d_nrm1_e)?;
         }
         let (dx_in, d_g_mha) =
             rmsnorm_backward(&lt.x_in, params.get(&format!("layer_{n}.g_mha"))?, &d_nrm1)?;
@@ -128,20 +181,24 @@ pub fn backward_seq(
 
 /// Forward + backward for one batch row into a fresh zeroed store. The
 /// unit of work the pool fans out; pure function of its arguments, so row
-/// results cannot depend on scheduling.
+/// results cannot depend on scheduling. `inner` is the pool handed to the
+/// within-row per-head fan-out — one worker when batch rows already
+/// saturate the outer fan-out, the full pool when this row is the only
+/// one (batch-1 fine-tuning, probe training).
 fn row_loss_and_grads(
     cfg: &ModelConfig,
     params: &ParamStore,
     tokens: &[u32],
     targets: &[u32],
     count: usize,
+    inner: &Pool,
 ) -> Result<(ParamStore, f64)> {
     let tape = forward_with_tape(cfg, params, tokens)?;
     // one pass computes both the gradient and this sequence's loss
     // terms (bit-identical to model::cross_entropy's accumulation)
     let (d_logits, seq_loss) = cross_entropy_grad_with_loss(&tape.logits, targets, count)?;
     let mut grads = ParamStore::zeros(cfg);
-    backward_seq(cfg, params, &tape, &d_logits, &mut grads)?;
+    backward_seq_pooled(cfg, params, &tape, &d_logits, &mut grads, inner)?;
     Ok((grads, seq_loss))
 }
 
@@ -206,8 +263,13 @@ pub fn loss_and_grads_pooled(
     while lo < rows {
         let hi = (lo + micro).min(rows);
         let indices: Vec<usize> = (lo..hi).collect();
+        // single-row chunk: the outer fan-out has nothing to parallelize,
+        // so the pool moves inside the row (per-head backward); multi-row
+        // chunks keep the data-parallel fan-out and run rows serially
+        // inside their worker
+        let inner = if indices.len() == 1 { *pool } else { Pool::new(1) };
         let row_results: Vec<Result<(ParamStore, f64)>> = pool.map(&indices, |_, &r| {
-            row_loss_and_grads(cfg, params, &batch.tokens[r], &batch.targets[r], count)
+            row_loss_and_grads(cfg, params, &batch.tokens[r], &batch.targets[r], count, &inner)
         });
         let mut stores = Vec::with_capacity(row_results.len());
         for res in row_results {
@@ -457,6 +519,20 @@ mod tests {
         let (ld, gd) = loss_and_grads(&cfg, &params, &batch).unwrap();
         assert_eq!(l1.to_bits(), ld.to_bits());
         assert_eq!(bits_of(&g1), bits_of(&gd));
+
+        // batch 1: the outer fan-out degenerates to one row, so the pool
+        // is handed to the within-row per-head fan-out instead — the
+        // fixed-order head merge must keep grads bit-identical there too
+        let single = random_batch(&cfg, 1, &mut rng);
+        let (sl1, sg1) =
+            loss_and_grads_pooled(&cfg, &params, &single, &crate::parallel::Pool::new(1), None)
+                .unwrap();
+        for threads in [2usize, 4] {
+            let pool = crate::parallel::Pool::new(threads);
+            let (sln, sgn) = loss_and_grads_pooled(&cfg, &params, &single, &pool, None).unwrap();
+            assert_eq!(sl1.to_bits(), sln.to_bits(), "batch-1 loss diverged at {threads} threads");
+            assert_eq!(bits_of(&sg1), bits_of(&sgn), "batch-1 grads diverged at {threads} threads");
+        }
     }
 
     #[test]

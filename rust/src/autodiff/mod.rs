@@ -40,5 +40,5 @@ pub mod ops;
 pub mod tape;
 
 pub use backend::{ExecBackend, NativeBackend};
-pub use backward::{backward_seq, loss_and_grads, loss_and_grads_pooled};
+pub use backward::{backward_seq, backward_seq_pooled, loss_and_grads, loss_and_grads_pooled};
 pub use tape::{forward_with_tape, SeqTape};

@@ -2,14 +2,18 @@
 //! records exactly the intermediates the backward pass needs.
 //!
 //! The taped forward mirrors [`crate::model::forward_one`] operation for
-//! operation (same kernels, same summation order), so its logits are
-//! bit-identical to the reference forward — the test below asserts exact
-//! equality. What it saves per layer is the minimal set:
+//! operation (same kernels — including the fused `rmsnorm_matmul` on the
+//! Norm→W1 edge, the online softmax, and the tiled `attn_pv` — in the
+//! same order), so its logits are bit-identical to the reference forward;
+//! the test below asserts exact equality. What it saves per layer is the
+//! minimal set:
 //!
 //! * the residual-stream input of each half (`x_in`, `x_mid`) — RMSNorm
-//!   backward needs its *input*,
-//! * the normalized tiles (`nrm1`, `nrm2`) — weight grads of the Q/K/V/W1
-//!   projections,
+//!   backward needs its *input*, and the normalized tiles the projection
+//!   weight-grads need are *recomputed* from these in the backward pass
+//!   (RMSNorm is deterministic, so recompute == stored, bit for bit —
+//!   dropping `nrm1`/`nrm2` from the tape saves two `[s, h]` tiles per
+//!   layer),
 //! * per head: the projected `q`/`k`/`v` and the post-softmax `probs`
 //!   (attention backward re-uses probabilities instead of recomputing the
 //!   masked softmax),
@@ -20,7 +24,7 @@ use crate::config::ModelConfig;
 use crate::error::{Error, Result};
 use crate::model::MASK_VALUE;
 use crate::params::ParamStore;
-use crate::tensor::{softmax_rows, Tensor};
+use crate::tensor::{softmax_rows_online, Tensor};
 
 /// Saved activations for one attention head.
 #[derive(Clone, Debug)]
@@ -36,17 +40,15 @@ pub struct HeadTape {
 /// Saved activations for one transformer layer.
 #[derive(Clone, Debug)]
 pub struct LayerTape {
-    /// Residual stream entering the layer `[s, h]`.
+    /// Residual stream entering the layer `[s, h]` (`rmsnorm(x_in, g_mha)`
+    /// is recomputed by the backward pass, not stored).
     pub x_in: Tensor,
-    /// `rmsnorm(x_in, g_mha)`.
-    pub nrm1: Tensor,
     pub heads: Vec<HeadTape>,
     /// Concatenated head outputs `[s, E*v]`.
     pub concat: Tensor,
-    /// Residual stream after the MHA half `[s, h]`.
+    /// Residual stream after the MHA half `[s, h]` (`rmsnorm(x_mid,
+    /// g_mlp)` is likewise recomputed on demand).
     pub x_mid: Tensor,
-    /// `rmsnorm(x_mid, g_mlp)`.
-    pub nrm2: Tensor,
     /// Post-ReLU MLP hidden tile `[s, p]`.
     pub hid: Tensor,
 }
@@ -106,9 +108,9 @@ pub fn forward_with_tape(cfg: &ModelConfig, params: &ParamStore, tokens: &[u32])
                     scores.set(i, j, MASK_VALUE);
                 }
             }
-            softmax_rows(&mut scores);
+            softmax_rows_online(&mut scores);
             let probs = scores;
-            let head = probs.matmul(&v)?;
+            let head = probs.attn_pv(&v)?;
             for i in 0..s {
                 let dst = concat.row_mut(i);
                 dst[e * cfg.v..(e + 1) * cfg.v].copy_from_slice(head.row(i));
@@ -119,16 +121,19 @@ pub fn forward_with_tape(cfg: &ModelConfig, params: &ParamStore, tokens: &[u32])
         x.add_assign(&mha_out)?;
         let x_mid = x.clone();
 
-        // ---- MLP half: x += ReLU(nrm2·W1 + b1)·W2 + b2 ----
-        let nrm2 = crate::model::rmsnorm(&x, params.get(&format!("layer_{n}.g_mlp"))?)?;
-        let mut hid = nrm2.matmul(params.get(&format!("layer_{n}.w1"))?)?;
+        // ---- MLP half: x += ReLU(Norm(x)·W1 + b1)·W2 + b2, with the
+        // Norm→W1 edge fused (bit-identical to the unfused pair) ----
+        let mut hid = x.rmsnorm_matmul(
+            params.get(&format!("layer_{n}.g_mlp"))?,
+            params.get(&format!("layer_{n}.w1"))?,
+        )?;
         hid.add_row_broadcast(params.get(&format!("layer_{n}.b1"))?)?;
         hid.map_inplace(|v| v.max(0.0));
         let mut mlp_out = hid.matmul(params.get(&format!("layer_{n}.w2"))?)?;
         mlp_out.add_row_broadcast(params.get(&format!("layer_{n}.b2"))?)?;
         x.add_assign(&mlp_out)?;
 
-        layers.push(LayerTape { x_in, nrm1, heads, concat, x_mid, nrm2, hid });
+        layers.push(LayerTape { x_in, heads, concat, x_mid, hid });
     }
 
     let x_final = x.clone();
@@ -166,7 +171,6 @@ mod tests {
         assert_eq!(tape.layers.len(), c.layers);
         for lt in &tape.layers {
             assert_eq!(lt.x_in.shape(), &[c.seq, c.hidden]);
-            assert_eq!(lt.nrm1.shape(), &[c.seq, c.hidden]);
             assert_eq!(lt.heads.len(), c.heads);
             for ht in &lt.heads {
                 assert_eq!(ht.q.shape(), &[c.seq, c.k]);
@@ -184,7 +188,6 @@ mod tests {
             }
             assert_eq!(lt.concat.shape(), &[c.seq, c.heads * c.v]);
             assert_eq!(lt.x_mid.shape(), &[c.seq, c.hidden]);
-            assert_eq!(lt.nrm2.shape(), &[c.seq, c.hidden]);
             assert_eq!(lt.hid.shape(), &[c.seq, c.mlp]);
             assert!(lt.hid.data().iter().all(|&v| v >= 0.0), "hid must be post-ReLU");
         }

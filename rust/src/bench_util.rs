@@ -2,7 +2,7 @@
 //!
 //! `cargo bench` targets in `benches/` are plain `harness = false` binaries
 //! built on this module: warmup, fixed-iteration or fixed-duration timing,
-//! and robust summary statistics (mean / p50 / p95 / min). Output is both
+//! and robust summary statistics (mean / p50 / p95 / p99 / min). Output is both
 //! human-readable rows and machine-readable JSONL (consumed by
 //! EXPERIMENTS.md tooling).
 
@@ -17,6 +17,7 @@ pub struct Stats {
     pub mean_ns: f64,
     pub p50_ns: f64,
     pub p95_ns: f64,
+    pub p99_ns: f64,
     pub min_ns: f64,
     pub max_ns: f64,
 }
@@ -32,6 +33,7 @@ impl Stats {
             mean_ns: mean,
             p50_ns: pct(0.50),
             p95_ns: pct(0.95),
+            p99_ns: pct(0.99),
             min_ns: ns[0],
             max_ns: *ns.last().unwrap(),
         }
@@ -90,18 +92,22 @@ impl Reporter {
     pub fn new(bench_name: impl Into<String>) -> Reporter {
         let name = bench_name.into();
         println!("\n=== bench: {name} ===");
-        println!("{:<44} {:>12} {:>12} {:>12} {:>10}", "case", "mean", "p50", "p95", "iters");
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12} {:>10}",
+            "case", "mean", "p50", "p95", "p99", "iters"
+        );
         Reporter { bench_name: name, jsonl: Vec::new() }
     }
 
     /// Report a timed case; `extra` lands in the JSONL record.
     pub fn row(&mut self, case: &str, stats: &Stats, extra: Vec<(&str, Value)>) {
         println!(
-            "{:<44} {:>12} {:>12} {:>12} {:>10}",
+            "{:<44} {:>12} {:>12} {:>12} {:>12} {:>10}",
             case,
             fmt_ns(stats.mean_ns),
             fmt_ns(stats.p50_ns),
             fmt_ns(stats.p95_ns),
+            fmt_ns(stats.p99_ns),
             stats.iters
         );
         let mut fields = vec![
@@ -110,6 +116,7 @@ impl Reporter {
             ("mean_ns", Value::num(stats.mean_ns)),
             ("p50_ns", Value::num(stats.p50_ns)),
             ("p95_ns", Value::num(stats.p95_ns)),
+            ("p99_ns", Value::num(stats.p99_ns)),
             ("iters", Value::num(stats.iters as f64)),
         ];
         fields.extend(extra);
@@ -164,7 +171,8 @@ mod tests {
         let stats = bench(2, 10, || (0..1000).sum::<u64>());
         assert_eq!(stats.iters, 10);
         assert!(stats.mean_ns > 0.0);
-        assert!(stats.min_ns <= stats.p50_ns && stats.p50_ns <= stats.p95_ns && stats.p95_ns <= stats.max_ns);
+        assert!(stats.min_ns <= stats.p50_ns && stats.p50_ns <= stats.p95_ns);
+        assert!(stats.p95_ns <= stats.p99_ns && stats.p99_ns <= stats.max_ns);
     }
 
     #[test]
@@ -176,7 +184,15 @@ mod tests {
 
     #[test]
     fn throughput_math() {
-        let stats = Stats { iters: 1, mean_ns: 1e9, p50_ns: 1e9, p95_ns: 1e9, min_ns: 1e9, max_ns: 1e9 };
+        let stats = Stats {
+            iters: 1,
+            mean_ns: 1e9,
+            p50_ns: 1e9,
+            p95_ns: 1e9,
+            p99_ns: 1e9,
+            min_ns: 1e9,
+            max_ns: 1e9,
+        };
         assert!((stats.per_second(500.0) - 500.0).abs() < 1e-9);
         assert!((stats.mean_ms() - 1000.0).abs() < 1e-9);
     }

@@ -44,7 +44,7 @@ use crate::model;
 use crate::optim::Optimizer;
 use crate::params::ParamStore;
 use crate::rng::Pcg32;
-use crate::serve::kv::KvCache;
+use crate::serve::kv::{GrowBuf, KvCacheImpl, KvStorage};
 
 /// Estimated forward FLOPs per token for one architecture, at full-`seq`
 /// attention context (a multiply-accumulate counts as 2 FLOPs). Matmuls
@@ -491,13 +491,17 @@ impl Expandable for Optimizer {
 /// An in-flight KV cache staged through a hot-swap: a clone of the live
 /// cache paired with the post-surgery parameters its K/V rows are rebuilt
 /// from. The serve-side [`Expandable`] target — the engine stages one per
-/// slot, applies the plan to each, and commits all-or-nothing.
-pub struct StagedKv<'p> {
-    pub cache: KvCache,
+/// slot, applies the plan to each, and commits all-or-nothing. Generic
+/// over the K/V storage backend (defaulting to the exact-f32
+/// [`crate::serve::kv::GrowBuf`]) so block-quantized caches ride the same
+/// plan seam — the remap reads the exact residual-stream buffers either
+/// way and re-encodes K/V rows for whichever backend `S` is.
+pub struct StagedKv<'p, S: KvStorage = GrowBuf> {
+    pub cache: KvCacheImpl<S>,
     pub new_params: &'p ParamStore,
 }
 
-impl Expandable for StagedKv<'_> {
+impl<S: KvStorage> Expandable for StagedKv<'_, S> {
     /// Remap the cache through the plan's ops (structural residual-stream
     /// remap + K/V rebuild from the new weights — DESIGN.md §9.3). The new
     /// params must be the plan's target; the remap itself re-checks the op
@@ -747,7 +751,7 @@ mod tests {
         let c = cfg();
         let mut rng = Pcg32::seeded(9);
         let params = ParamStore::init(&c, &mut rng, 0.05);
-        let mut cache = KvCache::new(&c);
+        let mut cache = crate::serve::kv::KvCache::new(&c);
         for t in [1u32, 2, 3] {
             model::forward_incremental(&c, &params, &mut cache, t).unwrap();
         }

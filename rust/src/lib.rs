@@ -15,12 +15,17 @@
 //! * [`rng`] — deterministic PCG32/normal sampling shared by init, data
 //!   synthesis and property tests.
 //! * [`tensor`] — host `f32` tensors with the linear algebra the reference
-//!   model and the expansion surgery need.
+//!   model and the expansion surgery need; the tuned hot-path kernels
+//!   (blocked matmuls, fused `rmsnorm_matmul`, register-tiled `attn_pv`,
+//!   single-pass online softmax) each keep a naive oracle in-tree and are
+//!   bit-identical to it, except the online softmax's documented
+//!   ≤ 1e-6/element bound (DESIGN.md §17).
 //! * [`prop`] — a miniature property-testing harness.
 //! * [`bench_util`] — wall-clock benchmark harness (used by `benches/`).
 //! * [`parallel`] — scoped-thread worker pool (`TEXPAND_THREADS` /
 //!   `--threads`); the single parallelism seam shared by native training
-//!   and the serve decode loop.
+//!   (across batch rows, and within a single row across attention heads
+//!   in the backward pass) and the serve decode loop.
 //!
 //! Framework:
 //! * [`config`] — architecture configs, growth schedules, training config.
@@ -41,7 +46,9 @@
 //!   per-op backwards, finite-difference checked), and the [`autodiff::ExecBackend`]
 //!   trait with its two engines — the PJRT [`runtime::Runtime`] and the
 //!   pure-Rust [`autodiff::NativeBackend`] — so the full grow-as-you-train
-//!   loop runs offline (`texpand train --backend native`).
+//!   loop runs offline (`texpand train --backend native`). A batch-1 step
+//!   still parallelizes: `backward_seq_pooled` fans the MHA backward over
+//!   heads with a fixed-order merge, bit-identical at any thread count.
 //! * [`optim`] — SGD/Adam with expansion-aware moment surgery.
 //! * [`data`] — synthetic corpus generators, byte tokenizer, batcher.
 //! * [`train`] — the training loop for one architecture segment
@@ -76,14 +83,17 @@
 //!
 //! Serving & hot-swap (S15; `texpand serve`):
 //! * [`serve`] — KV-cached batched inference engine: per-sequence KV +
-//!   residual-stream caches ([`serve::kv`]) driven by the incremental
-//!   forward ([`model::forward_incremental`], bit-compatible with
-//!   [`model::forward_one`]); a continuous-batching scheduler
-//!   ([`serve::scheduler`]); and zero-downtime function-preserving model
-//!   hot-swap ([`serve::hotswap`]) that applies `expand` surgery to the
-//!   live parameters, verifies a preservation probe, and **remaps the
-//!   in-flight KV caches through the same expansion ops** so greedy
-//!   generations continue token-identically (DESIGN.md §9).
+//!   residual-stream caches ([`serve::kv`], generic over a
+//!   [`serve::KvStorage`] backend — exact f32 or block-quantized int8 via
+//!   `--kv-quant`, several-fold fewer resident bytes per sequence) driven
+//!   by the incremental forward ([`model::forward_incremental`],
+//!   bit-compatible with [`model::forward_one`]); a continuous-batching
+//!   scheduler ([`serve::scheduler`]); and zero-downtime
+//!   function-preserving model hot-swap ([`serve::hotswap`]) that applies
+//!   `expand` surgery to the live parameters, verifies a preservation
+//!   probe, and **remaps the in-flight KV caches through the same
+//!   expansion ops** — both storage tiers — so greedy generations
+//!   continue token-identically (DESIGN.md §9, §17).
 
 pub mod autodiff;
 pub mod bench_util;

@@ -12,6 +12,8 @@
 //!             the live span stream
 //!   runs      ingest run event logs into the runs/.store run store and
 //!             list/show/aggregate them
+//!   ckpt      list a durable run's checkpoint chain or verify every
+//!             retained generation's checksums without resuming
 //!   report    growth-timeline report for one stored run: per-stage loss
 //!             curve, expansions with predicted-vs-actual deltas, and the
 //!             preservation-drift monitor per boundary
@@ -57,7 +59,7 @@ USAGE:
   texpand serve   [--ckpt PATH] [--checkpoint PATH]
                   [--requests N] [--tokens N] [--slots N]
                   [--temperature F] [--top-k N] [--seed N] [--serial]
-                  [--corpus markov|copy|arithmetic]
+                  [--corpus markov|copy|arithmetic] [--kv-quant]
                   [--max-pending N] [--timeout-ticks N]
                   [--swap-ops SPEC] [--swap-after-ticks N]
                   (SPEC e.g. \"mlp=256,heads_add=1,layers_add=1@top\")
@@ -66,6 +68,7 @@ USAGE:
   texpand scrape  --addr HOST:PORT [--path /metrics] [--timeout-ms N]
                   [--spans] [--count N]
   texpand runs    [list|show|stats] [RUN] [--runs D]
+  texpand ckpt    list|verify DIR
   texpand report  RUN [--runs D]
   texpand plan    [--schedule P] [--json]
   texpand inspect --ckpt PATH
@@ -117,7 +120,19 @@ generations. --resume restarts bit-identically from the newest valid
 generation — a torn or corrupted latest file falls back to the previous
 one. serve --checkpoint PATH warm-starts the engine from a run
 checkpoint file (or the newest valid generation when PATH is a ckpt
-directory); --ckpt stays the plain .txpd weights loader.
+directory); --ckpt stays the plain .txpd weights loader. `texpand ckpt
+list DIR` tabulates a chain's retained generations (step, params,
+checksum verdict) and `texpand ckpt verify DIR` exits nonzero when no
+generation is resumable — a chain health check that never loads the
+model into an engine.
+
+Raw-speed serving: serve --kv-quant stores per-sequence K/V rows as
+block-quantized int8 (QUANT_BLOCK scalars per f32 scale) for a
+several-fold cut in resident cache bytes; the residual stream stays
+exact f32, so hot-swap remaps and pending logits are computed from
+exact state and quantization error never compounds across swaps
+(DESIGN.md §17). The engine reports peak KV bytes per sequence either
+way.
 
 Defaults: --schedule configs/growth_default.json, --artifacts artifacts,
           --runs runs, --backend pjrt.";
@@ -146,6 +161,7 @@ fn run() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("scrape") => cmd_scrape(&args),
         Some("runs") => cmd_runs(&args),
+        Some("ckpt") => cmd_ckpt(&args),
         Some("report") => cmd_report(&args),
         Some("plan") => cmd_plan(&args),
         Some("inspect") => cmd_inspect(&args),
@@ -541,6 +557,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let swap_ops = args.get("swap-ops").map(|s| texpand::serve::parse_swap_spec(&s)).transpose()?;
     let swap_after = args.get_u64("swap-after-ticks")?.unwrap_or(tokens as u64 / 2);
     let serial = args.has("serial");
+    let kv_quant = args.has("kv-quant");
     let max_pending = args.get_usize("max-pending")?;
     let timeout_ticks = args.get_u64("timeout-ticks")?;
     let ckpt = args.get("ckpt");
@@ -595,6 +612,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_slots: slots,
         parallel: !serial,
         span_sample,
+        kv_quant,
         ..Default::default()
     };
     if let Some(n) = max_pending {
@@ -715,6 +733,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     println!("\ncounters: {}", engine.counters().to_json().to_pretty());
+    println!(
+        "peak kv bytes/seq: {} ({} tier)",
+        engine.peak_kv_bytes_per_seq(),
+        if kv_quant { "int8 block-quantized" } else { "f32" }
+    );
     // backpressure-drain ticks finish requests before the main loop runs;
     // sweep any spans still buffered in the engine into the log
     for span in engine.take_spans() {
@@ -853,6 +876,76 @@ fn cmd_runs(args: &Args) -> Result<()> {
             Err(Error::Cli(format!("unknown runs action '{other}' (expected list|show|stats)")))
         }
     }
+}
+
+/// `texpand ckpt` — durable-chain inspection (DESIGN.md §16.4) without
+/// resuming anything. `list DIR` prints one row per retained generation:
+/// global step, parameter count, file size and the full-checksum verdict
+/// (the same validation `--resume` performs, minus the engine). `verify
+/// DIR` prints the same table and exits nonzero iff *no* generation
+/// passes — the corrupt-only condition `Chain::load_latest_valid` treats
+/// as fatal — so CI can assert a crash/resume chain stayed healthy.
+fn cmd_ckpt(args: &Args) -> Result<()> {
+    let action = args.require_positional(0, "ACTION (list|verify)")?;
+    let dir = args.require_positional(1, "DIR")?;
+    args.reject_unknown()?;
+    if action != "list" && action != "verify" {
+        return Err(Error::Cli(format!("unknown ckpt action '{action}' (expected list|verify)")));
+    }
+    let path = std::path::Path::new(&dir);
+    // Chain::open mkdirs; an inspection command must not invent a chain
+    // out of a typo'd path
+    if !path.is_dir() {
+        return Err(Error::Cli(format!("'{dir}' is not a checkpoint chain directory")));
+    }
+    // keep=MAX: inspection never prunes, whatever the run's retention was
+    let chain = texpand::ckpt::Chain::open(path, usize::MAX)?;
+    let gens = chain.generations()?;
+    if gens.is_empty() {
+        println!("(no checkpoint generations under {dir})");
+        return if action == "verify" {
+            Err(Error::Checkpoint(format!("{dir} holds no checkpoint generations to verify")))
+        } else {
+            Ok(())
+        };
+    }
+    println!("chain {dir}: {} retained generation(s)", gens.len());
+    println!("{:<12} {:>8} {:>12} {:>12}  status", "gen", "step", "params", "bytes");
+    let mut valid = 0usize;
+    let mut newest_valid = None;
+    for &gen in &gens {
+        let gpath = chain.path_of(gen);
+        let bytes = std::fs::metadata(&gpath).map(|m| m.len()).unwrap_or(0);
+        // full checksum validation: header, per-section and payload sums
+        match texpand::ckpt::RunCheckpoint::load(&gpath.display().to_string()) {
+            Ok(ck) => {
+                valid += 1;
+                newest_valid = Some(gen);
+                println!(
+                    "gen-{gen:06}   {:>8} {:>12} {:>12}  valid  {}",
+                    ck.global_step,
+                    ck.params.num_scalars(),
+                    bytes,
+                    ck.fingerprint.to_string()
+                );
+            }
+            Err(e) => {
+                println!("gen-{gen:06}   {:>8} {:>12} {:>12}  CORRUPT ({e})", "-", "-", bytes);
+            }
+        }
+    }
+    println!("\n{valid}/{} generation(s) pass full checksum validation", gens.len());
+    match newest_valid {
+        Some(gen) => println!("chain resumable from gen-{gen:06}"),
+        None if action == "verify" => {
+            return Err(Error::Checkpoint(format!(
+                "all {} retained generation(s) under {dir} are corrupt — chain is not resumable",
+                gens.len()
+            )));
+        }
+        None => println!("chain is NOT resumable (every generation corrupt)"),
+    }
+    Ok(())
 }
 
 /// Compress a loss trajectory into a fixed-width unicode sparkline

@@ -1,9 +1,12 @@
 //! Scoped-thread worker pool (S17a) — the one parallelism seam.
 //!
-//! Both compute fan-outs in the repo — data-parallel native training
-//! ([`crate::autodiff::loss_and_grads_pooled`] over batch rows) and the
-//! serve scheduler's per-slot decode ([`crate::serve`]) — run through this
-//! [`Pool`], so thread policy lives in exactly one place. The pool is a
+//! All three compute fan-outs in the repo — data-parallel native training
+//! ([`crate::autodiff::loss_and_grads_pooled`] over batch rows), the
+//! within-row per-head backward that takes over when the batch is a
+//! single row ([`crate::autodiff::backward_seq_pooled`], DESIGN.md §17),
+//! and the serve scheduler's per-slot decode ([`crate::serve`]) — run
+//! through this [`Pool`], so thread policy lives in exactly one place.
+//! The pool is a
 //! *sizing policy*, not a thread cache: each `map`/`map_mut` call spawns
 //! scoped OS threads (`std::thread::scope`) that never outlive the call,
 //! so no `'static` bounds, no channels, no shutdown protocol — the same

@@ -26,7 +26,7 @@ use crate::expand::{Expandable, ExpandOptions, ExpansionPlan, StagedKv};
 use crate::metrics::Timer;
 use crate::params::ParamStore;
 use crate::rng::Pcg32;
-use crate::serve::scheduler::Slot;
+use crate::serve::scheduler::{Slot, SlotCache};
 
 /// Outcome of a committed hot-swap, predicted-vs-actual.
 #[derive(Clone, Debug)]
@@ -74,13 +74,27 @@ pub(crate) fn hot_swap(
         .map_err(|e| Error::Serve(format!("hot-swap {e}")))?;
 
     // 2. remap every in-flight cache into a staged copy (commit is all-or-
-    //    nothing: a half-remapped engine must be unreachable)
-    let mut staged = Vec::with_capacity(slots.len());
+    //    nothing: a half-remapped engine must be unreachable). Both storage
+    //    tiers ride the same plan seam: StagedKv is generic over the
+    //    backend, and the remap reads the exact f32 stream buffers either
+    //    way, so quantized caches lose nothing extra at a swap.
+    let mut staged: Vec<(SlotCache, Vec<f32>)> = Vec::with_capacity(slots.len());
     for slot in slots.iter() {
-        let mut kv = StagedKv { cache: slot.cache.clone(), new_params: &staged_params.params };
-        kv.apply_plan(plan, expand_opts, rng)?;
-        let logits = kv.cache.last_logits(&staged_params.params)?.into_vec();
-        staged.push((kv.cache, logits));
+        let (cache, logits) = match &slot.cache {
+            SlotCache::F32(c) => {
+                let mut kv = StagedKv { cache: c.clone(), new_params: &staged_params.params };
+                kv.apply_plan(plan, expand_opts, rng)?;
+                let logits = kv.cache.last_logits(&staged_params.params)?.into_vec();
+                (SlotCache::F32(kv.cache), logits)
+            }
+            SlotCache::Quant(c) => {
+                let mut kv = StagedKv { cache: c.clone(), new_params: &staged_params.params };
+                kv.apply_plan(plan, expand_opts, rng)?;
+                let logits = kv.cache.last_logits(&staged_params.params)?.into_vec();
+                (SlotCache::Quant(kv.cache), logits)
+            }
+        };
+        staged.push((cache, logits));
     }
 
     // 3. commit

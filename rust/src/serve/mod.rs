@@ -5,7 +5,10 @@
 //!
 //! * [`kv`] — per-sequence KV + residual-stream cache; the incremental
 //!   decode state and the object that is *remapped through expansion ops*
-//!   at a hot-swap (the subsystem's central trick).
+//!   at a hot-swap (the subsystem's central trick). Generic over a
+//!   [`KvStorage`] backend: exact f32 ([`KvCache`]) or block-quantized i8
+//!   ([`QuantKvCache`], `--kv-quant`) at several-fold fewer resident
+//!   bytes per sequence.
 //! * [`scheduler`] — request queue + continuous batching across in-flight
 //!   sequences of different lengths; per-slot decode fans out over the
 //!   shared [`crate::parallel::Pool`].
@@ -27,7 +30,7 @@ pub mod scheduler;
 
 pub use engine::{Engine, EngineOptions};
 pub use hotswap::SwapReport;
-pub use kv::KvCache;
+pub use kv::{KvCache, KvCacheImpl, KvStorage, QuantKvCache, QUANT_BLOCK};
 pub use scheduler::{Admission, Completion, FinishReason, Request, RequestId, TickReport};
 
 use crate::config::{GrowthOp, LayerPosition};

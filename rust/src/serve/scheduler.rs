@@ -27,6 +27,7 @@
 
 use std::collections::VecDeque;
 
+use crate::config::ModelConfig;
 use crate::error::{Error, Result};
 use crate::generate::{sample_from_logits, Sampler};
 use crate::metrics::Timer;
@@ -34,7 +35,8 @@ use crate::model::forward_incremental;
 use crate::parallel::Pool;
 use crate::params::ParamStore;
 use crate::rng::Pcg32;
-use crate::serve::kv::KvCache;
+use crate::serve::kv::{KvCache, QuantKvCache};
+use crate::tensor::Tensor;
 
 /// Opaque request handle returned by `submit`.
 pub type RequestId = u64;
@@ -71,6 +73,63 @@ pub struct Completion {
     pub ticks_in_flight: u64,
 }
 
+/// Storage-tier dispatch for one slot's KV cache: exact f32 or
+/// block-quantized i8 (`--kv-quant` / `EngineOptions::kv_quant`). An enum
+/// rather than a generic `Slot` keeps the scheduler/engine/hot-swap layer
+/// monomorphic — the dispatch cost is one match per decode step, and the
+/// quantized tier's bounded logit drift is documented in DESIGN.md §17.
+#[derive(Clone, Debug)]
+pub(crate) enum SlotCache {
+    F32(KvCache),
+    Quant(QuantKvCache),
+}
+
+impl SlotCache {
+    pub(crate) fn new(cfg: &ModelConfig, quant: bool) -> SlotCache {
+        if quant {
+            SlotCache::Quant(QuantKvCache::new(cfg))
+        } else {
+            SlotCache::F32(KvCache::new(cfg))
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            SlotCache::F32(c) => c.len(),
+            SlotCache::Quant(c) => c.len(),
+        }
+    }
+
+    pub(crate) fn reset(&mut self) {
+        match self {
+            SlotCache::F32(c) => c.reset(),
+            SlotCache::Quant(c) => c.reset(),
+        }
+    }
+
+    /// Resident bytes of the K/V storage proper (the quantity `--kv-quant`
+    /// shrinks; exact-f32 stream buffers excluded in both tiers).
+    pub(crate) fn kv_resident_bytes(&self) -> usize {
+        match self {
+            SlotCache::F32(c) => c.kv_resident_bytes(),
+            SlotCache::Quant(c) => c.kv_resident_bytes(),
+        }
+    }
+
+    /// One incremental forward through whichever tier backs this slot.
+    pub(crate) fn feed(
+        &mut self,
+        cfg: &ModelConfig,
+        params: &ParamStore,
+        token: u32,
+    ) -> Result<Tensor> {
+        match self {
+            SlotCache::F32(c) => forward_incremental(cfg, params, c, token),
+            SlotCache::Quant(c) => forward_incremental(cfg, params, c, token),
+        }
+    }
+}
+
 /// An in-flight sequence bound to a slot.
 pub(crate) struct Slot {
     id: RequestId,
@@ -80,7 +139,7 @@ pub(crate) struct Slot {
     max_new_tokens: usize,
     sampler: Sampler,
     rng: Pcg32,
-    pub(crate) cache: KvCache,
+    pub(crate) cache: SlotCache,
     /// Logits of the last fed position — the next token samples from these.
     pub(crate) logits: Vec<f32>,
     admitted_tick: u64,
@@ -95,7 +154,7 @@ impl Slot {
         let lo = self.history.len().saturating_sub(cfg.seq);
         let mut logits = None;
         for &t in &self.history[lo..] {
-            logits = Some(forward_incremental(&cfg, params, &mut self.cache, t)?);
+            logits = Some(self.cache.feed(&cfg, params, t)?);
         }
         self.logits = logits.expect("non-empty history").into_vec();
         Ok(())
@@ -107,7 +166,7 @@ impl Slot {
         let cfg = *params.config();
         if self.history.len() <= cfg.seq && self.cache.len() + 1 == self.history.len() {
             let t = *self.history.last().expect("non-empty history");
-            self.logits = forward_incremental(&cfg, params, &mut self.cache, t)?.into_vec();
+            self.logits = self.cache.feed(&cfg, params, t)?.into_vec();
             Ok(())
         } else {
             self.reprime(params)
@@ -175,6 +234,9 @@ pub struct Scheduler {
     tick: u64,
     /// Shared decode fan-out pool (`TEXPAND_THREADS`-sized by default).
     pool: Pool,
+    /// Admit new slots with block-quantized KV storage
+    /// ([`crate::serve::kv::QuantKvCache`]) instead of exact f32.
+    pub(crate) kv_quant: bool,
 }
 
 impl Scheduler {
@@ -191,6 +253,7 @@ impl Scheduler {
             next_id: 0,
             tick: 0,
             pool,
+            kv_quant: false,
         }
     }
 
@@ -236,7 +299,7 @@ impl Scheduler {
                 // per-request stream: decoding order/batch composition
                 // cannot perturb another request's draws
                 rng: Pcg32::new(req.sampler.seed, 0x5E4E ^ id),
-                cache: KvCache::new(&cfg),
+                cache: SlotCache::new(&cfg, self.kv_quant),
                 logits: Vec::new(),
                 admitted_tick: self.tick,
             };
@@ -314,6 +377,13 @@ impl Scheduler {
     /// Tick counter (for swap-scheduling and latency accounting).
     pub fn ticks(&self) -> u64 {
         self.tick
+    }
+
+    /// Largest per-sequence resident K/V byte count across the in-flight
+    /// slots right now (0 when idle) — the memory quantity `--kv-quant`
+    /// shrinks, sampled by the engine each tick for its peak gauge.
+    pub fn max_kv_resident_bytes(&self) -> usize {
+        self.active.iter().map(|s| s.cache.kv_resident_bytes()).max().unwrap_or(0)
     }
 }
 
@@ -452,6 +522,57 @@ mod tests {
         let serial = run(4, Pool::new(1), false);
         assert_eq!(run(4, Pool::new(2), true), serial);
         assert_eq!(run(4, Pool::new(8), true), serial);
+    }
+
+    #[test]
+    fn quant_slots_decode_greedily_like_f32_and_shrink_kv_bytes() {
+        // same greedy workload through both storage tiers: tokens must
+        // match (the wide_cfg drift margin comfortably covers greedy
+        // decisions at this scale) and the quant tier must hold several
+        // times fewer resident K/V bytes while slots are in flight
+        let c = ModelConfig {
+            layers: 2,
+            hidden: 16,
+            heads: 2,
+            k: 16,
+            v: 16,
+            mlp: 32,
+            seq: 16,
+            vocab: 32,
+        };
+        let p = ParamStore::init(&c, &mut Pcg32::seeded(41), 0.05);
+        let run = |quant: bool| {
+            let mut s = Scheduler::new(2);
+            s.kv_quant = quant;
+            s.enqueue(greedy_req(vec![1, 2, 3], 8));
+            s.enqueue(greedy_req(vec![4, 5], 8));
+            s.admit(&p).unwrap();
+            let mut peak_bytes = s.max_kv_resident_bytes();
+            let mut done = Vec::new();
+            while !s.is_idle() {
+                done.extend(s.decode_tick(&p, false).unwrap());
+                peak_bytes = peak_bytes.max(s.max_kv_resident_bytes());
+            }
+            done.sort_by_key(|d| d.id);
+            let out: Vec<(usize, Vec<u32>)> =
+                done.iter().map(|d| (d.prompt_len, d.tokens.clone())).collect();
+            (out, peak_bytes)
+        };
+        let (exact_tokens, exact_bytes) = run(false);
+        let (quant_tokens, quant_bytes) = run(true);
+        // shape must agree exactly; token-level agreement is a numerics
+        // property with a near-tie escape hatch, asserted in kv.rs
+        // (`quant_decode_tracks_f32_within_documented_bound`)
+        assert_eq!(exact_tokens.len(), quant_tokens.len());
+        for ((pl, a), (_, b)) in exact_tokens.iter().zip(&quant_tokens) {
+            assert_eq!(a.len(), b.len(), "tiers decoded different lengths");
+            assert_eq!(a[..*pl], b[..*pl], "prompt must survive both tiers");
+        }
+        assert!(exact_bytes > 0 && quant_bytes > 0);
+        let ratio = exact_bytes as f64 / quant_bytes as f64;
+        assert!(ratio >= 3.0, "peak KV bytes ratio {ratio} below the severalfold claim");
+        // idle scheduler reports zero
+        assert_eq!(Scheduler::new(1).max_kv_resident_bytes(), 0);
     }
 
     #[test]

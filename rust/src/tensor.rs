@@ -29,16 +29,49 @@
 //!   the summation (i) loop unrolled by four with zero-block skipping,
 //!   quartering traffic on the `[k,n]` output.
 //!
+//! On top of the matmul family the raw-speed tier adds two *fused*
+//! forward kernels and an online softmax (DESIGN.md §17):
+//!
+//! * [`Tensor::rmsnorm_matmul`] — normalize a row (RMSNorm with gain)
+//!   into a stack-reused scratch row and immediately feed it to the
+//!   blocked matmul body, skipping the `[m,h]` intermediate tensor the
+//!   unfused `rmsnorm(x, g)` → `matmul(w)` pair would allocate and
+//!   re-stream. The normalized scalars are computed by the exact
+//!   [`rmsnorm_row`] arithmetic and the product by the exact `matmul`
+//!   body, so the fusion is **bit-identical** to the unfused pair by
+//!   construction (oracle: [`Tensor::rmsnorm_matmul_naive`]).
+//! * [`Tensor::attn_pv`] — the attention `probs · V` product,
+//!   register-tiled over four output columns: the four accumulators
+//!   live in registers across the whole ascending-k sweep (the plain
+//!   `matmul` re-loads/re-stores the output row once per k-block) and
+//!   the per-element `w == 0.0` skip drops the causally-masked suffix
+//!   of each probability row for free. Additions stay in ascending-k
+//!   order per element with the naive kernel's skip condition, so the
+//!   tile is bit-identical to [`Tensor::attn_pv_naive`].
+//! * [`softmax_rows_online`] — one read sweep (running max + running
+//!   normalizer, rescaled on each new max) plus one write sweep,
+//!   replacing the three-sweep [`softmax_rows`]. This one is **bounded,
+//!   not bit-identical**: each max update rescales the partial
+//!   normalizer (`l · e^{m_old − m_new}`), reassociating the sum, so the
+//!   oracle comparison is `|Δ| ≤ 1e-6` per element rather than `==`.
+//!   Masked `-1e30` entries underflow to an exact `+0.0` contribution
+//!   *after* any valid entry, which keeps the full-row and
+//!   incremental-decode paths bitwise in agreement (see
+//!   `crate::serve::kv`).
+//!
 //! Every tuned kernel keeps its pre-optimization body as an equivalence
 //! oracle — [`Tensor::matmul_naive`], [`Tensor::matmul_bt_naive`],
-//! [`Tensor::matmul_at_naive`] — asserted exactly equal (`==`, zero
+//! [`Tensor::matmul_at_naive`], [`Tensor::rmsnorm_matmul_naive`],
+//! [`Tensor::attn_pv_naive`] — asserted exactly equal (`==`, zero
 //! tolerance) on finite inputs: each output element's additions stay in
 //! the oracle's order, so every rounding step matches. The zero-skip
-//! kernels (`matmul`, `matmul_at`) can still flip the *sign of a zero*
-//! (`-0.0 + 0.0` is `+0.0`, and a skipped term adds nothing), which
-//! `==` treats as equal; `matmul_bt` has no skip path and is bitwise
-//! identical. See DESIGN.md §10.4/§11; `benches/train_step.rs` reports
-//! the speedups.
+//! kernels (`matmul`, `matmul_at`, `attn_pv`) can still flip the *sign
+//! of a zero* (`-0.0 + 0.0` is `+0.0`, and a skipped term adds
+//! nothing), which `==` treats as equal; `matmul_bt` has no skip path
+//! and is bitwise identical. `softmax_rows_online` is the one bounded
+//! (not exact) kernel, as argued above. See DESIGN.md §10.4/§11/§17;
+//! `benches/train_step.rs` and `benches/fused_kernels.rs` report the
+//! speedups.
 
 use crate::error::{Error, Result};
 use crate::rng::Pcg32;
@@ -454,6 +487,174 @@ impl Tensor {
         Ok(out)
     }
 
+    /// Fused RMSNorm + matmul: `rmsnorm(self, g).matmul(w)` in one pass
+    /// (`self` is `[m,h]`, `g` is `[h]`, `w` is `[h,n]`, result `[m,n]`).
+    /// Each input row is normalized into a scratch row reused across the
+    /// whole call — the `[m,h]` intermediate the unfused pair would
+    /// allocate, fill, and re-stream never exists — and the scratch row
+    /// is consumed immediately by the blocked `matmul` body while it is
+    /// still cache-hot. Normalization uses the exact [`rmsnorm_row`]
+    /// arithmetic and the product the exact [`Tensor::matmul`] body, so
+    /// the result is bit-identical to the unfused pair (and to
+    /// [`Tensor::rmsnorm_matmul_naive`]) on finite inputs, with the same
+    /// sign-of-zero caveat as `matmul`.
+    pub fn rmsnorm_matmul(&self, g: &Tensor, w: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2
+            || g.rank() != 1
+            || w.rank() != 2
+            || self.shape[1] != g.shape[0]
+            || self.shape[1] != w.shape[0]
+        {
+            return Err(Error::Shape(format!(
+                "rmsnorm_matmul: {:?} (g {:?}) x {:?}",
+                self.shape, g.shape, w.shape
+            )));
+        }
+        let (m, h, n) = (self.shape[0], self.shape[1], w.shape[1]);
+        let hb = h / 4 * 4;
+        let mut out = Tensor::zeros(&[m, n]);
+        let mut nrm = vec![0.0f32; h];
+        for i in 0..m {
+            rmsnorm_row(&self.data[i * h..(i + 1) * h], &g.data, &mut nrm);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            let mut kk = 0;
+            while kk < hb {
+                let (a0, a1, a2, a3) = (nrm[kk], nrm[kk + 1], nrm[kk + 2], nrm[kk + 3]);
+                if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                    kk += 4;
+                    continue;
+                }
+                let b0 = &w.data[kk * n..(kk + 1) * n];
+                let b1 = &w.data[(kk + 1) * n..(kk + 2) * n];
+                let b2 = &w.data[(kk + 2) * n..(kk + 3) * n];
+                let b3 = &w.data[(kk + 3) * n..(kk + 4) * n];
+                for j in 0..n {
+                    let mut acc = orow[j];
+                    acc += a0 * b0[j];
+                    acc += a1 * b1[j];
+                    acc += a2 * b2[j];
+                    acc += a3 * b3[j];
+                    orow[j] = acc;
+                }
+                kk += 4;
+            }
+            for kk in hb..h {
+                let a = nrm[kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &w.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Unfused reference for [`Tensor::rmsnorm_matmul`]: materialize the
+    /// normalized rows, then run the straight-line [`Tensor::matmul_naive`]
+    /// body. Kept as the fusion's equivalence oracle and bench baseline.
+    pub fn rmsnorm_matmul_naive(&self, g: &Tensor, w: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2
+            || g.rank() != 1
+            || w.rank() != 2
+            || self.shape[1] != g.shape[0]
+            || self.shape[1] != w.shape[0]
+        {
+            return Err(Error::Shape(format!(
+                "rmsnorm_matmul: {:?} (g {:?}) x {:?}",
+                self.shape, g.shape, w.shape
+            )));
+        }
+        let (m, h) = (self.shape[0], self.shape[1]);
+        let mut nrm = Tensor::zeros(&[m, h]);
+        for i in 0..m {
+            let row = &self.data[i * h..(i + 1) * h];
+            rmsnorm_row(row, &g.data, &mut nrm.data[i * h..(i + 1) * h]);
+        }
+        nrm.matmul_naive(w)
+    }
+
+    /// The attention `probs · V` product (`self` is `[m,t]` probabilities,
+    /// `v` is `[t,dv]`, result `[m,dv]`), register-tiled over four output
+    /// columns: the four accumulators live in registers for the whole
+    /// ascending-k sweep instead of round-tripping through the output row
+    /// once per k-block as [`Tensor::matmul`] does, and the per-element
+    /// `w == 0.0` skip drops every causally-masked (softmax-underflowed)
+    /// probability without touching its `V` row. Additions per output
+    /// element keep the naive kernel's ascending-k order and skip
+    /// condition, so the result is bit-identical to
+    /// [`Tensor::attn_pv_naive`] on finite inputs (sign-of-zero caveat as
+    /// `matmul`).
+    pub fn attn_pv(&self, v: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || v.rank() != 2 || self.shape[1] != v.shape[0] {
+            return Err(Error::Shape(format!("attn_pv: {:?} x {:?}", self.shape, v.shape)));
+        }
+        let (m, t, dv) = (self.shape[0], self.shape[1], v.shape[1]);
+        let db = dv / 4 * 4;
+        let mut out = Tensor::zeros(&[m, dv]);
+        for i in 0..m {
+            let prow = &self.data[i * t..(i + 1) * t];
+            let orow = &mut out.data[i * dv..(i + 1) * dv];
+            let mut j = 0;
+            while j < db {
+                let (mut c0, mut c1, mut c2, mut c3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for (kk, &w) in prow.iter().enumerate() {
+                    if w == 0.0 {
+                        continue; // masked / underflowed probability
+                    }
+                    let vrow = &v.data[kk * dv..(kk + 1) * dv];
+                    c0 += w * vrow[j];
+                    c1 += w * vrow[j + 1];
+                    c2 += w * vrow[j + 2];
+                    c3 += w * vrow[j + 3];
+                }
+                orow[j] = c0;
+                orow[j + 1] = c1;
+                orow[j + 2] = c2;
+                orow[j + 3] = c3;
+                j += 4;
+            }
+            for j in db..dv {
+                let mut acc = 0.0f32;
+                for (kk, &w) in prow.iter().enumerate() {
+                    if w == 0.0 {
+                        continue;
+                    }
+                    acc += w * v.data[kk * dv + j];
+                }
+                orow[j] = acc;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Reference straight-line ikj kernel for [`Tensor::attn_pv`] (the
+    /// [`Tensor::matmul_naive`] body with the same per-element zero skip),
+    /// kept as its equivalence oracle and bench baseline.
+    pub fn attn_pv_naive(&self, v: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || v.rank() != 2 || self.shape[1] != v.shape[0] {
+            return Err(Error::Shape(format!("attn_pv: {:?} x {:?}", self.shape, v.shape)));
+        }
+        let (m, t, dv) = (self.shape[0], self.shape[1], v.shape[1]);
+        let mut out = Tensor::zeros(&[m, dv]);
+        for i in 0..m {
+            let prow = &self.data[i * t..(i + 1) * t];
+            let orow = &mut out.data[i * dv..(i + 1) * dv];
+            for (kk, &w) in prow.iter().enumerate() {
+                if w == 0.0 {
+                    continue;
+                }
+                let vrow = &v.data[kk * dv..(kk + 1) * dv];
+                for j in 0..dv {
+                    orow[j] += w * vrow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
     /// Transposed copy of a 2D tensor.
     pub fn transpose(&self) -> Result<Tensor> {
         if self.rank() != 2 {
@@ -559,6 +760,22 @@ impl Tensor {
     }
 }
 
+/// RMSNorm one row with a per-feature gain: `out[j] = row[j] * g[j] /
+/// sqrt(mean(row²))`. This free function is the *single* definition of
+/// the normalization arithmetic — `model::rmsnorm`, the fused
+/// [`Tensor::rmsnorm_matmul`], and the serve KV remap all call it, which
+/// is what makes "fused equals unfused" and "remap equals fresh prime"
+/// bit-identity arguments hold by construction rather than by luck.
+#[inline]
+pub fn rmsnorm_row(row: &[f32], g: &[f32], out: &mut [f32]) {
+    let h = row.len();
+    let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
+    let denom = ms.sqrt();
+    for j in 0..h {
+        out[j] = row[j] * g[j] / denom;
+    }
+}
+
 /// Numerically-stable softmax over the last axis of a 2D tensor, in place.
 pub fn softmax_rows(t: &mut Tensor) {
     let (m, n) = (t.shape()[0], t.shape()[1]);
@@ -575,6 +792,57 @@ pub fn softmax_rows(t: &mut Tensor) {
             *x /= sum;
         }
         let _ = n;
+    }
+}
+
+/// Online (single-read-sweep) softmax over the last axis, in place.
+///
+/// Per row this carries a running max `m` and running normalizer `l`;
+/// when a new max arrives the partial normalizer is rescaled by
+/// `e^{m_old − m_new}` (which is exactly `0.0` on the first element,
+/// seeding `l = 1.0`). One read sweep plus one write sweep replaces the
+/// three sweeps of [`softmax_rows`] (max, exp+sum, divide) — the win is
+/// one fewer pass over a row that no longer fits in registers once
+/// sequences grow.
+///
+/// Two properties the serve/autodiff paths rely on:
+///
+/// * **Bounded vs the oracle, not bit-identical**: rescaling reassociates
+///   the normalizer sum, so elements can differ from [`softmax_rows`] by
+///   a few ULPs (tests bound it at `1e-6`). All attention paths (full
+///   forward, taped forward, incremental decode) switch to the online
+///   pass *together*, so cross-path bit-identity is preserved.
+/// * **Masked suffix is a bitwise no-op**: a causally-masked score
+///   (`model::MASK_VALUE` = `-1e30`) processed after any valid score
+///   satisfies `x ≤ m` and `e^{x−m}` underflows to exactly `0.0`, so it
+///   changes neither `m` nor `l` — the `(m, l)` pair for a full row with
+///   masked suffix is bitwise the pair for the unmasked prefix alone,
+///   which keeps full-tile and incremental-decode attention in exact
+///   agreement.
+pub fn softmax_rows_online(t: &mut Tensor) {
+    let m = t.shape()[0];
+    for i in 0..m {
+        softmax_row_online(t.row_mut(i));
+    }
+}
+
+/// The single-row body of [`softmax_rows_online`]; also the row pass used
+/// by the serve KV cache's incremental `attend` (`crate::serve::kv`), so
+/// the two stay one definition.
+#[inline]
+pub fn softmax_row_online(row: &mut [f32]) {
+    let mut max = f32::NEG_INFINITY;
+    let mut norm = 0.0f32;
+    for &x in row.iter() {
+        if x > max {
+            norm = norm * (max - x).exp() + 1.0;
+            max = x;
+        } else {
+            norm += (x - max).exp();
+        }
+    }
+    for x in row.iter_mut() {
+        *x = (*x - max).exp() / norm;
     }
 }
 
@@ -738,6 +1006,121 @@ mod tests {
             let tiled = a.matmul_bt(&b).unwrap();
             let naive = a.matmul_bt_naive(&b).unwrap();
             assert_eq!(tiled, naive, "({m},{k},{n}): tiled matmul_bt diverged from naive");
+        }
+    }
+
+    #[test]
+    fn fused_rmsnorm_matmul_is_bitexact_with_naive_and_unfused() {
+        // the fused kernel must equal BOTH the straight-line oracle and the
+        // materialize-then-blocked-matmul pair under `==` — layer_tail and
+        // the tape swap the unfused pair for the fusion, and every forward
+        // bit-identity guarantee (taped == reference, incremental == full)
+        // rides on this. Shapes cover h % 4 tails and degenerate rows.
+        let mut rng = Pcg32::seeded(46);
+        for (m, h, n) in [(1, 1, 1), (2, 4, 5), (3, 6, 4), (5, 8, 8), (4, 13, 7), (7, 32, 16)] {
+            let x = Tensor::randn(&[m, h], &mut rng, 1.0);
+            let g = Tensor::randn(&[h], &mut rng, 0.5);
+            let w = Tensor::randn(&[h, n], &mut rng, 1.0);
+            let fused = x.rmsnorm_matmul(&g, &w).unwrap();
+            let naive = x.rmsnorm_matmul_naive(&g, &w).unwrap();
+            assert_eq!(fused, naive, "({m},{h},{n}): fused diverged from naive oracle");
+            let mut nrm = Tensor::zeros(&[m, h]);
+            for i in 0..m {
+                let mut out = vec![0.0f32; h];
+                rmsnorm_row(x.row(i), g.data(), &mut out);
+                nrm.row_mut(i).copy_from_slice(&out);
+            }
+            let unfused = nrm.matmul(&w).unwrap();
+            assert_eq!(fused, unfused, "({m},{h},{n}): fused diverged from unfused pair");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_matmul_shape_errors() {
+        let x = t2(2, 3, &[0.0; 6]);
+        let g = Tensor::ones(&[3]);
+        assert!(x.rmsnorm_matmul(&g, &t2(4, 2, &[0.0; 8])).is_err()); // w rows != h
+        assert!(x.rmsnorm_matmul(&Tensor::ones(&[2]), &t2(3, 2, &[0.0; 6])).is_err());
+        assert!(x.rmsnorm_matmul_naive(&g, &t2(4, 2, &[0.0; 8])).is_err());
+    }
+
+    #[test]
+    fn tiled_attn_pv_is_bitexact_with_naive_kernel() {
+        // probability rows carry exact zeros (causally-masked suffix after
+        // softmax underflow); both kernels skip them with the same
+        // condition and keep ascending-k addition order, so equality is
+        // exact. Shapes cover the 4-wide column tile, the dv % 4 tail, and
+        // single-row/col degenerates.
+        let mut rng = Pcg32::seeded(47);
+        for (m, t, dv) in [(1, 1, 1), (3, 4, 5), (4, 6, 8), (2, 9, 3), (6, 16, 12), (5, 7, 16)] {
+            let mut p = Tensor::randn(&[m, t], &mut rng, 1.0);
+            p.map_inplace(|x| x.abs());
+            for i in 0..m {
+                let cut = i.min(t - 1);
+                for j in cut + 1..t {
+                    p.set(i, j, 0.0); // masked suffix, as softmax leaves it
+                }
+            }
+            let v = Tensor::randn(&[t, dv], &mut rng, 1.0);
+            let tiled = p.attn_pv(&v).unwrap();
+            let naive = p.attn_pv_naive(&v).unwrap();
+            assert_eq!(tiled, naive, "({m},{t},{dv}): tiled attn_pv diverged from naive");
+            // same skip condition + addition order as the general blocked
+            // kernel's oracle, so the fused path equals plain matmul too
+            assert_eq!(tiled, p.matmul_naive(&v).unwrap());
+        }
+    }
+
+    #[test]
+    fn attn_pv_shape_errors() {
+        let p = t2(2, 3, &[0.0; 6]);
+        assert!(p.attn_pv(&t2(2, 4, &[0.0; 8])).is_err());
+        assert!(p.attn_pv_naive(&t2(2, 4, &[0.0; 8])).is_err());
+    }
+
+    #[test]
+    fn online_softmax_is_bounded_against_two_pass_oracle() {
+        // the online pass reassociates the normalizer sum (rescale on each
+        // new max), so the comparison is bounded, not `==` — the bound here
+        // is the one DESIGN.md §17 documents
+        let mut rng = Pcg32::seeded(48);
+        for (m, n) in [(1, 1), (3, 7), (8, 16), (4, 33)] {
+            let base = Tensor::randn(&[m, n], &mut rng, 3.0);
+            let mut online = base.clone();
+            softmax_rows_online(&mut online);
+            let mut oracle = base.clone();
+            softmax_rows(&mut oracle);
+            assert!(
+                online.max_abs_diff(&oracle).unwrap() <= 1e-6,
+                "({m},{n}): online softmax drifted past the documented bound"
+            );
+            for i in 0..m {
+                let s: f32 = online.row(i).iter().sum();
+                assert!((s - 1.0).abs() < 1e-5, "row {i} sum {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn online_softmax_masked_suffix_is_bitwise_noop() {
+        // a -1e30-masked score processed after any valid score must leave
+        // the (max, normalizer) pair bitwise unchanged — this is the
+        // property that keeps full-tile attention rows and incremental
+        // KV-decode rows in exact agreement (DESIGN.md §17)
+        let mut rng = Pcg32::seeded(49);
+        for t in [1usize, 2, 5, 9] {
+            let scores: Vec<f32> = (0..t).map(|_| rng.uniform_f32() * 8.0 - 4.0).collect();
+            let mut full: Vec<f32> = scores.clone();
+            full.extend([-1e30f32; 3]);
+            softmax_row_online(&mut full);
+            let mut prefix = scores.clone();
+            softmax_row_online(&mut prefix);
+            for j in 0..t {
+                assert_eq!(full[j].to_bits(), prefix[j].to_bits(), "t={t} j={j}");
+            }
+            for x in &full[t..] {
+                assert_eq!(*x, 0.0, "masked entry must land at exactly zero");
+            }
         }
     }
 

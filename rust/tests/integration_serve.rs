@@ -7,7 +7,10 @@
 //!     sampling, including past the sliding-window boundary;
 //! (b) a mid-serving function-preserving hot-swap leaves in-flight greedy
 //!     generations **byte-identical** while the live model grows, with the
-//!     preservation probe at `max|Δ logits| ≤ preserve_tol`.
+//!     preservation probe at `max|Δ logits| ≤ preserve_tol` — including
+//!     when the in-flight caches are the block-quantized int8 KV tier
+//!     (`kv_quant`), whose remap re-quantizes from the exact f32
+//!     residual stream (DESIGN.md §17).
 
 use texpand::config::{GrowthOp, LayerPosition, ModelConfig};
 use texpand::expand::{ExpandOptions, ExpansionPlan, Init};
@@ -159,6 +162,57 @@ fn hot_swap_with_scaling_ops_stays_within_probe_tolerance() {
         assert_eq!(c.generated, 12);
         assert!(c.tokens.iter().all(|&t| (t as usize) < eng.config().vocab));
     }
+}
+
+#[test]
+fn quant_kv_cache_rides_a_hot_swap_with_identical_greedy_continuations() {
+    // ISSUE 9: the int8 KV tier must survive expansion. Stream-preserving
+    // ops (mlp widen + layer insert) touch neither the K/V widths nor the
+    // residual stream, and the remap re-quantizes each head from the
+    // exact f32 stream buffers, so the swapped engine's greedy
+    // continuations must be byte-identical to a quantized engine that
+    // never swapped — quantization error must not compound across a swap.
+    let c = ModelConfig {
+        layers: 2, hidden: 16, heads: 2, k: 16, v: 16, mlp: 32, seq: 16, vocab: 32,
+    };
+    let mut rng = Pcg32::seeded(71);
+    let params = ParamStore::init(&c, &mut rng, 0.05);
+    let prompts: Vec<Vec<u32>> = (0..3)
+        .map(|i| (0..(2 + i % 3)).map(|_| rng.below(c.vocab) as u32).collect())
+        .collect();
+    let new_tokens = 20;
+    let qopts =
+        EngineOptions { max_slots: 4, parallel: false, kv_quant: true, ..Default::default() };
+
+    // the oracle: the same quantized engine, never swapped
+    let mut base = Engine::new(params.clone(), qopts);
+    let want = serve_all(&mut base, &prompts, new_tokens, greedy());
+
+    let mut eng = Engine::new(params, qopts);
+    let ids: Vec<_> =
+        prompts.iter().map(|p| eng.submit(p.clone(), new_tokens, greedy()).unwrap()).collect();
+    for _ in 0..5 {
+        eng.tick().unwrap();
+    }
+    assert!(!eng.is_idle(), "swap must land mid-flight");
+    assert!(eng.peak_kv_bytes_per_seq() > 0, "engine must report quant-tier resident bytes");
+
+    let plan = plan_for(
+        &eng,
+        vec![
+            GrowthOp::Mlp { p: 64 },
+            GrowthOp::LayersAdd { count: 1, position: LayerPosition::At(1) },
+        ],
+    );
+    let opts = ExpandOptions { init: Init::Normal(0.3), ..Default::default() };
+    let report = eng.hot_swap(&plan, &mut Pcg32::seeded(9), &opts).unwrap();
+    assert!(report.probe_delta <= PRESERVE_TOL, "probe delta {}", report.probe_delta);
+    assert_eq!(report.remapped_sequences, 3);
+    assert_eq!((eng.config().mlp, eng.config().layers), (64, 3));
+
+    eng.run_until_idle().unwrap();
+    let got: Vec<_> = ids.iter().map(|&id| eng.poll(id).unwrap().tokens).collect();
+    assert_eq!(got, want, "hot-swap perturbed the quantized KV tier's greedy continuations");
 }
 
 #[test]
