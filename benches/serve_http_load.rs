@@ -1,0 +1,178 @@
+//! HTTP serve under overload: adaptive AIMD admission vs a static window,
+//! measured by the `texpand loadgen` client fleet over real sockets.
+//!
+//! Method (DESIGN.md §18.4): calibrate the engine's closed-loop service
+//! rate with a single client, then drive an open-loop arrival rate at
+//! **8× that capacity** with 16 concurrent clients against two otherwise
+//! identical servers:
+//!
+//! * `static-8x-overload` — a fixed wide window (no controller): every
+//!   arrival is admitted, the decode batch grows to the full client
+//!   fleet, and every stream's per-token latency inflates with it.
+//! * `adaptive-8x-overload` — the AIMD controller with a 15% per-token
+//!   latency-inflation SLO (`degrade_ratio = 1.15`): the window sawtooths
+//!   around the largest batch that holds the SLO and the excess arrivals
+//!   are shed with `429 Retry-After` instead of queued.
+//!
+//! Both runs land in `runs/bench.jsonl` as `kind:"serve_http_load"` rows;
+//! the in-bench asserts are the acceptance gate — the adaptive server
+//! must shed (`rejected > 0`) and bound client-observed p99 at or below
+//! the static baseline's, while the static server sheds nothing and
+//! degrades.
+//!
+//! Run: `cargo bench --bench serve_http_load`.
+//! Env: `TEXPAND_BENCH_BUDGET_MS` < 300 shrinks the request budget for CI
+//! smoke runs.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use texpand::bench_util::{Reporter, Stats};
+use texpand::config::ModelConfig;
+use texpand::json::Value;
+use texpand::obs::MetricsRegistry;
+use texpand::params::ParamStore;
+use texpand::rng::Pcg32;
+use texpand::serve::http::{AimdOptions, HttpServer, HttpServerOptions};
+use texpand::serve::loadgen::{self, LoadReport, LoadgenOptions};
+use texpand::serve::{Engine, EngineOptions, KvTier};
+
+const TOKENS: usize = 16;
+const CLIENTS: usize = 16;
+const OVERLOAD: f64 = 8.0;
+
+fn cfg() -> ModelConfig {
+    ModelConfig { layers: 2, hidden: 32, heads: 2, k: 16, v: 16, mlp: 64, seq: 64, vocab: 64 }
+}
+
+fn bind_server(aimd: AimdOptions) -> HttpServer {
+    let params = ParamStore::init(&cfg(), &mut Pcg32::seeded(5), 0.02);
+    // slots sized to the whole client fleet: the admission window is the
+    // only throttle either server has
+    let engine = Engine::with_registry(
+        params,
+        EngineOptions { max_slots: CLIENTS, parallel: false, kv_tier: KvTier::F32, ..Default::default() },
+        &MetricsRegistry::new(),
+    );
+    let opts = HttpServerOptions { aimd, ..Default::default() };
+    HttpServer::bind_with_registry(
+        "127.0.0.1:0",
+        engine,
+        opts,
+        Arc::new(MetricsRegistry::new()),
+    )
+    .expect("bind http server")
+}
+
+fn drive(server: &HttpServer, clients: usize, requests: usize, rate: f64) -> LoadReport {
+    let opts = LoadgenOptions {
+        addr: server.local_addr().to_string(),
+        clients,
+        requests,
+        rate_per_sec: rate,
+        tokens: TOKENS,
+        prompt_mix: vec![4, 8],
+        vocab: cfg().vocab,
+        seed: 11,
+        timeout: Duration::from_secs(60),
+        ..Default::default()
+    };
+    loadgen::run(&opts).expect("loadgen run")
+}
+
+fn report_row(rep: &mut Reporter, case: &str, r: &LoadReport, rate: f64) {
+    let stats = Stats {
+        iters: r.completed + r.timeouts,
+        mean_ns: r.mean_ms * 1e6,
+        p50_ns: r.p50_ms * 1e6,
+        p95_ns: r.p95_ms * 1e6,
+        p99_ns: r.p99_ms * 1e6,
+        min_ns: 0.0,
+        max_ns: r.max_ms * 1e6,
+    };
+    rep.row(
+        case,
+        &stats,
+        vec![
+            ("kind", Value::str("serve_http_load")),
+            ("mode", Value::str(r.mode)),
+            ("sent", Value::num(r.sent as f64)),
+            ("completed", Value::num(r.completed as f64)),
+            ("rejected", Value::num(r.rejected as f64)),
+            ("timeouts", Value::num(r.timeouts as f64)),
+            ("errors", Value::num(r.errors as f64)),
+            ("tokens_streamed", Value::num(r.tokens_streamed as f64)),
+            ("tokens_per_sec", Value::num(r.tokens_per_sec)),
+            ("rate_per_sec", Value::num(rate)),
+            ("clients", Value::num(CLIENTS as f64)),
+            ("overload_x", Value::num(OVERLOAD)),
+        ],
+    );
+}
+
+fn main() {
+    let budget_ms: u64 = std::env::var("TEXPAND_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1500);
+    let requests = if budget_ms < 300 { 24 } else { 64 };
+    let mut rep = Reporter::new("serve_http_load");
+
+    // ---- calibrate: single-client closed-loop service rate ----------------
+    let server = bind_server(AimdOptions::default());
+    let cal = drive(&server, 1, 8, 0.0);
+    server.shutdown().expect("calibration shutdown");
+    assert_eq!(cal.completed, 8, "calibration must stream clean");
+    let service_rps = (cal.tokens_per_sec / TOKENS as f64).max(1.0);
+    let rate = OVERLOAD * service_rps;
+    rep.value_row(
+        "calibration 1-client closed loop",
+        "service_requests_per_sec",
+        service_rps,
+        vec![
+            ("kind", Value::str("serve_http_load")),
+            ("tokens_per_sec", Value::num(cal.tokens_per_sec)),
+        ],
+    );
+
+    // ---- static baseline: wide fixed window, everything admitted ----------
+    let wide = AimdOptions {
+        initial_window: 64.0,
+        min_window: 64.0,
+        max_window: 64.0,
+        adaptive: false,
+        ..Default::default()
+    };
+    let server = bind_server(wide);
+    let stat = drive(&server, CLIENTS, requests, rate);
+    server.shutdown().expect("static shutdown");
+    report_row(&mut rep, "static-8x-overload", &stat, rate);
+    assert_eq!(stat.rejected, 0, "the static window never sheds");
+    assert_eq!(stat.errors, 0, "static run must stream clean");
+
+    // ---- adaptive: AIMD window with a 15% latency-inflation SLO -----------
+    let slo = AimdOptions { degrade_ratio: 1.15, ..Default::default() };
+    let server = bind_server(slo);
+    let adap = drive(&server, CLIENTS, requests, rate);
+    let (_, summary) = server.shutdown().expect("adaptive shutdown");
+    report_row(&mut rep, "adaptive-8x-overload", &adap, rate);
+    assert_eq!(adap.errors, 0, "adaptive run must stream clean");
+    assert!(
+        adap.rejected > 0,
+        "adaptive admission must shed at {OVERLOAD}x overload (sent {}, rejected 0)",
+        adap.sent
+    );
+    assert!(
+        adap.p99_ms <= stat.p99_ms,
+        "shedding must bound client p99: adaptive {:.2}ms > static {:.2}ms",
+        adap.p99_ms,
+        stat.p99_ms
+    );
+    println!(
+        "overload {OVERLOAD}x @ {rate:.1} req/s: static p99 {:.2}ms (0 shed) vs adaptive p99 \
+         {:.2}ms ({} shed, final window {})",
+        stat.p99_ms, adap.p99_ms, adap.rejected, summary.final_window
+    );
+
+    rep.flush();
+}

@@ -232,6 +232,110 @@ if [ "$FAST" = "0" ]; then
     exit 1
   fi
 
+  echo "==> http serve smoke (chunked streaming + loadgen fleet)"
+  # the binary is its own load generator (`texpand loadgen`): a small
+  # closed-loop fleet must stream every request clean over real sockets
+  # and append a serve_http_load row to runs/bench.jsonl
+  HTTP_LOG="$SMOKE_RUNS/http-smoke.log"
+  ./target/release/texpand serve \
+    --http-addr 127.0.0.1:0 --http-max-secs 120 --slots 4 --serial \
+    --runs "$SMOKE_RUNS" --run-name ci-http-smoke > "$HTTP_LOG" 2>&1 &
+  HTTP_PID=$!
+  HADDR=""
+  for _ in $(seq 1 300); do
+    HADDR="$(sed -n 's|^serving on http://\([^ ]*\).*|\1|p' "$HTTP_LOG")"
+    [ -n "$HADDR" ] && break
+    sleep 0.1
+  done
+  if [ -z "$HADDR" ]; then
+    echo "ci.sh: http serve never printed its address" >&2
+    cat "$HTTP_LOG" >&2
+    exit 1
+  fi
+  LOADGEN_OUT="$(./target/release/texpand loadgen --addr "$HADDR" \
+    --clients 2 --requests 6 --tokens 8 --prompt-mix 4,8 --case ci-http-smoke)"
+  if ! echo "$LOADGEN_OUT" | grep -q '6 sent -> 6 completed, 0 rejected (429), 0 timeouts, 0 errors'; then
+    echo "ci.sh: loadgen fleet did not stream clean" >&2
+    echo "$LOADGEN_OUT" >&2
+    cat "$HTTP_LOG" >&2
+    exit 1
+  fi
+  if ! grep '"kind":"serve_http_load"' runs/bench.jsonl | tail -n 1 | grep -Eq '"tokens_per_sec":[1-9]'; then
+    echo "ci.sh: no nonzero serve_http_load row in runs/bench.jsonl" >&2
+    exit 1
+  fi
+  ./target/release/texpand scrape --addr "$HADDR" --path /quitz > /dev/null
+  wait "$HTTP_PID"
+  if ! grep -Eq 'http summary: [0-9]+ requests, [1-9][0-9]* streamed' "$HTTP_LOG"; then
+    echo "ci.sh: http serve summary missing streamed requests" >&2
+    cat "$HTTP_LOG" >&2
+    exit 1
+  fi
+
+  echo "==> http admission smoke (window pinned to 1 must shed with 429)"
+  # 4 closed-loop clients against a static window of 1: overlapping
+  # arrivals are shed, never queued — the overload defense in one line
+  ./target/release/texpand serve \
+    --http-addr 127.0.0.1:0 --http-max-secs 120 --slots 4 --serial \
+    --admission static --window-init 1 --window-min 1 --window-max 1 \
+    --runs "$SMOKE_RUNS" --run-name ci-http-shed > "$HTTP_LOG" 2>&1 &
+  HTTP_PID=$!
+  HADDR=""
+  for _ in $(seq 1 300); do
+    HADDR="$(sed -n 's|^serving on http://\([^ ]*\).*|\1|p' "$HTTP_LOG")"
+    [ -n "$HADDR" ] && break
+    sleep 0.1
+  done
+  if [ -z "$HADDR" ]; then
+    echo "ci.sh: http shed serve never printed its address" >&2
+    cat "$HTTP_LOG" >&2
+    exit 1
+  fi
+  LOADGEN_OUT="$(./target/release/texpand loadgen --addr "$HADDR" \
+    --clients 4 --requests 8 --tokens 32 --case ci-http-shed)"
+  if ! echo "$LOADGEN_OUT" | grep -Eq ' [1-9][0-9]* rejected \(429\)'; then
+    echo "ci.sh: pinned window 1 shed nothing under 4 concurrent clients" >&2
+    echo "$LOADGEN_OUT" >&2
+    exit 1
+  fi
+  ./target/release/texpand scrape --addr "$HADDR" --path /quitz > /dev/null
+  wait "$HTTP_PID"
+
+  echo "==> run-store retention smoke (runs compact keeps summaries)"
+  # compact everything but the 2 newest runs: record payloads go, the
+  # per-run summaries stay, and stats on a compacted run says so
+  COMPACT_OUT="$(./target/release/texpand runs compact --runs "$SMOKE_RUNS" --keep 2)"
+  if ! echo "$COMPACT_OUT" | grep -Eq '^compacted [1-9]'; then
+    echo "ci.sh: runs compact retired nothing" >&2
+    echo "$COMPACT_OUT" >&2
+    exit 1
+  fi
+  if [ ! -f "$SMOKE_RUNS/.store/ci-smoke/summary.json" ]; then
+    echo "ci.sh: compaction dropped ci-smoke's summary.json" >&2
+    exit 1
+  fi
+  if [ -f "$SMOKE_RUNS/.store/ci-smoke/records.jsonl" ]; then
+    echo "ci.sh: compaction kept ci-smoke's records.jsonl (oldest run)" >&2
+    exit 1
+  fi
+  if ./target/release/texpand runs stats ci-smoke --runs "$SMOKE_RUNS" > /dev/null 2>&1; then
+    echo "ci.sh: stats on a compacted run should explain itself and fail" >&2
+    exit 1
+  fi
+
+  echo "==> serve-http-load bench smoke (adaptive vs static at 8x overload)"
+  # in-bench asserts: the AIMD server sheds under 8x overload and bounds
+  # client p99 at or below the static wide-window baseline's
+  TEXPAND_BENCH_BUDGET_MS=60 cargo bench --bench serve_http_load
+  if ! grep '"case":"adaptive-8x-overload"' runs/bench.jsonl | tail -n 1 | grep -Eq '"rejected":[1-9]'; then
+    echo "ci.sh: adaptive-8x-overload row missing or shed nothing" >&2
+    exit 1
+  fi
+  if ! grep '"case":"static-8x-overload"' runs/bench.jsonl | tail -n 1 | grep -Eq '"rejected":0'; then
+    echo "ci.sh: static-8x-overload row missing or unexpectedly shed" >&2
+    exit 1
+  fi
+
   echo "==> runtime-overhead bench smoke (metrics + span-export decode cost)"
   # artifact-free sections only (the PJRT decomposition self-skips); the
   # freshest rows must include both overhead fractions

@@ -84,16 +84,29 @@
 //! Serving & hot-swap (S15; `texpand serve`):
 //! * [`serve`] — KV-cached batched inference engine: per-sequence KV +
 //!   residual-stream caches ([`serve::kv`], generic over a
-//!   [`serve::KvStorage`] backend — exact f32 or block-quantized int8 via
-//!   `--kv-quant`, several-fold fewer resident bytes per sequence) driven
-//!   by the incremental forward ([`model::forward_incremental`],
-//!   bit-compatible with [`model::forward_one`]); a continuous-batching
-//!   scheduler ([`serve::scheduler`]); and zero-downtime
+//!   [`serve::KvStorage`] backend — exact f32, half-precision f16 or
+//!   block-quantized int8 via `--kv-quant=TIER`, down to several-fold
+//!   fewer resident bytes per sequence) driven by the incremental forward
+//!   ([`model::forward_incremental`], bit-compatible with
+//!   [`model::forward_one`]); a continuous-batching scheduler
+//!   ([`serve::scheduler`]) with per-request deadlines and an incremental
+//!   [`serve::Engine::partial`] view; and zero-downtime
 //!   function-preserving model hot-swap ([`serve::hotswap`]) that applies
 //!   `expand` surgery to the live parameters, verifies a preservation
 //!   probe, and **remaps the in-flight KV caches through the same
-//!   expansion ops** — both storage tiers — so greedy generations
+//!   expansion ops** — every storage tier — so greedy generations
 //!   continue token-identically (DESIGN.md §9, §17).
+//! * [`serve::http`] — the network face (S21, `serve --http-addr`): a
+//!   multi-client `std::net` HTTP/1.1 server streaming `POST /v1/generate`
+//!   tokens as chunked NDJSON, mapping wall-clock `deadline_ms` onto
+//!   tick-denominated engine timeouts, and shedding overload through an
+//!   AIMD admission window ([`serve::http::AimdController`]) driven by
+//!   per-token latency gradients + rejection rate, exported live through
+//!   the [`obs`] registry (DESIGN.md §18).
+//! * [`serve::loadgen`] — synthetic open/closed-loop client fleet
+//!   (`texpand loadgen`): concurrent workers, seeded reproducible request
+//!   streams, client-observed p50/p95/p99 + tokens/sec appended to
+//!   `runs/bench.jsonl` as the `serve_http_load` series.
 
 pub mod autodiff;
 pub mod bench_util;

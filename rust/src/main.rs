@@ -6,7 +6,12 @@
 //!   family    branch a checkpoint into a family of sizes (§5 use case b)
 //!   generate  sample text from a trained checkpoint via the fwd artifact
 //!   serve     KV-cached batched inference engine on the pure-Rust path,
-//!             with optional mid-run function-preserving hot-swap
+//!             with optional mid-run function-preserving hot-swap;
+//!             --http-addr turns it into a streaming HTTP front-end with
+//!             adaptive admission control
+//!   loadgen   synthetic open/closed-loop client fleet against a serve
+//!             --http-addr listener; reports client-observed latency
+//!             percentiles + tokens/sec to runs/bench.jsonl
 //!   scrape    std::net HTTP GET against a running --metrics-addr
 //!             listener (curl-free metrics client for CI); --spans tails
 //!             the live span stream
@@ -59,15 +64,23 @@ USAGE:
   texpand serve   [--ckpt PATH] [--checkpoint PATH]
                   [--requests N] [--tokens N] [--slots N]
                   [--temperature F] [--top-k N] [--seed N] [--serial]
-                  [--corpus markov|copy|arithmetic] [--kv-quant]
+                  [--corpus markov|copy|arithmetic]
+                  [--kv-quant[=f32|f16|int8]]
                   [--max-pending N] [--timeout-ticks N]
                   [--swap-ops SPEC] [--swap-after-ticks N]
                   (SPEC e.g. \"mlp=256,heads_add=1,layers_add=1@top\")
                   [--metrics-addr HOST:PORT] [--metrics-linger-ms N]
                   [--runs D] [--run-name N] [--span-sample N]
+                  [--http-addr HOST:PORT] [--http-max-secs N]
+                  [--admission adaptive|static] [--window-init F]
+                  [--window-min F] [--window-max F]
+  texpand loadgen --addr HOST:PORT [--clients N] [--requests N]
+                  [--rate F] [--tokens N] [--prompt-mix A,B,C]
+                  [--deadline-ms N] [--vocab N] [--seed N]
+                  [--timeout-ms N] [--case LABEL]
   texpand scrape  --addr HOST:PORT [--path /metrics] [--timeout-ms N]
                   [--spans] [--count N]
-  texpand runs    [list|show|stats] [RUN] [--runs D]
+  texpand runs    [list|show|stats|compact] [RUN] [--runs D] [--keep N]
   texpand ckpt    list|verify DIR
   texpand report  RUN [--runs D]
   texpand plan    [--schedule P] [--json]
@@ -104,8 +117,29 @@ releases it early). `texpand scrape` is the matching curl-free client.
 Latency histogram buckets carry the most recent request id as an
 exemplar annotation in the /metrics text.
 
+HTTP serving: serve --http-addr binds a multi-client streaming HTTP
+front-end — POST /v1/generate with a JSON body ({\"tokens\":[..]} or
+{\"prompt\":\"..\"}, plus max_new_tokens / deadline_ms / temperature /
+top_k / seed) streams decoded tokens back incrementally as chunked
+NDJSON lines, finishing with a terminal done chunk whose finish field
+is max_tokens or timeout (deadline_ms maps onto engine ticks via a
+live EWMA of tick duration). Admission is an AIMD controller over the
+per-token latency gradient (--admission adaptive, the default) or a
+fixed window (--admission static); requests beyond the live window get
+429 + Retry-After. --window-init/--window-min/--window-max bound the
+controller. The listener also serves /metrics, /healthz and /quitz
+(quit releases the server; --http-max-secs N is the CI safety cap).
+`texpand loadgen` is the matching synthetic-client driver: N
+concurrent clients (--clients), closed-loop by default or open-loop at
+--rate req/s, prompt lengths cycling --prompt-mix, reporting client-
+observed p50/p95/p99 latency, tokens/sec and the 429/timeout/error
+breakdown, appended to runs/bench.jsonl as a serve_http_load row.
+
 Run store: `texpand runs` ingests runs/<name>/events.jsonl into an
 append-only indexed store at runs/.store (list/show/stats), and
+`texpand runs compact --keep N` retires all but the newest N runs'
+record payloads from the store (stats summaries survive; a compacted
+run re-ingests only if its source log grows), and
 `texpand report RUN` renders the growth timeline — per-stage loss
 curves, each expansion's predicted-vs-actual param/FLOP deltas, a
 preservation-drift row per boundary checked against the probe
@@ -126,13 +160,14 @@ checksum verdict) and `texpand ckpt verify DIR` exits nonzero when no
 generation is resumable — a chain health check that never loads the
 model into an engine.
 
-Raw-speed serving: serve --kv-quant stores per-sequence K/V rows as
-block-quantized int8 (QUANT_BLOCK scalars per f32 scale) for a
-several-fold cut in resident cache bytes; the residual stream stays
-exact f32, so hot-swap remaps and pending logits are computed from
-exact state and quantization error never compounds across swaps
-(DESIGN.md §17). The engine reports peak KV bytes per sequence either
-way.
+Raw-speed serving: serve --kv-quant=TIER picks the per-sequence K/V
+storage tier: f32 (exact, default), f16 (IEEE binary16, exactly 2×
+fewer resident bytes), or int8 (block-quantized, QUANT_BLOCK scalars
+per f32 scale, several-fold fewer; bare --kv-quant keeps meaning
+int8). In every tier the residual stream stays exact f32, so hot-swap
+remaps and pending logits are computed from exact state and
+compression error never compounds across swaps (DESIGN.md §17). The
+engine reports peak KV bytes per sequence for each tier.
 
 Defaults: --schedule configs/growth_default.json, --artifacts artifacts,
           --runs runs, --backend pjrt.";
@@ -159,6 +194,7 @@ fn run() -> Result<()> {
         Some("family") => cmd_family(&args),
         Some("generate") => cmd_generate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("scrape") => cmd_scrape(&args),
         Some("runs") => cmd_runs(&args),
         Some("ckpt") => cmd_ckpt(&args),
@@ -557,7 +593,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let swap_ops = args.get("swap-ops").map(|s| texpand::serve::parse_swap_spec(&s)).transpose()?;
     let swap_after = args.get_u64("swap-after-ticks")?.unwrap_or(tokens as u64 / 2);
     let serial = args.has("serial");
-    let kv_quant = args.has("kv-quant");
+    // --kv-quant=f32|f16|int8 picks the storage tier; the bare switch
+    // keeps its original int8 meaning
+    let kv_tier = match args.get("kv-quant") {
+        Some(v) => texpand::serve::KvTier::parse(&v)?,
+        None if args.has("kv-quant") => texpand::serve::KvTier::Int8,
+        None => texpand::serve::KvTier::F32,
+    };
+    let http_addr = args.get("http-addr");
+    let http_max_secs = args.get_u64("http-max-secs")?.unwrap_or(0);
+    let admission = args.get_choice("admission", &["adaptive", "static"])?;
+    let window_init = args.get_f64("window-init")?;
+    let window_min = args.get_f64("window-min")?;
+    let window_max = args.get_f64("window-max")?;
+    if http_addr.is_none()
+        && (admission.is_some()
+            || window_init.is_some()
+            || window_min.is_some()
+            || window_max.is_some()
+            || http_max_secs > 0)
+    {
+        return Err(Error::Cli(
+            "--admission/--window-*/--http-max-secs apply to --http-addr serving only".into(),
+        ));
+    }
     let max_pending = args.get_usize("max-pending")?;
     let timeout_ticks = args.get_u64("timeout-ticks")?;
     let ckpt = args.get("ckpt");
@@ -612,7 +671,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_slots: slots,
         parallel: !serial,
         span_sample,
-        kv_quant,
+        kv_tier,
         ..Default::default()
     };
     if let Some(n) = max_pending {
@@ -654,6 +713,96 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ("slots", Value::num(slots as f64)),
         ],
     );
+
+    // --http-addr: hand the engine to the streaming HTTP front-end and
+    // serve until /quitz (or the --http-max-secs safety cap)
+    if let Some(addr) = &http_addr {
+        use texpand::serve::http::{AimdOptions, HttpServer, HttpServerOptions};
+        let mut aimd = AimdOptions { adaptive: admission.as_deref() != Some("static"), ..Default::default() };
+        if let Some(w) = window_init {
+            aimd.initial_window = w;
+        }
+        if let Some(w) = window_min {
+            aimd.min_window = w;
+        }
+        if let Some(w) = window_max {
+            aimd.max_window = w;
+        }
+        if aimd.min_window < 1.0 || aimd.max_window < aimd.min_window {
+            return Err(Error::Cli(
+                "admission windows need 1 <= --window-min <= --window-max".into(),
+            ));
+        }
+        let hopts = HttpServerOptions {
+            aimd,
+            max_new_tokens_cap: 0, // server default cap
+            span_ring: span_ring.clone(),
+        };
+        let server = HttpServer::bind(addr, engine, hopts)?;
+        // the machine-parseable line ci.sh and loadgen scripts key on
+        println!("serving on http://{}", server.local_addr());
+        println!(
+            "POST /v1/generate streams chunked NDJSON; admission {} (GET /quitz to stop)",
+            if admission.as_deref() == Some("static") { "static" } else { "adaptive" }
+        );
+        logger.event(
+            "serve_http_start",
+            vec![
+                ("addr", Value::str(server.local_addr().to_string())),
+                ("admission", Value::str(admission.as_deref().unwrap_or("adaptive"))),
+            ],
+        );
+        let started = std::time::Instant::now();
+        loop {
+            if server.wait_for_quit(std::time::Duration::from_millis(500)) {
+                break;
+            }
+            if http_max_secs > 0 && started.elapsed().as_secs() >= http_max_secs {
+                println!("--http-max-secs {http_max_secs} reached; shutting down");
+                break;
+            }
+        }
+        let (engine, summary) = server.shutdown()?;
+        println!(
+            "http summary: {} requests, {} streamed, {} rejected, {} errors, \
+             {} admission verdicts, final window {}",
+            summary.requests,
+            summary.streamed,
+            summary.rejected,
+            summary.errors,
+            summary.adjustments,
+            summary.final_window
+        );
+        println!("counters: {}", engine.counters().to_json().to_pretty());
+        println!(
+            "peak kv bytes/seq: {} ({} tier)",
+            engine.peak_kv_bytes_per_seq(),
+            kv_tier.label()
+        );
+        logger.event(
+            "serve_http_done",
+            vec![
+                ("requests", Value::num(summary.requests as f64)),
+                ("streamed", Value::num(summary.streamed as f64)),
+                ("rejected", Value::num(summary.rejected as f64)),
+                ("errors", Value::num(summary.errors as f64)),
+                ("adjustments", Value::num(summary.adjustments as f64)),
+                ("final_window", Value::num(summary.final_window as f64)),
+                ("counters", engine.counters().to_json()),
+            ],
+        );
+        logger.flush();
+        if let Some(e) = logger.take_write_error() {
+            eprintln!(
+                "warning: serve log writes failed ({} lines dropped): {e}",
+                logger.dropped_lines()
+            );
+        }
+        if let Some(srv) = metrics_server {
+            srv.shutdown();
+        }
+        return Ok(());
+    }
 
     // corpus-derived prompts: staggered windows over synthesized text
     let tok = texpand::data::ByteTokenizer::new(cfg.vocab)?;
@@ -733,11 +882,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     println!("\ncounters: {}", engine.counters().to_json().to_pretty());
-    println!(
-        "peak kv bytes/seq: {} ({} tier)",
-        engine.peak_kv_bytes_per_seq(),
-        if kv_quant { "int8 block-quantized" } else { "f32" }
-    );
+    println!("peak kv bytes/seq: {} ({} tier)", engine.peak_kv_bytes_per_seq(), kv_tier.label());
     // backpressure-drain ticks finish requests before the main loop runs;
     // sweep any spans still buffered in the engine into the log
     for span in engine.take_spans() {
@@ -760,6 +905,126 @@ fn cmd_serve(args: &Args) -> Result<()> {
             srv.wait_for_quit(std::time::Duration::from_millis(linger_ms));
         }
         srv.shutdown();
+    }
+    Ok(())
+}
+
+/// `texpand loadgen` — synthetic client fleet against a `serve
+/// --http-addr` listener (see [`texpand::serve::loadgen`]). Prints the
+/// client-observed outcome and appends a `serve_http_load` row to
+/// runs/bench.jsonl, so adaptive-vs-static admission comparisons land in
+/// the same series the benches use.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use texpand::serve::loadgen::{self, LoadgenOptions};
+    let addr = args.require("addr")?;
+    let mut opts = LoadgenOptions { addr, ..Default::default() };
+    if let Some(n) = args.get_usize("clients")? {
+        opts.clients = n;
+    }
+    if let Some(n) = args.get_usize("requests")? {
+        opts.requests = n;
+    }
+    if let Some(r) = args.get_f64("rate")? {
+        if r < 0.0 {
+            return Err(Error::Cli("--rate must be >= 0 (0 = closed loop)".into()));
+        }
+        opts.rate_per_sec = r;
+    }
+    if let Some(n) = args.get_usize("tokens")? {
+        opts.tokens = n.max(1);
+    }
+    if let Some(mix) = args.get("prompt-mix") {
+        let mut lens = Vec::new();
+        for part in mix.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            lens.push(part.parse::<usize>().map_err(|_| {
+                Error::Cli(format!("--prompt-mix entry '{part}' is not an integer"))
+            })?);
+        }
+        opts.prompt_mix = lens;
+    }
+    if let Some(d) = args.get_u64("deadline-ms")? {
+        opts.deadline_ms = d;
+    }
+    if let Some(v) = args.get_usize("vocab")? {
+        opts.vocab = v;
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        opts.seed = s;
+    }
+    if let Some(t) = args.get_u64("timeout-ms")? {
+        opts.timeout = std::time::Duration::from_millis(t.max(1));
+    }
+    let case = args.get("case");
+    args.reject_unknown()?;
+
+    let report = loadgen::run(&opts)?;
+    println!(
+        "loadgen ({} loop): {} sent -> {} completed, {} rejected (429), {} timeouts, {} errors",
+        report.mode, report.sent, report.completed, report.rejected, report.timeouts, report.errors
+    );
+    println!(
+        "streamed {} tokens in {:.0} ms ({:.1} tok/s)",
+        report.tokens_streamed, report.wall_ms, report.tokens_per_sec
+    );
+    let case = case.unwrap_or_else(|| {
+        format!("{}c-{}r-{}", opts.clients, opts.requests, report.mode)
+    });
+    let mut reporter = texpand::bench_util::Reporter::new("serve_http_load");
+    let streamed = report.completed + report.timeouts;
+    if streamed > 0 {
+        let stats = texpand::bench_util::Stats {
+            iters: streamed,
+            mean_ns: report.mean_ms * 1e6,
+            p50_ns: report.p50_ms * 1e6,
+            p95_ns: report.p95_ms * 1e6,
+            p99_ns: report.p99_ms * 1e6,
+            min_ns: 0.0,
+            max_ns: report.max_ms * 1e6,
+        };
+        reporter.row(
+            &case,
+            &stats,
+            vec![
+                ("kind", Value::str("serve_http_load")),
+                ("sent", Value::num(report.sent as f64)),
+                ("completed", Value::num(report.completed as f64)),
+                ("rejected", Value::num(report.rejected as f64)),
+                ("timeouts", Value::num(report.timeouts as f64)),
+                ("errors", Value::num(report.errors as f64)),
+                ("tokens_streamed", Value::num(report.tokens_streamed as f64)),
+                ("tokens_per_sec", Value::num(report.tokens_per_sec)),
+                ("mode", Value::str(report.mode)),
+                ("clients", Value::num(opts.clients as f64)),
+                ("rate_per_sec", Value::num(opts.rate_per_sec)),
+            ],
+        );
+    } else {
+        // nothing streamed (all rejected/errored): still record the run
+        reporter.value_row(
+            &case,
+            "tokens_per_sec",
+            report.tokens_per_sec,
+            vec![
+                ("kind", Value::str("serve_http_load")),
+                ("sent", Value::num(report.sent as f64)),
+                ("completed", Value::num(report.completed as f64)),
+                ("rejected", Value::num(report.rejected as f64)),
+                ("timeouts", Value::num(report.timeouts as f64)),
+                ("errors", Value::num(report.errors as f64)),
+                ("mode", Value::str(report.mode)),
+            ],
+        );
+    }
+    reporter.flush();
+    if report.completed == 0 && report.timeouts == 0 && report.rejected == 0 {
+        return Err(Error::Serve(format!(
+            "no request succeeded against {} ({} errors)",
+            opts.addr, report.errors
+        )));
     }
     Ok(())
 }
@@ -872,9 +1137,24 @@ fn cmd_runs(args: &Args) -> Result<()> {
             }
             Ok(())
         }
-        other => {
-            Err(Error::Cli(format!("unknown runs action '{other}' (expected list|show|stats)")))
+        "compact" => {
+            let keep = args
+                .get_usize("keep")?
+                .ok_or_else(|| Error::Cli("runs compact needs --keep N".into()))?;
+            args.reject_unknown()?;
+            let store = RunStore::open(&runs_root)?;
+            store.ingest_all()?;
+            let rep = store.compact(keep)?;
+            println!(
+                "compacted {} of {} run(s): kept {} with full records, freed {} bytes \
+                 (summaries retained for all)",
+                rep.compacted, rep.examined, rep.kept, rep.bytes_freed
+            );
+            Ok(())
         }
+        other => Err(Error::Cli(format!(
+            "unknown runs action '{other}' (expected list|show|stats|compact)"
+        ))),
     }
 }
 

@@ -24,7 +24,15 @@
 //! reports it. [`http_get`] is the matching `std::net` client (used by
 //! `texpand scrape` and the integration tests) so CI needs no curl;
 //! [`http_stream_lines`] is the chunked-decoding tail client behind
-//! `texpand scrape --spans`.
+//! `texpand scrape --spans`; [`http_post_stream`] is the streaming POST
+//! client the loadgen drives `POST /v1/generate` with.
+//!
+//! Request parsing is hardened and shared with the serve front-end
+//! ([`read_http_request`]): request-line/header/body sizes are capped
+//! ([`MAX_REQUEST_LINE_BYTES`] / [`MAX_HEADER_BYTES`] /
+//! [`MAX_BODY_BYTES`]), `Content-Length` must be well-formed and
+//! unambiguous, and every rejection is answered with a 400/413 instead of
+//! a silently dropped connection.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -149,10 +157,21 @@ fn handle_conn(
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(IO_TIMEOUT))?;
     stream.set_write_timeout(Some(IO_TIMEOUT))?;
-    let request_line = read_request_line(&mut stream)?;
-    let mut parts = request_line.split_whitespace();
-    let method = parts.next().unwrap_or("");
-    let path = parts.next().unwrap_or("");
+    let req = match read_http_request(&mut stream)? {
+        Ok(req) => req,
+        Err(e) => {
+            // hardened parse: malformed or oversized requests get an
+            // explicit status instead of a silently dropped connection
+            return write_response(
+                &mut stream,
+                e.status_line(),
+                "text/plain; charset=utf-8",
+                &format!("{}\n", e.message()),
+            );
+        }
+    };
+    let method = req.method.as_str();
+    let path = req.path.as_str();
     if method == "GET" && path == "/spans" {
         if let Some(ring) = spans {
             let ring = ring.clone();
@@ -182,6 +201,16 @@ fn handle_conn(
             _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
         }
     };
+    write_response(&mut stream, status, content_type, &body)
+}
+
+/// Write one complete non-chunked HTTP response and flush.
+pub(crate) fn write_response(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
     let response = format!(
         "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
@@ -227,23 +256,172 @@ fn stream_spans(
     }
 }
 
-/// Read up to the end of the request head and return its first line. The
-/// buffer is capped: a scrape request head has no business exceeding 8 KiB.
-fn read_request_line(stream: &mut TcpStream) -> std::io::Result<String> {
-    let mut buf = Vec::with_capacity(256);
-    let mut chunk = [0u8; 512];
-    loop {
-        let n = stream.read(&mut chunk)?;
-        if n == 0 {
-            break;
-        }
-        buf.extend_from_slice(&chunk[..n]);
-        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
-            break;
+/// Cap on the request line (`GET /path HTTP/1.1`): longer is a 400.
+pub const MAX_REQUEST_LINE_BYTES: usize = 8 * 1024;
+/// Cap on the whole request head (request line + headers): longer is a 400.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Cap on a request body (`Content-Length`): larger is a 413 — read
+/// nothing of it, just answer and close.
+pub const MAX_BODY_BYTES: usize = 256 * 1024;
+
+/// A fully-read inbound HTTP request: request line, headers and body.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// Header `(name, value)` pairs in arrival order, names as sent.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First header value with this name (ASCII case-insensitive).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why an inbound request was rejected at the parse layer; maps onto an
+/// HTTP status so the connection gets an answer instead of a silent drop.
+#[derive(Clone, Debug)]
+pub enum HttpParseError {
+    /// Malformed or oversized head, malformed `Content-Length`, truncated
+    /// request — `400 Bad Request`.
+    BadRequest(String),
+    /// Declared body larger than [`MAX_BODY_BYTES`] — `413 Payload Too
+    /// Large` (answered without reading the body).
+    PayloadTooLarge(String),
+}
+
+impl HttpParseError {
+    pub fn status(&self) -> u16 {
+        match self {
+            HttpParseError::BadRequest(_) => 400,
+            HttpParseError::PayloadTooLarge(_) => 413,
         }
     }
-    let text = String::from_utf8_lossy(&buf);
-    Ok(text.lines().next().unwrap_or("").to_string())
+
+    pub fn status_line(&self) -> &'static str {
+        match self {
+            HttpParseError::BadRequest(_) => "400 Bad Request",
+            HttpParseError::PayloadTooLarge(_) => "413 Payload Too Large",
+        }
+    }
+
+    pub fn message(&self) -> &str {
+        match self {
+            HttpParseError::BadRequest(m) | HttpParseError::PayloadTooLarge(m) => m,
+        }
+    }
+}
+
+/// Read and parse one full HTTP request from `stream`, enforcing the
+/// size caps. The outer `io::Result` is transport failure (timeout,
+/// reset); the inner `Result` is protocol rejection — the caller answers
+/// those with [`HttpParseError::status_line`] instead of dropping the
+/// connection. Shared by the metrics listener and the serve front-end.
+pub fn read_http_request(
+    stream: &mut TcpStream,
+) -> std::io::Result<std::result::Result<HttpRequest, HttpParseError>> {
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 2048];
+    // 1. the head, up to the blank line
+    let head_end = loop {
+        if let Some(i) = find_subslice(&buf, b"\r\n\r\n") {
+            break i + 4;
+        }
+        if find_subslice(&buf, b"\r\n").is_none() && buf.len() > MAX_REQUEST_LINE_BYTES {
+            return Ok(Err(HttpParseError::BadRequest(format!(
+                "request line exceeds {MAX_REQUEST_LINE_BYTES} bytes"
+            ))));
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Ok(Err(HttpParseError::BadRequest(format!(
+                "request head exceeds {MAX_HEADER_BYTES} bytes"
+            ))));
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Ok(Err(HttpParseError::BadRequest(
+                "connection closed before a complete request head".into(),
+            )));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    if request_line.len() > MAX_REQUEST_LINE_BYTES {
+        return Ok(Err(HttpParseError::BadRequest(format!(
+            "request line exceeds {MAX_REQUEST_LINE_BYTES} bytes"
+        ))));
+    }
+    let mut parts = request_line.split_whitespace();
+    let (Some(method), Some(path)) = (parts.next(), parts.next()) else {
+        return Ok(Err(HttpParseError::BadRequest(format!(
+            "malformed request line '{}'",
+            request_line.chars().take(80).collect::<String>()
+        ))));
+    };
+    // 2. headers
+    let mut headers: Vec<(String, String)> = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue; // the blank terminator
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Ok(Err(HttpParseError::BadRequest(format!(
+                "malformed header line '{}'",
+                line.chars().take(80).collect::<String>()
+            ))));
+        };
+        headers.push((name.trim().to_string(), value.trim().to_string()));
+    }
+    // 3. body, by Content-Length (reject a malformed or ambiguous one)
+    let mut content_length = 0usize;
+    let mut seen_cl = false;
+    for (n, v) in &headers {
+        if n.eq_ignore_ascii_case("content-length") {
+            let Ok(len) = v.parse::<usize>() else {
+                return Ok(Err(HttpParseError::BadRequest(format!(
+                    "malformed Content-Length '{v}'"
+                ))));
+            };
+            if seen_cl && len != content_length {
+                return Ok(Err(HttpParseError::BadRequest(
+                    "conflicting Content-Length headers".into(),
+                )));
+            }
+            content_length = len;
+            seen_cl = true;
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Ok(Err(HttpParseError::PayloadTooLarge(format!(
+            "declared body of {content_length} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+        ))));
+    }
+    let mut body: Vec<u8> = buf[head_end..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Ok(Err(HttpParseError::BadRequest(format!(
+                "connection closed mid-body ({} of {content_length} bytes)",
+                body.len()
+            ))));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok(Ok(HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body,
+    }))
 }
 
 /// Tiny blocking HTTP GET returning `(status_code, body)`. `addr` is
@@ -403,6 +581,138 @@ pub fn http_stream_lines(
     Ok(count)
 }
 
+/// What [`http_post_stream`] got back.
+#[derive(Clone, Debug)]
+pub struct PostStreamOutcome {
+    pub status: u16,
+    /// Decoded stream lines (chunked 200 responses; one NDJSON line per
+    /// entry, also delivered incrementally through `on_line`).
+    pub lines: Vec<String>,
+    /// Non-streamed body (non-200 or non-chunked responses).
+    pub body: String,
+    /// `Retry-After` response header in seconds, when present (429s).
+    pub retry_after: Option<u64>,
+}
+
+/// Blocking HTTP POST with incremental consumption of a chunked streaming
+/// response — the client side of `POST /v1/generate`. `on_line` fires per
+/// complete line *as it is decoded*, so callers can time first-token
+/// arrival; the full set is also returned. Non-200 responses are not an
+/// `Err` — the status and body come back in the outcome (a 429 with
+/// `Retry-After` is an expected answer under overload, not a failure).
+pub fn http_post_stream(
+    addr: &str,
+    path: &str,
+    request_body: &str,
+    timeout: Duration,
+    on_line: &mut dyn FnMut(&str),
+) -> Result<PostStreamOutcome> {
+    let mut stream = connect(addr, timeout)?;
+    stream
+        .set_read_timeout(Some(timeout))
+        .map_err(|e| Error::Serve(format!("read timeout: {e}")))?;
+    stream
+        .set_write_timeout(Some(timeout))
+        .map_err(|e| Error::Serve(format!("write timeout: {e}")))?;
+    let request = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{request_body}",
+        request_body.len()
+    );
+    stream
+        .write_all(request.as_bytes())
+        .map_err(|e| Error::Serve(format!("send POST {path}: {e}")))?;
+
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let header_end = loop {
+        if let Some(i) = find_subslice(&buf, b"\r\n\r\n") {
+            break i + 4;
+        }
+        if buf.len() > 64 * 1024 {
+            return Err(Error::Serve(format!("oversized response head from {addr}")));
+        }
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| Error::Serve(format!("read POST {path} response head: {e}")))?;
+        if n == 0 {
+            return Err(Error::Serve(format!("{addr} closed before sending headers for {path}")));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..header_end]).to_string();
+    let status = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| Error::Serve(format!("malformed HTTP response from {addr}")))?;
+    let lower = head.to_ascii_lowercase();
+    let retry_after = lower
+        .lines()
+        .find_map(|l| l.strip_prefix("retry-after:"))
+        .and_then(|v| v.trim().parse::<u64>().ok());
+    buf.drain(..header_end);
+
+    if status != 200 || !lower.contains("transfer-encoding: chunked") {
+        // plain response: drain to close and hand the body back whole
+        loop {
+            match stream.read(&mut chunk) {
+                Ok(0) => break,
+                Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    break;
+                }
+                Err(e) => return Err(Error::Serve(format!("read POST {path} response: {e}"))),
+            }
+        }
+        let body = String::from_utf8_lossy(&buf).to_string();
+        return Ok(PostStreamOutcome { status, lines: Vec::new(), body, retry_after });
+    }
+
+    // chunked stream: decode incrementally, one callback per line
+    let mut body: Vec<u8> = Vec::new();
+    let mut lines: Vec<String> = Vec::new();
+    'outer: loop {
+        loop {
+            let Some(size_end) = find_subslice(&buf, b"\r\n") else { break };
+            let size_str = String::from_utf8_lossy(&buf[..size_end]).trim().to_string();
+            let size = usize::from_str_radix(&size_str, 16).map_err(|_| {
+                Error::Serve(format!("bad chunk size '{size_str}' in {path} stream from {addr}"))
+            })?;
+            if size == 0 {
+                break 'outer;
+            }
+            let frame = size_end + 2 + size + 2;
+            if buf.len() < frame {
+                break;
+            }
+            body.extend_from_slice(&buf[size_end + 2..size_end + 2 + size]);
+            buf.drain(..frame);
+            while let Some(nl) = body.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = body.drain(..nl + 1).collect();
+                let line = String::from_utf8_lossy(&line[..nl]).to_string();
+                on_line(&line);
+                lines.push(line);
+            }
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                break;
+            }
+            Err(e) => return Err(Error::Serve(format!("read POST {path} stream: {e}"))),
+        }
+    }
+    Ok(PostStreamOutcome { status, lines, body: String::new(), retry_after })
+}
+
 fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
     hay.windows(needle.len()).position(|w| w == needle)
 }
@@ -477,6 +787,114 @@ mod tests {
         let (status, body) = http_get(&addr, "/spans", Duration::from_secs(2)).unwrap();
         assert_eq!(status, 404);
         assert!(body.contains("span export not enabled"), "{body}");
+        srv.shutdown();
+    }
+
+    /// Write raw bytes at the server, half-close, and read the full
+    /// response back — the harness for driving malformed requests that
+    /// `http_get` could never produce.
+    fn raw_roundtrip(addr: &str, payload: &[u8]) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        s.set_write_timeout(Some(Duration::from_secs(2))).unwrap();
+        s.write_all(payload).unwrap();
+        let _ = s.shutdown(std::net::Shutdown::Write);
+        let mut raw = String::new();
+        let _ = s.read_to_string(&mut raw);
+        let status =
+            raw.split_whitespace().nth(1).and_then(|x| x.parse::<u16>().ok()).unwrap_or(0);
+        let body = raw.find("\r\n\r\n").map(|i| raw[i + 4..].to_string()).unwrap_or_default();
+        (status, body)
+    }
+
+    #[test]
+    fn oversized_request_line_is_rejected_with_400() {
+        let (srv, _reg) = server();
+        let addr = srv.local_addr().to_string();
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_REQUEST_LINE_BYTES + 100));
+        let (status, body) = raw_roundtrip(&addr, long.as_bytes());
+        assert_eq!(status, 400, "{body}");
+        assert!(body.contains("request line"), "{body}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn oversized_header_section_is_rejected_with_400() {
+        let (srv, _reg) = server();
+        let addr = srv.local_addr().to_string();
+        let req = format!(
+            "GET /healthz HTTP/1.1\r\nX-Big: {}\r\n\r\n",
+            "b".repeat(MAX_HEADER_BYTES + 100)
+        );
+        let (status, body) = raw_roundtrip(&addr, req.as_bytes());
+        assert_eq!(status, 400, "{body}");
+        assert!(body.contains("head exceeds"), "{body}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn malformed_content_length_is_rejected_with_400() {
+        let (srv, _reg) = server();
+        let addr = srv.local_addr().to_string();
+        let (status, body) =
+            raw_roundtrip(&addr, b"POST /x HTTP/1.1\r\nContent-Length: banana\r\n\r\n");
+        assert_eq!(status, 400, "{body}");
+        assert!(body.contains("Content-Length"), "{body}");
+        // two disagreeing Content-Length headers are just as malformed
+        let (status, body) = raw_roundtrip(
+            &addr,
+            b"POST /x HTTP/1.1\r\nContent-Length: 4\r\nContent-Length: 5\r\n\r\nabcd",
+        );
+        assert_eq!(status, 400, "{body}");
+        assert!(body.contains("conflicting"), "{body}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_with_413_without_reading_it() {
+        let (srv, _reg) = server();
+        let addr = srv.local_addr().to_string();
+        let req = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        // note: none of the declared body is ever sent — the server must
+        // answer from the header alone
+        let (status, body) = raw_roundtrip(&addr, req.as_bytes());
+        assert_eq!(status, 413, "{body}");
+        assert!(body.contains("cap"), "{body}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn truncated_requests_are_rejected_with_400() {
+        let (srv, _reg) = server();
+        let addr = srv.local_addr().to_string();
+        // head cut off mid-line
+        let (status, body) = raw_roundtrip(&addr, b"GET /metr");
+        assert_eq!(status, 400, "{body}");
+        assert!(body.contains("closed before"), "{body}");
+        // complete head, body shorter than declared
+        let (status, body) =
+            raw_roundtrip(&addr, b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc");
+        assert_eq!(status, 400, "{body}");
+        assert!(body.contains("mid-body"), "{body}");
+        // garbage request line
+        let (status, body) = raw_roundtrip(&addr, b"NONSENSE\r\n\r\n");
+        assert_eq!(status, 400, "{body}");
+        assert!(body.contains("malformed request line"), "{body}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn post_client_reads_plain_responses_and_retry_after() {
+        let (srv, _reg) = server();
+        let addr = srv.local_addr().to_string();
+        // the metrics server answers POST with a 405; the streaming POST
+        // client must surface that as an outcome, not an Err
+        let out = http_post_stream(&addr, "/metrics", "{}", Duration::from_secs(2), &mut |_| {})
+            .unwrap();
+        assert_eq!(out.status, 405);
+        assert!(out.lines.is_empty());
+        assert!(out.body.contains("method not allowed"), "{}", out.body);
+        assert_eq!(out.retry_after, None);
         srv.shutdown();
     }
 

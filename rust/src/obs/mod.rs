@@ -16,8 +16,12 @@
 //!   format 0.0.4, with OpenMetrics-style exemplar annotations.
 //! * [`http`] — [`MetricsServer`], a `std::net` listener serving
 //!   `/metrics` + `/healthz` + `/spans` (+ `/quitz` for CI), the
-//!   matching [`http_get`] client used by `texpand scrape`, and
-//!   [`http_stream_lines`] for tailing the chunked `/spans` stream.
+//!   matching [`http_get`] client used by `texpand scrape`,
+//!   [`http_stream_lines`] for tailing the chunked `/spans` stream, and
+//!   the hardened request parser ([`read_http_request`], size caps +
+//!   400/413 answers) shared with the serve front-end, plus
+//!   [`http_post_stream`], the streaming POST client behind
+//!   `texpand loadgen`.
 //! * [`span`] — [`SpanTracker`]/[`Span`]: per-request
 //!   queued→prefill→decode→finish phase records on the serve path, and
 //!   [`SpanRing`], the bounded buffer `/spans` streams from.
@@ -35,11 +39,14 @@ pub mod span;
 pub mod store;
 
 pub use histogram::{Exemplar, HistogramSnapshot, LATENCY_MS_BOUNDS};
-pub use http::{http_get, http_stream_lines, MetricsServer};
+pub use http::{
+    http_get, http_post_stream, http_stream_lines, read_http_request, HttpParseError, HttpRequest,
+    MetricsServer, PostStreamOutcome,
+};
 pub use prometheus::render;
 pub use registry::{
     global, Counter, FamilySnapshot, Gauge, Histogram, MetricKind, MetricsRegistry, SeriesSnapshot,
     SeriesValue,
 };
 pub use span::{Span, SpanRing, SpanTracker};
-pub use store::{IngestReport, RunStats, RunStore};
+pub use store::{CompactReport, IngestReport, RunStats, RunStore};

@@ -25,9 +25,15 @@
 //! *after* the append and offsets only ever advance. The one exception:
 //! a source file *shorter* than its cursor means the run name was reused
 //! by a fresh run, and the store re-ingests that run from scratch.
-//! There is no compaction: event logs are small (one line per
-//! step/boundary/span), and an aggregate [`RunStats`] summary is
-//! maintained per ingest so readers rarely need the raw records at all.
+//!
+//! **Retention.** Event logs are small (one line per step/boundary/span),
+//! but long-lived serve hosts accumulate runs without bound, so
+//! [`RunStore::compact`] retires all but the newest `keep` runs' record
+//! payloads: `records.jsonl` is deleted, `summary.json` (the aggregate
+//! [`RunStats`]) survives, and the run is marked `compacted` in the
+//! index. A compacted run whose source log hasn't changed ingests as a
+//! no-op; if its source grows (or shrinks — name reuse), the run
+//! re-ingests from scratch so the aggregate can never go silently stale.
 //!
 //! **Stats.** [`RunStore::stats`] folds the ingested records into a
 //! [`RunStats`]: segments, the loss trajectory, every expansion with its
@@ -74,6 +80,22 @@ struct IndexEntry {
     events_bytes: u64,
     records: u64,
     parse_errors: u64,
+    /// Records payload retired by [`RunStore::compact`]; the cursor and
+    /// counts above still describe what *was* ingested.
+    compacted: bool,
+}
+
+/// What one [`RunStore::compact`] call did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CompactReport {
+    /// Runs in the index when compaction ran.
+    pub examined: usize,
+    /// Runs whose record payload this call deleted.
+    pub compacted: usize,
+    /// Bytes of `records.jsonl` payload freed.
+    pub bytes_freed: u64,
+    /// Newest runs left intact (≤ `keep`).
+    pub kept: usize,
 }
 
 type Index = BTreeMap<String, IndexEntry>;
@@ -107,8 +129,19 @@ impl RunStore {
         let run_dir = format!("{}/{run}", self.store_dir);
         std::fs::create_dir_all(&run_dir).map_err(|e| Error::io(&run_dir, e))?;
         let records_path = format!("{run_dir}/records.jsonl");
-        if (data.len() as u64) < entry.events_bytes {
-            // source shrank: the run name was reused; restart from scratch
+        if entry.compacted && (data.len() as u64) == entry.events_bytes {
+            // compacted and the source hasn't moved: the retained
+            // summary.json still describes the run — nothing to do
+            return Ok(IngestReport {
+                new_records: 0,
+                total_records: entry.records,
+                source_bytes: entry.events_bytes,
+                parse_errors: entry.parse_errors,
+            });
+        }
+        if entry.compacted || (data.len() as u64) < entry.events_bytes {
+            // compacted source changed (the aggregate would go stale), or
+            // the source shrank (run name reused): restart from scratch
             std::fs::write(&records_path, b"").map_err(|e| Error::io(&records_path, e))?;
             *entry = IndexEntry::default();
         }
@@ -166,7 +199,7 @@ impl RunStore {
         };
         let (index, bench_bytes) = self.load_index()?;
         let dst = format!("{}/bench.jsonl", self.store_dir);
-        let mut entry = IndexEntry { events_bytes: bench_bytes, records: 0 };
+        let mut entry = IndexEntry { events_bytes: bench_bytes, ..Default::default() };
         if (data.len() as u64) < entry.events_bytes {
             std::fs::write(&dst, b"").map_err(|e| Error::io(&dst, e))?;
             entry.events_bytes = 0;
@@ -176,12 +209,69 @@ impl RunStore {
         Ok(new)
     }
 
+    /// Retire all but the newest `keep` runs' record payloads (module
+    /// docs: summaries and cursors survive; a compacted run re-ingests
+    /// from scratch only when its source log changes). Recency is the
+    /// store-side `records.jsonl` mtime (ties broken by name), so "newest"
+    /// means most recently ingested. Idempotent.
+    pub fn compact(&self, keep: usize) -> Result<CompactReport> {
+        let (mut index, bench_bytes) = self.load_index()?;
+        let mut order: Vec<(String, std::time::SystemTime)> = index
+            .keys()
+            .map(|name| {
+                let p = format!("{}/{name}/records.jsonl", self.store_dir);
+                let mtime = std::fs::metadata(&p)
+                    .and_then(|m| m.modified())
+                    .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+                (name.clone(), mtime)
+            })
+            .collect();
+        order.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        let mut report = CompactReport {
+            examined: order.len(),
+            kept: order.len().min(keep),
+            ..Default::default()
+        };
+        for (name, _) in order.into_iter().skip(keep) {
+            let entry = index.get_mut(&name).expect("name came from the index");
+            if entry.compacted {
+                continue;
+            }
+            let records = format!("{}/{name}/records.jsonl", self.store_dir);
+            let bytes = std::fs::metadata(&records).map(|m| m.len()).unwrap_or(0);
+            match std::fs::remove_file(&records) {
+                Ok(()) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => return Err(Error::io(&records, e)),
+            }
+            entry.compacted = true;
+            report.compacted += 1;
+            report.bytes_freed += bytes;
+        }
+        self.save_index(&index, bench_bytes)?;
+        Ok(report)
+    }
+
     /// Aggregate the ingested records of `run` (see [`RunStats`]).
     pub fn stats(&self, run: &str) -> Result<RunStats> {
         let path = format!("{}/{run}/records.jsonl", self.store_dir);
-        let text = std::fs::read_to_string(&path).map_err(|e| {
-            Error::io(format!("{path} (run not ingested? try `texpand runs list`)"), e)
-        })?;
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) => {
+                let (index, _) = self.load_index()?;
+                if index.get(run).is_some_and(|en| en.compacted) {
+                    return Err(Error::Serve(format!(
+                        "run '{run}' was compacted — {}/{run}/summary.json keeps the \
+                         aggregate; it re-ingests automatically if its source log changes",
+                        self.store_dir
+                    )));
+                }
+                return Err(Error::io(
+                    format!("{path} (run not ingested? try `texpand runs list`)"),
+                    e,
+                ));
+            }
+        };
         let mut stats = RunStats::new(run);
         for line in text.lines() {
             if line.trim().is_empty() {
@@ -218,6 +308,11 @@ impl RunStore {
                         .get("parse_errors")
                         .and_then(|p| p.as_i64().ok())
                         .unwrap_or(0) as u64,
+                    // absent in pre-retention indexes: default live
+                    compacted: entry
+                        .get("compacted")
+                        .and_then(|c| c.as_bool().ok())
+                        .unwrap_or(false),
                 },
             );
         }
@@ -235,6 +330,7 @@ impl RunStore {
                         ("events_bytes", Value::num(e.events_bytes as f64)),
                         ("records", Value::num(e.records as f64)),
                         ("parse_errors", Value::num(e.parse_errors as f64)),
+                        ("compacted", Value::Bool(e.compacted)),
                     ]),
                 )
             })
@@ -942,6 +1038,78 @@ mod tests {
         assert_eq!(store.ingest_bench().unwrap(), 1);
         let stored = std::fs::read_to_string(format!("{}/bench.jsonl", store.dir())).unwrap();
         assert_eq!(stored.lines().count(), 2);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn compact_keeps_newest_and_frees_bytes() {
+        let root = tmp_root("compact");
+        let store = RunStore::open(&root).unwrap();
+        for run in ["r1", "r2", "r3"] {
+            write_events(&root, run, &[r#"{"event":"span","id":1}"#]);
+            store.ingest(run).unwrap();
+            // recency is the store-side records.jsonl mtime: space the
+            // ingests out so the ordering is unambiguous
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+        let rep = store.compact(2).unwrap();
+        assert_eq!((rep.examined, rep.kept, rep.compacted), (3, 2, 1));
+        assert!(rep.bytes_freed > 0, "oldest run's records were on disk");
+        let records = |run: &str| format!("{}/{run}/records.jsonl", store.dir());
+        let summary = |run: &str| format!("{}/{run}/summary.json", store.dir());
+        assert!(!std::path::Path::new(&records("r1")).exists(), "oldest retired");
+        assert!(std::path::Path::new(&summary("r1")).exists(), "aggregate survives");
+        assert!(std::path::Path::new(&records("r2")).exists());
+        assert!(std::path::Path::new(&records("r3")).exists());
+        // idempotent: a second pass has nothing left to retire
+        let rep = store.compact(2).unwrap();
+        assert_eq!((rep.compacted, rep.bytes_freed), (0, 0));
+        // unchanged source: ingest is a no-op that keeps the counts and
+        // does NOT resurrect the records payload
+        let rep = store.ingest("r1").unwrap();
+        assert_eq!((rep.new_records, rep.total_records), (0, 1));
+        assert!(!std::path::Path::new(&records("r1")).exists());
+        // the run still lists; only stats() needs the payload
+        assert!(store.runs().unwrap().contains(&"r1".to_string()));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn compacted_run_reingests_when_source_changes() {
+        let root = tmp_root("compact-regrow");
+        let store = RunStore::open(&root).unwrap();
+        write_events(&root, "r", &[r#"{"event":"span","id":1}"#]);
+        store.ingest("r").unwrap();
+        store.compact(0).unwrap();
+        // source grew: the retained aggregate is stale, so ingestion
+        // restarts from byte 0 and the payload comes back
+        let path = format!("{root}/r/events.jsonl");
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"event\":\"span\",\"id\":2}\n").unwrap();
+        drop(f);
+        let rep = store.ingest("r").unwrap();
+        assert_eq!((rep.new_records, rep.total_records), (2, 2));
+        assert_eq!(store.stats("r").unwrap().spans, 2);
+        // compact again, then shrink the source (run name reused):
+        // same restart path, no dupes
+        store.compact(0).unwrap();
+        write_events(&root, "r", &[r#"{"event":"span","id":9}"#]);
+        let rep = store.ingest("r").unwrap();
+        assert_eq!((rep.new_records, rep.total_records), (1, 1));
+        assert_eq!(store.stats("r").unwrap().spans, 1);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn stats_on_compacted_run_explains_itself() {
+        let root = tmp_root("compact-stats");
+        let store = RunStore::open(&root).unwrap();
+        write_events(&root, "r", &[r#"{"event":"span","id":1}"#]);
+        store.ingest("r").unwrap();
+        store.compact(0).unwrap();
+        let err = store.stats("r").unwrap_err().to_string();
+        assert!(err.contains("compacted"), "got: {err}");
+        assert!(err.contains("summary.json"), "got: {err}");
         std::fs::remove_dir_all(&root).unwrap();
     }
 }

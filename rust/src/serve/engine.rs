@@ -43,6 +43,7 @@ use crate::obs::{
 use crate::params::ParamStore;
 use crate::rng::Pcg32;
 use crate::serve::hotswap::{self, SwapReport};
+use crate::serve::kv::KvTier;
 use crate::serve::scheduler::{Completion, Request, RequestId, Scheduler, TickReport};
 
 /// Engine construction knobs.
@@ -77,12 +78,13 @@ pub struct EngineOptions {
     /// every request regardless — sampling thins only the per-request
     /// trace stream. `0` and `1` both mean "keep everything".
     pub span_sample: u64,
-    /// Store in-flight K/V rows block-quantized to i8
-    /// ([`crate::serve::kv::QuantKvCache`]): several-fold fewer resident
-    /// bytes per sequence, logit drift bounded as documented in
-    /// DESIGN.md §17. Quantized caches ride hot-swaps exactly like exact
-    /// ones (the remap reads the exact f32 stream buffers either way).
-    pub kv_quant: bool,
+    /// In-flight K/V storage tier ([`crate::serve::kv::KvTier`]): exact
+    /// f32 (default), half-precision f16 (2× fewer resident bytes,
+    /// ≤2⁻¹¹ relative error), or block-quantized i8 (≥3× fewer bytes,
+    /// drift bounded as documented in DESIGN.md §17). Lossy caches ride
+    /// hot-swaps exactly like exact ones (the remap reads the exact f32
+    /// stream buffers in every tier).
+    pub kv_tier: KvTier,
 }
 
 impl Default for EngineOptions {
@@ -97,7 +99,7 @@ impl Default for EngineOptions {
             request_timeout_ticks: 0,
             metrics: true,
             span_sample: 1,
-            kv_quant: false,
+            kv_tier: KvTier::F32,
         }
     }
 }
@@ -211,7 +213,7 @@ impl Engine {
             .collect();
         let metrics = opts.metrics.then(|| EngineMetrics::register(registry));
         let mut sched = Scheduler::new(opts.max_slots);
-        sched.kv_quant = opts.kv_quant;
+        sched.kv_tier = opts.kv_tier;
         Engine {
             params,
             sched,
@@ -281,6 +283,22 @@ impl Engine {
         max_new_tokens: usize,
         sampler: Sampler,
     ) -> Result<RequestId> {
+        self.submit_with_deadline(prompt, max_new_tokens, sampler, 0)
+    }
+
+    /// [`Engine::submit`] with a per-request deadline in scheduler ticks:
+    /// the sequence is expired with its partial output once it has spent
+    /// `timeout_ticks` ticks in a slot, overriding the engine-wide
+    /// `request_timeout_ticks` for this request. `0` falls back to the
+    /// engine-wide setting. The HTTP front-end maps wall-clock
+    /// `deadline_ms` onto this.
+    pub fn submit_with_deadline(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new_tokens: usize,
+        sampler: Sampler,
+        timeout_ticks: u64,
+    ) -> Result<RequestId> {
         let cfg = self.params.config();
         if prompt.is_empty() {
             return Err(Error::Serve("empty prompt".into()));
@@ -303,7 +321,7 @@ impl Engine {
             )));
         }
         self.counters.submitted += 1;
-        let id = self.sched.enqueue(Request { prompt, max_new_tokens, sampler });
+        let id = self.sched.enqueue(Request { prompt, max_new_tokens, sampler, timeout_ticks });
         if let Some(m) = &self.metrics {
             m.submitted.inc();
             m.queued.set(self.sched.queued() as f64);
@@ -315,6 +333,14 @@ impl Engine {
     /// Take a finished request's completion, if it has finished.
     pub fn poll(&mut self, id: RequestId) -> Option<Completion> {
         self.completed.remove(&id)
+    }
+
+    /// Incremental view of an in-flight request: `(prompt_len, generated
+    /// tokens so far)`. `None` while still queued or once finished
+    /// (use [`Engine::poll`] then). The HTTP front-end streams from this
+    /// between ticks.
+    pub fn partial(&self, id: RequestId) -> Option<(usize, &[u32])> {
+        self.sched.partial(id)
     }
 
     /// Close a request's span: feed the phase histograms (tagging each
@@ -595,11 +621,11 @@ mod tests {
             seq: 8,
             vocab: 16,
         };
-        let run = |kv_quant: bool| {
+        let run = |kv_tier: KvTier| {
             let params = ParamStore::init(&c, &mut Pcg32::seeded(8), 0.05);
             let mut e = Engine::new(
                 params,
-                EngineOptions { max_slots: 2, parallel: false, kv_quant, ..Default::default() },
+                EngineOptions { max_slots: 2, parallel: false, kv_tier, ..Default::default() },
             );
             e.submit(vec![1, 2], 6, greedy()).unwrap();
             e.tick().unwrap();
@@ -612,11 +638,14 @@ mod tests {
             assert_eq!(e.counters().completed, 1);
             e.peak_kv_bytes_per_seq()
         };
-        let exact = run(false);
-        let quant = run(true);
-        assert!(exact > 0 && quant > 0);
+        let exact = run(KvTier::F32);
+        let quant = run(KvTier::Int8);
+        let half = run(KvTier::F16);
+        assert!(exact > 0 && quant > 0 && half > 0);
         let ratio = exact as f64 / quant as f64;
         assert!(ratio >= 3.0, "peak KV bytes/seq ratio {ratio} below severalfold");
+        // the f16 middle tier also rides the swap and lands between tiers
+        assert!(half < exact && half > quant, "f16 {half} not between int8 {quant} and f32 {exact}");
     }
 
     #[test]
@@ -665,6 +694,50 @@ mod tests {
         assert_eq!(f.finish, FinishReason::MaxTokens);
         assert_eq!(e.counters().timeouts, 1);
         assert_eq!(e.counters().completed, 1, "only the fast request completed normally");
+    }
+
+    #[test]
+    fn per_request_deadline_overrides_engine_default() {
+        let params = ParamStore::init(&cfg(), &mut Pcg32::seeded(2), 0.05);
+        let mut e = Engine::new(
+            params,
+            EngineOptions {
+                max_slots: 2,
+                parallel: false,
+                request_timeout_ticks: 0, // engine-wide deadline disabled
+                ..Default::default()
+            },
+        );
+        let strict = e.submit_with_deadline(vec![1, 2], 50, greedy(), 3).unwrap();
+        // timeout_ticks 0 = unlimited: must run to its natural finish
+        let unlimited = e.submit_with_deadline(vec![3], 40, greedy(), 0).unwrap();
+        e.run_until_idle().unwrap();
+        let c = e.poll(strict).expect("expired request still completes");
+        assert_eq!(c.finish, FinishReason::TimedOut);
+        assert!(c.generated >= 3 && c.generated < 50, "partial: {}", c.generated);
+        let u = e.poll(unlimited).unwrap();
+        assert_eq!(u.finish, FinishReason::MaxTokens);
+        assert_eq!(u.generated, 40);
+        assert_eq!(e.counters().timeouts, 1);
+    }
+
+    #[test]
+    fn partial_streams_generated_prefix_of_final_completion() {
+        let mut e = engine(1);
+        let id = e.submit(vec![1, 2], 5, greedy()).unwrap();
+        assert!(e.partial(id).is_none(), "still queued");
+        let mut seen: Vec<u32> = Vec::new();
+        while !e.is_idle() {
+            e.tick().unwrap();
+            if let Some((pl, gen)) = e.partial(id) {
+                assert_eq!(pl, 2);
+                assert_eq!(&gen[..seen.len()], &seen[..], "append-only stream");
+                seen = gen.to_vec();
+            }
+        }
+        let c = e.poll(id).unwrap();
+        assert_eq!(&c.tokens[2..2 + seen.len()], &seen[..]);
+        assert_eq!(c.tokens.len(), 2 + 5);
     }
 
     #[test]

@@ -74,10 +74,10 @@ pub(crate) fn hot_swap(
         .map_err(|e| Error::Serve(format!("hot-swap {e}")))?;
 
     // 2. remap every in-flight cache into a staged copy (commit is all-or-
-    //    nothing: a half-remapped engine must be unreachable). Both storage
-    //    tiers ride the same plan seam: StagedKv is generic over the
-    //    backend, and the remap reads the exact f32 stream buffers either
-    //    way, so quantized caches lose nothing extra at a swap.
+    //    nothing: a half-remapped engine must be unreachable). Every storage
+    //    tier rides the same plan seam: StagedKv is generic over the
+    //    backend, and the remap reads the exact f32 stream buffers in all
+    //    tiers, so lossy caches lose nothing extra at a swap.
     let mut staged: Vec<(SlotCache, Vec<f32>)> = Vec::with_capacity(slots.len());
     for slot in slots.iter() {
         let (cache, logits) = match &slot.cache {
@@ -86,6 +86,12 @@ pub(crate) fn hot_swap(
                 kv.apply_plan(plan, expand_opts, rng)?;
                 let logits = kv.cache.last_logits(&staged_params.params)?.into_vec();
                 (SlotCache::F32(kv.cache), logits)
+            }
+            SlotCache::F16(c) => {
+                let mut kv = StagedKv { cache: c.clone(), new_params: &staged_params.params };
+                kv.apply_plan(plan, expand_opts, rng)?;
+                let logits = kv.cache.last_logits(&staged_params.params)?.into_vec();
+                (SlotCache::F16(kv.cache), logits)
             }
             SlotCache::Quant(c) => {
                 let mut kv = StagedKv { cache: c.clone(), new_params: &staged_params.params };

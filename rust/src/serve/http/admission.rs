@@ -1,0 +1,395 @@
+//! Adaptive admission control for the HTTP serve front-end (S21a).
+//!
+//! The engine's static `max_pending` bound answers "how much queue can I
+//! hold", not "how much load can I serve without degrading". This module
+//! answers the second question with an AIMD (additive-increase /
+//! multiplicative-decrease) window over two live signals:
+//!
+//! * the **per-token latency gradient** — the ratio of the most recent
+//!   batch-mean per-token decode latency to an EWMA baseline of healthy
+//!   latency. A gradient near 1.0 means the engine is keeping up;
+//!   a gradient above `degrade_ratio` means admitted work is now slowing
+//!   everyone down (continuous batching shares each tick across slots);
+//! * the **rejection rate** of the round just ended — when the controller
+//!   is turning clients away while latency stays flat, the window is too
+//!   small, so additive growth is scaled up to re-probe capacity faster.
+//!
+//! Verdict rules (one verdict per `samples_per_verdict` observations):
+//!
+//! * gradient > `degrade_ratio`            → **Decrease**: `window *=
+//!   decrease_factor` (geometric back-off toward `min_window`). The EWMA
+//!   baseline is deliberately **not** updated on a decrease — the
+//!   baseline must keep describing *healthy* latency; letting it chase
+//!   overloaded samples would normalize the degradation and stop the
+//!   controller from ever shedding (the classic gradient-controller
+//!   stability failure).
+//! * gradient ≤ 1 + (degrade_ratio−1)/2    → **Increase**: `window +=
+//!   increase_step * (1 + rejection_rate)`, capped at `max_window`.
+//! * otherwise                              → **Hold** (the dead band
+//!   between "clearly fine" and "clearly degrading" absorbs noise).
+//!
+//! Stability sketch: the window is bounded in `[min_window, max_window]`;
+//! decreases are multiplicative, so consecutive Decrease verdicts converge
+//! geometrically; increases are a bounded additive probe, so the
+//! steady-state oscillates in a narrow band around the knee of the
+//! latency curve — the same argument as TCP congestion avoidance, with
+//! per-token latency standing in for packet loss. DESIGN.md §18.3 works
+//! the math.
+//!
+//! The controller is pure state + arithmetic (no clocks, no I/O), so the
+//! unit tests below drive every verdict path deterministically.
+
+/// Knobs for [`AimdController`]. Defaults are tuned for the demo-model
+/// serve path (ticks of a few ms); every bound is a plain number so the
+/// CLI can override them.
+#[derive(Clone, Copy, Debug)]
+pub struct AimdOptions {
+    /// Starting admitted-in-flight window.
+    pub initial_window: f64,
+    /// Floor: the controller never sheds below this many in flight.
+    pub min_window: f64,
+    /// Ceiling: additive growth stops here.
+    pub max_window: f64,
+    /// EWMA smoothing for the healthy-latency baseline.
+    pub ewma_alpha: f64,
+    /// Gradient above which a round is judged degraded (Decrease).
+    pub degrade_ratio: f64,
+    /// Multiplicative back-off per Decrease verdict.
+    pub decrease_factor: f64,
+    /// Additive growth per Increase verdict (scaled by 1 + rejection rate).
+    pub increase_step: f64,
+    /// Per-token latency samples folded into one verdict.
+    pub samples_per_verdict: usize,
+    /// `false` freezes the window at `initial_window` — the static
+    /// baseline the overload benchmark compares against. Observation
+    /// bookkeeping (gradient, EWMA) still runs so both modes export the
+    /// same telemetry.
+    pub adaptive: bool,
+}
+
+impl Default for AimdOptions {
+    fn default() -> Self {
+        AimdOptions {
+            initial_window: 4.0,
+            min_window: 1.0,
+            max_window: 64.0,
+            ewma_alpha: 0.2,
+            degrade_ratio: 1.3,
+            decrease_factor: 0.7,
+            increase_step: 1.0,
+            samples_per_verdict: 8,
+            adaptive: true,
+        }
+    }
+}
+
+/// What one observation round concluded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Latency in the dead band (or static mode): window unchanged.
+    Hold,
+    /// Latency flat: additive window growth.
+    Increase,
+    /// Latency gradient past `degrade_ratio`: multiplicative back-off.
+    Decrease,
+}
+
+impl Verdict {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Verdict::Hold => "hold",
+            Verdict::Increase => "increase",
+            Verdict::Decrease => "decrease",
+        }
+    }
+}
+
+/// One verdict's full telemetry — everything the obs registry gauges and
+/// the span events export.
+#[derive(Clone, Copy, Debug)]
+pub struct Adjustment {
+    pub verdict: Verdict,
+    /// Continuous window value after the verdict.
+    pub window: f64,
+    /// `sample_ms / ewma_ms` — the latency gradient that was judged.
+    pub gradient: f64,
+    /// Batch-mean per-token latency of the round.
+    pub sample_ms: f64,
+    /// Healthy-latency EWMA baseline after the verdict.
+    pub ewma_ms: f64,
+    /// Fraction of admission decisions this round that were rejections.
+    pub rejection_rate: f64,
+}
+
+/// AIMD admitted-in-flight window (see module docs).
+#[derive(Clone, Debug)]
+pub struct AimdController {
+    opts: AimdOptions,
+    /// Continuous window; [`AimdController::window`] floors it.
+    window: f64,
+    /// Healthy per-token latency baseline; `None` until the first round.
+    ewma_ms: Option<f64>,
+    /// Per-token samples accumulated toward the next verdict.
+    samples: Vec<f64>,
+    /// Admission decisions since the last verdict.
+    admitted: u64,
+    rejected: u64,
+}
+
+impl AimdController {
+    pub fn new(opts: AimdOptions) -> AimdController {
+        let hi = opts.max_window.max(opts.min_window);
+        AimdController {
+            window: opts.initial_window.clamp(opts.min_window, hi),
+            opts,
+            ewma_ms: None,
+            samples: Vec::new(),
+            admitted: 0,
+            rejected: 0,
+        }
+    }
+
+    /// The integer admitted-in-flight bound (never below 1).
+    pub fn window(&self) -> usize {
+        self.window.floor().max(1.0) as usize
+    }
+
+    /// Admission decision for a request arriving with `in_flight`
+    /// requests already admitted and not yet finished. Counts toward the
+    /// round's rejection rate either way.
+    pub fn try_admit(&mut self, in_flight: usize) -> bool {
+        if in_flight < self.window() {
+            self.admitted += 1;
+            true
+        } else {
+            self.rejected += 1;
+            false
+        }
+    }
+
+    /// Feed one per-token latency sample (ms). Returns `Some(Adjustment)`
+    /// every `samples_per_verdict` samples, `None` while accumulating.
+    /// Non-finite or non-positive samples are dropped.
+    pub fn observe(&mut self, per_token_ms: f64) -> Option<Adjustment> {
+        if !per_token_ms.is_finite() || per_token_ms <= 0.0 {
+            return None;
+        }
+        self.samples.push(per_token_ms);
+        if self.samples.len() < self.opts.samples_per_verdict.max(1) {
+            return None;
+        }
+        let sample_ms = self.samples.iter().sum::<f64>() / self.samples.len() as f64;
+        self.samples.clear();
+        let decisions = self.admitted + self.rejected;
+        let rejection_rate =
+            if decisions == 0 { 0.0 } else { self.rejected as f64 / decisions as f64 };
+        self.admitted = 0;
+        self.rejected = 0;
+
+        // first round: seed the baseline, judge nothing
+        let Some(baseline) = self.ewma_ms else {
+            self.ewma_ms = Some(sample_ms);
+            return Some(Adjustment {
+                verdict: Verdict::Hold,
+                window: self.window,
+                gradient: 1.0,
+                sample_ms,
+                ewma_ms: sample_ms,
+                rejection_rate,
+            });
+        };
+
+        let gradient = sample_ms / baseline.max(1e-9);
+        let verdict = if !self.opts.adaptive {
+            Verdict::Hold
+        } else if gradient > self.opts.degrade_ratio {
+            Verdict::Decrease
+        } else if gradient <= 1.0 + (self.opts.degrade_ratio - 1.0) / 2.0 {
+            Verdict::Increase
+        } else {
+            Verdict::Hold
+        };
+        match verdict {
+            Verdict::Decrease => {
+                self.window = (self.window * self.opts.decrease_factor).max(self.opts.min_window);
+                // EWMA frozen: the baseline keeps describing healthy
+                // latency instead of chasing the overload (module docs)
+            }
+            Verdict::Increase => {
+                self.window = (self.window + self.opts.increase_step * (1.0 + rejection_rate))
+                    .min(self.opts.max_window.max(self.opts.min_window));
+                self.ewma_ms = Some(baseline + self.opts.ewma_alpha * (sample_ms - baseline));
+            }
+            Verdict::Hold => {
+                self.ewma_ms = Some(baseline + self.opts.ewma_alpha * (sample_ms - baseline));
+            }
+        }
+        Some(Adjustment {
+            verdict,
+            window: self.window,
+            gradient,
+            sample_ms,
+            ewma_ms: self.ewma_ms.unwrap_or(sample_ms),
+            rejection_rate,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> AimdOptions {
+        // samples_per_verdict 1: each observe() is one verdict, so the
+        // tests drive the state machine sample by sample
+        AimdOptions { samples_per_verdict: 1, ..Default::default() }
+    }
+
+    /// Feed `n` verdicts of constant latency `ms` and return the last.
+    fn feed(c: &mut AimdController, ms: f64, n: usize) -> Adjustment {
+        let mut last = None;
+        for _ in 0..n {
+            last = c.observe(ms);
+        }
+        last.expect("samples_per_verdict=1 yields a verdict per observe")
+    }
+
+    #[test]
+    fn first_round_seeds_baseline_and_holds() {
+        let mut c = AimdController::new(opts());
+        assert_eq!(c.window(), 4);
+        let adj = c.observe(2.0).unwrap();
+        assert_eq!(adj.verdict, Verdict::Hold);
+        assert_eq!(adj.window, 4.0);
+        assert_eq!(adj.ewma_ms, 2.0);
+        assert_eq!(adj.gradient, 1.0);
+    }
+
+    #[test]
+    fn samples_accumulate_to_one_verdict() {
+        let mut c = AimdController::new(AimdOptions { samples_per_verdict: 4, ..Default::default() });
+        assert!(c.observe(1.0).is_none());
+        assert!(c.observe(2.0).is_none());
+        assert!(c.observe(3.0).is_none());
+        let adj = c.observe(4.0).unwrap();
+        assert_eq!(adj.sample_ms, 2.5, "verdict judges the batch mean");
+        // junk samples never count toward a verdict
+        assert!(c.observe(f64::NAN).is_none());
+        assert!(c.observe(-1.0).is_none());
+        assert!(c.observe(0.0).is_none());
+    }
+
+    #[test]
+    fn flat_latency_grows_window_to_max() {
+        let mut c = AimdController::new(opts());
+        feed(&mut c, 1.0, 1); // baseline
+        let mut verdicts = 0;
+        while c.window() < 64 {
+            let adj = feed(&mut c, 1.0, 1);
+            assert_eq!(adj.verdict, Verdict::Increase);
+            verdicts += 1;
+            assert!(verdicts < 200, "window never reached max");
+        }
+        // pinned at the ceiling
+        let adj = feed(&mut c, 1.0, 5);
+        assert_eq!(adj.window, 64.0);
+        assert_eq!(c.window(), 64);
+    }
+
+    #[test]
+    fn rejections_scale_the_additive_probe() {
+        let mut starved = AimdController::new(opts());
+        feed(&mut starved, 1.0, 1);
+        // a round where every decision was a rejection
+        for _ in 0..10 {
+            assert!(!starved.try_admit(starved.window()));
+        }
+        let adj = feed(&mut starved, 1.0, 1);
+        assert_eq!(adj.verdict, Verdict::Increase);
+        assert_eq!(adj.rejection_rate, 1.0);
+
+        let mut calm = AimdController::new(opts());
+        feed(&mut calm, 1.0, 1);
+        let calm_adj = feed(&mut calm, 1.0, 1);
+        assert_eq!(calm_adj.rejection_rate, 0.0);
+        // increase_step * (1 + 1.0) vs increase_step * (1 + 0.0)
+        assert!(adj.window > calm_adj.window, "{} !> {}", adj.window, calm_adj.window);
+    }
+
+    #[test]
+    fn latency_spike_backs_off_multiplicatively_to_min() {
+        let mut c = AimdController::new(opts());
+        feed(&mut c, 1.0, 1); // baseline 1.0 ms/token
+        // grow a bit first so the back-off has room to show its shape
+        feed(&mut c, 1.0, 6);
+        let before = c.window() as f64;
+        let adj = feed(&mut c, 10.0, 1);
+        assert_eq!(adj.verdict, Verdict::Decrease);
+        assert!((adj.window - before * 0.7).abs() < 1e-9, "multiplicative: {}", adj.window);
+        // EWMA frozen on decrease: the baseline still says ~1 ms, so the
+        // overload keeps reading as a 10x gradient and the shed continues
+        assert!(adj.ewma_ms < 1.5, "baseline chased the overload: {}", adj.ewma_ms);
+        let mut last = adj;
+        for _ in 0..40 {
+            last = feed(&mut c, 10.0, 1);
+            assert_eq!(last.verdict, Verdict::Decrease);
+        }
+        assert_eq!(last.window, 1.0, "converged to min_window");
+        assert_eq!(c.window(), 1);
+        assert!(last.gradient > 5.0, "gradient still sees the overload: {}", last.gradient);
+    }
+
+    #[test]
+    fn recovery_after_shed_regrows_the_window() {
+        let mut c = AimdController::new(opts());
+        feed(&mut c, 1.0, 1);
+        feed(&mut c, 10.0, 10); // shed to min
+        assert_eq!(c.window(), 1);
+        let adj = feed(&mut c, 1.0, 3); // latency healthy again
+        assert_eq!(adj.verdict, Verdict::Increase);
+        assert!(c.window() > 1, "window regrew after recovery");
+    }
+
+    #[test]
+    fn dead_band_holds_without_freezing_the_baseline() {
+        let mut c = AimdController::new(opts());
+        feed(&mut c, 1.0, 1);
+        // 1.2 is between the increase bound (1.15) and degrade_ratio (1.3)
+        let adj = feed(&mut c, 1.2, 1);
+        assert_eq!(adj.verdict, Verdict::Hold);
+        assert_eq!(adj.window, 4.0);
+        assert!(adj.ewma_ms > 1.0, "Hold still tracks the baseline");
+    }
+
+    #[test]
+    fn static_mode_never_moves_the_window() {
+        let mut c = AimdController::new(AimdOptions {
+            adaptive: false,
+            initial_window: 6.0,
+            ..opts()
+        });
+        feed(&mut c, 1.0, 1);
+        for ms in [1.0, 50.0, 0.1, 200.0] {
+            let adj = feed(&mut c, ms, 1);
+            assert_eq!(adj.verdict, Verdict::Hold);
+            assert_eq!(c.window(), 6);
+        }
+    }
+
+    #[test]
+    fn try_admit_enforces_the_window() {
+        let mut c = AimdController::new(AimdOptions { initial_window: 2.0, ..opts() });
+        assert!(c.try_admit(0));
+        assert!(c.try_admit(1));
+        assert!(!c.try_admit(2));
+        assert!(!c.try_admit(99));
+    }
+
+    #[test]
+    fn window_is_clamped_into_bounds_at_construction() {
+        let c = AimdController::new(AimdOptions { initial_window: 1000.0, ..opts() });
+        assert_eq!(c.window(), 64);
+        let c = AimdController::new(AimdOptions { initial_window: 0.0, ..opts() });
+        assert_eq!(c.window(), 1);
+    }
+}

@@ -1,0 +1,23 @@
+//! HTTP serve front-end (S21): streaming `POST /v1/generate` + adaptive
+//! admission control.
+//!
+//! Two halves:
+//!
+//! * [`admission`] — [`AimdController`], the AIMD admitted-in-flight
+//!   window driven by per-token latency gradients and rejection rate;
+//!   replaces the engine's static `max_pending` as the serving-side
+//!   overload defense.
+//! * [`server`] — [`HttpServer`], the `std::net` listener + engine-owning
+//!   thread that streams decoded tokens as chunked NDJSON, maps wall-clock
+//!   `deadline_ms` onto tick-denominated engine timeouts, and answers
+//!   `429 Too Many Requests` + `Retry-After` past the live window.
+//!
+//! Driven end to end by `texpand serve --http-addr` and the
+//! [`crate::serve::loadgen`] synthetic client; protocol and controller
+//! math in DESIGN.md §18.
+
+pub mod admission;
+pub mod server;
+
+pub use admission::{AimdController, AimdOptions, Adjustment, Verdict};
+pub use server::{HttpServer, HttpServerOptions, HttpSummary};

@@ -1,0 +1,835 @@
+//! The streaming HTTP front-end (S21): `POST /v1/generate` over a
+//! hand-rolled `std::net` HTTP/1.1 server.
+//!
+//! Architecture (DESIGN.md §18.2): the [`Engine`] is not `Sync`, so one
+//! **engine thread** owns it outright and runs the submit/tick/stream
+//! loop; an **accept thread** (the `MetricsServer` nonblocking-listener
+//! pattern) hands each connection to a short-lived handler thread; handler
+//! threads talk to the engine thread over an mpsc channel of [`Cmd`]s and
+//! get tokens back over a per-request reply channel of [`StreamMsg`]s.
+//! Tokens stream to the client as they decode, one chunked-transfer NDJSON
+//! line per tick:
+//!
+//! ```text
+//! {"tokens":[17,32]}
+//! {"tokens":[9]}
+//! {"done":true,"finish":"max_tokens","generated":3,"prompt_len":8}
+//! ```
+//!
+//! Admission is the engine thread's [`AimdController`]: a request beyond
+//! the live window (or beyond the engine's own queue bound) is answered
+//! `429 Too Many Requests` + `Retry-After` before any engine work happens.
+//! Per-request deadlines arrive as wall-clock `deadline_ms` and are mapped
+//! onto the engine's tick-denominated timeouts through an EWMA of
+//! measured tick duration; an expired request still streams everything it
+//! decoded, then a terminal `"finish":"timeout"` chunk.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::data::ByteTokenizer;
+use crate::error::{Error, Result};
+use crate::generate::Sampler;
+use crate::json::Value;
+use crate::obs::http::write_response;
+use crate::obs::{read_http_request, Counter, Gauge, MetricsRegistry, SpanRing};
+use crate::serve::http::admission::{AimdController, AimdOptions, Verdict};
+use crate::serve::scheduler::FinishReason;
+use crate::serve::Engine;
+
+/// Accept-loop poll interval (the listener is nonblocking).
+const POLL: Duration = Duration::from_millis(10);
+/// Per-connection socket read/write timeout.
+const CONN_TIMEOUT: Duration = Duration::from_secs(2);
+/// How long a handler waits for the engine thread's admission verdict.
+const ADMIT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Knobs for [`HttpServer::bind`].
+#[derive(Clone, Default)]
+pub struct HttpServerOptions {
+    /// Admission-controller configuration (set `adaptive: false` for the
+    /// static-window baseline).
+    pub aimd: AimdOptions,
+    /// Hard cap applied to each request's `max_new_tokens` (0 = engine
+    /// default of 512).
+    pub max_new_tokens_cap: usize,
+    /// When set, admission verdicts are pushed as span events alongside
+    /// the engine's own request spans.
+    pub span_ring: Option<Arc<SpanRing>>,
+}
+
+/// End-of-life totals returned by [`HttpServer::shutdown`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HttpSummary {
+    /// Generate requests reaching the engine thread.
+    pub requests: u64,
+    /// Requests that streamed to a terminal `done` chunk.
+    pub streamed: u64,
+    /// Requests shed with a 429.
+    pub rejected: u64,
+    /// Requests failed after admission (submit error, engine shutdown).
+    pub errors: u64,
+    /// Admission verdicts issued.
+    pub adjustments: u64,
+    /// Admission window when the server stopped.
+    pub final_window: usize,
+}
+
+/// Engine-thread → handler-thread stream protocol, one channel per
+/// request.
+enum StreamMsg {
+    /// Admitted: the handler writes the 200 chunked head now, before the
+    /// first token decodes.
+    Accepted,
+    /// Newly decoded token ids since the last message.
+    Tokens(Vec<u32>),
+    /// Terminal chunk: `finish` is `"max_tokens"` or `"timeout"`.
+    Done { finish: &'static str, generated: usize, prompt_len: usize },
+    /// Shed by admission control; handler answers 429 + `Retry-After`.
+    Rejected { retry_after: u64 },
+    /// Failed after parse (submit error, engine shutting down).
+    Error(String),
+}
+
+/// One admitted generation the engine thread is streaming.
+struct ActiveStream {
+    id: crate::serve::RequestId,
+    reply: Sender<StreamMsg>,
+    /// Generated tokens already sent (client disconnects flip `dead`; the
+    /// engine keeps decoding — cancel-on-disconnect is a ROADMAP item).
+    sent: usize,
+    dead: bool,
+}
+
+struct GenCmd {
+    prompt: Vec<u32>,
+    max_new_tokens: usize,
+    sampler: Sampler,
+    deadline_ms: u64,
+    reply: Sender<StreamMsg>,
+}
+
+enum Cmd {
+    Generate(GenCmd),
+    Shutdown,
+}
+
+/// HTTP-layer metric handles (engine-level serve metrics are the engine's
+/// own `texpand_serve_*` families).
+struct HttpMetrics {
+    requests: Counter,
+    rejected: Counter,
+    completed: Counter,
+    bad_requests: Counter,
+    window: Gauge,
+    gradient: Gauge,
+    increase: Counter,
+    decrease: Counter,
+    hold: Counter,
+}
+
+impl HttpMetrics {
+    fn register(reg: &MetricsRegistry) -> HttpMetrics {
+        HttpMetrics {
+            requests: reg
+                .counter("texpand_http_requests_total", "generate requests reaching the engine"),
+            rejected: reg
+                .counter("texpand_http_rejected_total", "requests shed with 429 by admission"),
+            completed: reg
+                .counter("texpand_http_streams_completed_total", "streams reaching a done chunk"),
+            bad_requests: reg
+                .counter("texpand_http_bad_requests_total", "malformed requests answered 4xx"),
+            window: reg.gauge("texpand_http_admission_window", "live AIMD admission window"),
+            gradient: reg
+                .gauge("texpand_http_latency_gradient", "per-token latency vs EWMA baseline"),
+            increase: reg
+                .counter("texpand_http_admission_increase_total", "AIMD increase verdicts"),
+            decrease: reg
+                .counter("texpand_http_admission_decrease_total", "AIMD decrease verdicts"),
+            hold: reg.counter("texpand_http_admission_hold_total", "AIMD hold verdicts"),
+        }
+    }
+
+    fn verdict_counter(&self, v: Verdict) -> &Counter {
+        match v {
+            Verdict::Hold => &self.hold,
+            Verdict::Increase => &self.increase,
+            Verdict::Decrease => &self.decrease,
+        }
+    }
+}
+
+/// Shared state each connection-handler thread needs.
+struct ConnCtx {
+    registry: Arc<MetricsRegistry>,
+    cmds: Sender<Cmd>,
+    quit: Arc<AtomicBool>,
+    bad_requests: Counter,
+    vocab: usize,
+    max_new_tokens_cap: usize,
+}
+
+/// The serve front-end: accept loop + engine thread behind one socket.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    quit: Arc<AtomicBool>,
+    cmds: Sender<Cmd>,
+    accept_handle: Option<JoinHandle<()>>,
+    engine_handle: Option<JoinHandle<(Engine, HttpSummary)>>,
+}
+
+impl HttpServer {
+    /// Bind on `addr` (e.g. `127.0.0.1:0`) and take ownership of `engine`;
+    /// metrics go to the global registry.
+    pub fn bind(addr: &str, engine: Engine, opts: HttpServerOptions) -> Result<HttpServer> {
+        HttpServer::bind_with_registry(addr, engine, opts, Arc::clone(crate::obs::global()))
+    }
+
+    /// [`HttpServer::bind`] with an explicit registry (tests).
+    pub fn bind_with_registry(
+        addr: &str,
+        engine: Engine,
+        opts: HttpServerOptions,
+        registry: Arc<MetricsRegistry>,
+    ) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Serve(format!("http listener bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::Serve(format!("http listener addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Serve(format!("http listener nonblocking: {e}")))?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let quit = Arc::new(AtomicBool::new(false));
+        let (cmd_tx, cmd_rx) = channel::<Cmd>();
+        let metrics = HttpMetrics::register(&registry);
+        let vocab = engine.config().vocab;
+
+        let ctx = Arc::new(ConnCtx {
+            registry: Arc::clone(&registry),
+            cmds: cmd_tx.clone(),
+            quit: Arc::clone(&quit),
+            bad_requests: metrics.bad_requests.clone(),
+            vocab,
+            max_new_tokens_cap: if opts.max_new_tokens_cap == 0 {
+                512
+            } else {
+                opts.max_new_tokens_cap
+            },
+        });
+
+        let accept_stop = Arc::clone(&stop);
+        let accept_handle = std::thread::spawn(move || accept_loop(listener, accept_stop, ctx));
+
+        let aimd = opts.aimd;
+        let span_ring = opts.span_ring.clone();
+        let engine_handle =
+            std::thread::spawn(move || engine_loop(engine, cmd_rx, aimd, metrics, span_ring));
+
+        Ok(HttpServer {
+            addr: local,
+            stop,
+            quit,
+            cmds: cmd_tx,
+            accept_handle: Some(accept_handle),
+            engine_handle: Some(engine_handle),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once a client has requested `GET /quitz`.
+    pub fn quit_requested(&self) -> bool {
+        self.quit.load(Ordering::Relaxed)
+    }
+
+    /// Block until `/quitz` is hit or `timeout` elapses; returns whether
+    /// quit was requested.
+    pub fn wait_for_quit(&self, timeout: Duration) -> bool {
+        let start = Instant::now();
+        while start.elapsed() < timeout {
+            if self.quit_requested() {
+                return true;
+            }
+            std::thread::sleep(POLL);
+        }
+        self.quit_requested()
+    }
+
+    /// Stop accepting, drain in-flight streams to completion, and hand the
+    /// engine back with the run's totals.
+    pub fn shutdown(mut self) -> Result<(Engine, HttpSummary)> {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            h.join().map_err(|_| Error::Serve("http accept thread panicked".into()))?;
+        }
+        let _ = self.cmds.send(Cmd::Shutdown);
+        let handle = self
+            .engine_handle
+            .take()
+            .ok_or_else(|| Error::Serve("http engine thread already taken".into()))?;
+        handle.join().map_err(|_| Error::Serve("http engine thread panicked".into()))
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        let _ = self.cmds.send(Cmd::Shutdown);
+        if let Some(h) = self.engine_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Accept + connection handling
+// ---------------------------------------------------------------------------
+
+fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>, ctx: Arc<ConnCtx>) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let ctx = Arc::clone(&ctx);
+                handlers.push(std::thread::spawn(move || handle_conn(stream, &ctx)));
+                handlers.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => std::thread::sleep(POLL),
+            Err(_) => std::thread::sleep(POLL),
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
+    let _ = stream.set_read_timeout(Some(CONN_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(CONN_TIMEOUT));
+    let request = match read_http_request(&mut stream) {
+        Ok(Ok(req)) => req,
+        Ok(Err(parse_err)) => {
+            ctx.bad_requests.inc();
+            let _ = write_response(
+                &mut stream,
+                parse_err.status_line(),
+                "text/plain; charset=utf-8",
+                &format!("{}\n", parse_err.message()),
+            );
+            return;
+        }
+        Err(_) => return, // transport failure: nothing to answer
+    };
+    match (request.method.as_str(), request.path.as_str()) {
+        ("POST", "/v1/generate") => handle_generate(&mut stream, &request.body, ctx),
+        ("GET", "/metrics") => {
+            let _ = write_response(
+                &mut stream,
+                "200 OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                &crate::obs::render(&ctx.registry),
+            );
+        }
+        ("GET", "/healthz") => {
+            let _ = write_response(&mut stream, "200 OK", "text/plain; charset=utf-8", "ok\n");
+        }
+        ("GET", "/quitz") => {
+            ctx.quit.store(true, Ordering::Relaxed);
+            let _ = write_response(&mut stream, "200 OK", "text/plain; charset=utf-8", "bye\n");
+        }
+        (_, "/v1/generate") => {
+            let _ = write_response(
+                &mut stream,
+                "405 Method Not Allowed",
+                "text/plain; charset=utf-8",
+                "use POST\n",
+            );
+        }
+        ("GET", _) => {
+            let _ = write_response(
+                &mut stream,
+                "404 Not Found",
+                "text/plain; charset=utf-8",
+                "not found\n",
+            );
+        }
+        _ => {
+            let _ = write_response(
+                &mut stream,
+                "405 Method Not Allowed",
+                "text/plain; charset=utf-8",
+                "unsupported method\n",
+            );
+        }
+    }
+}
+
+/// A parsed, validated `/v1/generate` body.
+struct GenerateBody {
+    prompt: Vec<u32>,
+    max_new_tokens: usize,
+    deadline_ms: u64,
+    sampler: Sampler,
+}
+
+fn parse_generate_body(body: &str, vocab: usize, cap: usize) -> Result<GenerateBody> {
+    let v = Value::parse(body).map_err(|e| Error::Serve(format!("request body: {e}")))?;
+    let prompt: Vec<u32> = if let Some(toks) = v.get("tokens") {
+        let arr = toks
+            .as_arr()
+            .map_err(|_| Error::Serve("'tokens' must be an array of token ids".into()))?;
+        let mut out = Vec::with_capacity(arr.len());
+        for t in arr {
+            let id = t
+                .as_usize()
+                .map_err(|_| Error::Serve("'tokens' entries must be non-negative ints".into()))?;
+            if id >= vocab {
+                return Err(Error::Serve(format!("token id {id} out of vocab range {vocab}")));
+            }
+            out.push(id as u32);
+        }
+        out
+    } else if let Some(text) = v.get("prompt") {
+        let text =
+            text.as_str().map_err(|_| Error::Serve("'prompt' must be a string".into()))?;
+        ByteTokenizer::new(vocab.min(256))?.encode(text.as_bytes())
+    } else {
+        return Err(Error::Serve("body needs 'tokens' (array) or 'prompt' (string)".into()));
+    };
+    if prompt.is_empty() {
+        return Err(Error::Serve("empty prompt".into()));
+    }
+    let max_new_tokens = match v.get("max_new_tokens") {
+        Some(n) => n
+            .as_usize()
+            .map_err(|_| Error::Serve("'max_new_tokens' must be a non-negative int".into()))?,
+        None => 32,
+    };
+    if max_new_tokens == 0 {
+        return Err(Error::Serve("'max_new_tokens' must be at least 1".into()));
+    }
+    let deadline_ms = match v.get("deadline_ms") {
+        Some(n) => n
+            .as_usize()
+            .map_err(|_| Error::Serve("'deadline_ms' must be a non-negative int".into()))?
+            as u64,
+        None => 0,
+    };
+    let temperature = match v.get("temperature") {
+        Some(t) => {
+            t.as_f64().map_err(|_| Error::Serve("'temperature' must be a number".into()))? as f32
+        }
+        None => 0.0,
+    };
+    if !(0.0..=100.0).contains(&temperature) {
+        return Err(Error::Serve(format!("temperature {temperature} out of range [0,100]")));
+    }
+    let top_k = match v.get("top_k") {
+        Some(k) => Some(
+            k.as_usize().map_err(|_| Error::Serve("'top_k' must be a positive int".into()))?,
+        ),
+        None => None,
+    };
+    let seed = match v.get("seed") {
+        Some(s) => s
+            .as_usize()
+            .map_err(|_| Error::Serve("'seed' must be a non-negative int".into()))?
+            as u64,
+        None => 0,
+    };
+    Ok(GenerateBody {
+        prompt,
+        max_new_tokens: max_new_tokens.min(cap),
+        deadline_ms,
+        sampler: Sampler { temperature, top_k, seed },
+    })
+}
+
+fn handle_generate(stream: &mut TcpStream, body: &str, ctx: &ConnCtx) {
+    let parsed = match parse_generate_body(body, ctx.vocab, ctx.max_new_tokens_cap) {
+        Ok(p) => p,
+        Err(e) => {
+            ctx.bad_requests.inc();
+            let msg = Value::obj(vec![("error", Value::str(e.to_string()))]).to_string();
+            let _ = write_response(
+                stream,
+                "400 Bad Request",
+                "application/json; charset=utf-8",
+                &format!("{msg}\n"),
+            );
+            return;
+        }
+    };
+    let (reply_tx, reply_rx) = channel::<StreamMsg>();
+    let cmd = Cmd::Generate(GenCmd {
+        prompt: parsed.prompt,
+        max_new_tokens: parsed.max_new_tokens,
+        sampler: parsed.sampler,
+        deadline_ms: parsed.deadline_ms,
+        reply: reply_tx,
+    });
+    if ctx.cmds.send(cmd).is_err() {
+        let _ = write_response(
+            stream,
+            "503 Service Unavailable",
+            "text/plain; charset=utf-8",
+            "server shutting down\n",
+        );
+        return;
+    }
+    // admission verdict first; tokens only after Accepted
+    match reply_rx.recv_timeout(ADMIT_TIMEOUT) {
+        Ok(StreamMsg::Rejected { retry_after }) => {
+            let body = "overloaded, retry later\n";
+            let head = format!(
+                "HTTP/1.1 429 Too Many Requests\r\nContent-Type: text/plain; charset=utf-8\r\n\
+                 Content-Length: {}\r\nRetry-After: {retry_after}\r\nConnection: close\r\n\r\n{body}",
+                body.len()
+            );
+            use std::io::Write;
+            let _ = stream.write_all(head.as_bytes());
+            let _ = stream.flush();
+        }
+        Ok(StreamMsg::Error(msg)) => {
+            let body = Value::obj(vec![("error", Value::str(msg))]).to_string();
+            let _ = write_response(
+                stream,
+                "400 Bad Request",
+                "application/json; charset=utf-8",
+                &format!("{body}\n"),
+            );
+        }
+        Ok(StreamMsg::Accepted) => stream_tokens(stream, &reply_rx),
+        // Tokens/Done before Accepted can't happen (engine sends Accepted
+        // first); treat as protocol error and drop the connection
+        Ok(_) => {}
+        Err(_) => {
+            let _ = write_response(
+                stream,
+                "503 Service Unavailable",
+                "text/plain; charset=utf-8",
+                "engine did not answer\n",
+            );
+        }
+    }
+}
+
+/// Write one NDJSON line as an HTTP/1.1 chunk.
+fn write_chunk_line(stream: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    use std::io::Write;
+    write!(stream, "{:x}\r\n{line}\n\r\n", line.len() + 1)?;
+    stream.flush()
+}
+
+/// Stream an admitted request: chunked head, one NDJSON line per
+/// [`StreamMsg`], terminal chunk after `Done`.
+fn stream_tokens(stream: &mut TcpStream, rx: &Receiver<StreamMsg>) {
+    use std::io::Write;
+    let head = "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson; charset=utf-8\r\n\
+                Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
+    if stream.write_all(head.as_bytes()).is_err() {
+        return;
+    }
+    let _ = stream.flush();
+    // Done (or a closed channel) ends the stream; a mid-stream write
+    // failure stops writing but keeps draining so the engine side sees the
+    // send error and marks the stream dead.
+    let mut writable = true;
+    loop {
+        match rx.recv() {
+            Ok(StreamMsg::Tokens(tokens)) => {
+                if writable {
+                    let ids: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+                    let line = format!("{{\"tokens\":[{}]}}", ids.join(","));
+                    writable = write_chunk_line(stream, &line).is_ok();
+                }
+            }
+            Ok(StreamMsg::Done { finish, generated, prompt_len }) => {
+                if writable {
+                    let line = format!(
+                        "{{\"done\":true,\"finish\":\"{finish}\",\"generated\":{generated},\
+                         \"prompt_len\":{prompt_len}}}"
+                    );
+                    let _ = write_chunk_line(stream, &line);
+                }
+                break;
+            }
+            Ok(StreamMsg::Error(msg)) => {
+                if writable {
+                    let line = Value::obj(vec![
+                        ("done", Value::Bool(true)),
+                        ("finish", Value::str("error")),
+                        ("error", Value::str(msg)),
+                    ])
+                    .to_string();
+                    let _ = write_chunk_line(stream, &line);
+                }
+                break;
+            }
+            Ok(_) => {} // stray Accepted/Rejected: ignore
+            Err(_) => break,
+        }
+    }
+    let _ = stream.write_all(b"0\r\n\r\n");
+    let _ = stream.flush();
+}
+
+// ---------------------------------------------------------------------------
+// Engine thread
+// ---------------------------------------------------------------------------
+
+/// Map a wall-clock deadline onto the engine's tick-denominated timeout
+/// using the live EWMA of tick duration. `deadline_ms == 0` means no
+/// deadline (the engine treats `timeout_ticks == 0` as unbounded).
+fn deadline_to_ticks(deadline_ms: u64, ewma_tick_ms: f64) -> u64 {
+    if deadline_ms == 0 {
+        return 0;
+    }
+    (deadline_ms as f64 / ewma_tick_ms.max(1e-3)).ceil().max(1.0) as u64
+}
+
+fn engine_loop(
+    mut engine: Engine,
+    cmds: Receiver<Cmd>,
+    aimd_opts: AimdOptions,
+    metrics: HttpMetrics,
+    span_ring: Option<Arc<SpanRing>>,
+) -> (Engine, HttpSummary) {
+    let mut aimd = AimdController::new(aimd_opts);
+    let mut summary = HttpSummary::default();
+    let mut active: Vec<ActiveStream> = Vec::new();
+    // seed ~demo-model tick cost; converges within a handful of ticks
+    let mut ewma_tick_ms = 5.0f64;
+    let mut shutdown = false;
+    metrics.window.set(aimd.window() as f64);
+
+    loop {
+        // 1. drain commands. Block briefly only when fully idle, so an
+        //    idle server doesn't spin; once anything is in flight the
+        //    drain is non-blocking and the tick below provides pacing.
+        let mut first = true;
+        loop {
+            let cmd = if first && active.is_empty() && engine.is_idle() && !shutdown {
+                match cmds.recv_timeout(POLL) {
+                    Ok(c) => Some(c),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        shutdown = true;
+                        None
+                    }
+                }
+            } else {
+                match cmds.try_recv() {
+                    Ok(c) => Some(c),
+                    Err(TryRecvError::Empty) => None,
+                    Err(TryRecvError::Disconnected) => {
+                        shutdown = true;
+                        None
+                    }
+                }
+            };
+            first = false;
+            let Some(cmd) = cmd else { break };
+            match cmd {
+                Cmd::Shutdown => shutdown = true,
+                Cmd::Generate(g) => {
+                    summary.requests += 1;
+                    metrics.requests.inc();
+                    if shutdown {
+                        let _ = g.reply.send(StreamMsg::Error("server shutting down".into()));
+                        summary.errors += 1;
+                        continue;
+                    }
+                    if !aimd.try_admit(active.len()) || !engine.has_capacity() {
+                        summary.rejected += 1;
+                        metrics.rejected.inc();
+                        let _ = g.reply.send(StreamMsg::Rejected { retry_after: 1 });
+                        continue;
+                    }
+                    let timeout_ticks = deadline_to_ticks(g.deadline_ms, ewma_tick_ms);
+                    match engine.submit_with_deadline(
+                        g.prompt,
+                        g.max_new_tokens,
+                        g.sampler,
+                        timeout_ticks,
+                    ) {
+                        Ok(id) => {
+                            let _ = g.reply.send(StreamMsg::Accepted);
+                            active.push(ActiveStream { id, reply: g.reply, sent: 0, dead: false });
+                        }
+                        Err(e) => {
+                            summary.errors += 1;
+                            let _ = g.reply.send(StreamMsg::Error(e.to_string()));
+                        }
+                    }
+                }
+            }
+        }
+
+        // 2. advance the engine one tick and feed the controller
+        if !engine.is_idle() {
+            let tick_start = Instant::now();
+            let report = match engine.tick() {
+                Ok(r) => r,
+                Err(e) => {
+                    let msg = e.to_string();
+                    for s in active.drain(..) {
+                        let _ = s.reply.send(StreamMsg::Error(msg.clone()));
+                        summary.errors += 1;
+                    }
+                    break;
+                }
+            };
+            let tick_ms = tick_start.elapsed().as_secs_f64() * 1e3;
+            ewma_tick_ms = 0.2 * tick_ms + 0.8 * ewma_tick_ms;
+            if report.decoded > 0 {
+                // the controller's sample is the *round* wall time, not
+                // round/decoded: every in-flight stream receives exactly
+                // one token per round, so the round duration is each
+                // client's per-token latency — and it grows with the
+                // admitted batch, which is precisely the overload signal.
+                // (Normalizing by `decoded` would cancel that growth and
+                // the window would never back off.)
+                if let Some(adj) = aimd.observe(tick_ms) {
+                    summary.adjustments += 1;
+                    metrics.window.set(adj.window);
+                    metrics.gradient.set(adj.gradient);
+                    metrics.verdict_counter(adj.verdict).inc();
+                    if let Some(ring) = &span_ring {
+                        ring.push(format!(
+                            "{{\"event\":\"admission\",\"verdict\":\"{}\",\"window\":{:.3},\
+                             \"gradient\":{:.4},\"ewma_ms\":{:.4},\"sample_ms\":{:.4},\
+                             \"rejection_rate\":{:.4}}}",
+                            adj.verdict.name(),
+                            adj.window,
+                            adj.gradient,
+                            adj.ewma_ms,
+                            adj.sample_ms,
+                            adj.rejection_rate,
+                        ));
+                    }
+                }
+            }
+        }
+
+        // 3. stream newly decoded tokens for every in-flight request
+        for s in active.iter_mut() {
+            if s.dead {
+                continue;
+            }
+            if let Some((_prompt_len, generated)) = engine.partial(s.id) {
+                if generated.len() > s.sent {
+                    let delta = generated[s.sent..].to_vec();
+                    s.sent = generated.len();
+                    if s.reply.send(StreamMsg::Tokens(delta)).is_err() {
+                        s.dead = true;
+                    }
+                }
+            }
+        }
+
+        // 4. retire completions (normal and deadline-expired alike: an
+        //    expired request streams its tail + a terminal timeout chunk)
+        active.retain_mut(|s| {
+            let Some(c) = engine.poll(s.id) else { return true };
+            let generated = c.generated;
+            if !s.dead && generated > s.sent {
+                let tail = c.tokens[c.prompt_len + s.sent..].to_vec();
+                if s.reply.send(StreamMsg::Tokens(tail)).is_err() {
+                    s.dead = true;
+                }
+            }
+            let finish = match c.finish {
+                FinishReason::MaxTokens => "max_tokens",
+                FinishReason::TimedOut => "timeout",
+            };
+            let _ = s.reply.send(StreamMsg::Done {
+                finish,
+                generated,
+                prompt_len: c.prompt_len,
+            });
+            summary.streamed += 1;
+            metrics.completed.inc();
+            false
+        });
+
+        if shutdown && active.is_empty() && engine.is_idle() {
+            break;
+        }
+    }
+
+    summary.final_window = aimd.window();
+    metrics.window.set(aimd.window() as f64);
+    (engine, summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_mapping_rounds_up_and_keeps_zero_unbounded() {
+        assert_eq!(deadline_to_ticks(0, 5.0), 0, "0 = no deadline, never 0-tick expiry");
+        assert_eq!(deadline_to_ticks(10, 5.0), 2);
+        assert_eq!(deadline_to_ticks(11, 5.0), 3, "partial ticks round up");
+        assert_eq!(deadline_to_ticks(1, 5.0), 1, "sub-tick deadlines get one tick");
+        assert_eq!(deadline_to_ticks(100, 0.0), 100_000, "degenerate EWMA clamped");
+    }
+
+    #[test]
+    fn generate_body_accepts_tokens_and_prompt_forms() {
+        let b = parse_generate_body(
+            r#"{"tokens":[1,2,3],"max_new_tokens":4,"deadline_ms":50,"seed":9}"#,
+            128,
+            512,
+        )
+        .unwrap();
+        assert_eq!(b.prompt, vec![1, 2, 3]);
+        assert_eq!(b.max_new_tokens, 4);
+        assert_eq!(b.deadline_ms, 50);
+        assert_eq!(b.sampler.seed, 9);
+        assert_eq!(b.sampler.temperature, 0.0, "greedy by default");
+        assert_eq!(b.sampler.top_k, None);
+
+        let b = parse_generate_body(r#"{"prompt":"hi","temperature":0.5,"top_k":3}"#, 128, 512)
+            .unwrap();
+        assert_eq!(b.prompt, vec![104, 105], "byte tokenizer on the prompt string");
+        assert_eq!(b.max_new_tokens, 32, "default");
+        assert_eq!(b.deadline_ms, 0, "no deadline by default");
+        assert_eq!(b.sampler.temperature, 0.5);
+        assert_eq!(b.sampler.top_k, Some(3));
+    }
+
+    #[test]
+    fn generate_body_rejects_bad_inputs() {
+        assert!(parse_generate_body("not json", 128, 512).is_err());
+        assert!(parse_generate_body(r#"{}"#, 128, 512).is_err(), "needs tokens or prompt");
+        assert!(parse_generate_body(r#"{"tokens":[]}"#, 128, 512).is_err(), "empty prompt");
+        assert!(parse_generate_body(r#"{"tokens":["x"]}"#, 128, 512).is_err());
+        assert!(parse_generate_body(r#"{"tokens":[500]}"#, 128, 512).is_err(), "out of vocab");
+        assert!(
+            parse_generate_body(r#"{"tokens":[1],"max_new_tokens":0}"#, 128, 512).is_err(),
+            "zero generation budget"
+        );
+        assert!(parse_generate_body(r#"{"tokens":[1],"temperature":-1}"#, 128, 512).is_err());
+    }
+
+    #[test]
+    fn generate_body_caps_max_new_tokens() {
+        let b = parse_generate_body(r#"{"tokens":[1],"max_new_tokens":100000}"#, 128, 64).unwrap();
+        assert_eq!(b.max_new_tokens, 64);
+    }
+}

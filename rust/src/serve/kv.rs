@@ -285,6 +285,175 @@ impl KvStorage for QuantBuf {
     }
 }
 
+/// Encode an f32 as IEEE 754 binary16 bits (round-to-nearest-even;
+/// overflow saturates to ±Inf, underflow flushes through the subnormal
+/// range to ±0). Hand-rolled: the offline crate set has no `half`.
+pub(crate) fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp8 = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp8 == 255 {
+        // Inf / NaN (NaN keeps a nonzero mantissa)
+        let m = if mant == 0 { 0 } else { 0x200 | ((mant >> 13) as u16) };
+        return sign | 0x7c00 | m;
+    }
+    let exp = exp8 - 127 + 15;
+    if exp >= 31 {
+        return sign | 0x7c00; // overflow → ±Inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // below the smallest subnormal → ±0
+        }
+        // subnormal: shift the (implicit-1) mantissa into place, round RNE
+        let m = mant | 0x0080_0000;
+        let shift = (14 - exp) as u32;
+        let half = 1u32 << (shift - 1);
+        let mut out = (m >> shift) as u16;
+        let rem = m & ((1u32 << shift) - 1);
+        if rem > half || (rem == half && (out & 1) == 1) {
+            out += 1;
+        }
+        return sign | out;
+    }
+    let mut out = (((exp as u32) << 10) as u16) | ((mant >> 13) as u16);
+    let rem = mant & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && (out & 1) == 1) {
+        out = out.wrapping_add(1); // mantissa carry rolls into the exponent correctly
+    }
+    sign | out
+}
+
+/// Decode IEEE 754 binary16 bits to f32 (exact: every f16 value is
+/// representable in f32).
+pub(crate) fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = (u32::from(h) & 0x8000) << 16;
+    let exp = u32::from((h >> 10) & 0x1f);
+    let mant = u32::from(h & 0x3ff);
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: renormalize into f32's ample exponent range
+            let mut e = 113u32; // 127 - 15 + 1
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Half-precision storage: each K/V scalar kept as IEEE binary16 — the
+/// 2-byte middle tier between exact f32 (4 bytes) and block-int8 (1.125
+/// bytes). Per-element relative error ≤ 2⁻¹¹ in the normal range, with
+/// no block structure and no scales to amortize, so the 2× saving holds
+/// at any row width (int8's 3.56× ceiling needs wide rows).
+#[derive(Clone, Debug)]
+pub struct F16Buf {
+    cols: usize,
+    data: Vec<u16>,
+}
+
+impl KvStorage for F16Buf {
+    fn new(cols: usize) -> F16Buf {
+        F16Buf { cols, data: Vec::new() }
+    }
+
+    fn from_tensor(t: &Tensor) -> F16Buf {
+        let mut out = <F16Buf as KvStorage>::new(t.cols());
+        for i in 0..t.rows() {
+            out.push_row(t.row(i));
+        }
+        out
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn rows(&self) -> usize {
+        if self.cols == 0 { 0 } else { self.data.len() / self.cols }
+    }
+
+    fn push_row(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.cols);
+        for &x in row {
+            self.data.push(f32_to_f16_bits(x));
+        }
+    }
+
+    fn dot(&self, i: usize, q: &[f32]) -> f32 {
+        let row = &self.data[i * self.cols..(i + 1) * self.cols];
+        let mut acc = 0.0f32;
+        for (kk, &h) in row.iter().enumerate() {
+            acc += q[kk] * f16_bits_to_f32(h);
+        }
+        acc
+    }
+
+    fn add_scaled(&self, i: usize, w: f32, out: &mut [f32]) {
+        let row = &self.data[i * self.cols..(i + 1) * self.cols];
+        for (c, &h) in row.iter().enumerate() {
+            out[c] += w * f16_bits_to_f32(h);
+        }
+    }
+
+    fn row_f32(&self, i: usize) -> Vec<f32> {
+        self.data[i * self.cols..(i + 1) * self.cols].iter().map(|&h| f16_bits_to_f32(h)).collect()
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<u16>()
+    }
+}
+
+/// Which storage backend in-flight K/V caches use (`serve --kv-quant=TIER`;
+/// [`crate::serve::EngineOptions::kv_tier`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KvTier {
+    /// Exact f32 ([`KvCache`]) — every bit-identity guarantee holds.
+    #[default]
+    F32,
+    /// IEEE binary16 ([`F16KvCache`]) — 2× fewer resident bytes, ≤ 2⁻¹¹
+    /// relative per-element error.
+    F16,
+    /// Block-quantized i8 ([`QuantKvCache`]) — ~3.6× fewer resident
+    /// bytes, drift bounded per DESIGN.md §17.
+    Int8,
+}
+
+impl KvTier {
+    /// Parse the `--kv-quant` tier value.
+    pub fn parse(s: &str) -> crate::error::Result<KvTier> {
+        match s {
+            "f32" => Ok(KvTier::F32),
+            "f16" => Ok(KvTier::F16),
+            "int8" => Ok(KvTier::Int8),
+            other => Err(crate::error::Error::Cli(format!(
+                "unknown KV tier '{other}' (f32|f16|int8)"
+            ))),
+        }
+    }
+
+    /// Human-readable tier name (CLI summaries, bench rows).
+    pub fn label(self) -> &'static str {
+        match self {
+            KvTier::F32 => "f32",
+            KvTier::F16 => "f16",
+            KvTier::Int8 => "int8",
+        }
+    }
+}
+
 /// KV + residual-stream cache for one in-flight sequence, generic over
 /// the K/V storage backend (see the module docs; [`KvCache`] and
 /// [`QuantKvCache`] are the two instantiations).
@@ -305,6 +474,10 @@ pub type KvCache = KvCacheImpl<GrowBuf>;
 /// Block-quantized i8 cache — ~3.6× smaller resident K/V bytes, decode
 /// drift bounded as documented (DESIGN.md §17).
 pub type QuantKvCache = KvCacheImpl<QuantBuf>;
+
+/// Half-precision cache — exactly 2× smaller resident K/V bytes at
+/// ≤ 2⁻¹¹ relative per-element error (the f32/int8 middle tier).
+pub type F16KvCache = KvCacheImpl<F16Buf>;
 
 impl<S: KvStorage> KvCacheImpl<S> {
     /// Empty cache for one sequence under `cfg`.
@@ -858,5 +1031,161 @@ mod tests {
         let b = forward_incremental(new_params.config(), &new_params, &mut fresh, 2).unwrap();
         let d = a.max_abs_diff(&b).unwrap();
         assert!(d <= 5e-2, "general-op quant remap drift {d} above bound");
+    }
+
+    // ---- f16 middle tier ----------------------------------------------
+
+    #[test]
+    fn f16_conversion_edge_cases() {
+        // exact zero (both signs) survives bit-for-bit in sign+magnitude
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f16_bits_to_f32(0x0000), 0.0);
+        // values beyond the f16 range saturate to ±Inf
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00);
+        assert_eq!(f32_to_f16_bits(-1e6), 0xFC00);
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(0xFC00), f32::NEG_INFINITY);
+        // NaN stays NaN in both directions
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // tiny values land in the f16 subnormal range and round-trip
+        // within half a subnormal ulp (2^-25)
+        let tiny = 3.0e-6_f32;
+        let back = f16_bits_to_f32(f32_to_f16_bits(tiny));
+        assert!((tiny - back).abs() <= 2f32.powi(-25), "subnormal {tiny} -> {back}");
+        // below half the smallest subnormal flushes to zero
+        assert_eq!(f32_to_f16_bits(1.0e-8), 0x0000);
+        // round-to-nearest-even carry: 2047.5 ulps of mantissa rounds up
+        // and carries into the exponent (65519.996.. -> 65504 is the max
+        // finite f16; just above the midpoint to Inf saturates)
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(65504.0)), 65504.0);
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00); // midpoint rounds to even => Inf
+        // representable values are exact
+        for &x in &[1.0f32, -2.5, 0.125, 1024.0, -0.0009765625] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), x, "{x} must be exact in f16");
+        }
+    }
+
+    #[test]
+    fn f16_roundtrip_error_is_bounded() {
+        // the quant round-trip prop test extended to the f16 tier: binary16
+        // keeps 10 mantissa bits, so RNE gives ≤2^-11 relative error for
+        // normal values; assert the looser |x|·2^-10 plus a subnormal-range
+        // absolute term (half the smallest subnormal ulp); random shapes AND
+        // random magnitude scales, via the prop harness
+        Runner::new("f16-kv-roundtrip", 64).run_sized(
+            &mut |rng| {
+                let rows = 1 + rng.below(5);
+                let cols = 1 + rng.below(80);
+                let mag = match rng.below(5) {
+                    0 => 1e-3,
+                    1 => 0.05,
+                    2 => 1.0,
+                    3 => 40.0,
+                    _ => 1e4,
+                };
+                let mut t = Tensor::zeros(&[rows, cols]);
+                rng.fill_normal(t.data_mut(), mag);
+                if rng.below(4) == 0 {
+                    // an all-zero row exercises the sign/zero encode path
+                    for x in t.row_mut(0) {
+                        *x = 0.0;
+                    }
+                }
+                t
+            },
+            |t| t.numel(),
+            &mut |t| {
+                let hb = <F16Buf as KvStorage>::from_tensor(t);
+                if hb.rows() != t.rows() || hb.cols() != t.cols() {
+                    return Err("shape mismatch after encode".into());
+                }
+                for i in 0..t.rows() {
+                    let back = hb.row_f32(i);
+                    for (c, &x) in t.row(i).iter().enumerate() {
+                        let y = back[c];
+                        let bound = x.abs() * 2f32.powi(-10) + 2f32.powi(-25);
+                        if (x - y).abs() > bound {
+                            return Err(format!("row {i} col {c}: |{x} - {y}| > {bound}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn f16_dot_and_add_scaled_match_dequantized_rows() {
+        // the read primitives must be plain f32 math over the *decoded*
+        // values, in the same ascending order as GrowBuf — so a GrowBuf
+        // built from row_f32 copies reproduces them bit for bit
+        let mut rng = Pcg32::seeded(22);
+        let t = Tensor::randn(&[4, 40], &mut rng, 0.7);
+        let hb = <F16Buf as KvStorage>::from_tensor(&t);
+        let mut deq = <GrowBuf as KvStorage>::new(40);
+        for i in 0..4 {
+            KvStorage::push_row(&mut deq, &hb.row_f32(i));
+        }
+        let q: Vec<f32> = (0..40).map(|_| rng.normal_f32(1.0)).collect();
+        for i in 0..4 {
+            assert_eq!(hb.dot(i, &q).to_bits(), KvStorage::dot(&deq, i, &q).to_bits(), "dot row {i}");
+            let mut a = vec![0.125f32; 40];
+            let mut b = a.clone();
+            hb.add_scaled(i, 0.35, &mut a);
+            KvStorage::add_scaled(&deq, i, 0.35, &mut b);
+            assert_eq!(a, b, "add_scaled row {i}");
+        }
+    }
+
+    #[test]
+    fn f16_cache_halves_resident_kv_bytes() {
+        let c = wide_cfg();
+        let mut rng = Pcg32::seeded(11);
+        let params = ParamStore::init(&c, &mut rng, 0.05);
+        let history: Vec<u32> = (0..8).map(|_| rng.below(c.vocab) as u32).collect();
+
+        let mut full = KvCache::new(&c);
+        feed(&mut full, &params, &history);
+        let mut half = F16KvCache::new(&c);
+        feed(&mut half, &params, &history);
+
+        assert_eq!(full.num_cached_scalars(), half.num_cached_scalars());
+        let ratio = full.kv_resident_bytes() as f64 / half.kv_resident_bytes() as f64;
+        assert!(
+            (ratio - 2.0).abs() < 1e-9,
+            "f16 KV must hold exactly 2x fewer resident bytes, got {ratio:.2}x"
+        );
+    }
+
+    #[test]
+    fn f16_decode_tracks_f32_within_documented_bound() {
+        // teacher-forced decode with an f16 cache vs exact f32: per-step
+        // logit drift stays well under the int8 tier's 5e-2 — assert the
+        // tighter 5e-3 that the 2^-11 relative error affords at this scale
+        let c = cfg();
+        let mut rng = Pcg32::seeded(5);
+        let params = ParamStore::init(&c, &mut rng, 0.08);
+        let history: Vec<u32> = (0..10).map(|_| rng.below(c.vocab) as u32).collect();
+
+        let mut exact = KvCache::new(&c);
+        let mut half = F16KvCache::new(&c);
+        let mut worst = 0.0f32;
+        for &tok in &history {
+            let a = forward_incremental(&c, &params, &mut exact, tok).unwrap();
+            let b = forward_incremental(&c, &params, &mut half, tok).unwrap();
+            worst = worst.max(a.max_abs_diff(&b).unwrap());
+        }
+        assert!(worst <= 5e-3, "f16 decode drift {worst} above documented bound");
+        assert!(worst > 0.0, "f16 path suspiciously identical to f32 (not exercising quant)");
+    }
+
+    #[test]
+    fn kv_tier_parse_and_label() {
+        assert!(matches!(KvTier::parse("f32").unwrap(), KvTier::F32));
+        assert!(matches!(KvTier::parse("f16").unwrap(), KvTier::F16));
+        assert!(matches!(KvTier::parse("int8").unwrap(), KvTier::Int8));
+        assert!(KvTier::parse("bf16").is_err());
+        assert_eq!(KvTier::F16.label(), "f16");
     }
 }

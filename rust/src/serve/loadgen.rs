@@ -1,0 +1,339 @@
+//! Synthetic load generator for the HTTP serve front-end (S21b):
+//! `texpand loadgen`.
+//!
+//! Spawns N concurrent clients against a [`crate::serve::http::HttpServer`]
+//! and reports what the *client* observed — end-to-end request latency
+//! percentiles, streamed tokens/sec, and the 429/timeout/error breakdown —
+//! the numbers the adaptive-admission acceptance benchmark compares across
+//! controllers (DESIGN.md §18.4).
+//!
+//! Two arrival models:
+//!
+//! * **closed loop** (`rate_per_sec == 0`): each client fires its next
+//!   request the moment the previous one finishes — concurrency is the
+//!   offered load, the classic saturation probe;
+//! * **open loop** (`rate_per_sec > 0`): request *i* is released at
+//!   `i / rate` seconds after start regardless of completions — offered
+//!   load is independent of service rate, which is what actually
+//!   overloads a server (closed loops self-throttle and hide the knee).
+//!
+//! Requests draw prompt lengths round-robin from a configurable mix and
+//! per-request token ids from seeded [`Pcg32`] streams, so a run is fully
+//! reproducible from `(seed, options)`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::obs::http_post_stream;
+use crate::rng::Pcg32;
+
+/// Knobs for [`run`].
+#[derive(Clone, Debug)]
+pub struct LoadgenOptions {
+    /// Target server, `host:port`.
+    pub addr: String,
+    /// Concurrent client workers.
+    pub clients: usize,
+    /// Total requests across all workers.
+    pub requests: usize,
+    /// Open-loop arrival rate in requests/sec; `0.0` = closed loop.
+    pub rate_per_sec: f64,
+    /// `max_new_tokens` per request.
+    pub tokens: usize,
+    /// Prompt lengths cycled per request index.
+    pub prompt_mix: Vec<usize>,
+    /// Per-request wall-clock deadline forwarded as `deadline_ms`
+    /// (0 = none).
+    pub deadline_ms: u64,
+    /// Token-id range for synthetic prompts (must match the served
+    /// model's vocab).
+    pub vocab: usize,
+    /// Base seed; request *i* draws from stream `seed ^ i`.
+    pub seed: u64,
+    /// Per-request client timeout.
+    pub timeout: Duration,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        LoadgenOptions {
+            addr: "127.0.0.1:7080".into(),
+            clients: 4,
+            requests: 32,
+            rate_per_sec: 0.0,
+            tokens: 16,
+            prompt_mix: vec![4, 8, 16],
+            deadline_ms: 0,
+            vocab: 128,
+            seed: 0,
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Client-observed outcome of one loadgen run.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub sent: usize,
+    /// Streams that reached `"finish":"max_tokens"`.
+    pub completed: usize,
+    /// 429 answers (admission shed).
+    pub rejected: usize,
+    /// Streams that reached `"finish":"timeout"` (deadline expiry).
+    pub timeouts: usize,
+    /// Transport failures, non-429 error statuses, or truncated streams.
+    pub errors: usize,
+    /// Token ids received across all streams.
+    pub tokens_streamed: usize,
+    pub wall_ms: f64,
+    /// Latency stats over *successful streams* (completed + timeouts):
+    /// time from request start to terminal chunk.
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    /// Streamed-token throughput over the whole run wall time.
+    pub tokens_per_sec: f64,
+    /// `"open"` or `"closed"`.
+    pub mode: &'static str,
+}
+
+/// Build request `i`'s JSON body (hand-formatted: the body is the wire
+/// protocol, worth seeing literally here).
+fn request_body(opts: &LoadgenOptions, i: usize) -> String {
+    let mut rng = Pcg32::new(opts.seed, 0x10AD ^ i as u64);
+    let plen = opts.prompt_mix[i % opts.prompt_mix.len()].max(1);
+    let ids: Vec<String> =
+        (0..plen).map(|_| rng.below(opts.vocab.max(1)).to_string()).collect();
+    format!(
+        "{{\"tokens\":[{}],\"max_new_tokens\":{},\"deadline_ms\":{},\"temperature\":0,\"seed\":{i}}}",
+        ids.join(","),
+        opts.tokens,
+        opts.deadline_ms,
+    )
+}
+
+/// What one request resolved to.
+enum Outcome {
+    Completed(f64),
+    TimedOut(f64),
+    Rejected,
+    Errored,
+}
+
+/// Fire request `i` and classify the result; `latency` is start→terminal
+/// chunk for streamed responses.
+fn fire(opts: &LoadgenOptions, i: usize, tokens_streamed: &AtomicUsize) -> Outcome {
+    let body = request_body(opts, i);
+    let started = Instant::now();
+    let outcome = http_post_stream(
+        &opts.addr,
+        "/v1/generate",
+        &body,
+        opts.timeout,
+        &mut |line| {
+            if let Ok(v) = Value::parse(line) {
+                if let Some(toks) = v.get("tokens") {
+                    if let Ok(arr) = toks.as_arr() {
+                        tokens_streamed.fetch_add(arr.len(), Ordering::Relaxed);
+                    }
+                }
+            }
+        },
+    );
+    let latency_ms = started.elapsed().as_secs_f64() * 1e3;
+    match outcome {
+        Ok(out) if out.status == 200 => {
+            // terminal chunk decides the verdict
+            let finish = out.lines.iter().rev().find_map(|line| {
+                let v = Value::parse(line).ok()?;
+                if v.get("done").is_some() {
+                    Some(v.get("finish")?.as_str().ok()?.to_string())
+                } else {
+                    None
+                }
+            });
+            match finish.as_deref() {
+                Some("max_tokens") => Outcome::Completed(latency_ms),
+                Some("timeout") => Outcome::TimedOut(latency_ms),
+                _ => Outcome::Errored, // truncated stream or error chunk
+            }
+        }
+        Ok(out) if out.status == 429 => Outcome::Rejected,
+        Ok(_) | Err(_) => Outcome::Errored,
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Run the load test (see module docs for the arrival models).
+pub fn run(opts: &LoadgenOptions) -> Result<LoadReport> {
+    if opts.requests == 0 {
+        return Err(Error::Cli("loadgen needs --requests >= 1".into()));
+    }
+    if opts.clients == 0 {
+        return Err(Error::Cli("loadgen needs --clients >= 1".into()));
+    }
+    if opts.prompt_mix.is_empty() {
+        return Err(Error::Cli("loadgen needs a non-empty --prompt-mix".into()));
+    }
+    if opts.vocab == 0 {
+        return Err(Error::Cli("loadgen needs --vocab >= 1".into()));
+    }
+
+    let next = Arc::new(AtomicUsize::new(0));
+    let tokens_streamed = Arc::new(AtomicUsize::new(0));
+    let latencies = Arc::new(Mutex::new(Vec::<f64>::new()));
+    let counts = Arc::new([
+        AtomicUsize::new(0), // completed
+        AtomicUsize::new(0), // rejected
+        AtomicUsize::new(0), // timeouts
+        AtomicUsize::new(0), // errors
+    ]);
+    let start = Instant::now();
+
+    let workers: Vec<_> = (0..opts.clients.min(opts.requests))
+        .map(|_| {
+            let opts = opts.clone();
+            let next = Arc::clone(&next);
+            let tokens_streamed = Arc::clone(&tokens_streamed);
+            let latencies = Arc::clone(&latencies);
+            let counts = Arc::clone(&counts);
+            std::thread::spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= opts.requests {
+                    break;
+                }
+                if opts.rate_per_sec > 0.0 {
+                    // open loop: request i is due at i/rate after start,
+                    // whether or not earlier requests have finished
+                    let due = Duration::from_secs_f64(i as f64 / opts.rate_per_sec);
+                    let elapsed = start.elapsed();
+                    if due > elapsed {
+                        std::thread::sleep(due - elapsed);
+                    }
+                }
+                match fire(&opts, i, &tokens_streamed) {
+                    Outcome::Completed(ms) => {
+                        counts[0].fetch_add(1, Ordering::Relaxed);
+                        latencies.lock().unwrap().push(ms);
+                    }
+                    Outcome::Rejected => {
+                        counts[1].fetch_add(1, Ordering::Relaxed);
+                    }
+                    Outcome::TimedOut(ms) => {
+                        counts[2].fetch_add(1, Ordering::Relaxed);
+                        latencies.lock().unwrap().push(ms);
+                    }
+                    Outcome::Errored => {
+                        counts[3].fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().map_err(|_| Error::Serve("loadgen worker panicked".into()))?;
+    }
+    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+
+    let mut lat = Arc::try_unwrap(latencies)
+        .map_err(|_| Error::Serve("loadgen latency vec still shared".into()))?
+        .into_inner()
+        .map_err(|_| Error::Serve("loadgen latency lock poisoned".into()))?;
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean_ms =
+        if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 };
+    let streamed = tokens_streamed.load(Ordering::Relaxed);
+    Ok(LoadReport {
+        sent: opts.requests,
+        completed: counts[0].load(Ordering::Relaxed),
+        rejected: counts[1].load(Ordering::Relaxed),
+        timeouts: counts[2].load(Ordering::Relaxed),
+        errors: counts[3].load(Ordering::Relaxed),
+        tokens_streamed: streamed,
+        wall_ms,
+        mean_ms,
+        p50_ms: percentile(&lat, 0.50),
+        p95_ms: percentile(&lat, 0.95),
+        p99_ms: percentile(&lat, 0.99),
+        max_ms: lat.last().copied().unwrap_or(0.0),
+        tokens_per_sec: if wall_ms > 0.0 { streamed as f64 / (wall_ms / 1e3) } else { 0.0 },
+        mode: if opts.rate_per_sec > 0.0 { "open" } else { "closed" },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_degenerate_options() {
+        let base = LoadgenOptions::default();
+        assert!(run(&LoadgenOptions { requests: 0, ..base.clone() }).is_err());
+        assert!(run(&LoadgenOptions { clients: 0, ..base.clone() }).is_err());
+        assert!(run(&LoadgenOptions { prompt_mix: vec![], ..base.clone() }).is_err());
+        assert!(run(&LoadgenOptions { vocab: 0, ..base }).is_err());
+    }
+
+    #[test]
+    fn request_bodies_are_reproducible_and_follow_the_mix() {
+        let opts = LoadgenOptions {
+            prompt_mix: vec![2, 5],
+            tokens: 7,
+            deadline_ms: 30,
+            vocab: 16,
+            seed: 42,
+            ..Default::default()
+        };
+        let b0 = request_body(&opts, 0);
+        assert_eq!(b0, request_body(&opts, 0), "same (seed, index) -> same body");
+        assert_ne!(b0, request_body(&opts, 2), "different index -> different tokens");
+        let v = Value::parse(&b0).unwrap();
+        assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("max_new_tokens").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(v.get("deadline_ms").unwrap().as_usize().unwrap(), 30);
+        let v1 = Value::parse(&request_body(&opts, 1)).unwrap();
+        assert_eq!(v1.get("tokens").unwrap().as_arr().unwrap().len(), 5, "mix cycles");
+        for t in v.get("tokens").unwrap().as_arr().unwrap() {
+            assert!(t.as_usize().unwrap() < 16, "ids bounded by vocab");
+        }
+    }
+
+    #[test]
+    fn percentiles_interpolate_by_nearest_rank() {
+        let lat = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        assert_eq!(percentile(&lat, 0.0), 1.0);
+        assert_eq!(percentile(&lat, 0.50), 6.0);
+        assert_eq!(percentile(&lat, 1.0), 10.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn unreachable_server_counts_errors_not_panics() {
+        // reserved-port address nothing listens on
+        let opts = LoadgenOptions {
+            addr: "127.0.0.1:9".into(),
+            clients: 2,
+            requests: 3,
+            timeout: Duration::from_millis(200),
+            ..Default::default()
+        };
+        let report = run(&opts).unwrap();
+        assert_eq!(report.sent, 3);
+        assert_eq!(report.errors, 3);
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.tokens_streamed, 0);
+        assert_eq!(report.mode, "closed");
+    }
+}

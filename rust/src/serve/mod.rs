@@ -6,31 +6,42 @@
 //! * [`kv`] — per-sequence KV + residual-stream cache; the incremental
 //!   decode state and the object that is *remapped through expansion ops*
 //!   at a hot-swap (the subsystem's central trick). Generic over a
-//!   [`KvStorage`] backend: exact f32 ([`KvCache`]) or block-quantized i8
-//!   ([`QuantKvCache`], `--kv-quant`) at several-fold fewer resident
-//!   bytes per sequence.
+//!   [`KvStorage`] backend ([`KvTier`], `--kv-quant=f16|int8`): exact f32
+//!   ([`KvCache`]), half-precision f16 ([`F16KvCache`], 2× fewer resident
+//!   bytes) or block-quantized i8 ([`QuantKvCache`], several-fold fewer).
 //! * [`scheduler`] — request queue + continuous batching across in-flight
 //!   sequences of different lengths; per-slot decode fans out over the
 //!   shared [`crate::parallel::Pool`].
 //! * [`engine`] — the live [`crate::params::ParamStore`] behind a swap
-//!   point; `submit`/`poll`/`tick` plus counters.
+//!   point; `submit`/`poll`/`tick` plus counters, per-request deadlines
+//!   ([`Engine::submit_with_deadline`]) and an incremental
+//!   [`Engine::partial`] view for streaming consumers.
 //! * [`hotswap`] — surgery → preservation probe → cache remap → atomic
 //!   commit, the coordinator's boundary protocol transplanted under live
 //!   traffic.
+//! * [`http`] — the network face: a multi-client streaming HTTP server
+//!   (`POST /v1/generate`, chunked NDJSON token stream) with AIMD
+//!   adaptive admission control ([`http::AimdController`]).
+//! * [`loadgen`] — synthetic open/closed-loop load generator behind
+//!   `texpand loadgen`; drives the HTTP front-end and reports latency
+//!   percentiles + tokens/sec as a `serve_http_load` bench series.
 //!
 //! Decode numerics are bit-compatible with the KV-less oracle
 //! (`generate::generate_ref`): greedy decodes are token-identical, which
 //! `tests/integration_serve.rs` asserts end to end, including across a
-//! mid-flight hot-swap.
+//! mid-flight hot-swap; `tests/integration_http.rs` extends the same
+//! byte-identity claim to the HTTP streaming path.
 
 pub mod engine;
 pub mod hotswap;
+pub mod http;
 pub mod kv;
+pub mod loadgen;
 pub mod scheduler;
 
 pub use engine::{Engine, EngineOptions};
 pub use hotswap::SwapReport;
-pub use kv::{KvCache, KvCacheImpl, KvStorage, QuantKvCache, QUANT_BLOCK};
+pub use kv::{F16KvCache, KvCache, KvCacheImpl, KvStorage, KvTier, QuantKvCache, QUANT_BLOCK};
 pub use scheduler::{Admission, Completion, FinishReason, Request, RequestId, TickReport};
 
 use crate::config::{GrowthOp, LayerPosition};

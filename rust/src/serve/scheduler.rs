@@ -35,7 +35,7 @@ use crate::model::forward_incremental;
 use crate::parallel::Pool;
 use crate::params::ParamStore;
 use crate::rng::Pcg32;
-use crate::serve::kv::{KvCache, QuantKvCache};
+use crate::serve::kv::{F16KvCache, KvCache, KvTier, QuantKvCache};
 use crate::tensor::Tensor;
 
 /// Opaque request handle returned by `submit`.
@@ -58,6 +58,10 @@ pub struct Request {
     pub prompt: Vec<u32>,
     pub max_new_tokens: usize,
     pub sampler: Sampler,
+    /// Per-request deadline in scheduler ticks spent in a slot; `0` falls
+    /// back to the engine-wide `EngineOptions::request_timeout_ticks`.
+    /// The HTTP front-end maps wall-clock `deadline_ms` onto this.
+    pub timeout_ticks: u64,
 }
 
 /// A finished generation.
@@ -73,29 +77,32 @@ pub struct Completion {
     pub ticks_in_flight: u64,
 }
 
-/// Storage-tier dispatch for one slot's KV cache: exact f32 or
-/// block-quantized i8 (`--kv-quant` / `EngineOptions::kv_quant`). An enum
-/// rather than a generic `Slot` keeps the scheduler/engine/hot-swap layer
-/// monomorphic — the dispatch cost is one match per decode step, and the
-/// quantized tier's bounded logit drift is documented in DESIGN.md §17.
+/// Storage-tier dispatch for one slot's KV cache: exact f32, half-precision
+/// f16, or block-quantized i8 (`--kv-quant=f16|int8` /
+/// `EngineOptions::kv_tier`). An enum rather than a generic `Slot` keeps
+/// the scheduler/engine/hot-swap layer monomorphic — the dispatch cost is
+/// one match per decode step, and each lossy tier's bounded logit drift is
+/// documented in DESIGN.md §17–18.
 #[derive(Clone, Debug)]
 pub(crate) enum SlotCache {
     F32(KvCache),
+    F16(F16KvCache),
     Quant(QuantKvCache),
 }
 
 impl SlotCache {
-    pub(crate) fn new(cfg: &ModelConfig, quant: bool) -> SlotCache {
-        if quant {
-            SlotCache::Quant(QuantKvCache::new(cfg))
-        } else {
-            SlotCache::F32(KvCache::new(cfg))
+    pub(crate) fn new(cfg: &ModelConfig, tier: KvTier) -> SlotCache {
+        match tier {
+            KvTier::F32 => SlotCache::F32(KvCache::new(cfg)),
+            KvTier::F16 => SlotCache::F16(F16KvCache::new(cfg)),
+            KvTier::Int8 => SlotCache::Quant(QuantKvCache::new(cfg)),
         }
     }
 
     pub(crate) fn len(&self) -> usize {
         match self {
             SlotCache::F32(c) => c.len(),
+            SlotCache::F16(c) => c.len(),
             SlotCache::Quant(c) => c.len(),
         }
     }
@@ -103,15 +110,17 @@ impl SlotCache {
     pub(crate) fn reset(&mut self) {
         match self {
             SlotCache::F32(c) => c.reset(),
+            SlotCache::F16(c) => c.reset(),
             SlotCache::Quant(c) => c.reset(),
         }
     }
 
     /// Resident bytes of the K/V storage proper (the quantity `--kv-quant`
-    /// shrinks; exact-f32 stream buffers excluded in both tiers).
+    /// shrinks; exact-f32 stream buffers excluded in all tiers).
     pub(crate) fn kv_resident_bytes(&self) -> usize {
         match self {
             SlotCache::F32(c) => c.kv_resident_bytes(),
+            SlotCache::F16(c) => c.kv_resident_bytes(),
             SlotCache::Quant(c) => c.kv_resident_bytes(),
         }
     }
@@ -125,6 +134,7 @@ impl SlotCache {
     ) -> Result<Tensor> {
         match self {
             SlotCache::F32(c) => forward_incremental(cfg, params, c, token),
+            SlotCache::F16(c) => forward_incremental(cfg, params, c, token),
             SlotCache::Quant(c) => forward_incremental(cfg, params, c, token),
         }
     }
@@ -143,6 +153,8 @@ pub(crate) struct Slot {
     /// Logits of the last fed position — the next token samples from these.
     pub(crate) logits: Vec<f32>,
     admitted_tick: u64,
+    /// Per-request deadline in ticks (`0` = engine-wide default applies).
+    timeout_ticks: u64,
 }
 
 impl Slot {
@@ -234,9 +246,9 @@ pub struct Scheduler {
     tick: u64,
     /// Shared decode fan-out pool (`TEXPAND_THREADS`-sized by default).
     pool: Pool,
-    /// Admit new slots with block-quantized KV storage
-    /// ([`crate::serve::kv::QuantKvCache`]) instead of exact f32.
-    pub(crate) kv_quant: bool,
+    /// Storage tier new slots are admitted with (exact f32 by default,
+    /// f16 or block-int8 via `--kv-quant`).
+    pub(crate) kv_tier: KvTier,
 }
 
 impl Scheduler {
@@ -253,7 +265,7 @@ impl Scheduler {
             next_id: 0,
             tick: 0,
             pool,
-            kv_quant: false,
+            kv_tier: KvTier::F32,
         }
     }
 
@@ -299,9 +311,10 @@ impl Scheduler {
                 // per-request stream: decoding order/batch composition
                 // cannot perturb another request's draws
                 rng: Pcg32::new(req.sampler.seed, 0x5E4E ^ id),
-                cache: SlotCache::new(&cfg, self.kv_quant),
+                cache: SlotCache::new(&cfg, self.kv_tier),
                 logits: Vec::new(),
                 admitted_tick: self.tick,
+                timeout_ticks: req.timeout_ticks,
             };
             let prompt_tokens = slot.history.len().min(cfg.seq);
             let prime = Timer::start();
@@ -312,20 +325,22 @@ impl Scheduler {
         Ok(admissions)
     }
 
-    /// Expire in-flight sequences that have spent `timeout_ticks` or more
-    /// ticks in their slot (`0` disables). Run at the start of a tick,
-    /// before admission, so freed slots are immediately reusable. Expired
-    /// sequences complete with their partial output and
-    /// [`FinishReason::TimedOut`].
+    /// Expire in-flight sequences past their deadline. Each slot's
+    /// effective deadline is its own `Request::timeout_ticks` when set,
+    /// else the engine-wide `timeout_ticks` passed here (`0` on both
+    /// levels disables). Run at the start of a tick, before admission, so
+    /// freed slots are immediately reusable. Expired sequences complete
+    /// with their partial output and [`FinishReason::TimedOut`].
     pub fn expire(&mut self, timeout_ticks: u64) -> Vec<Completion> {
-        if timeout_ticks == 0 || self.active.is_empty() {
+        if self.active.is_empty() {
             return Vec::new();
         }
         let tick = self.tick;
         let mut expired = Vec::new();
         let mut kept = Vec::with_capacity(self.active.len());
         for slot in self.active.drain(..) {
-            if tick.saturating_sub(slot.admitted_tick) >= timeout_ticks {
+            let effective = if slot.timeout_ticks > 0 { slot.timeout_ticks } else { timeout_ticks };
+            if effective > 0 && tick.saturating_sub(slot.admitted_tick) >= effective {
                 expired.push(slot.into_completion(FinishReason::TimedOut, tick));
             } else {
                 kept.push(slot);
@@ -379,6 +394,18 @@ impl Scheduler {
         self.tick
     }
 
+    /// Incremental view of an in-flight sequence: its prompt length and
+    /// the tokens generated so far. `None` once the request has left its
+    /// slot (completed/expired — the result is in the completion) or was
+    /// never admitted. The HTTP front-end polls this each tick to stream
+    /// tokens as they are decoded.
+    pub fn partial(&self, id: RequestId) -> Option<(usize, &[u32])> {
+        self.active
+            .iter()
+            .find(|s| s.id == id)
+            .map(|s| (s.prompt_len, &s.history[s.prompt_len..]))
+    }
+
     /// Largest per-sequence resident K/V byte count across the in-flight
     /// slots right now (0 when idle) — the memory quantity `--kv-quant`
     /// shrinks, sampled by the engine each tick for its peak gauge.
@@ -405,6 +432,7 @@ mod tests {
             prompt,
             max_new_tokens: n,
             sampler: Sampler { temperature: 0.0, top_k: None, seed: 0 },
+            timeout_ticks: 0,
         }
     }
 
@@ -498,6 +526,69 @@ mod tests {
     }
 
     #[test]
+    fn per_request_deadline_overrides_engine_global() {
+        let p = params();
+        let mut s = Scheduler::new(2);
+        let strict = s.enqueue(Request { timeout_ticks: 2, ..greedy_req(vec![1], 50) });
+        let lax = s.enqueue(greedy_req(vec![2], 50));
+        s.admit(&p).unwrap();
+        for _ in 0..2 {
+            s.decode_tick(&p, false).unwrap();
+        }
+        // global disabled (0): the per-request deadline still fires
+        let expired = s.expire(0);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].id, strict);
+        assert_eq!(expired[0].finish, FinishReason::TimedOut);
+        assert_eq!(expired[0].generated, 2);
+        // the other slot has no per-request deadline and follows the global
+        assert!(s.expire(0).is_empty());
+        let expired = s.expire(2);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].id, lax);
+        // a per-request deadline *longer* than the global wins too
+        let slow = s.enqueue(Request { timeout_ticks: 10, ..greedy_req(vec![3], 50) });
+        s.admit(&p).unwrap();
+        for _ in 0..3 {
+            s.decode_tick(&p, false).unwrap();
+        }
+        assert!(s.expire(1).is_empty(), "per-request deadline shields from a shorter global");
+        for _ in 0..7 {
+            s.decode_tick(&p, false).unwrap();
+        }
+        let expired = s.expire(1);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].id, slow);
+    }
+
+    #[test]
+    fn partial_exposes_generated_tokens_while_in_flight() {
+        let p = params();
+        let mut s = Scheduler::new(1);
+        let id = s.enqueue(greedy_req(vec![1, 2], 4));
+        assert!(s.partial(id).is_none(), "queued but unadmitted: no partial yet");
+        s.admit(&p).unwrap();
+        let (pl, gen) = s.partial(id).expect("admitted");
+        assert_eq!((pl, gen.len()), (2, 0));
+        let mut seen: Vec<u32> = Vec::new();
+        let mut done = Vec::new();
+        while !s.is_idle() {
+            done.extend(s.decode_tick(&p, false).unwrap());
+            if let Some((_, gen)) = s.partial(id) {
+                assert_eq!(&gen[..seen.len()], &seen[..], "partial must be append-only");
+                seen = gen.to_vec();
+            }
+        }
+        assert_eq!(done.len(), 1);
+        // the streamed prefix plus whatever the final tick added equals the
+        // completed continuation
+        assert_eq!(&done[0].tokens[2..2 + seen.len()], &seen[..]);
+        assert_eq!(done[0].tokens.len(), 2 + 4);
+        assert!(s.partial(id).is_none(), "completed: partial view is gone");
+        assert!(s.partial(999).is_none());
+    }
+
+    #[test]
     fn undersized_pool_decodes_all_slots_identically() {
         // 4 active slots over a 2-worker pool: chunked fan-out must cover
         // every slot and match the serial decode exactly
@@ -509,6 +600,7 @@ mod tests {
                     prompt: vec![i, i + 1],
                     max_new_tokens: 5,
                     sampler: Sampler { temperature: 0.9, top_k: Some(6), seed: 11 },
+                    timeout_ticks: 0,
                 });
             }
             s.admit(&p).unwrap();
@@ -541,9 +633,9 @@ mod tests {
             vocab: 32,
         };
         let p = ParamStore::init(&c, &mut Pcg32::seeded(41), 0.05);
-        let run = |quant: bool| {
+        let run = |tier: KvTier| {
             let mut s = Scheduler::new(2);
-            s.kv_quant = quant;
+            s.kv_tier = tier;
             s.enqueue(greedy_req(vec![1, 2, 3], 8));
             s.enqueue(greedy_req(vec![4, 5], 8));
             s.admit(&p).unwrap();
@@ -558,19 +650,27 @@ mod tests {
                 done.iter().map(|d| (d.prompt_len, d.tokens.clone())).collect();
             (out, peak_bytes)
         };
-        let (exact_tokens, exact_bytes) = run(false);
-        let (quant_tokens, quant_bytes) = run(true);
+        let (exact_tokens, exact_bytes) = run(KvTier::F32);
+        let (quant_tokens, quant_bytes) = run(KvTier::Int8);
+        let (half_tokens, half_bytes) = run(KvTier::F16);
         // shape must agree exactly; token-level agreement is a numerics
         // property with a near-tie escape hatch, asserted in kv.rs
         // (`quant_decode_tracks_f32_within_documented_bound`)
         assert_eq!(exact_tokens.len(), quant_tokens.len());
+        assert_eq!(exact_tokens.len(), half_tokens.len());
         for ((pl, a), (_, b)) in exact_tokens.iter().zip(&quant_tokens) {
             assert_eq!(a.len(), b.len(), "tiers decoded different lengths");
             assert_eq!(a[..*pl], b[..*pl], "prompt must survive both tiers");
         }
-        assert!(exact_bytes > 0 && quant_bytes > 0);
+        for ((pl, a), (_, b)) in exact_tokens.iter().zip(&half_tokens) {
+            assert_eq!(a.len(), b.len(), "f16 tier decoded different lengths");
+            assert_eq!(a[..*pl], b[..*pl], "prompt must survive the f16 tier");
+        }
+        assert!(exact_bytes > 0 && quant_bytes > 0 && half_bytes > 0);
         let ratio = exact_bytes as f64 / quant_bytes as f64;
         assert!(ratio >= 3.0, "peak KV bytes ratio {ratio} below the severalfold claim");
+        // the f16 middle tier sits strictly between exact and int8
+        assert!(half_bytes < exact_bytes && half_bytes > quant_bytes);
         // idle scheduler reports zero
         assert_eq!(Scheduler::new(1).max_kv_resident_bytes(), 0);
     }
@@ -585,6 +685,7 @@ mod tests {
                     prompt: vec![i, i + 1],
                     max_new_tokens: 6,
                     sampler: Sampler { temperature: 0.8, top_k: Some(8), seed: 7 },
+                    timeout_ticks: 0,
                 });
             }
             s.admit(&p).unwrap();

@@ -1,0 +1,245 @@
+//! Integration: the HTTP serve front-end end to end, over real sockets.
+//!
+//! Proves the acceptance properties of `serve::http` (DESIGN.md §18):
+//! (a) greedy tokens streamed over `POST /v1/generate` are **byte-identical**
+//!     to an in-process `Engine::submit`/`poll` of the same request;
+//! (b) a wall-clock `deadline_ms` maps onto the engine's tick-denominated
+//!     timeout — expiry streams the partial output and a terminal
+//!     `"finish":"timeout"` chunk (and bumps the serve timeout counter),
+//!     while `deadline_ms: 0` stays unbounded;
+//! (c) past the admission window the server sheds with
+//!     `429 Too Many Requests` + `Retry-After` instead of queueing;
+//! (d) the `texpand loadgen` client fleet drives a live server and its
+//!     client-observed counts reconcile with the server-side summary.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use texpand::config::ModelConfig;
+use texpand::generate::Sampler;
+use texpand::json::Value;
+use texpand::obs::{http_get, http_post_stream, render, MetricsRegistry};
+use texpand::params::ParamStore;
+use texpand::rng::Pcg32;
+use texpand::serve::http::{AimdOptions, HttpServer, HttpServerOptions};
+use texpand::serve::{loadgen, Engine, EngineOptions};
+
+const TIMEOUT: Duration = Duration::from_secs(30);
+
+fn cfg() -> ModelConfig {
+    ModelConfig { layers: 2, hidden: 16, heads: 2, k: 8, v: 8, mlp: 32, seq: 32, vocab: 32 }
+}
+
+fn params(seed: u64) -> ParamStore {
+    ParamStore::init(&cfg(), &mut Pcg32::seeded(seed), 0.05)
+}
+
+fn greedy(seed: u64) -> Sampler {
+    Sampler { temperature: 0.0, top_k: None, seed }
+}
+
+/// Parse a finished NDJSON stream: (token ids in order, terminal line).
+fn parse_stream(lines: &[String]) -> (Vec<u32>, Value) {
+    let mut ids = Vec::new();
+    let mut done = None;
+    for line in lines {
+        let v = Value::parse(line).expect("stream line is JSON");
+        if let Some(toks) = v.get("tokens") {
+            for t in toks.as_arr().expect("tokens is an array") {
+                ids.push(t.as_usize().expect("token id") as u32);
+            }
+        }
+        if v.get("done").is_some() {
+            done = Some(v);
+        }
+    }
+    (ids, done.expect("stream has a terminal done chunk"))
+}
+
+#[test]
+fn streamed_greedy_matches_in_process_engine() {
+    let prompt: Vec<u32> = vec![3, 1, 4, 1, 5];
+    let new_tokens = 12;
+
+    // oracle: same params, same request, no network
+    let mut oracle = Engine::new(params(42), EngineOptions::default());
+    let id = oracle.submit(prompt.clone(), new_tokens, greedy(7)).unwrap();
+    oracle.run_until_idle().unwrap();
+    let want = oracle.poll(id).expect("oracle completion");
+    assert_eq!(want.generated, new_tokens);
+    let want_ids = &want.tokens[want.prompt_len..];
+
+    let reg = Arc::new(MetricsRegistry::new());
+    let engine = Engine::with_registry(params(42), EngineOptions::default(), &reg);
+    let server = HttpServer::bind_with_registry(
+        "127.0.0.1:0",
+        engine,
+        HttpServerOptions::default(),
+        Arc::clone(&reg),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let (status, body) = http_get(&addr, "/healthz", TIMEOUT).unwrap();
+    assert_eq!((status, body.as_str()), (200, "ok\n"));
+
+    let ids: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    let body = format!(
+        r#"{{"tokens":[{}],"max_new_tokens":{new_tokens},"temperature":0,"seed":7}}"#,
+        ids.join(",")
+    );
+    // incremental delivery: every on_line callback fires before the call
+    // returns, so counting both proves the stream really was chunked
+    let mut live_lines = 0usize;
+    let out = http_post_stream(&addr, "/v1/generate", &body, TIMEOUT, &mut |_| live_lines += 1)
+        .unwrap();
+    assert_eq!(out.status, 200);
+    assert_eq!(live_lines, out.lines.len());
+    assert!(out.lines.len() >= 2, "at least one token chunk plus the terminal");
+
+    let (got_ids, done) = parse_stream(&out.lines);
+    assert_eq!(got_ids, want_ids, "streamed greedy tokens differ from in-process");
+    assert_eq!(done.req("finish").unwrap().as_str().unwrap(), "max_tokens");
+    assert_eq!(done.req("generated").unwrap().as_usize().unwrap(), new_tokens);
+    assert_eq!(done.req("prompt_len").unwrap().as_usize().unwrap(), prompt.len());
+
+    let (_, summary) = server.shutdown().unwrap();
+    assert_eq!((summary.requests, summary.streamed, summary.rejected), (1, 1, 0));
+}
+
+#[test]
+fn deadline_expires_with_partial_stream_and_zero_means_unbounded() {
+    let reg = Arc::new(MetricsRegistry::new());
+    let engine = Engine::with_registry(params(43), EngineOptions::default(), &reg);
+    let server = HttpServer::bind_with_registry(
+        "127.0.0.1:0",
+        engine,
+        HttpServerOptions::default(),
+        Arc::clone(&reg),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    // deadline_ms=1 with the EWMA seeded at 5 ms/tick maps to a 1-tick
+    // budget: the request must expire with a small partial prefix
+    let body = r#"{"tokens":[1,2,3],"max_new_tokens":256,"deadline_ms":1,"temperature":0}"#;
+    let out = http_post_stream(&addr, "/v1/generate", body, TIMEOUT, &mut |_| {}).unwrap();
+    assert_eq!(out.status, 200);
+    let (ids, done) = parse_stream(&out.lines);
+    assert_eq!(done.req("finish").unwrap().as_str().unwrap(), "timeout");
+    let generated = done.req("generated").unwrap().as_usize().unwrap();
+    assert!(generated < 256, "deadline must cut generation short, got {generated}");
+    assert_eq!(ids.len(), generated, "partial stream delivers exactly the decoded prefix");
+
+    // deadline_ms=0 is explicitly unbounded, not instantly expired
+    let body = r#"{"tokens":[1,2,3],"max_new_tokens":8,"deadline_ms":0,"temperature":0}"#;
+    let out = http_post_stream(&addr, "/v1/generate", body, TIMEOUT, &mut |_| {}).unwrap();
+    let (ids, done) = parse_stream(&out.lines);
+    assert_eq!(done.req("finish").unwrap().as_str().unwrap(), "max_tokens");
+    assert_eq!(ids.len(), 8);
+
+    let text = render(&reg);
+    assert!(
+        text.contains("texpand_serve_timeouts_total 1"),
+        "engine timeout counter missing from the shared registry:\n{text}"
+    );
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn overload_sheds_with_429_and_retry_after() {
+    // window pinned to 1 (static): any overlapping second request must be
+    // shed, never queued
+    let aimd = AimdOptions {
+        initial_window: 1.0,
+        min_window: 1.0,
+        max_window: 1.0,
+        adaptive: false,
+        ..AimdOptions::default()
+    };
+    let reg = Arc::new(MetricsRegistry::new());
+    let engine = Engine::with_registry(params(44), EngineOptions::default(), &reg);
+    let opts = HttpServerOptions { aimd, ..HttpServerOptions::default() };
+    let server =
+        HttpServer::bind_with_registry("127.0.0.1:0", engine, opts, Arc::clone(&reg)).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let barrier = Arc::new(std::sync::Barrier::new(6));
+    let workers: Vec<_> = (0..6)
+        .map(|_| {
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                let body =
+                    r#"{"tokens":[1,2,3,4],"max_new_tokens":24,"temperature":0}"#;
+                http_post_stream(&addr, "/v1/generate", body, TIMEOUT, &mut |_| {}).unwrap()
+            })
+        })
+        .collect();
+    let outcomes: Vec<_> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+
+    let oks = outcomes.iter().filter(|o| o.status == 200).count();
+    let shed: Vec<_> = outcomes.iter().filter(|o| o.status == 429).collect();
+    assert!(oks >= 1, "someone must get through the window");
+    assert!(!shed.is_empty(), "6 simultaneous clients vs window 1 must shed");
+    for o in &shed {
+        assert!(o.retry_after.is_some(), "429 must carry Retry-After");
+        assert!(o.retry_after.unwrap() >= 1);
+    }
+    assert_eq!(oks + shed.len(), 6, "every outcome is either streamed or shed");
+
+    let (_, summary) = server.shutdown().unwrap();
+    assert_eq!(summary.rejected as usize, shed.len());
+    assert_eq!(summary.streamed as usize, oks);
+    let text = render(&reg);
+    assert!(text.contains("texpand_http_rejected_total"), "shed counter exported:\n{text}");
+}
+
+#[test]
+fn loadgen_fleet_reconciles_with_server_summary() {
+    let reg = Arc::new(MetricsRegistry::new());
+    let engine = Engine::with_registry(params(45), EngineOptions::default(), &reg);
+    // window pinned above the client count so the reconciliation below is
+    // deterministic (no noise-driven shedding)
+    let aimd = AimdOptions {
+        initial_window: 8.0,
+        min_window: 8.0,
+        max_window: 8.0,
+        adaptive: false,
+        ..AimdOptions::default()
+    };
+    let server = HttpServer::bind_with_registry(
+        "127.0.0.1:0",
+        engine,
+        HttpServerOptions { aimd, ..HttpServerOptions::default() },
+        Arc::clone(&reg),
+    )
+    .unwrap();
+
+    let opts = loadgen::LoadgenOptions {
+        addr: server.local_addr().to_string(),
+        clients: 2,
+        requests: 6,
+        tokens: 4,
+        prompt_mix: vec![2, 5],
+        vocab: cfg().vocab,
+        seed: 9,
+        ..loadgen::LoadgenOptions::default()
+    };
+    let report = loadgen::run(&opts).unwrap();
+    assert_eq!(report.sent, 6);
+    assert_eq!(report.mode, "closed");
+    // closed loop, 2 clients, default window 4: nothing sheds, nothing
+    // times out — every stream runs to max_tokens
+    assert_eq!(
+        (report.completed, report.rejected, report.timeouts, report.errors),
+        (6, 0, 0, 0)
+    );
+    assert_eq!(report.tokens_streamed, 6 * 4);
+    assert!(report.p50_ms > 0.0 && report.p99_ms >= report.p50_ms);
+    assert!(report.tokens_per_sec > 0.0);
+
+    let (_, summary) = server.shutdown().unwrap();
+    assert_eq!((summary.requests, summary.streamed), (6, 6));
+}

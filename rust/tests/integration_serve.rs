@@ -9,7 +9,7 @@
 //!     generations **byte-identical** while the live model grows, with the
 //!     preservation probe at `max|Δ logits| ≤ preserve_tol` — including
 //!     when the in-flight caches are the block-quantized int8 KV tier
-//!     (`kv_quant`), whose remap re-quantizes from the exact f32
+//!     (`kv_tier = int8`), whose remap re-quantizes from the exact f32
 //!     residual stream (DESIGN.md §17).
 
 use texpand::config::{GrowthOp, LayerPosition, ModelConfig};
@@ -17,7 +17,7 @@ use texpand::expand::{ExpandOptions, ExpansionPlan, Init};
 use texpand::generate::{generate_ref, Sampler};
 use texpand::params::ParamStore;
 use texpand::rng::Pcg32;
-use texpand::serve::{Engine, EngineOptions};
+use texpand::serve::{Engine, EngineOptions, KvTier};
 
 const PRESERVE_TOL: f32 = 1e-4; // DESIGN.md §8
 
@@ -182,7 +182,7 @@ fn quant_kv_cache_rides_a_hot_swap_with_identical_greedy_continuations() {
         .collect();
     let new_tokens = 20;
     let qopts =
-        EngineOptions { max_slots: 4, parallel: false, kv_quant: true, ..Default::default() };
+        EngineOptions { max_slots: 4, parallel: false, kv_tier: KvTier::Int8, ..Default::default() };
 
     // the oracle: the same quantized engine, never swapped
     let mut base = Engine::new(params.clone(), qopts);
